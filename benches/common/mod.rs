@@ -1,0 +1,199 @@
+//! Shared bench harness (criterion is not in the offline vendor set).
+//!
+//! Provides the platform fixture, the paper's trial sweeps, simple
+//! statistics, and timing loops.  Every bench is `harness = false` and
+//! prints the paper's rows next to the measured ones; EXPERIMENTS.md
+//! records the comparison.
+
+#![allow(dead_code)]
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use acai::cluster::ResourceConfig;
+use acai::engine::JobSpec;
+use acai::ids::{ProjectId, UserId};
+use acai::{Acai, PlatformConfig};
+
+pub const P: ProjectId = ProjectId(1);
+pub const U: UserId = UserId(1);
+
+/// n1-standard-2, the paper's baseline VM shape.
+pub const BASELINE: ResourceConfig = ResourceConfig {
+    vcpus: 2.0,
+    mem_mb: 7680,
+};
+
+/// Boot a platform with the PJRT runtime when artifacts exist (they do
+/// after `make artifacts`; `cargo bench` depends on `build`).
+pub fn platform(noise: f64) -> Arc<Acai> {
+    let mut config = PlatformConfig {
+        noise,
+        ..Default::default()
+    };
+    let artifacts = PlatformConfig::default_artifacts_dir();
+    if artifacts.join("manifest.json").exists() && std::env::var_os("ACAI_BENCH_NO_PJRT").is_none()
+    {
+        config.artifacts_dir = Some(artifacts);
+    }
+    let acai = Arc::new(Acai::boot(config).expect("boot"));
+    acai.datalake
+        .storage
+        .upload(P, &[("/data/train.bin", b"data")])
+        .unwrap();
+    acai.datalake
+        .filesets
+        .create(P, "mnist", &["/data/train.bin"], "bench")
+        .unwrap();
+    acai
+}
+
+/// One measured trial.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalTrial {
+    pub epochs: f64,
+    pub res: ResourceConfig,
+    pub true_runtime: f64,
+    pub predicted: f64,
+}
+
+/// The paper's §5.1.1 experiment: profile on the 27-trial grid, then
+/// evaluate on the 135-trial grid (epochs {5,10,20} × 9 CPU values ×
+/// 5 memory values).  `scale` stretches the workload to the paper's
+/// evaluation magnitude (avg ≈ 2100 s).
+pub fn profile_and_eval(acai: &Arc<Acai>, scale: f64) -> Vec<EvalTrial> {
+    let template = format!(
+        "python train_mnist.py --epoch {{1,2,3}} --scale {scale} --learning-rate 0.3"
+    );
+    acai.profiler
+        .profile("mnist-eval", &template, P, U, "mnist")
+        .expect("profile");
+    let fitted = acai.profiler.by_name("mnist-eval").unwrap();
+
+    let mut trials = Vec::new();
+    let mut pending = Vec::new();
+    for epochs in [5.0f64, 10.0, 20.0] {
+        for cpu in [0.5f64, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0] {
+            for mem in [512u32, 1024, 2048, 4096, 8192] {
+                let res = ResourceConfig::new(cpu, mem);
+                let id = acai
+                    .engine
+                    .submit(JobSpec {
+                        project: P,
+                        user: U,
+                        name: "eval".into(),
+                        command: format!(
+                            "python train_mnist.py --epoch {epochs} --scale {scale} --learning-rate 0.3"
+                        ),
+                        input_fileset: "mnist".into(),
+                        output_fileset: "eval-out".into(),
+                        resources: res,
+                    })
+                    .expect("submit");
+                pending.push((id, epochs, res));
+            }
+        }
+    }
+    acai.engine.run_until_idle();
+    for (id, epochs, res) in pending {
+        let record = acai.engine.registry.get(id).unwrap();
+        trials.push(EvalTrial {
+            epochs,
+            res,
+            true_runtime: record.runtime_secs.expect("runtime"),
+            predicted: fitted.predict(&[epochs, scale], res),
+        });
+    }
+    trials
+}
+
+// ---- statistics ----
+
+pub fn mean(xs: impl Iterator<Item = f64> + Clone) -> f64 {
+    let n = xs.clone().count().max(1) as f64;
+    xs.sum::<f64>() / n
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs.iter().copied());
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+pub fn percentile(xs: &mut [f64], p: f64) -> f64 {
+    xs.sort_by(|a, b| a.total_cmp(b));
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let idx = ((xs.len() - 1) as f64 * p).round() as usize;
+    xs[idx]
+}
+
+/// L1 (MAE) and L2 (MSE) errors of predictions.
+pub fn l1_l2(trials: &[EvalTrial]) -> (f64, f64) {
+    let l1 = mean(trials.iter().map(|t| (t.predicted - t.true_runtime).abs()));
+    let l2 = mean(
+        trials
+            .iter()
+            .map(|t| (t.predicted - t.true_runtime).powi(2)),
+    );
+    (l1, l2)
+}
+
+/// Variance explained (R²) of predictions.
+pub fn r_squared(trials: &[EvalTrial]) -> f64 {
+    let mean_t = mean(trials.iter().map(|t| t.true_runtime));
+    let ss_res: f64 = trials
+        .iter()
+        .map(|t| (t.true_runtime - t.predicted).powi(2))
+        .sum();
+    let ss_tot: f64 = trials
+        .iter()
+        .map(|t| (t.true_runtime - mean_t).powi(2))
+        .sum();
+    1.0 - ss_res / ss_tot
+}
+
+// ---- timing ----
+
+/// Time `f` over `iters` iterations after `warmup`; returns ns/op.
+pub fn bench_ns(warmup: usize, iters: usize, mut f: impl FnMut()) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let start = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    start.elapsed().as_nanos() as f64 / iters as f64
+}
+
+pub fn header(bench: &str, paper: &str) {
+    println!("\n================================================================");
+    println!("BENCH  {bench}");
+    println!("PAPER  {paper}");
+    println!("================================================================");
+}
+
+pub fn ascii_hist(values: &[f64], buckets: usize, width: usize) {
+    if values.is_empty() {
+        return;
+    }
+    let lo = values.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-9);
+    let mut counts = vec![0usize; buckets];
+    for v in values {
+        let b = (((v - lo) / span) * buckets as f64).min(buckets as f64 - 1.0) as usize;
+        counts[b] += 1;
+    }
+    let max = *counts.iter().max().unwrap() as f64;
+    for (i, c) in counts.iter().enumerate() {
+        let from = lo + span * i as f64 / buckets as f64;
+        let to = lo + span * (i + 1) as f64 / buckets as f64;
+        let bar = "#".repeat(((*c as f64 / max) * width as f64).round() as usize);
+        println!("{from:>8.0}-{to:<8.0} |{bar:<width$} {c}");
+    }
+}

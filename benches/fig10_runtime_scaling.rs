@@ -1,0 +1,69 @@
+//! Figure 10: job runtime vs #CPUs and #epochs — the measured law
+//! t ≈ t₁ · e · c⁻¹ that justifies the log-linear model.
+
+mod common;
+
+use acai::cluster::ResourceConfig;
+use acai::engine::JobSpec;
+use common::*;
+
+fn run(acai: &std::sync::Arc<acai::Acai>, epochs: u32, cpu: f64) -> f64 {
+    let id = acai
+        .engine
+        .submit(JobSpec {
+            project: P,
+            user: U,
+            name: "fig10".into(),
+            command: format!("python train_mnist.py --epoch {epochs}"),
+            input_fileset: "mnist".into(),
+            output_fileset: "fig10-out".into(),
+            resources: ResourceConfig::new(cpu, 2048),
+        })
+        .unwrap();
+    acai.engine.run_until_idle();
+    acai.engine.registry.get(id).unwrap().runtime_secs.unwrap()
+}
+
+fn main() {
+    header(
+        "Figure 10: runtime vs #CPUs and #epochs",
+        "runtime is approximately t1 * epochs * cpus^-1",
+    );
+    let acai = platform(0.0);
+
+    println!("runtime (s) by epochs (rows) x vCPUs (cols):");
+    print!("{:>8}", "e\\c");
+    let cpus = [0.5, 1.0, 2.0, 4.0, 8.0];
+    for c in cpus {
+        print!("{c:>9.1}");
+    }
+    println!();
+    let mut t_ref = 0.0;
+    for epochs in [1u32, 2, 5, 10, 20] {
+        print!("{epochs:>8}");
+        for c in cpus {
+            let t = run(&acai, epochs, c);
+            if epochs == 1 && c == 1.0 {
+                t_ref = t;
+            }
+            print!("{t:>9.1}");
+        }
+        println!();
+    }
+
+    // verify the product form: t * c^0.95 / e is constant
+    println!("\nnormalized t·c^0.95/e (should be ~constant = t1):");
+    let mut norms = vec![];
+    for epochs in [1u32, 5, 20] {
+        for c in cpus {
+            let t = run(&acai, epochs, c);
+            norms.push(t * c.powf(0.95) / epochs as f64);
+        }
+    }
+    let m = mean(norms.iter().copied());
+    let s = std_dev(&norms);
+    println!("  mean {m:.3} s/epoch, std {s:.4} (cv {:.2}%)", s / m * 100.0);
+    println!("  t1 at (e=1, c=1): {t_ref:.2} s");
+    assert!(s / m < 0.02, "the law must hold to <2% once noise is off");
+    println!("\nSHAPE OK: multiplicative law t = t1 · e · c^-0.95 holds");
+}

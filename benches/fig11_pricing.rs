@@ -1,0 +1,48 @@
+//! Figure 11: the cloud pricing model — unit prices ramp linearly from
+//! 2/3 (minimum config) to 4/3 (maximum config) of the anchor price.
+
+mod common;
+
+use acai::cluster::ResourceConfig;
+use acai::pricing::PricingModel;
+use common::*;
+
+fn main() {
+    header(
+        "Figure 11: cloud pricing model",
+        "unit vCPU price: 2/3 of anchor at 0.5 vCPU -> 4/3 at 8 vCPU, linear; \
+         memory likewise from 512 MB to 8192 MB",
+    );
+    let p = PricingModel::default();
+
+    println!("vCPUs   unit $/vCPU-hr   scale-of-anchor");
+    for ci in (1..=16).step_by(3) {
+        let c = ci as f64 * 0.5;
+        println!(
+            "{c:>5.1}   {:>12.4}   {:>12.4}",
+            p.unit_cpu(c) * 3600.0,
+            p.unit_cpu(c) / acai::pricing::CPU_ANCHOR
+        );
+    }
+    println!("\nmem MB  unit $/GB-hr     scale-of-anchor");
+    for mi in [512u32, 2048, 4096, 6144, 8192] {
+        println!(
+            "{mi:>6}  {:>12.4}   {:>12.4}",
+            p.unit_mem(mi as f64) * 3600.0 * 1024.0,
+            p.unit_mem(mi as f64) / acai::pricing::MEM_ANCHOR
+        );
+    }
+
+    // endpoints + linearity + the calibration anchors
+    assert!((p.unit_cpu(0.5) / acai::pricing::CPU_ANCHOR - 2.0 / 3.0).abs() < 1e-12);
+    assert!((p.unit_cpu(8.0) / acai::pricing::CPU_ANCHOR - 4.0 / 3.0).abs() < 1e-12);
+    assert!((p.unit_mem(512.0) / acai::pricing::MEM_ANCHOR - 2.0 / 3.0).abs() < 1e-12);
+    assert!((p.unit_mem(8192.0) / acai::pricing::MEM_ANCHOR - 4.0 / 3.0).abs() < 1e-12);
+    let mid = p.unit_cpu(4.25) / acai::pricing::CPU_ANCHOR;
+    assert!((mid - 1.0).abs() < 1e-12, "linearity");
+    // Table 2 baseline calibration: 64.6 s on n1-standard-2 = $0.09765
+    let c = p.cost(ResourceConfig::new(2.0, 7680), 64.6);
+    println!("\ncalibration: 2 vCPU/7.5 GB × 64.6 s = ${c:.5} (paper $0.09765)");
+    assert!((c - 0.09765).abs() < 0.0005);
+    println!("\nSHAPE OK: linear 2/3 -> 4/3 ramps; Table 2 anchor reproduced");
+}

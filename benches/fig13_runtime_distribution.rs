@@ -1,0 +1,29 @@
+//! Figure 13: distribution of the runtimes of the 135 evaluation trials.
+
+mod common;
+
+use common::*;
+
+fn main() {
+    header(
+        "Figure 13: runtime distribution of the 135 evaluation trials",
+        "right-skewed distribution, average 2105.71 s",
+    );
+    let acai = platform(0.04);
+    let trials = profile_and_eval(&acai, 53.0);
+    let mut runtimes: Vec<f64> = trials.iter().map(|t| t.true_runtime).collect();
+
+    let avg = mean(runtimes.iter().copied());
+    let med = percentile(&mut runtimes.clone(), 0.5);
+    let p95 = percentile(&mut runtimes.clone(), 0.95);
+    println!("trials: {}", runtimes.len());
+    println!("mean {avg:.1} s (paper 2105.71)   median {med:.1} s   p95 {p95:.1} s");
+    println!();
+    ascii_hist(&runtimes, 12, 48);
+
+    assert_eq!(runtimes.len(), 135);
+    // right-skew: mean greater than median (long tail from low-CPU runs)
+    assert!(avg > med, "distribution should be right-skewed");
+    assert!((avg - 2105.71).abs() / 2105.71 < 0.35, "avg {avg} off paper scale");
+    println!("\nSHAPE OK: right-skewed, paper-scale average");
+}

@@ -1,0 +1,64 @@
+//! Figure 14: prediction error vs #CPU cores, memory, and #epochs —
+//! the heteroscedasticity analysis (error variance is larger at low CPU
+//! counts and high epoch counts; memory has no systematic effect).
+
+mod common;
+
+use common::*;
+
+fn group_std<F: Fn(&EvalTrial) -> f64>(trials: &[EvalTrial], key: F) -> Vec<(f64, f64, f64)> {
+    let mut keys: Vec<f64> = trials.iter().map(|t| key(t)).collect();
+    keys.sort_by(|a, b| a.total_cmp(b));
+    keys.dedup();
+    keys.iter()
+        .map(|k| {
+            let errs: Vec<f64> = trials
+                .iter()
+                .filter(|t| key(t) == *k)
+                .map(|t| t.predicted - t.true_runtime)
+                .collect();
+            (*k, mean(errs.iter().copied()), std_dev(&errs))
+        })
+        .collect()
+}
+
+fn main() {
+    header(
+        "Figure 14: error vs #CPUs / memory / #epochs",
+        "error variance higher at fewer CPUs; variance grows with epochs; \
+         memory shows no systematic trend",
+    );
+    let acai = platform(0.04);
+    let trials = profile_and_eval(&acai, 53.0);
+
+    println!("by #vCPUs:   (value, mean err s, std err s)");
+    let by_cpu = group_std(&trials, |t| t.res.vcpus);
+    for (k, m, s) in &by_cpu {
+        println!("  c={k:<4} mean {m:>8.1}  std {s:>8.1}");
+    }
+    println!("by memory:");
+    let by_mem = group_std(&trials, |t| t.res.mem_mb as f64);
+    for (k, m, s) in &by_mem {
+        println!("  m={k:<6} mean {m:>8.1}  std {s:>8.1}");
+    }
+    println!("by epochs:");
+    let by_epochs = group_std(&trials, |t| t.epochs);
+    for (k, m, s) in &by_epochs {
+        println!("  e={k:<4} mean {m:>8.1}  std {s:>8.1}");
+    }
+
+    // paper's qualitative claims
+    let low_cpu_std = by_cpu.first().unwrap().2;
+    let high_cpu_std = by_cpu.last().unwrap().2;
+    assert!(
+        low_cpu_std > high_cpu_std,
+        "error variance must shrink with CPUs ({low_cpu_std:.1} vs {high_cpu_std:.1})"
+    );
+    let low_e_std = by_epochs.first().unwrap().2;
+    let high_e_std = by_epochs.last().unwrap().2;
+    assert!(
+        high_e_std > low_e_std,
+        "error variance must grow with epochs ({low_e_std:.1} vs {high_e_std:.1})"
+    );
+    println!("\nSHAPE OK: heteroscedastic in CPU (dec) and epochs (inc)");
+}

@@ -1,0 +1,49 @@
+//! Figure 15: prediction error vs true runtime, in linear and log space.
+//! In log space the residuals have near-uniform variance (the premise of
+//! fitting in log space); in linear space errors grow with runtime.
+
+mod common;
+
+use common::*;
+
+fn main() {
+    header(
+        "Figure 15: error vs true runtime (linear + log space)",
+        "log-space residuals have uniform variance; linear-space error \
+         grows with the true runtime",
+    );
+    let acai = platform(0.04);
+    let mut trials = profile_and_eval(&acai, 53.0);
+    trials.sort_by(|a, b| a.true_runtime.total_cmp(&b.true_runtime));
+
+    // bucket into quartiles of true runtime
+    let q = trials.len() / 4;
+    println!("quartile   true-runtime range      |err| (s)     |log err|");
+    let mut lin_spread = vec![];
+    let mut log_spread = vec![];
+    for i in 0..4 {
+        let chunk = &trials[i * q..((i + 1) * q).min(trials.len())];
+        let lin = mean(chunk.iter().map(|t| (t.predicted - t.true_runtime).abs()));
+        let log = mean(
+            chunk
+                .iter()
+                .map(|t| (t.predicted.ln() - t.true_runtime.ln()).abs()),
+        );
+        println!(
+            "{:>8}   {:>8.0} - {:>8.0} s   {lin:>10.1}   {log:>10.4}",
+            i + 1,
+            chunk.first().unwrap().true_runtime,
+            chunk.last().unwrap().true_runtime,
+        );
+        lin_spread.push(lin);
+        log_spread.push(log);
+    }
+
+    // linear-space error grows strongly across quartiles; log-space stays flat
+    let lin_ratio = lin_spread.last().unwrap() / lin_spread.first().unwrap().max(1e-9);
+    let log_ratio = log_spread.last().unwrap() / log_spread.first().unwrap().max(1e-9);
+    println!("\nQ4/Q1 ratio: linear {lin_ratio:.1}x, log {log_ratio:.1}x");
+    assert!(lin_ratio > 2.0, "linear error must grow with runtime");
+    assert!(log_ratio < lin_ratio, "log space must be flatter than linear");
+    println!("\nSHAPE OK: log residuals ~uniform, linear errors grow with t");
+}

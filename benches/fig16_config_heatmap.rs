@@ -1,0 +1,101 @@
+//! Figure 16: predicted runtime for every resource configuration of the
+//! MNIST 20-epoch task, with the over-budget region masked out (the
+//! paper's red cells) — the auto-provisioner's decision surface.
+
+mod common;
+
+use acai::autoprovision::Objective;
+use common::*;
+
+fn main() {
+    header(
+        "Figure 16: MNIST 20-epoch predicted runtime per configuration",
+        "over-budget configs (cost > $0.09765) excluded: slow low-CPU \
+         corner AND expensive high-CPU/high-mem corner; optimum in between",
+    );
+    let acai = platform(0.0);
+    acai.profiler
+        .profile(
+            "mnist",
+            "python train_mnist.py --epoch {1,2,3} --batch-size 256 --learning-rate 0.3",
+            P,
+            U,
+            "mnist",
+        )
+        .unwrap();
+    let fitted = acai.profiler.by_name("mnist").unwrap();
+    let budget = acai.pricing.cost(BASELINE, fitted.predict(&[20.0, 256.0], BASELINE));
+    let decision = acai
+        .provisioner
+        .optimize(
+            &acai.profiler,
+            &fitted,
+            &[20.0, 256.0],
+            Objective::MinRuntime { max_cost: budget },
+        )
+        .unwrap();
+
+    // ASCII heatmap: rows = memory (descending), cols = vCPUs;
+    // 'X' = over budget (red in the paper), digits = predicted runtime
+    // bucket (0 fastest), '*' = the chosen optimum.
+    println!("budget: ${budget:.5}\n");
+    let tmin = decision
+        .grid
+        .iter()
+        .map(|p| p.predicted_runtime)
+        .fold(f64::INFINITY, f64::min);
+    let tmax = decision
+        .grid
+        .iter()
+        .map(|p| p.predicted_runtime)
+        .fold(0.0f64, f64::max);
+    print!("  mem\\cpu ");
+    for ci in 1..=16 {
+        print!("{:>4.1}", ci as f64 * 0.5);
+    }
+    println!();
+    for mi in (2..=32).rev().step_by(3) {
+        let mem = mi * 256;
+        print!("{mem:>8}  ");
+        for ci in 1..=16 {
+            let c = ci as f64 * 0.5;
+            let p = decision
+                .grid
+                .iter()
+                .find(|p| p.config.vcpus == c && p.config.mem_mb == mem)
+                .unwrap();
+            if p.config == decision.config {
+                print!("   *");
+            } else if !p.feasible {
+                print!("   X");
+            } else {
+                let b = ((p.predicted_runtime - tmin) / (tmax - tmin) * 9.0) as u32;
+                print!("{b:>4}");
+            }
+        }
+        println!();
+    }
+    println!(
+        "\noptimum: {:.1} vCPU / {} MB, predicted {:.1}s ${:.5}",
+        decision.config.vcpus,
+        decision.config.mem_mb,
+        decision.predicted_runtime,
+        decision.predicted_cost
+    );
+
+    // the paper's two infeasible corners
+    let corner = |c: f64, m: u32| {
+        decision
+            .grid
+            .iter()
+            .find(|p| p.config.vcpus == c && p.config.mem_mb == m)
+            .unwrap()
+            .feasible
+    };
+    assert!(!corner(0.5, 8192), "slow low-CPU corner must be over budget");
+    assert!(!corner(8.0, 8192), "expensive top corner must be over budget");
+    assert!(corner(decision.config.vcpus, decision.config.mem_mb));
+    let feasible = decision.grid.iter().filter(|p| p.feasible).count();
+    println!("feasible: {feasible}/496 configurations");
+    println!("\nSHAPE OK: both infeasible corners reproduced; optimum inside");
+}

@@ -1,0 +1,59 @@
+//! Perf: event-bus publish/fan-out throughput (Redis pub/sub analogue).
+
+mod common;
+
+use acai::bus::Bus;
+use acai::json::Json;
+use common::*;
+
+fn main() {
+    header(
+        "Perf: event bus",
+        "the container-status/job-progress topics carry every engine event",
+    );
+
+    // publish with no subscribers (cost of a miss)
+    let bus = Bus::new();
+    let ns = bench_ns(1_000, 1_000_000, || {
+        bus.publish("empty", Json::Null);
+    });
+    println!("publish, 0 subscribers: {ns:.0} ns/op");
+
+    // fan-out to callback subscribers
+    for fan in [1usize, 4, 16] {
+        let bus = Bus::new();
+        let counter = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+        for _ in 0..fan {
+            let c = counter.clone();
+            bus.subscribe_fn("t", move |_| {
+                c.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            });
+        }
+        let ns = bench_ns(1_000, 500_000, || {
+            bus.publish("t", Json::Null);
+        });
+        println!(
+            "publish, {fan:>2} callback subscribers: {ns:>6.0} ns/op ({:.0} ns/delivery)",
+            ns / fan as f64
+        );
+    }
+
+    // pull subscribers draining on another thread
+    let bus = Bus::new();
+    let rx = bus.subscribe("pull");
+    let drain = std::thread::spawn(move || {
+        let mut n = 0u64;
+        while rx.recv().is_ok() {
+            n += 1;
+        }
+        n
+    });
+    let payload = Json::obj().field("job", "job-1").field("stage", "running").build();
+    let ns = bench_ns(1_000, 500_000, || {
+        bus.publish("pull", payload.clone());
+    });
+    drop(bus);
+    println!("publish, 1 pull subscriber (cross-thread): {ns:.0} ns/op");
+    let _ = drain;
+    std::process::exit(0); // don't wait on the drain thread's recv loop
+}

@@ -1,0 +1,85 @@
+//! Perf: data-lake hot paths — uploads, reads, version resolution,
+//! metadata queries.
+
+mod common;
+
+use acai::datalake::metadata::ArtifactKind;
+use acai::docstore::Clause;
+use acai::json::Json;
+use common::*;
+
+fn main() {
+    header(
+        "Perf: data-lake operations",
+        "resolve >=1M lookups/s; uploads dominated by the session protocol",
+    );
+    let acai = platform(0.0);
+    let dl = &acai.datalake;
+
+    // upload throughput (full session protocol per call)
+    let mut n = 0u64;
+    let ns = bench_ns(50, 2_000, || {
+        n += 1;
+        let path = format!("/bench/file-{}", n % 64);
+        dl.storage.upload(P, &[(path.as_str(), b"x")]).unwrap();
+    });
+    println!("upload (1 file, full session): {:.1} µs/op", ns / 1000.0);
+
+    // version resolution
+    let ns = bench_ns(1_000, 1_000_000, || {
+        dl.storage.resolve_version(P, "/bench/file-1", None).unwrap();
+    });
+    println!(
+        "resolve_version (latest): {ns:.0} ns/op ({:.2}M ops/s)",
+        1e9 / ns / 1e6
+    );
+    assert!(ns < 5_000.0, "resolve too slow: {ns} ns");
+
+    // trusted read
+    let ns = bench_ns(1_000, 200_000, || {
+        dl.storage.read(P, "/bench/file-1", None).unwrap();
+    });
+    println!("read (trusted path): {ns:.0} ns/op");
+
+    // file-set resolution (10-file set)
+    let paths: Vec<String> = (0..10).map(|i| format!("/bench/file-{i}")).collect();
+    let refs: Vec<&str> = paths.iter().map(|s| s.as_str()).collect();
+    dl.filesets.create(P, "bench10", &refs, "b").unwrap();
+    let ns = bench_ns(100, 100_000, || {
+        dl.filesets.resolve(P, &["/@bench10"]).unwrap();
+    });
+    println!("fileset resolve (/@bench10, 10 files): {:.1} µs/op", ns / 1000.0);
+
+    // metadata query over 10k documents
+    for i in 0..10_000 {
+        dl.metadata.register(
+            P,
+            ArtifactKind::Job,
+            &format!("job-{i}"),
+            "bench",
+            &[("loss", Json::from((i % 100) as f64 / 100.0))],
+        );
+    }
+    let ns = bench_ns(100, 20_000, || {
+        let hits = dl
+            .metadata
+            .query(P, ArtifactKind::Job, &[Clause::eq("loss", 0.42)])
+            .unwrap();
+        assert_eq!(hits.len(), 100);
+    });
+    println!(
+        "metadata eq-query over 10k docs (100 hits): {:.1} µs/op",
+        ns / 1000.0
+    );
+    let ns = bench_ns(100, 5_000, || {
+        dl.metadata
+            .query(
+                P,
+                ArtifactKind::Job,
+                &[Clause::gte("loss", 0.4), Clause::lte("loss", 0.6)],
+            )
+            .unwrap();
+    });
+    println!("metadata range-query (2.1k hits): {:.1} µs/op", ns / 1000.0);
+    println!("\nPERF OK");
+}

@@ -1,0 +1,59 @@
+//! Perf + ablation: file-set spec resolution scaling — the cost of the
+//! file-set abstraction the paper chose over "versioned folders"
+//! (§3.2.2's rejected alternative).
+
+mod common;
+
+use common::*;
+
+fn main() {
+    header(
+        "Perf/ablation: file-set resolution scaling (paper §3.2.2)",
+        "file sets are lightweight reference lists; resolution must stay \
+         linear in the referenced file count",
+    );
+    let acai = platform(0.0);
+    let dl = &acai.datalake;
+
+    let mut per_file = vec![];
+    for size in [10usize, 100, 1000] {
+        let paths: Vec<String> = (0..size).map(|i| format!("/corpus{size}/f{i:04}")).collect();
+        // batch upload in one session per 100 files
+        for chunk in paths.chunks(100) {
+            let files: Vec<(&str, &[u8])> =
+                chunk.iter().map(|p| (p.as_str(), b"x" as &[u8])).collect();
+            dl.storage.upload(P, &files).unwrap();
+        }
+        let refs: Vec<&str> = paths.iter().map(|s| s.as_str()).collect();
+        dl.filesets
+            .create(P, &format!("set{size}"), &refs, "bench")
+            .unwrap();
+
+        let spec = format!("/@set{size}");
+        let iters = 200_000 / size;
+        let ns = bench_ns(10, iters.max(50), || {
+            let r = dl.filesets.resolve(P, &[spec.as_str()]).unwrap();
+            assert_eq!(r.entries.len(), size);
+        });
+        println!(
+            "resolve /@set{size:<5} ({size:>4} files): {:>9.1} µs  ({:>6.0} ns/file)",
+            ns / 1000.0,
+            ns / size as f64
+        );
+        per_file.push(ns / size as f64);
+
+        // subset resolution (directory filter over the whole set)
+        let sub = format!("/corpus{size}/@set{size}");
+        let ns = bench_ns(10, iters.max(50), || {
+            dl.filesets.resolve(P, &[sub.as_str()]).unwrap();
+        });
+        println!("  subset filter:                {:>9.1} µs", ns / 1000.0);
+    }
+
+    // near-linear scaling: per-file cost at 1000 files within 8x of at 10
+    assert!(
+        per_file[2] < per_file[0] * 8.0,
+        "resolution must stay near-linear: {per_file:?}"
+    );
+    println!("\nPERF OK: near-linear in set size");
+}

@@ -1,0 +1,75 @@
+//! Perf: PJRT execution latency of the four AOT modules — the L1/L2 hot
+//! path the profiler and the job payload ride on.
+
+mod common;
+
+use acai::cluster::ResourceConfig;
+use acai::profiler::CommandTemplate;
+use acai::prng::Rng;
+use acai::runtime::{MlpSession, Runtime, FEATURES};
+use acai::workload::synthetic_batch;
+use common::*;
+
+fn main() {
+    header(
+        "Perf: PJRT module execution latency",
+        "Python never runs at request time; every call is one compiled \
+         HLO execution",
+    );
+    let dir = acai::PlatformConfig::default_artifacts_dir();
+    let rt = match Runtime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP (no artifacts): {e}");
+            return;
+        }
+    };
+
+    // loglinear_fit: 27-trial design
+    let template = CommandTemplate::parse("python t.py --epoch {1,2,3}").unwrap();
+    let mut rows: Vec<[f64; FEATURES]> = vec![];
+    let mut ys = vec![];
+    for e in [1.0, 2.0, 3.0] {
+        for c in [0.5, 1.0, 2.0] {
+            for m in [512u32, 1024, 2048] {
+                rows.push(template.features(&[e], ResourceConfig::new(c, m)));
+                ys.push((6.63 * e / c).ln());
+            }
+        }
+    }
+    let ns = bench_ns(5, 200, || {
+        rt.loglinear_fit(&rows, &ys).unwrap();
+    });
+    println!("loglinear_fit   (27 trials, 256-row padded): {:>8.1} µs", ns / 1000.0);
+
+    // loglinear_predict: full 496-point provisioning grid
+    let theta = rt.loglinear_fit(&rows, &ys).unwrap();
+    let grid = acai::autoprovision::provisioning_grid();
+    let grid_rows: Vec<[f64; FEATURES]> = grid
+        .iter()
+        .map(|res| template.features(&[20.0], *res))
+        .collect();
+    let ns = bench_ns(5, 200, || {
+        rt.loglinear_predict(&theta, &grid_rows).unwrap();
+    });
+    println!("loglinear_predict (496-point grid):          {:>8.1} µs", ns / 1000.0);
+
+    // mlp_train_step / mlp_eval
+    let mut session = MlpSession::new(&rt, 1);
+    let mut rng = Rng::new(2);
+    let (x, y) = synthetic_batch(&rt, &mut rng, rt.constants.train_batch);
+    let ns = bench_ns(5, 100, || {
+        session.train_step(x.clone(), y.clone(), 0.1).unwrap();
+    });
+    println!("mlp_train_step  (128x784 MLP fwd+bwd+sgd):   {:>8.1} µs", ns / 1000.0);
+    let steps_per_sec = 1e9 / ns;
+    println!("  -> {steps_per_sec:.0} train steps/s");
+
+    let (xe, ye) = synthetic_batch(&rt, &mut rng, rt.constants.eval_batch);
+    let ns = bench_ns(5, 100, || {
+        session.eval(xe.clone(), ye.clone()).unwrap();
+    });
+    println!("mlp_eval        (512-sample batch):          {:>8.1} µs", ns / 1000.0);
+    println!("\ntotal PJRT executions this bench: {}", rt.executions());
+    println!("\nPERF OK");
+}

@@ -1,0 +1,76 @@
+//! Perf: L3 scheduler hot path — enqueue → launchable → terminal
+//! cycles per second, single tuple and many tuples.
+
+mod common;
+
+use acai::engine::Scheduler;
+use acai::ids::{JobId, ProjectId, UserId};
+use common::*;
+
+fn main() {
+    header(
+        "Perf: scheduler throughput",
+        "L3 coordinator must not be the bottleneck (target >=100k ops/s)",
+    );
+
+    // single (project, user) tuple
+    let scheduler = Scheduler::new(8);
+    let key = (ProjectId(1), UserId(1));
+    let mut next = 0u64;
+    let ns = bench_ns(1_000, 200_000, || {
+        next += 1;
+        scheduler.enqueue(key, JobId(next));
+        for (k, _) in scheduler.launchable() {
+            scheduler.on_terminal(k);
+        }
+    });
+    println!(
+        "single tuple: {:.0} ns per submit->launch->terminal cycle ({:.0}k cycles/s)",
+        ns,
+        1e6 / ns * 1000.0 / 1000.0
+    );
+    assert!(ns < 10_000.0, "scheduler cycle too slow: {ns} ns");
+
+    // 64 contending tuples
+    let scheduler = Scheduler::new(4);
+    let keys: Vec<_> = (0..64)
+        .map(|i| (ProjectId(1), UserId(i as u64)))
+        .collect();
+    let mut i = 0usize;
+    let ns = bench_ns(1_000, 100_000, || {
+        i += 1;
+        let key = keys[i % keys.len()];
+        scheduler.enqueue(key, JobId(i as u64));
+        if i % 16 == 0 {
+            for (k, _) in scheduler.launchable() {
+                scheduler.on_terminal(k);
+            }
+        }
+    });
+    println!("64 tuples:    {ns:.0} ns per op (amortized round-robin drain)");
+    assert!(ns < 50_000.0);
+
+    // full engine submit->finish cycle (includes datalake + billing)
+    let acai = platform(0.0);
+    let mut n = 0u64;
+    let ns = bench_ns(5, 200, || {
+        n += 1;
+        acai.engine
+            .submit(acai::engine::JobSpec {
+                project: P,
+                user: U,
+                name: format!("perf-{n}"),
+                command: "python sleep.py --secs 1".into(),
+                input_fileset: "mnist".into(),
+                output_fileset: format!("perf-{n}-out"),
+                resources: acai::cluster::ResourceConfig::new(0.5, 512),
+            })
+            .unwrap();
+        acai.engine.run_until_idle();
+    });
+    println!(
+        "full engine job cycle (submit->run->bill->provenance): {:.1} µs",
+        ns / 1000.0
+    );
+    println!("\nPERF OK");
+}

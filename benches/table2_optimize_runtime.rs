@@ -1,0 +1,84 @@
+//! Table 2: fix maximum cost (= baseline cost), optimize for runtime.
+//! Baseline is an n1-standard-2 shape (2 vCPU / 7.5 GB); each cell is
+//! the average of three real runs, as in the paper.
+
+mod common;
+
+use acai::autoprovision::Objective;
+use acai::cluster::ResourceConfig;
+use acai::engine::JobSpec;
+use common::*;
+
+fn run_avg(acai: &std::sync::Arc<acai::Acai>, epochs: f64, res: ResourceConfig) -> (f64, f64) {
+    let mut times = vec![];
+    let mut costs = vec![];
+    for i in 0..3 {
+        let id = acai
+            .engine
+            .submit(JobSpec {
+                project: P,
+                user: U,
+                name: format!("t2-{epochs}-{i}"),
+                command: format!(
+                    "python train_mnist.py --epoch {epochs} --batch-size 256 --learning-rate 0.3"
+                ),
+                input_fileset: "mnist".into(),
+                output_fileset: format!("t2-out-{epochs}-{i}"),
+                resources: res,
+            })
+            .unwrap();
+        acai.engine.run_until_idle();
+        let r = acai.engine.registry.get(id).unwrap();
+        times.push(r.runtime_secs.unwrap());
+        costs.push(r.cost.unwrap());
+    }
+    (mean(times.iter().copied()), mean(costs.iter().copied()))
+}
+
+fn main() {
+    header(
+        "Table 2: fix maximum cost, optimize for runtime",
+        "20 ep: base 2vCPU/7.5GB 64.6s $0.09765 -> auto 7.5vCPU/3584MB 16.6s $0.08837 (1.74x); \
+         50 ep: 162.2s $0.24519 -> 8vCPU/3328MB 37.4s $0.21800 (1.77x)",
+    );
+    let acai = platform(0.02);
+    acai.profiler
+        .profile(
+            "mnist",
+            "python train_mnist.py --epoch {1,2,3} --batch-size 256 --learning-rate 0.3",
+            P,
+            U,
+            "mnist",
+        )
+        .unwrap();
+    let fitted = acai.profiler.by_name("mnist").unwrap();
+
+    println!("epochs | baseline: res / avg t / avg $ | auto: res / avg t / avg $ | speedup");
+    for epochs in [20.0, 50.0] {
+        let (tb, cb) = run_avg(&acai, epochs, BASELINE);
+        let decision = acai
+            .provisioner
+            .optimize(
+                &acai.profiler,
+                &fitted,
+                &[epochs, 256.0],
+                Objective::MinRuntime { max_cost: cb },
+            )
+            .unwrap();
+        let (ta, ca) = run_avg(&acai, epochs, decision.config);
+        let speedup = tb / ta;
+        println!(
+            "{epochs:>6} | 2 vCPU/7.5GB {tb:7.1}s ${cb:.5} | {:>4.1} vCPU/{:>4}MB {ta:6.1}s ${ca:.5} | {speedup:.2}x",
+            decision.config.vcpus, decision.config.mem_mb
+        );
+        assert!(speedup > 1.7, "speedup {speedup:.2} below the paper's 1.7x");
+        // noise makes the realized cost exceed the *predicted* cap slightly
+        assert!(ca <= cb * 1.15, "auto run busted the cost cap by >15%");
+        assert!(decision.config.vcpus > BASELINE.vcpus, "auto must buy more CPUs");
+        assert!(
+            (decision.config.mem_mb as f64) < 7680.0,
+            "auto should shed memory (paper: memory-agnostic workload)"
+        );
+    }
+    println!("\nSHAPE OK: >1.7x speedup at equal cost; more vCPUs, less memory");
+}

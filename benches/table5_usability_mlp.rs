@@ -1,0 +1,57 @@
+//! Table 5: usability study round 1 (MLP, 16 jobs) — manual GCP vs the
+//! ACAI SDK.  Human-step constants are calibrated from the paper's
+//! table; the machine time is the *real* sweep executed on the platform.
+
+mod common;
+
+use acai::usability::{round1_commands, round1_params, run_study};
+use common::*;
+
+fn main() {
+    header(
+        "Table 5: usability round 1 (MLP, 16 jobs)",
+        "code dev 21.47->16.65 min (22%); deploy 14.37->0; tracking \
+         8.52->5.07 (40%); total 188.77->148.03 (21%); cost $4.666->$4.502 (2%)",
+    );
+    let acai = platform(0.02);
+    let report = run_study(
+        &acai,
+        P,
+        U,
+        "mnist",
+        round1_params(),
+        &round1_commands(),
+    )
+    .unwrap();
+
+    println!("category               control (GCP)  treatment (ACAI)  improvement");
+    for row in &report.rows {
+        let imp = if row.control_min > 0.0 {
+            format!("{:.0}%", (1.0 - row.treatment_min / row.control_min) * 100.0)
+        } else {
+            "-".into()
+        };
+        println!(
+            "{:<22} {:>10.2} min {:>13.2} min  {imp:>10}",
+            row.category, row.control_min, row.treatment_min
+        );
+    }
+    println!(
+        "{:<22} {:>10.2} min {:>13.2} min  {:>9.0}%",
+        "Total Time",
+        report.control_total_min,
+        report.treatment_total_min,
+        report.time_improvement() * 100.0
+    );
+    println!(
+        "{:<22} {:>13.3} $ {:>15.3} $  {:>9.1}%",
+        "Total Cost",
+        report.control_cost,
+        report.treatment_cost,
+        report.cost_improvement() * 100.0
+    );
+    assert_eq!(report.jobs, 16);
+    assert!(report.time_improvement() > 0.10, "ACAI must save >10% time");
+    assert!(report.cost_improvement() > 0.0, "ACAI must not cost more");
+    println!("\nSHAPE OK: ACAI saves time in every category and a little cost");
+}

@@ -1,0 +1,157 @@
+//! End-to-end validation driver (the headline experiment).
+//!
+//! Exercises every layer of the stack on a real small workload:
+//!
+//! 1. boot with the AOT artifacts (L1 Pallas kernels inside L2 JAX
+//!    modules, compiled once by PJRT);
+//! 2. upload a dataset + file set into the data lake;
+//! 3. **profile** the MNIST MLP command template — 27 real trial jobs
+//!    through the scheduler/cluster, each training the MLP via PJRT;
+//! 4. **fit** the log-linear runtime model (PJRT `loglinear_fit`);
+//! 5. **auto-provision** both objectives (Table 2 and Table 3 of the
+//!    paper) and run baseline-vs-optimized jobs, reporting measured
+//!    speedup / savings;
+//! 6. dump the provenance DAG and the loss curve of the final model.
+//!
+//! Results are recorded in EXPERIMENTS.md.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use std::sync::Arc;
+
+use acai::autoprovision::Objective;
+use acai::cluster::ResourceConfig;
+use acai::sdk::{Client, JobRequest};
+use acai::{Acai, PlatformConfig};
+
+fn main() -> acai::Result<()> {
+    let t_wall = std::time::Instant::now();
+    let mut config = PlatformConfig::with_artifacts(PlatformConfig::default_artifacts_dir());
+    config.noise = 0.02; // mild heteroscedastic noise, as the paper observes
+    let acai = Arc::new(Acai::boot(config)?);
+    println!("== ACAI end-to-end driver (PJRT runtime loaded) ==\n");
+
+    let root = acai.credentials.root_token().to_string();
+    let (_project, token) = acai.credentials.create_project(&root, "e2e", "alice")?;
+    let client = Client::connect(acai.clone(), &token)?;
+
+    // -- data lake --------------------------------------------------
+    client.upload_files(&[("/data/mnist-train.bin", &vec![7u8; 1 << 16] as &[u8])])?;
+    client.create_file_set("mnist", &["/data/mnist-train.bin"])?;
+    println!("uploaded dataset; file set mnist:1 created");
+
+    // -- profile (27 trials, real PJRT MLP training per trial) -------
+    let template =
+        "python train_mnist.py --epoch {1,2,3} --batch-size 256 --learning-rate 0.3";
+    let t0 = std::time::Instant::now();
+    client.profile("mnist", template, "mnist")?;
+    let fitted = acai.profiler.by_name("mnist")?;
+    println!(
+        "profiled {} trials (stragglers past the 95% barrier: {}) in {:.1}s wall",
+        fitted.trials.len(),
+        fitted.stragglers,
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "fitted log-linear model: log t = {:.3} {:+.3}·ln c {:+.3}·ln m {:+.3}·ln e",
+        fitted.theta[0], fitted.theta[1], fitted.theta[2], fitted.theta[3]
+    );
+
+    // -- auto-provision: Table 2 (fix cost, optimize runtime) --------
+    let baseline_res = ResourceConfig::new(2.0, 7680); // n1-standard-2
+    println!("\n== Table 2: fix max cost = baseline cost, optimize runtime ==");
+    println!("epochs | baseline (res, t, $) | auto (res, t, $) | speedup");
+    for epochs in [20.0, 50.0] {
+        let t_base = fitted.predict(&[epochs, 256.0], baseline_res);
+        let cost_base = acai.pricing.cost(baseline_res, t_base);
+        let decision = client.autoprovision(
+            "mnist",
+            &[epochs, 256.0],
+            Objective::MinRuntime { max_cost: cost_base },
+        )?;
+        // run both for real
+        let run = |res: ResourceConfig, tag: &str| -> acai::Result<(f64, f64)> {
+            let job = client.submit(JobRequest {
+                name: format!("t2-{tag}-{epochs}"),
+                command: format!(
+                    "python train_mnist.py --epoch {epochs} --batch-size 256 --learning-rate 0.3"
+                ),
+                input_fileset: "mnist".into(),
+                output_fileset: format!("t2-{tag}-{epochs}-model"),
+                resources: res,
+            })?;
+            client.wait_all();
+            let r = client.job(job)?;
+            Ok((r.runtime_secs.unwrap(), r.cost.unwrap()))
+        };
+        let (tb, cb) = run(baseline_res, "base")?;
+        let (ta, ca) = run(decision.config, "auto")?;
+        println!(
+            "{epochs:>6} | 2 vCPU/7.5GB {tb:6.1}s ${cb:.5} | {:.1} vCPU/{}MB {ta:6.1}s ${ca:.5} | {:.2}x",
+            decision.config.vcpus,
+            decision.config.mem_mb,
+            tb / ta
+        );
+    }
+
+    // -- auto-provision: Table 3 (fix runtime, optimize cost) --------
+    println!("\n== Table 3: fix max runtime = baseline runtime, optimize cost ==");
+    println!("epochs | baseline $ | auto (res, t, $) | savings");
+    for epochs in [20.0, 50.0] {
+        let t_base = fitted.predict(&[epochs, 256.0], baseline_res);
+        let cost_base = acai.pricing.cost(baseline_res, t_base);
+        let decision = client.autoprovision(
+            "mnist",
+            &[epochs, 256.0],
+            Objective::MinCost { max_runtime: t_base },
+        )?;
+        let job = client.submit_provisioned(
+            "mnist",
+            &[epochs, 256.0],
+            &decision,
+            "mnist",
+            &format!("t3-auto-{epochs}-model"),
+        )?;
+        client.wait_all();
+        let r = client.job(job)?;
+        println!(
+            "{epochs:>6} | ${cost_base:.5} | {:.1} vCPU/{}MB {:6.1}s ${:.5} | {:.1}%",
+            decision.config.vcpus,
+            decision.config.mem_mb,
+            r.runtime_secs.unwrap(),
+            r.cost.unwrap(),
+            (1.0 - r.cost.unwrap() / cost_base) * 100.0
+        );
+    }
+
+    // -- the model really trained: loss curve + provenance -----------
+    println!("\n== final model ==");
+    let logs = client.logs(
+        acai.engine
+            .registry
+            .list(client.identity().project, None)
+            .last()
+            .unwrap()
+            .id,
+    );
+    let losses: Vec<&String> = logs.iter().filter(|l| l.contains("training_loss")).collect();
+    println!("loss curve ({} points):", losses.len());
+    for l in &losses {
+        println!("  {l}");
+    }
+    let (nodes, edges) = client.provenance_graph();
+    println!(
+        "provenance: {} file-set versions, {} actions",
+        nodes.len(),
+        edges.len()
+    );
+    let pjrt_execs = acai.runtime.as_ref().map(|r| r.executions()).unwrap_or(0);
+    println!(
+        "\nPJRT executions: {pjrt_execs}; virtual cluster time {:.1}s; wall {:.1}s",
+        acai.clock.now(),
+        t_wall.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Hyperparameter sweep — the workload the usability study times
+//! (paper §5.2): fan out a grid of training jobs through the scheduler,
+//! let the log parser tag every experiment, then find the winner with a
+//! metadata query instead of a spreadsheet.
+//!
+//! ```text
+//! cargo run --release --example hyperparameter_sweep
+//! ```
+
+use std::sync::Arc;
+
+use acai::cluster::ResourceConfig;
+use acai::datalake::metadata::ArtifactKind;
+use acai::docstore::Clause;
+use acai::json::Json;
+use acai::sdk::{Client, JobRequest};
+use acai::{Acai, PlatformConfig};
+
+fn main() -> acai::Result<()> {
+    let mut config = PlatformConfig::default();
+    let artifacts = PlatformConfig::default_artifacts_dir();
+    if artifacts.join("manifest.json").exists() {
+        config.artifacts_dir = Some(artifacts);
+    }
+    config.quota_k = 4; // paper §3.3.1: at most k concurrent jobs per user
+    let acai = Arc::new(Acai::boot(config)?);
+    let root = acai.credentials.root_token().to_string();
+    let (_p, token) = acai.credentials.create_project(&root, "sweep", "bob")?;
+    let client = Client::connect(acai.clone(), &token)?;
+
+    client.upload_files(&[("/data/speech.bin", b"wsj frames" as &[u8])])?;
+    client.create_file_set("frames", &["/data/speech.bin"])?;
+
+    // the MLP grid of paper Table 8 (epochs stands in for depth here)
+    let mut jobs = vec![];
+    for epochs in [2u32, 4, 8] {
+        for lr in [0.1, 0.3] {
+            let name = format!("mlp-e{epochs}-lr{lr}");
+            let job = client.submit(JobRequest {
+                name: name.clone(),
+                command: format!(
+                    "python train_mnist.py --epoch {epochs} --learning-rate {lr}"
+                ),
+                input_fileset: "frames".into(),
+                output_fileset: format!("{name}-model"),
+                resources: ResourceConfig::new(2.0, 2048),
+            })?;
+            jobs.push((job, name));
+        }
+    }
+    println!("submitted {} jobs (quota k=4 ⇒ two waves)", jobs.len());
+    client.wait_all();
+
+    // dashboard-style report
+    println!("\njob                  state     runtime     cost    final loss");
+    for (job, name) in &jobs {
+        let r = client.job(*job)?;
+        let loss = acai
+            .datalake
+            .metadata
+            .get(client.identity().project, ArtifactKind::Job, &job.to_string())
+            .and_then(|d| d.get("training_loss").and_then(Json::as_f64))
+            .unwrap_or(f64::NAN);
+        println!(
+            "{name:<20} {:<9} {:>6.1}s  ${:<7.5} {loss:.4}",
+            r.state.as_str(),
+            r.runtime_secs.unwrap_or(0.0),
+            r.cost.unwrap_or(0.0)
+        );
+    }
+
+    // the paper's §3.2.3 query flow: best experiment via min-query
+    let best = client.query(ArtifactKind::Job, &[Clause::Min("training_loss".into())])?;
+    let (best_id, doc) = &best[0];
+    println!(
+        "\nbest experiment: {best_id} (epochs={}, lr={}) loss={:.4}",
+        doc.get("arg_epoch").and_then(Json::as_f64).unwrap_or(0.0),
+        doc.get("arg_learning-rate").and_then(Json::as_f64).unwrap_or(0.0),
+        doc.get("training_loss").and_then(Json::as_f64).unwrap_or(0.0),
+    );
+    // retrieve the winning model through provenance
+    let out = doc
+        .get("output_fileset")
+        .and_then(Json::as_str)
+        .unwrap_or("")
+        .to_string();
+    let (name, version) = out.split_once(':').unwrap();
+    let lineage = client.lineage(name, version.parse().unwrap());
+    println!("winning model {out}; lineage {lineage:?}");
+    Ok(())
+}

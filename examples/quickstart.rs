@@ -1,0 +1,70 @@
+//! Quickstart: the smallest useful ACAI program.
+//!
+//! Boot a platform, create a project, upload a dataset, run one training
+//! job, and inspect the results — the "hello world" of the SDK.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//! Set `ACAI_ARTIFACTS=artifacts` to run the MLP on the real PJRT
+//! runtime (requires `make artifacts`); without it a closed-form
+//! fallback is used and the flow is identical.
+
+use std::sync::Arc;
+
+use acai::cluster::ResourceConfig;
+use acai::sdk::{Client, JobRequest};
+use acai::{Acai, PlatformConfig};
+
+fn main() -> acai::Result<()> {
+    // 1. Boot the platform (in-process microservices + cluster sim).
+    let mut config = PlatformConfig::default();
+    let artifacts = PlatformConfig::default_artifacts_dir();
+    if artifacts.join("manifest.json").exists() {
+        config.artifacts_dir = Some(artifacts);
+    }
+    let acai = Arc::new(Acai::boot(config)?);
+    println!(
+        "booted ACAI ({} runtime)",
+        if acai.runtime.is_some() { "PJRT" } else { "fallback" }
+    );
+
+    // 2. Project + user (token-based auth, §3.1).
+    let root = acai.credentials.root_token().to_string();
+    let (_project, token) = acai.credentials.create_project(&root, "quickstart", "alice")?;
+    let client = Client::connect(acai.clone(), &token)?;
+
+    // 3. Upload data and pin it into a file set (§3.2).
+    client.upload_files(&[
+        ("/data/train.bin", b"...training bytes..." as &[u8]),
+        ("/data/labels.bin", b"...label bytes..."),
+    ])?;
+    client.create_file_set("mnist", &["/data/train.bin", "/data/labels.bin"])?;
+
+    // 4. Submit a training job (§3.3).
+    let job = client.submit(JobRequest {
+        name: "train-mlp".into(),
+        command: "python train_mnist.py --epoch 5 --learning-rate 0.3".into(),
+        input_fileset: "mnist".into(),
+        output_fileset: "model".into(),
+        resources: ResourceConfig::new(2.0, 2048),
+    })?;
+    client.wait_all();
+
+    // 5. Inspect: record, logs, provenance, output bytes.
+    let record = client.job(job)?;
+    println!(
+        "{job}: {} in {:.1}s for ${:.5}",
+        record.state.as_str(),
+        record.runtime_secs.unwrap_or(0.0),
+        record.cost.unwrap_or(0.0)
+    );
+    for line in client.logs(job).iter().take(6) {
+        println!("  {line}");
+    }
+    let lineage = client.lineage("model", 1);
+    println!("model:1 lineage: {lineage:?}");
+    let model = client.download("/model/mlp.bin", None)?;
+    println!("model bytes: {}", model.len());
+    Ok(())
+}

@@ -1,0 +1,147 @@
+"""AOT compile path: lower every L2 entry point to HLO text + manifest.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser on the Rust side
+reassigns ids and round-trips cleanly.  Lowered with ``return_tuple=True``
+so Rust unwraps a tuple uniformly.
+
+Usage (from ``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entry_points():
+    """(name, fn, input specs, output spec docs) for every AOT module."""
+    m = model
+    return [
+        (
+            "loglinear_fit",
+            m.loglinear_fit,
+            [
+                ("x", (m.FIT_ROWS, m.FEATURES)),
+                ("w", (m.FIT_ROWS, 1)),
+                ("y", (m.FIT_ROWS, 1)),
+            ],
+            [("theta", (m.FEATURES, 1))],
+        ),
+        (
+            "loglinear_predict",
+            m.loglinear_predict,
+            [
+                ("theta", (m.FEATURES, 1)),
+                ("xg", (m.GRID_ROWS, m.FEATURES)),
+            ],
+            [("yhat", (m.GRID_ROWS, 1))],
+        ),
+        (
+            "mlp_train_step",
+            m.mlp_train_step,
+            [
+                ("w1", (m.MLP_IN, m.MLP_HIDDEN)),
+                ("b1", (m.MLP_HIDDEN,)),
+                ("w2", (m.MLP_HIDDEN, m.MLP_OUT)),
+                ("b2", (m.MLP_OUT,)),
+                ("x", (m.TRAIN_BATCH, m.MLP_IN)),
+                ("y1h", (m.TRAIN_BATCH, m.MLP_OUT)),
+                ("lr", ()),
+            ],
+            [
+                ("w1", (m.MLP_IN, m.MLP_HIDDEN)),
+                ("b1", (m.MLP_HIDDEN,)),
+                ("w2", (m.MLP_HIDDEN, m.MLP_OUT)),
+                ("b2", (m.MLP_OUT,)),
+                ("loss", ()),
+            ],
+        ),
+        (
+            "mlp_eval",
+            m.mlp_eval,
+            [
+                ("w1", (m.MLP_IN, m.MLP_HIDDEN)),
+                ("b1", (m.MLP_HIDDEN,)),
+                ("w2", (m.MLP_HIDDEN, m.MLP_OUT)),
+                ("b2", (m.MLP_OUT,)),
+                ("x", (m.EVAL_BATCH, m.MLP_IN)),
+                ("y1h", (m.EVAL_BATCH, m.MLP_OUT)),
+            ],
+            [("loss", ()), ("acc", ())],
+        ),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {
+        "format": "hlo-text",
+        "constants": {
+            "FEATURES": model.FEATURES,
+            "FIT_ROWS": model.FIT_ROWS,
+            "GRID_ROWS": model.GRID_ROWS,
+            "MLP_IN": model.MLP_IN,
+            "MLP_HIDDEN": model.MLP_HIDDEN,
+            "MLP_OUT": model.MLP_OUT,
+            "TRAIN_BATCH": model.TRAIN_BATCH,
+            "EVAL_BATCH": model.EVAL_BATCH,
+        },
+        "modules": {},
+    }
+
+    for name, fn, inputs, outputs in entry_points():
+        specs = [_spec(shape) for _, shape in inputs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["modules"][name] = {
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [
+                {"name": n, "shape": list(s), "dtype": "f32"}
+                for n, s in inputs
+            ],
+            "outputs": [
+                {"name": n, "shape": list(s), "dtype": "f32"}
+                for n, s in outputs
+            ],
+        }
+        print(f"lowered {name}: {len(text)} chars -> {path}")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['modules'])} modules")
+
+
+if __name__ == "__main__":
+    main()

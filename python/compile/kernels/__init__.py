@@ -1,0 +1,20 @@
+"""Layer-1 Pallas kernels for ACAI.
+
+Two kernels cover the platform's compute hot spots:
+
+- :mod:`~compile.kernels.dense` — fused ``act(x @ w + b)`` tile kernel used
+  by the MLP workload (forward and backward matmuls) and by the profiler's
+  batched grid prediction (fused ``exp``).
+- :mod:`~compile.kernels.gram` — one-pass weighted Gram accumulation
+  ``(X^T W X, X^T W y)`` used by the profiler's log-linear normal-equations
+  fit.
+
+Both are lowered with ``interpret=True`` (the CPU PJRT plugin cannot run
+Mosaic custom-calls); real-TPU tiling notes live in DESIGN.md
+§Hardware-Adaptation.
+"""
+
+from compile.kernels.dense import dense
+from compile.kernels.gram import gram
+
+__all__ = ["dense", "gram"]

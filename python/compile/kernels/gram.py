@@ -1,0 +1,88 @@
+"""One-pass weighted Gram kernel: ``A = X^T W X``, ``v = X^T W y``.
+
+This is the compute core of the profiler's log-linear fit (normal
+equations).  The feature dimension ``k`` is tiny (intercept + log-features,
+k <= 16), so both outputs fit in a single VMEM tile; the kernel streams
+row-blocks of ``X`` through VMEM exactly once and accumulates both
+``(k, k)`` and ``(k, 1)`` products per block — arithmetic intensity
+~``2k`` FLOP/byte of ``X`` with no second pass.
+
+Pallas notes: both outputs use a constant block index over the row grid, so
+accumulating ``+=`` across grid steps is legal; the wrapper zero-pads rows
+up to a block multiple (interpret-mode Pallas poisons out-of-range reads),
+and zero-weight rows contribute nothing to either product — the weight
+vector doubles as the validity mask.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEF_BLOCK_ROWS = 256
+
+
+def _gram_kernel(x_ref, w_ref, y_ref, a_ref, v_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        a_ref[...] = jnp.zeros_like(a_ref)
+        v_ref[...] = jnp.zeros_like(v_ref)
+
+    x = x_ref[...]                      # (bn, k)
+    wx = x * w_ref[...]                 # weighted rows (bn, k)
+    a_ref[...] += jnp.dot(x.T, wx, preferred_element_type=jnp.float32)
+    v_ref[...] += jnp.dot(wx.T, y_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def gram(x, w, y, block_rows=DEF_BLOCK_ROWS):
+    """Compute ``(X^T diag(w) X, X^T diag(w) y)`` in one pass over ``X``.
+
+    Args:
+      x: ``(N, k)`` design matrix.
+      w: ``(N, 1)`` per-row weights (0 rows are masked out entirely).
+      y: ``(N, 1)`` targets.
+      block_rows: rows streamed per grid step.
+
+    Returns:
+      ``(A, v)`` with shapes ``(k, k)`` and ``(k, 1)``, float32.
+    """
+    n, k = x.shape
+    if w.shape != (n, 1):
+        raise ValueError(f"w shape {w.shape} != ({n}, 1)")
+    if y.shape != (n, 1):
+        raise ValueError(f"y shape {y.shape} != ({n}, 1)")
+
+    bn = min(block_rows, n)
+    g = pl.cdiv(n, bn)
+    npad = g * bn
+
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    if npad != n:
+        x = jnp.pad(x, ((0, npad - n), (0, 0)))
+        w = jnp.pad(w, ((0, npad - n), (0, 0)))  # pad weight = 0 -> masked
+        y = jnp.pad(y, ((0, npad - n), (0, 0)))
+
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, k), jnp.float32),
+            jax.ShapeDtypeStruct((k, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(x, w, y)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every kernel in this package must match its oracle to float32 tolerance
+across the shape/dtype sweep in ``python/tests/test_kernels.py``.
+"""
+
+import jax.numpy as jnp
+
+
+def dense_ref(x, w, b, act="id"):
+    """Reference for :func:`compile.kernels.dense.dense`."""
+    z = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    z = z + b.astype(jnp.float32)[None, :]
+    if act == "relu":
+        return jnp.maximum(z, 0.0)
+    if act == "exp":
+        return jnp.exp(z)
+    return z
+
+
+def gram_ref(x, w, y):
+    """Reference for :func:`compile.kernels.gram.gram`."""
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    wx = x * w
+    return jnp.dot(x.T, wx), jnp.dot(wx.T, y)

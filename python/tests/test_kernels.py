@@ -1,0 +1,145 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (including non-tile-divisible edges) and dtypes;
+assert_allclose against ref.py is the core correctness signal for the
+compile path.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import dense, gram
+from compile.kernels.ref import dense_ref, gram_ref
+
+DTYPES = [np.float32, np.float64, np.float16]
+
+
+def _arr(rng, shape, dtype=np.float32, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 160),
+    n=st.integers(1, 96),
+    act=st.sampled_from(["id", "relu", "exp"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref_shape_sweep(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (m, k), scale=0.3)
+    w = _arr(rng, (k, n), scale=0.3)
+    b = _arr(rng, (n,), scale=0.3)
+    got = dense(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), act=act)
+    want = dense_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_dense_dtype_promotion(dtype):
+    rng = np.random.default_rng(0)
+    x = _arr(rng, (32, 48), dtype)
+    w = _arr(rng, (48, 16), dtype)
+    b = _arr(rng, (16,), dtype)
+    got = dense(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    assert got.dtype == jnp.float32
+    want = dense_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-3, atol=3e-3)
+
+
+@pytest.mark.parametrize(
+    "m,k,n", [(1, 1, 1), (128, 784, 256), (128, 256, 10), (127, 129, 3), (256, 128, 128)]
+)
+def test_dense_known_shapes(m, k, n):
+    """Exact shapes used by the AOT modules plus pathological edges."""
+    rng = np.random.default_rng(1)
+    x = _arr(rng, (m, k), scale=0.1)
+    w = _arr(rng, (k, n), scale=0.1)
+    b = _arr(rng, (n,))
+    got = dense(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), act="relu")
+    want = dense_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), act="relu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (32, 16, 64), (128, 128, 128), (7, 13, 11)])
+def test_dense_tile_size_invariance(bm, bn, bk):
+    """Result must not depend on the tiling (schedule-correctness)."""
+    rng = np.random.default_rng(2)
+    x = _arr(rng, (40, 56))
+    w = _arr(rng, (56, 24))
+    b = _arr(rng, (24,))
+    got = dense(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), bm=bm, bn=bn, bk=bk)
+    want = dense_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_dense_rejects_bad_shapes():
+    rng = np.random.default_rng(3)
+    with pytest.raises(ValueError):
+        dense(jnp.ones((4, 5)), jnp.ones((6, 7)), jnp.ones((7,)))
+    with pytest.raises(ValueError):
+        dense(jnp.ones((4, 5)), jnp.ones((5, 7)), jnp.ones((8,)))
+    with pytest.raises(ValueError):
+        dense(jnp.ones((4, 5)), jnp.ones((5, 7)), jnp.ones((7,)), act="gelu")
+
+
+# ---------------------------------------------------------------------------
+# gram
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 400),
+    k=st.integers(1, 12),
+    block=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_matches_ref_shape_sweep(n, k, block, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (n, k))
+    w = np.abs(_arr(rng, (n, 1))) + 0.01
+    y = _arr(rng, (n, 1))
+    a, v = gram(jnp.asarray(x), jnp.asarray(w), jnp.asarray(y), block_rows=block)
+    a_ref, v_ref = gram_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(y))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(a_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(v_ref), rtol=1e-4, atol=1e-4)
+
+
+def test_gram_zero_weight_rows_are_masked():
+    """Zero weights must behave exactly like deleting the rows (the fit
+    relies on this for padding + straggler masking)."""
+    rng = np.random.default_rng(7)
+    x = _arr(rng, (64, 4))
+    y = _arr(rng, (64, 1))
+    w = np.ones((64, 1), np.float32)
+    w[27:] = 0.0  # paper: 27 real trials, rest padding
+    a_full, v_full = gram(jnp.asarray(x), jnp.asarray(w), jnp.asarray(y))
+    a_cut, v_cut = gram_ref(
+        jnp.asarray(x[:27]), jnp.asarray(w[:27]), jnp.asarray(y[:27])
+    )
+    np.testing.assert_allclose(np.asarray(a_full), np.asarray(a_cut), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v_full), np.asarray(v_cut), rtol=1e-5, atol=1e-5)
+
+
+def test_gram_symmetry():
+    rng = np.random.default_rng(8)
+    x = _arr(rng, (100, 6))
+    w = np.abs(_arr(rng, (100, 1)))
+    y = _arr(rng, (100, 1))
+    a, _ = gram(jnp.asarray(x), jnp.asarray(w), jnp.asarray(y))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(a).T, rtol=1e-5, atol=1e-5)
+
+
+def test_gram_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        gram(jnp.ones((8, 3)), jnp.ones((8,)), jnp.ones((8, 1)))
+    with pytest.raises(ValueError):
+        gram(jnp.ones((8, 3)), jnp.ones((8, 1)), jnp.ones((7, 1)))

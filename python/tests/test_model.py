@@ -1,0 +1,174 @@
+"""L2 model correctness: fit/predict recover ground truth, MLP learns."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model
+
+
+def _design(trials):
+    """Rows [1, log e, log c, log m] for (e, c, m) trials."""
+    rows = [[1.0, np.log(c), np.log(m), np.log(e), 0.0, 0.0, 0.0, 0.0] for e, c, m in trials]
+    return np.asarray(rows, np.float32)
+
+
+def _pad_fit_inputs(x, y):
+    n = x.shape[0]
+    xp = np.zeros((model.FIT_ROWS, model.FEATURES), np.float32)
+    wp = np.zeros((model.FIT_ROWS, 1), np.float32)
+    yp = np.zeros((model.FIT_ROWS, 1), np.float32)
+    xp[:n] = x
+    wp[:n] = 1.0
+    yp[:n, 0] = y
+    return xp, wp, yp
+
+
+def test_loglinear_fit_recovers_exact_power_law():
+    """If t = a * e^be * c^bc * m^bm exactly, the fit must recover it."""
+    a, be, bc, bm = 37.0, 1.0, -0.9, -0.05
+    trials = [
+        (e, c, m)
+        for e in (1, 2, 3)
+        for c in (0.5, 1, 2)
+        for m in (512, 1024, 2048)
+    ]
+    x = _design(trials)
+    t = a * np.array([e**be * c**bc * m**bm for e, c, m in trials])
+    xp, wp, yp = _pad_fit_inputs(x, np.log(t).astype(np.float32))
+    (theta,) = model.loglinear_fit(jnp.asarray(xp), jnp.asarray(wp), jnp.asarray(yp))
+    theta = np.asarray(theta).ravel()
+    np.testing.assert_allclose(theta[0], np.log(a), rtol=1e-3)
+    np.testing.assert_allclose(theta[1:4], [bc, bm, be], rtol=1e-2, atol=1e-3)
+    np.testing.assert_allclose(theta[4:], 0.0, atol=1e-3)
+
+
+def test_loglinear_fit_masks_padding_rows():
+    """Garbage in weight-0 rows must not move the fit."""
+    trials = [(e, c, m) for e in (1, 2) for c in (1, 2) for m in (512, 1024)]
+    x = _design(trials)
+    t = 10.0 * np.array([e / c for e, c, m in trials])
+    xp, wp, yp = _pad_fit_inputs(x, np.log(t).astype(np.float32))
+    xq = xp.copy()
+    yq = yp.copy()
+    xq[len(trials):] = 1e6  # garbage in masked rows
+    yq[len(trials):] = -1e6
+    (t1,) = model.loglinear_fit(jnp.asarray(xp), jnp.asarray(wp), jnp.asarray(yp))
+    (t2,) = model.loglinear_fit(jnp.asarray(xq), jnp.asarray(wp), jnp.asarray(yq))
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2), rtol=1e-5, atol=1e-5)
+
+
+def test_loglinear_predict_matches_manual_exp():
+    theta = np.zeros((model.FEATURES, 1), np.float32)
+    theta[0, 0], theta[1, 0], theta[3, 0] = 2.0, -1.0, 1.0
+    xg = np.zeros((model.GRID_ROWS, model.FEATURES), np.float32)
+    xg[:, 0] = 1.0
+    xg[0, :4] = [1.0, np.log(2.0), np.log(1024.0), np.log(20.0)]
+    (yhat,) = model.loglinear_predict(jnp.asarray(theta), jnp.asarray(xg))
+    want = np.exp(2.0) * 20.0 / 2.0
+    np.testing.assert_allclose(np.asarray(yhat)[0, 0], want, rtol=1e-4)
+
+
+def test_cholesky_solve_matches_numpy():
+    rng = np.random.default_rng(11)
+    for _ in range(10):
+        k = model.FEATURES
+        b_ = rng.standard_normal((k, k)).astype(np.float32)
+        a = b_ @ b_.T + 0.1 * np.eye(k, dtype=np.float32)
+        rhs = rng.standard_normal((k, 1)).astype(np.float32)
+        x = model.cholesky_solve(jnp.asarray(a), jnp.asarray(rhs), k)
+        np.testing.assert_allclose(
+            np.asarray(x), np.linalg.solve(a, rhs), rtol=2e-3, atol=2e-3
+        )
+
+
+# ---------------------------------------------------------------------------
+# MLP workload
+# ---------------------------------------------------------------------------
+
+def _init_params(rng):
+    w1 = (rng.standard_normal((model.MLP_IN, model.MLP_HIDDEN)) * 0.05).astype(np.float32)
+    b1 = np.zeros((model.MLP_HIDDEN,), np.float32)
+    w2 = (rng.standard_normal((model.MLP_HIDDEN, model.MLP_OUT)) * 0.05).astype(np.float32)
+    b2 = np.zeros((model.MLP_OUT,), np.float32)
+    return w1, b1, w2, b2
+
+
+def _batch(rng, n):
+    x = rng.standard_normal((n, model.MLP_IN)).astype(np.float32) * 0.5
+    labels = rng.integers(0, model.MLP_OUT, n)
+    # make the task learnable: shift pixels by the label
+    for i, l in enumerate(labels):
+        x[i, l * 10 : l * 10 + 10] += 2.0
+    y = np.eye(model.MLP_OUT, dtype=np.float32)[labels]
+    return x, y
+
+
+def test_mlp_train_step_decreases_loss():
+    rng = np.random.default_rng(42)
+    params = _init_params(rng)
+    x, y = _batch(rng, model.TRAIN_BATCH)
+    args = [jnp.asarray(p) for p in params]
+    losses = []
+    for _ in range(12):
+        *args, loss = model.mlp_train_step(
+            *args, jnp.asarray(x), jnp.asarray(y), jnp.float32(0.5)
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, losses
+
+
+def test_mlp_train_step_matches_jax_grad():
+    """Hand-derived backward == autodiff of the pure-jnp forward."""
+    import jax
+
+    rng = np.random.default_rng(3)
+    w1, b1, w2, b2 = _init_params(rng)
+    x, y = _batch(rng, model.TRAIN_BATCH)
+
+    def loss_fn(params):
+        w1, b1, w2, b2 = params
+        z1 = x @ w1 + b1
+        h = jnp.maximum(z1, 0.0)
+        logits = h @ w2 + b2
+        zmax = jnp.max(logits, axis=1, keepdims=True)
+        logp = logits - zmax - jnp.log(jnp.sum(jnp.exp(logits - zmax), 1, keepdims=True))
+        return -jnp.mean(jnp.sum(y * logp, axis=1))
+
+    grads = jax.grad(loss_fn)((jnp.asarray(w1), jnp.asarray(b1), jnp.asarray(w2), jnp.asarray(b2)))
+    lr = 0.1
+    out = model.mlp_train_step(
+        jnp.asarray(w1), jnp.asarray(b1), jnp.asarray(w2), jnp.asarray(b2),
+        jnp.asarray(x), jnp.asarray(y), jnp.float32(lr),
+    )
+    for new, old, g in zip(out[:4], (w1, b1, w2, b2), grads):
+        np.testing.assert_allclose(
+            np.asarray(new), old - lr * np.asarray(g), rtol=2e-3, atol=2e-4
+        )
+
+
+def test_mlp_eval_reports_chance_accuracy_untrained():
+    rng = np.random.default_rng(5)
+    params = _init_params(rng)
+    x, y = _batch(rng, model.EVAL_BATCH)
+    loss, acc = model.mlp_eval(
+        *[jnp.asarray(p) for p in params], jnp.asarray(x), jnp.asarray(y)
+    )
+    assert 0.0 <= float(acc) <= 1.0
+    assert float(loss) == pytest.approx(np.log(model.MLP_OUT), rel=0.3)
+
+
+def test_mlp_train_then_eval_improves_accuracy():
+    rng = np.random.default_rng(9)
+    params = _init_params(rng)
+    args = [jnp.asarray(p) for p in params]
+    xe, ye = _batch(rng, model.EVAL_BATCH)
+    _, acc0 = model.mlp_eval(*args, jnp.asarray(xe), jnp.asarray(ye))
+    for _ in range(15):
+        x, y = _batch(rng, model.TRAIN_BATCH)
+        *args, _ = model.mlp_train_step(
+            *args, jnp.asarray(x), jnp.asarray(y), jnp.float32(0.3)
+        )
+    _, acc1 = model.mlp_eval(*args, jnp.asarray(xe), jnp.asarray(ye))
+    assert float(acc1) > float(acc0) + 0.3, (float(acc0), float(acc1))

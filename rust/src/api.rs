@@ -1,0 +1,160 @@
+//! REST edge: the credential-server routing of paper §4.1 as a
+//! reusable [`Handler`] (used by `acai serve` and the HTTP integration
+//! tests).  Every request authenticates `x-acai-token` and is redirected
+//! to the matching internal service (Figure 7).
+
+use std::sync::Arc;
+
+use crate::cluster::ResourceConfig;
+use crate::datalake::metadata::ArtifactKind;
+use crate::httpd::{Handler, Request, Response};
+use crate::json::Json;
+use crate::platform::Acai;
+use crate::sdk::{Client, JobRequest};
+
+/// Build the REST routing table (exposed for the httpd integration test).
+pub fn make_handler(acai: Arc<Acai>) -> Handler {
+    Arc::new(move |req: &Request| route(&acai, req).unwrap_or_else(|e| Response::error(&e)))
+}
+
+fn route(acai: &Arc<Acai>, req: &Request) -> crate::error::Result<Response> {
+    use crate::error::AcaiError;
+    let path = req.path.as_str();
+
+    // Unauthenticated: project bootstrap (global admin token in body).
+    if req.method == "POST" && path == "/projects" {
+        let body = req.json()?;
+        let root = body.get("root_token").and_then(Json::as_str).unwrap_or("");
+        let name = body.get("name").and_then(Json::as_str).unwrap_or("");
+        let admin = body.get("admin").and_then(Json::as_str).unwrap_or("admin");
+        let (pid, token) = acai.credentials.create_project(root, name, admin)?;
+        return Ok(Response::json(
+            &Json::obj()
+                .field("project", pid.to_string())
+                .field("admin_token", token)
+                .build(),
+        ));
+    }
+
+    // Everything else: authenticate, then redirect to the service.
+    let token = req
+        .header("x-acai-token")
+        .ok_or_else(|| AcaiError::Unauthorized("missing x-acai-token".into()))?;
+    let client = Client::connect(acai.clone(), token)?;
+
+    match (req.method.as_str(), path) {
+        ("POST", "/users") => {
+            let body = req.json()?;
+            let name = body.get("name").and_then(Json::as_str).unwrap_or("");
+            let new_token = acai.credentials.create_user(token, name)?;
+            Ok(Response::json(&Json::obj().field("token", new_token).build()))
+        }
+        ("GET", "/files") => {
+            let listing = client.list_files("/");
+            let files: Vec<Json> = listing
+                .into_iter()
+                .map(|(p, v)| Json::obj().field("path", p).field("version", v).build())
+                .collect();
+            Ok(Response::json(&Json::Arr(files)))
+        }
+        ("POST", "/filesets") => {
+            let body = req.json()?;
+            let name = body.get("name").and_then(Json::as_str).unwrap_or("");
+            let specs: Vec<String> = body
+                .get("specs")
+                .and_then(Json::as_array)
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|s| s.as_str().map(String::from))
+                .collect();
+            let refs: Vec<&str> = specs.iter().map(|s| s.as_str()).collect();
+            let version = client.create_file_set(name, &refs)?;
+            Ok(Response::json(&Json::obj().field("version", version).build()))
+        }
+        ("POST", "/jobs") => {
+            let body = req.json()?;
+            let get = |k: &str| body.get(k).and_then(Json::as_str).unwrap_or("").to_string();
+            let job = client.submit(JobRequest {
+                name: get("name"),
+                command: get("command"),
+                input_fileset: get("input_fileset"),
+                output_fileset: get("output_fileset"),
+                resources: ResourceConfig::new(
+                    body.get("vcpus").and_then(Json::as_f64).unwrap_or(1.0),
+                    body.get("mem_mb").and_then(Json::as_u64).unwrap_or(1024) as u32,
+                ),
+            })?;
+            client.wait_all();
+            let record = client.job(job)?;
+            Ok(Response::json(
+                &Json::obj()
+                    .field("job", job.to_string())
+                    .field("state", record.state.as_str())
+                    .field("runtime_secs", record.runtime_secs.unwrap_or(0.0))
+                    .field("cost", record.cost.unwrap_or(0.0))
+                    .build(),
+            ))
+        }
+        ("GET", "/provenance") => {
+            let (nodes, edges) = client.provenance_graph();
+            let edges: Vec<Json> = edges
+                .into_iter()
+                .map(|e| {
+                    Json::obj()
+                        .field("from", e.from)
+                        .field("to", e.to)
+                        .field("action", e.action)
+                        .field("kind", e.kind)
+                        .build()
+                })
+                .collect();
+            Ok(Response::json(
+                &Json::obj()
+                    .field("nodes", Json::Arr(nodes.into_iter().map(Json::from).collect()))
+                    .field("edges", Json::Arr(edges))
+                    .build(),
+            ))
+        }
+        ("GET", "/jobs") => {
+            let records = acai
+                .engine
+                .registry
+                .list(client.identity().project, None);
+            let jobs: Vec<Json> = records
+                .into_iter()
+                .map(|r| {
+                    Json::obj()
+                        .field("job", r.id.to_string())
+                        .field("name", r.spec.name)
+                        .field("state", r.state.as_str())
+                        .build()
+                })
+                .collect();
+            Ok(Response::json(&Json::Arr(jobs)))
+        }
+        ("GET", "/metadata") => {
+            // /metadata?kind=jobs&id=job-1
+            let mut kind = ArtifactKind::Job;
+            let mut id = String::new();
+            for pair in req.query.split('&') {
+                match pair.split_once('=') {
+                    Some(("kind", "files")) => kind = ArtifactKind::File,
+                    Some(("kind", "filesets")) => kind = ArtifactKind::FileSet,
+                    Some(("kind", _)) => kind = ArtifactKind::Job,
+                    Some(("id", v)) => id = v.to_string(),
+                    _ => {}
+                }
+            }
+            let doc = acai
+                .datalake
+                .metadata
+                .get(client.identity().project, kind, &id)
+                .ok_or_else(|| AcaiError::not_found(id))?;
+            Ok(Response::json(&doc))
+        }
+        _ => Err(AcaiError::not_found(format!(
+            "{} {path}",
+            req.method
+        ))),
+    }
+}

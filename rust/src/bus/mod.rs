@@ -1,0 +1,219 @@
+//! Topic-based pub/sub event bus — the Redis analogue (paper §4.2).
+//!
+//! The microservices coordinate via two primary topics: the **container
+//! status** topic (published by the launcher as it watches the cluster)
+//! and the **job progress** topic (published by the in-container agent:
+//! downloading / running / uploading...).  Messages published to a topic
+//! are immediately delivered to every subscriber of that topic.
+//!
+//! Supports both pull subscribers (an mpsc receiver, like a Redis
+//! SUBSCRIBE connection) and push subscribers (callbacks, used by the
+//! in-process services).  Delivery to pull subscribers is best-effort
+//! drop-on-disconnect, matching Redis pub/sub semantics (no persistence).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::json::Json;
+
+/// Well-known topic names (paper §4.2).
+pub const TOPIC_CONTAINER_STATUS: &str = "container-status";
+pub const TOPIC_JOB_PROGRESS: &str = "job-progress";
+
+/// A published message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub topic: String,
+    pub payload: Json,
+}
+
+type Callback = Arc<dyn Fn(&Event) + Send + Sync>;
+
+#[derive(Default)]
+struct Topic {
+    pull: Vec<Sender<Event>>,
+    push: Vec<Callback>,
+}
+
+#[derive(Default)]
+struct Inner {
+    topics: HashMap<String, Topic>,
+    published: u64,
+    delivered: u64,
+}
+
+/// The bus handle; cheap to clone, shared by all services.
+#[derive(Clone, Default)]
+pub struct Bus {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl Bus {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish to a topic. Returns the number of subscribers reached.
+    pub fn publish(&self, topic: &str, payload: Json) -> usize {
+        let event = Event {
+            topic: topic.to_string(),
+            payload,
+        };
+        let mut inner = self.inner.lock().unwrap();
+        inner.published += 1;
+        let Some(t) = inner.topics.get_mut(topic) else {
+            return 0;
+        };
+        // Prune disconnected pull subscribers as we go.
+        t.pull.retain(|tx| tx.send(event.clone()).is_ok());
+        let mut reached = t.pull.len();
+        // Callbacks are cloned (Arc) and invoked *outside* the bus lock:
+        // delivery is still synchronous from the publisher's point of view
+        // (the scheduler observes container-terminated before its next
+        // launch decision), but callbacks may publish to other topics and
+        // concurrent publishers never miss a subscriber.
+        let cbs: Vec<Callback> = t.push.clone();
+        drop(inner);
+        for cb in &cbs {
+            cb(&event);
+            reached += 1;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.delivered += reached as u64;
+        reached
+    }
+
+    /// Subscribe with a pull receiver (Redis SUBSCRIBE analogue).
+    pub fn subscribe(&self, topic: &str) -> Receiver<Event> {
+        let (tx, rx) = channel();
+        self.inner
+            .lock()
+            .unwrap()
+            .topics
+            .entry(topic.to_string())
+            .or_default()
+            .pull
+            .push(tx);
+        rx
+    }
+
+    /// Subscribe with a callback (in-process service analogue).
+    pub fn subscribe_fn(&self, topic: &str, f: impl Fn(&Event) + Send + Sync + 'static) {
+        self.inner
+            .lock()
+            .unwrap()
+            .topics
+            .entry(topic.to_string())
+            .or_default()
+            .push
+            .push(Arc::new(f));
+    }
+
+    /// (published, delivered) counters — used by the perf bench.
+    pub fn stats(&self) -> (u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.published, inner.delivered)
+    }
+
+    /// Number of live subscribers on a topic.
+    pub fn subscriber_count(&self, topic: &str) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .topics
+            .get(topic)
+            .map(|t| t.pull.len() + t.push.len())
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_without_subscribers_reaches_zero() {
+        let bus = Bus::new();
+        assert_eq!(bus.publish("t", Json::Null), 0);
+    }
+
+    #[test]
+    fn pull_subscriber_receives_in_order() {
+        let bus = Bus::new();
+        let rx = bus.subscribe("jobs");
+        for i in 0..5u64 {
+            bus.publish("jobs", Json::from(i));
+        }
+        let got: Vec<u64> = rx.try_iter().map(|e| e.payload.as_u64().unwrap()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn push_subscriber_is_invoked_synchronously() {
+        let bus = Bus::new();
+        let hits = Arc::new(Mutex::new(Vec::new()));
+        let h = hits.clone();
+        bus.subscribe_fn("status", move |e| {
+            h.lock().unwrap().push(e.payload.clone());
+        });
+        bus.publish("status", Json::from("running"));
+        assert_eq!(hits.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn topics_are_isolated() {
+        let bus = Bus::new();
+        let rx_a = bus.subscribe("a");
+        let _rx_b = bus.subscribe("b");
+        bus.publish("b", Json::from(1u64));
+        assert!(rx_a.try_recv().is_err());
+    }
+
+    #[test]
+    fn disconnected_subscribers_are_pruned() {
+        let bus = Bus::new();
+        {
+            let _rx = bus.subscribe("t");
+            assert_eq!(bus.subscriber_count("t"), 1);
+        } // rx dropped
+        bus.publish("t", Json::Null);
+        assert_eq!(bus.subscriber_count("t"), 0);
+    }
+
+    #[test]
+    fn fan_out_reaches_all() {
+        let bus = Bus::new();
+        let rxs: Vec<_> = (0..10).map(|_| bus.subscribe("fan")).collect();
+        let n = bus.publish("fan", Json::from(7u64));
+        assert_eq!(n, 10);
+        for rx in rxs {
+            assert_eq!(rx.try_recv().unwrap().payload.as_u64(), Some(7));
+        }
+    }
+
+    #[test]
+    fn cross_thread_delivery() {
+        let bus = Bus::new();
+        let rx = bus.subscribe("x");
+        let b2 = bus.clone();
+        let t = std::thread::spawn(move || {
+            for i in 0..100u64 {
+                b2.publish("x", Json::from(i));
+            }
+        });
+        t.join().unwrap();
+        assert_eq!(rx.iter().take(100).count(), 100);
+    }
+
+    #[test]
+    fn stats_count_published_and_delivered() {
+        let bus = Bus::new();
+        let _rx1 = bus.subscribe("s");
+        let _rx2 = bus.subscribe("s");
+        bus.publish("s", Json::Null);
+        bus.publish("s", Json::Null);
+        let (p, d) = bus.stats();
+        assert_eq!(p, 2);
+        assert_eq!(d, 4);
+    }
+}

@@ -1,0 +1,453 @@
+//! Container cluster simulator — the Kubernetes analogue (paper §4.2.1).
+//!
+//! The paper's job launcher provisions containers in a Kubernetes cluster
+//! and watches their status.  This simulator provides that contract on a
+//! virtual clock:
+//!
+//! - a fleet of nodes with (vCPU, memory) capacity;
+//! - first-fit container placement with exact resource accounting
+//!   (milli-vCPU integers — no float drift);
+//! - event-driven completion: the engine asks for the next completion
+//!   time, advances the [`SimClock`], and collects status events (the
+//!   "watch" stream the paper's launcher subscribes to);
+//! - failure + straggler injection, deterministic per seed, so the
+//!   profiler's 95%-barrier and the scheduler's failure paths are
+//!   testable.
+//!
+//! Durations are decided by the caller (the [`crate::workload`] runtime
+//! model owns the t ≈ t₁·e·c⁻¹ law); the cluster applies stragglers.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{AcaiError, Result};
+use crate::ids::{ContainerId, IdGen, NodeId};
+use crate::prng::Rng;
+use crate::simclock::SimClock;
+
+/// Resources requested for one container (paper §4.3: 0.5–8 vCPU in 0.5
+/// steps, 512–8192 MB in 256 MB steps).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResourceConfig {
+    pub vcpus: f64,
+    pub mem_mb: u32,
+}
+
+impl ResourceConfig {
+    pub fn new(vcpus: f64, mem_mb: u32) -> Self {
+        Self { vcpus, mem_mb }
+    }
+
+    /// The platform's minimum / maximum provisionable configs.
+    pub const MIN: ResourceConfig = ResourceConfig { vcpus: 0.5, mem_mb: 512 };
+    pub const MAX: ResourceConfig = ResourceConfig { vcpus: 8.0, mem_mb: 8192 };
+
+    /// Validate against the provisioning granularity (§4.2.4).
+    pub fn validate(&self) -> Result<()> {
+        let millis = (self.vcpus * 1000.0).round() as u64;
+        if !(500..=8000).contains(&millis) || millis % 500 != 0 {
+            return Err(AcaiError::invalid(format!(
+                "vCPUs must be 0.5..=8 in 0.5 steps, got {}",
+                self.vcpus
+            )));
+        }
+        if !(512..=8192).contains(&self.mem_mb) || self.mem_mb % 256 != 0 {
+            return Err(AcaiError::invalid(format!(
+                "memory must be 512..=8192 MB in 256 MB steps, got {}",
+                self.mem_mb
+            )));
+        }
+        Ok(())
+    }
+
+    fn milli_vcpus(&self) -> u64 {
+        (self.vcpus * 1000.0).round() as u64
+    }
+}
+
+/// Capacity of one simulated node.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeSpec {
+    pub vcpus: f64,
+    pub mem_mb: u32,
+}
+
+/// Cluster-wide simulation parameters.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub nodes: Vec<NodeSpec>,
+    /// Probability a container fails instead of succeeding.
+    pub failure_rate: f64,
+    /// Probability a container is a straggler…
+    pub straggler_rate: f64,
+    /// …running this many times longer.
+    pub straggler_factor: f64,
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            // 8 × n1-highcpu-ish nodes: plenty for the paper's sweeps.
+            nodes: vec![
+                NodeSpec {
+                    vcpus: 16.0,
+                    mem_mb: 65536,
+                };
+                8
+            ],
+            failure_rate: 0.0,
+            straggler_rate: 0.0,
+            straggler_factor: 4.0,
+            seed: 0xACA1,
+        }
+    }
+}
+
+/// Container status, as reported on the watch stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContainerPhase {
+    Running,
+    Succeeded,
+    Failed,
+    Killed,
+}
+
+/// One watch-stream event.
+#[derive(Debug, Clone)]
+pub struct ContainerEvent {
+    pub container: ContainerId,
+    pub node: NodeId,
+    pub phase: ContainerPhase,
+    pub at: f64,
+}
+
+struct Node {
+    spec: NodeSpec,
+    used_milli: u64,
+    used_mem: u32,
+}
+
+struct RunningContainer {
+    node: usize,
+    res: ResourceConfig,
+    end: f64,
+    will_fail: bool,
+}
+
+struct Inner {
+    nodes: Vec<Node>,
+    running: HashMap<ContainerId, RunningContainer>,
+    rng: Rng,
+    launched: u64,
+    completed: u64,
+}
+
+/// The simulated cluster.
+#[derive(Clone)]
+pub struct Cluster {
+    inner: Arc<Mutex<Inner>>,
+    clock: SimClock,
+    ids: Arc<IdGen>,
+    config: ClusterConfig,
+}
+
+impl Cluster {
+    pub fn new(config: ClusterConfig, clock: SimClock) -> Self {
+        let nodes = config
+            .nodes
+            .iter()
+            .map(|spec| Node {
+                spec: *spec,
+                used_milli: 0,
+                used_mem: 0,
+            })
+            .collect();
+        Self {
+            inner: Arc::new(Mutex::new(Inner {
+                nodes,
+                running: HashMap::new(),
+                rng: Rng::new(config.seed),
+                launched: 0,
+                completed: 0,
+            })),
+            clock,
+            ids: Arc::new(IdGen::new()),
+            config,
+        }
+    }
+
+    /// Place + start a container that will run for `duration` virtual
+    /// seconds.  First-fit across nodes; `Exhausted` if nothing fits.
+    pub fn launch(&self, res: ResourceConfig, duration: f64) -> Result<ContainerId> {
+        res.validate()?;
+        let mut inner = self.inner.lock().unwrap();
+        let milli = res.milli_vcpus();
+        let slot = inner.nodes.iter().position(|n| {
+            (n.spec.vcpus * 1000.0) as u64 - n.used_milli >= milli
+                && n.spec.mem_mb - n.used_mem >= res.mem_mb
+        });
+        let Some(node_idx) = slot else {
+            return Err(AcaiError::Exhausted(format!(
+                "no node fits {:.1} vCPU / {} MB",
+                res.vcpus, res.mem_mb
+            )));
+        };
+        inner.nodes[node_idx].used_milli += milli;
+        inner.nodes[node_idx].used_mem += res.mem_mb;
+        let mut effective = duration;
+        if self.config.straggler_rate > 0.0 && inner.rng.chance(self.config.straggler_rate) {
+            effective *= self.config.straggler_factor;
+        }
+        let will_fail = self.config.failure_rate > 0.0
+            && inner.rng.chance(self.config.failure_rate);
+        let id = ContainerId(self.ids.next());
+        let end = self.clock.now() + effective.max(0.0);
+        inner.running.insert(
+            id,
+            RunningContainer {
+                node: node_idx,
+                res,
+                end,
+                will_fail,
+            },
+        );
+        inner.launched += 1;
+        Ok(id)
+    }
+
+    /// Kill a running container immediately, freeing its resources.
+    pub fn kill(&self, id: ContainerId) -> Result<ContainerEvent> {
+        let mut inner = self.inner.lock().unwrap();
+        let c = inner
+            .running
+            .remove(&id)
+            .ok_or_else(|| AcaiError::not_found(format!("container {id}")))?;
+        let node = c.node;
+        inner.nodes[node].used_milli -= c.res.milli_vcpus();
+        inner.nodes[node].used_mem -= c.res.mem_mb;
+        Ok(ContainerEvent {
+            container: id,
+            node: NodeId(node as u64),
+            phase: ContainerPhase::Killed,
+            at: self.clock.now(),
+        })
+    }
+
+    /// Earliest pending completion time, if any containers are running.
+    pub fn next_completion(&self) -> Option<f64> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .running
+            .values()
+            .map(|c| c.end)
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
+    /// Collect every container whose end time has passed the clock,
+    /// freeing resources.  Events are ordered by completion time.
+    pub fn collect_completions(&self) -> Vec<ContainerEvent> {
+        let now = self.clock.now();
+        let mut inner = self.inner.lock().unwrap();
+        // Tolerance: the SimClock stores rounded micros, so an end time
+        // can exceed the advanced clock by up to half a microsecond.
+        let done: Vec<ContainerId> = inner
+            .running
+            .iter()
+            .filter(|(_, c)| c.end <= now + 1e-5)
+            .map(|(id, _)| *id)
+            .collect();
+        let mut events: Vec<ContainerEvent> = done
+            .into_iter()
+            .map(|id| {
+                let c = inner.running.remove(&id).unwrap();
+                let node = c.node;
+                inner.nodes[node].used_milli -= c.res.milli_vcpus();
+                inner.nodes[node].used_mem -= c.res.mem_mb;
+                inner.completed += 1;
+                ContainerEvent {
+                    container: id,
+                    node: NodeId(node as u64),
+                    phase: if c.will_fail {
+                        ContainerPhase::Failed
+                    } else {
+                        ContainerPhase::Succeeded
+                    },
+                    at: c.end,
+                }
+            })
+            .collect();
+        events.sort_by(|a, b| a.at.total_cmp(&b.at).then(a.container.cmp(&b.container)));
+        events
+    }
+
+    /// (used milli-vCPUs, total milli-vCPUs, used MB, total MB).
+    pub fn utilization(&self) -> (u64, u64, u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        let mut out = (0u64, 0u64, 0u64, 0u64);
+        for n in &inner.nodes {
+            out.0 += n.used_milli;
+            out.1 += (n.spec.vcpus * 1000.0) as u64;
+            out.2 += n.used_mem as u64;
+            out.3 += n.spec.mem_mb as u64;
+        }
+        out
+    }
+
+    /// Number of currently running containers.
+    pub fn running_count(&self) -> usize {
+        self.inner.lock().unwrap().running.len()
+    }
+
+    /// (launched, completed) counters.
+    pub fn stats(&self) -> (u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.launched, inner.completed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cluster() -> (Cluster, SimClock) {
+        let clock = SimClock::new();
+        let config = ClusterConfig {
+            nodes: vec![NodeSpec {
+                vcpus: 4.0,
+                mem_mb: 4096,
+            }],
+            ..Default::default()
+        };
+        (Cluster::new(config, clock.clone()), clock)
+    }
+
+    #[test]
+    fn launch_and_complete() {
+        let (cluster, clock) = small_cluster();
+        let id = cluster
+            .launch(ResourceConfig::new(2.0, 1024), 10.0)
+            .unwrap();
+        assert_eq!(cluster.running_count(), 1);
+        assert_eq!(cluster.next_completion(), Some(10.0));
+        clock.advance(10.0);
+        let events = cluster.collect_completions();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].container, id);
+        assert_eq!(events[0].phase, ContainerPhase::Succeeded);
+        assert_eq!(cluster.running_count(), 0);
+    }
+
+    #[test]
+    fn resources_are_freed_after_completion() {
+        let (cluster, clock) = small_cluster();
+        cluster.launch(ResourceConfig::new(4.0, 4096), 5.0).unwrap();
+        // full node: next launch must fail
+        assert!(cluster.launch(ResourceConfig::new(0.5, 512), 5.0).is_err());
+        clock.advance(5.0);
+        cluster.collect_completions();
+        assert!(cluster.launch(ResourceConfig::new(4.0, 4096), 5.0).is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_off_grid_configs() {
+        assert!(ResourceConfig::new(0.25, 512).validate().is_err());
+        assert!(ResourceConfig::new(8.5, 512).validate().is_err());
+        assert!(ResourceConfig::new(1.0, 500).validate().is_err());
+        assert!(ResourceConfig::new(1.0, 8448).validate().is_err());
+        assert!(ResourceConfig::new(7.5, 3584).validate().is_ok());
+    }
+
+    #[test]
+    fn completions_collect_in_time_order() {
+        let (cluster, clock) = small_cluster();
+        cluster.launch(ResourceConfig::new(0.5, 512), 30.0).unwrap();
+        cluster.launch(ResourceConfig::new(0.5, 512), 10.0).unwrap();
+        cluster.launch(ResourceConfig::new(0.5, 512), 20.0).unwrap();
+        clock.advance(30.0);
+        let events = cluster.collect_completions();
+        let times: Vec<f64> = events.iter().map(|e| e.at).collect();
+        assert_eq!(times, vec![10.0, 20.0, 30.0]);
+    }
+
+    #[test]
+    fn kill_frees_resources() {
+        let (cluster, _clock) = small_cluster();
+        let id = cluster.launch(ResourceConfig::new(4.0, 4096), 100.0).unwrap();
+        let e = cluster.kill(id).unwrap();
+        assert_eq!(e.phase, ContainerPhase::Killed);
+        assert!(cluster.launch(ResourceConfig::new(4.0, 4096), 1.0).is_ok());
+        assert!(cluster.kill(id).is_err()); // double-kill
+    }
+
+    #[test]
+    fn failure_injection_is_deterministic() {
+        let clock = SimClock::new();
+        let config = ClusterConfig {
+            failure_rate: 0.5,
+            seed: 42,
+            ..Default::default()
+        };
+        let cluster = Cluster::new(config.clone(), clock.clone());
+        for _ in 0..20 {
+            cluster.launch(ResourceConfig::new(0.5, 512), 1.0).unwrap();
+        }
+        clock.advance(1.0);
+        let phases1: Vec<_> = cluster
+            .collect_completions()
+            .iter()
+            .map(|e| e.phase)
+            .collect();
+        let failed = phases1.iter().filter(|p| **p == ContainerPhase::Failed).count();
+        assert!(failed > 0 && failed < 20, "failed={failed}");
+
+        // Same seed => same outcome sequence.
+        let clock2 = SimClock::new();
+        let cluster2 = Cluster::new(config, clock2.clone());
+        for _ in 0..20 {
+            cluster2.launch(ResourceConfig::new(0.5, 512), 1.0).unwrap();
+        }
+        clock2.advance(1.0);
+        let phases2: Vec<_> = cluster2
+            .collect_completions()
+            .iter()
+            .map(|e| e.phase)
+            .collect();
+        assert_eq!(phases1, phases2);
+    }
+
+    #[test]
+    fn stragglers_run_longer() {
+        let clock = SimClock::new();
+        let config = ClusterConfig {
+            straggler_rate: 1.0,
+            straggler_factor: 3.0,
+            ..Default::default()
+        };
+        let cluster = Cluster::new(config, clock.clone());
+        cluster.launch(ResourceConfig::new(1.0, 512), 10.0).unwrap();
+        assert_eq!(cluster.next_completion(), Some(30.0));
+    }
+
+    #[test]
+    fn utilization_accounts_exactly() {
+        let (cluster, _clock) = small_cluster();
+        cluster.launch(ResourceConfig::new(1.5, 1024), 10.0).unwrap();
+        cluster.launch(ResourceConfig::new(0.5, 768), 10.0).unwrap();
+        let (used_m, total_m, used_mem, _) = cluster.utilization();
+        assert_eq!(used_m, 2000);
+        assert_eq!(total_m, 4000);
+        assert_eq!(used_mem, 1792);
+    }
+
+    #[test]
+    fn oversized_request_is_rejected_cleanly() {
+        let (cluster, _clock) = small_cluster();
+        // valid granularity but bigger than the node
+        let err = cluster
+            .launch(ResourceConfig::new(8.0, 8192), 1.0)
+            .unwrap_err();
+        assert_eq!(err.status(), 429);
+        assert_eq!(cluster.running_count(), 0);
+    }
+}

@@ -1,0 +1,71 @@
+//! Platform-wide configuration.
+
+use crate::cluster::ClusterConfig;
+
+/// Configuration for one ACAI deployment.
+#[derive(Debug, Clone)]
+pub struct PlatformConfig {
+    /// Simulated cluster layout + failure/straggler injection.
+    pub cluster: ClusterConfig,
+    /// Max jobs per (project, user) in launching+running state (paper
+    /// §3.3.1 — the fairness quota `k`).
+    pub quota_k: usize,
+    /// Fraction of profiling trials that must finish before the fit
+    /// proceeds (paper §4.2.2 — the straggler barrier, 0.95).
+    pub profile_barrier: f64,
+    /// Runtime-model noise scale (0 disables noise; see
+    /// [`crate::workload::SimParams`]).
+    pub noise: f64,
+    /// Master seed for all stochastic components.
+    pub seed: u64,
+    /// Directory containing the AOT artifacts (`*.hlo.txt` + manifest).
+    /// `None` disables the PJRT runtime (closed-form fallbacks are used;
+    /// tests that don't need numerics run faster).
+    pub artifacts_dir: Option<std::path::PathBuf>,
+    /// Journal path for the kvstore (None = in-memory).
+    pub journal: Option<std::path::PathBuf>,
+}
+
+impl Default for PlatformConfig {
+    fn default() -> Self {
+        Self {
+            cluster: ClusterConfig::default(),
+            quota_k: 8,
+            profile_barrier: 0.95,
+            noise: 0.0,
+            seed: 0xACA1,
+            artifacts_dir: None,
+            journal: None,
+        }
+    }
+}
+
+impl PlatformConfig {
+    /// Config with the PJRT runtime enabled from `artifacts/`.
+    pub fn with_artifacts(dir: impl Into<std::path::PathBuf>) -> Self {
+        Self {
+            artifacts_dir: Some(dir.into()),
+            ..Self::default()
+        }
+    }
+
+    /// Resolve the artifacts dir the way the examples/benches do: env var
+    /// `ACAI_ARTIFACTS`, else `./artifacts`.
+    pub fn default_artifacts_dir() -> std::path::PathBuf {
+        std::env::var_os("ACAI_ARTIFACTS")
+            .map(Into::into)
+            .unwrap_or_else(|| "artifacts".into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_constants() {
+        let c = PlatformConfig::default();
+        assert_eq!(c.quota_k, 8);
+        assert!((c.profile_barrier - 0.95).abs() < 1e-12);
+    }
+}

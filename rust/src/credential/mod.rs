@@ -1,0 +1,313 @@
+//! Credential server: users, projects, token authentication (paper §3.1,
+//! §4.1).
+//!
+//! The credential server is the only client-facing endpoint.  Every
+//! request carries a user token (generated at user creation); the server
+//! authenticates it, resolves the (project, user) pair, and redirects the
+//! request to the right internal service.  Authorization rules:
+//!
+//! - a **global administrator** creates projects;
+//! - each project has an **administrator user** who creates users in it;
+//! - project members can access everything inside their project (the
+//!   paper defers finer-grained ACLs to future work, §7.1.1).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{AcaiError, Result};
+use crate::ids::{IdGen, ProjectId, UserId};
+use crate::prng::Rng;
+
+/// An authenticated identity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Identity {
+    pub project: ProjectId,
+    pub user: UserId,
+    pub is_project_admin: bool,
+}
+
+#[derive(Debug, Clone)]
+struct UserRecord {
+    id: UserId,
+    project: ProjectId,
+    name: String,
+    token: String,
+    is_project_admin: bool,
+}
+
+#[derive(Debug, Clone)]
+struct ProjectRecord {
+    #[allow(dead_code)]
+    id: ProjectId,
+    name: String,
+}
+
+#[derive(Default)]
+struct Inner {
+    projects: HashMap<ProjectId, ProjectRecord>,
+    project_names: HashMap<String, ProjectId>,
+    users: HashMap<UserId, UserRecord>,
+    tokens: HashMap<String, UserId>,
+}
+
+/// The credential server.
+#[derive(Clone)]
+pub struct CredentialServer {
+    inner: Arc<Mutex<Inner>>,
+    ids: Arc<IdGen>,
+    rng: Arc<Mutex<Rng>>,
+    /// The global administrator token (configured at deployment).
+    root_token: String,
+}
+
+impl CredentialServer {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let root_token = Self::fresh_token(&mut rng);
+        Self {
+            inner: Arc::new(Mutex::new(Inner::default())),
+            ids: Arc::new(IdGen::new()),
+            rng: Arc::new(Mutex::new(rng)),
+            root_token,
+        }
+    }
+
+    fn fresh_token(rng: &mut Rng) -> String {
+        format!("tok-{:016x}{:016x}", rng.next_u64(), rng.next_u64())
+    }
+
+    /// The deployment's global-admin token.
+    pub fn root_token(&self) -> &str {
+        &self.root_token
+    }
+
+    /// Create a project (global admin only).  Returns the project id and
+    /// the token of its administrator user.
+    pub fn create_project(
+        &self,
+        root_token: &str,
+        name: &str,
+        admin_user: &str,
+    ) -> Result<(ProjectId, String)> {
+        if root_token != self.root_token {
+            return Err(AcaiError::Forbidden(
+                "only the global administrator can create projects".into(),
+            ));
+        }
+        if name.is_empty() {
+            return Err(AcaiError::invalid("project name must be non-empty"));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.project_names.contains_key(name) {
+            return Err(AcaiError::conflict(format!("project {name:?} exists")));
+        }
+        let pid = ProjectId(self.ids.next());
+        inner.projects.insert(
+            pid,
+            ProjectRecord {
+                id: pid,
+                name: name.to_string(),
+            },
+        );
+        inner.project_names.insert(name.to_string(), pid);
+        drop(inner);
+        let token = self.insert_user(pid, admin_user, true)?;
+        Ok((pid, token))
+    }
+
+    fn insert_user(&self, project: ProjectId, name: &str, admin: bool) -> Result<String> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner
+            .users
+            .values()
+            .any(|u| u.project == project && u.name == name)
+        {
+            return Err(AcaiError::conflict(format!(
+                "user {name:?} exists in {project}"
+            )));
+        }
+        let uid = UserId(self.ids.next());
+        let token = Self::fresh_token(&mut self.rng.lock().unwrap());
+        inner.users.insert(
+            uid,
+            UserRecord {
+                id: uid,
+                project,
+                name: name.to_string(),
+                token: token.clone(),
+                is_project_admin: admin,
+            },
+        );
+        inner.tokens.insert(token.clone(), uid);
+        Ok(token)
+    }
+
+    /// Create a user under the caller's project (project admin only).
+    pub fn create_user(&self, admin_token: &str, name: &str) -> Result<String> {
+        let caller = self.authenticate(admin_token)?;
+        if !caller.is_project_admin {
+            return Err(AcaiError::Forbidden(
+                "only the project administrator can create users".into(),
+            ));
+        }
+        self.insert_user(caller.project, name, false)
+    }
+
+    /// Authenticate a token into an [`Identity`] — the redirect step the
+    /// paper's Figure 7 shows in front of every internal service.
+    pub fn authenticate(&self, token: &str) -> Result<Identity> {
+        let inner = self.inner.lock().unwrap();
+        let uid = inner
+            .tokens
+            .get(token)
+            .ok_or_else(|| AcaiError::Unauthorized("unknown token".into()))?;
+        let user = &inner.users[uid];
+        Ok(Identity {
+            project: user.project,
+            user: user.id,
+            is_project_admin: user.is_project_admin,
+        })
+    }
+
+    /// Rotate a user's token (invalidate the old one).
+    pub fn rotate_token(&self, token: &str) -> Result<String> {
+        let id = self.authenticate(token)?;
+        let mut inner = self.inner.lock().unwrap();
+        let fresh = Self::fresh_token(&mut self.rng.lock().unwrap());
+        inner.tokens.remove(token);
+        inner.tokens.insert(fresh.clone(), id.user);
+        inner.users.get_mut(&id.user).unwrap().token = fresh.clone();
+        Ok(fresh)
+    }
+
+    /// Resolve a project by name.
+    pub fn project_by_name(&self, name: &str) -> Option<ProjectId> {
+        self.inner.lock().unwrap().project_names.get(name).copied()
+    }
+
+    /// Display name of a user (dashboard/metadata "creator" field).
+    pub fn user_name(&self, user: UserId) -> Option<String> {
+        self.inner
+            .lock()
+            .unwrap()
+            .users
+            .get(&user)
+            .map(|u| u.name.clone())
+    }
+
+    /// Project display name.
+    pub fn project_name(&self, project: ProjectId) -> Option<String> {
+        self.inner
+            .lock()
+            .unwrap()
+            .projects
+            .get(&project)
+            .map(|p| p.name.clone())
+    }
+
+    /// Users of a project (admin-visible listing).
+    pub fn list_users(&self, token: &str) -> Result<Vec<(UserId, String)>> {
+        let id = self.authenticate(token)?;
+        let inner = self.inner.lock().unwrap();
+        let mut users: Vec<_> = inner
+            .users
+            .values()
+            .filter(|u| u.project == id.project)
+            .map(|u| (u.id, u.name.clone()))
+            .collect();
+        users.sort_by_key(|(id, _)| *id);
+        Ok(users)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn server() -> CredentialServer {
+        CredentialServer::new(1)
+    }
+
+    #[test]
+    fn project_creation_requires_root() {
+        let s = server();
+        assert!(s.create_project("bad-token", "nlp", "alice").is_err());
+        let root = s.root_token().to_string();
+        let (pid, admin_tok) = s.create_project(&root, "nlp", "alice").unwrap();
+        let id = s.authenticate(&admin_tok).unwrap();
+        assert_eq!(id.project, pid);
+        assert!(id.is_project_admin);
+    }
+
+    #[test]
+    fn user_creation_requires_project_admin() {
+        let s = server();
+        let root = s.root_token().to_string();
+        let (_pid, admin) = s.create_project(&root, "nlp", "alice").unwrap();
+        let bob = s.create_user(&admin, "bob").unwrap();
+        // bob is not an admin
+        let err = s.create_user(&bob, "carol").unwrap_err();
+        assert_eq!(err.status(), 403);
+    }
+
+    #[test]
+    fn members_share_a_project() {
+        let s = server();
+        let root = s.root_token().to_string();
+        let (pid, admin) = s.create_project(&root, "nlp", "alice").unwrap();
+        let bob = s.create_user(&admin, "bob").unwrap();
+        assert_eq!(s.authenticate(&bob).unwrap().project, pid);
+        assert_eq!(s.list_users(&admin).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let s = server();
+        let root = s.root_token().to_string();
+        let (_p, admin) = s.create_project(&root, "nlp", "alice").unwrap();
+        assert!(s.create_project(&root, "nlp", "x").is_err());
+        s.create_user(&admin, "bob").unwrap();
+        assert!(s.create_user(&admin, "bob").is_err());
+    }
+
+    #[test]
+    fn bad_tokens_are_unauthorized() {
+        let s = server();
+        assert_eq!(s.authenticate("nope").unwrap_err().status(), 401);
+    }
+
+    #[test]
+    fn token_rotation_invalidates_old() {
+        let s = server();
+        let root = s.root_token().to_string();
+        let (_p, admin) = s.create_project(&root, "nlp", "alice").unwrap();
+        let fresh = s.rotate_token(&admin).unwrap();
+        assert!(s.authenticate(&admin).is_err());
+        assert!(s.authenticate(&fresh).is_ok());
+    }
+
+    #[test]
+    fn projects_are_isolated_namespaces() {
+        let s = server();
+        let root = s.root_token().to_string();
+        let (p1, a1) = s.create_project(&root, "nlp", "alice").unwrap();
+        let (p2, a2) = s.create_project(&root, "vision", "alice").unwrap();
+        assert_ne!(p1, p2);
+        // same user name in two projects is fine
+        assert_eq!(s.authenticate(&a1).unwrap().project, p1);
+        assert_eq!(s.authenticate(&a2).unwrap().project, p2);
+    }
+
+    #[test]
+    fn tokens_are_unique() {
+        let s = server();
+        let root = s.root_token().to_string();
+        let (_p, admin) = s.create_project(&root, "nlp", "alice").unwrap();
+        let mut tokens = std::collections::HashSet::new();
+        tokens.insert(admin.clone());
+        for i in 0..50 {
+            let t = s.create_user(&admin, &format!("u{i}")).unwrap();
+            assert!(tokens.insert(t), "duplicate token");
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! Fine-grained access control (paper §7.1.1 — future work, implemented).
+//!
+//! "For every file and file set, ACAI records its read/write permissions
+//! for different users and user groups, and does permission checks on
+//! every request."
+//!
+//! POSIX-flavored: each guarded resource carries an owner and (owner,
+//! project, other)×(read, write) permission bits.  Resources without an
+//! entry stay project-shared (the paper's default), so the feature is
+//! opt-in per artifact and fully backward compatible.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{AcaiError, Result};
+use crate::ids::{ProjectId, UserId};
+
+/// Access classes, POSIX-style.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mode {
+    pub owner_read: bool,
+    pub owner_write: bool,
+    pub project_read: bool,
+    pub project_write: bool,
+}
+
+impl Mode {
+    /// rw-rw-: the open default the platform behaves like without ACLs.
+    pub const SHARED: Mode = Mode {
+        owner_read: true,
+        owner_write: true,
+        project_read: true,
+        project_write: true,
+    };
+    /// rw-r--: project members may read, only the owner writes.
+    pub const PROTECTED: Mode = Mode {
+        owner_read: true,
+        owner_write: true,
+        project_read: true,
+        project_write: false,
+    };
+    /// rw----: owner only.
+    pub const PRIVATE: Mode = Mode {
+        owner_read: true,
+        owner_write: true,
+        project_read: false,
+        project_write: false,
+    };
+}
+
+/// What kind of access a request needs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Access {
+    Read,
+    Write,
+}
+
+#[derive(Debug, Clone)]
+struct AclEntry {
+    owner: UserId,
+    mode: Mode,
+}
+
+/// The ACL store.  Keys are free-form resource ids — the callers use
+/// `"file:<path>"` and `"fileset:<name>"`.
+#[derive(Clone, Default)]
+pub struct AclStore {
+    entries: Arc<Mutex<HashMap<(u64, String), AclEntry>>>,
+}
+
+impl AclStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set (or replace) the ACL on a resource.  Only the current owner —
+    /// or the first claimant — may change it.
+    pub fn protect(
+        &self,
+        project: ProjectId,
+        resource: &str,
+        caller: UserId,
+        mode: Mode,
+    ) -> Result<()> {
+        let mut entries = self.entries.lock().unwrap();
+        let key = (project.raw(), resource.to_string());
+        if let Some(existing) = entries.get(&key) {
+            if existing.owner != caller {
+                return Err(AcaiError::Forbidden(format!(
+                    "{resource}: only the owner may change permissions"
+                )));
+            }
+        }
+        entries.insert(key, AclEntry { owner: caller, mode });
+        Ok(())
+    }
+
+    /// Check an access; unguarded resources are project-shared.
+    pub fn check(
+        &self,
+        project: ProjectId,
+        resource: &str,
+        caller: UserId,
+        access: Access,
+    ) -> Result<()> {
+        let entries = self.entries.lock().unwrap();
+        let Some(entry) = entries.get(&(project.raw(), resource.to_string())) else {
+            return Ok(()); // default: shared within the project
+        };
+        let is_owner = entry.owner == caller;
+        let allowed = match (is_owner, access) {
+            (true, Access::Read) => entry.mode.owner_read,
+            (true, Access::Write) => entry.mode.owner_write,
+            (false, Access::Read) => entry.mode.project_read,
+            (false, Access::Write) => entry.mode.project_write,
+        };
+        if allowed {
+            Ok(())
+        } else {
+            Err(AcaiError::Forbidden(format!(
+                "{resource}: {access:?} denied for {caller}"
+            )))
+        }
+    }
+
+    /// The owner of a guarded resource.
+    pub fn owner(&self, project: ProjectId, resource: &str) -> Option<UserId> {
+        self.entries
+            .lock()
+            .unwrap()
+            .get(&(project.raw(), resource.to_string()))
+            .map(|e| e.owner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: ProjectId = ProjectId(1);
+    const ALICE: UserId = UserId(1);
+    const BOB: UserId = UserId(2);
+
+    #[test]
+    fn unguarded_resources_are_shared() {
+        let acl = AclStore::new();
+        acl.check(P, "file:/open", BOB, Access::Write).unwrap();
+    }
+
+    #[test]
+    fn protected_allows_project_reads_only() {
+        let acl = AclStore::new();
+        acl.protect(P, "fileset:model", ALICE, Mode::PROTECTED).unwrap();
+        acl.check(P, "fileset:model", BOB, Access::Read).unwrap();
+        assert_eq!(
+            acl.check(P, "fileset:model", BOB, Access::Write).unwrap_err().status(),
+            403
+        );
+        acl.check(P, "fileset:model", ALICE, Access::Write).unwrap();
+    }
+
+    #[test]
+    fn private_hides_from_project_members() {
+        let acl = AclStore::new();
+        acl.protect(P, "file:/secret", ALICE, Mode::PRIVATE).unwrap();
+        assert!(acl.check(P, "file:/secret", BOB, Access::Read).is_err());
+        acl.check(P, "file:/secret", ALICE, Access::Read).unwrap();
+    }
+
+    #[test]
+    fn only_owner_changes_permissions() {
+        let acl = AclStore::new();
+        acl.protect(P, "file:/f", ALICE, Mode::PRIVATE).unwrap();
+        assert_eq!(
+            acl.protect(P, "file:/f", BOB, Mode::SHARED).unwrap_err().status(),
+            403
+        );
+        // owner can relax
+        acl.protect(P, "file:/f", ALICE, Mode::SHARED).unwrap();
+        acl.check(P, "file:/f", BOB, Access::Write).unwrap();
+    }
+
+    #[test]
+    fn acls_are_project_scoped() {
+        let acl = AclStore::new();
+        acl.protect(P, "file:/f", ALICE, Mode::PRIVATE).unwrap();
+        // same resource name in another project is unguarded
+        acl.check(ProjectId(2), "file:/f", BOB, Access::Write).unwrap();
+    }
+}

@@ -1,0 +1,182 @@
+//! Inter-job data cache (paper §7.1.2 — future work, implemented).
+//!
+//! "It might be beneficial to add a cloud file system acting as a cache
+//! ... it should be fine to share cache between consecutive jobs where
+//! the successive job takes in the entire output file set of the
+//! precedent job as the input file set."
+//!
+//! The cache keys materialized file-set versions.  Because file-set
+//! versions are immutable (the (input, job, output) triplet is immutable
+//! too), a version's bytes never change — so cache entries never need
+//! invalidation, only LRU eviction under the byte budget.  The engine
+//! consults the cache during the agent's download phase; a pipeline's
+//! stage N+1 hits the bytes stage N just uploaded.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::ids::{ProjectId, Version};
+
+/// Key: one immutable file-set version of a project.
+type Key = (u64, String, Version);
+
+struct Entry {
+    files: Arc<Vec<(String, Arc<Vec<u8>>)>>,
+    bytes: usize,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    entries: HashMap<Key, Entry>,
+    bytes: usize,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+/// The cache handle.
+#[derive(Clone)]
+pub struct FileSetCache {
+    inner: Arc<Mutex<Inner>>,
+    /// Byte budget; LRU eviction beyond it.
+    pub capacity: usize,
+}
+
+impl FileSetCache {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Arc::new(Mutex::new(Inner::default())),
+            capacity,
+        }
+    }
+
+    /// Look up a materialized file-set version.
+    pub fn get(
+        &self,
+        project: ProjectId,
+        name: &str,
+        version: Version,
+    ) -> Option<Arc<Vec<(String, Arc<Vec<u8>>)>>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.entries.get_mut(&(project.raw(), name.to_string(), version)) {
+            Some(entry) => {
+                entry.last_used = tick;
+                let files = entry.files.clone();
+                inner.hits += 1;
+                Some(files)
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a materialized file-set version, evicting LRU entries to
+    /// stay under the capacity.  Oversized sets are not cached.
+    pub fn put(
+        &self,
+        project: ProjectId,
+        name: &str,
+        version: Version,
+        files: Arc<Vec<(String, Arc<Vec<u8>>)>>,
+    ) {
+        let bytes: usize = files.iter().map(|(_, b)| b.len()).sum();
+        if bytes > self.capacity {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let key = (project.raw(), name.to_string(), version);
+        if let Some(old) = inner.entries.remove(&key) {
+            inner.bytes -= old.bytes;
+        }
+        while inner.bytes + bytes > self.capacity {
+            // evict the least recently used entry
+            let Some(victim) = inner
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            else {
+                break;
+            };
+            let e = inner.entries.remove(&victim).unwrap();
+            inner.bytes -= e.bytes;
+        }
+        inner.bytes += bytes;
+        inner.entries.insert(
+            key,
+            Entry {
+                files,
+                bytes,
+                last_used: tick,
+            },
+        );
+    }
+
+    /// (hits, misses, resident bytes).
+    pub fn stats(&self) -> (u64, u64, usize) {
+        let inner = self.inner.lock().unwrap();
+        (inner.hits, inner.misses, inner.bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: ProjectId = ProjectId(1);
+
+    fn files(n: usize, size: usize) -> Arc<Vec<(String, Arc<Vec<u8>>)>> {
+        Arc::new(
+            (0..n)
+                .map(|i| (format!("/f{i}"), Arc::new(vec![0u8; size])))
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn hit_after_put() {
+        let cache = FileSetCache::new(1 << 20);
+        assert!(cache.get(P, "s", 1).is_none());
+        cache.put(P, "s", 1, files(2, 100));
+        let got = cache.get(P, "s", 1).unwrap();
+        assert_eq!(got.len(), 2);
+        let (hits, misses, bytes) = cache.stats();
+        assert_eq!((hits, misses, bytes), (1, 1, 200));
+    }
+
+    #[test]
+    fn versions_are_distinct_keys() {
+        let cache = FileSetCache::new(1 << 20);
+        cache.put(P, "s", 1, files(1, 10));
+        assert!(cache.get(P, "s", 2).is_none());
+        assert!(cache.get(ProjectId(2), "s", 1).is_none());
+    }
+
+    #[test]
+    fn lru_eviction_under_budget() {
+        let cache = FileSetCache::new(250);
+        cache.put(P, "a", 1, files(1, 100));
+        cache.put(P, "b", 1, files(1, 100));
+        cache.get(P, "a", 1); // a is now most recently used
+        cache.put(P, "c", 1, files(1, 100)); // evicts b
+        assert!(cache.get(P, "a", 1).is_some());
+        assert!(cache.get(P, "b", 1).is_none());
+        assert!(cache.get(P, "c", 1).is_some());
+        assert!(cache.stats().2 <= 250);
+    }
+
+    #[test]
+    fn oversized_sets_are_not_cached() {
+        let cache = FileSetCache::new(50);
+        cache.put(P, "big", 1, files(1, 100));
+        assert!(cache.get(P, "big", 1).is_none());
+        assert_eq!(cache.stats().2, 0);
+    }
+}

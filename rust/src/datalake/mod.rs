@@ -1,0 +1,100 @@
+//! The ACAI data lake (paper §3.2, §4.4, §4.5).
+//!
+//! Four cooperating services over the substrates:
+//!
+//! - [`storage`] — versioned file storage on the object store, with
+//!   transactional batch **upload sessions** (§4.4.3) and presigned-URL
+//!   data transfer (§4.4.2);
+//! - [`fileset`] — file sets: versioned lists of (path, version)
+//!   references with the `@FileSet:version` spec language (§3.2.2);
+//! - [`metadata`] — key-value metadata with indexed retrieval (§3.2.3);
+//! - [`provenance`] — the per-project provenance DAG (§3.2.4).
+
+pub mod acl;
+pub mod cache;
+pub mod fileset;
+pub mod gc;
+pub mod metadata;
+pub mod provenance;
+pub mod session;
+pub mod storage;
+
+pub use acl::{Access, AclStore, Mode};
+pub use cache::FileSetCache;
+pub use fileset::{FileSetStore, ResolvedSet};
+pub use metadata::{ArtifactKind, MetadataStore};
+pub use provenance::ProvenanceStore;
+pub use session::{SessionState, UploadSession};
+pub use storage::Storage;
+
+use crate::bus::Bus;
+use crate::ids::IdGen;
+use crate::kvstore::KvStore;
+use crate::objectstore::ObjectStore;
+use crate::simclock::SimClock;
+use std::sync::Arc;
+
+/// Default inter-job cache budget (256 MiB of materialized file sets).
+pub const DEFAULT_CACHE_BYTES: usize = 256 << 20;
+
+/// The assembled data lake.
+#[derive(Clone)]
+pub struct DataLake {
+    pub storage: Storage,
+    pub filesets: FileSetStore,
+    pub metadata: MetadataStore,
+    pub provenance: ProvenanceStore,
+    /// Fine-grained ACLs (§7.1.1); opt-in per artifact.
+    pub acl: AclStore,
+    /// Inter-job file-set cache (§7.1.2).
+    pub cache: FileSetCache,
+}
+
+impl DataLake {
+    pub fn new(kv: KvStore, objects: ObjectStore, bus: Bus, clock: SimClock) -> Self {
+        let ids = Arc::new(IdGen::new());
+        let storage = Storage::new(kv.clone(), objects, bus, clock.clone(), ids.clone());
+        let metadata = MetadataStore::new(clock.clone());
+        let provenance = ProvenanceStore::new();
+        let filesets = FileSetStore::new(
+            kv,
+            storage.clone(),
+            metadata.clone(),
+            provenance.clone(),
+            clock,
+            ids,
+        );
+        Self {
+            storage,
+            filesets,
+            metadata,
+            provenance,
+            acl: AclStore::new(),
+            cache: FileSetCache::new(DEFAULT_CACHE_BYTES),
+        }
+    }
+
+    /// Materialize a file-set version through the inter-job cache
+    /// (§7.1.2): consecutive jobs consuming the same immutable version
+    /// skip the object-store round trip entirely.
+    pub fn materialize_cached(
+        &self,
+        project: crate::ids::ProjectId,
+        name: &str,
+        version: Option<crate::ids::Version>,
+    ) -> crate::error::Result<std::sync::Arc<Vec<(String, std::sync::Arc<Vec<u8>>)>>> {
+        let v = match version {
+            Some(v) => v,
+            None => self
+                .filesets
+                .latest_version(project, name)
+                .ok_or_else(|| crate::error::AcaiError::not_found(format!("file set {name}")))?,
+        };
+        if let Some(files) = self.cache.get(project, name, v) {
+            return Ok(files);
+        }
+        let files = std::sync::Arc::new(self.filesets.materialize(project, name, Some(v))?);
+        self.cache.put(project, name, v, files.clone());
+        Ok(files)
+    }
+}

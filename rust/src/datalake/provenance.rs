@@ -1,0 +1,186 @@
+//! Provenance manager (paper §3.2.4, §4.5.2).
+//!
+//! One DAG per project: nodes are file-set versions (`name:version`),
+//! edges are actions — **job executions** (input file set → output file
+//! set) and **file-set creations** (source file sets → derived file set).
+//! Only ids live here; metadata stays in the metadata server, exactly as
+//! the paper splits MongoDB vs Neo4j.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::error::Result;
+use crate::graphstore::{Edge, GraphStore};
+use crate::ids::{JobId, ProjectId, Version};
+
+/// Edge kinds (paper Figure 2).
+pub const KIND_JOB: &str = "job_execution";
+pub const KIND_CREATION: &str = "fileset_creation";
+
+/// Canonical node id for a file-set version.
+pub fn node_id(name: &str, version: Version) -> String {
+    format!("{name}:{version}")
+}
+
+/// The provenance server.
+#[derive(Clone, Default)]
+pub struct ProvenanceStore {
+    graphs: Arc<Mutex<HashMap<ProjectId, GraphStore>>>,
+}
+
+impl ProvenanceStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn graph(&self, project: ProjectId) -> GraphStore {
+        self.graphs
+            .lock()
+            .unwrap()
+            .entry(project)
+            .or_default()
+            .clone()
+    }
+
+    /// Record a file-set creation deriving `target` from `sources`.
+    pub fn record_creation(
+        &self,
+        project: ProjectId,
+        sources: &[(String, Version)],
+        target: (&str, Version),
+        action_id: &str,
+    ) -> Result<()> {
+        let g = self.graph(project);
+        let target_node = node_id(target.0, target.1);
+        g.add_node(&target_node);
+        for (name, version) in sources {
+            g.add_edge(&node_id(name, *version), &target_node, action_id, KIND_CREATION)?;
+        }
+        Ok(())
+    }
+
+    /// Record a job execution: input file set → output file set.
+    pub fn record_job(
+        &self,
+        project: ProjectId,
+        input: (&str, Version),
+        output: (&str, Version),
+        job: JobId,
+    ) -> Result<()> {
+        self.graph(project).add_edge(
+            &node_id(input.0, input.1),
+            &node_id(output.0, output.1),
+            &job.to_string(),
+            KIND_JOB,
+        )
+    }
+
+    /// API 1: the whole project graph.
+    pub fn whole_graph(&self, project: ProjectId) -> (Vec<String>, Vec<Edge>) {
+        self.graph(project).whole_graph()
+    }
+
+    /// API 2: one step forward from a file-set version.
+    pub fn forward(&self, project: ProjectId, name: &str, version: Version) -> Vec<Edge> {
+        self.graph(project).forward(&node_id(name, version))
+    }
+
+    /// API 3: one step backward.
+    pub fn backward(&self, project: ProjectId, name: &str, version: Version) -> Vec<Edge> {
+        self.graph(project).backward(&node_id(name, version))
+    }
+
+    /// Interactive tracing: full upstream lineage (reproducibility set).
+    pub fn ancestors(&self, project: ProjectId, name: &str, version: Version) -> Vec<String> {
+        self.graph(project).ancestors(&node_id(name, version))
+    }
+
+    /// Interactive tracing: everything derived from this file set.
+    pub fn descendants(&self, project: ProjectId, name: &str, version: Version) -> Vec<String> {
+        self.graph(project).descendants(&node_id(name, version))
+    }
+
+    /// Workflow-replay order (topological).
+    pub fn replay_order(&self, project: ProjectId) -> Vec<String> {
+        self.graph(project).topo_order()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: ProjectId = ProjectId(1);
+
+    #[test]
+    fn job_execution_links_input_to_output() {
+        let p = ProvenanceStore::new();
+        p.record_job(P, ("raw", 1), ("features", 1), JobId(10)).unwrap();
+        let fwd = p.forward(P, "raw", 1);
+        assert_eq!(fwd.len(), 1);
+        assert_eq!(fwd[0].kind, KIND_JOB);
+        assert_eq!(fwd[0].action, "job-10");
+        assert_eq!(fwd[0].to, "features:1");
+    }
+
+    #[test]
+    fn creation_links_all_sources() {
+        // MergedQA from HotpotQA + ColdpotQA (paper's merging example)
+        let p = ProvenanceStore::new();
+        p.record_creation(
+            P,
+            &[("HotpotQA".into(), 1), ("ColdpotQA".into(), 2)],
+            ("MergedQA", 1),
+            "create-1",
+        )
+        .unwrap();
+        let back = p.backward(P, "MergedQA", 1);
+        assert_eq!(back.len(), 2);
+        assert!(back.iter().all(|e| e.kind == KIND_CREATION));
+    }
+
+    #[test]
+    fn update_links_new_version_to_old() {
+        // Updating HotpotQA: new version depends on the old version
+        let p = ProvenanceStore::new();
+        p.record_creation(P, &[("HotpotQA".into(), 1)], ("HotpotQA", 2), "create-2")
+            .unwrap();
+        let back = p.backward(P, "HotpotQA", 2);
+        assert_eq!(back[0].from, "HotpotQA:1");
+    }
+
+    #[test]
+    fn lineage_traces_through_versions_and_jobs() {
+        let p = ProvenanceStore::new();
+        p.record_job(P, ("raw", 1), ("features", 1), JobId(1)).unwrap();
+        p.record_creation(P, &[("features".into(), 1)], ("features", 2), "create-1")
+            .unwrap();
+        p.record_job(P, ("features", 2), ("model", 1), JobId(2)).unwrap();
+        assert_eq!(
+            p.ancestors(P, "model", 1),
+            vec!["features:1", "features:2", "raw:1"]
+        );
+        assert_eq!(
+            p.descendants(P, "raw", 1),
+            vec!["features:1", "features:2", "model:1"]
+        );
+    }
+
+    #[test]
+    fn projects_have_separate_graphs() {
+        let p = ProvenanceStore::new();
+        p.record_job(ProjectId(1), ("a", 1), ("b", 1), JobId(1)).unwrap();
+        assert!(p.whole_graph(ProjectId(2)).0.is_empty());
+    }
+
+    #[test]
+    fn replay_order_is_topological() {
+        let p = ProvenanceStore::new();
+        p.record_job(P, ("a", 1), ("b", 1), JobId(1)).unwrap();
+        p.record_job(P, ("b", 1), ("c", 1), JobId(2)).unwrap();
+        let order = p.replay_order(P);
+        let pos = |n: &str| order.iter().position(|x| x == n).unwrap();
+        assert!(pos("a:1") < pos("b:1"));
+        assert!(pos("b:1") < pos("c:1"));
+    }
+}

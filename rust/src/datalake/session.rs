@@ -1,0 +1,176 @@
+//! Upload sessions: transactional batch uploads (paper §4.4.3).
+//!
+//! Batch uploads in a versioning system must guarantee:
+//!
+//! 1. concurrent uploads never overwrite each other (every upload goes to
+//!    a fresh object key derived from a unique numeric file id);
+//! 2. concurrent uploads of the same path get *sequential* version
+//!    numbers (versions are assigned at commit, under the store lock,
+//!    with sessions committing sequentially);
+//! 3. failed uploads never burn a version number (versions are assigned
+//!    only at commit; aborted sessions delete their uploaded objects).
+//!
+//! Session state is persisted in the kvstore, so a client or server crash
+//! loses nothing: after restart the client may continue the session or
+//! abort it (exercised by the failure-injection tests).
+
+use crate::error::{AcaiError, Result};
+use crate::ids::{SessionId, Version};
+use crate::json::Json;
+
+/// Observable state of an upload session.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SessionState {
+    /// Waiting for object uploads; `uploaded` of `total` done.
+    Pending { uploaded: usize, total: usize },
+    /// All files uploaded and versions assigned.
+    Committed(Vec<(String, Version)>),
+    /// Aborted; uploaded objects deleted.
+    Aborted,
+}
+
+/// In-flight session bookkeeping (persisted as JSON in the kvstore).
+#[derive(Debug, Clone)]
+pub struct UploadSession {
+    pub id: SessionId,
+    pub project: u64,
+    pub state: SessionState,
+    /// (path, object key, uploaded?)
+    pub files: Vec<(String, String, bool)>,
+    pub created: f64,
+}
+
+impl UploadSession {
+    pub fn to_json(&self) -> Json {
+        let state = match &self.state {
+            SessionState::Pending { .. } => "pending",
+            SessionState::Committed(_) => "committed",
+            SessionState::Aborted => "aborted",
+        };
+        let mut files = Vec::new();
+        for (path, key, up) in &self.files {
+            files.push(
+                Json::obj()
+                    .field("path", path.as_str())
+                    .field("key", key.as_str())
+                    .field("uploaded", *up)
+                    .build(),
+            );
+        }
+        let mut b = Json::obj()
+            .field("project", self.project)
+            .field("state", state)
+            .field("created", self.created)
+            .field("files", Json::Arr(files));
+        if let SessionState::Committed(versions) = &self.state {
+            let vs: Vec<Json> = versions
+                .iter()
+                .map(|(p, v)| {
+                    Json::obj()
+                        .field("path", p.as_str())
+                        .field("version", *v as u64)
+                        .build()
+                })
+                .collect();
+            b = b.field("versions", Json::Arr(vs));
+        }
+        b.build()
+    }
+
+    pub fn from_json(id: SessionId, v: &Json) -> Result<UploadSession> {
+        let project = v
+            .get("project")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| AcaiError::Storage("session: missing project".into()))?;
+        let created = v.get("created").and_then(Json::as_f64).unwrap_or(0.0);
+        let mut files = Vec::new();
+        for f in v.get("files").and_then(Json::as_array).unwrap_or(&[]) {
+            files.push((
+                f.get("path").and_then(Json::as_str).unwrap_or("").to_string(),
+                f.get("key").and_then(Json::as_str).unwrap_or("").to_string(),
+                f.get("uploaded").and_then(Json::as_bool).unwrap_or(false),
+            ));
+        }
+        let state = match v.get("state").and_then(Json::as_str) {
+            Some("committed") => {
+                let versions = v
+                    .get("versions")
+                    .and_then(Json::as_array)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|e| {
+                        (
+                            e.get("path").and_then(Json::as_str).unwrap_or("").to_string(),
+                            e.get("version").and_then(Json::as_u64).unwrap_or(0) as Version,
+                        )
+                    })
+                    .collect();
+                SessionState::Committed(versions)
+            }
+            Some("aborted") => SessionState::Aborted,
+            _ => SessionState::Pending {
+                uploaded: files.iter().filter(|(_, _, up)| *up).count(),
+                total: files.len(),
+            },
+        };
+        Ok(UploadSession {
+            id,
+            project,
+            state,
+            files,
+            created,
+        })
+    }
+
+    /// All files uploaded?
+    pub fn complete(&self) -> bool {
+        self.files.iter().all(|(_, _, up)| *up)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> UploadSession {
+        UploadSession {
+            id: SessionId(3),
+            project: 1,
+            state: SessionState::Pending {
+                uploaded: 1,
+                total: 2,
+            },
+            files: vec![
+                ("/a".into(), "obj-10".into(), true),
+                ("/b".into(), "obj-11".into(), false),
+            ],
+            created: 5.0,
+        }
+    }
+
+    #[test]
+    fn json_round_trip_pending() {
+        let s = sample();
+        let back = UploadSession::from_json(s.id, &s.to_json()).unwrap();
+        assert_eq!(back.state, s.state);
+        assert_eq!(back.files, s.files);
+        assert_eq!(back.project, 1);
+    }
+
+    #[test]
+    fn json_round_trip_committed() {
+        let mut s = sample();
+        s.files[1].2 = true;
+        s.state = SessionState::Committed(vec![("/a".into(), 1), ("/b".into(), 3)]);
+        let back = UploadSession::from_json(s.id, &s.to_json()).unwrap();
+        assert_eq!(back.state, s.state);
+    }
+
+    #[test]
+    fn complete_requires_all_uploads() {
+        let mut s = sample();
+        assert!(!s.complete());
+        s.files[1].2 = true;
+        assert!(s.complete());
+    }
+}

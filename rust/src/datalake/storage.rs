@@ -1,0 +1,589 @@
+//! Versioned file storage (paper §3.2.1, §4.4).
+//!
+//! Files live in the object store (one object per *file version*, keyed
+//! by a unique numeric file id); the hierarchy and version tables live in
+//! the kvstore (the MySQL analogue).  Versioning is implemented **on top
+//! of** the object store rather than using a native versioning feature,
+//! exactly as the paper does to avoid vendor lock-in.
+//!
+//! Data transfer follows the paper's §4.4.2 protocol: clients get
+//! presigned URLs from this storage server and exchange bytes directly
+//! with the object store; the store notifies the server of completed
+//! uploads over the bus (SNS), which drives upload-session commits.
+
+use std::sync::{Arc, Mutex};
+
+use crate::bus::Bus;
+use crate::error::{AcaiError, Result};
+use crate::ids::{IdGen, ProjectId, SessionId, Version};
+use crate::json::Json;
+use crate::kvstore::KvStore;
+use crate::objectstore::{ObjectStore, Presigned, TOPIC_OBJECT_EVENTS};
+use crate::simclock::SimClock;
+
+use super::session::{SessionState, UploadSession};
+
+const T_FILES: &str = "files"; // "<proj>|<path>|<ver:08>" -> {file_id,size,created}
+const T_LATEST: &str = "latest"; // "<proj>|<path>" -> {version}
+const T_SESSIONS: &str = "sessions"; // "<sess id>" -> session json
+
+fn file_key(project: ProjectId, path: &str, version: Version) -> String {
+    format!("{}|{}|{:08}", project.raw(), path, version)
+}
+
+fn latest_key(project: ProjectId, path: &str) -> String {
+    format!("{}|{}", project.raw(), path)
+}
+
+/// The storage server.
+#[derive(Clone)]
+pub struct Storage {
+    kv: KvStore,
+    objects: ObjectStore,
+    clock: SimClock,
+    ids: Arc<IdGen>,
+    /// object key -> session, for SNS-driven commit.
+    pending_keys: Arc<Mutex<std::collections::HashMap<String, SessionId>>>,
+}
+
+impl Storage {
+    pub fn new(
+        kv: KvStore,
+        objects: ObjectStore,
+        bus: Bus,
+        clock: SimClock,
+        ids: Arc<IdGen>,
+    ) -> Self {
+        let storage = Self {
+            kv,
+            objects,
+            clock,
+            ids,
+            pending_keys: Arc::new(Mutex::new(Default::default())),
+        };
+        // SNS subscription: object uploads mark session files complete.
+        let weak = storage.clone();
+        bus.subscribe_fn(TOPIC_OBJECT_EVENTS, move |event| {
+            if event.payload.get("event").and_then(Json::as_str) == Some("put") {
+                if let Some(key) = event.payload.get("key").and_then(Json::as_str) {
+                    let _ = weak.on_object_uploaded(key);
+                }
+            }
+        });
+        storage
+    }
+
+    // ------------------------------------------------------------------
+    // Upload sessions (§4.4.3)
+    // ------------------------------------------------------------------
+
+    /// Start an upload session for a batch of paths.  Returns presigned
+    /// PUT grants, one per path, against fresh object keys.
+    pub fn start_session(
+        &self,
+        project: ProjectId,
+        paths: &[&str],
+    ) -> Result<(SessionId, Vec<(String, Presigned)>)> {
+        if paths.is_empty() {
+            return Err(AcaiError::invalid("empty upload session"));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for p in paths {
+            validate_path(p)?;
+            if !seen.insert(*p) {
+                return Err(AcaiError::invalid(format!("duplicate path {p} in session")));
+            }
+        }
+        let id = SessionId(self.ids.next());
+        let mut files = Vec::new();
+        let mut grants = Vec::new();
+        {
+            let mut pending = self.pending_keys.lock().unwrap();
+            for path in paths {
+                // Unique numeric file id doubles as the object key (§4.4.3
+                // guarantee 1: uploads can never overwrite each other).
+                let object_key = format!("obj-{}", self.ids.next());
+                pending.insert(object_key.clone(), id);
+                files.push((path.to_string(), object_key.clone(), false));
+                grants.push((path.to_string(), self.objects.presign_put(&object_key)));
+            }
+        }
+        let session = UploadSession {
+            id,
+            project: project.raw(),
+            state: SessionState::Pending {
+                uploaded: 0,
+                total: files.len(),
+            },
+            files,
+            created: self.clock.now(),
+        };
+        self.kv
+            .put(T_SESSIONS, &id.to_string(), session.to_json())?;
+        Ok((id, grants))
+    }
+
+    /// SNS handler: an object finished uploading.
+    fn on_object_uploaded(&self, object_key: &str) -> Result<()> {
+        let session_id = {
+            let mut pending = self.pending_keys.lock().unwrap();
+            match pending.remove(object_key) {
+                Some(s) => s,
+                None => return Ok(()), // unrelated object
+            }
+        };
+        let mut ready = false;
+        self.kv.transact(|txn| {
+            let raw = txn
+                .get(T_SESSIONS, &session_id.to_string())
+                .ok_or_else(|| AcaiError::not_found(format!("session {session_id}")))?;
+            let mut session = UploadSession::from_json(session_id, &raw)?;
+            for f in session.files.iter_mut() {
+                if f.1 == object_key {
+                    f.2 = true;
+                }
+            }
+            session.state = SessionState::Pending {
+                uploaded: session.files.iter().filter(|f| f.2).count(),
+                total: session.files.len(),
+            };
+            ready = session.complete();
+            txn.put(T_SESSIONS, &session_id.to_string(), session.to_json())
+        })?;
+        if ready {
+            self.commit_session(session_id)?;
+        }
+        Ok(())
+    }
+
+    /// Commit: assign sequential version numbers under the store lock
+    /// (§4.4.3 guarantees 2 and 3).  Idempotent.
+    fn commit_session(&self, id: SessionId) -> Result<()> {
+        self.kv.transact(|txn| {
+            let raw = txn
+                .get(T_SESSIONS, &id.to_string())
+                .ok_or_else(|| AcaiError::not_found(format!("session {id}")))?;
+            let mut session = UploadSession::from_json(id, &raw)?;
+            if matches!(session.state, SessionState::Committed(_)) {
+                return Ok(());
+            }
+            if !session.complete() {
+                return Err(AcaiError::conflict("session not fully uploaded"));
+            }
+            let project = ProjectId(session.project);
+            let mut versions = Vec::new();
+            for (path, object_key, _) in &session.files {
+                let lk = latest_key(project, path);
+                let next: Version = txn
+                    .get(T_LATEST, &lk)
+                    .and_then(|v| v.get("version").and_then(Json::as_u64))
+                    .map(|v| v as Version + 1)
+                    .unwrap_or(1);
+                let size = self.objects.get(object_key).map(|b| b.len()).unwrap_or(0);
+                txn.put(
+                    T_FILES,
+                    &file_key(project, path, next),
+                    Json::obj()
+                        .field("object", object_key.as_str())
+                        .field("size", size)
+                        .field("created", self.clock.now())
+                        .build(),
+                )?;
+                txn.put(
+                    T_LATEST,
+                    &lk,
+                    Json::obj().field("version", next as u64).build(),
+                )?;
+                versions.push((path.clone(), next));
+            }
+            session.state = SessionState::Committed(versions);
+            txn.put(T_SESSIONS, &id.to_string(), session.to_json())
+        })
+    }
+
+    /// Client-side polling (§4.4.3: "it keeps polling the server until
+    /// the server confirms that the upload session is committed").
+    pub fn poll_session(&self, id: SessionId) -> Result<SessionState> {
+        let raw = self
+            .kv
+            .get(T_SESSIONS, &id.to_string())
+            .ok_or_else(|| AcaiError::not_found(format!("session {id}")))?;
+        Ok(UploadSession::from_json(id, &raw)?.state)
+    }
+
+    /// Abort: delete uploaded objects and mark the session aborted; no
+    /// version numbers were burned.
+    pub fn abort_session(&self, id: SessionId) -> Result<()> {
+        self.kv.transact(|txn| {
+            let raw = txn
+                .get(T_SESSIONS, &id.to_string())
+                .ok_or_else(|| AcaiError::not_found(format!("session {id}")))?;
+            let mut session = UploadSession::from_json(id, &raw)?;
+            if matches!(session.state, SessionState::Committed(_)) {
+                return Err(AcaiError::conflict("cannot abort a committed session"));
+            }
+            for (_, object_key, uploaded) in &session.files {
+                if *uploaded {
+                    self.objects.delete(object_key);
+                }
+                self.pending_keys.lock().unwrap().remove(object_key);
+            }
+            session.state = SessionState::Aborted;
+            txn.put(T_SESSIONS, &id.to_string(), session.to_json())
+        })
+    }
+
+    /// Re-issue presigned grants for the not-yet-uploaded files of a
+    /// pending session (crash recovery: "the client is free to either
+    /// continue the session or abort it").
+    pub fn resume_session(&self, id: SessionId) -> Result<Vec<(String, Presigned)>> {
+        let raw = self
+            .kv
+            .get(T_SESSIONS, &id.to_string())
+            .ok_or_else(|| AcaiError::not_found(format!("session {id}")))?;
+        let session = UploadSession::from_json(id, &raw)?;
+        if !matches!(session.state, SessionState::Pending { .. }) {
+            return Err(AcaiError::conflict("session is not pending"));
+        }
+        let mut grants = Vec::new();
+        let mut pending = self.pending_keys.lock().unwrap();
+        for (path, object_key, uploaded) in &session.files {
+            if !uploaded {
+                pending.insert(object_key.clone(), id);
+                grants.push((path.clone(), self.objects.presign_put(object_key)));
+            }
+        }
+        Ok(grants)
+    }
+
+    // ------------------------------------------------------------------
+    // Convenience client flows
+    // ------------------------------------------------------------------
+
+    /// Full client upload flow: session + presigned puts + poll-to-commit.
+    pub fn upload(
+        &self,
+        project: ProjectId,
+        files: &[(&str, &[u8])],
+    ) -> Result<Vec<(String, Version)>> {
+        let paths: Vec<&str> = files.iter().map(|(p, _)| *p).collect();
+        let (id, grants) = self.start_session(project, &paths)?;
+        for ((_, grant), (_, bytes)) in grants.iter().zip(files) {
+            self.objects.put_presigned(&grant.token, bytes.to_vec())?;
+        }
+        // With synchronous SNS delivery the session commits during the
+        // last put; poll once to fetch the assigned versions.
+        match self.poll_session(id)? {
+            SessionState::Committed(versions) => Ok(versions),
+            state => Err(AcaiError::Storage(format!(
+                "session did not commit: {state:?}"
+            ))),
+        }
+    }
+
+    /// Resolve the version to use: explicit, or the latest.
+    pub fn resolve_version(
+        &self,
+        project: ProjectId,
+        path: &str,
+        version: Option<Version>,
+    ) -> Result<Version> {
+        match version {
+            Some(v) => {
+                if self.kv.get(T_FILES, &file_key(project, path, v)).is_none() {
+                    return Err(AcaiError::not_found(format!("{path}#{v}")));
+                }
+                Ok(v)
+            }
+            None => self
+                .kv
+                .get(T_LATEST, &latest_key(project, path))
+                .and_then(|v| v.get("version").and_then(Json::as_u64))
+                .map(|v| v as Version)
+                .ok_or_else(|| AcaiError::not_found(path.to_string())),
+        }
+    }
+
+    /// Presigned download flow (client side).
+    pub fn download(
+        &self,
+        project: ProjectId,
+        path: &str,
+        version: Option<Version>,
+    ) -> Result<Arc<Vec<u8>>> {
+        let v = self.resolve_version(project, path, version)?;
+        let row = self
+            .kv
+            .get(T_FILES, &file_key(project, path, v))
+            .ok_or_else(|| AcaiError::not_found(format!("{path}#{v}")))?;
+        let object = row
+            .get("object")
+            .and_then(Json::as_str)
+            .ok_or_else(|| AcaiError::Storage("file row missing object".into()))?;
+        let grant = self.objects.presign_get(object)?;
+        self.objects.get_presigned(&grant.token)
+    }
+
+    /// Trusted read (in-platform agents).
+    pub fn read(
+        &self,
+        project: ProjectId,
+        path: &str,
+        version: Option<Version>,
+    ) -> Result<Arc<Vec<u8>>> {
+        let v = self.resolve_version(project, path, version)?;
+        let row = self
+            .kv
+            .get(T_FILES, &file_key(project, path, v))
+            .ok_or_else(|| AcaiError::not_found(format!("{path}#{v}")))?;
+        let object = row.get("object").and_then(Json::as_str).unwrap_or_default();
+        self.objects.get(object)
+    }
+
+    /// List paths under a prefix with their latest versions.
+    pub fn list(&self, project: ProjectId, prefix: &str) -> Vec<(String, Version)> {
+        let kp = format!("{}|{}", project.raw(), prefix);
+        self.kv
+            .scan_prefix(T_LATEST, &kp)
+            .into_iter()
+            .filter_map(|(k, v)| {
+                let path = k.split_once('|')?.1.to_string();
+                let ver = v.get("version")?.as_u64()? as Version;
+                Some((path, ver))
+            })
+            .collect()
+    }
+
+    /// All versions of a path, ascending.
+    pub fn versions(&self, project: ProjectId, path: &str) -> Vec<Version> {
+        let prefix = format!("{}|{}|", project.raw(), path);
+        self.kv
+            .scan_prefix(T_FILES, &prefix)
+            .into_iter()
+            .filter_map(|(k, _)| k.rsplit('|').next()?.parse::<Version>().ok())
+            .collect()
+    }
+
+    /// Delete one file version (the GC sweep path, §7.1.3): removes the
+    /// object and its row, and repoints `latest` at the highest surviving
+    /// version (or drops it when none survive).  Callers are responsible
+    /// for referential safety — [`crate::datalake::gc`] only deletes
+    /// versions no file set pins.
+    pub fn delete_version(
+        &self,
+        project: ProjectId,
+        path: &str,
+        version: Version,
+    ) -> Result<()> {
+        self.kv.transact(|txn| {
+            let fk = file_key(project, path, version);
+            let row = txn
+                .get(T_FILES, &fk)
+                .ok_or_else(|| AcaiError::not_found(format!("{path}#{version}")))?;
+            if let Some(object) = row.get("object").and_then(Json::as_str) {
+                self.objects.delete(object);
+            }
+            txn.delete(T_FILES, &fk)?;
+            // fix the latest pointer
+            let lk = latest_key(project, path);
+            let latest = txn
+                .get(T_LATEST, &lk)
+                .and_then(|v| v.get("version").and_then(Json::as_u64))
+                .map(|v| v as Version);
+            if latest == Some(version) {
+                let remaining = txn.scan_prefix(T_FILES, &format!("{}|{}|", project.raw(), path));
+                match remaining
+                    .iter()
+                    .filter_map(|(k, _)| k.rsplit('|').next()?.parse::<Version>().ok())
+                    .max()
+                {
+                    Some(prev) => txn.put(
+                        T_LATEST,
+                        &lk,
+                        Json::obj().field("version", prev as u64).build(),
+                    )?,
+                    None => {
+                        txn.delete(T_LATEST, &lk)?;
+                    }
+                }
+            }
+            Ok(())
+        })
+    }
+
+    /// File size in bytes.
+    pub fn size(&self, project: ProjectId, path: &str, version: Version) -> Option<usize> {
+        self.kv
+            .get(T_FILES, &file_key(project, path, version))
+            .and_then(|r| r.get("size").and_then(Json::as_u64))
+            .map(|s| s as usize)
+    }
+}
+
+/// Paths are absolute, normalized, non-empty.
+pub fn validate_path(path: &str) -> Result<()> {
+    if !path.starts_with('/') {
+        return Err(AcaiError::invalid(format!("path {path:?} must be absolute")));
+    }
+    if path.ends_with('/') || path.contains("//") || path.contains('|') || path.contains('@') {
+        return Err(AcaiError::invalid(format!("malformed path {path:?}")));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bus::Bus;
+
+    fn lake() -> (Storage, ObjectStore, SimClock) {
+        let clock = SimClock::new();
+        let bus = Bus::new();
+        let objects = ObjectStore::new(clock.clone(), bus.clone());
+        let storage = Storage::new(
+            KvStore::in_memory(),
+            objects.clone(),
+            bus,
+            clock.clone(),
+            Arc::new(IdGen::new()),
+        );
+        (storage, objects, clock)
+    }
+
+    const P: ProjectId = ProjectId(1);
+
+    #[test]
+    fn upload_assigns_version_1_then_2() {
+        let (s, _o, _c) = lake();
+        let v1 = s.upload(P, &[("/data/train.json", b"v1")]).unwrap();
+        assert_eq!(v1, vec![("/data/train.json".to_string(), 1)]);
+        let v2 = s.upload(P, &[("/data/train.json", b"v2")]).unwrap();
+        assert_eq!(v2[0].1, 2);
+        // both versions retrievable; latest wins by default
+        assert_eq!(&**s.read(P, "/data/train.json", Some(1)).unwrap(), b"v1");
+        assert_eq!(&**s.read(P, "/data/train.json", None).unwrap(), b"v2");
+    }
+
+    #[test]
+    fn versions_are_dense_and_ordered() {
+        let (s, _o, _c) = lake();
+        for i in 0..5 {
+            s.upload(P, &[("/f", format!("{i}").as_bytes())]).unwrap();
+        }
+        assert_eq!(s.versions(P, "/f"), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn failed_upload_burns_no_version() {
+        let (s, o, _c) = lake();
+        s.upload(P, &[("/f", b"one")]).unwrap();
+        // Inject failure: the session stays pending, version 2 unassigned.
+        o.inject_put_failures(1);
+        let (id, grants) = s.start_session(P, &["/f"]).unwrap();
+        assert!(o.put_presigned(&grants[0].1.token, b"x".to_vec()).is_err());
+        assert!(matches!(
+            s.poll_session(id).unwrap(),
+            SessionState::Pending { uploaded: 0, .. }
+        ));
+        s.abort_session(id).unwrap();
+        // next successful upload gets version 2, no gap
+        let v = s.upload(P, &[("/f", b"two")]).unwrap();
+        assert_eq!(v[0].1, 2);
+    }
+
+    #[test]
+    fn session_resume_after_partial_upload() {
+        let (s, o, _c) = lake();
+        let (id, grants) = s.start_session(P, &["/a", "/b"]).unwrap();
+        o.put_presigned(&grants[0].1.token, b"a".to_vec()).unwrap();
+        assert!(matches!(
+            s.poll_session(id).unwrap(),
+            SessionState::Pending { uploaded: 1, total: 2 }
+        ));
+        // crash... resume: only /b needs a new grant
+        let again = s.resume_session(id).unwrap();
+        assert_eq!(again.len(), 1);
+        assert_eq!(again[0].0, "/b");
+        o.put_presigned(&again[0].1.token, b"b".to_vec()).unwrap();
+        assert!(matches!(
+            s.poll_session(id).unwrap(),
+            SessionState::Committed(_)
+        ));
+        assert_eq!(&**s.read(P, "/b", None).unwrap(), b"b");
+    }
+
+    #[test]
+    fn abort_deletes_uploaded_objects() {
+        let (s, o, _c) = lake();
+        let (id, grants) = s.start_session(P, &["/a", "/b"]).unwrap();
+        o.put_presigned(&grants[0].1.token, b"a".to_vec()).unwrap();
+        let before = o.stats().0;
+        s.abort_session(id).unwrap();
+        assert_eq!(o.stats().0, before - 1);
+        assert!(matches!(s.poll_session(id).unwrap(), SessionState::Aborted));
+    }
+
+    #[test]
+    fn cannot_abort_committed_session() {
+        let (s, o, _c) = lake();
+        let (id, grants) = s.start_session(P, &["/a"]).unwrap();
+        o.put_presigned(&grants[0].1.token, b"a".to_vec()).unwrap();
+        assert!(s.abort_session(id).is_err());
+    }
+
+    #[test]
+    fn duplicate_paths_in_one_session_rejected() {
+        let (s, _o, _c) = lake();
+        assert!(s.start_session(P, &["/a", "/a"]).is_err());
+    }
+
+    #[test]
+    fn projects_are_isolated() {
+        let (s, _o, _c) = lake();
+        s.upload(ProjectId(1), &[("/f", b"p1")]).unwrap();
+        s.upload(ProjectId(2), &[("/f", b"p2")]).unwrap();
+        assert_eq!(&**s.read(ProjectId(1), "/f", None).unwrap(), b"p1");
+        assert_eq!(&**s.read(ProjectId(2), "/f", None).unwrap(), b"p2");
+        assert_eq!(s.versions(ProjectId(1), "/f"), vec![1]);
+    }
+
+    #[test]
+    fn list_returns_latest_versions_under_prefix() {
+        let (s, _o, _c) = lake();
+        s.upload(P, &[("/data/a", b"1"), ("/data/b", b"1"), ("/other/c", b"1")])
+            .unwrap();
+        s.upload(P, &[("/data/a", b"2")]).unwrap();
+        let mut listing = s.list(P, "/data/");
+        listing.sort();
+        assert_eq!(
+            listing,
+            vec![("/data/a".to_string(), 2), ("/data/b".to_string(), 1)]
+        );
+    }
+
+    #[test]
+    fn path_validation() {
+        assert!(validate_path("/ok/fine.txt").is_ok());
+        assert!(validate_path("relative").is_err());
+        assert!(validate_path("/trailing/").is_err());
+        assert!(validate_path("/dou//ble").is_err());
+        assert!(validate_path("/pipe|bad").is_err());
+        assert!(validate_path("/at@bad").is_err());
+    }
+
+    #[test]
+    fn presigned_download_flow() {
+        let (s, _o, _c) = lake();
+        s.upload(P, &[("/f", b"payload")]).unwrap();
+        let bytes = s.download(P, "/f", None).unwrap();
+        assert_eq!(&**bytes, b"payload");
+    }
+
+    #[test]
+    fn missing_file_is_not_found() {
+        let (s, _o, _c) = lake();
+        assert_eq!(s.read(P, "/nope", None).unwrap_err().status(), 404);
+        s.upload(P, &[("/f", b"x")]).unwrap();
+        assert_eq!(s.read(P, "/f", Some(9)).unwrap_err().status(), 404);
+    }
+}

@@ -1,0 +1,512 @@
+//! Document store with secondary indexes — the MongoDB analogue (§4.5.1).
+//!
+//! Collections hold JSON documents keyed by an artifact id.  Every
+//! top-level key is indexed automatically on first sight (the paper:
+//! "the metadata server will create an index for a key if it does not
+//! exist ... boosts query performance but increases storage cost"), so
+//! equality, range, and max/min queries run off BTree indexes instead of
+//! collection scans.
+//!
+//! Query surface (what the paper's metadata retrieval needs, §3.2.3):
+//! equality match on key-value pairs, numeric/string range queries (e.g.
+//! `create_time` today), and max/min queries (e.g. highest `precision`),
+//! combinable with AND semantics.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+
+/// Documents are shared refcounted values: queries return `Arc<Json>`
+/// clones (a refcount bump), not deep copies — the metadata range-query
+/// hot path materializes thousands of documents per call.
+pub type Doc = Arc<Json>;
+
+use crate::error::{AcaiError, Result};
+use crate::json::Json;
+
+/// An orderable projection of a JSON scalar, usable as a BTree key.
+#[derive(Debug, Clone, PartialEq)]
+pub enum IndexKey {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+}
+
+impl Eq for IndexKey {}
+
+impl Ord for IndexKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        use IndexKey::*;
+        fn rank(k: &IndexKey) -> u8 {
+            match k {
+                Null => 0,
+                Bool(_) => 1,
+                Num(_) => 2,
+                Str(_) => 3,
+            }
+        }
+        match (self, other) {
+            (Bool(a), Bool(b)) => a.cmp(b),
+            (Num(a), Num(b)) => a.total_cmp(b),
+            (Str(a), Str(b)) => a.cmp(b),
+            (a, b) => rank(a).cmp(&rank(b)),
+        }
+    }
+}
+
+impl PartialOrd for IndexKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl IndexKey {
+    /// Index projection of a JSON value; arrays/objects are not indexable.
+    pub fn of(v: &Json) -> Option<IndexKey> {
+        match v {
+            Json::Null => Some(IndexKey::Null),
+            Json::Bool(b) => Some(IndexKey::Bool(*b)),
+            Json::Num(n) => Some(IndexKey::Num(*n)),
+            Json::Str(s) => Some(IndexKey::Str(s.clone())),
+            _ => None,
+        }
+    }
+}
+
+/// One query clause.
+#[derive(Debug, Clone)]
+pub enum Clause {
+    /// `key == value`.
+    Eq(String, Json),
+    /// `lo <= key <= hi` (either bound optional).
+    Range {
+        key: String,
+        lo: Option<IndexKey>,
+        hi: Option<IndexKey>,
+    },
+    /// Document(s) with the maximum value of `key`.
+    Max(String),
+    /// Document(s) with the minimum value of `key`.
+    Min(String),
+}
+
+impl Clause {
+    /// Convenience: numeric greater-or-equal.
+    pub fn gte(key: impl Into<String>, v: f64) -> Clause {
+        Clause::Range {
+            key: key.into(),
+            lo: Some(IndexKey::Num(v)),
+            hi: None,
+        }
+    }
+    /// Convenience: numeric less-or-equal.
+    pub fn lte(key: impl Into<String>, v: f64) -> Clause {
+        Clause::Range {
+            key: key.into(),
+            lo: None,
+            hi: Some(IndexKey::Num(v)),
+        }
+    }
+    /// Convenience: equality.
+    pub fn eq(key: impl Into<String>, v: impl Into<Json>) -> Clause {
+        Clause::Eq(key.into(), v.into())
+    }
+}
+
+#[derive(Default)]
+struct Collection {
+    docs: HashMap<String, Doc>,
+    /// key -> (index value -> doc ids)
+    indexes: HashMap<String, BTreeMap<IndexKey, HashSet<String>>>,
+}
+
+impl Collection {
+    fn index_doc(&mut self, id: &str, doc: &Json) {
+        if let Some(obj) = doc.as_object() {
+            for (k, v) in obj.iter() {
+                if let Some(ik) = IndexKey::of(v) {
+                    self.indexes
+                        .entry(k.to_string())
+                        .or_default()
+                        .entry(ik)
+                        .or_default()
+                        .insert(id.to_string());
+                }
+            }
+        }
+    }
+
+    fn unindex_doc(&mut self, id: &str, doc: &Json) {
+        if let Some(obj) = doc.as_object() {
+            for (k, v) in obj.iter() {
+                if let Some(ik) = IndexKey::of(v) {
+                    if let Some(idx) = self.indexes.get_mut(k) {
+                        if let Some(set) = idx.get_mut(&ik) {
+                            set.remove(id);
+                            if set.is_empty() {
+                                idx.remove(&ik);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn ids_matching(&self, clause: &Clause) -> Option<HashSet<String>> {
+        match clause {
+            Clause::Eq(key, v) => {
+                let ik = IndexKey::of(v)?;
+                Some(
+                    self.indexes
+                        .get(key)
+                        .and_then(|idx| idx.get(&ik))
+                        .cloned()
+                        .unwrap_or_default(),
+                )
+            }
+            Clause::Range { key, lo, hi } => {
+                let idx = match self.indexes.get(key) {
+                    Some(i) => i,
+                    None => return Some(HashSet::new()),
+                };
+                // BTree range seek — O(log n + hits), not a full index
+                // scan (perf_datalake's range-query hot path).
+                use std::ops::Bound;
+                let lo_bound = match lo {
+                    Some(lo) => Bound::Included(lo.clone()),
+                    None => Bound::Unbounded,
+                };
+                let hi_bound = match hi {
+                    Some(hi) => Bound::Included(hi.clone()),
+                    None => Bound::Unbounded,
+                };
+                let mut out = HashSet::new();
+                for (_, ids) in idx.range((lo_bound, hi_bound)) {
+                    out.extend(ids.iter().cloned());
+                }
+                Some(out)
+            }
+            Clause::Max(key) => Some(
+                self.indexes
+                    .get(key)
+                    .and_then(|idx| idx.iter().next_back())
+                    .map(|(_, ids)| ids.clone())
+                    .unwrap_or_default(),
+            ),
+            Clause::Min(key) => Some(
+                self.indexes
+                    .get(key)
+                    .and_then(|idx| idx.iter().next())
+                    .map(|(_, ids)| ids.clone())
+                    .unwrap_or_default(),
+            ),
+        }
+    }
+}
+
+/// Merge Range clauses sharing a key: intersect their bounds.
+fn coalesce_ranges(clauses: &[Clause]) -> Vec<Clause> {
+    let mut out: Vec<Clause> = Vec::with_capacity(clauses.len());
+    for clause in clauses {
+        if let Clause::Range { key, lo, hi } = clause {
+            if let Some(Clause::Range {
+                lo: plo, hi: phi, ..
+            }) = out.iter_mut().find(
+                |c| matches!(c, Clause::Range { key: pk, .. } if pk == key),
+            ) {
+                if let Some(lo) = lo {
+                    if plo.as_ref().map_or(true, |p| lo > p) {
+                        *plo = Some(lo.clone());
+                    }
+                }
+                if let Some(hi) = hi {
+                    if phi.as_ref().map_or(true, |p| hi < p) {
+                        *phi = Some(hi.clone());
+                    }
+                }
+                continue;
+            }
+        }
+        out.push(clause.clone());
+    }
+    out
+}
+
+/// The document store handle (one per platform; collections per project).
+#[derive(Clone, Default)]
+pub struct DocStore {
+    inner: Arc<Mutex<HashMap<String, Collection>>>,
+}
+
+impl DocStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert or fully replace a document.
+    pub fn put(&self, collection: &str, id: &str, doc: Json) {
+        let mut inner = self.inner.lock().unwrap();
+        let coll = inner.entry(collection.to_string()).or_default();
+        if let Some(old) = coll.docs.remove(id) {
+            coll.unindex_doc(id, &old);
+        }
+        coll.index_doc(id, &doc);
+        coll.docs.insert(id.to_string(), Arc::new(doc));
+    }
+
+    /// Merge key-value pairs into an existing document (upsert).
+    pub fn update(&self, collection: &str, id: &str, fields: &[(String, Json)]) {
+        let mut inner = self.inner.lock().unwrap();
+        let coll = inner.entry(collection.to_string()).or_default();
+        let doc = coll.docs.remove(id).unwrap_or_else(|| Arc::new(Json::obj().build()));
+        coll.unindex_doc(id, &doc);
+        // copy-on-write: only updates pay a deep clone
+        let mut doc = (*doc).clone();
+        if let Json::Obj(obj) = &mut doc {
+            for (k, v) in fields {
+                obj.set(k.clone(), v.clone());
+            }
+        }
+        coll.index_doc(id, &doc);
+        coll.docs.insert(id.to_string(), Arc::new(doc));
+    }
+
+    /// Fetch by id.
+    pub fn get(&self, collection: &str, id: &str) -> Option<Doc> {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(collection)
+            .and_then(|c| c.docs.get(id))
+            .cloned()
+    }
+
+    /// Delete by id.
+    pub fn delete(&self, collection: &str, id: &str) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(coll) = inner.get_mut(collection) else {
+            return false;
+        };
+        match coll.docs.remove(id) {
+            Some(doc) => {
+                coll.unindex_doc(id, &doc);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// AND-combined query. Returns (id, doc) pairs, id-sorted.
+    pub fn find(&self, collection: &str, clauses: &[Clause]) -> Result<Vec<(String, Doc)>> {
+        // Query planning: coalesce multiple Range clauses on the same key
+        // into one (a `gte(k, a) AND lte(k, b)` pair becomes a single
+        // index range seek instead of two full id-set builds + an
+        // intersection — the metadata range-query hot path).
+        let clauses = coalesce_ranges(clauses);
+        let inner = self.inner.lock().unwrap();
+        let Some(coll) = inner.get(collection) else {
+            return Ok(vec![]);
+        };
+        let mut ids: Option<HashSet<String>> = None;
+        for clause in clauses.iter() {
+            let matched = coll.ids_matching(clause).ok_or_else(|| {
+                AcaiError::invalid(format!("unindexable value in clause {clause:?}"))
+            })?;
+            ids = Some(match ids {
+                None => matched,
+                Some(prev) => prev.intersection(&matched).cloned().collect(),
+            });
+        }
+        let ids = match ids {
+            Some(ids) => ids,
+            None => coll.docs.keys().cloned().collect(), // no clauses: all
+        };
+        let mut out: Vec<(String, Doc)> = ids
+            .into_iter()
+            .filter_map(|id| coll.docs.get(&id).map(|d| (id, d.clone())))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(out)
+    }
+
+    /// Number of documents in a collection.
+    pub fn count(&self, collection: &str) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(collection)
+            .map(|c| c.docs.len())
+            .unwrap_or(0)
+    }
+
+    /// Indexed key names of a collection (paper: index-per-key cost).
+    pub fn indexed_keys(&self, collection: &str) -> Vec<String> {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(collection)
+            .map(|c| {
+                let mut keys: Vec<_> = c.indexes.keys().cloned().collect();
+                keys.sort();
+                keys
+            })
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seeded() -> DocStore {
+        let ds = DocStore::new();
+        ds.put(
+            "jobs",
+            "job-1",
+            Json::obj()
+                .field("creator", "john")
+                .field("create_time", 100.0)
+                .field("model", "BERT")
+                .field("precision", 0.7)
+                .build(),
+        );
+        ds.put(
+            "jobs",
+            "job-2",
+            Json::obj()
+                .field("creator", "john")
+                .field("create_time", 200.0)
+                .field("model", "GPT")
+                .field("precision", 0.4)
+                .build(),
+        );
+        ds.put(
+            "jobs",
+            "job-3",
+            Json::obj()
+                .field("creator", "mary")
+                .field("create_time", 300.0)
+                .field("model", "BERT")
+                .field("precision", 0.9)
+                .build(),
+        );
+        ds
+    }
+
+    #[test]
+    fn equality_query() {
+        let ds = seeded();
+        let hits = ds.find("jobs", &[Clause::eq("creator", "john")]).unwrap();
+        assert_eq!(hits.len(), 2);
+    }
+
+    #[test]
+    fn paper_example_query() {
+        // "file sets generated by John today using BERT with precision > 0.5"
+        let ds = seeded();
+        let hits = ds
+            .find(
+                "jobs",
+                &[
+                    Clause::eq("creator", "john"),
+                    Clause::eq("model", "BERT"),
+                    Clause::gte("precision", 0.5),
+                    Clause::gte("create_time", 50.0),
+                    Clause::lte("create_time", 150.0),
+                ],
+            )
+            .unwrap();
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].0, "job-1");
+    }
+
+    #[test]
+    fn range_query_is_inclusive() {
+        let ds = seeded();
+        let hits = ds
+            .find(
+                "jobs",
+                &[
+                    Clause::gte("create_time", 100.0),
+                    Clause::lte("create_time", 200.0),
+                ],
+            )
+            .unwrap();
+        assert_eq!(hits.len(), 2);
+    }
+
+    #[test]
+    fn max_min_queries() {
+        let ds = seeded();
+        let max = ds.find("jobs", &[Clause::Max("precision".into())]).unwrap();
+        assert_eq!(max[0].0, "job-3");
+        let min = ds.find("jobs", &[Clause::Min("precision".into())]).unwrap();
+        assert_eq!(min[0].0, "job-2");
+    }
+
+    #[test]
+    fn update_moves_index_entries() {
+        let ds = seeded();
+        ds.update("jobs", "job-2", &[("precision".into(), Json::from(0.95))]);
+        let max = ds.find("jobs", &[Clause::Max("precision".into())]).unwrap();
+        assert_eq!(max[0].0, "job-2");
+        // old index entry must be gone
+        let low = ds.find("jobs", &[Clause::eq("precision", 0.4)]).unwrap();
+        assert!(low.is_empty());
+    }
+
+    #[test]
+    fn delete_removes_from_indexes() {
+        let ds = seeded();
+        assert!(ds.delete("jobs", "job-3"));
+        let hits = ds.find("jobs", &[Clause::eq("creator", "mary")]).unwrap();
+        assert!(hits.is_empty());
+        assert_eq!(ds.count("jobs"), 2);
+    }
+
+    #[test]
+    fn empty_clause_list_returns_all() {
+        let ds = seeded();
+        assert_eq!(ds.find("jobs", &[]).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn missing_key_range_matches_nothing() {
+        let ds = seeded();
+        assert!(ds.find("jobs", &[Clause::gte("nonexistent", 0.0)]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn indexes_are_created_per_key_automatically() {
+        let ds = seeded();
+        let keys = ds.indexed_keys("jobs");
+        assert!(keys.contains(&"creator".to_string()));
+        assert!(keys.contains(&"precision".to_string()));
+    }
+
+    #[test]
+    fn string_range_queries_work() {
+        let ds = seeded();
+        let hits = ds
+            .find(
+                "jobs",
+                &[Clause::Range {
+                    key: "model".into(),
+                    lo: Some(IndexKey::Str("A".into())),
+                    hi: Some(IndexKey::Str("C".into())),
+                }],
+            )
+            .unwrap();
+        assert_eq!(hits.len(), 2); // the two BERTs
+    }
+
+    #[test]
+    fn mixed_type_index_keys_do_not_collide() {
+        let ds = DocStore::new();
+        ds.put("c", "a", Json::obj().field("v", 1.0).build());
+        ds.put("c", "b", Json::obj().field("v", "1").build());
+        assert_eq!(ds.find("c", &[Clause::eq("v", 1.0)]).unwrap().len(), 1);
+        assert_eq!(ds.find("c", &[Clause::eq("v", "1")]).unwrap().len(), 1);
+    }
+}

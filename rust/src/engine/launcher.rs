@@ -1,0 +1,141 @@
+//! Job launcher (paper §4.2): provisions containers in the cluster and
+//! watches their status, publishing to the container-status topic.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::bus::{Bus, TOPIC_CONTAINER_STATUS};
+use crate::cluster::{Cluster, ContainerEvent, ContainerPhase, ResourceConfig};
+use crate::error::Result;
+use crate::ids::{ContainerId, JobId};
+use crate::json::Json;
+
+/// The launcher.
+#[derive(Clone)]
+pub struct Launcher {
+    cluster: Cluster,
+    bus: Bus,
+    by_container: Arc<Mutex<HashMap<ContainerId, JobId>>>,
+}
+
+impl Launcher {
+    pub fn new(cluster: Cluster, bus: Bus) -> Self {
+        Self {
+            cluster,
+            bus,
+            by_container: Arc::new(Mutex::new(HashMap::new())),
+        }
+    }
+
+    /// Provision a container for a job that will run `duration` virtual
+    /// seconds.  Publishes a `running` container-status event.
+    pub fn launch(&self, job: JobId, res: ResourceConfig, duration: f64) -> Result<ContainerId> {
+        let container = self.cluster.launch(res, duration)?;
+        self.by_container.lock().unwrap().insert(container, job);
+        self.publish(container, job, "running");
+        Ok(container)
+    }
+
+    /// Kill the container of a job.
+    pub fn kill(&self, container: ContainerId) -> Result<ContainerEvent> {
+        let event = self.cluster.kill(container)?;
+        if let Some(job) = self.by_container.lock().unwrap().remove(&container) {
+            self.publish(container, job, "killed");
+        }
+        Ok(event)
+    }
+
+    /// Watch step: collect completed containers, publish status events,
+    /// return (job, phase, at) for the engine to process.
+    pub fn watch(&self) -> Vec<(JobId, ContainerPhase, f64)> {
+        let events = self.cluster.collect_completions();
+        let mut out = Vec::with_capacity(events.len());
+        let mut map = self.by_container.lock().unwrap();
+        for e in events {
+            if let Some(job) = map.remove(&e.container) {
+                let status = match e.phase {
+                    ContainerPhase::Succeeded => "succeeded",
+                    ContainerPhase::Failed => "failed",
+                    _ => "unknown",
+                };
+                drop(map);
+                self.publish(e.container, job, status);
+                map = self.by_container.lock().unwrap();
+                out.push((job, e.phase, e.at));
+            }
+        }
+        out
+    }
+
+    /// Earliest pending completion (engine clock advance target).
+    pub fn next_completion(&self) -> Option<f64> {
+        self.cluster.next_completion()
+    }
+
+    fn publish(&self, container: ContainerId, job: JobId, status: &str) {
+        self.bus.publish(
+            TOPIC_CONTAINER_STATUS,
+            Json::obj()
+                .field("container", container.to_string())
+                .field("job", job.to_string())
+                .field("status", status)
+                .build(),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::simclock::SimClock;
+
+    fn launcher() -> (Launcher, SimClock, Bus) {
+        let clock = SimClock::new();
+        let bus = Bus::new();
+        let cluster = Cluster::new(ClusterConfig::default(), clock.clone());
+        (Launcher::new(cluster, bus.clone()), clock, bus)
+    }
+
+    #[test]
+    fn launch_watch_round_trip() {
+        let (l, clock, bus) = launcher();
+        let rx = bus.subscribe(TOPIC_CONTAINER_STATUS);
+        l.launch(JobId(1), ResourceConfig::new(1.0, 1024), 5.0).unwrap();
+        clock.advance(5.0);
+        let done = l.watch();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].0, JobId(1));
+        assert_eq!(done[0].1, ContainerPhase::Succeeded);
+        let statuses: Vec<String> = rx
+            .try_iter()
+            .map(|e| e.payload.get("status").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(statuses, vec!["running", "succeeded"]);
+    }
+
+    #[test]
+    fn kill_publishes_event() {
+        let (l, _clock, bus) = launcher();
+        let rx = bus.subscribe(TOPIC_CONTAINER_STATUS);
+        let c = l.launch(JobId(2), ResourceConfig::new(1.0, 1024), 100.0).unwrap();
+        l.kill(c).unwrap();
+        let statuses: Vec<String> = rx
+            .try_iter()
+            .map(|e| e.payload.get("status").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(statuses, vec!["running", "killed"]);
+        assert!(l.watch().is_empty());
+    }
+
+    #[test]
+    fn watch_maps_containers_to_jobs() {
+        let (l, clock, _bus) = launcher();
+        l.launch(JobId(10), ResourceConfig::new(0.5, 512), 2.0).unwrap();
+        l.launch(JobId(11), ResourceConfig::new(0.5, 512), 1.0).unwrap();
+        clock.advance(2.0);
+        let done = l.watch();
+        let jobs: Vec<JobId> = done.iter().map(|(j, _, _)| *j).collect();
+        assert_eq!(jobs, vec![JobId(11), JobId(10)]); // completion order
+    }
+}

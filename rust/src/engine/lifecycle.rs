@@ -1,0 +1,135 @@
+//! Job life cycle state machine (paper §3.3.1, Figure 3).
+//!
+//! ```text
+//! Queued ──▶ Launching ──▶ Running ──▶ Finished
+//!    │            │            │  └───▶ Failed
+//!    └────────────┴────────────┴──────▶ Killed   (user, any time)
+//! ```
+//!
+//! The (input file set, job, output file set) triplet is immutable: a job
+//! is submitted and scheduled exactly once; terminal states never leave.
+
+use crate::error::{AcaiError, Result};
+
+/// The job states of Figure 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobState {
+    /// In the per-(project, user) FIFO queue.
+    Queued,
+    /// Popped from the queue; container being provisioned.
+    Launching,
+    /// Container running the user program.
+    Running,
+    /// Program exited 0.
+    Finished,
+    /// Program exited non-zero (or the container failed).
+    Failed,
+    /// Killed by the user.
+    Killed,
+}
+
+impl JobState {
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Finished | JobState::Failed | JobState::Killed)
+    }
+
+    /// Is the job consuming a quota slot (launching or running)?
+    pub fn is_active(self) -> bool {
+        matches!(self, JobState::Launching | JobState::Running)
+    }
+
+    /// Legal transitions per Figure 3.
+    pub fn can_transition(self, to: JobState) -> bool {
+        use JobState::*;
+        match (self, to) {
+            (Queued, Launching) => true,
+            (Launching, Running) => true,
+            (Launching, Queued) => true, // cluster full: back to queue
+            (Running, Finished) | (Running, Failed) => true,
+            // user can kill any non-terminal job
+            (s, Killed) if !s.is_terminal() => true,
+            _ => false,
+        }
+    }
+
+    /// Checked transition.
+    pub fn transition(self, to: JobState) -> Result<JobState> {
+        if self.can_transition(to) {
+            Ok(to)
+        } else {
+            Err(AcaiError::conflict(format!(
+                "illegal job transition {self:?} -> {to:?}"
+            )))
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Launching => "launching",
+            JobState::Running => "running",
+            JobState::Finished => "finished",
+            JobState::Failed => "failed",
+            JobState::Killed => "killed",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::JobState::*;
+
+    #[test]
+    fn happy_path_is_legal() {
+        assert!(Queued.can_transition(Launching));
+        assert!(Launching.can_transition(Running));
+        assert!(Running.can_transition(Finished));
+        assert!(Running.can_transition(Failed));
+    }
+
+    #[test]
+    fn kill_from_any_nonterminal() {
+        for s in [Queued, Launching, Running] {
+            assert!(s.can_transition(Killed), "{s:?}");
+        }
+        for s in [Finished, Failed, Killed] {
+            assert!(!s.can_transition(Killed), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn terminal_states_are_sinks() {
+        for s in [Finished, Failed, Killed] {
+            for t in [Queued, Launching, Running, Finished, Failed, Killed] {
+                assert!(!s.can_transition(t), "{s:?} -> {t:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn no_skipping_states() {
+        assert!(!Queued.can_transition(Running));
+        assert!(!Queued.can_transition(Finished));
+        assert!(!Launching.can_transition(Finished));
+    }
+
+    #[test]
+    fn requeue_from_launching_allowed() {
+        // cluster saturation path
+        assert!(Launching.can_transition(Queued));
+    }
+
+    #[test]
+    fn checked_transition_errors() {
+        assert!(Queued.transition(Launching).is_ok());
+        assert_eq!(Finished.transition(Running).unwrap_err().status(), 409);
+    }
+
+    #[test]
+    fn active_and_terminal_classification() {
+        assert!(Launching.is_active() && Running.is_active());
+        assert!(!Queued.is_active());
+        assert!(Finished.is_terminal() && Failed.is_terminal() && Killed.is_terminal());
+        assert!(!Running.is_terminal());
+    }
+}

@@ -1,0 +1,157 @@
+//! Log server + intelligent log parser (paper §4.2, §3.2.3).
+//!
+//! Persists per-job logs and parses the special auto-tag format
+//!
+//! ```text
+//! [[acai]] key=value
+//! ```
+//!
+//! into metadata attached to the job (and, on success, its output file
+//! set) — "an intelligent log parser that parses user logs and attaches
+//! metadata to file sets or experiments automatically at job runtime".
+//! Values parse as numbers when possible (so range queries work), else
+//! strings.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::ids::JobId;
+use crate::json::Json;
+
+/// Prefix of an auto-tag line.
+pub const TAG_PREFIX: &str = "[[acai]]";
+
+/// The log server.
+#[derive(Clone, Default)]
+pub struct LogServer {
+    logs: Arc<Mutex<HashMap<JobId, Vec<String>>>>,
+}
+
+impl LogServer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append log lines for a job; returns the tags parsed out of them.
+    pub fn append(&self, job: JobId, lines: &[String]) -> Vec<(String, Json)> {
+        let mut tags = Vec::new();
+        for line in lines {
+            if let Some(tag) = parse_tag(line) {
+                tags.push(tag);
+            }
+        }
+        self.logs
+            .lock()
+            .unwrap()
+            .entry(job)
+            .or_default()
+            .extend(lines.iter().cloned());
+        tags
+    }
+
+    /// Full persisted log of a job.
+    pub fn get(&self, job: JobId) -> Vec<String> {
+        self.logs
+            .lock()
+            .unwrap()
+            .get(&job)
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    /// Tail of a job's log (dashboard live view).
+    pub fn tail(&self, job: JobId, n: usize) -> Vec<String> {
+        let logs = self.logs.lock().unwrap();
+        let Some(lines) = logs.get(&job) else {
+            return vec![];
+        };
+        lines[lines.len().saturating_sub(n)..].to_vec()
+    }
+
+    /// All tags accumulated over a job's whole log.
+    pub fn tags(&self, job: JobId) -> Vec<(String, Json)> {
+        self.get(job).iter().filter_map(|l| parse_tag(l)).collect()
+    }
+}
+
+/// Parse one `[[acai]] key=value` line.
+pub fn parse_tag(line: &str) -> Option<(String, Json)> {
+    let rest = line.trim().strip_prefix(TAG_PREFIX)?.trim();
+    let (key, value) = rest.split_once('=')?;
+    let key = key.trim();
+    if key.is_empty() || key.contains(char::is_whitespace) {
+        return None;
+    }
+    let value = value.trim();
+    let json = match value.parse::<f64>() {
+        Ok(n) if n.is_finite() => Json::Num(n),
+        _ => Json::Str(value.to_string()),
+    };
+    Some((key.to_string(), json))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_numeric_and_string_tags() {
+        assert_eq!(
+            parse_tag("[[acai]] training_loss=0.42"),
+            Some(("training_loss".into(), Json::Num(0.42)))
+        );
+        assert_eq!(
+            parse_tag("[[acai]] model=BERT-large"),
+            Some(("model".into(), Json::Str("BERT-large".into())))
+        );
+        assert_eq!(
+            parse_tag("  [[acai]]  epoch = 7 "),
+            Some(("epoch".into(), Json::Num(7.0)))
+        );
+    }
+
+    #[test]
+    fn ignores_non_tag_lines() {
+        assert!(parse_tag("epoch 3 loss 0.5").is_none());
+        assert!(parse_tag("[[acai]] novalue").is_none());
+        assert!(parse_tag("[[acai]] two words=1").is_none());
+        assert!(parse_tag("[[acai]] =1").is_none());
+    }
+
+    #[test]
+    fn append_collects_tags_and_persists() {
+        let ls = LogServer::new();
+        let tags = ls.append(
+            JobId(1),
+            &[
+                "starting".into(),
+                "[[acai]] training_loss=1.5".into(),
+                "epoch done".into(),
+                "[[acai]] training_loss=0.9".into(),
+            ],
+        );
+        assert_eq!(tags.len(), 2);
+        assert_eq!(ls.get(JobId(1)).len(), 4);
+        // the last tag wins when applied to metadata (caller folds)
+        assert_eq!(tags.last().unwrap().1, Json::Num(0.9));
+    }
+
+    #[test]
+    fn tail_returns_last_lines() {
+        let ls = LogServer::new();
+        let lines: Vec<String> = (0..10).map(|i| format!("line {i}")).collect();
+        ls.append(JobId(2), &lines);
+        assert_eq!(ls.tail(JobId(2), 3), vec!["line 7", "line 8", "line 9"]);
+        assert_eq!(ls.tail(JobId(2), 100).len(), 10);
+        assert!(ls.tail(JobId(9), 5).is_empty());
+    }
+
+    #[test]
+    fn tags_scan_whole_history() {
+        let ls = LogServer::new();
+        ls.append(JobId(3), &["[[acai]] a=1".into()]);
+        ls.append(JobId(3), &["[[acai]] b=two".into()]);
+        let tags = ls.tags(JobId(3));
+        assert_eq!(tags.len(), 2);
+    }
+}

@@ -1,0 +1,440 @@
+//! The execution engine (paper §3.3, §4.2): registry + scheduler +
+//! launcher + monitor + log server, orchestrated over the cluster
+//! simulator and the data lake.
+//!
+//! The engine is the paper's job-execution flow (Figure 9) as a
+//! deterministic event loop on the virtual clock:
+//!
+//! 1. `submit` — registry assigns a job id, persists metadata, enqueues;
+//! 2. `pump` — the scheduler pops launchable jobs (per-tuple FIFO, quota
+//!    k); the agent "downloads" the input file set; the launcher
+//!    provisions a container sized by the workload runtime model;
+//! 3. `step` — advance the clock to the next container completion; the
+//!    agent executes the payload (real PJRT training for MNIST), uploads
+//!    the output file set, and the engine records provenance, parses
+//!    logs into metadata, bills the job, and frees the quota slot.
+
+pub mod launcher;
+pub mod lifecycle;
+pub mod logserver;
+pub mod monitor;
+pub mod pipeline;
+pub mod registry;
+pub mod scheduler;
+
+pub use launcher::Launcher;
+pub use lifecycle::JobState;
+pub use logserver::LogServer;
+pub use monitor::Monitor;
+pub use registry::{JobRecord, JobRegistry, JobSpec};
+pub use scheduler::{QueueKey, Scheduler};
+
+use std::sync::{Arc, Mutex};
+
+use crate::bus::Bus;
+use crate::cluster::{Cluster, ContainerPhase};
+use crate::datalake::metadata::ArtifactKind;
+use crate::datalake::DataLake;
+use crate::error::{AcaiError, Result};
+use crate::ids::{JobId, ProjectId, Version};
+use crate::json::Json;
+use crate::pricing::PricingModel;
+use crate::prng::Rng;
+use crate::simclock::SimClock;
+use crate::workload::{JobCommand, Workloads};
+
+/// Safety bound for the event loop (a run that needs more events than
+/// this indicates a scheduling livelock — fail loudly).
+const MAX_EVENTS: usize = 10_000_000;
+
+/// The execution engine.
+pub struct ExecutionEngine {
+    pub registry: JobRegistry,
+    pub scheduler: Scheduler,
+    pub launcher: Launcher,
+    pub monitor: Monitor,
+    pub logs: LogServer,
+    pub datalake: DataLake,
+    pub workloads: Arc<Workloads>,
+    pub pricing: PricingModel,
+    clock: SimClock,
+    rng: Mutex<Rng>,
+}
+
+impl ExecutionEngine {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        cluster: Cluster,
+        bus: Bus,
+        datalake: DataLake,
+        workloads: Arc<Workloads>,
+        pricing: PricingModel,
+        clock: SimClock,
+        quota_k: usize,
+        seed: u64,
+    ) -> Self {
+        Self {
+            registry: JobRegistry::new(),
+            scheduler: Scheduler::new(quota_k),
+            launcher: Launcher::new(cluster, bus.clone()),
+            monitor: Monitor::new(bus),
+            logs: LogServer::new(),
+            datalake,
+            workloads,
+            pricing,
+            clock,
+            rng: Mutex::new(Rng::new(seed ^ 0xE46))
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    /// Submit a job (paper Fig 9 step 1).  Validates the resource config
+    /// and the input file set, registers, enqueues, and pumps.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobId> {
+        spec.resources.validate()?;
+        let cmd = JobCommand::parse(&spec.command)?;
+        if !spec.input_fileset.is_empty() {
+            let (name, version) = parse_fileset_ref(&spec.input_fileset)?;
+            self.datalake.filesets.get(spec.project, &name, version)?;
+        }
+        if spec.output_fileset.is_empty() {
+            return Err(AcaiError::invalid("output_fileset must be named"));
+        }
+        let key: QueueKey = (spec.project, spec.user);
+        let project = spec.project;
+        let user = spec.user;
+        let id = self.registry.register(spec.clone(), self.clock.now());
+        let mut extra: Vec<(&str, Json)> = vec![
+            ("name", Json::from(spec.name.as_str())),
+            ("command", Json::from(spec.command.as_str())),
+            ("vcpus", Json::from(spec.resources.vcpus)),
+            ("mem_mb", Json::from(spec.resources.mem_mb)),
+            ("state", Json::from("queued")),
+        ];
+        for (arg, v) in &cmd.args {
+            // command args become queryable metadata (e.g. epochs=20)
+            extra.push((Box::leak(format!("arg_{arg}").into_boxed_str()), Json::from(*v)));
+        }
+        self.datalake.metadata.register(
+            project,
+            ArtifactKind::Job,
+            &id.to_string(),
+            &user.to_string(),
+            &extra,
+        );
+        self.scheduler.enqueue(key, id);
+        self.monitor.report(id, "queued", self.clock.now());
+        self.pump();
+        Ok(id)
+    }
+
+    /// Launch everything the scheduler allows (Fig 9 steps 2–4).
+    pub fn pump(&self) {
+        let batch = self.scheduler.launchable();
+        let mut saturated = false;
+        for (key, job) in batch {
+            if saturated {
+                // cluster already full this round: hand the slot back
+                self.scheduler.requeue_front(key, job);
+                continue;
+            }
+            if let Err(e) = self.launch_one(key, job) {
+                if matches!(e, AcaiError::Exhausted(_)) {
+                    // cluster saturated: put the job back (front, FIFO
+                    // preserved), retry after the next completion frees
+                    // capacity
+                    let _ = self
+                        .registry
+                        .update(job, Some(JobState::Queued), |_| {});
+                    self.scheduler.requeue_front(key, job);
+                    saturated = true;
+                    continue;
+                }
+                let _ = self.registry.update(job, Some(JobState::Killed), |j| {
+                    j.error = Some(e.to_string());
+                });
+                self.scheduler.on_terminal(key);
+                self.monitor.report(job, "failed", self.clock.now());
+            }
+        }
+    }
+
+    fn launch_one(&self, _key: QueueKey, job: JobId) -> Result<()> {
+        let record = self.registry.get(job)?;
+        self.registry.update(job, Some(JobState::Launching), |_| {})?;
+        // Agent: download the input file set (bytes counted for the log).
+        self.monitor.report(job, "downloading", self.clock.now());
+        let mut input_bytes = 0usize;
+        if !record.spec.input_fileset.is_empty() {
+            let (name, version) = parse_fileset_ref(&record.spec.input_fileset)?;
+            // the inter-job cache (§7.1.2) makes repeat downloads free
+            let files = self
+                .datalake
+                .materialize_cached(record.spec.project, &name, version)?;
+            for (_, bytes) in files.iter() {
+                input_bytes += bytes.len();
+            }
+        }
+        let cmd = JobCommand::parse(&record.spec.command)?;
+        let duration = {
+            let mut rng = self.rng.lock().unwrap();
+            self.workloads.duration(&cmd, record.spec.resources, &mut rng)
+        };
+        let container = self
+            .launcher
+            .launch(job, record.spec.resources, duration)?;
+        self.registry.update(job, Some(JobState::Running), |j| {
+            j.launched_at = Some(self.clock.now());
+            j.container = Some(container);
+        })?;
+        self.logs.append(
+            job,
+            &[format!(
+                "agent: input fileset {} ({} bytes) downloaded; starting `{}`",
+                record.spec.input_fileset, input_bytes, record.spec.command
+            )],
+        );
+        self.monitor.report(job, "running", self.clock.now());
+        Ok(())
+    }
+
+    /// Advance the clock to the next completion and process it.  Returns
+    /// false when no containers are running.
+    pub fn step(&self) -> bool {
+        let Some(t) = self.launcher.next_completion() else {
+            return false;
+        };
+        self.clock.advance_to(t);
+        for (job, phase, at) in self.launcher.watch() {
+            self.finish_job(job, phase, at);
+        }
+        self.pump();
+        true
+    }
+
+    /// Drive until every submitted job is terminal.
+    pub fn run_until_idle(&self) {
+        self.pump();
+        let mut events = 0;
+        while self.step() {
+            events += 1;
+            assert!(events < MAX_EVENTS, "engine livelock");
+        }
+    }
+
+    fn finish_job(&self, job: JobId, phase: ContainerPhase, at: f64) {
+        let Ok(record) = self.registry.get(job) else {
+            return;
+        };
+        let key: QueueKey = (record.spec.project, record.spec.user);
+        let runtime = at - record.launched_at.unwrap_or(at);
+        let cost = self.pricing.cost(record.spec.resources, runtime);
+
+        let result = match phase {
+            ContainerPhase::Succeeded => self.complete_success(&record, runtime, cost),
+            _ => Err(AcaiError::Storage("container failed".into())),
+        };
+        match result {
+            Ok(output_version) => {
+                let _ = self.registry.update(job, Some(JobState::Finished), |j| {
+                    j.finished_at = Some(at);
+                    j.runtime_secs = Some(runtime);
+                    j.cost = Some(cost);
+                    j.output_version = Some(output_version);
+                });
+                self.monitor.report(job, "finished", at);
+            }
+            Err(e) => {
+                self.logs.append(job, &[format!("job failed: {e}")]);
+                let _ = self.registry.update(job, Some(JobState::Failed), |j| {
+                    j.finished_at = Some(at);
+                    j.runtime_secs = Some(runtime);
+                    j.cost = Some(cost);
+                    j.error = Some(e.to_string());
+                });
+                self.datalake.metadata.tag(
+                    record.spec.project,
+                    ArtifactKind::Job,
+                    &job.to_string(),
+                    &[("state".into(), Json::from("failed"))],
+                );
+                self.monitor.report(job, "failed", at);
+            }
+        }
+        self.scheduler.on_terminal(key);
+    }
+
+    /// Success path: run the payload, upload outputs, create the output
+    /// file set, record provenance, fold log tags into metadata, bill.
+    fn complete_success(
+        &self,
+        record: &JobRecord,
+        runtime: f64,
+        cost: f64,
+    ) -> Result<Version> {
+        let job = record.id;
+        let project = record.spec.project;
+        let cmd = JobCommand::parse(&record.spec.command)?;
+        let seed = 0xACA1_0000 ^ job.raw();
+        let output = self.workloads.execute(&cmd, seed)?;
+
+        self.monitor.report(job, "uploading", self.clock.now());
+        // Upload output files (new versions of their paths)...
+        let files: Vec<(&str, &[u8])> = output
+            .files
+            .iter()
+            .map(|(p, b)| (p.as_str(), b.as_slice()))
+            .collect();
+        if files.is_empty() {
+            return Err(AcaiError::Storage("job produced no output files".into()));
+        }
+        let uploaded = self.datalake.storage.upload(project, &files)?;
+        // ...and pin them into the output file set.
+        let specs: Vec<String> = uploaded
+            .iter()
+            .map(|(p, v)| format!("{p}#{v}"))
+            .collect();
+        let spec_refs: Vec<&str> = specs.iter().map(|s| s.as_str()).collect();
+        let out_version = self.datalake.filesets.create(
+            project,
+            &record.spec.output_fileset,
+            &spec_refs,
+            &record.spec.user.to_string(),
+        )?;
+
+        // Provenance: input file set --(job)--> output file set.
+        if !record.spec.input_fileset.is_empty() {
+            let (in_name, in_version) = parse_fileset_ref(&record.spec.input_fileset)?;
+            let in_version = match in_version {
+                Some(v) => v,
+                None => self
+                    .datalake
+                    .filesets
+                    .latest_version(project, &in_name)
+                    .ok_or_else(|| AcaiError::not_found(in_name.clone()))?,
+            };
+            self.datalake.provenance.record_job(
+                project,
+                (&in_name, in_version),
+                (&record.spec.output_fileset, out_version),
+                job,
+            )?;
+        }
+
+        // Log server: persist logs; auto-tags land on the job AND the
+        // output file set (§3.2.3).
+        let tags = self.logs.append(job, &output.logs);
+        if !tags.is_empty() {
+            self.datalake
+                .metadata
+                .tag(project, ArtifactKind::Job, &job.to_string(), &tags);
+            let fs_id = crate::datalake::provenance::node_id(
+                &record.spec.output_fileset,
+                out_version,
+            );
+            self.datalake
+                .metadata
+                .tag(project, ArtifactKind::FileSet, &fs_id, &tags);
+        }
+        self.datalake.metadata.tag(
+            project,
+            ArtifactKind::Job,
+            &job.to_string(),
+            &[
+                ("state".into(), Json::from("finished")),
+                ("runtime_secs".into(), Json::from(runtime)),
+                ("cost".into(), Json::from(cost)),
+                (
+                    "output_fileset".into(),
+                    Json::from(format!("{}:{}", record.spec.output_fileset, out_version)),
+                ),
+            ],
+        );
+        Ok(out_version)
+    }
+
+    /// Kill a job (any non-terminal state).
+    pub fn kill(&self, job: JobId) -> Result<()> {
+        let record = self.registry.get(job)?;
+        let key: QueueKey = (record.spec.project, record.spec.user);
+        match record.state {
+            JobState::Queued => {
+                if !self.scheduler.remove_queued(key, job) {
+                    return Err(AcaiError::conflict("job not in queue"));
+                }
+                self.registry.update(job, Some(JobState::Killed), |_| {})?;
+            }
+            JobState::Launching | JobState::Running => {
+                if let Some(container) = record.container {
+                    self.launcher.kill(container)?;
+                }
+                self.registry.update(job, Some(JobState::Killed), |j| {
+                    j.finished_at = Some(self.clock.now());
+                })?;
+                self.scheduler.on_terminal(key);
+                self.pump();
+            }
+            s => {
+                return Err(AcaiError::conflict(format!(
+                    "job already terminal ({})",
+                    s.as_str()
+                )))
+            }
+        }
+        self.monitor.report(job, "killed", self.clock.now());
+        self.datalake.metadata.tag(
+            record.spec.project,
+            ArtifactKind::Job,
+            &job.to_string(),
+            &[("state".into(), Json::from("killed"))],
+        );
+        Ok(())
+    }
+
+    /// Submit a batch and run it to completion; returns the records.
+    pub fn run_batch(&self, specs: Vec<JobSpec>) -> Result<Vec<JobRecord>> {
+        let ids: Vec<JobId> = specs
+            .into_iter()
+            .map(|s| self.submit(s))
+            .collect::<Result<_>>()?;
+        self.run_until_idle();
+        ids.into_iter().map(|id| self.registry.get(id)).collect()
+    }
+}
+
+/// Parse `name` / `name:version` file-set references.
+pub fn parse_fileset_ref(s: &str) -> Result<(String, Option<Version>)> {
+    match s.split_once(':') {
+        None => Ok((s.to_string(), None)),
+        Some((name, v)) => {
+            let version = v
+                .parse::<Version>()
+                .map_err(|_| AcaiError::invalid(format!("bad fileset ref {s:?}")))?;
+            Ok((name.to_string(), Some(version)))
+        }
+    }
+}
+
+/// Convenience: is this project id used anywhere? (test helper)
+pub fn project_of(record: &JobRecord) -> ProjectId {
+    record.spec.project
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fileset_ref_parsing() {
+        assert_eq!(parse_fileset_ref("mnist").unwrap(), ("mnist".into(), None));
+        assert_eq!(
+            parse_fileset_ref("mnist:3").unwrap(),
+            ("mnist".into(), Some(3))
+        );
+        assert!(parse_fileset_ref("mnist:x").is_err());
+    }
+}

@@ -1,0 +1,137 @@
+//! Job monitor (paper §4.2): tracks real-time job progress published by
+//! the in-container agents on the job-progress topic, and fans it out to
+//! dashboard watchers (the WebSocket analogue is a pull subscription).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::bus::{Bus, Event, TOPIC_JOB_PROGRESS};
+use crate::ids::JobId;
+use crate::json::Json;
+
+/// One progress update.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Progress {
+    pub job: JobId,
+    /// downloading | running | uploading | finished | failed | killed...
+    pub stage: String,
+    pub at: f64,
+}
+
+#[derive(Default)]
+struct Inner {
+    latest: HashMap<JobId, Progress>,
+    history: HashMap<JobId, Vec<Progress>>,
+}
+
+/// The monitor.
+#[derive(Clone)]
+pub struct Monitor {
+    inner: Arc<Mutex<Inner>>,
+    bus: Bus,
+}
+
+impl Monitor {
+    /// Create and subscribe to the job-progress topic.
+    pub fn new(bus: Bus) -> Self {
+        let inner: Arc<Mutex<Inner>> = Default::default();
+        let inner2 = inner.clone();
+        bus.subscribe_fn(TOPIC_JOB_PROGRESS, move |event: &Event| {
+            if let Some(p) = Self::parse(event) {
+                let mut inner = inner2.lock().unwrap();
+                inner.history.entry(p.job).or_default().push(p.clone());
+                inner.latest.insert(p.job, p);
+            }
+        });
+        Self { inner, bus }
+    }
+
+    fn parse(event: &Event) -> Option<Progress> {
+        let job: JobId = event.payload.get("job")?.as_str()?.parse().ok()?;
+        Some(Progress {
+            job,
+            stage: event.payload.get("stage")?.as_str()?.to_string(),
+            at: event.payload.get("at")?.as_f64()?,
+        })
+    }
+
+    /// Publish a progress update (called by the agent/engine).
+    pub fn report(&self, job: JobId, stage: &str, at: f64) {
+        self.bus.publish(
+            TOPIC_JOB_PROGRESS,
+            Json::obj()
+                .field("job", job.to_string())
+                .field("stage", stage)
+                .field("at", at)
+                .build(),
+        );
+    }
+
+    /// Latest known stage of a job.
+    pub fn latest(&self, job: JobId) -> Option<Progress> {
+        self.inner.lock().unwrap().latest.get(&job).cloned()
+    }
+
+    /// Full progress history of a job (dashboard timeline).
+    pub fn history(&self, job: JobId) -> Vec<Progress> {
+        self.inner
+            .lock()
+            .unwrap()
+            .history
+            .get(&job)
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    /// Live watch channel (the dashboard's WebSocket analogue).
+    pub fn watch(&self) -> std::sync::mpsc::Receiver<Event> {
+        self.bus.subscribe(TOPIC_JOB_PROGRESS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_updates_latest_and_history() {
+        let bus = Bus::new();
+        let m = Monitor::new(bus);
+        m.report(JobId(1), "downloading", 1.0);
+        m.report(JobId(1), "running", 2.0);
+        m.report(JobId(1), "uploading", 3.0);
+        assert_eq!(m.latest(JobId(1)).unwrap().stage, "uploading");
+        let stages: Vec<String> = m.history(JobId(1)).into_iter().map(|p| p.stage).collect();
+        assert_eq!(stages, vec!["downloading", "running", "uploading"]);
+    }
+
+    #[test]
+    fn jobs_are_tracked_independently() {
+        let bus = Bus::new();
+        let m = Monitor::new(bus);
+        m.report(JobId(1), "running", 1.0);
+        m.report(JobId(2), "downloading", 1.0);
+        assert_eq!(m.latest(JobId(1)).unwrap().stage, "running");
+        assert_eq!(m.latest(JobId(2)).unwrap().stage, "downloading");
+        assert!(m.latest(JobId(3)).is_none());
+    }
+
+    #[test]
+    fn watch_receives_live_updates() {
+        let bus = Bus::new();
+        let m = Monitor::new(bus);
+        let rx = m.watch();
+        m.report(JobId(5), "running", 10.0);
+        let e = rx.try_recv().unwrap();
+        assert_eq!(e.payload.get("stage").unwrap().as_str(), Some("running"));
+    }
+
+    #[test]
+    fn malformed_events_are_ignored() {
+        let bus = Bus::new();
+        let m = Monitor::new(bus.clone());
+        bus.publish(TOPIC_JOB_PROGRESS, Json::from("garbage"));
+        bus.publish(TOPIC_JOB_PROGRESS, Json::obj().field("job", "not-an-id").build());
+        assert!(m.latest(JobId(1)).is_none());
+    }
+}

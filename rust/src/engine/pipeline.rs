@@ -1,0 +1,274 @@
+//! ML pipelines + workflow replay (paper §7.2 / §7.1.3 — the future-work
+//! features, implemented).
+//!
+//! A **pipeline** is a collection of dependent jobs scheduled by the
+//! execution engine as a single entity: stage N's input file set is
+//! stage N-1's output file set.  **Replay** re-runs the downstream
+//! subgraph after an upstream file set updates ("if an upstream file set
+//! in a subgraph updates, users might want to update downstream models by
+//! re-running all jobs in the subgraph") — the jobs to re-run and their
+//! order come from the provenance DAG.
+
+use crate::cluster::ResourceConfig;
+use crate::error::{AcaiError, Result};
+use crate::ids::{JobId, ProjectId, UserId};
+
+use super::registry::JobSpec;
+use super::ExecutionEngine;
+
+/// One stage of a pipeline.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    pub name: String,
+    pub command: String,
+    /// Output file-set name; the next stage consumes it.
+    pub output_fileset: String,
+    pub resources: ResourceConfig,
+}
+
+/// A pipeline definition.
+#[derive(Debug, Clone)]
+pub struct Pipeline {
+    pub name: String,
+    /// The first stage's input file set (`name` or `name:version`).
+    pub input_fileset: String,
+    pub stages: Vec<Stage>,
+}
+
+/// Result of running a pipeline.
+#[derive(Debug, Clone)]
+pub struct PipelineRun {
+    pub jobs: Vec<JobId>,
+    /// (fileset, version) produced by the final stage.
+    pub final_output: (String, u32),
+}
+
+impl Pipeline {
+    /// Execute the stages sequentially as one scheduled entity.  Each
+    /// stage waits for its predecessor (its input is the predecessor's
+    /// freshly created output version) — the engine still interleaves
+    /// other users' jobs between stages.
+    pub fn run(
+        &self,
+        engine: &ExecutionEngine,
+        project: ProjectId,
+        user: UserId,
+    ) -> Result<PipelineRun> {
+        if self.stages.is_empty() {
+            return Err(AcaiError::invalid("pipeline has no stages"));
+        }
+        let mut input = self.input_fileset.clone();
+        let mut jobs = Vec::with_capacity(self.stages.len());
+        let mut final_output = (String::new(), 0u32);
+        for stage in &self.stages {
+            let id = engine.submit(JobSpec {
+                project,
+                user,
+                name: format!("{}/{}", self.name, stage.name),
+                command: stage.command.clone(),
+                input_fileset: input.clone(),
+                output_fileset: stage.output_fileset.clone(),
+                resources: stage.resources,
+            })?;
+            engine.run_until_idle();
+            let record = engine.registry.get(id)?;
+            let version = record.output_version.ok_or_else(|| {
+                AcaiError::Storage(format!(
+                    "pipeline {}: stage {} failed: {}",
+                    self.name,
+                    stage.name,
+                    record.error.unwrap_or_else(|| "unknown".into())
+                ))
+            })?;
+            jobs.push(id);
+            // pin the exact version for the next stage (reproducibility)
+            input = format!("{}:{}", stage.output_fileset, version);
+            final_output = (stage.output_fileset.clone(), version);
+        }
+        Ok(PipelineRun { jobs, final_output })
+    }
+}
+
+/// Workflow replay: after `updated_fileset` gained a new version, re-run
+/// every job downstream of it (in provenance topological order) against
+/// the latest inputs.  Returns the new job ids, in execution order.
+pub fn replay_downstream(
+    engine: &ExecutionEngine,
+    project: ProjectId,
+    user: UserId,
+    updated_fileset: &str,
+) -> Result<Vec<JobId>> {
+    let latest = engine
+        .datalake
+        .filesets
+        .latest_version(project, updated_fileset)
+        .ok_or_else(|| AcaiError::not_found(format!("file set {updated_fileset}")))?;
+
+    // Downstream file-set versions of EVERY version of the updated set
+    // (the history ran against older versions; we rerun their jobs).
+    let mut downstream = std::collections::HashSet::new();
+    for v in 1..=latest {
+        for node in engine
+            .datalake
+            .provenance
+            .descendants(project, updated_fileset, v)
+        {
+            downstream.insert(node);
+        }
+    }
+    // Original jobs that produced those nodes, in replay (topo) order.
+    let order = engine.datalake.provenance.replay_order(project);
+    let mut new_jobs = Vec::new();
+    // Map from original output fileset name -> the replayed version, so
+    // chained jobs consume the refreshed artifacts.
+    for node in order {
+        if !downstream.contains(&node) {
+            continue;
+        }
+        let Some((fs_name, fs_version)) = node.rsplit_once(':') else {
+            continue;
+        };
+        let fs_version: u32 = fs_version.parse().unwrap_or(0);
+        // find the job whose output was this fileset version
+        let producer = engine
+            .datalake
+            .provenance
+            .backward(project, fs_name, fs_version)
+            .into_iter()
+            .find(|e| e.kind == crate::datalake::provenance::KIND_JOB);
+        let Some(edge) = producer else {
+            continue; // created by hand (fileset_creation), nothing to rerun
+        };
+        let original: JobId = edge
+            .action
+            .parse()
+            .map_err(|_| AcaiError::Storage(format!("bad job id {}", edge.action)))?;
+        let record = engine.registry.get(original)?;
+        // re-run against the *latest* version of its input file set
+        let (input_name, _) = super::parse_fileset_ref(&record.spec.input_fileset)?;
+        let id = engine.submit(JobSpec {
+            project,
+            user,
+            name: format!("replay-{}", record.spec.name),
+            command: record.spec.command.clone(),
+            input_fileset: input_name, // unpinned: latest
+            output_fileset: record.spec.output_fileset.clone(),
+            resources: record.spec.resources,
+        })?;
+        engine.run_until_idle();
+        new_jobs.push(id);
+    }
+    if new_jobs.is_empty() {
+        return Err(AcaiError::not_found(format!(
+            "nothing downstream of {updated_fileset} to replay"
+        )));
+    }
+    Ok(new_jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::JobState;
+    use crate::Acai;
+
+    const P: ProjectId = ProjectId(1);
+    const U: UserId = UserId(1);
+
+    fn seeded() -> Acai {
+        let acai = Acai::boot_default();
+        acai.datalake.storage.upload(P, &[("/raw", b"raw")]).unwrap();
+        acai.datalake.filesets.create(P, "raw", &["/raw"], "u").unwrap();
+        acai
+    }
+
+    fn two_stage() -> Pipeline {
+        Pipeline {
+            name: "train-flow".into(),
+            input_fileset: "raw".into(),
+            stages: vec![
+                Stage {
+                    name: "featurize".into(),
+                    command: "python train_mnist.py --epoch 1".into(),
+                    output_fileset: "features".into(),
+                    resources: ResourceConfig::new(1.0, 1024),
+                },
+                Stage {
+                    name: "train".into(),
+                    command: "python train_mnist.py --epoch 3".into(),
+                    output_fileset: "model".into(),
+                    resources: ResourceConfig::new(2.0, 2048),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn pipeline_runs_stages_in_order_with_chained_inputs() {
+        let acai = seeded();
+        let run = two_stage().run(&acai.engine, P, U).unwrap();
+        assert_eq!(run.jobs.len(), 2);
+        assert_eq!(run.final_output, ("model".to_string(), 1));
+        // stage 2 consumed stage 1's output
+        let record = acai.engine.registry.get(run.jobs[1]).unwrap();
+        assert_eq!(record.spec.input_fileset, "features:1");
+        // full lineage: model:1 <- features:1 <- raw:1
+        let lineage = acai.datalake.provenance.ancestors(P, "model", 1);
+        assert_eq!(lineage, vec!["features:1", "raw:1"]);
+    }
+
+    #[test]
+    fn pipeline_failure_stops_the_chain() {
+        let mut config = crate::PlatformConfig::default();
+        config.cluster.failure_rate = 1.0;
+        let acai = Acai::boot(config).unwrap();
+        acai.datalake.storage.upload(P, &[("/raw", b"raw")]).unwrap();
+        acai.datalake.filesets.create(P, "raw", &["/raw"], "u").unwrap();
+        let err = two_stage().run(&acai.engine, P, U).unwrap_err();
+        assert!(err.to_string().contains("featurize"), "{err}");
+        // stage 2 never submitted
+        assert_eq!(acai.engine.registry.count(), 1);
+    }
+
+    #[test]
+    fn replay_reruns_downstream_jobs_against_latest_input() {
+        let acai = seeded();
+        two_stage().run(&acai.engine, P, U).unwrap();
+
+        // upstream data changes: new version of /raw and of the file set
+        acai.datalake.storage.upload(P, &[("/raw", b"raw-v2")]).unwrap();
+        acai.datalake.filesets.create(P, "raw", &["/raw"], "u").unwrap();
+
+        let replayed = replay_downstream(&acai.engine, P, U, "raw").unwrap();
+        assert_eq!(replayed.len(), 2, "both downstream jobs rerun");
+        for id in &replayed {
+            assert_eq!(acai.engine.registry.get(*id).unwrap().state, JobState::Finished);
+        }
+        // fresh versions of both artifacts exist
+        assert_eq!(acai.datalake.filesets.latest_version(P, "features"), Some(2));
+        assert_eq!(acai.datalake.filesets.latest_version(P, "model"), Some(2));
+        // the replayed featurize consumed raw (latest = v2... raw:2)
+        let record = acai.engine.registry.get(replayed[0]).unwrap();
+        assert_eq!(record.spec.input_fileset, "raw");
+        let back = acai.datalake.provenance.backward(P, "features", 2);
+        assert!(back.iter().any(|e| e.from == "raw:2"), "{back:?}");
+    }
+
+    #[test]
+    fn replay_with_no_downstream_errors() {
+        let acai = seeded();
+        assert!(replay_downstream(&acai.engine, P, U, "raw").is_err());
+        assert!(replay_downstream(&acai.engine, P, U, "missing").is_err());
+    }
+
+    #[test]
+    fn empty_pipeline_rejected() {
+        let acai = seeded();
+        let p = Pipeline {
+            name: "empty".into(),
+            input_fileset: "raw".into(),
+            stages: vec![],
+        };
+        assert!(p.run(&acai.engine, P, U).is_err());
+    }
+}

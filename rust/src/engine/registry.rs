@@ -1,0 +1,204 @@
+//! Job registry (paper §4.2): the repository of all submitted jobs and
+//! their metadata; assigns job ids and persists records.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::ResourceConfig;
+use crate::error::{AcaiError, Result};
+use crate::ids::{ContainerId, IdGen, JobId, ProjectId, UserId, Version};
+
+use super::lifecycle::JobState;
+
+/// What a client submits.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub project: ProjectId,
+    pub user: UserId,
+    /// Human-readable job name (dashboard).
+    pub name: String,
+    /// Full command, e.g. `python train_mnist.py --epoch 20`.
+    pub command: String,
+    /// Input file set: `name` or `name:version`.
+    pub input_fileset: String,
+    /// Name for the output file set created on success.
+    pub output_fileset: String,
+    pub resources: ResourceConfig,
+}
+
+/// The registry's record of a job.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub id: JobId,
+    pub spec: JobSpec,
+    pub state: JobState,
+    pub submitted_at: f64,
+    pub launched_at: Option<f64>,
+    pub finished_at: Option<f64>,
+    /// Billed runtime (virtual seconds).
+    pub runtime_secs: Option<f64>,
+    /// Billed cost (dollars).
+    pub cost: Option<f64>,
+    pub container: Option<ContainerId>,
+    /// Output file set version created on success.
+    pub output_version: Option<Version>,
+    pub error: Option<String>,
+}
+
+/// The job registry.
+#[derive(Clone, Default)]
+pub struct JobRegistry {
+    jobs: Arc<Mutex<HashMap<JobId, JobRecord>>>,
+    ids: Arc<IdGen>,
+}
+
+impl JobRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Assign an id and persist the record (state: Queued).
+    pub fn register(&self, spec: JobSpec, now: f64) -> JobId {
+        let id = JobId(self.ids.next());
+        let record = JobRecord {
+            id,
+            spec,
+            state: JobState::Queued,
+            submitted_at: now,
+            launched_at: None,
+            finished_at: None,
+            runtime_secs: None,
+            cost: None,
+            container: None,
+            output_version: None,
+            error: None,
+        };
+        self.jobs.lock().unwrap().insert(id, record);
+        id
+    }
+
+    pub fn get(&self, id: JobId) -> Result<JobRecord> {
+        self.jobs
+            .lock()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| AcaiError::not_found(format!("{id}")))
+    }
+
+    /// Checked state transition + arbitrary record mutation.
+    pub fn update(
+        &self,
+        id: JobId,
+        to: Option<JobState>,
+        f: impl FnOnce(&mut JobRecord),
+    ) -> Result<JobRecord> {
+        let mut jobs = self.jobs.lock().unwrap();
+        let record = jobs
+            .get_mut(&id)
+            .ok_or_else(|| AcaiError::not_found(format!("{id}")))?;
+        if let Some(to) = to {
+            record.state = record.state.transition(to)?;
+        }
+        f(record);
+        Ok(record.clone())
+    }
+
+    /// Jobs of a (project, user), submission-ordered.
+    pub fn list(&self, project: ProjectId, user: Option<UserId>) -> Vec<JobRecord> {
+        let jobs = self.jobs.lock().unwrap();
+        let mut out: Vec<JobRecord> = jobs
+            .values()
+            .filter(|j| j.spec.project == project && user.map_or(true, |u| j.spec.user == u))
+            .cloned()
+            .collect();
+        out.sort_by_key(|j| j.id);
+        out
+    }
+
+    /// All non-terminal jobs (engine idle check).
+    pub fn active_jobs(&self) -> Vec<JobId> {
+        self.jobs
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|j| !j.state.is_terminal())
+            .map(|j| j.id)
+            .collect()
+    }
+
+    pub fn count(&self) -> usize {
+        self.jobs.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> JobSpec {
+        JobSpec {
+            project: ProjectId(1),
+            user: UserId(2),
+            name: "train".into(),
+            command: "python train_mnist.py --epoch 1".into(),
+            input_fileset: "mnist".into(),
+            output_fileset: "model".into(),
+            resources: ResourceConfig::new(1.0, 1024),
+        }
+    }
+
+    #[test]
+    fn register_assigns_unique_ids_and_queued_state() {
+        let r = JobRegistry::new();
+        let a = r.register(spec(), 0.0);
+        let b = r.register(spec(), 1.0);
+        assert_ne!(a, b);
+        assert_eq!(r.get(a).unwrap().state, JobState::Queued);
+        assert_eq!(r.get(b).unwrap().submitted_at, 1.0);
+    }
+
+    #[test]
+    fn update_enforces_lifecycle() {
+        let r = JobRegistry::new();
+        let id = r.register(spec(), 0.0);
+        r.update(id, Some(JobState::Launching), |_| {}).unwrap();
+        r.update(id, Some(JobState::Running), |_| {}).unwrap();
+        let rec = r
+            .update(id, Some(JobState::Finished), |j| {
+                j.runtime_secs = Some(12.0);
+                j.cost = Some(0.01);
+            })
+            .unwrap();
+        assert_eq!(rec.runtime_secs, Some(12.0));
+        // terminal is a sink
+        assert!(r.update(id, Some(JobState::Running), |_| {}).is_err());
+    }
+
+    #[test]
+    fn list_filters_by_project_and_user() {
+        let r = JobRegistry::new();
+        let mut s2 = spec();
+        s2.user = UserId(9);
+        r.register(spec(), 0.0);
+        r.register(s2, 0.0);
+        assert_eq!(r.list(ProjectId(1), None).len(), 2);
+        assert_eq!(r.list(ProjectId(1), Some(UserId(9))).len(), 1);
+        assert!(r.list(ProjectId(5), None).is_empty());
+    }
+
+    #[test]
+    fn active_jobs_excludes_terminal() {
+        let r = JobRegistry::new();
+        let a = r.register(spec(), 0.0);
+        let b = r.register(spec(), 0.0);
+        r.update(a, Some(JobState::Killed), |_| {}).unwrap();
+        assert_eq!(r.active_jobs(), vec![b]);
+    }
+
+    #[test]
+    fn missing_job_is_not_found() {
+        let r = JobRegistry::new();
+        assert_eq!(r.get(JobId(99)).unwrap_err().status(), 404);
+    }
+}

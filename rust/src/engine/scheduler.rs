@@ -1,0 +1,229 @@
+//! Job scheduler (paper §3.3, §4.2): one FIFO queue per (project, user),
+//! quota-based launching.
+//!
+//! A (project, user) tuple may have at most `k` jobs in launching or
+//! running state — "the system cannot be overflowed by jobs from a
+//! single user".  Queues are drained FIFO; draining round-robins across
+//! tuples so no tuple starves another.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::ids::{JobId, ProjectId, UserId};
+
+/// The scheduling key: the paper's (project, user) tuple.
+pub type QueueKey = (ProjectId, UserId);
+
+#[derive(Default)]
+struct Inner {
+    queues: HashMap<QueueKey, VecDeque<JobId>>,
+    /// Jobs currently holding a quota slot (launching + running).
+    active: HashMap<QueueKey, usize>,
+    /// Round-robin cursor over keys.
+    order: Vec<QueueKey>,
+    cursor: usize,
+}
+
+/// The scheduler.
+#[derive(Clone)]
+pub struct Scheduler {
+    inner: Arc<Mutex<Inner>>,
+    /// Quota `k`.
+    pub quota_k: usize,
+}
+
+impl Scheduler {
+    pub fn new(quota_k: usize) -> Self {
+        assert!(quota_k >= 1);
+        Self {
+            inner: Arc::new(Mutex::new(Inner::default())),
+            quota_k,
+        }
+    }
+
+    /// Enqueue a submitted job.
+    pub fn enqueue(&self, key: QueueKey, job: JobId) {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.queues.contains_key(&key) {
+            inner.order.push(key);
+        }
+        inner.queues.entry(key).or_default().push_back(job);
+    }
+
+    /// Put a job back at the *front* of its queue (cluster saturated
+    /// during launch) without losing FIFO order.
+    pub fn requeue_front(&self, key: QueueKey, job: JobId) {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.queues.contains_key(&key) {
+            inner.order.push(key);
+        }
+        let n = inner.active.entry(key).or_default();
+        *n = n.saturating_sub(1);
+        inner.queues.entry(key).or_default().push_front(job);
+    }
+
+    /// Pop every job that may launch now (quota permitting), claiming a
+    /// quota slot for each.  Round-robin across (project, user) tuples.
+    pub fn launchable(&self) -> Vec<(QueueKey, JobId)> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        if inner.order.is_empty() {
+            return out;
+        }
+        let nkeys = inner.order.len();
+        let mut stalled = 0usize;
+        while stalled < nkeys {
+            let cursor = inner.cursor % nkeys;
+            let key = inner.order[cursor];
+            inner.cursor = (inner.cursor + 1) % nkeys;
+            let active = *inner.active.get(&key).unwrap_or(&0);
+            let popped = if active < self.quota_k {
+                inner.queues.get_mut(&key).and_then(|q| q.pop_front())
+            } else {
+                None
+            };
+            match popped {
+                Some(job) => {
+                    *inner.active.entry(key).or_default() += 1;
+                    out.push((key, job));
+                    stalled = 0;
+                }
+                None => stalled += 1,
+            }
+        }
+        out
+    }
+
+    /// A job holding a slot reached a terminal state.
+    pub fn on_terminal(&self, key: QueueKey) {
+        let mut inner = self.inner.lock().unwrap();
+        let n = inner.active.entry(key).or_default();
+        *n = n.saturating_sub(1);
+    }
+
+    /// Remove a queued job (kill before launch). True if it was queued.
+    pub fn remove_queued(&self, key: QueueKey, job: JobId) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(q) = inner.queues.get_mut(&key) {
+            if let Some(pos) = q.iter().position(|j| *j == job) {
+                q.remove(pos);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Queued depth of a tuple.
+    pub fn queued(&self, key: QueueKey) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .queues
+            .get(&key)
+            .map(|q| q.len())
+            .unwrap_or(0)
+    }
+
+    /// Active (launching+running) count of a tuple.
+    pub fn active(&self, key: QueueKey) -> usize {
+        *self.inner.lock().unwrap().active.get(&key).unwrap_or(&0)
+    }
+
+    /// Anything queued anywhere?
+    pub fn any_queued(&self) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .queues
+            .values()
+            .any(|q| !q.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const K1: QueueKey = (ProjectId(1), UserId(1));
+    const K2: QueueKey = (ProjectId(1), UserId(2));
+
+    #[test]
+    fn fifo_order_within_a_tuple() {
+        let s = Scheduler::new(8);
+        for i in 1..=5 {
+            s.enqueue(K1, JobId(i));
+        }
+        let launched: Vec<u64> = s.launchable().into_iter().map(|(_, j)| j.raw()).collect();
+        assert_eq!(launched, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn quota_k_caps_active_jobs() {
+        let s = Scheduler::new(2);
+        for i in 1..=5 {
+            s.enqueue(K1, JobId(i));
+        }
+        assert_eq!(s.launchable().len(), 2);
+        assert_eq!(s.active(K1), 2);
+        assert_eq!(s.queued(K1), 3);
+        // nothing more until a terminal event
+        assert!(s.launchable().is_empty());
+        s.on_terminal(K1);
+        let next = s.launchable();
+        assert_eq!(next.len(), 1);
+        assert_eq!(next[0].1, JobId(3));
+    }
+
+    #[test]
+    fn tuples_do_not_starve_each_other() {
+        let s = Scheduler::new(1);
+        for i in 1..=3 {
+            s.enqueue(K1, JobId(i));
+        }
+        s.enqueue(K2, JobId(10));
+        let launched = s.launchable();
+        // one from each tuple (quota 1 each)
+        assert_eq!(launched.len(), 2);
+        let keys: Vec<QueueKey> = launched.iter().map(|(k, _)| *k).collect();
+        assert!(keys.contains(&K1) && keys.contains(&K2));
+    }
+
+    #[test]
+    fn requeue_front_preserves_order_and_slot() {
+        let s = Scheduler::new(8);
+        s.enqueue(K1, JobId(1));
+        s.enqueue(K1, JobId(2));
+        let l = s.launchable();
+        assert_eq!(l.len(), 2);
+        // cluster was full for job 1: back to the front
+        s.requeue_front(K1, JobId(1));
+        assert_eq!(s.active(K1), 1);
+        let l2 = s.launchable();
+        assert_eq!(l2, vec![(K1, JobId(1))]);
+    }
+
+    #[test]
+    fn remove_queued_for_kill() {
+        let s = Scheduler::new(8);
+        s.enqueue(K1, JobId(1));
+        s.enqueue(K1, JobId(2));
+        assert!(s.remove_queued(K1, JobId(2)));
+        assert!(!s.remove_queued(K1, JobId(2)));
+        let launched: Vec<JobId> = s.launchable().into_iter().map(|(_, j)| j).collect();
+        assert_eq!(launched, vec![JobId(1)]);
+    }
+
+    #[test]
+    fn round_robin_is_fair_under_contention() {
+        let s = Scheduler::new(4);
+        for i in 0..20 {
+            s.enqueue(K1, JobId(100 + i));
+            s.enqueue(K2, JobId(200 + i));
+        }
+        let launched = s.launchable();
+        let k1 = launched.iter().filter(|(k, _)| *k == K1).count();
+        let k2 = launched.iter().filter(|(k, _)| *k == K2).count();
+        assert_eq!(k1, 4);
+        assert_eq!(k2, 4);
+    }
+}

@@ -1,0 +1,107 @@
+//! Crate-wide error type.
+//!
+//! Every service returns [`Result`]; errors carry enough context to map to
+//! an HTTP status in [`crate::httpd`] handlers (see [`AcaiError::status`]).
+
+use thiserror::Error;
+
+/// Unified error type for all ACAI services and substrates.
+#[derive(Debug, Error)]
+pub enum AcaiError {
+    /// Authentication failed (unknown/expired token).
+    #[error("unauthorized: {0}")]
+    Unauthorized(String),
+
+    /// Authenticated but not allowed (e.g. non-admin creating users).
+    #[error("forbidden: {0}")]
+    Forbidden(String),
+
+    /// Entity lookup failed.
+    #[error("not found: {0}")]
+    NotFound(String),
+
+    /// Entity already exists / version conflict / illegal state change.
+    #[error("conflict: {0}")]
+    Conflict(String),
+
+    /// Malformed request, spec string, or parameter.
+    #[error("invalid: {0}")]
+    Invalid(String),
+
+    /// Resource limits exceeded (quota, cluster capacity, budget).
+    #[error("resources exhausted: {0}")]
+    Exhausted(String),
+
+    /// Constraint-satisfying configuration does not exist.
+    #[error("infeasible: {0}")]
+    Infeasible(String),
+
+    /// Underlying storage failure (simulated or real I/O).
+    #[error("storage: {0}")]
+    Storage(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    /// JSON encode/decode failure.
+    #[error("json: {0}")]
+    Json(String),
+
+    /// Raw I/O error.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl AcaiError {
+    /// Map to an HTTP status code (used by the credential server edge).
+    pub fn status(&self) -> u16 {
+        match self {
+            AcaiError::Unauthorized(_) => 401,
+            AcaiError::Forbidden(_) => 403,
+            AcaiError::NotFound(_) => 404,
+            AcaiError::Conflict(_) => 409,
+            AcaiError::Invalid(_) | AcaiError::Json(_) => 400,
+            AcaiError::Exhausted(_) => 429,
+            AcaiError::Infeasible(_) => 422,
+            AcaiError::Storage(_) | AcaiError::Runtime(_) | AcaiError::Io(_) => 500,
+        }
+    }
+
+    /// Shorthand constructors.
+    pub fn not_found(what: impl Into<String>) -> Self {
+        AcaiError::NotFound(what.into())
+    }
+    pub fn invalid(what: impl Into<String>) -> Self {
+        AcaiError::Invalid(what.into())
+    }
+    pub fn conflict(what: impl Into<String>) -> Self {
+        AcaiError::Conflict(what.into())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = AcaiError> = std::result::Result<T, E>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn statuses_map_like_http() {
+        assert_eq!(AcaiError::Unauthorized("x".into()).status(), 401);
+        assert_eq!(AcaiError::Forbidden("x".into()).status(), 403);
+        assert_eq!(AcaiError::not_found("x").status(), 404);
+        assert_eq!(AcaiError::conflict("x").status(), 409);
+        assert_eq!(AcaiError::invalid("x").status(), 400);
+        assert_eq!(AcaiError::Exhausted("x".into()).status(), 429);
+        assert_eq!(AcaiError::Infeasible("x".into()).status(), 422);
+        assert_eq!(AcaiError::Storage("x".into()).status(), 500);
+    }
+
+    #[test]
+    fn display_includes_context() {
+        let e = AcaiError::not_found("file /data/train.json");
+        assert!(e.to_string().contains("/data/train.json"));
+    }
+}

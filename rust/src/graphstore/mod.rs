@@ -1,0 +1,295 @@
+//! Property DAG store — the Neo4j analogue (paper §4.5.2).
+//!
+//! Nodes are file sets; directed, named relationships are actions (job
+//! executions or file-set creations).  Per the paper, the graph store
+//! keeps only ids (metadata lives in the [`crate::docstore`]); the three
+//! primary APIs are whole-graph retrieval and single-edge forward /
+//! backward traversal, plus full forward/backward closure for the
+//! dashboard's interactive provenance tracing.
+//!
+//! The provenance graph must stay acyclic (file sets cannot depend on
+//! their own descendants); [`GraphStore::add_edge`] rejects edges that
+//! would close a cycle.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{AcaiError, Result};
+
+/// A directed, labeled edge (action).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Edge {
+    /// Source node (input file set).
+    pub from: String,
+    /// Destination node (output file set).
+    pub to: String,
+    /// Action id ("job-<n>" or "create-<n>").
+    pub action: String,
+    /// Action kind ("job_execution" | "fileset_creation").
+    pub kind: String,
+}
+
+#[derive(Default)]
+struct Inner {
+    nodes: HashSet<String>,
+    edges: Vec<Edge>,
+    /// Adjacency: node -> outgoing edge indexes / incoming edge indexes.
+    out: HashMap<String, Vec<usize>>,
+    inc: HashMap<String, Vec<usize>>,
+}
+
+/// The graph store handle.
+#[derive(Clone, Default)]
+pub struct GraphStore {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl GraphStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a node (idempotent).
+    pub fn add_node(&self, id: &str) {
+        self.inner.lock().unwrap().nodes.insert(id.to_string());
+    }
+
+    pub fn has_node(&self, id: &str) -> bool {
+        self.inner.lock().unwrap().nodes.contains(id)
+    }
+
+    /// Add a directed edge; creates endpoints as needed.  Fails if the
+    /// edge would close a cycle (provenance must stay a DAG).
+    pub fn add_edge(&self, from: &str, to: &str, action: &str, kind: &str) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if from != to && Self::reaches(&inner, to, from) {
+            return Err(AcaiError::conflict(format!(
+                "edge {from} -> {to} would create a provenance cycle"
+            )));
+        }
+        if from == to {
+            return Err(AcaiError::conflict(format!("self-loop on {from}")));
+        }
+        inner.nodes.insert(from.to_string());
+        inner.nodes.insert(to.to_string());
+        let idx = inner.edges.len();
+        inner.edges.push(Edge {
+            from: from.to_string(),
+            to: to.to_string(),
+            action: action.to_string(),
+            kind: kind.to_string(),
+        });
+        inner.out.entry(from.to_string()).or_default().push(idx);
+        inner.inc.entry(to.to_string()).or_default().push(idx);
+        Ok(())
+    }
+
+    /// Is `to` reachable from `from` following edge direction?
+    fn reaches(inner: &Inner, from: &str, to: &str) -> bool {
+        let mut seen = HashSet::new();
+        let mut queue = VecDeque::from([from.to_string()]);
+        while let Some(n) = queue.pop_front() {
+            if n == to {
+                return true;
+            }
+            if !seen.insert(n.clone()) {
+                continue;
+            }
+            if let Some(edges) = inner.out.get(&n) {
+                for &e in edges {
+                    queue.push_back(inner.edges[e].to.clone());
+                }
+            }
+        }
+        false
+    }
+
+    /// API 1 (paper): the whole graph — (nodes, edges).
+    pub fn whole_graph(&self) -> (Vec<String>, Vec<Edge>) {
+        let inner = self.inner.lock().unwrap();
+        let mut nodes: Vec<_> = inner.nodes.iter().cloned().collect();
+        nodes.sort();
+        (nodes, inner.edges.clone())
+    }
+
+    /// API 2 (paper): traverse forward by one edge from a node.
+    pub fn forward(&self, id: &str) -> Vec<Edge> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .out
+            .get(id)
+            .map(|idxs| idxs.iter().map(|&i| inner.edges[i].clone()).collect())
+            .unwrap_or_default()
+    }
+
+    /// API 3 (paper): traverse backward by one edge from a node.
+    pub fn backward(&self, id: &str) -> Vec<Edge> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .inc
+            .get(id)
+            .map(|idxs| idxs.iter().map(|&i| inner.edges[i].clone()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Full downstream closure (dashboard "trace forward").
+    pub fn descendants(&self, id: &str) -> Vec<String> {
+        self.closure(id, true)
+    }
+
+    /// Full upstream closure (dashboard "trace backward") — the lineage
+    /// needed to reproduce a file set.
+    pub fn ancestors(&self, id: &str) -> Vec<String> {
+        self.closure(id, false)
+    }
+
+    fn closure(&self, id: &str, forward: bool) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        let mut seen = HashSet::new();
+        let mut queue = VecDeque::from([id.to_string()]);
+        while let Some(n) = queue.pop_front() {
+            let adj = if forward { &inner.out } else { &inner.inc };
+            if let Some(edges) = adj.get(&n) {
+                for &e in edges {
+                    let next = if forward {
+                        &inner.edges[e].to
+                    } else {
+                        &inner.edges[e].from
+                    };
+                    if seen.insert(next.clone()) {
+                        queue.push_back(next.clone());
+                    }
+                }
+            }
+        }
+        let mut out: Vec<_> = seen.into_iter().collect();
+        out.sort();
+        out
+    }
+
+    /// Topological order of all nodes (valid because the graph is a DAG).
+    /// Used by workflow replay (§7.1.3 future work — implemented here).
+    pub fn topo_order(&self) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        let mut indeg: HashMap<&str, usize> =
+            inner.nodes.iter().map(|n| (n.as_str(), 0)).collect();
+        for e in &inner.edges {
+            *indeg.entry(e.to.as_str()).or_insert(0) += 1;
+        }
+        let mut ready: Vec<&str> = indeg
+            .iter()
+            .filter(|(_, d)| **d == 0)
+            .map(|(n, _)| *n)
+            .collect();
+        ready.sort();
+        let mut out = Vec::with_capacity(indeg.len());
+        let mut ready: VecDeque<&str> = ready.into();
+        while let Some(n) = ready.pop_front() {
+            out.push(n.to_string());
+            if let Some(edges) = inner.out.get(n) {
+                let mut newly: Vec<&str> = vec![];
+                for &e in edges {
+                    let t = inner.edges[e].to.as_str();
+                    let d = indeg.get_mut(t).unwrap();
+                    *d -= 1;
+                    if *d == 0 {
+                        newly.push(t);
+                    }
+                }
+                newly.sort();
+                ready.extend(newly);
+            }
+        }
+        out
+    }
+
+    /// (node count, edge count).
+    pub fn stats(&self) -> (usize, usize) {
+        let inner = self.inner.lock().unwrap();
+        (inner.nodes.len(), inner.edges.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain() -> GraphStore {
+        // raw -> (job-1) -> features -> (job-2) -> model
+        //                features -> (create-1) -> features-val
+        let g = GraphStore::new();
+        g.add_edge("raw", "features", "job-1", "job_execution").unwrap();
+        g.add_edge("features", "model", "job-2", "job_execution").unwrap();
+        g.add_edge("features", "features-val", "create-1", "fileset_creation")
+            .unwrap();
+        g
+    }
+
+    #[test]
+    fn whole_graph_lists_everything() {
+        let g = chain();
+        let (nodes, edges) = g.whole_graph();
+        assert_eq!(nodes, ["features", "features-val", "model", "raw"]);
+        assert_eq!(edges.len(), 3);
+    }
+
+    #[test]
+    fn forward_and_backward_are_single_step() {
+        let g = chain();
+        let fwd = g.forward("features");
+        assert_eq!(fwd.len(), 2);
+        let back = g.backward("features");
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].action, "job-1");
+    }
+
+    #[test]
+    fn closures_trace_full_lineage() {
+        let g = chain();
+        assert_eq!(g.descendants("raw"), ["features", "features-val", "model"]);
+        assert_eq!(g.ancestors("model"), ["features", "raw"]);
+        assert!(g.descendants("model").is_empty());
+    }
+
+    #[test]
+    fn cycles_are_rejected() {
+        let g = chain();
+        let err = g.add_edge("model", "raw", "job-3", "job_execution").unwrap_err();
+        assert_eq!(err.status(), 409);
+        // graph unchanged
+        assert_eq!(g.stats(), (4, 3));
+    }
+
+    #[test]
+    fn self_loops_are_rejected() {
+        let g = GraphStore::new();
+        assert!(g.add_edge("a", "a", "job-1", "job_execution").is_err());
+    }
+
+    #[test]
+    fn parallel_actions_between_same_nodes_are_allowed() {
+        let g = GraphStore::new();
+        g.add_edge("a", "b", "job-1", "job_execution").unwrap();
+        g.add_edge("a", "b", "job-2", "job_execution").unwrap();
+        assert_eq!(g.forward("a").len(), 2);
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let g = chain();
+        let order = g.topo_order();
+        let pos = |n: &str| order.iter().position(|x| x == n).unwrap();
+        assert!(pos("raw") < pos("features"));
+        assert!(pos("features") < pos("model"));
+        assert!(pos("features") < pos("features-val"));
+        assert_eq!(order.len(), 4);
+    }
+
+    #[test]
+    fn add_node_is_idempotent() {
+        let g = GraphStore::new();
+        g.add_node("x");
+        g.add_node("x");
+        assert_eq!(g.stats().0, 1);
+    }
+}

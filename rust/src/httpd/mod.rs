@@ -1,0 +1,417 @@
+//! Minimal HTTP/1.1 server + client over `std::net` — the microservice
+//! plumbing (paper §4.1: an Apache reverse proxy redirects external
+//! HTTPS to the credential server; services speak plain HTTP internally).
+//!
+//! One OS thread per connection, `Connection: close` semantics, bodies
+//! framed by `Content-Length`.  Enough surface for the ACAI REST edge
+//! (`acai serve`) and the credential-server redirect flow, with hard
+//! input limits so a misbehaving client cannot wedge a service.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::error::{AcaiError, Result};
+use crate::json::Json;
+
+/// Maximum header block size (16 KiB) and body size (32 MiB).
+const MAX_HEADER_BYTES: usize = 16 * 1024;
+const MAX_BODY_BYTES: usize = 32 * 1024 * 1024;
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// Query string (after '?'), raw.
+    pub query: String,
+    pub headers: HashMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Header lookup, case-insensitive.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+
+    /// Parse the body as JSON.
+    pub fn json(&self) -> Result<Json> {
+        let text = std::str::from_utf8(&self.body)
+            .map_err(|_| AcaiError::invalid("body is not utf-8"))?;
+        crate::json::parse(text)
+    }
+}
+
+/// An HTTP response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn new(status: u16) -> Self {
+        Self {
+            status,
+            headers: vec![],
+            body: vec![],
+        }
+    }
+
+    /// 200 with a JSON body.
+    pub fn json(value: &Json) -> Self {
+        let mut r = Self::new(200);
+        r.headers
+            .push(("content-type".into(), "application/json".into()));
+        r.body = value.encode().into_bytes();
+        r
+    }
+
+    /// Error response with a JSON `{"error": ...}` body.
+    pub fn error(e: &AcaiError) -> Self {
+        let mut r = Self::new(e.status());
+        r.headers
+            .push(("content-type".into(), "application/json".into()));
+        r.body = Json::obj()
+            .field("error", e.to_string())
+            .build()
+            .encode()
+            .into_bytes();
+        r
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            201 => "Created",
+            204 => "No Content",
+            400 => "Bad Request",
+            401 => "Unauthorized",
+            403 => "Forbidden",
+            404 => "Not Found",
+            409 => "Conflict",
+            422 => "Unprocessable Entity",
+            429 => "Too Many Requests",
+            _ => "Internal Server Error",
+        }
+    }
+}
+
+/// Request handler.
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// A running HTTP server; shuts down on drop.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind 127.0.0.1 on an ephemeral (or given) port and serve.
+    pub fn serve(port: u16, handler: Handler) -> Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let thread = std::thread::spawn(move || {
+            while !stop2.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let handler = handler.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_connection(stream, handler);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(Server {
+            addr,
+            stop,
+            thread: Some(thread),
+        })
+    }
+
+    /// The bound address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, handler: Handler) -> Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let request = match read_request(&mut reader) {
+        Ok(r) => r,
+        Err(e) => {
+            write_response(&stream, &Response::error(&e))?;
+            return Ok(());
+        }
+    };
+    let response = handler(&request);
+    write_response(&stream, &response)
+}
+
+fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Request> {
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.trim_end().splitn(3, ' ');
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty())
+        .ok_or_else(|| AcaiError::invalid("empty request line"))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| AcaiError::invalid("missing request target"))?;
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+
+    let mut headers = HashMap::new();
+    let mut total = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        total += h.len();
+        if total > MAX_HEADER_BYTES {
+            return Err(AcaiError::invalid("header block too large"));
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+        }
+    }
+
+    let len: usize = headers
+        .get("content-length")
+        .map(|v| v.parse().map_err(|_| AcaiError::invalid("bad content-length")))
+        .transpose()?
+        .unwrap_or(0);
+    if len > MAX_BODY_BYTES {
+        return Err(AcaiError::invalid("body too large"));
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok(Request {
+        method,
+        path,
+        query,
+        headers,
+        body,
+    })
+}
+
+fn write_response(mut stream: &TcpStream, r: &Response) -> Result<()> {
+    let mut head = format!("HTTP/1.1 {} {}\r\n", r.status, r.reason());
+    for (k, v) in &r.headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str(&format!("content-length: {}\r\nconnection: close\r\n\r\n", r.body.len()));
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&r.body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Blocking HTTP client request against a local service.
+pub fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> Result<Response> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+    let mut head = format!("{method} {path} HTTP/1.1\r\nhost: {addr}\r\n");
+    for (k, v) in headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str(&format!("content-length: {}\r\n\r\n", body.len()));
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| AcaiError::invalid(format!("bad status line {status_line:?}")))?;
+
+    let mut headers_out = Vec::new();
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim().to_string();
+            if name == "content-length" {
+                len = value
+                    .parse()
+                    .map_err(|_| AcaiError::invalid("bad content-length"))?;
+            }
+            headers_out.push((name, value));
+        }
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok(Response {
+        status,
+        headers: headers_out,
+        body,
+    })
+}
+
+/// GET helper returning parsed JSON.
+pub fn get_json(addr: SocketAddr, path: &str, token: &str) -> Result<Json> {
+    let resp = request(addr, "GET", path, &[("x-acai-token", token)], b"")?;
+    let text = String::from_utf8_lossy(&resp.body).to_string();
+    let v = crate::json::parse(&text)?;
+    if resp.status >= 400 {
+        return Err(AcaiError::Invalid(format!(
+            "HTTP {}: {}",
+            resp.status,
+            v.get("error").and_then(Json::as_str).unwrap_or("?")
+        )));
+    }
+    Ok(v)
+}
+
+/// POST helper sending + returning JSON.
+pub fn post_json(addr: SocketAddr, path: &str, token: &str, body: &Json) -> Result<Json> {
+    let resp = request(
+        addr,
+        "POST",
+        path,
+        &[("x-acai-token", token), ("content-type", "application/json")],
+        body.encode().as_bytes(),
+    )?;
+    let text = String::from_utf8_lossy(&resp.body).to_string();
+    let v = crate::json::parse(&text)?;
+    if resp.status >= 400 {
+        return Err(AcaiError::Invalid(format!(
+            "HTTP {}: {}",
+            resp.status,
+            v.get("error").and_then(Json::as_str).unwrap_or("?")
+        )));
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> Server {
+        Server::serve(
+            0,
+            Arc::new(|req: &Request| {
+                Response::json(
+                    &Json::obj()
+                        .field("method", req.method.as_str())
+                        .field("path", req.path.as_str())
+                        .field("query", req.query.as_str())
+                        .field("len", req.body.len())
+                        .build(),
+                )
+            }),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn request_response_round_trip() {
+        let server = echo_server();
+        let resp = request(server.addr(), "POST", "/jobs?limit=5", &[], b"hello").unwrap();
+        assert_eq!(resp.status, 200);
+        let v = crate::json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(v.get("method").and_then(Json::as_str), Some("POST"));
+        assert_eq!(v.get("path").and_then(Json::as_str), Some("/jobs"));
+        assert_eq!(v.get("query").and_then(Json::as_str), Some("limit=5"));
+        assert_eq!(v.get("len").and_then(Json::as_u64), Some(5));
+    }
+
+    #[test]
+    fn json_helpers_round_trip() {
+        let server = echo_server();
+        let v = post_json(server.addr(), "/x", "tok", &Json::obj().field("a", 1.0).build())
+            .unwrap();
+        assert_eq!(v.get("len").and_then(Json::as_u64), Some(7));
+    }
+
+    #[test]
+    fn concurrent_requests_are_served() {
+        let server = echo_server();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    for _ in 0..5 {
+                        let r = request(addr, "GET", "/", &[], b"").unwrap();
+                        assert_eq!(r.status, 200);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn header_lookup_is_case_insensitive() {
+        let server = Server::serve(
+            0,
+            Arc::new(|req: &Request| {
+                let tok = req.header("X-ACAI-Token").unwrap_or("none").to_string();
+                Response::json(&Json::obj().field("token", tok).build())
+            }),
+        )
+        .unwrap();
+        let resp = request(server.addr(), "GET", "/", &[("x-acai-token", "t-1")], b"").unwrap();
+        let v = crate::json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(v.get("token").and_then(Json::as_str), Some("t-1"));
+    }
+
+    #[test]
+    fn server_shuts_down_on_drop() {
+        let addr = {
+            let server = echo_server();
+            server.addr()
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(TcpStream::connect_timeout(&addr, std::time::Duration::from_millis(200)).is_err());
+    }
+}

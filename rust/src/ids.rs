@@ -1,0 +1,135 @@
+//! Strongly-typed identifiers for every entity in the platform.
+//!
+//! The paper's services key everything on numeric ids (file ids double as
+//! S3 object paths, §4.4.3); newtypes keep them from being mixed up.
+
+use std::fmt;
+
+macro_rules! id_type {
+    ($(#[$doc:meta])* $name:ident, $prefix:expr) => {
+        $(#[$doc])*
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+        pub struct $name(pub u64);
+
+        impl $name {
+            /// Raw numeric value.
+            pub fn raw(self) -> u64 {
+                self.0
+            }
+        }
+
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "{}-{}", $prefix, self.0)
+            }
+        }
+
+        impl std::str::FromStr for $name {
+            type Err = crate::error::AcaiError;
+            fn from_str(s: &str) -> Result<Self, Self::Err> {
+                let want = concat!($prefix, "-");
+                let num = s.strip_prefix(want).ok_or_else(|| {
+                    crate::error::AcaiError::invalid(format!(
+                        "id {s:?} does not start with {want:?}"
+                    ))
+                })?;
+                num.parse::<u64>().map($name).map_err(|e| {
+                    crate::error::AcaiError::invalid(format!("id {s:?}: {e}"))
+                })
+            }
+        }
+    };
+}
+
+id_type!(
+    /// A project: the isolation boundary for data, jobs and users (§3.1).
+    ProjectId, "proj");
+id_type!(
+    /// A user within a project.
+    UserId, "user");
+id_type!(
+    /// A submitted job (one (input, job, output) triplet, immutable).
+    JobId, "job");
+id_type!(
+    /// A stored file (all versions share the path, not the id; each
+    /// uploaded version gets a fresh FileId used as the object-store key).
+    FileId, "file");
+id_type!(
+    /// A file set (a versioned list of (path, version) references).
+    FileSetId, "fset");
+id_type!(
+    /// An upload session (transactional batch upload, §4.4.3).
+    SessionId, "sess");
+id_type!(
+    /// A container provisioned in the cluster.
+    ContainerId, "ctr");
+id_type!(
+    /// A cluster node.
+    NodeId, "node");
+id_type!(
+    /// A profiling template (command template + fitted model).
+    TemplateId, "tmpl");
+
+/// Monotonic id generator (one per platform instance). Ids start at 1.
+#[derive(Debug)]
+pub struct IdGen {
+    next: std::sync::atomic::AtomicU64,
+}
+
+impl Default for IdGen {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl IdGen {
+    pub fn new() -> Self {
+        Self {
+            next: std::sync::atomic::AtomicU64::new(1),
+        }
+    }
+
+    /// Allocate the next raw id.
+    pub fn next(&self) -> u64 {
+        self.next
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+/// A file version number. Versions start at 1 and are dense (no gaps):
+/// the upload-session protocol guarantees failed uploads never burn one.
+pub type Version = u32;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::str::FromStr;
+
+    #[test]
+    fn display_and_parse_round_trip() {
+        let id = JobId(42);
+        assert_eq!(id.to_string(), "job-42");
+        assert_eq!(JobId::from_str("job-42").unwrap(), id);
+    }
+
+    #[test]
+    fn parse_rejects_wrong_prefix() {
+        assert!(JobId::from_str("file-42").is_err());
+        assert!(JobId::from_str("job-abc").is_err());
+        assert!(JobId::from_str("42").is_err());
+    }
+
+    #[test]
+    fn idgen_is_monotonic_and_unique() {
+        let g = IdGen::new();
+        let a = g.next();
+        let b = g.next();
+        let c = g.next();
+        assert!(a < b && b < c);
+    }
+
+    #[test]
+    fn ids_are_ordered_by_value() {
+        assert!(FileId(1) < FileId(2));
+    }
+}

@@ -1,0 +1,107 @@
+//! Minimal JSON codec (serde is not available in the offline vendor set).
+//!
+//! Implements RFC 8259 parsing and serialization for the platform's needs:
+//! artifact manifests, API payloads, metadata documents, and persistence
+//! journals.  Object key order is preserved (insertion order) so encoded
+//! output is deterministic — the kvstore journal relies on that.
+
+mod parse;
+mod value;
+
+pub use parse::parse;
+pub use value::{Json, JsonObject};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_scalars() {
+        for src in ["null", "true", "false", "0", "-1", "3.5", "\"hi\""] {
+            let v = parse(src).unwrap();
+            assert_eq!(parse(&v.encode()).unwrap(), v, "{src}");
+        }
+    }
+
+    #[test]
+    fn round_trips_nested() {
+        let src = r#"{"a": [1, 2.5, {"b": null}], "c": "x\"y\\z", "d": {}}"#;
+        let v = parse(src).unwrap();
+        let enc = v.encode();
+        assert_eq!(parse(&enc).unwrap(), v);
+    }
+
+    #[test]
+    fn preserves_key_order() {
+        let v = parse(r#"{"z": 1, "a": 2, "m": 3}"#).unwrap();
+        let keys: Vec<_> = v.as_object().unwrap().keys().collect();
+        assert_eq!(keys, ["z", "a", "m"]);
+    }
+
+    #[test]
+    fn parses_unicode_escapes() {
+        let v = parse(r#""Aé\n\t""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "Aé\n\t");
+    }
+
+    #[test]
+    fn parses_surrogate_pairs() {
+        let v = parse(r#""😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "😀");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        for src in ["", "{", "[1,", "{\"a\"}", "tru", "01", "1.e", "\"\\x\"", "[1]extra"] {
+            assert!(parse(src).is_err(), "{src:?} should fail");
+        }
+    }
+
+    #[test]
+    fn encodes_escapes() {
+        let v = Json::Str("a\"b\\c\nd\u{1}".into());
+        assert_eq!(parse(&v.encode()).unwrap(), v);
+    }
+
+    #[test]
+    fn builder_api() {
+        let v = Json::obj()
+            .field("name", "mnist")
+            .field("epochs", 20.0)
+            .field("ok", true)
+            .field("tags", Json::Arr(vec![Json::from("a"), Json::from("b")]))
+            .build();
+        assert_eq!(v.get("name").and_then(Json::as_str), Some("mnist"));
+        assert_eq!(v.get("epochs").and_then(Json::as_f64), Some(20.0));
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("tags").and_then(Json::as_array).map(|a| a.len()), Some(2));
+    }
+
+    #[test]
+    fn number_precision_survives() {
+        let v = parse("1234567890.123").unwrap();
+        assert!((v.as_f64().unwrap() - 1234567890.123).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deep_nesting_within_limit() {
+        let mut s = String::new();
+        for _ in 0..100 {
+            s.push('[');
+        }
+        s.push('1');
+        for _ in 0..100 {
+            s.push(']');
+        }
+        assert!(parse(&s).is_ok());
+    }
+
+    #[test]
+    fn rejects_pathological_nesting() {
+        let mut s = String::new();
+        for _ in 0..100_000 {
+            s.push('[');
+        }
+        assert!(parse(&s).is_err());
+    }
+}

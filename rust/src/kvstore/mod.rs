@@ -1,0 +1,372 @@
+//! Embedded persistent table store — the MySQL analogue (paper §4.4.1).
+//!
+//! The paper keeps the file hierarchy, file versions, file sets and upload
+//! sessions in MySQL tables.  This store provides what those paths need:
+//!
+//! - named tables of JSON rows keyed by a string primary key;
+//! - read-modify-write under a per-database lock (the "server-side lock"
+//!   the paper uses to guarantee sequential version-number assignment);
+//! - optional append-only journal persistence with crash recovery
+//!   (sessions survive a server restart, §4.4.3).
+//!
+//! The journal is a line-oriented log of JSON records; replaying it
+//! rebuilds the tables.  `reopen()` in tests simulates a crash/restart.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::error::{AcaiError, Result};
+use crate::json::{parse, Json};
+
+#[derive(Default)]
+struct Inner {
+    tables: BTreeMap<String, BTreeMap<String, Json>>,
+    journal: Option<std::fs::File>,
+    journal_path: Option<PathBuf>,
+    writes: u64,
+}
+
+/// The embedded store handle.
+#[derive(Clone, Default)]
+pub struct KvStore {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl KvStore {
+    /// Purely in-memory store.
+    pub fn in_memory() -> Self {
+        Self::default()
+    }
+
+    /// Journal-backed store; replays an existing journal on open.
+    pub fn open(path: impl Into<PathBuf>) -> Result<Self> {
+        let path = path.into();
+        let mut tables: BTreeMap<String, BTreeMap<String, Json>> = BTreeMap::new();
+        if path.exists() {
+            let f = std::fs::File::open(&path)?;
+            for (lineno, line) in BufReader::new(f).lines().enumerate() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let rec = parse(&line).map_err(|e| {
+                    AcaiError::Storage(format!(
+                        "journal {path:?} line {}: {e}",
+                        lineno + 1
+                    ))
+                })?;
+                let table = rec
+                    .get("t")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| AcaiError::Storage("journal: missing table".into()))?;
+                let key = rec
+                    .get("k")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| AcaiError::Storage("journal: missing key".into()))?;
+                match rec.get("v") {
+                    Some(Json::Null) | None => {
+                        tables.entry(table.into()).or_default().remove(key);
+                    }
+                    Some(v) => {
+                        tables
+                            .entry(table.into())
+                            .or_default()
+                            .insert(key.into(), v.clone());
+                    }
+                }
+            }
+        }
+        let journal = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)?;
+        Ok(Self {
+            inner: Arc::new(Mutex::new(Inner {
+                tables,
+                journal: Some(journal),
+                journal_path: Some(path),
+                writes: 0,
+            })),
+        })
+    }
+
+    /// Simulate a crash + restart: drop in-memory state and replay.
+    pub fn reopen(&self) -> Result<Self> {
+        let path = self
+            .inner
+            .lock()
+            .unwrap()
+            .journal_path
+            .clone()
+            .ok_or_else(|| AcaiError::Storage("in-memory store cannot reopen".into()))?;
+        Self::open(path)
+    }
+
+    fn log(inner: &mut Inner, table: &str, key: &str, value: Option<&Json>) -> Result<()> {
+        inner.writes += 1;
+        if let Some(journal) = inner.journal.as_mut() {
+            let rec = Json::obj()
+                .field("t", table)
+                .field("k", key)
+                .field("v", value.cloned().unwrap_or(Json::Null))
+                .build();
+            writeln!(journal, "{}", rec.encode())?;
+        }
+        Ok(())
+    }
+
+    /// Insert or replace a row.
+    pub fn put(&self, table: &str, key: &str, value: Json) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        Self::log(&mut inner, table, key, Some(&value))?;
+        inner
+            .tables
+            .entry(table.to_string())
+            .or_default()
+            .insert(key.to_string(), value);
+        Ok(())
+    }
+
+    /// Fetch a row.
+    pub fn get(&self, table: &str, key: &str) -> Option<Json> {
+        self.inner
+            .lock()
+            .unwrap()
+            .tables
+            .get(table)
+            .and_then(|t| t.get(key))
+            .cloned()
+    }
+
+    /// Delete a row; true if it existed.
+    pub fn delete(&self, table: &str, key: &str) -> Result<bool> {
+        let mut inner = self.inner.lock().unwrap();
+        Self::log(&mut inner, table, key, None)?;
+        Ok(inner
+            .tables
+            .get_mut(table)
+            .map(|t| t.remove(key).is_some())
+            .unwrap_or(false))
+    }
+
+    /// All (key, row) pairs of a table, key-ordered.
+    pub fn scan(&self, table: &str) -> Vec<(String, Json)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .tables
+            .get(table)
+            .map(|t| t.iter().map(|(k, v)| (k.clone(), v.clone())).collect())
+            .unwrap_or_default()
+    }
+
+    /// (key, row) pairs with keys in [`lo`, `hi`) — range scan on the PK.
+    pub fn scan_range(&self, table: &str, lo: &str, hi: &str) -> Vec<(String, Json)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .tables
+            .get(table)
+            .map(|t| {
+                t.range(lo.to_string()..hi.to_string())
+                    .map(|(k, v)| (k.clone(), v.clone()))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Keys with a given prefix (used for hierarchy listings).
+    pub fn scan_prefix(&self, table: &str, prefix: &str) -> Vec<(String, Json)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .tables
+            .get(table)
+            .map(|t| {
+                t.range(prefix.to_string()..)
+                    .take_while(|(k, _)| k.starts_with(prefix))
+                    .map(|(k, v)| (k.clone(), v.clone()))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Row count.
+    pub fn count(&self, table: &str) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .tables
+            .get(table)
+            .map(|t| t.len())
+            .unwrap_or(0)
+    }
+
+    /// Run `f` under the database lock — the paper's "server-side lock"
+    /// for sequential version assignment.  `f` gets a transaction handle
+    /// with the same ops; everything it does is atomic w.r.t. other
+    /// `put`/`transact` callers.
+    pub fn transact<T>(&self, f: impl FnOnce(&mut Txn<'_>) -> Result<T>) -> Result<T> {
+        let inner = self.inner.lock().unwrap();
+        let mut txn = Txn { inner };
+        f(&mut txn)
+    }
+
+    /// Total writes (journal appends) — perf bench counter.
+    pub fn write_count(&self) -> u64 {
+        self.inner.lock().unwrap().writes
+    }
+}
+
+/// Transaction handle: same ops, already under the lock.
+pub struct Txn<'a> {
+    inner: MutexGuard<'a, Inner>,
+}
+
+impl Txn<'_> {
+    pub fn put(&mut self, table: &str, key: &str, value: Json) -> Result<()> {
+        KvStore::log(&mut self.inner, table, key, Some(&value))?;
+        self.inner
+            .tables
+            .entry(table.to_string())
+            .or_default()
+            .insert(key.to_string(), value);
+        Ok(())
+    }
+
+    pub fn get(&self, table: &str, key: &str) -> Option<Json> {
+        self.inner
+            .tables
+            .get(table)
+            .and_then(|t| t.get(key))
+            .cloned()
+    }
+
+    pub fn delete(&mut self, table: &str, key: &str) -> Result<bool> {
+        KvStore::log(&mut self.inner, table, key, None)?;
+        Ok(self
+            .inner
+            .tables
+            .get_mut(table)
+            .map(|t| t.remove(key).is_some())
+            .unwrap_or(false))
+    }
+
+    pub fn count(&self, table: &str) -> usize {
+        self.inner.tables.get(table).map(|t| t.len()).unwrap_or(0)
+    }
+
+    pub fn scan_prefix(&self, table: &str, prefix: &str) -> Vec<(String, Json)> {
+        self.inner
+            .tables
+            .get(table)
+            .map(|t| {
+                t.range(prefix.to_string()..)
+                    .take_while(|(k, _)| k.starts_with(prefix))
+                    .map(|(k, v)| (k.clone(), v.clone()))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_delete() {
+        let db = KvStore::in_memory();
+        db.put("files", "a", Json::from(1u64)).unwrap();
+        assert_eq!(db.get("files", "a").unwrap().as_u64(), Some(1));
+        assert!(db.delete("files", "a").unwrap());
+        assert!(db.get("files", "a").is_none());
+    }
+
+    #[test]
+    fn scan_is_key_ordered() {
+        let db = KvStore::in_memory();
+        for k in ["c", "a", "b"] {
+            db.put("t", k, Json::from(k)).unwrap();
+        }
+        let keys: Vec<_> = db.scan("t").into_iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, ["a", "b", "c"]);
+    }
+
+    #[test]
+    fn prefix_scan_matches_hierarchy() {
+        let db = KvStore::in_memory();
+        for k in ["/data/a", "/data/b", "/model/x", "/data2/c"] {
+            db.put("files", k, Json::Null).unwrap();
+        }
+        let hits = db.scan_prefix("files", "/data/");
+        assert_eq!(hits.len(), 2);
+    }
+
+    #[test]
+    fn transact_is_atomic_read_modify_write() {
+        let db = KvStore::in_memory();
+        db.put("vers", "/f", Json::from(0u64)).unwrap();
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let db = db.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    db.transact(|txn| {
+                        let v = txn.get("vers", "/f").unwrap().as_u64().unwrap();
+                        txn.put("vers", "/f", Json::from(v + 1))
+                    })
+                    .unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(db.get("vers", "/f").unwrap().as_u64(), Some(800));
+    }
+
+    #[test]
+    fn journal_survives_reopen() {
+        let dir = std::env::temp_dir().join(format!("acai-kv-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("journal-survives.log");
+        let _ = std::fs::remove_file(&path);
+        let db = KvStore::open(&path).unwrap();
+        db.put("sessions", "s1", Json::obj().field("state", "pending").build())
+            .unwrap();
+        db.put("sessions", "s2", Json::obj().field("state", "committed").build())
+            .unwrap();
+        db.delete("sessions", "s1").unwrap();
+
+        let db2 = db.reopen().unwrap();
+        assert!(db2.get("sessions", "s1").is_none());
+        assert_eq!(
+            db2.get("sessions", "s2").unwrap().get("state").unwrap().as_str(),
+            Some("committed")
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn journal_rejects_corruption() {
+        let dir = std::env::temp_dir().join(format!("acai-kv-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("journal-corrupt.log");
+        std::fs::write(&path, "{\"t\":\"x\",\"k\":\"a\",\"v\":1}\nGARBAGE\n").unwrap();
+        assert!(KvStore::open(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn scan_range_bounds_are_half_open() {
+        let db = KvStore::in_memory();
+        for k in ["a", "b", "c", "d"] {
+            db.put("t", k, Json::Null).unwrap();
+        }
+        let keys: Vec<_> = db.scan_range("t", "b", "d").into_iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, ["b", "c"]);
+    }
+}

@@ -1,0 +1,53 @@
+//! # ACAI — Accelerated Cloud for Artificial Intelligence
+//!
+//! A full reproduction of the ACAI platform (Chen et al., CMU 2024): an
+//! end-to-end cloud ML platform consisting of a **data lake** (versioned
+//! files, file sets, metadata, provenance DAG) and an **execution engine**
+//! (per-user FIFO scheduling with quotas, containerized execution, log
+//! capture, job profiling, and learned resource auto-provisioning).
+//!
+//! The crate is organised in three tiers:
+//!
+//! 1. **Substrates** — from-scratch stand-ins for the cloud services the
+//!    paper runs on: [`objectstore`] (S3 + SNS), [`kvstore`] (MySQL),
+//!    [`docstore`] (MongoDB), [`graphstore`] (Neo4j), [`bus`] (Redis
+//!    pub/sub), [`cluster`] (Kubernetes), [`httpd`] (HTTP microservice
+//!    plumbing), plus [`json`], [`prng`], [`simclock`].
+//! 2. **ACAI services** — the paper's contribution: [`credential`],
+//!    [`datalake`], [`engine`], [`pricing`], [`profiler`],
+//!    [`autoprovision`], [`workload`], [`sdk`], [`usability`].
+//! 3. **Runtime bridge** — [`runtime`]: loads the AOT-lowered JAX/Pallas
+//!    modules (`artifacts/*.hlo.txt`) via PJRT and executes them from the
+//!    hot paths (profiler fit/predict, the MLP job payload).
+//!
+//! See `DESIGN.md` for the substitution table and the experiment index.
+
+pub mod autoprovision;
+pub mod api;
+pub mod bus;
+pub mod cluster;
+pub mod config;
+pub mod credential;
+pub mod datalake;
+pub mod docstore;
+pub mod engine;
+pub mod error;
+pub mod graphstore;
+pub mod httpd;
+pub mod ids;
+pub mod json;
+pub mod kvstore;
+pub mod objectstore;
+pub mod platform;
+pub mod pricing;
+pub mod prng;
+pub mod profiler;
+pub mod runtime;
+pub mod sdk;
+pub mod simclock;
+pub mod testkit;
+pub mod usability;
+pub mod workload;
+
+pub use error::{AcaiError, Result};
+pub use platform::{Acai, PlatformConfig};

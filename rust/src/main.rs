@@ -1,0 +1,155 @@
+//! ACAI command-line entry point.
+//!
+//! ```text
+//! acai serve   [--port 8080] [--artifacts DIR]   REST edge (credential server)
+//! acai demo    [--artifacts DIR]                 end-to-end pipeline demo
+//! acai grid                                      print the provisioning grid + prices
+//! acai version
+//! ```
+//!
+//! The serve mode exposes the credential-server flow of paper §4.1 over
+//! real HTTP: every request authenticates `x-acai-token` and is routed
+//! to the matching service.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use acai::autoprovision::Objective;
+use acai::cluster::ResourceConfig;
+use acai::api::make_handler;
+use acai::httpd::Server;
+use acai::sdk::{Client, JobRequest};
+use acai::{Acai, PlatformConfig};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let value = it
+                .peek()
+                .filter(|v| !v.starts_with("--"))
+                .map(|v| v.to_string());
+            if let Some(v) = value {
+                it.next();
+                flags.insert(name.to_string(), v);
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+            }
+        }
+    }
+    flags
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let command = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let flags = parse_flags(&args[args.len().min(1)..]);
+    let result = match command {
+        "serve" => serve(&flags),
+        "demo" => demo(&flags),
+        "grid" => grid(),
+        "version" => {
+            println!("acai {}", env!("CARGO_PKG_VERSION"));
+            Ok(())
+        }
+        _ => {
+            eprintln!(
+                "usage: acai <serve|demo|grid|version> [--port N] [--artifacts DIR]"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("acai: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn boot(flags: &HashMap<String, String>) -> acai::Result<Arc<Acai>> {
+    let mut config = PlatformConfig::default();
+    if let Some(dir) = flags.get("artifacts") {
+        config.artifacts_dir = Some(dir.into());
+    }
+    Ok(Arc::new(Acai::boot(config)?))
+}
+
+/// Print the provisioning grid with unit prices (paper Fig 11 / §4.3).
+fn grid() -> acai::Result<()> {
+    let pricing = acai::pricing::PricingModel::default();
+    println!("vCPUs  unit $/vCPU-hr   512MB-job $/hr   8GB-job $/hr");
+    for ci in 1..=16 {
+        let c = ci as f64 * 0.5;
+        let low = pricing.rate(ResourceConfig::new(c, 512)) * 3600.0;
+        let high = pricing.rate(ResourceConfig::new(c, 8192)) * 3600.0;
+        println!(
+            "{c:>5.1}  {:>13.4}  {low:>15.4}  {high:>12.4}",
+            pricing.unit_cpu(c) * 3600.0
+        );
+    }
+    Ok(())
+}
+
+/// Minimal end-to-end pipeline on one process (see examples/ for more).
+fn demo(flags: &HashMap<String, String>) -> acai::Result<()> {
+    let acai = boot(flags)?;
+    let root = acai.credentials.root_token().to_string();
+    let (_pid, token) = acai.credentials.create_project(&root, "demo", "alice")?;
+    let client = Client::connect(acai.clone(), &token)?;
+
+    client.upload_files(&[("/data/train.bin", b"demo-data")])?;
+    client.create_file_set("mnist", &["/data/train.bin"])?;
+    let job = client.submit(JobRequest {
+        name: "demo-train".into(),
+        command: "python train_mnist.py --epoch 5".into(),
+        input_fileset: "mnist".into(),
+        output_fileset: "model".into(),
+        resources: ResourceConfig::new(2.0, 2048),
+    })?;
+    client.wait_all();
+    let record = client.job(job)?;
+    println!(
+        "job {job}: state={} runtime={:.1}s cost=${:.5}",
+        record.state.as_str(),
+        record.runtime_secs.unwrap_or(0.0),
+        record.cost.unwrap_or(0.0)
+    );
+    for line in client.logs(job) {
+        println!("  log: {line}");
+    }
+    let template = client.profile(
+        "demo",
+        "python train_mnist.py --epoch {1,2,3}",
+        "mnist",
+    )?;
+    let decision = client.autoprovision(
+        "demo",
+        &[5.0],
+        Objective::MinCost { max_runtime: 120.0 },
+    )?;
+    println!(
+        "template {template}: auto-provisioned {:.1} vCPU / {} MB, predicted {:.1}s ${:.5}",
+        decision.config.vcpus,
+        decision.config.mem_mb,
+        decision.predicted_runtime,
+        decision.predicted_cost
+    );
+    Ok(())
+}
+
+/// REST edge: the credential server authenticates and routes (Fig 7).
+fn serve(flags: &HashMap<String, String>) -> acai::Result<()> {
+    let port: u16 = flags
+        .get("port")
+        .map(|p| p.parse().unwrap_or(8080))
+        .unwrap_or(8080);
+    let acai = boot(flags)?;
+    println!("root token: {}", acai.credentials.root_token());
+    let handler = make_handler(acai);
+    let server = Server::serve(port, handler)?;
+    println!("acai REST edge on http://{}", server.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+

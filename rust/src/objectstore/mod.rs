@@ -1,0 +1,315 @@
+//! Object store + presigned URLs + upload notifications — the S3 + SNS
+//! analogue (paper §4.4.2).
+//!
+//! The paper keeps user data off ACAI servers: clients ask the storage
+//! server for **presigned URLs**, transfer bytes directly against the
+//! object store, and the store notifies the storage server of completed
+//! uploads through SNS.  This module reproduces that protocol:
+//!
+//! - [`ObjectStore::presign_put`] / [`presign_get`] mint expiring,
+//!   single-use tokens scoped to one key;
+//! - [`ObjectStore::put_presigned`] / [`get_presigned`] are the
+//!   "direct-to-S3" data path (no ACAI service involved);
+//! - completed uploads are announced on the [`crate::bus::Bus`] topic
+//!   [`TOPIC_OBJECT_EVENTS`] (the SNS subscription).
+//!
+//! Failure injection (`fail_next_puts`) simulates dropped uploads so the
+//! upload-session recovery path (§4.4.3) can be tested.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::bus::Bus;
+use crate::error::{AcaiError, Result};
+use crate::json::Json;
+use crate::simclock::SimClock;
+
+/// Bus topic carrying object-store notifications (the SNS analogue).
+pub const TOPIC_OBJECT_EVENTS: &str = "object-events";
+
+/// Presigned-token lifetime, virtual seconds.
+pub const PRESIGN_TTL_SECS: f64 = 3600.0;
+
+/// Token for one presigned operation.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Presigned {
+    pub token: String,
+    pub key: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Op {
+    Put,
+    Get,
+}
+
+#[derive(Debug)]
+struct Grant {
+    key: String,
+    op: Op,
+    expires: f64,
+    used: bool,
+}
+
+#[derive(Default)]
+struct Inner {
+    objects: HashMap<String, Arc<Vec<u8>>>,
+    grants: HashMap<String, Grant>,
+    fail_next_puts: u32,
+    bytes_stored: u64,
+}
+
+/// The simulated object store.
+#[derive(Clone)]
+pub struct ObjectStore {
+    inner: Arc<Mutex<Inner>>,
+    clock: SimClock,
+    bus: Bus,
+    token_seq: Arc<AtomicU64>,
+}
+
+impl ObjectStore {
+    pub fn new(clock: SimClock, bus: Bus) -> Self {
+        Self {
+            inner: Arc::new(Mutex::new(Inner::default())),
+            clock,
+            bus,
+            token_seq: Arc::new(AtomicU64::new(1)),
+        }
+    }
+
+    fn mint(&self, key: &str, op: Op) -> Presigned {
+        let n = self.token_seq.fetch_add(1, Ordering::Relaxed);
+        let kind = match op {
+            Op::Put => "put",
+            Op::Get => "get",
+        };
+        let token = format!("ps-{kind}-{n:016x}");
+        self.inner.lock().unwrap().grants.insert(
+            token.clone(),
+            Grant {
+                key: key.to_string(),
+                op,
+                expires: self.clock.now() + PRESIGN_TTL_SECS,
+                used: false,
+            },
+        );
+        Presigned {
+            token,
+            key: key.to_string(),
+        }
+    }
+
+    /// Mint a presigned upload token for `key`.
+    pub fn presign_put(&self, key: &str) -> Presigned {
+        self.mint(key, Op::Put)
+    }
+
+    /// Mint a presigned download token for `key`.
+    pub fn presign_get(&self, key: &str) -> Result<Presigned> {
+        if !self.inner.lock().unwrap().objects.contains_key(key) {
+            return Err(AcaiError::not_found(format!("object {key}")));
+        }
+        Ok(self.mint(key, Op::Get))
+    }
+
+    fn consume(&self, token: &str, want: Op) -> Result<String> {
+        let now = self.clock.now();
+        let mut inner = self.inner.lock().unwrap();
+        let grant = inner
+            .grants
+            .get_mut(token)
+            .ok_or_else(|| AcaiError::Unauthorized(format!("unknown presigned token {token}")))?;
+        if grant.op != want {
+            return Err(AcaiError::Unauthorized("token op mismatch".into()));
+        }
+        if grant.used {
+            return Err(AcaiError::Unauthorized("token already used".into()));
+        }
+        if grant.expires < now {
+            return Err(AcaiError::Unauthorized("token expired".into()));
+        }
+        grant.used = true;
+        Ok(grant.key.clone())
+    }
+
+    /// The direct-to-store upload path (client side of a presigned PUT).
+    pub fn put_presigned(&self, token: &str, data: Vec<u8>) -> Result<()> {
+        let key = self.consume(token, Op::Put)?;
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.fail_next_puts > 0 {
+                inner.fail_next_puts -= 1;
+                return Err(AcaiError::Storage(format!(
+                    "injected upload failure for {key}"
+                )));
+            }
+            inner.bytes_stored += data.len() as u64;
+            inner.objects.insert(key.clone(), Arc::new(data));
+        }
+        // SNS: notify subscribers (the storage server) of the completed put.
+        self.bus.publish(
+            TOPIC_OBJECT_EVENTS,
+            Json::obj()
+                .field("event", "put")
+                .field("key", key.as_str())
+                .build(),
+        );
+        Ok(())
+    }
+
+    /// The direct-to-store download path (presigned GET).
+    pub fn get_presigned(&self, token: &str) -> Result<Arc<Vec<u8>>> {
+        let key = self.consume(token, Op::Get)?;
+        let data = self
+            .inner
+            .lock()
+            .unwrap()
+            .objects
+            .get(&key)
+            .cloned()
+            .ok_or_else(|| AcaiError::not_found(format!("object {key}")))?;
+        self.bus.publish(
+            TOPIC_OBJECT_EVENTS,
+            Json::obj()
+                .field("event", "get")
+                .field("key", key.as_str())
+                .build(),
+        );
+        Ok(data)
+    }
+
+    /// Trusted in-platform read (agents run inside the trust boundary).
+    pub fn get(&self, key: &str) -> Result<Arc<Vec<u8>>> {
+        self.inner
+            .lock()
+            .unwrap()
+            .objects
+            .get(key)
+            .cloned()
+            .ok_or_else(|| AcaiError::not_found(format!("object {key}")))
+    }
+
+    /// Trusted in-platform write.
+    pub fn put(&self, key: &str, data: Vec<u8>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.bytes_stored += data.len() as u64;
+        inner.objects.insert(key.to_string(), Arc::new(data));
+    }
+
+    /// Does an object exist?
+    pub fn exists(&self, key: &str) -> bool {
+        self.inner.lock().unwrap().objects.contains_key(key)
+    }
+
+    /// Delete an object (used by session abort).
+    pub fn delete(&self, key: &str) -> bool {
+        self.inner.lock().unwrap().objects.remove(key).is_some()
+    }
+
+    /// Inject `n` upload failures (testing the session recovery path).
+    pub fn inject_put_failures(&self, n: u32) {
+        self.inner.lock().unwrap().fail_next_puts = n;
+    }
+
+    /// (object count, total bytes).
+    pub fn stats(&self) -> (usize, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.objects.len(), inner.bytes_stored)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> (ObjectStore, Bus, SimClock) {
+        let clock = SimClock::new();
+        let bus = Bus::new();
+        (ObjectStore::new(clock.clone(), bus.clone()), bus, clock)
+    }
+
+    #[test]
+    fn presigned_round_trip() {
+        let (s, _bus, _clock) = store();
+        let up = s.presign_put("file-1");
+        s.put_presigned(&up.token, b"hello".to_vec()).unwrap();
+        let down = s.presign_get("file-1").unwrap();
+        assert_eq!(&*s.get_presigned(&down.token).unwrap(), b"hello");
+    }
+
+    #[test]
+    fn tokens_are_single_use() {
+        let (s, _bus, _clock) = store();
+        let up = s.presign_put("k");
+        s.put_presigned(&up.token, vec![1]).unwrap();
+        let err = s.put_presigned(&up.token, vec![2]).unwrap_err();
+        assert_eq!(err.status(), 401);
+    }
+
+    #[test]
+    fn tokens_expire_with_virtual_time() {
+        let (s, _bus, clock) = store();
+        let up = s.presign_put("k");
+        clock.advance(PRESIGN_TTL_SECS + 1.0);
+        assert_eq!(s.put_presigned(&up.token, vec![1]).unwrap_err().status(), 401);
+    }
+
+    #[test]
+    fn put_token_cannot_get() {
+        let (s, _bus, _clock) = store();
+        s.put("k", vec![9]);
+        let up = s.presign_put("k");
+        assert!(s.get_presigned(&up.token).is_err());
+    }
+
+    #[test]
+    fn presign_get_requires_existing_object() {
+        let (s, _bus, _clock) = store();
+        assert_eq!(s.presign_get("missing").unwrap_err().status(), 404);
+    }
+
+    #[test]
+    fn upload_publishes_sns_notification() {
+        let (s, bus, _clock) = store();
+        let rx = bus.subscribe(TOPIC_OBJECT_EVENTS);
+        let up = s.presign_put("file-7");
+        s.put_presigned(&up.token, vec![0; 16]).unwrap();
+        let event = rx.try_recv().unwrap();
+        assert_eq!(event.payload.get("event").and_then(Json::as_str), Some("put"));
+        assert_eq!(event.payload.get("key").and_then(Json::as_str), Some("file-7"));
+    }
+
+    #[test]
+    fn injected_failures_drop_the_upload() {
+        let (s, _bus, _clock) = store();
+        s.inject_put_failures(1);
+        let up = s.presign_put("k");
+        assert!(s.put_presigned(&up.token, vec![1]).is_err());
+        assert!(!s.exists("k"));
+        // next upload (fresh token) succeeds
+        let up2 = s.presign_put("k");
+        s.put_presigned(&up2.token, vec![1]).unwrap();
+        assert!(s.exists("k"));
+    }
+
+    #[test]
+    fn delete_removes_object() {
+        let (s, _bus, _clock) = store();
+        s.put("k", vec![1, 2, 3]);
+        assert!(s.delete("k"));
+        assert!(!s.exists("k"));
+        assert!(!s.delete("k"));
+    }
+
+    #[test]
+    fn stats_track_bytes() {
+        let (s, _bus, _clock) = store();
+        s.put("a", vec![0; 100]);
+        s.put("b", vec![0; 50]);
+        let (n, bytes) = s.stats();
+        assert_eq!(n, 2);
+        assert_eq!(bytes, 150);
+    }
+}

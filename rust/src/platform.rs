@@ -1,0 +1,132 @@
+//! Platform assembly: wire every service into one deployable [`Acai`].
+
+use std::sync::Arc;
+
+use crate::autoprovision::AutoProvisioner;
+use crate::bus::Bus;
+use crate::cluster::Cluster;
+pub use crate::config::PlatformConfig;
+use crate::credential::CredentialServer;
+use crate::datalake::DataLake;
+use crate::engine::ExecutionEngine;
+use crate::error::Result;
+use crate::kvstore::KvStore;
+use crate::objectstore::ObjectStore;
+use crate::pricing::PricingModel;
+use crate::profiler::Profiler;
+use crate::runtime::Runtime;
+use crate::simclock::SimClock;
+use crate::workload::{SimParams, Workloads};
+
+/// One ACAI deployment (paper Figure 6, assembled in-process).
+pub struct Acai {
+    pub config: PlatformConfig,
+    pub clock: SimClock,
+    pub bus: Bus,
+    pub credentials: CredentialServer,
+    pub datalake: DataLake,
+    pub cluster: Cluster,
+    pub engine: Arc<ExecutionEngine>,
+    pub profiler: Profiler,
+    pub provisioner: AutoProvisioner,
+    pub pricing: PricingModel,
+    pub runtime: Option<Arc<Runtime>>,
+    objects: ObjectStore,
+}
+
+impl Acai {
+    /// Boot a platform from config.  Loads the PJRT runtime if
+    /// `artifacts_dir` is set (the heavyweight path: compiles 4 HLO
+    /// modules once).
+    pub fn boot(config: PlatformConfig) -> Result<Acai> {
+        let clock = SimClock::new();
+        let bus = Bus::new();
+        let kv = match &config.journal {
+            Some(path) => KvStore::open(path)?,
+            None => KvStore::in_memory(),
+        };
+        let objects = ObjectStore::new(clock.clone(), bus.clone());
+        let datalake = DataLake::new(kv, objects.clone(), bus.clone(), clock.clone());
+        let cluster = Cluster::new(config.cluster.clone(), clock.clone());
+        let runtime = match &config.artifacts_dir {
+            Some(dir) => Some(Arc::new(Runtime::load(dir)?)),
+            None => None,
+        };
+        let params = SimParams {
+            noise: config.noise,
+            ..Default::default()
+        };
+        let workloads = Arc::new(Workloads::new(params, runtime.clone()));
+        let pricing = PricingModel::default();
+        let engine = Arc::new(ExecutionEngine::new(
+            cluster.clone(),
+            bus.clone(),
+            datalake.clone(),
+            workloads,
+            pricing,
+            clock.clone(),
+            config.quota_k,
+            config.seed,
+        ));
+        let profiler = Profiler::new(engine.clone(), runtime.clone(), config.profile_barrier);
+        let provisioner = AutoProvisioner::new(pricing);
+        let credentials = CredentialServer::new(config.seed);
+        Ok(Acai {
+            config,
+            clock,
+            bus,
+            credentials,
+            datalake,
+            cluster,
+            engine,
+            profiler,
+            provisioner,
+            pricing,
+            runtime,
+            objects,
+        })
+    }
+
+    /// The underlying object store (testing + failure injection).
+    pub fn object_store(&self) -> ObjectStore {
+        self.objects.clone()
+    }
+
+    /// Boot with default config (no PJRT, no noise) — the test fixture.
+    pub fn boot_default() -> Acai {
+        Self::boot(PlatformConfig::default()).expect("default boot cannot fail")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_boot_wires_everything() {
+        let acai = Acai::boot_default();
+        assert!(acai.runtime.is_none());
+        assert_eq!(acai.engine.registry.count(), 0);
+        let (nodes, _) = acai.cluster.utilization().1.checked_div(1000).map(|n| (n, ())).unwrap();
+        assert!(nodes > 0);
+    }
+
+    #[test]
+    fn journal_backed_boot() {
+        let dir = std::env::temp_dir().join(format!("acai-plat-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let journal = dir.join("journal.log");
+        let _ = std::fs::remove_file(&journal);
+        let config = PlatformConfig {
+            journal: Some(journal.clone()),
+            ..Default::default()
+        };
+        let acai = Acai::boot(config).unwrap();
+        acai.datalake
+            .storage
+            .upload(crate::ids::ProjectId(1), &[("/f", b"x")])
+            .unwrap();
+        assert!(journal.exists());
+        let _ = std::fs::remove_file(&journal);
+    }
+}

@@ -1,0 +1,507 @@
+//! Job profiler (paper §4.2.2–§4.2.3): learn to predict job runtime.
+//!
+//! A user profiles a **command template** with argument hints:
+//!
+//! ```text
+//! acai profile --template_name my_template \
+//!   --command_template 'python train.py --epoch {1,2,5} \
+//!                       --batch-size {256,1024} --learning-rate 0.001'
+//! ```
+//!
+//! The profiler launches `|cpus|·|mems|·Π|opts_i|` trial jobs through the
+//! execution engine (cpus = {0.5, 1, 2}, mems = {512, 1024, 2048} MB to
+//! bound exploration cost), waits for **95 %** of them to finish (the
+//! straggler barrier), and fits the paper's log-linear model
+//!
+//! ```text
+//! log t = log α + Σ βᵢ · log xᵢ
+//! ```
+//!
+//! via ridge normal equations.  The fit runs through the AOT-lowered
+//! JAX/Pallas module on PJRT ([`crate::runtime::Runtime::loglinear_fit`]);
+//! a pure-Rust fallback keeps runtime-less unit tests fast and serves as
+//! a cross-check.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::ResourceConfig;
+use crate::engine::{ExecutionEngine, JobSpec, JobState};
+use crate::error::{AcaiError, Result};
+use crate::ids::{IdGen, ProjectId, TemplateId, UserId};
+use crate::runtime::{Runtime, FEATURES};
+
+/// Exploration sets (paper §4.2.2).
+pub const PROFILE_CPUS: [f64; 3] = [0.5, 1.0, 2.0];
+pub const PROFILE_MEMS: [u32; 3] = [512, 1024, 2048];
+
+/// A parsed command template.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommandTemplate {
+    pub program: String,
+    /// Arguments with hint sets, in template order (≤ 5: the feature
+    /// budget of the AOT fit module).
+    pub hints: Vec<(String, Vec<f64>)>,
+    /// Fixed numeric arguments.
+    pub fixed: Vec<(String, f64)>,
+}
+
+impl CommandTemplate {
+    /// Parse `python train.py --epoch {1,2,5} --lr 0.001`.
+    pub fn parse(template: &str) -> Result<CommandTemplate> {
+        let mut tokens = template.split_whitespace().peekable();
+        let mut program = String::new();
+        let mut hints = Vec::new();
+        let mut fixed = Vec::new();
+        while let Some(tok) = tokens.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                let value = tokens
+                    .next()
+                    .ok_or_else(|| AcaiError::invalid(format!("--{name}: missing value")))?;
+                if let Some(set) = value.strip_prefix('{').and_then(|v| v.strip_suffix('}')) {
+                    let opts: Vec<f64> = set
+                        .split(',')
+                        .map(|s| {
+                            s.trim().parse::<f64>().map_err(|_| {
+                                AcaiError::invalid(format!("--{name}: bad hint {s:?}"))
+                            })
+                        })
+                        .collect::<Result<_>>()?;
+                    if opts.is_empty() || opts.iter().any(|v| *v <= 0.0) {
+                        return Err(AcaiError::invalid(format!(
+                            "--{name}: hints must be positive (log features)"
+                        )));
+                    }
+                    hints.push((name.to_string(), opts));
+                } else {
+                    let v: f64 = value.parse().map_err(|_| {
+                        AcaiError::invalid(format!("--{name}: bad value {value:?}"))
+                    })?;
+                    fixed.push((name.to_string(), v));
+                }
+            } else if tok != "python" && tok != "python3" {
+                program = tok.to_string();
+            }
+        }
+        if program.is_empty() {
+            return Err(AcaiError::invalid("template has no program"));
+        }
+        if hints.len() > FEATURES - 3 {
+            return Err(AcaiError::invalid(format!(
+                "{} hinted args > {} supported by the fit module",
+                hints.len(),
+                FEATURES - 3
+            )));
+        }
+        Ok(CommandTemplate {
+            program,
+            hints,
+            fixed,
+        })
+    }
+
+    /// All hint combinations (Cartesian product).
+    pub fn combinations(&self) -> Vec<Vec<(String, f64)>> {
+        let mut combos: Vec<Vec<(String, f64)>> = vec![vec![]];
+        for (name, opts) in &self.hints {
+            let mut next = Vec::with_capacity(combos.len() * opts.len());
+            for combo in &combos {
+                for v in opts {
+                    let mut c = combo.clone();
+                    c.push((name.clone(), *v));
+                    next.push(c);
+                }
+            }
+            combos = next;
+        }
+        combos
+    }
+
+    /// Render a concrete command for one combination.
+    pub fn render(&self, combo: &[(String, f64)]) -> String {
+        let mut s = format!("python {}", self.program);
+        let fmt = |v: f64| {
+            if v.fract() == 0.0 {
+                format!("{}", v as i64)
+            } else {
+                format!("{v}")
+            }
+        };
+        for (n, v) in combo {
+            s.push_str(&format!(" --{n} {}", fmt(*v)));
+        }
+        for (n, v) in &self.fixed {
+            s.push_str(&format!(" --{n} {}", fmt(*v)));
+        }
+        s
+    }
+
+    /// Feature row for the log-linear model:
+    /// `[1, ln c, ln m, ln a1, ..., 0 pad]`.
+    pub fn features(&self, combo_values: &[f64], res: ResourceConfig) -> [f64; FEATURES] {
+        let mut row = [0.0; FEATURES];
+        row[0] = 1.0;
+        row[1] = res.vcpus.ln();
+        row[2] = (res.mem_mb as f64).ln();
+        for (i, v) in combo_values.iter().take(FEATURES - 3).enumerate() {
+            row[3 + i] = v.ln();
+        }
+        row
+    }
+}
+
+/// One profiling trial result.
+#[derive(Debug, Clone)]
+pub struct Trial {
+    pub args: Vec<(String, f64)>,
+    pub resources: ResourceConfig,
+    pub runtime_secs: f64,
+}
+
+/// A profiled + fitted template.
+#[derive(Debug, Clone)]
+pub struct FittedTemplate {
+    pub id: TemplateId,
+    pub name: String,
+    pub template: CommandTemplate,
+    pub theta: [f64; FEATURES],
+    pub trials: Vec<Trial>,
+    /// Trials still running when the 95 % barrier tripped.
+    pub stragglers: usize,
+}
+
+impl FittedTemplate {
+    /// Predict the runtime (seconds) for concrete args + resources.
+    pub fn predict(&self, arg_values: &[f64], res: ResourceConfig) -> f64 {
+        let row = self.template.features(arg_values, res);
+        let mut logt = 0.0;
+        for (t, x) in self.theta.iter().zip(row.iter()) {
+            logt += t * x;
+        }
+        logt.exp()
+    }
+}
+
+/// The profiler service.
+pub struct Profiler {
+    engine: Arc<ExecutionEngine>,
+    runtime: Option<Arc<Runtime>>,
+    templates: Mutex<HashMap<TemplateId, FittedTemplate>>,
+    by_name: Mutex<HashMap<String, TemplateId>>,
+    ids: IdGen,
+    /// Completion fraction required before fitting (paper: 0.95).
+    pub barrier: f64,
+}
+
+impl Profiler {
+    pub fn new(engine: Arc<ExecutionEngine>, runtime: Option<Arc<Runtime>>, barrier: f64) -> Self {
+        Self {
+            engine,
+            runtime,
+            templates: Mutex::new(HashMap::new()),
+            by_name: Mutex::new(HashMap::new()),
+            ids: IdGen::new(),
+            barrier,
+        }
+    }
+
+    /// Profile a command template: fan out the trial grid, wait for the
+    /// barrier, fit.  Returns the template id for `predict`/`autoprovision`.
+    pub fn profile(
+        &self,
+        name: &str,
+        template_str: &str,
+        project: ProjectId,
+        user: UserId,
+        input_fileset: &str,
+    ) -> Result<TemplateId> {
+        let template = CommandTemplate::parse(template_str)?;
+        let combos = template.combinations();
+        // Fan out |cpus| * |mems| * prod |opts| trials.
+        let mut jobs = Vec::new();
+        for cpus in PROFILE_CPUS {
+            for mems in PROFILE_MEMS {
+                for combo in &combos {
+                    let res = ResourceConfig::new(cpus, mems);
+                    let command = template.render(combo);
+                    let id = self.engine.submit(JobSpec {
+                        project,
+                        user,
+                        name: format!("profile-{name}"),
+                        command,
+                        input_fileset: input_fileset.to_string(),
+                        output_fileset: format!("profile-{name}-out"),
+                        resources: res,
+                    })?;
+                    jobs.push((id, combo.clone(), res));
+                }
+            }
+        }
+        let total = jobs.len();
+        let need = ((total as f64) * self.barrier).ceil() as usize;
+
+        // Drive the engine until the straggler barrier trips.
+        let done_count = |engine: &ExecutionEngine| {
+            jobs.iter()
+                .filter(|(id, _, _)| {
+                    engine
+                        .registry
+                        .get(*id)
+                        .map(|r| r.state.is_terminal())
+                        .unwrap_or(false)
+                })
+                .count()
+        };
+        self.engine.pump();
+        while done_count(&self.engine) < need {
+            if !self.engine.step() {
+                break; // nothing running: all remaining failed to launch
+            }
+        }
+
+        // Collect completed trials; stragglers stay out of the fit.
+        let mut trials = Vec::new();
+        let mut stragglers = 0usize;
+        for (id, combo, res) in &jobs {
+            let record = self.engine.registry.get(*id)?;
+            match (record.state, record.runtime_secs) {
+                (JobState::Finished, Some(t)) => trials.push(Trial {
+                    args: combo.clone(),
+                    resources: *res,
+                    runtime_secs: t,
+                }),
+                _ => stragglers += 1,
+            }
+        }
+        if trials.len() < FEATURES {
+            return Err(AcaiError::Infeasible(format!(
+                "only {} trials completed; cannot fit {} features",
+                trials.len(),
+                FEATURES
+            )));
+        }
+        let theta = self.fit(&template, &trials)?;
+        let id = TemplateId(self.ids.next());
+        let fitted = FittedTemplate {
+            id,
+            name: name.to_string(),
+            template,
+            theta,
+            trials,
+            stragglers,
+        };
+        self.templates.lock().unwrap().insert(id, fitted);
+        self.by_name.lock().unwrap().insert(name.to_string(), id);
+        // Drain stragglers so the cluster is clean for the next caller.
+        self.engine.run_until_idle();
+        Ok(id)
+    }
+
+    /// Fit θ from completed trials (PJRT module, or the Rust fallback).
+    pub fn fit(&self, template: &CommandTemplate, trials: &[Trial]) -> Result<[f64; FEATURES]> {
+        let rows: Vec<[f64; FEATURES]> = trials
+            .iter()
+            .map(|t| {
+                let vals: Vec<f64> = t.args.iter().map(|(_, v)| *v).collect();
+                template.features(&vals, t.resources)
+            })
+            .collect();
+        let ys: Vec<f64> = trials.iter().map(|t| t.runtime_secs.max(1e-6).ln()).collect();
+        match &self.runtime {
+            Some(rt) => rt.loglinear_fit(&rows, &ys),
+            None => fit_native(&rows, &ys),
+        }
+    }
+
+    /// Fitted template lookup.
+    pub fn get(&self, id: TemplateId) -> Result<FittedTemplate> {
+        self.templates
+            .lock()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| AcaiError::not_found(format!("{id}")))
+    }
+
+    pub fn by_name(&self, name: &str) -> Result<FittedTemplate> {
+        let id = *self
+            .by_name
+            .lock()
+            .unwrap()
+            .get(name)
+            .ok_or_else(|| AcaiError::not_found(format!("template {name}")))?;
+        self.get(id)
+    }
+
+    /// Batched grid prediction (the auto-provisioner's query): goes
+    /// through the PJRT predict module when loaded.
+    pub fn predict_grid(
+        &self,
+        fitted: &FittedTemplate,
+        arg_values: &[f64],
+        grid: &[ResourceConfig],
+    ) -> Result<Vec<f64>> {
+        let rows: Vec<[f64; FEATURES]> = grid
+            .iter()
+            .map(|res| fitted.template.features(arg_values, *res))
+            .collect();
+        match &self.runtime {
+            Some(rt) => rt.loglinear_predict(&fitted.theta, &rows),
+            None => Ok(rows
+                .iter()
+                .map(|row| {
+                    row.iter()
+                        .zip(fitted.theta.iter())
+                        .map(|(x, t)| x * t)
+                        .sum::<f64>()
+                        .exp()
+                })
+                .collect()),
+        }
+    }
+}
+
+/// Pure-Rust ridge normal-equations fit (the PJRT module's cross-check).
+pub fn fit_native(rows: &[[f64; FEATURES]], ys: &[f64]) -> Result<[f64; FEATURES]> {
+    const RIDGE: f64 = 1e-6;
+    let k = FEATURES;
+    let mut a = [[0.0f64; FEATURES]; FEATURES];
+    let mut b = [0.0f64; FEATURES];
+    for (row, y) in rows.iter().zip(ys) {
+        for i in 0..k {
+            b[i] += row[i] * y;
+            for j in 0..k {
+                a[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    for (i, row) in a.iter_mut().enumerate() {
+        row[i] += RIDGE;
+    }
+    // Cholesky a = L L^T.
+    let mut l = [[0.0f64; FEATURES]; FEATURES];
+    for i in 0..k {
+        for j in 0..=i {
+            let mut s = a[i][j];
+            for p in 0..j {
+                s -= l[i][p] * l[j][p];
+            }
+            if i == j {
+                l[i][j] = s.max(1e-30).sqrt();
+            } else {
+                l[i][j] = s / l[j][j];
+            }
+        }
+    }
+    // Solve L z = b, then L^T x = z.
+    let mut z = [0.0f64; FEATURES];
+    for i in 0..k {
+        let mut s = b[i];
+        for p in 0..i {
+            s -= l[i][p] * z[p];
+        }
+        z[i] = s / l[i][i];
+    }
+    let mut x = [0.0f64; FEATURES];
+    for i in (0..k).rev() {
+        let mut s = z[i];
+        for p in i + 1..k {
+            s -= l[p][i] * x[p];
+        }
+        x[i] = s / l[i][i];
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn template_parsing_matches_paper_example() {
+        let t = CommandTemplate::parse(
+            "python train.py --epoch {1,2,5} --batch-size {256,1024} --learning-rate 0.001",
+        )
+        .unwrap();
+        assert_eq!(t.program, "train.py");
+        assert_eq!(t.hints.len(), 2);
+        assert_eq!(t.hints[0], ("epoch".to_string(), vec![1.0, 2.0, 5.0]));
+        assert_eq!(t.fixed, vec![("learning-rate".to_string(), 0.001)]);
+        // |opts| product = 6 combos
+        assert_eq!(t.combinations().len(), 6);
+    }
+
+    #[test]
+    fn render_produces_concrete_commands() {
+        let t = CommandTemplate::parse("python train.py --epoch {1,2} --lr 0.5").unwrap();
+        let combos = t.combinations();
+        assert_eq!(t.render(&combos[0]), "python train.py --epoch 1 --lr 0.5");
+        assert_eq!(t.render(&combos[1]), "python train.py --epoch 2 --lr 0.5");
+    }
+
+    #[test]
+    fn template_rejects_bad_hints() {
+        assert!(CommandTemplate::parse("python t.py --e {}").is_err());
+        assert!(CommandTemplate::parse("python t.py --e {0,1}").is_err()); // log(0)
+        assert!(CommandTemplate::parse("python t.py --e {a,b}").is_err());
+        assert!(CommandTemplate::parse("--e {1,2}").is_err()); // no program
+        // too many hinted args for the 8-feature module
+        assert!(CommandTemplate::parse(
+            "python t.py --a {1} --b {1} --c {1} --d {1} --e {1} --f {1}"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn features_layout() {
+        let t = CommandTemplate::parse("python t.py --epoch {1,2}").unwrap();
+        let row = t.features(&[20.0], ResourceConfig::new(2.0, 1024));
+        assert_eq!(row[0], 1.0);
+        assert!((row[1] - 2f64.ln()).abs() < 1e-12);
+        assert!((row[2] - 1024f64.ln()).abs() < 1e-12);
+        assert!((row[3] - 20f64.ln()).abs() < 1e-12);
+        assert_eq!(&row[4..], &[0.0; 4]);
+    }
+
+    #[test]
+    fn native_fit_recovers_power_law() {
+        // t = 5 * e^1.0 * c^-0.9 * m^-0.05
+        let t = CommandTemplate::parse("python t.py --epoch {1,2,3}").unwrap();
+        let mut rows = Vec::new();
+        let mut ys = Vec::new();
+        for e in [1.0, 2.0, 3.0] {
+            for c in [0.5, 1.0, 2.0] {
+                for m in [512u32, 1024, 2048] {
+                    let res = ResourceConfig::new(c, m);
+                    rows.push(t.features(&[e], res));
+                    let rt = 5.0 * e * c.powf(-0.9) * (m as f64).powf(-0.05);
+                    ys.push(rt.ln());
+                }
+            }
+        }
+        let theta = fit_native(&rows, &ys).unwrap();
+        assert!((theta[0] - 5f64.ln()).abs() < 1e-3, "{theta:?}");
+        assert!((theta[1] + 0.9).abs() < 1e-3);
+        assert!((theta[2] + 0.05).abs() < 1e-3);
+        assert!((theta[3] - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn fitted_template_predicts() {
+        let template = CommandTemplate::parse("python t.py --epoch {1,2,3}").unwrap();
+        let mut theta = [0.0; FEATURES];
+        theta[0] = 5f64.ln();
+        theta[1] = -1.0;
+        theta[3] = 1.0;
+        let fitted = FittedTemplate {
+            id: TemplateId(1),
+            name: "t".into(),
+            template,
+            theta,
+            trials: vec![],
+            stragglers: 0,
+        };
+        let t = fitted.predict(&[20.0], ResourceConfig::new(2.0, 1024));
+        assert!((t - 5.0 * 20.0 / 2.0).abs() < 1e-6);
+    }
+}

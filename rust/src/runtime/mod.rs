@@ -1,0 +1,446 @@
+//! PJRT runtime bridge: load and execute the AOT-lowered JAX/Pallas
+//! modules from `artifacts/` (see `python/compile/aot.py`).
+//!
+//! HLO **text** is the interchange format (jax >= 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids).  Each module is compiled once at load; the
+//! executables are reused for every call — Python never runs again.
+//!
+//! Exposes typed wrappers for the four entry points:
+//! - [`Runtime::loglinear_fit`] / [`Runtime::loglinear_predict`] — the
+//!   profiler's runtime model (paper §4.2.3);
+//! - [`MlpSession`] — the MNIST MLP workload (paper §5.1), holding its
+//!   parameters as tensors between steps.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::error::{AcaiError, Result};
+use crate::json::{parse, Json};
+
+/// Feature-vector width of the log-linear model (must match
+/// `python/compile/model.py::FEATURES`).
+pub const FEATURES: usize = 8;
+
+/// Shape of one tensor in the manifest.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+struct Module {
+    exe: xla::PjRtLoadedExecutable,
+    inputs: Vec<TensorSpec>,
+    outputs: Vec<TensorSpec>,
+}
+
+/// Manifest constants (shape contract with the python side).
+#[derive(Debug, Clone, Copy)]
+pub struct RuntimeConstants {
+    pub fit_rows: usize,
+    pub grid_rows: usize,
+    pub mlp_in: usize,
+    pub mlp_hidden: usize,
+    pub mlp_out: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+}
+
+/// The loaded runtime.  Executions are serialized behind a mutex (the
+/// PJRT CPU client is driven from the engine's single event loop).
+pub struct Runtime {
+    modules: Mutex<HashMap<String, Module>>,
+    pub constants: RuntimeConstants,
+    exec_count: std::sync::atomic::AtomicU64,
+}
+
+// SAFETY: the `xla` crate's handles are raw pointers + an `Rc`'d client,
+// so they are not auto-Send/Sync.  All access to them in this type —
+// execution, and eventually drop — goes through the `modules` Mutex,
+// which serializes every cross-thread use; the client Rc is cloned only
+// during `load` (single-threaded) and never after.  The PJRT CPU client
+// itself is thread-safe for executing compiled executables.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+fn manifest_usize(c: &Json, key: &str) -> Result<usize> {
+    c.get(key)
+        .and_then(Json::as_u64)
+        .map(|v| v as usize)
+        .ok_or_else(|| AcaiError::Runtime(format!("manifest missing constant {key}")))
+}
+
+impl Runtime {
+    /// Load every module listed in `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            AcaiError::Runtime(format!(
+                "cannot read {manifest_path:?}: {e}; run `make artifacts` first"
+            ))
+        })?;
+        let manifest = parse(&text)?;
+        let consts = manifest
+            .get("constants")
+            .ok_or_else(|| AcaiError::Runtime("manifest missing constants".into()))?;
+        let features = manifest_usize(consts, "FEATURES")?;
+        if features != FEATURES {
+            return Err(AcaiError::Runtime(format!(
+                "manifest FEATURES={features} != runtime FEATURES={FEATURES}; rebuild artifacts"
+            )));
+        }
+        let constants = RuntimeConstants {
+            fit_rows: manifest_usize(consts, "FIT_ROWS")?,
+            grid_rows: manifest_usize(consts, "GRID_ROWS")?,
+            mlp_in: manifest_usize(consts, "MLP_IN")?,
+            mlp_hidden: manifest_usize(consts, "MLP_HIDDEN")?,
+            mlp_out: manifest_usize(consts, "MLP_OUT")?,
+            train_batch: manifest_usize(consts, "TRAIN_BATCH")?,
+            eval_batch: manifest_usize(consts, "EVAL_BATCH")?,
+        };
+
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| AcaiError::Runtime(format!("PJRT client: {e}")))?;
+        let mut modules = HashMap::new();
+        let mods = manifest
+            .get("modules")
+            .and_then(Json::as_object)
+            .ok_or_else(|| AcaiError::Runtime("manifest missing modules".into()))?;
+        for (name, spec) in mods.iter() {
+            let file = spec
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| AcaiError::Runtime(format!("module {name}: no file")))?;
+            let path: PathBuf = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| AcaiError::Runtime("non-utf8 path".into()))?,
+            )
+            .map_err(|e| AcaiError::Runtime(format!("parse {path:?}: {e}")))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| AcaiError::Runtime(format!("compile {name}: {e}")))?;
+            let tensor_specs = |key: &str| -> Vec<TensorSpec> {
+                spec.get(key)
+                    .and_then(Json::as_array)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|t| TensorSpec {
+                        name: t.get("name").and_then(Json::as_str).unwrap_or("").into(),
+                        shape: t
+                            .get("shape")
+                            .and_then(Json::as_array)
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(Json::as_u64)
+                            .map(|d| d as usize)
+                            .collect(),
+                    })
+                    .collect()
+            };
+            modules.insert(
+                name.to_string(),
+                Module {
+                    exe,
+                    inputs: tensor_specs("inputs"),
+                    outputs: tensor_specs("outputs"),
+                },
+            );
+        }
+        Ok(Runtime {
+            modules: Mutex::new(modules),
+            constants,
+            exec_count: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Raw execution: f32 tensors in, f32 tensors out.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let modules = self.modules.lock().unwrap();
+        let module = modules
+            .get(name)
+            .ok_or_else(|| AcaiError::Runtime(format!("unknown module {name}")))?;
+        if inputs.len() != module.inputs.len() {
+            return Err(AcaiError::Runtime(format!(
+                "{name}: expected {} inputs, got {}",
+                module.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&module.inputs) {
+            if t.shape != spec.shape {
+                return Err(AcaiError::Runtime(format!(
+                    "{name}: input {} shape {:?} != expected {:?}",
+                    spec.name, t.shape, spec.shape
+                )));
+            }
+            literals.push(t.to_literal()?);
+        }
+        let result = module
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| AcaiError::Runtime(format!("execute {name}: {e}")))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| AcaiError::Runtime(format!("fetch {name}: {e}")))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| AcaiError::Runtime(format!("untuple {name}: {e}")))?;
+        self.exec_count
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        parts
+            .into_iter()
+            .zip(&module.outputs)
+            .map(|(lit, spec)| Tensor::from_literal(&lit, &spec.shape))
+            .collect()
+    }
+
+    /// Number of PJRT executions so far (perf counter).
+    pub fn executions(&self) -> u64 {
+        self.exec_count.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    // ------------------------------------------------------------------
+    // Typed wrappers
+    // ------------------------------------------------------------------
+
+    /// Fit the log-linear runtime model.  `rows` are feature vectors
+    /// (intercept first), `targets` are log-runtimes; rows beyond
+    /// `rows.len()` are zero-weight padding inside the kernel.
+    pub fn loglinear_fit(
+        &self,
+        rows: &[[f64; FEATURES]],
+        targets: &[f64],
+    ) -> Result<[f64; FEATURES]> {
+        let n = self.constants.fit_rows;
+        if rows.len() != targets.len() {
+            return Err(AcaiError::invalid("rows/targets length mismatch"));
+        }
+        if rows.len() > n {
+            return Err(AcaiError::invalid(format!(
+                "{} trials > FIT_ROWS={n}; shrink the sweep or re-lower",
+                rows.len()
+            )));
+        }
+        let mut x = vec![0f32; n * FEATURES];
+        let mut w = vec![0f32; n];
+        let mut y = vec![0f32; n];
+        for (i, (row, t)) in rows.iter().zip(targets).enumerate() {
+            for (j, v) in row.iter().enumerate() {
+                x[i * FEATURES + j] = *v as f32;
+            }
+            w[i] = 1.0;
+            y[i] = *t as f32;
+        }
+        let out = self.execute(
+            "loglinear_fit",
+            &[
+                Tensor::new(x, vec![n, FEATURES]),
+                Tensor::new(w, vec![n, 1]),
+                Tensor::new(y, vec![n, 1]),
+            ],
+        )?;
+        let mut result = [0f64; FEATURES];
+        for (i, v) in out[0].data.iter().enumerate().take(FEATURES) {
+            result[i] = *v as f64;
+        }
+        Ok(result)
+    }
+
+    /// Predict runtimes (seconds) for a batch of feature rows.
+    pub fn loglinear_predict(
+        &self,
+        theta: &[f64; FEATURES],
+        rows: &[[f64; FEATURES]],
+    ) -> Result<Vec<f64>> {
+        let g = self.constants.grid_rows;
+        if rows.len() > g {
+            return Err(AcaiError::invalid(format!(
+                "{} grid points > GRID_ROWS={g}",
+                rows.len()
+            )));
+        }
+        let mut th = vec![0f32; FEATURES];
+        for (i, v) in theta.iter().enumerate() {
+            th[i] = *v as f32;
+        }
+        let mut xg = vec![0f32; g * FEATURES];
+        for (i, row) in rows.iter().enumerate() {
+            for (j, v) in row.iter().enumerate() {
+                xg[i * FEATURES + j] = *v as f32;
+            }
+        }
+        let out = self.execute(
+            "loglinear_predict",
+            &[
+                Tensor::new(th, vec![FEATURES, 1]),
+                Tensor::new(xg, vec![g, FEATURES]),
+            ],
+        )?;
+        Ok(out[0]
+            .data
+            .iter()
+            .take(rows.len())
+            .map(|v| *v as f64)
+            .collect())
+    }
+}
+
+/// A host-side f32 tensor.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Self { data, shape }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self {
+            data: vec![v],
+            shape: vec![],
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        if self.shape.is_empty() {
+            return Ok(xla::Literal::scalar(self.data[0]));
+        }
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.shape.iter().map(|d| *d as i64).collect();
+        lit.reshape(&dims)
+            .map_err(|e| AcaiError::Runtime(format!("reshape: {e}")))
+    }
+
+    fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+        let data = lit
+            .to_vec::<f32>()
+            .map_err(|e| AcaiError::Runtime(format!("to_vec: {e}")))?;
+        Ok(Tensor::new(data, shape.to_vec()))
+    }
+}
+
+/// An in-flight MLP training session: parameters persist as tensors
+/// between steps; one `mlp_train_step` PJRT execution per step.
+pub struct MlpSession<'r> {
+    runtime: &'r Runtime,
+    pub w1: Tensor,
+    pub b1: Tensor,
+    pub w2: Tensor,
+    pub b2: Tensor,
+    pub losses: Vec<f32>,
+}
+
+impl<'r> MlpSession<'r> {
+    /// Initialize parameters from a seed.
+    pub fn new(runtime: &'r Runtime, seed: u64) -> Self {
+        let c = runtime.constants;
+        let mut rng = crate::prng::Rng::new(seed);
+        let mut init = |rows: usize, cols: usize, scale: f32| -> Tensor {
+            let data = (0..rows * cols)
+                .map(|_| rng.normal() as f32 * scale)
+                .collect();
+            Tensor::new(data, vec![rows, cols])
+        };
+        let w1 = init(c.mlp_in, c.mlp_hidden, 0.05);
+        let w2 = init(c.mlp_hidden, c.mlp_out, 0.05);
+        Self {
+            runtime,
+            w1,
+            b1: Tensor::new(vec![0.0; c.mlp_hidden], vec![c.mlp_hidden]),
+            w2,
+            b2: Tensor::new(vec![0.0; c.mlp_out], vec![c.mlp_out]),
+            losses: vec![],
+        }
+    }
+
+    /// One SGD step on a (x, one-hot y) batch.  Returns the loss.
+    pub fn train_step(&mut self, x: Tensor, y1h: Tensor, lr: f32) -> Result<f32> {
+        let out = self.runtime.execute(
+            "mlp_train_step",
+            &[
+                self.w1.clone(),
+                self.b1.clone(),
+                self.w2.clone(),
+                self.b2.clone(),
+                x,
+                y1h,
+                Tensor::scalar(lr),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        self.w1 = it.next().unwrap();
+        self.b1 = it.next().unwrap();
+        self.w2 = it.next().unwrap();
+        self.b2 = it.next().unwrap();
+        let loss = it.next().unwrap().data[0];
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// (loss, accuracy) on an eval batch.
+    pub fn eval(&self, x: Tensor, y1h: Tensor) -> Result<(f32, f32)> {
+        let out = self.runtime.execute(
+            "mlp_eval",
+            &[
+                self.w1.clone(),
+                self.b1.clone(),
+                self.w2.clone(),
+                self.b2.clone(),
+                x,
+                y1h,
+            ],
+        )?;
+        Ok((out[0].data[0], out[1].data[0]))
+    }
+
+    /// Serialize the trained parameters (the job's output model file).
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        for t in [&self.w1, &self.b1, &self.w2, &self.b2] {
+            out.extend((t.data.len() as u32).to_le_bytes());
+            for v in &t.data {
+                out.extend(v.to_le_bytes());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Pure host-side tests; PJRT-backed tests live in
+    //! `rust/tests/runtime_integration.rs` (they need `make artifacts`).
+    use super::*;
+
+    #[test]
+    fn tensor_shape_product_checked() {
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.shape, vec![2, 2]);
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let t = Tensor::scalar(3.5);
+        assert!(t.shape.is_empty());
+        assert_eq!(t.data, vec![3.5]);
+    }
+
+    #[test]
+    fn load_fails_cleanly_without_artifacts() {
+        let err = match Runtime::load("/nonexistent-dir") {
+            Err(e) => e,
+            Ok(_) => panic!("load should fail"),
+        };
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,300 @@
+//! The ACAI SDK (paper §3.4): a token-scoped client facade over the
+//! platform, mirroring the Python SDK / CLI surface — upload, file-set
+//! management, job submission, monitoring, metadata queries, provenance
+//! tracing, profiling and auto-provisioning.
+
+use std::sync::Arc;
+
+use crate::autoprovision::{Decision, Objective};
+use crate::cluster::ResourceConfig;
+use crate::credential::Identity;
+use crate::datalake::metadata::ArtifactKind;
+use crate::docstore::Clause;
+use crate::engine::{JobRecord, JobSpec};
+use crate::error::Result;
+use crate::graphstore::Edge;
+use crate::ids::{JobId, TemplateId, Version};
+use crate::json::Json;
+use crate::platform::Acai;
+
+/// What a client submits through the SDK.
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    pub name: String,
+    pub command: String,
+    pub input_fileset: String,
+    pub output_fileset: String,
+    pub resources: ResourceConfig,
+}
+
+/// A token-authenticated SDK client.
+pub struct Client {
+    acai: Arc<Acai>,
+    identity: Identity,
+}
+
+impl Client {
+    /// Authenticate a token against the credential server.
+    pub fn connect(acai: Arc<Acai>, token: &str) -> Result<Client> {
+        let identity = acai.credentials.authenticate(token)?;
+        Ok(Client { acai, identity })
+    }
+
+    pub fn identity(&self) -> Identity {
+        self.identity
+    }
+
+    fn creator(&self) -> String {
+        self.acai
+            .credentials
+            .user_name(self.identity.user)
+            .unwrap_or_else(|| self.identity.user.to_string())
+    }
+
+    // ---- data lake ----
+
+    /// Upload files (one transactional session). Returns (path, version).
+    pub fn upload_files(&self, files: &[(&str, &[u8])]) -> Result<Vec<(String, Version)>> {
+        for (path, _) in files {
+            self.acai.datalake.acl.check(
+                self.identity.project,
+                &format!("file:{path}"),
+                self.identity.user,
+                crate::datalake::Access::Write,
+            )?;
+        }
+        self.acai.datalake.storage.upload(self.identity.project, files)
+    }
+
+    /// Download a file (presigned flow); latest version if None.
+    pub fn download(&self, path: &str, version: Option<Version>) -> Result<Vec<u8>> {
+        self.acai.datalake.acl.check(
+            self.identity.project,
+            &format!("file:{path}"),
+            self.identity.user,
+            crate::datalake::Access::Read,
+        )?;
+        Ok(self
+            .acai
+            .datalake
+            .storage
+            .download(self.identity.project, path, version)?
+            .to_vec())
+    }
+
+    /// List files under a prefix with latest versions.
+    pub fn list_files(&self, prefix: &str) -> Vec<(String, Version)> {
+        self.acai.datalake.storage.list(self.identity.project, prefix)
+    }
+
+    /// Create a file set from spec strings (§3.2.2).
+    pub fn create_file_set(&self, name: &str, specs: &[&str]) -> Result<Version> {
+        self.acai.datalake.acl.check(
+            self.identity.project,
+            &format!("fileset:{name}"),
+            self.identity.user,
+            crate::datalake::Access::Write,
+        )?;
+        self.acai
+            .datalake
+            .filesets
+            .create(self.identity.project, name, specs, &self.creator())
+    }
+
+    /// List file sets of the project.
+    pub fn list_file_sets(&self) -> Vec<(String, Version)> {
+        self.acai.datalake.filesets.list(self.identity.project)
+    }
+
+    /// Tag an artifact with custom metadata.
+    pub fn tag(&self, kind: ArtifactKind, id: &str, fields: &[(String, Json)]) {
+        self.acai
+            .datalake
+            .metadata
+            .tag(self.identity.project, kind, id, fields)
+    }
+
+    /// Metadata query (equality/range/max-min clauses).
+    pub fn query(
+        &self,
+        kind: ArtifactKind,
+        clauses: &[Clause],
+    ) -> Result<Vec<(String, crate::docstore::Doc)>> {
+        self.acai
+            .datalake
+            .metadata
+            .query(self.identity.project, kind, clauses)
+    }
+
+    /// Set POSIX-style permissions on a file (§7.1.1).
+    pub fn protect_file(&self, path: &str, mode: crate::datalake::Mode) -> Result<()> {
+        self.acai.datalake.acl.protect(
+            self.identity.project,
+            &format!("file:{path}"),
+            self.identity.user,
+            mode,
+        )
+    }
+
+    /// Set POSIX-style permissions on a file set (§7.1.1).
+    pub fn protect_file_set(&self, name: &str, mode: crate::datalake::Mode) -> Result<()> {
+        self.acai.datalake.acl.protect(
+            self.identity.project,
+            &format!("fileset:{name}"),
+            self.identity.user,
+            mode,
+        )
+    }
+
+    // ---- provenance ----
+
+    /// One step forward from a file-set version.
+    pub fn trace_forward(&self, fileset: &str, version: Version) -> Vec<Edge> {
+        self.acai
+            .datalake
+            .provenance
+            .forward(self.identity.project, fileset, version)
+    }
+
+    /// One step backward.
+    pub fn trace_backward(&self, fileset: &str, version: Version) -> Vec<Edge> {
+        self.acai
+            .datalake
+            .provenance
+            .backward(self.identity.project, fileset, version)
+    }
+
+    /// Full lineage (ancestors) of a file set — the reproducibility set.
+    pub fn lineage(&self, fileset: &str, version: Version) -> Vec<String> {
+        self.acai
+            .datalake
+            .provenance
+            .ancestors(self.identity.project, fileset, version)
+    }
+
+    /// The whole provenance graph of the project.
+    pub fn provenance_graph(&self) -> (Vec<String>, Vec<Edge>) {
+        self.acai.datalake.provenance.whole_graph(self.identity.project)
+    }
+
+    // ---- execution engine ----
+
+    /// Submit a job.
+    pub fn submit(&self, request: JobRequest) -> Result<JobId> {
+        self.acai.engine.submit(JobSpec {
+            project: self.identity.project,
+            user: self.identity.user,
+            name: request.name,
+            command: request.command,
+            input_fileset: request.input_fileset,
+            output_fileset: request.output_fileset,
+            resources: request.resources,
+        })
+    }
+
+    /// Drive the engine until every submitted job is terminal.
+    pub fn wait_all(&self) {
+        self.acai.engine.run_until_idle();
+    }
+
+    /// Job record.
+    pub fn job(&self, id: JobId) -> Result<JobRecord> {
+        self.acai.engine.registry.get(id)
+    }
+
+    /// Persisted job logs.
+    pub fn logs(&self, id: JobId) -> Vec<String> {
+        self.acai.engine.logs.get(id)
+    }
+
+    /// Kill a job.
+    pub fn kill(&self, id: JobId) -> Result<()> {
+        self.acai.engine.kill(id)
+    }
+
+    // ---- profiler + auto-provisioner ----
+
+    /// `acai profile --template_name <name> --command_template '<tmpl>'`.
+    pub fn profile(&self, name: &str, template: &str, input_fileset: &str) -> Result<TemplateId> {
+        self.acai.profiler.profile(
+            name,
+            template,
+            self.identity.project,
+            self.identity.user,
+            input_fileset,
+        )
+    }
+
+    /// `acai autoprovision --template_name <name> --values ...`.
+    pub fn autoprovision(
+        &self,
+        template_name: &str,
+        arg_values: &[f64],
+        objective: Objective,
+    ) -> Result<Decision> {
+        let fitted = self.acai.profiler.by_name(template_name)?;
+        self.acai
+            .provisioner
+            .optimize(&self.acai.profiler, &fitted, arg_values, objective)
+    }
+
+    /// Compose + submit a job from an auto-provisioning decision (the
+    /// paper: the provisioner "composes a new job using the configuration
+    /// and submits it to the job registry").
+    pub fn submit_provisioned(
+        &self,
+        template_name: &str,
+        arg_values: &[f64],
+        decision: &Decision,
+        input_fileset: &str,
+        output_fileset: &str,
+    ) -> Result<JobId> {
+        let fitted = self.acai.profiler.by_name(template_name)?;
+        let combo: Vec<(String, f64)> = fitted
+            .template
+            .hints
+            .iter()
+            .zip(arg_values)
+            .map(|((n, _), v)| (n.clone(), *v))
+            .collect();
+        let command = fitted.template.render(&combo);
+        self.submit(JobRequest {
+            name: format!("auto-{template_name}"),
+            command,
+            input_fileset: input_fileset.to_string(),
+            output_fileset: output_fileset.to_string(),
+            resources: decision.config,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! End-to-end SDK flows are in `rust/tests/sdk_integration.rs`; these
+    //! are the cheap auth-boundary checks.
+    use super::*;
+    use crate::platform::Acai;
+
+    #[test]
+    fn connect_requires_valid_token() {
+        let acai = Arc::new(Acai::boot_default());
+        assert!(Client::connect(acai.clone(), "bogus").is_err());
+        let root = acai.credentials.root_token().to_string();
+        let (_p, tok) = acai.credentials.create_project(&root, "nlp", "alice").unwrap();
+        let client = Client::connect(acai, &tok).unwrap();
+        assert!(client.identity().is_project_admin);
+    }
+
+    #[test]
+    fn clients_are_project_scoped() {
+        let acai = Arc::new(Acai::boot_default());
+        let root = acai.credentials.root_token().to_string();
+        let (_p1, t1) = acai.credentials.create_project(&root, "a", "u").unwrap();
+        let (_p2, t2) = acai.credentials.create_project(&root, "b", "u").unwrap();
+        let c1 = Client::connect(acai.clone(), &t1).unwrap();
+        let c2 = Client::connect(acai, &t2).unwrap();
+        c1.upload_files(&[("/f", b"one")]).unwrap();
+        assert!(c2.download("/f", None).is_err());
+        assert_eq!(c1.download("/f", None).unwrap(), b"one");
+    }
+}

@@ -1,0 +1,94 @@
+//! Virtual clock for the cluster simulator.
+//!
+//! The paper's evaluation sweeps hundreds of cloud jobs whose *billed*
+//! runtimes span hours; the simulator runs them in milliseconds of wall
+//! time by advancing a shared virtual clock between discrete events
+//! (container completions).  Real compute (PJRT MLP training) supplies the
+//! numerics; the clock supplies the billing time — see DESIGN.md.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A shared virtual clock, in virtual seconds (f64 stored as micros).
+#[derive(Debug, Clone, Default)]
+pub struct SimClock {
+    micros: Arc<AtomicU64>,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current virtual time, seconds.
+    pub fn now(&self) -> f64 {
+        self.micros.load(Ordering::SeqCst) as f64 / 1e6
+    }
+
+    /// Advance by `secs` (must be non-negative).
+    pub fn advance(&self, secs: f64) {
+        assert!(secs >= 0.0, "cannot advance clock backwards");
+        self.micros
+            .fetch_add((secs * 1e6).round() as u64, Ordering::SeqCst);
+    }
+
+    /// Advance to an absolute time, if it is in the future.
+    pub fn advance_to(&self, t: f64) {
+        let target = (t * 1e6).round() as u64;
+        let mut cur = self.micros.load(Ordering::SeqCst);
+        while target > cur {
+            match self.micros.compare_exchange(
+                cur,
+                target,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_zero() {
+        assert_eq!(SimClock::new().now(), 0.0);
+    }
+
+    #[test]
+    fn advances_monotonically() {
+        let c = SimClock::new();
+        c.advance(1.5);
+        assert!((c.now() - 1.5).abs() < 1e-9);
+        c.advance(0.25);
+        assert!((c.now() - 1.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn advance_to_never_goes_backwards() {
+        let c = SimClock::new();
+        c.advance_to(10.0);
+        c.advance_to(5.0);
+        assert!((c.now() - 10.0).abs() < 1e-9);
+        c.advance_to(12.0);
+        assert!((c.now() - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clones_share_time() {
+        let a = SimClock::new();
+        let b = a.clone();
+        a.advance(3.0);
+        assert!((b.now() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_advance_panics() {
+        SimClock::new().advance(-1.0);
+    }
+}

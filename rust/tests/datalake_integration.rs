@@ -1,0 +1,193 @@
+//! Data-lake integration: storage + file sets + metadata + provenance
+//! working together across services (paper §3.2, §4.4, §4.5).
+
+use acai::datalake::metadata::ArtifactKind;
+use acai::datalake::SessionState;
+use acai::docstore::Clause;
+use acai::ids::ProjectId;
+use acai::json::Json;
+use acai::Acai;
+
+const P: ProjectId = ProjectId(1);
+
+fn lake() -> Acai {
+    Acai::boot_default()
+}
+
+#[test]
+fn upload_fileset_materialize_round_trip() {
+    let acai = lake();
+    let dl = &acai.datalake;
+    dl.storage
+        .upload(
+            P,
+            &[
+                ("/data/train.json", b"train-data"),
+                ("/data/dev.json", b"dev-data"),
+            ],
+        )
+        .unwrap();
+    dl.filesets
+        .create(P, "HotpotQA", &["/data/train.json", "/data/dev.json"], "alice")
+        .unwrap();
+    let files = dl.filesets.materialize(P, "HotpotQA", None).unwrap();
+    assert_eq!(files.len(), 2);
+    let train = files.iter().find(|(p, _)| p == "/data/train.json").unwrap();
+    assert_eq!(&**train.1, b"train-data");
+}
+
+#[test]
+fn version_pinning_survives_many_updates() {
+    let acai = lake();
+    let dl = &acai.datalake;
+    for i in 0..10u32 {
+        dl.storage
+            .upload(P, &[("/f", format!("content-{i}").as_bytes())])
+            .unwrap();
+        if i == 4 {
+            dl.filesets.create(P, "snapshot", &["/f"], "alice").unwrap();
+        }
+    }
+    // snapshot still points at version 5 (uploads are 1-based)
+    let bytes = dl.filesets.materialize(P, "snapshot", None).unwrap();
+    assert_eq!(&**bytes[0].1, b"content-4");
+    assert_eq!(dl.storage.versions(P, "/f").len(), 10);
+}
+
+#[test]
+fn merge_update_subset_chain_builds_full_provenance() {
+    let acai = lake();
+    let dl = &acai.datalake;
+    dl.storage
+        .upload(
+            P,
+            &[
+                ("/data/a.json", b"a"),
+                ("/data/b.json", b"b"),
+                ("/validation/v.json", b"v"),
+            ],
+        )
+        .unwrap();
+    dl.filesets.create(P, "A", &["/data/a.json"], "alice").unwrap();
+    dl.filesets.create(P, "B", &["/data/b.json"], "alice").unwrap();
+    dl.filesets.create(P, "Merged", &["/@A", "/@B"], "alice").unwrap();
+    dl.filesets
+        .create(P, "Merged", &["/@Merged", "/validation/v.json"], "alice")
+        .unwrap();
+    dl.filesets
+        .create(P, "Val", &["/validation/@Merged:2"], "alice")
+        .unwrap();
+
+    // lineage of Val: Merged:2 -> {Merged:1, v.json} -> {A:1, B:1}
+    let ancestors = dl.provenance.ancestors(P, "Val", 1);
+    for expected in ["Merged:2", "Merged:1", "A:1", "B:1"] {
+        assert!(ancestors.contains(&expected.to_string()), "{ancestors:?}");
+    }
+    // and metadata exists for every file-set version
+    for id in ["A:1", "B:1", "Merged:1", "Merged:2", "Val:1"] {
+        assert!(
+            dl.metadata.get(P, ArtifactKind::FileSet, id).is_some(),
+            "{id}"
+        );
+    }
+}
+
+#[test]
+fn metadata_queries_cross_reference_provenance() {
+    let acai = lake();
+    let dl = &acai.datalake;
+    dl.storage.upload(P, &[("/m", b"x")]).unwrap();
+    dl.filesets.create(P, "S", &["/m"], "john").unwrap();
+    dl.metadata.tag(
+        P,
+        ArtifactKind::FileSet,
+        "S:1",
+        &[
+            ("model".into(), Json::from("BERT")),
+            ("precision".into(), Json::from(0.8)),
+        ],
+    );
+    let hits = dl
+        .metadata
+        .query(
+            P,
+            ArtifactKind::FileSet,
+            &[Clause::eq("model", "BERT"), Clause::gte("precision", 0.5)],
+        )
+        .unwrap();
+    assert_eq!(hits.len(), 1);
+    let (id, _) = &hits[0];
+    // the hit is a provenance node we can trace from
+    assert_eq!(id, "S:1");
+    assert!(dl.provenance.backward(P, "S", 1).is_empty()); // no upstream
+}
+
+#[test]
+fn concurrent_uploads_get_distinct_sequential_versions() {
+    let acai = lake();
+    let storage = acai.datalake.storage.clone();
+    let mut handles = vec![];
+    for _ in 0..8 {
+        let s = storage.clone();
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..10 {
+                s.upload(P, &[("/contended", b"x")]).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let versions = storage.versions(P, "/contended");
+    assert_eq!(versions.len(), 80);
+    // dense 1..=80, no gaps, no duplicates
+    assert_eq!(versions, (1..=80).collect::<Vec<u32>>());
+}
+
+#[test]
+fn abandoned_session_does_not_block_future_versions() {
+    let acai = lake();
+    let dl = &acai.datalake;
+    dl.storage.upload(P, &[("/f", b"v1")]).unwrap();
+    // start a session and walk away (no uploads)
+    let (id, _grants) = dl.storage.start_session(P, &["/f"]).unwrap();
+    assert!(matches!(
+        dl.storage.poll_session(id).unwrap(),
+        SessionState::Pending { .. }
+    ));
+    // other clients continue unimpeded
+    let v = dl.storage.upload(P, &[("/f", b"v2")]).unwrap();
+    assert_eq!(v[0].1, 2);
+    dl.storage.abort_session(id).unwrap();
+    let v = dl.storage.upload(P, &[("/f", b"v3")]).unwrap();
+    assert_eq!(v[0].1, 3);
+}
+
+#[test]
+fn fileset_spec_language_full_tour() {
+    let acai = lake();
+    let dl = &acai.datalake;
+    dl.storage
+        .upload(P, &[("/d/x", b"x1"), ("/d/y", b"y1"), ("/e/z", b"z1")])
+        .unwrap();
+    dl.storage.upload(P, &[("/d/x", b"x2")]).unwrap();
+    dl.filesets
+        .create(P, "Set", &["/d/x#1", "/d/y", "/e/z"], "u")
+        .unwrap();
+
+    // exact-version spec
+    let r = dl.filesets.resolve(P, &["/d/x#1"]).unwrap();
+    assert_eq!(r.entries, vec![("/d/x".to_string(), 1)]);
+    // paper's space-suffix version spec
+    let r = dl.filesets.resolve(P, &["/d/x 2"]).unwrap();
+    assert_eq!(r.entries, vec![("/d/x".to_string(), 2)]);
+    // file-at-set spec
+    let r = dl.filesets.resolve(P, &["/d/x@Set"]).unwrap();
+    assert_eq!(r.entries, vec![("/d/x".to_string(), 1)]);
+    // directory filter
+    let r = dl.filesets.resolve(P, &["/d/@Set:1"]).unwrap();
+    assert_eq!(r.entries.len(), 2);
+    // whole set
+    let r = dl.filesets.resolve(P, &["/@Set"]).unwrap();
+    assert_eq!(r.entries.len(), 3);
+}

@@ -1,0 +1,271 @@
+//! Execution-engine integration: the full job flow of paper Figure 9 —
+//! submit → queue → launch → run → upload → provenance + metadata,
+//! plus quotas, kills, and multi-user fairness.
+
+use acai::cluster::ResourceConfig;
+use acai::datalake::metadata::ArtifactKind;
+use acai::docstore::Clause;
+use acai::engine::{JobSpec, JobState};
+use acai::ids::{ProjectId, UserId};
+use acai::json::Json;
+use acai::{Acai, PlatformConfig};
+
+const P: ProjectId = ProjectId(1);
+const U: UserId = UserId(1);
+
+fn platform() -> Acai {
+    Acai::boot_default()
+}
+
+fn seed_input(acai: &Acai) {
+    acai.datalake
+        .storage
+        .upload(P, &[("/data/train.bin", b"training-data")])
+        .unwrap();
+    acai.datalake
+        .filesets
+        .create(P, "mnist", &["/data/train.bin"], "alice")
+        .unwrap();
+}
+
+fn job(name: &str, epochs: u32, res: ResourceConfig) -> JobSpec {
+    JobSpec {
+        project: P,
+        user: U,
+        name: name.into(),
+        command: format!("python train_mnist.py --epoch {epochs}"),
+        input_fileset: "mnist".into(),
+        output_fileset: format!("{name}-out"),
+        resources: res,
+    }
+}
+
+#[test]
+fn full_job_flow_produces_outputs_provenance_and_metadata() {
+    let acai = platform();
+    seed_input(&acai);
+    let id = acai
+        .engine
+        .submit(job("train", 5, ResourceConfig::new(2.0, 2048)))
+        .unwrap();
+    acai.engine.run_until_idle();
+
+    let record = acai.engine.registry.get(id).unwrap();
+    assert_eq!(record.state, JobState::Finished);
+    let runtime = record.runtime_secs.unwrap();
+    assert!(runtime > 10.0 && runtime < 25.0, "runtime {runtime}");
+    assert!(record.cost.unwrap() > 0.0);
+
+    // output file set exists and holds the model
+    let out = acai
+        .datalake
+        .filesets
+        .materialize(P, "train-out", None)
+        .unwrap();
+    assert!(out.iter().any(|(p, _)| p == "/model/mlp.bin"));
+
+    // provenance edge: mnist:1 --job--> train-out:1
+    let fwd = acai.datalake.provenance.forward(P, "mnist", 1);
+    assert_eq!(fwd.len(), 1);
+    assert_eq!(fwd[0].to, "train-out:1");
+    assert_eq!(fwd[0].action, id.to_string());
+
+    // log parser fed metadata: training_loss + runtime + cost on the job
+    let doc = acai
+        .datalake
+        .metadata
+        .get(P, ArtifactKind::Job, &id.to_string())
+        .unwrap();
+    assert!(doc.get("training_loss").and_then(Json::as_f64).is_some());
+    assert!(doc.get("runtime_secs").and_then(Json::as_f64).is_some());
+    assert_eq!(doc.get("state").and_then(Json::as_str), Some("finished"));
+    // ...and on the output file set
+    let fs_doc = acai
+        .datalake
+        .metadata
+        .get(P, ArtifactKind::FileSet, "train-out:1")
+        .unwrap();
+    assert!(fs_doc.get("training_loss").and_then(Json::as_f64).is_some());
+
+    // progress history followed Fig 9
+    let stages: Vec<String> = acai
+        .engine
+        .monitor
+        .history(id)
+        .into_iter()
+        .map(|p| p.stage)
+        .collect();
+    assert_eq!(
+        stages,
+        vec!["queued", "downloading", "running", "uploading", "finished"]
+    );
+}
+
+#[test]
+fn quota_k_limits_concurrency_per_user() {
+    let config = PlatformConfig {
+        quota_k: 2,
+        ..Default::default()
+    };
+    let acai = Acai::boot(config).unwrap();
+    seed_input(&acai);
+    for i in 0..6 {
+        acai.engine
+            .submit(job(&format!("j{i}"), 10, ResourceConfig::new(0.5, 512)))
+            .unwrap();
+    }
+    // after submission, exactly 2 running (quota), 4 queued
+    assert_eq!(acai.cluster.running_count(), 2);
+    assert_eq!(acai.engine.scheduler.queued((P, U)), 4);
+    acai.engine.run_until_idle();
+    let records = acai.engine.registry.list(P, Some(U));
+    assert!(records.iter().all(|r| r.state == JobState::Finished));
+}
+
+#[test]
+fn two_users_progress_independently() {
+    let config = PlatformConfig {
+        quota_k: 1,
+        ..Default::default()
+    };
+    let acai = Acai::boot(config).unwrap();
+    seed_input(&acai);
+    let mut ids = vec![];
+    for user in [UserId(1), UserId(2)] {
+        for i in 0..3 {
+            let mut spec = job(&format!("u{}-{i}", user.raw()), 4, ResourceConfig::new(0.5, 512));
+            spec.user = user;
+            ids.push(acai.engine.submit(spec).unwrap());
+        }
+    }
+    // one job per user running despite quota 1
+    assert_eq!(acai.cluster.running_count(), 2);
+    acai.engine.run_until_idle();
+    for id in ids {
+        assert_eq!(acai.engine.registry.get(id).unwrap().state, JobState::Finished);
+    }
+}
+
+#[test]
+fn kill_queued_and_running_jobs() {
+    let config = PlatformConfig {
+        quota_k: 1,
+        ..Default::default()
+    };
+    let acai = Acai::boot(config).unwrap();
+    seed_input(&acai);
+    let a = acai
+        .engine
+        .submit(job("a", 50, ResourceConfig::new(1.0, 1024)))
+        .unwrap();
+    let b = acai
+        .engine
+        .submit(job("b", 50, ResourceConfig::new(1.0, 1024)))
+        .unwrap();
+    // a running (quota 1), b queued
+    acai.engine.kill(b).unwrap();
+    assert_eq!(acai.engine.registry.get(b).unwrap().state, JobState::Killed);
+    acai.engine.kill(a).unwrap();
+    assert_eq!(acai.engine.registry.get(a).unwrap().state, JobState::Killed);
+    assert_eq!(acai.cluster.running_count(), 0);
+    // double-kill is a clean conflict
+    assert_eq!(acai.engine.kill(a).unwrap_err().status(), 409);
+}
+
+#[test]
+fn immutable_triplet_jobs_cannot_be_resubmitted() {
+    // the registry assigns a fresh id per submission; the same spec
+    // submitted twice is two jobs, each scheduled exactly once
+    let acai = platform();
+    seed_input(&acai);
+    let a = acai
+        .engine
+        .submit(job("same", 2, ResourceConfig::new(0.5, 512)))
+        .unwrap();
+    let b = acai
+        .engine
+        .submit(job("same", 2, ResourceConfig::new(0.5, 512)))
+        .unwrap();
+    assert_ne!(a, b);
+    acai.engine.run_until_idle();
+    // two output versions of the same file set name
+    assert_eq!(acai.datalake.filesets.latest_version(P, "same-out"), Some(2));
+}
+
+#[test]
+fn submit_validates_resources_and_input() {
+    let acai = platform();
+    seed_input(&acai);
+    let mut bad = job("x", 1, ResourceConfig::new(0.3, 512));
+    assert_eq!(acai.engine.submit(bad.clone()).unwrap_err().status(), 400);
+    bad.resources = ResourceConfig::new(1.0, 1024);
+    bad.input_fileset = "no-such-set".into();
+    assert_eq!(acai.engine.submit(bad.clone()).unwrap_err().status(), 404);
+    bad.input_fileset = "mnist".into();
+    bad.output_fileset = "".into();
+    assert_eq!(acai.engine.submit(bad).unwrap_err().status(), 400);
+}
+
+#[test]
+fn cluster_saturation_requeues_and_retries() {
+    // a cluster with a single small node: jobs must take turns
+    let mut config = PlatformConfig::default();
+    config.cluster.nodes = vec![acai::cluster::NodeSpec {
+        vcpus: 2.0,
+        mem_mb: 2048,
+    }];
+    config.quota_k = 8;
+    let acai = Acai::boot(config).unwrap();
+    seed_input(&acai);
+    let mut ids = vec![];
+    for i in 0..4 {
+        ids.push(
+            acai.engine
+                .submit(job(&format!("s{i}"), 2, ResourceConfig::new(2.0, 2048)))
+                .unwrap(),
+        );
+    }
+    // only one fits at a time
+    assert_eq!(acai.cluster.running_count(), 1);
+    acai.engine.run_until_idle();
+    for id in ids {
+        assert_eq!(acai.engine.registry.get(id).unwrap().state, JobState::Finished);
+    }
+}
+
+#[test]
+fn metadata_arg_queries_find_jobs_by_epoch() {
+    let acai = platform();
+    seed_input(&acai);
+    for epochs in [5, 10, 20] {
+        acai.engine
+            .submit(job(&format!("e{epochs}"), epochs, ResourceConfig::new(0.5, 512)))
+            .unwrap();
+    }
+    acai.engine.run_until_idle();
+    let hits = acai
+        .datalake
+        .metadata
+        .query(P, ArtifactKind::Job, &[Clause::gte("arg_epoch", 10.0)])
+        .unwrap();
+    assert_eq!(hits.len(), 2);
+}
+
+#[test]
+fn billing_uses_pricing_model_exactly() {
+    let acai = platform();
+    seed_input(&acai);
+    let id = acai
+        .engine
+        .submit(job("b", 20, ResourceConfig::new(2.0, 7680)))
+        .unwrap();
+    acai.engine.run_until_idle();
+    let record = acai.engine.registry.get(id).unwrap();
+    let expect = acai
+        .pricing
+        .cost(record.spec.resources, record.runtime_secs.unwrap());
+    assert!((record.cost.unwrap() - expect).abs() < 1e-12);
+    // Table 2's baseline: ~64.6 s, ~$0.0977
+    assert!((record.runtime_secs.unwrap() - 64.6).abs() < 2.0);
+    assert!((record.cost.unwrap() - 0.09765).abs() < 0.004);
+}

@@ -1,0 +1,193 @@
+//! Failure injection: dropped uploads, failing containers, stragglers,
+//! and crash recovery of the session journal — the paths §4.4.3 and
+//! §4.2.2 exist for.
+
+use acai::cluster::ResourceConfig;
+use acai::datalake::SessionState;
+use acai::engine::{JobSpec, JobState};
+use acai::ids::{ProjectId, UserId};
+use acai::kvstore::KvStore;
+use acai::{Acai, PlatformConfig};
+
+const P: ProjectId = ProjectId(1);
+const U: UserId = UserId(1);
+
+fn seed(acai: &Acai) {
+    acai.datalake.storage.upload(P, &[("/d", b"x")]).unwrap();
+    acai.datalake.filesets.create(P, "in", &["/d"], "u").unwrap();
+}
+
+fn job(i: usize) -> JobSpec {
+    JobSpec {
+        project: P,
+        user: U,
+        name: format!("j{i}"),
+        command: "python train_mnist.py --epoch 2".into(),
+        input_fileset: "in".into(),
+        output_fileset: format!("o{i}"),
+        resources: ResourceConfig::new(1.0, 1024),
+    }
+}
+
+#[test]
+fn container_failures_mark_jobs_failed_and_free_quota() {
+    let mut config = PlatformConfig::default();
+    config.cluster.failure_rate = 0.5;
+    config.cluster.seed = 7;
+    config.quota_k = 2;
+    let acai = Acai::boot(config).unwrap();
+    seed(&acai);
+    let ids: Vec<_> = (0..12).map(|i| acai.engine.submit(job(i)).unwrap()).collect();
+    acai.engine.run_until_idle();
+    let mut finished = 0;
+    let mut failed = 0;
+    for id in ids {
+        match acai.engine.registry.get(id).unwrap().state {
+            JobState::Finished => finished += 1,
+            JobState::Failed => failed += 1,
+            s => panic!("job stuck in {s:?}"),
+        }
+    }
+    assert!(finished > 0 && failed > 0, "finished={finished} failed={failed}");
+    // all resources freed
+    assert_eq!(acai.cluster.utilization().0, 0);
+    // failed jobs are still billed for their runtime (the paper bills
+    // resource-time, not success)
+}
+
+#[test]
+fn failed_jobs_produce_no_output_fileset_or_provenance() {
+    let mut config = PlatformConfig::default();
+    config.cluster.failure_rate = 1.0;
+    let acai = Acai::boot(config).unwrap();
+    seed(&acai);
+    let id = acai.engine.submit(job(0)).unwrap();
+    acai.engine.run_until_idle();
+    assert_eq!(acai.engine.registry.get(id).unwrap().state, JobState::Failed);
+    assert!(acai.datalake.filesets.latest_version(P, "o0").is_none());
+    assert!(acai.datalake.provenance.forward(P, "in", 1).is_empty());
+    // error is recorded in the logs
+    let logs = acai.engine.logs.get(id);
+    assert!(logs.iter().any(|l| l.contains("failed")), "{logs:?}");
+}
+
+#[test]
+fn stragglers_dont_block_the_profile_barrier() {
+    let mut config = PlatformConfig::default();
+    config.cluster.straggler_rate = 0.04; // ~1 straggler in 27 trials
+    config.cluster.straggler_factor = 50.0;
+    config.cluster.seed = 3;
+    let acai = Acai::boot(config).unwrap();
+    seed(&acai);
+    let t0 = acai.clock.now();
+    acai.profiler
+        .profile("t", "python train_mnist.py --epoch {1,2,3}", P, U, "in")
+        .unwrap();
+    let fitted = acai.profiler.by_name("t").unwrap();
+    // the barrier waited for >= 95% (26 of 27), not for the straggler
+    assert!(fitted.trials.len() >= 26, "{}", fitted.trials.len());
+    // the fit is still usable
+    assert!((fitted.theta[3] - 1.0).abs() < 0.25, "{:?}", fitted.theta);
+    let elapsed = acai.clock.now() - t0;
+    assert!(elapsed > 0.0);
+}
+
+#[test]
+fn upload_failure_then_retry_preserves_version_density() {
+    let acai = Acai::boot_default();
+    let storage = &acai.datalake.storage;
+    storage.upload(P, &[("/f", b"v1")]).unwrap();
+
+    // simulate a flaky network: 3 failed upload attempts
+    for _ in 0..3 {
+        let objects = acai_objects(&acai);
+        objects.inject_put_failures(1);
+        let (id, grants) = storage.start_session(P, &["/f"]).unwrap();
+        assert!(objects.put_presigned(&grants[0].1.token, b"x".to_vec()).is_err());
+        storage.abort_session(id).unwrap();
+    }
+    let v = storage.upload(P, &[("/f", b"v2")]).unwrap();
+    assert_eq!(v[0].1, 2, "failed attempts must not burn versions");
+}
+
+/// Reach the object store through the session-granting path.
+fn acai_objects(acai: &Acai) -> acai::objectstore::ObjectStore {
+    // The platform shares one object store; grab it via a presign round
+    // trip (the storage server is the only holder). For tests we rebuild
+    // access by uploading through storage, so here we just expose the
+    // store the platform was built with.
+    acai.object_store()
+}
+
+#[test]
+fn session_journal_survives_crash_and_can_be_continued() {
+    let dir = std::env::temp_dir().join(format!("acai-crash-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("crash.log");
+    let _ = std::fs::remove_file(&journal);
+
+    let kv = KvStore::open(&journal).unwrap();
+    kv.put(
+        "sessions",
+        "sess-1",
+        acai::json::parse(
+            r#"{"project":1,"state":"pending","created":0,
+                "files":[{"path":"/a","key":"obj-9","uploaded":true},
+                          {"path":"/b","key":"obj-10","uploaded":false}]}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    // crash + restart
+    let kv2 = kv.reopen().unwrap();
+    let row = kv2.get("sessions", "sess-1").unwrap();
+    let session =
+        acai::datalake::UploadSession::from_json(acai::ids::SessionId(1), &row).unwrap();
+    assert!(matches!(
+        session.state,
+        SessionState::Pending { uploaded: 1, total: 2 }
+    ));
+    assert!(!session.complete());
+    let _ = std::fs::remove_file(&journal);
+}
+
+#[test]
+fn presigned_token_abuse_is_rejected() {
+    let acai = Acai::boot_default();
+    let objects = acai.object_store();
+    let storage = &acai.datalake.storage;
+    let (_id, grants) = storage.start_session(P, &["/f"]).unwrap();
+    let token = &grants[0].1.token;
+    objects.put_presigned(token, b"ok".to_vec()).unwrap();
+    // replay: rejected
+    assert_eq!(
+        objects.put_presigned(token, b"evil".to_vec()).unwrap_err().status(),
+        401
+    );
+    // forged token: rejected
+    assert_eq!(
+        objects.put_presigned("ps-put-ffff", b"evil".to_vec()).unwrap_err().status(),
+        401
+    );
+}
+
+#[test]
+fn mixed_failures_and_stragglers_under_load() {
+    let mut config = PlatformConfig::default();
+    config.cluster.failure_rate = 0.15;
+    config.cluster.straggler_rate = 0.1;
+    config.cluster.straggler_factor = 5.0;
+    config.noise = 0.05;
+    config.quota_k = 4;
+    config.cluster.seed = 99;
+    let acai = Acai::boot(config).unwrap();
+    seed(&acai);
+    let ids: Vec<_> = (0..40).map(|i| acai.engine.submit(job(i)).unwrap()).collect();
+    acai.engine.run_until_idle();
+    for id in ids {
+        let state = acai.engine.registry.get(id).unwrap().state;
+        assert!(state.is_terminal(), "{id} stuck in {state:?}");
+    }
+    assert_eq!(acai.cluster.running_count(), 0);
+    assert_eq!(acai.cluster.utilization().0, 0);
+}

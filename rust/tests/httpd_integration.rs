@@ -1,0 +1,160 @@
+//! REST edge over real sockets: the credential-server authenticate +
+//! redirect flow of paper §4.1/Figure 7 driven by an HTTP client.
+
+use std::sync::Arc;
+
+use acai::api::make_handler;
+use acai::httpd::{get_json, post_json, request, Server};
+use acai::json::Json;
+use acai::Acai;
+
+fn serve() -> (Arc<Acai>, Server, String) {
+    let acai = Arc::new(Acai::boot_default());
+    let root = acai.credentials.root_token().to_string();
+    let server = Server::serve(0, make_handler(acai.clone())).unwrap();
+    (acai, server, root)
+}
+
+#[test]
+fn bootstrap_project_then_full_flow_over_http() {
+    let (_acai, server, root) = serve();
+    let addr = server.addr();
+
+    // 1. create a project (global admin)
+    let resp = post_json(
+        addr,
+        "/projects",
+        "",
+        &Json::obj()
+            .field("root_token", root.as_str())
+            .field("name", "nlp")
+            .field("admin", "alice")
+            .build(),
+    )
+    .unwrap();
+    let token = resp.get("admin_token").and_then(Json::as_str).unwrap().to_string();
+
+    // 2. create a second user (project admin privilege)
+    let resp = post_json(
+        addr,
+        "/users",
+        &token,
+        &Json::obj().field("name", "bob").build(),
+    )
+    .unwrap();
+    assert!(resp.get("token").and_then(Json::as_str).is_some());
+
+    // 3. build a file set (requires data; upload through the data path
+    //    is presigned/direct — here we preload via a spec-less set error
+    //    first, then a real one after a job runs)
+    //    Submit a job with no input instead:
+    let resp = post_json(
+        addr,
+        "/jobs",
+        &token,
+        &Json::obj()
+            .field("name", "http-train")
+            .field("command", "python train_mnist.py --epoch 2")
+            .field("input_fileset", "")
+            .field("output_fileset", "http-model")
+            .field("vcpus", 1.0)
+            .field("mem_mb", 1024u64)
+            .build(),
+    )
+    .unwrap();
+    assert_eq!(resp.get("state").and_then(Json::as_str), Some("finished"));
+    assert!(resp.get("runtime_secs").and_then(Json::as_f64).unwrap() > 0.0);
+
+    // 4. job listing + metadata over HTTP
+    let jobs = get_json(addr, "/jobs", &token).unwrap();
+    assert_eq!(jobs.as_array().unwrap().len(), 1);
+    let job_id = jobs.at(0).unwrap().get("job").unwrap().as_str().unwrap().to_string();
+    let meta = get_json(addr, &format!("/metadata?kind=jobs&id={job_id}"), &token).unwrap();
+    assert_eq!(meta.get("state").and_then(Json::as_str), Some("finished"));
+
+    // 5. provenance graph over HTTP
+    let graph = get_json(addr, "/provenance", &token).unwrap();
+    let nodes = graph.get("nodes").and_then(Json::as_array).unwrap();
+    assert!(nodes.iter().any(|n| n.as_str() == Some("http-model:1")));
+}
+
+#[test]
+fn requests_without_token_are_401() {
+    let (_acai, server, _root) = serve();
+    let resp = request(server.addr(), "GET", "/jobs", &[], b"").unwrap();
+    assert_eq!(resp.status, 401);
+}
+
+#[test]
+fn requests_with_bad_token_are_401() {
+    let (_acai, server, _root) = serve();
+    let resp = request(
+        server.addr(),
+        "GET",
+        "/jobs",
+        &[("x-acai-token", "forged")],
+        b"",
+    )
+    .unwrap();
+    assert_eq!(resp.status, 401);
+}
+
+#[test]
+fn project_creation_with_wrong_root_is_403() {
+    let (_acai, server, _root) = serve();
+    let err = post_json(
+        server.addr(),
+        "/projects",
+        "",
+        &Json::obj()
+            .field("root_token", "wrong")
+            .field("name", "x")
+            .field("admin", "a")
+            .build(),
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("403"), "{err}");
+}
+
+#[test]
+fn unknown_route_is_404() {
+    let (acai, server, root) = serve();
+    let (_p, token) = acai.credentials.create_project(&root, "p", "u").unwrap();
+    let resp = request(
+        server.addr(),
+        "GET",
+        "/nope",
+        &[("x-acai-token", token.as_str())],
+        b"",
+    )
+    .unwrap();
+    assert_eq!(resp.status, 404);
+}
+
+#[test]
+fn concurrent_clients_are_isolated_by_token() {
+    let (acai, server, root) = serve();
+    let addr = server.addr();
+    let (_p1, t1) = acai.credentials.create_project(&root, "a", "u").unwrap();
+    let (_p2, t2) = acai.credentials.create_project(&root, "b", "u").unwrap();
+    let h1 = std::thread::spawn(move || {
+        post_json(
+            addr,
+            "/jobs",
+            &t1,
+            &Json::obj()
+                .field("name", "j1")
+                .field("command", "python train_mnist.py --epoch 1")
+                .field("input_fileset", "")
+                .field("output_fileset", "m1")
+                .field("vcpus", 0.5)
+                .field("mem_mb", 512u64)
+                .build(),
+        )
+        .unwrap()
+    });
+    h1.join().unwrap();
+    // project b sees no jobs
+    let jobs = get_json(addr, "/jobs", &t2).unwrap();
+    assert!(jobs.as_array().unwrap().is_empty());
+}

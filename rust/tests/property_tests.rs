@@ -1,0 +1,417 @@
+//! Property tests (via the in-crate testkit mini-framework) over the
+//! coordinator's core invariants: scheduling fairness, version
+//! monotonicity, file-set resolution, index consistency, DAG acyclicity,
+//! JSON round-tripping, and pricing monotonicity.
+
+use acai::cluster::ResourceConfig;
+use acai::docstore::{Clause, DocStore};
+use acai::engine::{JobSpec, JobState, Scheduler};
+use acai::graphstore::GraphStore;
+use acai::ids::{JobId, ProjectId, UserId};
+use acai::json::Json;
+use acai::pricing::PricingModel;
+use acai::testkit::property;
+use acai::{Acai, PlatformConfig};
+
+#[test]
+fn prop_scheduler_never_exceeds_quota_and_preserves_fifo() {
+    property("scheduler invariants", 60, |g| {
+        let quota = g.usize(1..5);
+        let scheduler = Scheduler::new(quota);
+        let users = g.usize(1..4);
+        let mut queued: Vec<Vec<u64>> = vec![vec![]; users];
+        let mut next_id = 1u64;
+
+        // interleave random enqueues / launches / completions
+        let mut active: Vec<Vec<u64>> = vec![vec![]; users];
+        let mut launched_order: Vec<Vec<u64>> = vec![vec![]; users];
+        for _ in 0..g.usize(10..60) {
+            match g.usize(0..3) {
+                0 => {
+                    let u = g.usize(0..users);
+                    let key = (ProjectId(1), UserId(u as u64));
+                    scheduler.enqueue(key, JobId(next_id));
+                    queued[u].push(next_id);
+                    next_id += 1;
+                }
+                1 => {
+                    for (key, job) in scheduler.launchable() {
+                        let u = key.1.raw() as usize;
+                        active[u].push(job.raw());
+                        launched_order[u].push(job.raw());
+                        let pos = queued[u].iter().position(|j| *j == job.raw()).unwrap();
+                        queued[u].remove(pos);
+                        // INVARIANT: quota respected at every instant
+                        assert!(active[u].len() <= quota, "quota violated");
+                    }
+                }
+                _ => {
+                    let u = g.usize(0..users);
+                    if !active[u].is_empty() {
+                        active[u].pop();
+                        scheduler.on_terminal((ProjectId(1), UserId(u as u64)));
+                    }
+                }
+            }
+        }
+        // INVARIANT: per-user launch order is FIFO (ids are monotone
+        // within a user because we enqueue monotonically)
+        for order in &launched_order {
+            let mut sorted = order.clone();
+            sorted.sort();
+            assert_eq!(*order, sorted, "FIFO violated");
+        }
+    });
+}
+
+#[test]
+fn prop_file_versions_are_dense_and_monotone() {
+    property("version monotonicity", 30, |g| {
+        let acai = Acai::boot_default();
+        let p = ProjectId(1);
+        let paths: Vec<String> = (0..g.usize(1..4)).map(|i| format!("/f{i}")).collect();
+        let mut counts = vec![0u32; paths.len()];
+        for _ in 0..g.usize(1..30) {
+            let i = g.usize(0..paths.len());
+            let versions = acai
+                .datalake
+                .storage
+                .upload(p, &[(paths[i].as_str(), b"x")])
+                .unwrap();
+            counts[i] += 1;
+            // INVARIANT: version assigned == count of uploads so far
+            assert_eq!(versions[0].1, counts[i]);
+        }
+        for (path, count) in paths.iter().zip(&counts) {
+            let versions = acai.datalake.storage.versions(p, path);
+            assert_eq!(versions, (1..=*count).collect::<Vec<u32>>());
+        }
+    });
+}
+
+#[test]
+fn prop_fileset_resolution_is_deterministic_and_single_version_per_path() {
+    property("fileset resolution", 30, |g| {
+        let acai = Acai::boot_default();
+        let p = ProjectId(1);
+        let n_files = g.usize(1..6);
+        let paths: Vec<String> = (0..n_files).map(|i| format!("/data/f{i}")).collect();
+        for path in &paths {
+            for _ in 0..g.usize(1..4) {
+                acai.datalake.storage.upload(p, &[(path.as_str(), b"x")]).unwrap();
+            }
+        }
+        // random specs: mix of plain paths and versioned ones
+        let mut specs: Vec<String> = vec![];
+        for _ in 0..g.usize(1..8) {
+            let path = &paths[g.usize(0..paths.len())];
+            let versions = acai.datalake.storage.versions(p, path);
+            if g.bool(0.5) {
+                specs.push(path.clone());
+            } else {
+                let v = versions[g.usize(0..versions.len())];
+                specs.push(format!("{path}#{v}"));
+            }
+        }
+        let refs: Vec<&str> = specs.iter().map(|s| s.as_str()).collect();
+        let r1 = acai.datalake.filesets.resolve(p, &refs).unwrap();
+        let r2 = acai.datalake.filesets.resolve(p, &refs).unwrap();
+        // INVARIANT: deterministic
+        assert_eq!(r1, r2);
+        // INVARIANT: one version per path
+        let mut seen = std::collections::HashSet::new();
+        for (path, _) in &r1.entries {
+            assert!(seen.insert(path.clone()), "duplicate path {path}");
+        }
+    });
+}
+
+#[test]
+fn prop_docstore_queries_match_linear_scan() {
+    property("docstore index consistency", 40, |g| {
+        let ds = DocStore::new();
+        let n = g.usize(1..40);
+        let mut docs = Vec::new();
+        for i in 0..n {
+            let v = g.f64(0.0, 1.0);
+            let cat = *g.pick(&["a", "b", "c"]);
+            ds.put(
+                "c",
+                &format!("doc-{i:04}"),
+                Json::obj().field("v", v).field("cat", cat).build(),
+            );
+            docs.push((format!("doc-{i:04}"), v, cat));
+        }
+        let lo = g.f64(0.0, 1.0);
+        let hi = g.f64(lo, 1.0);
+        let cat = *g.pick(&["a", "b", "c"]);
+        let hits = ds
+            .find("c", &[Clause::eq("cat", cat), Clause::gte("v", lo), Clause::lte("v", hi)])
+            .unwrap();
+        let expected: Vec<String> = docs
+            .iter()
+            .filter(|(_, v, c)| *c == cat && *v >= lo && *v <= hi)
+            .map(|(id, _, _)| id.clone())
+            .collect();
+        let got: Vec<String> = hits.into_iter().map(|(id, _)| id).collect();
+        assert_eq!(got, expected);
+    });
+}
+
+#[test]
+fn prop_random_dags_stay_acyclic() {
+    property("graph acyclicity", 40, |g| {
+        let graph = GraphStore::new();
+        let nodes = g.usize(2..12);
+        for _ in 0..g.usize(1..40) {
+            let a = g.usize(0..nodes);
+            let b = g.usize(0..nodes);
+            let _ = graph.add_edge(
+                &format!("n{a}"),
+                &format!("n{b}"),
+                "e",
+                "job_execution",
+            ); // may reject; that's the point
+        }
+        // INVARIANT: topo order covers every node exactly once
+        let (all_nodes, edges) = graph.whole_graph();
+        let order = graph.topo_order();
+        assert_eq!(order.len(), all_nodes.len());
+        let pos: std::collections::HashMap<&str, usize> = order
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.as_str(), i))
+            .collect();
+        for e in &edges {
+            assert!(pos[e.from.as_str()] < pos[e.to.as_str()], "edge against topo order");
+        }
+    });
+}
+
+#[test]
+fn prop_json_encode_parse_round_trip() {
+    property("json round trip", 80, |g| {
+        fn gen_value(g: &mut acai::testkit::Gen, depth: usize) -> Json {
+            match if depth == 0 { g.usize(0..4) } else { g.usize(0..6) } {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool(0.5)),
+                2 => Json::Num((g.f64(-1e6, 1e6) * 1000.0).round() / 1000.0),
+                3 => Json::Str(g.ident(12)),
+                4 => {
+                    let n = g.usize(0..4);
+                    Json::Arr((0..n).map(|_| gen_value(g, depth - 1)).collect())
+                }
+                _ => {
+                    let n = g.usize(0..4);
+                    let mut b = Json::obj();
+                    for _ in 0..n {
+                        let key = g.ident(8);
+                        b = b.field(key, gen_value(g, depth - 1));
+                    }
+                    b.build()
+                }
+            }
+        }
+        let v = gen_value(g, 3);
+        let parsed = acai::json::parse(&v.encode()).unwrap();
+        assert_eq!(parsed, v);
+    });
+}
+
+#[test]
+fn prop_pricing_is_monotone_in_resources_and_time() {
+    property("pricing monotonicity", 60, |g| {
+        let p = PricingModel::default();
+        let c1 = g.usize(1..16) as f64 * 0.5;
+        let c2 = c1 + 0.5;
+        let m1 = (g.usize(2..32) * 256) as u32;
+        let m2 = m1 + 256;
+        let t = g.f64(1.0, 10_000.0);
+        assert!(
+            p.cost(ResourceConfig::new(c2, m1), t) > p.cost(ResourceConfig::new(c1, m1), t)
+        );
+        assert!(
+            p.cost(ResourceConfig::new(c1, m2), t) > p.cost(ResourceConfig::new(c1, m1), t)
+        );
+        assert!(p.cost(ResourceConfig::new(c1, m1), t * 2.0) > p.cost(ResourceConfig::new(c1, m1), t));
+    });
+}
+
+#[test]
+fn prop_engine_batches_always_terminate_with_conserved_billing() {
+    property("engine batch conservation", 10, |g| {
+        let config = PlatformConfig {
+            quota_k: g.usize(1..5),
+            ..Default::default()
+        };
+        let acai = Acai::boot(config).unwrap();
+        let p = ProjectId(1);
+        acai.datalake.storage.upload(p, &[("/d", b"x")]).unwrap();
+        acai.datalake.filesets.create(p, "in", &["/d"], "u").unwrap();
+        let n = g.usize(1..12);
+        let mut ids = vec![];
+        for i in 0..n {
+            let epochs = g.usize(1..6) as u32;
+            ids.push(
+                acai.engine
+                    .submit(JobSpec {
+                        project: p,
+                        user: UserId(g.usize(1..3) as u64),
+                        name: format!("j{i}"),
+                        command: format!("python train_mnist.py --epoch {epochs}"),
+                        input_fileset: "in".into(),
+                        output_fileset: format!("o{i}"),
+                        resources: ResourceConfig::new(
+                            g.usize(1..16) as f64 * 0.5,
+                            (g.usize(2..32) * 256) as u32,
+                        ),
+                    })
+                    .unwrap(),
+            );
+        }
+        acai.engine.run_until_idle();
+        for id in ids {
+            let r = acai.engine.registry.get(id).unwrap();
+            // INVARIANT: terminal, billed consistently with the pricing model
+            assert_eq!(r.state, JobState::Finished);
+            let expect = acai.pricing.cost(r.spec.resources, r.runtime_secs.unwrap());
+            assert!((r.cost.unwrap() - expect).abs() < 1e-9);
+        }
+        // INVARIANT: all cluster resources returned
+        let (used, _, used_mem, _) = acai.cluster.utilization();
+        assert_eq!((used, used_mem), (0, 0));
+    });
+}
+
+#[test]
+fn prop_upload_sessions_serialize_versions_under_chaos() {
+    // The §4.4.3 guarantees under random interleavings of successful
+    // uploads, injected failures, aborts, and resumes: versions stay
+    // dense and sequential, committed content is never lost, and no
+    // aborted bytes leak into the version history.
+    use acai::datalake::SessionState;
+    property("upload session chaos", 25, |g| {
+        let acai = Acai::boot_default();
+        let storage = acai.datalake.storage.clone();
+        let objects = acai.object_store();
+        let p = ProjectId(1);
+        let mut committed: Vec<String> = vec![]; // content per version, in order
+        for round in 0..g.usize(1..25) {
+            let content = format!("round-{round}");
+            match g.usize(0..4) {
+                0 => {
+                    // clean upload
+                    storage.upload(p, &[("/f", content.as_bytes())]).unwrap();
+                    committed.push(content);
+                }
+                1 => {
+                    // failed upload then abort
+                    objects.inject_put_failures(1);
+                    let (id, grants) = storage.start_session(p, &["/f"]).unwrap();
+                    assert!(objects
+                        .put_presigned(&grants[0].1.token, content.clone().into_bytes())
+                        .is_err());
+                    storage.abort_session(id).unwrap();
+                }
+                2 => {
+                    // failed upload, resume, then succeed
+                    objects.inject_put_failures(1);
+                    let (id, grants) = storage.start_session(p, &["/f"]).unwrap();
+                    let _ = objects.put_presigned(&grants[0].1.token, content.clone().into_bytes());
+                    let again = storage.resume_session(id).unwrap();
+                    objects
+                        .put_presigned(&again[0].1.token, content.clone().into_bytes())
+                        .unwrap();
+                    assert!(matches!(
+                        storage.poll_session(id).unwrap(),
+                        SessionState::Committed(_)
+                    ));
+                    committed.push(content);
+                }
+                _ => {
+                    // abandoned pending session, later aborted
+                    let (id, _grants) = storage.start_session(p, &["/f"]).unwrap();
+                    storage.abort_session(id).unwrap();
+                }
+            }
+        }
+        // INVARIANT: dense versions, one per committed upload, in order
+        let versions = storage.versions(p, "/f");
+        assert_eq!(versions.len(), committed.len());
+        assert_eq!(versions, (1..=committed.len() as u32).collect::<Vec<_>>());
+        for (v, content) in versions.iter().zip(&committed) {
+            assert_eq!(
+                &**storage.read(p, "/f", Some(*v)).unwrap(),
+                content.as_bytes(),
+                "version {v} content corrupted"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_fileset_cache_is_transparent_and_bounded() {
+    // The inter-job cache must be invisible to correctness (same bytes
+    // with or without a hit) and never exceed its budget.
+    property("cache transparency", 20, |g| {
+        let acai = Acai::boot_default();
+        let p = ProjectId(1);
+        let n_sets = g.usize(1..5);
+        for i in 0..n_sets {
+            let content: Vec<u8> = vec![i as u8; g.usize(1..2000)];
+            let path = format!("/f{i}");
+            acai.datalake
+                .storage
+                .upload(p, &[(path.as_str(), &content)])
+                .unwrap();
+            acai.datalake
+                .filesets
+                .create(p, &format!("s{i}"), &[path.as_str()], "u")
+                .unwrap();
+        }
+        for _ in 0..g.usize(1..30) {
+            let i = g.usize(0..n_sets);
+            let via_cache = acai
+                .datalake
+                .materialize_cached(p, &format!("s{i}"), None)
+                .unwrap();
+            let direct = acai
+                .datalake
+                .filesets
+                .materialize(p, &format!("s{i}"), None)
+                .unwrap();
+            assert_eq!(via_cache.len(), direct.len());
+            for ((pa, ba), (pb, bb)) in via_cache.iter().zip(&direct) {
+                assert_eq!(pa, pb);
+                assert_eq!(ba, bb);
+            }
+            let (_, _, bytes) = acai.datalake.cache.stats();
+            assert!(bytes <= acai.datalake.cache.capacity);
+        }
+        let (hits, misses, _) = acai.datalake.cache.stats();
+        assert!(hits + misses > 0);
+    });
+}
+
+#[test]
+fn prop_log_parser_never_panics_and_tags_are_well_formed() {
+    use acai::engine::logserver::parse_tag;
+    property("log parser fuzz", 100, |g| {
+        // random line soup, sometimes tag-shaped
+        let line = match g.usize(0..4) {
+            0 => format!("[[acai]] {}={}", g.ident(8), g.f64(-1e9, 1e9)),
+            1 => format!("[[acai]] {}={}", g.ident(8), g.ident(12)),
+            2 => format!("[[acai]]{}", g.ident(20)),
+            _ => g.ident(30),
+        };
+        if let Some((key, value)) = parse_tag(&line) {
+            assert!(!key.is_empty());
+            assert!(!key.contains(char::is_whitespace));
+            match value {
+                Json::Num(n) => assert!(n.is_finite()),
+                Json::Str(_) => {}
+                other => panic!("unexpected tag value {other:?}"),
+            }
+        }
+    });
+}

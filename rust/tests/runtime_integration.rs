@@ -1,0 +1,165 @@
+//! PJRT runtime integration: the AOT artifacts load, execute, and agree
+//! with the pure-Rust reference paths.  Requires `make artifacts`.
+
+use acai::cluster::ResourceConfig;
+use acai::profiler::{fit_native, CommandTemplate};
+use acai::prng::Rng;
+use acai::runtime::{MlpSession, Runtime, Tensor, FEATURES};
+use acai::workload::synthetic_batch;
+
+fn runtime() -> Runtime {
+    let dir = acai::PlatformConfig::default_artifacts_dir();
+    Runtime::load(&dir).unwrap_or_else(|e| {
+        panic!("run `make artifacts` before cargo test ({e})");
+    })
+}
+
+#[test]
+fn manifest_constants_are_sane() {
+    let rt = runtime();
+    let c = rt.constants;
+    assert_eq!(c.mlp_in, 784);
+    assert_eq!(c.mlp_out, 10);
+    assert!(c.fit_rows >= 135); // the paper's eval sweep must fit
+    assert!(c.grid_rows >= 496); // the provisioning grid must fit
+}
+
+#[test]
+fn loglinear_fit_matches_native_fit() {
+    let rt = runtime();
+    let template = CommandTemplate::parse("python t.py --epoch {1,2,3}").unwrap();
+    let mut rows: Vec<[f64; FEATURES]> = Vec::new();
+    let mut ys = Vec::new();
+    for e in [1.0f64, 2.0, 3.0] {
+        for c in [0.5f64, 1.0, 2.0] {
+            for m in [512u32, 1024, 2048] {
+                let res = ResourceConfig::new(c, m);
+                rows.push(template.features(&[e], res));
+                ys.push((6.63 * e * c.powf(-0.95) * (m as f64 / 1024.0).powf(-0.03)).ln());
+            }
+        }
+    }
+    let theta_pjrt = rt.loglinear_fit(&rows, &ys).unwrap();
+    let theta_native = fit_native(&rows, &ys).unwrap();
+    for (a, b) in theta_pjrt.iter().zip(theta_native.iter()) {
+        assert!((a - b).abs() < 1e-3, "pjrt {theta_pjrt:?} native {theta_native:?}");
+    }
+    // and the exponents are the simulator's
+    assert!((theta_pjrt[1] + 0.95).abs() < 1e-3);
+    assert!((theta_pjrt[3] - 1.0).abs() < 1e-3);
+}
+
+#[test]
+fn loglinear_predict_is_exp_of_dot() {
+    let rt = runtime();
+    let mut theta = [0.0f64; FEATURES];
+    theta[0] = 2.0;
+    theta[1] = -1.0;
+    theta[3] = 1.0;
+    let template = CommandTemplate::parse("python t.py --epoch {1,2}").unwrap();
+    let rows: Vec<[f64; FEATURES]> = vec![
+        template.features(&[20.0], ResourceConfig::new(2.0, 1024)),
+        template.features(&[5.0], ResourceConfig::new(8.0, 512)),
+    ];
+    let got = rt.loglinear_predict(&theta, &rows).unwrap();
+    for (g, row) in got.iter().zip(&rows) {
+        let want: f64 = row
+            .iter()
+            .zip(theta.iter())
+            .map(|(x, t)| x * t)
+            .sum::<f64>()
+            .exp();
+        assert!((g - want).abs() / want < 1e-4, "{g} vs {want}");
+    }
+}
+
+#[test]
+fn mlp_training_reduces_loss_and_learns() {
+    let rt = runtime();
+    let mut session = MlpSession::new(&rt, 42);
+    let mut rng = Rng::new(7);
+    let (xe, ye) = synthetic_batch(&rt, &mut rng, rt.constants.eval_batch);
+    let (loss0, acc0) = session.eval(xe.clone(), ye.clone()).unwrap();
+    // untrained: chance-level accuracy, ~ln(10) loss
+    assert!((loss0 - 10f32.ln()).abs() < 0.8, "loss0 {loss0}");
+    assert!(acc0 < 0.35, "acc0 {acc0}");
+
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..20 {
+        let (x, y) = synthetic_batch(&rt, &mut rng, rt.constants.train_batch);
+        last = session.train_step(x, y, 0.3).unwrap();
+        first.get_or_insert(last);
+    }
+    assert!(last < first.unwrap() * 0.5, "{first:?} -> {last}");
+
+    let (loss1, acc1) = session.eval(xe, ye).unwrap();
+    assert!(loss1 < loss0 * 0.5);
+    assert!(acc1 > acc0 + 0.4, "acc {acc0} -> {acc1}");
+}
+
+#[test]
+fn mlp_serialization_has_all_parameters() {
+    let rt = runtime();
+    let session = MlpSession::new(&rt, 1);
+    let bytes = session.serialize();
+    let c = rt.constants;
+    let expected = 4 * 4 // length headers
+        + 4 * (c.mlp_in * c.mlp_hidden + c.mlp_hidden + c.mlp_hidden * c.mlp_out + c.mlp_out);
+    assert_eq!(bytes.len(), expected);
+}
+
+#[test]
+fn execute_rejects_shape_mismatches() {
+    let rt = runtime();
+    let err = rt
+        .execute("loglinear_predict", &[Tensor::scalar(1.0), Tensor::scalar(2.0)])
+        .unwrap_err();
+    assert!(err.to_string().contains("shape"), "{err}");
+    let err = rt.execute("nonexistent", &[]).unwrap_err();
+    assert!(err.to_string().contains("unknown module"), "{err}");
+}
+
+#[test]
+fn executions_counter_tracks_calls() {
+    let rt = runtime();
+    let before = rt.executions();
+    let template = CommandTemplate::parse("python t.py --epoch {1,2}").unwrap();
+    let rows = vec![template.features(&[1.0], ResourceConfig::new(1.0, 1024))];
+    let theta = [0.1; FEATURES];
+    rt.loglinear_predict(&theta, &rows).unwrap();
+    assert_eq!(rt.executions(), before + 1);
+}
+
+#[test]
+fn full_platform_with_runtime_profiles_via_pjrt() {
+    // The end-to-end wiring: Acai boots with artifacts, the profiler's
+    // fit + the provisioner's batch predict both run on PJRT.
+    let config = acai::PlatformConfig::with_artifacts(
+        acai::PlatformConfig::default_artifacts_dir(),
+    );
+    let acai = acai::Acai::boot(config).unwrap();
+    let p = acai::ids::ProjectId(1);
+    let u = acai::ids::UserId(1);
+    acai.datalake.storage.upload(p, &[("/d", b"x")]).unwrap();
+    acai.datalake.filesets.create(p, "in", &["/d"], "u").unwrap();
+
+    let execs_before = acai.runtime.as_ref().unwrap().executions();
+    acai.profiler
+        .profile("t", "python train_mnist.py --epoch {1,2,3}", p, u, "in")
+        .unwrap();
+    let fitted = acai.profiler.by_name("t").unwrap();
+    let decision = acai
+        .provisioner
+        .optimize(
+            &acai.profiler,
+            &fitted,
+            &[20.0],
+            acai::autoprovision::Objective::MinCost { max_runtime: 1e6 },
+        )
+        .unwrap();
+    assert!(decision.predicted_runtime > 0.0);
+    // PJRT really ran: 27 MNIST jobs (train steps + eval) + 1 fit + 1 grid predict
+    let execs = acai.runtime.as_ref().unwrap().executions() - execs_before;
+    assert!(execs > 27, "only {execs} PJRT executions");
+}

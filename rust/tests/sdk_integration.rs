@@ -1,0 +1,274 @@
+//! SDK integration: the full user journey of paper §3.4 through the
+//! token-scoped client — the workflow the usability study times.
+
+use std::sync::Arc;
+
+use acai::autoprovision::Objective;
+use acai::cluster::ResourceConfig;
+use acai::datalake::metadata::ArtifactKind;
+use acai::docstore::Clause;
+use acai::engine::JobState;
+use acai::json::Json;
+use acai::sdk::{Client, JobRequest};
+use acai::Acai;
+
+fn client() -> (Arc<Acai>, Client) {
+    let acai = Arc::new(Acai::boot_default());
+    let root = acai.credentials.root_token().to_string();
+    let (_p, token) = acai
+        .credentials
+        .create_project(&root, "nlp", "alice")
+        .unwrap();
+    let client = Client::connect(acai.clone(), &token).unwrap();
+    (acai, client)
+}
+
+#[test]
+fn complete_user_journey() {
+    let (_acai, client) = client();
+
+    // 1. upload data + build a file set
+    client
+        .upload_files(&[("/data/train.bin", b"train"), ("/data/dev.bin", b"dev")])
+        .unwrap();
+    client.create_file_set("corpus", &["/data/train.bin", "/data/dev.bin"]).unwrap();
+
+    // 2. run a training job
+    let job = client
+        .submit(JobRequest {
+            name: "train-mlp".into(),
+            command: "python train_mnist.py --epoch 5".into(),
+            input_fileset: "corpus".into(),
+            output_fileset: "model".into(),
+            resources: ResourceConfig::new(2.0, 2048),
+        })
+        .unwrap();
+    client.wait_all();
+    let record = client.job(job).unwrap();
+    assert_eq!(record.state, JobState::Finished);
+
+    // 3. logs were captured, auto-tags applied
+    let logs = client.logs(job);
+    assert!(logs.iter().any(|l| l.contains("training_loss")));
+
+    // 4. find the experiment by metadata
+    let hits = client
+        .query(ArtifactKind::Job, &[Clause::eq("name", "train-mlp")])
+        .unwrap();
+    assert_eq!(hits.len(), 1);
+    assert_eq!(hits[0].0, job.to_string());
+
+    // 5. trace provenance from the model back to the corpus
+    let back = client.trace_backward("model", 1);
+    assert_eq!(back[0].from, "corpus:1");
+    let lineage = client.lineage("model", 1);
+    assert!(lineage.contains(&"corpus:1".to_string()));
+
+    // 6. retrieve the exact model bytes the job produced
+    let model = client.download("/model/mlp.bin", None).unwrap();
+    assert!(!model.is_empty());
+}
+
+#[test]
+fn hyperparameter_sweep_with_metadata_leaderboard() {
+    let (_acai, client) = client();
+    client.upload_files(&[("/d", b"x")]).unwrap();
+    client.create_file_set("in", &["/d"]).unwrap();
+
+    for (i, epochs) in [2u32, 4, 8].iter().enumerate() {
+        client
+            .submit(JobRequest {
+                name: format!("sweep-{i}"),
+                command: format!("python train_mnist.py --epoch {epochs}"),
+                input_fileset: "in".into(),
+                output_fileset: format!("sweep-{i}-out"),
+                resources: ResourceConfig::new(1.0, 1024),
+            })
+            .unwrap();
+    }
+    client.wait_all();
+
+    // leaderboard: best (lowest) training loss via a min query
+    let best = client
+        .query(ArtifactKind::Job, &[Clause::Min("training_loss".into())])
+        .unwrap();
+    assert_eq!(best.len(), 1);
+    // more epochs => lower loss in the fallback loss model
+    let doc = &best[0].1;
+    assert_eq!(doc.get("arg_epoch").and_then(Json::as_f64), Some(8.0));
+}
+
+#[test]
+fn profile_then_autoprovision_then_submit() {
+    let (_acai, client) = client();
+    client.upload_files(&[("/d", b"x")]).unwrap();
+    client.create_file_set("in", &["/d"]).unwrap();
+
+    client
+        .profile("mnist", "python train_mnist.py --epoch {1,2,3}", "in")
+        .unwrap();
+    let decision = client
+        .autoprovision("mnist", &[20.0], Objective::MinCost { max_runtime: 200.0 })
+        .unwrap();
+    assert!(decision.predicted_runtime <= 200.0);
+
+    let job = client
+        .submit_provisioned("mnist", &[20.0], &decision, "in", "final-model")
+        .unwrap();
+    client.wait_all();
+    let record = client.job(job).unwrap();
+    assert_eq!(record.state, JobState::Finished);
+    assert_eq!(record.spec.resources.vcpus, decision.config.vcpus);
+    // the measured runtime respects the constraint (noise-free platform)
+    assert!(record.runtime_secs.unwrap() <= 200.0 * 1.05);
+}
+
+#[test]
+fn cross_project_isolation_through_sdk() {
+    let acai = Arc::new(Acai::boot_default());
+    let root = acai.credentials.root_token().to_string();
+    let (_p1, t1) = acai.credentials.create_project(&root, "a", "u").unwrap();
+    let (_p2, t2) = acai.credentials.create_project(&root, "b", "u").unwrap();
+    let c1 = Client::connect(acai.clone(), &t1).unwrap();
+    let c2 = Client::connect(acai.clone(), &t2).unwrap();
+
+    c1.upload_files(&[("/secret", b"p1-data")]).unwrap();
+    c1.create_file_set("s", &["/secret"]).unwrap();
+    // project b sees neither files, file sets, metadata, nor provenance
+    assert!(c2.download("/secret", None).is_err());
+    assert!(c2.list_file_sets().is_empty());
+    assert!(c2.query(ArtifactKind::FileSet, &[]).unwrap().is_empty());
+    assert!(c2.provenance_graph().0.is_empty());
+    assert_eq!(c1.provenance_graph().0, vec!["s:1"]);
+}
+
+#[test]
+fn tagging_and_rich_queries() {
+    let (_acai, client) = client();
+    client.upload_files(&[("/d", b"x")]).unwrap();
+    client.create_file_set("exp", &["/d"]).unwrap();
+    client.tag(
+        ArtifactKind::FileSet,
+        "exp:1",
+        &[
+            ("model".into(), Json::from("BERT")),
+            ("precision".into(), Json::from(0.72)),
+        ],
+    );
+    // the paper's flagship query: creator + model + precision range
+    let hits = client
+        .query(
+            ArtifactKind::FileSet,
+            &[
+                Clause::eq("creator", "alice"),
+                Clause::eq("model", "BERT"),
+                Clause::gte("precision", 0.5),
+            ],
+        )
+        .unwrap();
+    assert_eq!(hits.len(), 1);
+}
+
+#[test]
+fn acl_protects_files_and_filesets_across_users() {
+    // §7.1.1 (future work, implemented): POSIX-style permissions
+    let acai = Arc::new(Acai::boot_default());
+    let root = acai.credentials.root_token().to_string();
+    let (_p, alice_tok) = acai.credentials.create_project(&root, "nlp", "alice").unwrap();
+    let bob_tok = acai.credentials.create_user(&alice_tok, "bob").unwrap();
+    let alice = Client::connect(acai.clone(), &alice_tok).unwrap();
+    let bob = Client::connect(acai.clone(), &bob_tok).unwrap();
+
+    alice.upload_files(&[("/data/secret.bin", b"alice-only")]).unwrap();
+    alice
+        .protect_file("/data/secret.bin", acai::datalake::Mode::PRIVATE)
+        .unwrap();
+    // bob can neither read nor overwrite
+    assert_eq!(bob.download("/data/secret.bin", None).unwrap_err().status(), 403);
+    assert_eq!(
+        bob.upload_files(&[("/data/secret.bin", b"evil")]).unwrap_err().status(),
+        403
+    );
+    // alice still can
+    assert_eq!(alice.download("/data/secret.bin", None).unwrap(), b"alice-only");
+
+    // protected fileset: bob reads but cannot republish a new version
+    alice.upload_files(&[("/data/shared.bin", b"x")]).unwrap();
+    alice.create_file_set("corpus", &["/data/shared.bin"]).unwrap();
+    alice
+        .protect_file_set("corpus", acai::datalake::Mode::PROTECTED)
+        .unwrap();
+    assert_eq!(
+        bob.create_file_set("corpus", &["/data/shared.bin"]).unwrap_err().status(),
+        403
+    );
+    // unguarded resources stay project-shared (backward compatible)
+    bob.upload_files(&[("/data/open.bin", b"ok")]).unwrap();
+}
+
+#[test]
+fn pipeline_chains_stages_and_cache_serves_repeat_inputs() {
+    // §7.2 pipelines + §7.1.2 inter-job cache, through the public API
+    use acai::engine::pipeline::{Pipeline, Stage};
+    let (acai, client) = client();
+    client.upload_files(&[("/raw.bin", b"raw-data")]).unwrap();
+    client.create_file_set("raw", &["/raw.bin"]).unwrap();
+
+    let pipeline = Pipeline {
+        name: "flow".into(),
+        input_fileset: "raw".into(),
+        stages: vec![
+            Stage {
+                name: "feat".into(),
+                command: "python train_mnist.py --epoch 1".into(),
+                output_fileset: "features".into(),
+                resources: ResourceConfig::new(1.0, 1024),
+            },
+            Stage {
+                name: "train".into(),
+                command: "python train_mnist.py --epoch 2".into(),
+                output_fileset: "model".into(),
+                resources: ResourceConfig::new(1.0, 1024),
+            },
+        ],
+    };
+    let run = pipeline
+        .run(&acai.engine, client.identity().project, client.identity().user)
+        .unwrap();
+    assert_eq!(run.final_output.0, "model");
+
+    // run five more jobs against the SAME input fileset version: the
+    // cache serves them without touching the object store again
+    let (h0, _m0, _) = acai.datalake.cache.stats();
+    for i in 0..5 {
+        client
+            .submit(JobRequest {
+                name: format!("re-{i}"),
+                command: "python train_mnist.py --epoch 1".into(),
+                input_fileset: "raw:1".into(),
+                output_fileset: format!("re-{i}-out"),
+                resources: ResourceConfig::new(0.5, 512),
+            })
+            .unwrap();
+    }
+    client.wait_all();
+    let (h1, _m1, bytes) = acai.datalake.cache.stats();
+    assert!(h1 - h0 >= 5, "cache hits {h0} -> {h1}");
+    assert!(bytes > 0);
+}
+
+#[test]
+fn gc_reclaims_unpinned_versions_via_public_surface() {
+    // §7.1.3 data cleaning through the data-lake facade
+    use acai::datalake::gc::GarbageCollector;
+    let (acai, client) = client();
+    for content in [&b"v1"[..], b"v2", b"v3"] {
+        client.upload_files(&[("/d.bin", content)]).unwrap();
+    }
+    client.create_file_set("pin", &["/d.bin#2"]).unwrap();
+    let gc = GarbageCollector::new(&acai.datalake);
+    let reclaimed = gc.sweep(client.identity().project).unwrap();
+    assert_eq!(reclaimed, 4); // v1 + v3
+    assert!(client.download("/d.bin", Some(2)).is_ok());
+    assert!(client.download("/d.bin", Some(1)).is_err());
+}
