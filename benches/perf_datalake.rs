@@ -81,5 +81,33 @@ fn main() {
             .unwrap();
     });
     println!("metadata range-query (2.1k hits): {:.1} µs/op", ns / 1000.0);
+
+    // concurrent pipelines: 8 threads uploading + resolving disjoint
+    // paths — the sharded substrate's reason to exist (ISSUE 1: the old
+    // global store mutex serialized all of this)
+    let started = std::time::Instant::now();
+    let per_thread = 2_000u64;
+    let mut handles = vec![];
+    for t in 0..8u64 {
+        let acai = acai.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..per_thread {
+                let path = format!("/conc/t{t}/file-{}", i % 32);
+                acai.datalake.storage.upload(P, &[(path.as_str(), b"x")]).unwrap();
+                acai.datalake
+                    .storage
+                    .resolve_version(P, &path, None)
+                    .unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let secs = started.elapsed().as_secs_f64();
+    println!(
+        "concurrent upload+resolve (8 threads x {per_thread}): {:.1}k ops/s",
+        (8 * per_thread) as f64 / secs / 1e3
+    );
     println!("\nPERF OK");
 }

@@ -1,0 +1,108 @@
+//! Perf: lock-shard scaling — the same concurrent workload against a
+//! 1-shard kvstore (the old global-mutex design) and the default
+//! 16-shard layout.  The tentpole claim: sharding buys >=1.5x on
+//! concurrent mixed workloads (ISSUE 1 acceptance), while preserving
+//! per-key sequential version assignment.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use acai::json::Json;
+use acai::kvstore::KvStore;
+use acai::storage::{Rmw, Table};
+
+const THREADS: u64 = 8;
+const OPS_PER_THREAD: u64 = 20_000;
+
+/// Wall-clock seconds for THREADS workers × OPS_PER_THREAD mixed ops
+/// (rmw-heavy, each thread hammering its own counter key plus reads of
+/// a neighbour's — cross-key parallelism is what shards unlock).
+fn run(store: &Arc<KvStore>) -> f64 {
+    let start = Instant::now();
+    let mut handles = vec![];
+    for t in 0..THREADS {
+        let store = store.clone();
+        handles.push(std::thread::spawn(move || {
+            let own = format!("ctr-{t}");
+            let other = format!("ctr-{}", (t + 1) % THREADS);
+            for i in 0..OPS_PER_THREAD {
+                if i % 4 == 3 {
+                    let _ = Table::get(&*store, "bench", &other);
+                } else {
+                    store
+                        .read_modify_write("bench", &own, &mut |cur| {
+                            let v = cur.and_then(Json::as_u64).unwrap_or(0);
+                            Ok(Rmw::Put(Json::from(v + 1)))
+                        })
+                        .unwrap();
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    start.elapsed().as_secs_f64()
+}
+
+fn verify(store: &Arc<KvStore>) {
+    // correctness first: every rmw landed (3 of every 4 ops)
+    for t in 0..THREADS {
+        let v = Table::get(&**store, "bench", &format!("ctr-{t}"))
+            .and_then(|v| v.as_u64())
+            .unwrap_or(0);
+        assert_eq!(v, OPS_PER_THREAD / 4 * 3, "lost updates on ctr-{t}");
+    }
+}
+
+fn main() {
+    println!("\n================================================================");
+    println!("BENCH  Perf: storage shard scaling (1 vs 16 lock shards)");
+    println!("PAPER  §4.4 scalability: the metadata store must not serialize");
+    println!("       concurrent pipelines (NSML/TACC bottleneck analysis)");
+    println!("================================================================");
+
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let total_ops = THREADS * OPS_PER_THREAD;
+
+    // warmup both layouts once
+    run(&Arc::new(KvStore::with_shards(1)));
+    run(&Arc::new(KvStore::with_shards(16)));
+
+    let single = Arc::new(KvStore::with_shards(1));
+    let t1 = run(&single);
+    verify(&single);
+
+    let sharded = Arc::new(KvStore::with_shards(16));
+    let t16 = run(&sharded);
+    verify(&sharded);
+
+    let ratio = t1 / t16;
+    println!(
+        "1 shard : {:>8.1}k ops/s  ({:.3}s for {}k ops, {THREADS} threads)",
+        total_ops as f64 / t1 / 1e3,
+        t1,
+        total_ops / 1000
+    );
+    println!(
+        "16 shards: {:>8.1}k ops/s  ({:.3}s)",
+        total_ops as f64 / t16 / 1e3,
+        t16
+    );
+    println!("speedup 16 vs 1: {ratio:.2}x on {cores} cores");
+
+    if cores >= 4 {
+        assert!(
+            ratio >= 1.5,
+            "expected >=1.5x from sharding on {cores} cores, got {ratio:.2}x"
+        );
+    } else if cores >= 2 {
+        assert!(
+            ratio >= 1.1,
+            "expected >=1.1x from sharding on {cores} cores, got {ratio:.2}x"
+        );
+    } else {
+        println!("(single core: shard speedup not asserted)");
+    }
+    println!("\nPERF OK");
+}

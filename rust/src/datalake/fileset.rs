@@ -15,24 +15,27 @@
 //!
 //! `create_file_set` resolves specs in order with **last-wins** per path
 //! (which yields the paper's merge/update/subset conveniences), assigns
-//! the next file-set version under the store lock, and records a
-//! provenance `fileset_creation` edge from every source file set — and,
-//! on update, from the previous version of the same set.
+//! the next file-set version with an atomic per-set read-modify-write on
+//! the set's `latest` counter (the sharded successor of "under the store
+//! lock" — see [`crate::storage`]), and records a provenance
+//! `fileset_creation` edge from every source file set — and, on update,
+//! from the previous version of the same set.
 
 use std::sync::Arc;
 
 use crate::error::{AcaiError, Result};
 use crate::ids::{IdGen, ProjectId, Version};
 use crate::json::Json;
-use crate::kvstore::KvStore;
 use crate::simclock::SimClock;
+use crate::storage::SharedTable;
 
 use super::metadata::{ArtifactKind, MetadataStore};
 use super::provenance::ProvenanceStore;
 use super::storage::Storage;
 
 const T_FILESETS: &str = "filesets"; // "<proj>|<name>|<ver:08>" -> {entries}
-const T_FS_LATEST: &str = "fs_latest"; // "<proj>|<name>" -> {version}
+const T_FS_LATEST: &str = "fs_latest"; // "<proj>|<name>" -> {version}, published after the row exists
+const T_FS_VSEQ: &str = "fs_vseq"; // "<proj>|<name>" -> {version}: claimed-but-unpublished counter
 
 fn fs_key(project: ProjectId, name: &str, version: Version) -> String {
     format!("{}|{}|{:08}", project.raw(), name, version)
@@ -119,7 +122,7 @@ fn parse_spec(spec: &str) -> Result<Spec> {
 /// The file-set service.
 #[derive(Clone)]
 pub struct FileSetStore {
-    kv: KvStore,
+    kv: SharedTable,
     storage: Storage,
     metadata: MetadataStore,
     provenance: ProvenanceStore,
@@ -129,7 +132,7 @@ pub struct FileSetStore {
 
 impl FileSetStore {
     pub fn new(
-        kv: KvStore,
+        kv: SharedTable,
         storage: Storage,
         metadata: MetadataStore,
         provenance: ProvenanceStore,
@@ -276,44 +279,48 @@ impl FileSetStore {
             return Err(AcaiError::invalid("file set would be empty"));
         }
         let mut sources = resolved.sources.clone();
-        let new_version = self.kv.transact(|txn| {
-            let lk = fs_latest_key(project, name);
-            let prev = txn
-                .get(T_FS_LATEST, &lk)
-                .and_then(|v| v.get("version").and_then(Json::as_u64))
-                .map(|v| v as Version);
-            if let Some(pv) = prev {
-                // update semantics: new version depends on the old one
-                if !sources.iter().any(|(n, v)| n == name && *v == pv) {
-                    sources.push((name.to_string(), pv));
-                }
+        // Claim the next set version atomically (concurrent creates of
+        // the same set serialize only on the counter), write the row,
+        // and only then publish the `latest` pointer — "@name" readers
+        // never resolve to a version whose row is not there yet.
+        let lk = fs_latest_key(project, name);
+        let new_version =
+            crate::storage::claim_version(self.kv.as_ref(), T_FS_VSEQ, T_FS_LATEST, &lk)?;
+        // Update semantics: the new version depends on its *immediate*
+        // predecessor.  Claims are dense, so that is claimed-1 — atomic
+        // with the claim itself, which keeps the version chain exact
+        // under concurrent creates (the old store-wide lock's behavior).
+        // The predecessor's row may still be in flight on another
+        // thread; its node is auto-created and its row lands before
+        // that create returns.  Only a store I/O failure between a
+        // claim and its row write can leave the edge pointing at a
+        // version with no row — the same partial-write exposure the
+        // seed's rollback-free transact had.
+        if new_version > 1 {
+            let pv = new_version - 1;
+            if !sources.iter().any(|(n, v)| n == name && *v == pv) {
+                sources.push((name.to_string(), pv));
             }
-            let next = prev.map(|v| v + 1).unwrap_or(1);
-            let entries: Vec<Json> = resolved
-                .entries
-                .iter()
-                .map(|(p, v)| {
-                    Json::obj()
-                        .field("path", p.as_str())
-                        .field("version", *v as u64)
-                        .build()
-                })
-                .collect();
-            txn.put(
-                T_FILESETS,
-                &fs_key(project, name, next),
+        }
+        let entries: Vec<Json> = resolved
+            .entries
+            .iter()
+            .map(|(p, v)| {
                 Json::obj()
-                    .field("entries", Json::Arr(entries))
-                    .field("created", self.clock.now())
-                    .build(),
-            )?;
-            txn.put(
-                T_FS_LATEST,
-                &lk,
-                Json::obj().field("version", next as u64).build(),
-            )?;
-            Ok(next)
-        })?;
+                    .field("path", p.as_str())
+                    .field("version", *v as u64)
+                    .build()
+            })
+            .collect();
+        self.kv.put(
+            T_FILESETS,
+            &fs_key(project, name, new_version),
+            Json::obj()
+                .field("entries", Json::Arr(entries))
+                .field("created", self.clock.now())
+                .build(),
+        )?;
+        crate::storage::publish_version(self.kv.as_ref(), T_FS_LATEST, &lk, new_version)?;
 
         // Exclude a self-reference when the spec used "@name" itself.
         sources.retain(|(n, v)| !(n == name && *v == new_version));
@@ -366,6 +373,7 @@ impl FileSetStore {
 mod tests {
     use super::*;
     use crate::bus::Bus;
+    use crate::kvstore::KvStore;
     use crate::objectstore::ObjectStore;
 
     const P: ProjectId = ProjectId(1);
@@ -373,7 +381,7 @@ mod tests {
     fn lake() -> (FileSetStore, Storage, ProvenanceStore) {
         let clock = SimClock::new();
         let bus = Bus::new();
-        let kv = KvStore::in_memory();
+        let kv: SharedTable = Arc::new(KvStore::in_memory());
         let objects = ObjectStore::new(clock.clone(), bus.clone());
         let ids = Arc::new(IdGen::new());
         let storage = Storage::new(kv.clone(), objects, bus, clock.clone(), ids.clone());

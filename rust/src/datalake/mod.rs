@@ -9,6 +9,10 @@
 //!   references with the `@FileSet:version` spec language (§3.2.2);
 //! - [`metadata`] — key-value metadata with indexed retrieval (§3.2.3);
 //! - [`provenance`] — the per-project provenance DAG (§3.2.4).
+//!
+//! All four program against [`crate::storage::Table`] / the sharded
+//! substrate rather than concrete store internals, so the backing store
+//! is swappable and concurrent pipelines don't serialize on one lock.
 
 pub mod acl;
 pub mod cache;
@@ -29,9 +33,9 @@ pub use storage::Storage;
 
 use crate::bus::Bus;
 use crate::ids::IdGen;
-use crate::kvstore::KvStore;
 use crate::objectstore::ObjectStore;
 use crate::simclock::SimClock;
+use crate::storage::SharedTable;
 use std::sync::Arc;
 
 /// Default inter-job cache budget (256 MiB of materialized file sets).
@@ -51,7 +55,7 @@ pub struct DataLake {
 }
 
 impl DataLake {
-    pub fn new(kv: KvStore, objects: ObjectStore, bus: Bus, clock: SimClock) -> Self {
+    pub fn new(kv: SharedTable, objects: ObjectStore, bus: Bus, clock: SimClock) -> Self {
         let ids = Arc::new(IdGen::new());
         let storage = Storage::new(kv.clone(), objects, bus, clock.clone(), ids.clone());
         let metadata = MetadataStore::new(clock.clone());

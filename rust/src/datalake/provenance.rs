@@ -5,13 +5,18 @@
 //! set) and **file-set creations** (source file sets → derived file set).
 //! Only ids live here; metadata stays in the metadata server, exactly as
 //! the paper splits MongoDB vs Neo4j.
+//!
+//! The per-project graph handles live in a
+//! [`crate::storage::ShardedMap`], so provenance recording for
+//! concurrent pipelines in different projects never contends; each
+//! [`GraphStore`] is itself internally sharded.
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::error::Result;
 use crate::graphstore::{Edge, GraphStore};
 use crate::ids::{JobId, ProjectId, Version};
+use crate::storage::ShardedMap;
 
 /// Edge kinds (paper Figure 2).
 pub const KIND_JOB: &str = "job_execution";
@@ -25,7 +30,7 @@ pub fn node_id(name: &str, version: Version) -> String {
 /// The provenance server.
 #[derive(Clone, Default)]
 pub struct ProvenanceStore {
-    graphs: Arc<Mutex<HashMap<ProjectId, GraphStore>>>,
+    graphs: Arc<ShardedMap<ProjectId, GraphStore>>,
 }
 
 impl ProvenanceStore {
@@ -35,11 +40,7 @@ impl ProvenanceStore {
 
     fn graph(&self, project: ProjectId) -> GraphStore {
         self.graphs
-            .lock()
-            .unwrap()
-            .entry(project)
-            .or_default()
-            .clone()
+            .locked(&project, |shard| shard.entry(project).or_default().clone())
     }
 
     /// Record a file-set creation deriving `target` from `sources`.

@@ -1,10 +1,18 @@
 //! Versioned file storage (paper §3.2.1, §4.4).
 //!
 //! Files live in the object store (one object per *file version*, keyed
-//! by a unique numeric file id); the hierarchy and version tables live in
-//! the kvstore (the MySQL analogue).  Versioning is implemented **on top
-//! of** the object store rather than using a native versioning feature,
-//! exactly as the paper does to avoid vendor lock-in.
+//! by a unique numeric file id); the hierarchy and version tables live
+//! behind the [`Table`] trait (the MySQL analogue by default, but any
+//! substrate implementing the trait works).  Versioning is implemented
+//! **on top of** the object store rather than using a native versioning
+//! feature, exactly as the paper does to avoid vendor lock-in.
+//!
+//! Concurrency model: every version counter (`latest` row per path) is
+//! bumped with an atomic per-key read-modify-write — the paper's
+//! "server-side lock" guarantee (§4.4.3: concurrent uploads of one path
+//! get sequential versions) now holds per path instead of serializing
+//! the whole store.  Session state transitions are likewise per-session
+//! RMWs.  No operation holds two row locks at once.
 //!
 //! Data transfer follows the paper's §4.4.2 protocol: clients get
 //! presigned URLs from this storage server and exchange bytes directly
@@ -17,14 +25,15 @@ use crate::bus::Bus;
 use crate::error::{AcaiError, Result};
 use crate::ids::{IdGen, ProjectId, SessionId, Version};
 use crate::json::Json;
-use crate::kvstore::KvStore;
 use crate::objectstore::{ObjectStore, Presigned, TOPIC_OBJECT_EVENTS};
 use crate::simclock::SimClock;
+use crate::storage::{Rmw, SharedTable};
 
 use super::session::{SessionState, UploadSession};
 
 const T_FILES: &str = "files"; // "<proj>|<path>|<ver:08>" -> {file_id,size,created}
-const T_LATEST: &str = "latest"; // "<proj>|<path>" -> {version}
+const T_LATEST: &str = "latest"; // "<proj>|<path>" -> {version}, published only after the row exists
+const T_VSEQ: &str = "vseq"; // "<proj>|<path>" -> {version}: claimed-but-unpublished counter
 const T_SESSIONS: &str = "sessions"; // "<sess id>" -> session json
 
 fn file_key(project: ProjectId, path: &str, version: Version) -> String {
@@ -38,17 +47,23 @@ fn latest_key(project: ProjectId, path: &str) -> String {
 /// The storage server.
 #[derive(Clone)]
 pub struct Storage {
-    kv: KvStore,
+    kv: SharedTable,
     objects: ObjectStore,
     clock: SimClock,
     ids: Arc<IdGen>,
     /// object key -> session, for SNS-driven commit.
     pending_keys: Arc<Mutex<std::collections::HashMap<String, SessionId>>>,
+    /// Sessions with an upload event mid-processing (mark + possible
+    /// commit).  Aborts are refused only while a session is in here, so
+    /// a session whose commit *failed* stays abortable (the seed's
+    /// recovery path) while one whose commit is *in flight* cannot have
+    /// its objects deleted out from under the publish.
+    settling: Arc<Mutex<std::collections::HashSet<SessionId>>>,
 }
 
 impl Storage {
     pub fn new(
-        kv: KvStore,
+        kv: SharedTable,
         objects: ObjectStore,
         bus: Bus,
         clock: SimClock,
@@ -60,6 +75,7 @@ impl Storage {
             clock,
             ids,
             pending_keys: Arc::new(Mutex::new(Default::default())),
+            settling: Arc::new(Mutex::new(Default::default())),
         };
         // SNS subscription: object uploads mark session files complete.
         let weak = storage.clone();
@@ -123,7 +139,10 @@ impl Storage {
         Ok((id, grants))
     }
 
-    /// SNS handler: an object finished uploading.
+    /// SNS handler: an object finished uploading.  Marks the file done
+    /// with a per-session RMW; the upload that completes the set (there
+    /// is exactly one — `pending_keys.remove` hands each object key to
+    /// one caller) drives the commit.
     fn on_object_uploaded(&self, object_key: &str) -> Result<()> {
         let session_id = {
             let mut pending = self.pending_keys.lock().unwrap();
@@ -132,73 +151,113 @@ impl Storage {
                 None => return Ok(()), // unrelated object
             }
         };
+        // Guard the whole mark+commit sequence against a racing abort;
+        // released on every exit path below.
+        self.settling.lock().unwrap().insert(session_id);
+        let result = self.settle_upload(session_id, object_key);
+        self.settling.lock().unwrap().remove(&session_id);
+        result
+    }
+
+    /// The guarded body of [`Self::on_object_uploaded`].
+    fn settle_upload(&self, session_id: SessionId, object_key: &str) -> Result<()> {
         let mut ready = false;
-        self.kv.transact(|txn| {
-            let raw = txn
-                .get(T_SESSIONS, &session_id.to_string())
-                .ok_or_else(|| AcaiError::not_found(format!("session {session_id}")))?;
-            let mut session = UploadSession::from_json(session_id, &raw)?;
-            for f in session.files.iter_mut() {
-                if f.1 == object_key {
-                    f.2 = true;
+        let mut stale = false;
+        self.kv
+            .read_modify_write(T_SESSIONS, &session_id.to_string(), &mut |cur| {
+                let raw = cur.ok_or_else(|| {
+                    AcaiError::not_found(format!("session {session_id}"))
+                })?;
+                let mut session = UploadSession::from_json(session_id, raw)?;
+                if !matches!(session.state, SessionState::Pending { .. }) {
+                    // an abort (or commit) already settled this session;
+                    // a late upload must not flip it back to Pending
+                    stale = true;
+                    return Ok(Rmw::Keep);
                 }
-            }
-            session.state = SessionState::Pending {
-                uploaded: session.files.iter().filter(|f| f.2).count(),
-                total: session.files.len(),
-            };
-            ready = session.complete();
-            txn.put(T_SESSIONS, &session_id.to_string(), session.to_json())
-        })?;
+                for f in session.files.iter_mut() {
+                    if f.1 == object_key {
+                        f.2 = true;
+                    }
+                }
+                session.state = SessionState::Pending {
+                    uploaded: session.files.iter().filter(|f| f.2).count(),
+                    total: session.files.len(),
+                };
+                ready = session.complete();
+                Ok(Rmw::Put(session.to_json()))
+            })?;
+        if stale {
+            // the session is gone; drop the orphaned object
+            self.objects.delete(object_key);
+            return Ok(());
+        }
         if ready {
             self.commit_session(session_id)?;
         }
         Ok(())
     }
 
-    /// Commit: assign sequential version numbers under the store lock
-    /// (§4.4.3 guarantees 2 and 3).  Idempotent.
+    /// Commit: assign sequential version numbers via per-path atomic
+    /// RMWs on the `latest` counters (§4.4.3 guarantees 2 and 3), then
+    /// mark the session committed.  Idempotent.
     fn commit_session(&self, id: SessionId) -> Result<()> {
-        self.kv.transact(|txn| {
-            let raw = txn
-                .get(T_SESSIONS, &id.to_string())
-                .ok_or_else(|| AcaiError::not_found(format!("session {id}")))?;
-            let mut session = UploadSession::from_json(id, &raw)?;
-            if matches!(session.state, SessionState::Committed(_)) {
-                return Ok(());
-            }
-            if !session.complete() {
-                return Err(AcaiError::conflict("session not fully uploaded"));
-            }
-            let project = ProjectId(session.project);
-            let mut versions = Vec::new();
-            for (path, object_key, _) in &session.files {
-                let lk = latest_key(project, path);
-                let next: Version = txn
-                    .get(T_LATEST, &lk)
-                    .and_then(|v| v.get("version").and_then(Json::as_u64))
-                    .map(|v| v as Version + 1)
-                    .unwrap_or(1);
-                let size = self.objects.get(object_key).map(|b| b.len()).unwrap_or(0);
-                txn.put(
-                    T_FILES,
-                    &file_key(project, path, next),
-                    Json::obj()
-                        .field("object", object_key.as_str())
-                        .field("size", size)
-                        .field("created", self.clock.now())
-                        .build(),
-                )?;
-                txn.put(
-                    T_LATEST,
-                    &lk,
-                    Json::obj().field("version", next as u64).build(),
-                )?;
-                versions.push((path.clone(), next));
-            }
-            session.state = SessionState::Committed(versions);
-            txn.put(T_SESSIONS, &id.to_string(), session.to_json())
-        })
+        let raw = self
+            .kv
+            .get(T_SESSIONS, &id.to_string())
+            .ok_or_else(|| AcaiError::not_found(format!("session {id}")))?;
+        let session = UploadSession::from_json(id, &raw)?;
+        if matches!(session.state, SessionState::Committed(_)) {
+            return Ok(());
+        }
+        if matches!(session.state, SessionState::Aborted) {
+            return Err(AcaiError::conflict(format!("session {id} is aborted")));
+        }
+        if !session.complete() {
+            return Err(AcaiError::conflict("session not fully uploaded"));
+        }
+        let project = ProjectId(session.project);
+        let mut versions = Vec::new();
+        for (path, object_key, _) in &session.files {
+            let lk = latest_key(project, path);
+            // Claim the next version atomically (concurrent sessions on
+            // the same path serialize here and nowhere else), write the
+            // file row, and only then publish the `latest` pointer — a
+            // reader resolving "latest" never sees a version whose row
+            // does not exist yet.
+            let next = crate::storage::claim_version(self.kv.as_ref(), T_VSEQ, T_LATEST, &lk)?;
+            let size = self.objects.get(object_key).map(|b| b.len()).unwrap_or(0);
+            self.kv.put(
+                T_FILES,
+                &file_key(project, path, next),
+                Json::obj()
+                    .field("object", object_key.as_str())
+                    .field("size", size)
+                    .field("created", self.clock.now())
+                    .build(),
+            )?;
+            crate::storage::publish_version(self.kv.as_ref(), T_LATEST, &lk, next)?;
+            versions.push((path.clone(), next));
+        }
+        self.kv
+            .read_modify_write(T_SESSIONS, &id.to_string(), &mut |cur| {
+                let raw = cur.ok_or_else(|| AcaiError::not_found(format!("session {id}")))?;
+                let mut session = UploadSession::from_json(id, raw)?;
+                if matches!(session.state, SessionState::Committed(_)) {
+                    return Ok(Rmw::Keep);
+                }
+                if matches!(session.state, SessionState::Aborted) {
+                    // an abort won the race mid-commit and already
+                    // deleted the uploaded objects — committing now
+                    // would advertise rows whose objects are gone
+                    return Err(AcaiError::conflict(format!(
+                        "session {id} aborted during commit"
+                    )));
+                }
+                session.state = SessionState::Committed(versions.clone());
+                Ok(Rmw::Put(session.to_json()))
+            })?;
+        Ok(())
     }
 
     /// Client-side polling (§4.4.3: "it keeps polling the server until
@@ -211,26 +270,45 @@ impl Storage {
         Ok(UploadSession::from_json(id, &raw)?.state)
     }
 
-    /// Abort: delete uploaded objects and mark the session aborted; no
+    /// Abort: mark the session aborted, then delete uploaded objects; no
     /// version numbers were burned.
     pub fn abort_session(&self, id: SessionId) -> Result<()> {
-        self.kv.transact(|txn| {
-            let raw = txn
-                .get(T_SESSIONS, &id.to_string())
-                .ok_or_else(|| AcaiError::not_found(format!("session {id}")))?;
-            let mut session = UploadSession::from_json(id, &raw)?;
-            if matches!(session.state, SessionState::Committed(_)) {
-                return Err(AcaiError::conflict("cannot abort a committed session"));
-            }
-            for (_, object_key, uploaded) in &session.files {
-                if *uploaded {
-                    self.objects.delete(object_key);
+        let mut object_keys: Vec<(String, bool)> = Vec::new();
+        self.kv
+            .read_modify_write(T_SESSIONS, &id.to_string(), &mut |cur| {
+                let raw = cur.ok_or_else(|| AcaiError::not_found(format!("session {id}")))?;
+                let mut session = UploadSession::from_json(id, raw)?;
+                if matches!(session.state, SessionState::Committed(_)) {
+                    return Err(AcaiError::conflict("cannot abort a committed session"));
                 }
-                self.pending_keys.lock().unwrap().remove(object_key);
+                // An upload event for this session is being settled right
+                // now (its handler registered in `settling` *before*
+                // taking this row's lock): the commit it may drive must
+                // not have its objects deleted mid-publish.  A session
+                // whose commit already failed is NOT in `settling`, so
+                // it remains abortable (the crash-recovery path).
+                if self.settling.lock().unwrap().contains(&id) {
+                    return Err(AcaiError::conflict(
+                        "upload settling in progress; retry the abort",
+                    ));
+                }
+                object_keys = session
+                    .files
+                    .iter()
+                    .map(|(_, key, uploaded)| (key.clone(), *uploaded))
+                    .collect();
+                session.state = SessionState::Aborted;
+                Ok(Rmw::Put(session.to_json()))
+            })?;
+        // Cleanup happens after the state flip (other stores' locks must
+        // not nest inside the session row's lock).
+        for (object_key, uploaded) in &object_keys {
+            if *uploaded {
+                self.objects.delete(object_key);
             }
-            session.state = SessionState::Aborted;
-            txn.put(T_SESSIONS, &id.to_string(), session.to_json())
-        })
+            self.pending_keys.lock().unwrap().remove(object_key);
+        }
+        Ok(())
     }
 
     /// Re-issue presigned grants for the not-yet-uploaded files of a
@@ -375,40 +453,43 @@ impl Storage {
         path: &str,
         version: Version,
     ) -> Result<()> {
-        self.kv.transact(|txn| {
-            let fk = file_key(project, path, version);
-            let row = txn
-                .get(T_FILES, &fk)
-                .ok_or_else(|| AcaiError::not_found(format!("{path}#{version}")))?;
-            if let Some(object) = row.get("object").and_then(Json::as_str) {
-                self.objects.delete(object);
-            }
-            txn.delete(T_FILES, &fk)?;
-            // fix the latest pointer
-            let lk = latest_key(project, path);
-            let latest = txn
-                .get(T_LATEST, &lk)
-                .and_then(|v| v.get("version").and_then(Json::as_u64))
-                .map(|v| v as Version);
-            if latest == Some(version) {
-                let remaining = txn.scan_prefix(T_FILES, &format!("{}|{}|", project.raw(), path));
-                match remaining
-                    .iter()
-                    .filter_map(|(k, _)| k.rsplit('|').next()?.parse::<Version>().ok())
-                    .max()
-                {
-                    Some(prev) => txn.put(
-                        T_LATEST,
-                        &lk,
-                        Json::obj().field("version", prev as u64).build(),
-                    )?,
-                    None => {
-                        txn.delete(T_LATEST, &lk)?;
-                    }
+        let fk = file_key(project, path, version);
+        // Atomically detach the file row, capturing the object key.
+        let mut object: Option<String> = None;
+        self.kv.read_modify_write(T_FILES, &fk, &mut |cur| {
+            let row = cur.ok_or_else(|| AcaiError::not_found(format!("{path}#{version}")))?;
+            object = row.get("object").and_then(Json::as_str).map(String::from);
+            Ok(Rmw::Delete)
+        })?;
+        if let Some(object) = object {
+            self.objects.delete(&object);
+        }
+        // Repoint the latest pointer at the highest surviving version.
+        // The surviving set is computed outside the pointer's key lock
+        // (RMW closures must not re-enter the store); GC sweeps are
+        // single-writer, so the scan is stable.
+        let remaining = self
+            .kv
+            .scan_prefix(T_FILES, &format!("{}|{}|", project.raw(), path))
+            .iter()
+            .filter_map(|(k, _)| k.rsplit('|').next()?.parse::<Version>().ok())
+            .max();
+        self.kv
+            .read_modify_write(T_LATEST, &latest_key(project, path), &mut |cur| {
+                let latest = cur
+                    .and_then(|v| v.get("version").and_then(Json::as_u64))
+                    .map(|v| v as Version);
+                if latest != Some(version) {
+                    return Ok(Rmw::Keep);
                 }
-            }
-            Ok(())
-        })
+                match remaining {
+                    Some(prev) => Ok(Rmw::Put(
+                        Json::obj().field("version", prev as u64).build(),
+                    )),
+                    None => Ok(Rmw::Delete),
+                }
+            })?;
+        Ok(())
     }
 
     /// File size in bytes.
@@ -435,13 +516,14 @@ pub fn validate_path(path: &str) -> Result<()> {
 mod tests {
     use super::*;
     use crate::bus::Bus;
+    use crate::kvstore::KvStore;
 
     fn lake() -> (Storage, ObjectStore, SimClock) {
         let clock = SimClock::new();
         let bus = Bus::new();
         let objects = ObjectStore::new(clock.clone(), bus.clone());
         let storage = Storage::new(
-            KvStore::in_memory(),
+            Arc::new(KvStore::in_memory()),
             objects.clone(),
             bus,
             clock.clone(),
@@ -585,5 +667,29 @@ mod tests {
         assert_eq!(s.read(P, "/nope", None).unwrap_err().status(), 404);
         s.upload(P, &[("/f", b"x")]).unwrap();
         assert_eq!(s.read(P, "/f", Some(9)).unwrap_err().status(), 404);
+    }
+
+    #[test]
+    fn concurrent_uploads_of_one_path_get_dense_versions() {
+        let (s, _o, _c) = lake();
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = vec![];
+                for _ in 0..25 {
+                    let v = s.upload(P, &[("/hot", b"x")]).unwrap();
+                    got.push(v[0].1);
+                }
+                got
+            }));
+        }
+        let mut versions: Vec<Version> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        versions.sort_unstable();
+        let expected: Vec<Version> = (1..=200).collect();
+        assert_eq!(versions, expected, "versions must be dense and unique");
     }
 }

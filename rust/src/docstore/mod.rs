@@ -7,13 +7,19 @@
 //! equality, range, and max/min queries run off BTree indexes instead of
 //! collection scans.
 //!
+//! Collections live in a [`crate::storage::ShardedMap`] keyed by
+//! collection name: operations on different collections (per-project
+//! metadata, per-kind artifact sets) lock different shards and proceed
+//! in parallel; within one collection, document + index mutations stay
+//! atomic under that collection's shard lock.
+//!
 //! Query surface (what the paper's metadata retrieval needs, §3.2.3):
 //! equality match on key-value pairs, numeric/string range queries (e.g.
 //! `create_time` today), and max/min queries (e.g. highest `precision`),
 //! combinable with AND semantics.
 
 use std::collections::{BTreeMap, HashMap, HashSet};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// Documents are shared refcounted values: queries return `Arc<Json>`
 /// clones (a refcount bump), not deep copies — the metadata range-query
@@ -22,6 +28,7 @@ pub type Doc = Arc<Json>;
 
 use crate::error::{AcaiError, Result};
 use crate::json::Json;
+use crate::storage::{Rmw, ShardedMap, Table};
 
 /// An orderable projection of a JSON scalar, usable as a BTree key.
 #[derive(Debug, Clone, PartialEq)]
@@ -153,6 +160,26 @@ impl Collection {
         }
     }
 
+    /// Replace (or create) a doc, keeping indexes coherent.
+    fn put_doc(&mut self, id: &str, doc: Json) {
+        if let Some(old) = self.docs.remove(id) {
+            self.unindex_doc(id, &old);
+        }
+        self.index_doc(id, &doc);
+        self.docs.insert(id.to_string(), Arc::new(doc));
+    }
+
+    /// Remove a doc, keeping indexes coherent; true if it existed.
+    fn remove_doc(&mut self, id: &str) -> bool {
+        match self.docs.remove(id) {
+            Some(doc) => {
+                self.unindex_doc(id, &doc);
+                true
+            }
+            None => false,
+        }
+    }
+
     fn ids_matching(&self, clause: &Clause) -> Option<HashSet<String>> {
         match clause {
             Clause::Eq(key, v) => {
@@ -236,7 +263,7 @@ fn coalesce_ranges(clauses: &[Clause]) -> Vec<Clause> {
 /// The document store handle (one per platform; collections per project).
 #[derive(Clone, Default)]
 pub struct DocStore {
-    inner: Arc<Mutex<HashMap<String, Collection>>>,
+    collections: Arc<ShardedMap<String, Collection>>,
 }
 
 impl DocStore {
@@ -244,57 +271,64 @@ impl DocStore {
         Self::default()
     }
 
+    /// Run `f` with the collection's shard locked (read view).
+    fn read<T>(&self, collection: &str, f: impl FnOnce(Option<&Collection>) -> T) -> T {
+        self.collections
+            .locked(&collection.to_string(), |shard| f(shard.get(collection)))
+    }
+
+    /// Run `f` with the collection's shard locked, creating the
+    /// collection on first use.
+    fn write<T>(&self, collection: &str, f: impl FnOnce(&mut Collection) -> T) -> T {
+        self.collections.locked(&collection.to_string(), |shard| {
+            f(shard.entry(collection.to_string()).or_default())
+        })
+    }
+
     /// Insert or fully replace a document.
     pub fn put(&self, collection: &str, id: &str, doc: Json) {
-        let mut inner = self.inner.lock().unwrap();
-        let coll = inner.entry(collection.to_string()).or_default();
-        if let Some(old) = coll.docs.remove(id) {
-            coll.unindex_doc(id, &old);
-        }
-        coll.index_doc(id, &doc);
-        coll.docs.insert(id.to_string(), Arc::new(doc));
+        self.write(collection, |coll| coll.put_doc(id, doc));
     }
 
     /// Merge key-value pairs into an existing document (upsert).
     pub fn update(&self, collection: &str, id: &str, fields: &[(String, Json)]) {
-        let mut inner = self.inner.lock().unwrap();
-        let coll = inner.entry(collection.to_string()).or_default();
-        let doc = coll.docs.remove(id).unwrap_or_else(|| Arc::new(Json::obj().build()));
-        coll.unindex_doc(id, &doc);
-        // copy-on-write: only updates pay a deep clone
-        let mut doc = (*doc).clone();
-        if let Json::Obj(obj) = &mut doc {
-            for (k, v) in fields {
-                obj.set(k.clone(), v.clone());
+        self.write(collection, |coll| {
+            let doc = coll
+                .docs
+                .remove(id)
+                .unwrap_or_else(|| Arc::new(Json::obj().build()));
+            coll.unindex_doc(id, &doc);
+            // copy-on-write: only updates pay a deep clone
+            let mut doc = (*doc).clone();
+            if let Json::Obj(obj) = &mut doc {
+                for (k, v) in fields {
+                    obj.set(k.clone(), v.clone());
+                }
             }
-        }
-        coll.index_doc(id, &doc);
-        coll.docs.insert(id.to_string(), Arc::new(doc));
+            coll.index_doc(id, &doc);
+            coll.docs.insert(id.to_string(), Arc::new(doc));
+        });
     }
 
     /// Fetch by id.
     pub fn get(&self, collection: &str, id: &str) -> Option<Doc> {
-        self.inner
-            .lock()
-            .unwrap()
-            .get(collection)
-            .and_then(|c| c.docs.get(id))
-            .cloned()
+        self.read(collection, |coll| coll.and_then(|c| c.docs.get(id).cloned()))
     }
 
     /// Delete by id.
     pub fn delete(&self, collection: &str, id: &str) -> bool {
-        let mut inner = self.inner.lock().unwrap();
-        let Some(coll) = inner.get_mut(collection) else {
-            return false;
-        };
-        match coll.docs.remove(id) {
-            Some(doc) => {
-                coll.unindex_doc(id, &doc);
-                true
-            }
-            None => false,
-        }
+        self.read_write_existing(collection, |coll| coll.remove_doc(id))
+            .unwrap_or(false)
+    }
+
+    /// Like [`Self::write`] but only when the collection exists.
+    fn read_write_existing<T>(
+        &self,
+        collection: &str,
+        f: impl FnOnce(&mut Collection) -> T,
+    ) -> Option<T> {
+        self.collections
+            .locked(&collection.to_string(), |shard| shard.get_mut(collection).map(f))
     }
 
     /// AND-combined query. Returns (id, doc) pairs, id-sorted.
@@ -304,54 +338,125 @@ impl DocStore {
         // index range seek instead of two full id-set builds + an
         // intersection — the metadata range-query hot path).
         let clauses = coalesce_ranges(clauses);
-        let inner = self.inner.lock().unwrap();
-        let Some(coll) = inner.get(collection) else {
-            return Ok(vec![]);
-        };
-        let mut ids: Option<HashSet<String>> = None;
-        for clause in clauses.iter() {
-            let matched = coll.ids_matching(clause).ok_or_else(|| {
-                AcaiError::invalid(format!("unindexable value in clause {clause:?}"))
-            })?;
-            ids = Some(match ids {
-                None => matched,
-                Some(prev) => prev.intersection(&matched).cloned().collect(),
-            });
-        }
-        let ids = match ids {
-            Some(ids) => ids,
-            None => coll.docs.keys().cloned().collect(), // no clauses: all
-        };
-        let mut out: Vec<(String, Doc)> = ids
-            .into_iter()
-            .filter_map(|id| coll.docs.get(&id).map(|d| (id, d.clone())))
-            .collect();
-        out.sort_by(|a, b| a.0.cmp(&b.0));
-        Ok(out)
+        self.read(collection, |coll| {
+            let Some(coll) = coll else {
+                return Ok(vec![]);
+            };
+            let mut ids: Option<HashSet<String>> = None;
+            for clause in clauses.iter() {
+                let matched = coll.ids_matching(clause).ok_or_else(|| {
+                    AcaiError::invalid(format!("unindexable value in clause {clause:?}"))
+                })?;
+                ids = Some(match ids {
+                    None => matched,
+                    Some(prev) => prev.intersection(&matched).cloned().collect(),
+                });
+            }
+            let ids = match ids {
+                Some(ids) => ids,
+                None => coll.docs.keys().cloned().collect(), // no clauses: all
+            };
+            let mut out: Vec<(String, Doc)> = ids
+                .into_iter()
+                .filter_map(|id| coll.docs.get(&id).map(|d| (id, d.clone())))
+                .collect();
+            out.sort_by(|a, b| a.0.cmp(&b.0));
+            Ok(out)
+        })
     }
 
     /// Number of documents in a collection.
     pub fn count(&self, collection: &str) -> usize {
-        self.inner
-            .lock()
-            .unwrap()
-            .get(collection)
-            .map(|c| c.docs.len())
-            .unwrap_or(0)
+        self.read(collection, |coll| coll.map(|c| c.docs.len()).unwrap_or(0))
+    }
+
+    /// Id-sorted (id, deep-cloned doc) pairs whose ids satisfy `keep` —
+    /// the filter runs before the clone, so narrow scans don't pay for
+    /// the whole collection.
+    fn scan_matching(
+        &self,
+        collection: &str,
+        keep: impl Fn(&str) -> bool,
+    ) -> Vec<(String, Json)> {
+        self.read(collection, |coll| {
+            let Some(coll) = coll else { return vec![] };
+            let mut out: Vec<(String, Json)> = coll
+                .docs
+                .iter()
+                .filter(|(id, _)| keep(id))
+                .map(|(id, d)| (id.clone(), (**d).clone()))
+                .collect();
+            out.sort_by(|a, b| a.0.cmp(&b.0));
+            out
+        })
     }
 
     /// Indexed key names of a collection (paper: index-per-key cost).
     pub fn indexed_keys(&self, collection: &str) -> Vec<String> {
-        self.inner
-            .lock()
-            .unwrap()
-            .get(collection)
-            .map(|c| {
+        self.read(collection, |coll| {
+            coll.map(|c| {
                 let mut keys: Vec<_> = c.indexes.keys().cloned().collect();
                 keys.sort();
                 keys
             })
             .unwrap_or_default()
+        })
+    }
+}
+
+/// [`Table`] view: tables are collections, rows are documents.  Index
+/// maintenance rides along on every write, so rows stored through this
+/// interface stay queryable via [`DocStore::find`].
+impl Table for DocStore {
+    fn get(&self, table: &str, key: &str) -> Option<Json> {
+        DocStore::get(self, table, key).map(|d| (*d).clone())
+    }
+
+    fn put(&self, table: &str, key: &str, value: Json) -> Result<()> {
+        DocStore::put(self, table, key, value);
+        Ok(())
+    }
+
+    fn delete(&self, table: &str, key: &str) -> Result<bool> {
+        Ok(DocStore::delete(self, table, key))
+    }
+
+    fn scan(&self, table: &str) -> Vec<(String, Json)> {
+        self.scan_matching(table, |_| true)
+    }
+
+    fn scan_prefix(&self, table: &str, prefix: &str) -> Vec<(String, Json)> {
+        self.scan_matching(table, |id| id.starts_with(prefix))
+    }
+
+    fn scan_range(&self, table: &str, lo: &str, hi: &str) -> Vec<(String, Json)> {
+        self.scan_matching(table, |id| id >= lo && id < hi)
+    }
+
+    fn count(&self, table: &str) -> usize {
+        DocStore::count(self, table)
+    }
+
+    fn read_modify_write(
+        &self,
+        table: &str,
+        key: &str,
+        f: &mut dyn FnMut(Option<&Json>) -> Result<Rmw>,
+    ) -> Result<Option<Json>> {
+        self.write(table, |coll| {
+            let cur = coll.docs.get(key).cloned();
+            match f(cur.as_deref())? {
+                Rmw::Put(v) => {
+                    coll.put_doc(key, v.clone());
+                    Ok(Some(v))
+                }
+                Rmw::Delete => {
+                    coll.remove_doc(key);
+                    Ok(None)
+                }
+                Rmw::Keep => Ok(cur.map(|d| (*d).clone())),
+            }
+        })
     }
 }
 
@@ -508,5 +613,29 @@ mod tests {
         ds.put("c", "b", Json::obj().field("v", "1").build());
         assert_eq!(ds.find("c", &[Clause::eq("v", 1.0)]).unwrap().len(), 1);
         assert_eq!(ds.find("c", &[Clause::eq("v", "1")]).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn table_rows_are_queryable_documents() {
+        let ds = DocStore::new();
+        let table: &dyn Table = &ds;
+        table
+            .put("jobs", "job-9", Json::obj().field("model", "MLP").build())
+            .unwrap();
+        // the Table write maintained the secondary index
+        let hits = ds.find("jobs", &[Clause::eq("model", "MLP")]).unwrap();
+        assert_eq!(hits.len(), 1);
+        // and rmw keeps it coherent
+        table
+            .read_modify_write("jobs", "job-9", &mut |cur| {
+                let mut doc = cur.cloned().unwrap();
+                if let Json::Obj(obj) = &mut doc {
+                    obj.set("model", Json::from("XGB"));
+                }
+                Ok(Rmw::Put(doc))
+            })
+            .unwrap();
+        assert!(ds.find("jobs", &[Clause::eq("model", "MLP")]).unwrap().is_empty());
+        assert_eq!(ds.find("jobs", &[Clause::eq("model", "XGB")]).unwrap().len(), 1);
     }
 }

@@ -73,6 +73,22 @@ impl JobState {
             JobState::Killed => "killed",
         }
     }
+
+    /// Inverse of [`JobState::as_str`] (registry rows round-trip through
+    /// JSON).
+    pub fn parse(s: &str) -> Result<JobState> {
+        Ok(match s {
+            "queued" => JobState::Queued,
+            "launching" => JobState::Launching,
+            "running" => JobState::Running,
+            "finished" => JobState::Finished,
+            "failed" => JobState::Failed,
+            "killed" => JobState::Killed,
+            other => {
+                return Err(AcaiError::invalid(format!("unknown job state {other:?}")))
+            }
+        })
+    }
 }
 
 #[cfg(test)]
@@ -123,6 +139,14 @@ mod tests {
     fn checked_transition_errors() {
         assert!(Queued.transition(Launching).is_ok());
         assert_eq!(Finished.transition(Running).unwrap_err().status(), 409);
+    }
+
+    #[test]
+    fn state_strings_round_trip() {
+        for s in [Queued, Launching, Running, Finished, Failed, Killed] {
+            assert_eq!(super::JobState::parse(s.as_str()).unwrap(), s);
+        }
+        assert!(super::JobState::parse("bogus").is_err());
     }
 
     #[test]

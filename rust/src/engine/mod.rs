@@ -107,7 +107,7 @@ impl ExecutionEngine {
         let key: QueueKey = (spec.project, spec.user);
         let project = spec.project;
         let user = spec.user;
-        let id = self.registry.register(spec.clone(), self.clock.now());
+        let id = self.registry.register(spec.clone(), self.clock.now())?;
         let mut extra: Vec<(&str, Json)> = vec![
             ("name", Json::from(spec.name.as_str())),
             ("command", Json::from(spec.command.as_str())),

@@ -1,14 +1,31 @@
 //! Job registry (paper §4.2): the repository of all submitted jobs and
 //! their metadata; assigns job ids and persists records.
+//!
+//! Records are JSON rows behind the [`Table`] trait (an in-memory
+//! sharded kvstore by default; any substrate works — pass a
+//! journal-backed store via [`JobRegistry::with_table`] and the registry
+//! survives restarts).  State transitions go through an atomic per-job
+//! read-modify-write, so concurrent submit/finish/kill paths touching
+//! different jobs never contend on a registry-wide lock.
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::cluster::ResourceConfig;
 use crate::error::{AcaiError, Result};
 use crate::ids::{ContainerId, IdGen, JobId, ProjectId, UserId, Version};
+use crate::json::{Json, JsonBuilder};
+use crate::kvstore::KvStore;
+use crate::storage::{Rmw, SharedTable};
 
 use super::lifecycle::JobState;
+
+/// Table holding one row per job.
+const T_JOBS: &str = "jobs";
+
+/// Zero-padded row key so table scans are submission-ordered.
+fn job_key(id: JobId) -> String {
+    format!("{:020}", id.raw())
+}
 
 /// What a client submits.
 #[derive(Debug, Clone)]
@@ -45,20 +62,132 @@ pub struct JobRecord {
     pub error: Option<String>,
 }
 
+fn opt_f64(b: JsonBuilder, key: &str, v: Option<f64>) -> JsonBuilder {
+    match v {
+        Some(x) => b.field(key, x),
+        None => b,
+    }
+}
+
+impl JobRecord {
+    fn to_json(&self) -> Json {
+        let mut b = Json::obj()
+            .field("id", self.id.raw())
+            .field("state", self.state.as_str())
+            .field("submitted_at", self.submitted_at)
+            .field("project", self.spec.project.raw())
+            .field("user", self.spec.user.raw())
+            .field("name", self.spec.name.as_str())
+            .field("command", self.spec.command.as_str())
+            .field("input_fileset", self.spec.input_fileset.as_str())
+            .field("output_fileset", self.spec.output_fileset.as_str())
+            .field("vcpus", self.spec.resources.vcpus)
+            .field("mem_mb", self.spec.resources.mem_mb);
+        b = opt_f64(b, "launched_at", self.launched_at);
+        b = opt_f64(b, "finished_at", self.finished_at);
+        b = opt_f64(b, "runtime_secs", self.runtime_secs);
+        b = opt_f64(b, "cost", self.cost);
+        if let Some(c) = self.container {
+            b = b.field("container", c.raw());
+        }
+        if let Some(v) = self.output_version {
+            b = b.field("output_version", v as u64);
+        }
+        if let Some(e) = &self.error {
+            b = b.field("error", e.as_str());
+        }
+        b.build()
+    }
+
+    fn from_json(row: &Json) -> Result<JobRecord> {
+        let field_u64 = |key: &str| {
+            row.get(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| AcaiError::Storage(format!("job row missing {key}")))
+        };
+        let field_str = |key: &str| {
+            row.get(key)
+                .and_then(Json::as_str)
+                .map(String::from)
+                .ok_or_else(|| AcaiError::Storage(format!("job row missing {key}")))
+        };
+        let opt = |key: &str| row.get(key).and_then(Json::as_f64);
+        Ok(JobRecord {
+            id: JobId(field_u64("id")?),
+            spec: JobSpec {
+                project: ProjectId(field_u64("project")?),
+                user: UserId(field_u64("user")?),
+                name: field_str("name")?,
+                command: field_str("command")?,
+                input_fileset: field_str("input_fileset")?,
+                output_fileset: field_str("output_fileset")?,
+                resources: ResourceConfig {
+                    vcpus: row.get("vcpus").and_then(Json::as_f64).unwrap_or(0.0),
+                    mem_mb: field_u64("mem_mb")? as u32,
+                },
+            },
+            state: JobState::parse(
+                row.get("state").and_then(Json::as_str).unwrap_or_default(),
+            )?,
+            submitted_at: row
+                .get("submitted_at")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            launched_at: opt("launched_at"),
+            finished_at: opt("finished_at"),
+            runtime_secs: opt("runtime_secs"),
+            cost: opt("cost"),
+            container: row.get("container").and_then(Json::as_u64).map(ContainerId),
+            output_version: row
+                .get("output_version")
+                .and_then(Json::as_u64)
+                .map(|v| v as Version),
+            error: row.get("error").and_then(Json::as_str).map(String::from),
+        })
+    }
+}
+
 /// The job registry.
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct JobRegistry {
-    jobs: Arc<Mutex<HashMap<JobId, JobRecord>>>,
+    table: SharedTable,
     ids: Arc<IdGen>,
 }
 
+impl Default for JobRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl JobRegistry {
+    /// Registry over a private in-memory sharded store.
     pub fn new() -> Self {
-        Self::default()
+        Self::with_table(Arc::new(KvStore::in_memory()))
     }
 
-    /// Assign an id and persist the record (state: Queued).
-    pub fn register(&self, spec: JobSpec, now: f64) -> JobId {
+    /// Registry over any row store (e.g. a journal-backed kvstore for a
+    /// registry that survives restarts).  The id generator resumes past
+    /// the highest persisted job id so fresh registrations never
+    /// overwrite surviving rows.
+    pub fn with_table(table: SharedTable) -> Self {
+        let next_id = table
+            .scan(T_JOBS)
+            .iter()
+            .filter_map(|(_, row)| row.get("id").and_then(Json::as_u64))
+            .max()
+            .map(|max| max + 1)
+            .unwrap_or(1);
+        Self {
+            table,
+            ids: Arc::new(IdGen::starting_at(next_id)),
+        }
+    }
+
+    /// Assign an id and persist the record (state: Queued).  Fails only
+    /// when the backing table does (e.g. a journal-backed store hitting
+    /// an I/O error).
+    pub fn register(&self, spec: JobSpec, now: f64) -> Result<JobId> {
         let id = JobId(self.ids.next());
         let record = JobRecord {
             id,
@@ -73,44 +202,63 @@ impl JobRegistry {
             output_version: None,
             error: None,
         };
-        self.jobs.lock().unwrap().insert(id, record);
-        id
+        self.table.put(T_JOBS, &job_key(id), record.to_json())?;
+        Ok(id)
     }
 
     pub fn get(&self, id: JobId) -> Result<JobRecord> {
-        self.jobs
-            .lock()
-            .unwrap()
-            .get(&id)
-            .cloned()
-            .ok_or_else(|| AcaiError::not_found(format!("{id}")))
+        let row = self
+            .table
+            .get(T_JOBS, &job_key(id))
+            .ok_or_else(|| AcaiError::not_found(format!("{id}")))?;
+        JobRecord::from_json(&row)
     }
 
-    /// Checked state transition + arbitrary record mutation.
+    /// Checked state transition + arbitrary record mutation, atomic per
+    /// job via the table's read-modify-write.
     pub fn update(
         &self,
         id: JobId,
         to: Option<JobState>,
         f: impl FnOnce(&mut JobRecord),
     ) -> Result<JobRecord> {
-        let mut jobs = self.jobs.lock().unwrap();
-        let record = jobs
-            .get_mut(&id)
-            .ok_or_else(|| AcaiError::not_found(format!("{id}")))?;
-        if let Some(to) = to {
-            record.state = record.state.transition(to)?;
-        }
-        f(record);
-        Ok(record.clone())
+        let mut mutate = Some(f);
+        let mut updated: Option<JobRecord> = None;
+        self.table
+            .read_modify_write(T_JOBS, &job_key(id), &mut |cur| {
+                let row = cur.ok_or_else(|| AcaiError::not_found(format!("{id}")))?;
+                let mut record = JobRecord::from_json(row)?;
+                if let Some(to) = to {
+                    record.state = record.state.transition(to)?;
+                }
+                // the closure runs at most once per rmw call
+                (mutate.take().expect("rmw closure ran twice"))(&mut record);
+                updated = Some(record.clone());
+                Ok(Rmw::Put(record.to_json()))
+            })?;
+        Ok(updated.expect("rmw committed without a record"))
+    }
+
+    /// Decode a scan, skipping (loudly, in debug builds) any row that no
+    /// longer parses — a silent drop would make `list` disagree with
+    /// `get` on a corrupt persisted row.
+    fn decode(rows: Vec<(String, Json)>) -> Vec<JobRecord> {
+        rows.iter()
+            .filter_map(|(key, row)| match JobRecord::from_json(row) {
+                Ok(record) => Some(record),
+                Err(e) => {
+                    debug_assert!(false, "corrupt job row {key}: {e}");
+                    None
+                }
+            })
+            .collect()
     }
 
     /// Jobs of a (project, user), submission-ordered.
     pub fn list(&self, project: ProjectId, user: Option<UserId>) -> Vec<JobRecord> {
-        let jobs = self.jobs.lock().unwrap();
-        let mut out: Vec<JobRecord> = jobs
-            .values()
+        let mut out: Vec<JobRecord> = Self::decode(self.table.scan(T_JOBS))
+            .into_iter()
             .filter(|j| j.spec.project == project && user.map_or(true, |u| j.spec.user == u))
-            .cloned()
             .collect();
         out.sort_by_key(|j| j.id);
         out
@@ -118,17 +266,15 @@ impl JobRegistry {
 
     /// All non-terminal jobs (engine idle check).
     pub fn active_jobs(&self) -> Vec<JobId> {
-        self.jobs
-            .lock()
-            .unwrap()
-            .values()
+        Self::decode(self.table.scan(T_JOBS))
+            .into_iter()
             .filter(|j| !j.state.is_terminal())
             .map(|j| j.id)
             .collect()
     }
 
     pub fn count(&self) -> usize {
-        self.jobs.lock().unwrap().len()
+        self.table.count(T_JOBS)
     }
 }
 
@@ -151,8 +297,8 @@ mod tests {
     #[test]
     fn register_assigns_unique_ids_and_queued_state() {
         let r = JobRegistry::new();
-        let a = r.register(spec(), 0.0);
-        let b = r.register(spec(), 1.0);
+        let a = r.register(spec(), 0.0).unwrap();
+        let b = r.register(spec(), 1.0).unwrap();
         assert_ne!(a, b);
         assert_eq!(r.get(a).unwrap().state, JobState::Queued);
         assert_eq!(r.get(b).unwrap().submitted_at, 1.0);
@@ -161,7 +307,7 @@ mod tests {
     #[test]
     fn update_enforces_lifecycle() {
         let r = JobRegistry::new();
-        let id = r.register(spec(), 0.0);
+        let id = r.register(spec(), 0.0).unwrap();
         r.update(id, Some(JobState::Launching), |_| {}).unwrap();
         r.update(id, Some(JobState::Running), |_| {}).unwrap();
         let rec = r
@@ -180,8 +326,8 @@ mod tests {
         let r = JobRegistry::new();
         let mut s2 = spec();
         s2.user = UserId(9);
-        r.register(spec(), 0.0);
-        r.register(s2, 0.0);
+        r.register(spec(), 0.0).unwrap();
+        r.register(s2, 0.0).unwrap();
         assert_eq!(r.list(ProjectId(1), None).len(), 2);
         assert_eq!(r.list(ProjectId(1), Some(UserId(9))).len(), 1);
         assert!(r.list(ProjectId(5), None).is_empty());
@@ -190,8 +336,8 @@ mod tests {
     #[test]
     fn active_jobs_excludes_terminal() {
         let r = JobRegistry::new();
-        let a = r.register(spec(), 0.0);
-        let b = r.register(spec(), 0.0);
+        let a = r.register(spec(), 0.0).unwrap();
+        let b = r.register(spec(), 0.0).unwrap();
         r.update(a, Some(JobState::Killed), |_| {}).unwrap();
         assert_eq!(r.active_jobs(), vec![b]);
     }
@@ -200,5 +346,50 @@ mod tests {
     fn missing_job_is_not_found() {
         let r = JobRegistry::new();
         assert_eq!(r.get(JobId(99)).unwrap_err().status(), 404);
+    }
+
+    #[test]
+    fn records_round_trip_through_json() {
+        let r = JobRegistry::new();
+        let id = r.register(spec(), 3.5).unwrap();
+        r.update(id, Some(JobState::Launching), |j| {
+            j.container = Some(ContainerId(7));
+        })
+        .unwrap();
+        let rec = r.get(id).unwrap();
+        assert_eq!(rec.id, id);
+        assert_eq!(rec.spec.command, "python train_mnist.py --epoch 1");
+        assert_eq!(rec.spec.resources.vcpus, 1.0);
+        assert_eq!(rec.spec.resources.mem_mb, 1024);
+        assert_eq!(rec.submitted_at, 3.5);
+        assert_eq!(rec.container, Some(ContainerId(7)));
+        assert_eq!(rec.output_version, None);
+        assert_eq!(rec.error, None);
+    }
+
+    #[test]
+    fn reopened_registry_resumes_ids_past_persisted_rows() {
+        let table: SharedTable = Arc::new(KvStore::in_memory());
+        let r1 = JobRegistry::with_table(table.clone());
+        let a = r1.register(spec(), 0.0).unwrap();
+        let b = r1.register(spec(), 1.0).unwrap();
+        // "restart": a fresh registry over the same (persisted) table
+        let r2 = JobRegistry::with_table(table);
+        let c = r2.register(spec(), 2.0).unwrap();
+        assert!(c > b, "{c:?} must not reuse persisted ids");
+        // the survivors are untouched
+        assert_eq!(r2.get(a).unwrap().submitted_at, 0.0);
+        assert_eq!(r2.get(b).unwrap().submitted_at, 1.0);
+        assert_eq!(r2.count(), 3);
+    }
+
+    #[test]
+    fn registry_can_ride_any_table_substrate() {
+        // the registry is substrate-agnostic: a DocStore works too
+        let r = JobRegistry::with_table(Arc::new(crate::docstore::DocStore::new()));
+        let id = r.register(spec(), 0.0).unwrap();
+        r.update(id, Some(JobState::Launching), |_| {}).unwrap();
+        assert_eq!(r.get(id).unwrap().state, JobState::Launching);
+        assert_eq!(r.count(), 1);
     }
 }

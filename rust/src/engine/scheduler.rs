@@ -64,18 +64,29 @@ impl Scheduler {
 
     /// Pop every job that may launch now (quota permitting), claiming a
     /// quota slot for each.  Round-robin across (project, user) tuples.
+    ///
+    /// The persisted cursor is a raw (unwrapped) position: it is reduced
+    /// modulo the *current* key count at each use, and the key count is
+    /// re-read every iteration.  The seed version stored the cursor
+    /// pre-wrapped by a `nkeys` captured before the loop, so whenever a
+    /// tuple was enqueued between drains the cursor silently drifted
+    /// back toward the head of `order` — newly added tuples went to the
+    /// back of every round instead of inheriting the next turn (see the
+    /// `cursor_survives_key_addition_between_drains` regression test).
     pub fn launchable(&self) -> Vec<(QueueKey, JobId)> {
         let mut inner = self.inner.lock().unwrap();
         let mut out = Vec::new();
-        if inner.order.is_empty() {
-            return out;
-        }
-        let nkeys = inner.order.len();
+        let mut scan = inner.cursor;
         let mut stalled = 0usize;
-        while stalled < nkeys {
-            let cursor = inner.cursor % nkeys;
-            let key = inner.order[cursor];
-            inner.cursor = (inner.cursor + 1) % nkeys;
+        loop {
+            // re-read each iteration: robust to `order` growing while a
+            // drain is in flight
+            let nkeys = inner.order.len();
+            if nkeys == 0 || stalled >= nkeys {
+                break;
+            }
+            let key = inner.order[scan % nkeys];
+            scan = scan.wrapping_add(1);
             let active = *inner.active.get(&key).unwrap_or(&0);
             let popped = if active < self.quota_k {
                 inner.queues.get_mut(&key).and_then(|q| q.pop_front())
@@ -87,6 +98,10 @@ impl Scheduler {
                     *inner.active.entry(key).or_default() += 1;
                     out.push((key, job));
                     stalled = 0;
+                    // remember the slot after the last successful pop;
+                    // the stall sweep that ends the drain must not move
+                    // the next round's starting position
+                    inner.cursor = scan;
                 }
                 None => stalled += 1,
             }
@@ -146,6 +161,7 @@ mod tests {
 
     const K1: QueueKey = (ProjectId(1), UserId(1));
     const K2: QueueKey = (ProjectId(1), UserId(2));
+    const K3: QueueKey = (ProjectId(1), UserId(3));
 
     #[test]
     fn fifo_order_within_a_tuple() {
@@ -211,6 +227,32 @@ mod tests {
         assert!(!s.remove_queued(K1, JobId(2)));
         let launched: Vec<JobId> = s.launchable().into_iter().map(|(_, j)| j).collect();
         assert_eq!(launched, vec![JobId(1)]);
+    }
+
+    #[test]
+    fn cursor_survives_key_addition_between_drains() {
+        // Regression: the cursor used to be stored pre-wrapped by the
+        // key count captured at the top of the drain, so enqueueing a
+        // new tuple between drains snapped the rotation back to the
+        // head of `order` — the tuple served first last round went
+        // first again, and the newcomer waited behind everyone.
+        let s = Scheduler::new(1);
+        s.enqueue(K1, JobId(1));
+        s.enqueue(K1, JobId(2));
+        s.enqueue(K2, JobId(10));
+        s.enqueue(K2, JobId(11));
+        // drain 1: one job from each tuple (quota 1)
+        let first = s.launchable();
+        assert_eq!(first.len(), 2);
+        s.on_terminal(K1);
+        s.on_terminal(K2);
+        // a new tuple arrives between drains
+        s.enqueue(K3, JobId(20));
+        // the rotation resumes after the last served tuple: the
+        // newcomer inherits the next turn instead of going to the back
+        let second = s.launchable();
+        assert_eq!(second.first(), Some(&(K3, JobId(20))), "{second:?}");
+        assert_eq!(second.len(), 3);
     }
 
     #[test]

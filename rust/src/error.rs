@@ -2,55 +2,80 @@
 //!
 //! Every service returns [`Result`]; errors carry enough context to map to
 //! an HTTP status in [`crate::httpd`] handlers (see [`AcaiError::status`]).
+//!
+//! `Display` and `std::error::Error` are implemented by hand — the crate
+//! is dependency-free (no `thiserror` in the offline vendor set).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error type for all ACAI services and substrates.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum AcaiError {
     /// Authentication failed (unknown/expired token).
-    #[error("unauthorized: {0}")]
     Unauthorized(String),
 
     /// Authenticated but not allowed (e.g. non-admin creating users).
-    #[error("forbidden: {0}")]
     Forbidden(String),
 
     /// Entity lookup failed.
-    #[error("not found: {0}")]
     NotFound(String),
 
     /// Entity already exists / version conflict / illegal state change.
-    #[error("conflict: {0}")]
     Conflict(String),
 
     /// Malformed request, spec string, or parameter.
-    #[error("invalid: {0}")]
     Invalid(String),
 
     /// Resource limits exceeded (quota, cluster capacity, budget).
-    #[error("resources exhausted: {0}")]
     Exhausted(String),
 
     /// Constraint-satisfying configuration does not exist.
-    #[error("infeasible: {0}")]
     Infeasible(String),
 
     /// Underlying storage failure (simulated or real I/O).
-    #[error("storage: {0}")]
     Storage(String),
 
     /// PJRT / XLA runtime failure.
-    #[error("runtime: {0}")]
     Runtime(String),
 
     /// JSON encode/decode failure.
-    #[error("json: {0}")]
     Json(String),
 
     /// Raw I/O error.
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for AcaiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AcaiError::Unauthorized(m) => write!(f, "unauthorized: {m}"),
+            AcaiError::Forbidden(m) => write!(f, "forbidden: {m}"),
+            AcaiError::NotFound(m) => write!(f, "not found: {m}"),
+            AcaiError::Conflict(m) => write!(f, "conflict: {m}"),
+            AcaiError::Invalid(m) => write!(f, "invalid: {m}"),
+            AcaiError::Exhausted(m) => write!(f, "resources exhausted: {m}"),
+            AcaiError::Infeasible(m) => write!(f, "infeasible: {m}"),
+            AcaiError::Storage(m) => write!(f, "storage: {m}"),
+            AcaiError::Runtime(m) => write!(f, "runtime: {m}"),
+            AcaiError::Json(m) => write!(f, "json: {m}"),
+            AcaiError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for AcaiError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            AcaiError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for AcaiError {
+    fn from(e: std::io::Error) -> Self {
+        AcaiError::Io(e)
+    }
 }
 
 impl AcaiError {
@@ -103,5 +128,13 @@ mod tests {
     fn display_includes_context() {
         let e = AcaiError::not_found("file /data/train.json");
         assert!(e.to_string().contains("/data/train.json"));
+    }
+
+    #[test]
+    fn io_errors_wrap_with_source() {
+        let e: AcaiError = std::io::Error::other("disk gone").into();
+        assert_eq!(e.status(), 500);
+        assert!(e.to_string().contains("disk gone"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

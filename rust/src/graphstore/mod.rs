@@ -7,14 +7,24 @@
 //! backward traversal, plus full forward/backward closure for the
 //! dashboard's interactive provenance tracing.
 //!
+//! Adjacency lives in a [`crate::storage::ShardedMap`] keyed by node id:
+//! traversals (the read-heavy dashboard paths) lock one shard per
+//! visited node instead of the whole graph.  Structural mutation
+//! (`add_edge`) serializes on a small writer mutex — the acyclicity
+//! check must observe a stable graph — but never blocks readers of
+//! unrelated nodes.
+//!
 //! The provenance graph must stay acyclic (file sets cannot depend on
 //! their own descendants); [`GraphStore::add_edge`] rejects edges that
 //! would close a cycle.
 
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::error::{AcaiError, Result};
+use crate::json::Json;
+use crate::storage::{ns_key, ns_range, ns_split, Rmw, ShardedMap, Table};
 
 /// A directed, labeled edge (action).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -29,19 +39,23 @@ pub struct Edge {
     pub kind: String,
 }
 
-#[derive(Default)]
-struct Inner {
-    nodes: HashSet<String>,
-    edges: Vec<Edge>,
-    /// Adjacency: node -> outgoing edge indexes / incoming edge indexes.
-    out: HashMap<String, Vec<usize>>,
-    inc: HashMap<String, Vec<usize>>,
+/// Per-node adjacency: outgoing and incoming edges, insertion-ordered.
+#[derive(Debug, Clone, Default)]
+struct NodeLinks {
+    out: Vec<Edge>,
+    inc: Vec<Edge>,
 }
 
 /// The graph store handle.
 #[derive(Clone, Default)]
 pub struct GraphStore {
-    inner: Arc<Mutex<Inner>>,
+    nodes: Arc<ShardedMap<String, NodeLinks>>,
+    /// Node property rows for the [`Table`] interface (`table␟key`).
+    props: Arc<ShardedMap<String, Json>>,
+    /// Serializes structural writes so the cycle check sees a stable
+    /// graph; readers never take it.
+    write_order: Arc<Mutex<()>>,
+    edge_count: Arc<AtomicUsize>,
 }
 
 impl GraphStore {
@@ -51,41 +65,47 @@ impl GraphStore {
 
     /// Add a node (idempotent).
     pub fn add_node(&self, id: &str) {
-        self.inner.lock().unwrap().nodes.insert(id.to_string());
+        self.nodes.locked(&id.to_string(), |shard| {
+            shard.entry(id.to_string()).or_default();
+        });
     }
 
     pub fn has_node(&self, id: &str) -> bool {
-        self.inner.lock().unwrap().nodes.contains(id)
+        self.nodes.contains_key(&id.to_string())
     }
 
     /// Add a directed edge; creates endpoints as needed.  Fails if the
     /// edge would close a cycle (provenance must stay a DAG).
     pub fn add_edge(&self, from: &str, to: &str, action: &str, kind: &str) -> Result<()> {
-        let mut inner = self.inner.lock().unwrap();
-        if from != to && Self::reaches(&inner, to, from) {
+        if from == to {
+            return Err(AcaiError::conflict(format!("self-loop on {from}")));
+        }
+        // Writers serialize here; the reachability walk below then
+        // observes a graph no concurrent add_edge is mutating.
+        let _write = self.write_order.lock().unwrap();
+        if self.reaches(to, from) {
             return Err(AcaiError::conflict(format!(
                 "edge {from} -> {to} would create a provenance cycle"
             )));
         }
-        if from == to {
-            return Err(AcaiError::conflict(format!("self-loop on {from}")));
-        }
-        inner.nodes.insert(from.to_string());
-        inner.nodes.insert(to.to_string());
-        let idx = inner.edges.len();
-        inner.edges.push(Edge {
+        let edge = Edge {
             from: from.to_string(),
             to: to.to_string(),
             action: action.to_string(),
             kind: kind.to_string(),
+        };
+        self.nodes.locked(&from.to_string(), |shard| {
+            shard.entry(from.to_string()).or_default().out.push(edge.clone());
         });
-        inner.out.entry(from.to_string()).or_default().push(idx);
-        inner.inc.entry(to.to_string()).or_default().push(idx);
+        self.nodes.locked(&to.to_string(), |shard| {
+            shard.entry(to.to_string()).or_default().inc.push(edge);
+        });
+        self.edge_count.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
 
     /// Is `to` reachable from `from` following edge direction?
-    fn reaches(inner: &Inner, from: &str, to: &str) -> bool {
+    fn reaches(&self, from: &str, to: &str) -> bool {
         let mut seen = HashSet::new();
         let mut queue = VecDeque::from([from.to_string()]);
         while let Some(n) = queue.pop_front() {
@@ -95,9 +115,9 @@ impl GraphStore {
             if !seen.insert(n.clone()) {
                 continue;
             }
-            if let Some(edges) = inner.out.get(&n) {
-                for &e in edges {
-                    queue.push_back(inner.edges[e].to.clone());
+            if let Some(links) = self.nodes.get(&n) {
+                for e in &links.out {
+                    queue.push_back(e.to.clone());
                 }
             }
         }
@@ -106,29 +126,28 @@ impl GraphStore {
 
     /// API 1 (paper): the whole graph — (nodes, edges).
     pub fn whole_graph(&self) -> (Vec<String>, Vec<Edge>) {
-        let inner = self.inner.lock().unwrap();
-        let mut nodes: Vec<_> = inner.nodes.iter().cloned().collect();
-        nodes.sort();
-        (nodes, inner.edges.clone())
+        let snapshot = self.nodes.snapshot();
+        let nodes: Vec<String> = snapshot.iter().map(|(id, _)| id.clone()).collect();
+        let edges: Vec<Edge> = snapshot
+            .into_iter()
+            .flat_map(|(_, links)| links.out)
+            .collect();
+        (nodes, edges)
     }
 
     /// API 2 (paper): traverse forward by one edge from a node.
     pub fn forward(&self, id: &str) -> Vec<Edge> {
-        let inner = self.inner.lock().unwrap();
-        inner
-            .out
-            .get(id)
-            .map(|idxs| idxs.iter().map(|&i| inner.edges[i].clone()).collect())
+        self.nodes
+            .get(&id.to_string())
+            .map(|links| links.out)
             .unwrap_or_default()
     }
 
     /// API 3 (paper): traverse backward by one edge from a node.
     pub fn backward(&self, id: &str) -> Vec<Edge> {
-        let inner = self.inner.lock().unwrap();
-        inner
-            .inc
-            .get(id)
-            .map(|idxs| idxs.iter().map(|&i| inner.edges[i].clone()).collect())
+        self.nodes
+            .get(&id.to_string())
+            .map(|links| links.inc)
             .unwrap_or_default()
     }
 
@@ -144,18 +163,13 @@ impl GraphStore {
     }
 
     fn closure(&self, id: &str, forward: bool) -> Vec<String> {
-        let inner = self.inner.lock().unwrap();
         let mut seen = HashSet::new();
         let mut queue = VecDeque::from([id.to_string()]);
         while let Some(n) = queue.pop_front() {
-            let adj = if forward { &inner.out } else { &inner.inc };
-            if let Some(edges) = adj.get(&n) {
-                for &e in edges {
-                    let next = if forward {
-                        &inner.edges[e].to
-                    } else {
-                        &inner.edges[e].from
-                    };
+            if let Some(links) = self.nodes.get(&n) {
+                let edges = if forward { &links.out } else { &links.inc };
+                for e in edges {
+                    let next = if forward { &e.to } else { &e.from };
                     if seen.insert(next.clone()) {
                         queue.push_back(next.clone());
                     }
@@ -169,12 +183,15 @@ impl GraphStore {
 
     /// Topological order of all nodes (valid because the graph is a DAG).
     /// Used by workflow replay (§7.1.3 future work — implemented here).
+    /// Computed over a point-in-time snapshot of the sharded adjacency.
     pub fn topo_order(&self) -> Vec<String> {
-        let inner = self.inner.lock().unwrap();
+        let snapshot: HashMap<String, NodeLinks> = self.nodes.snapshot().into_iter().collect();
         let mut indeg: HashMap<&str, usize> =
-            inner.nodes.iter().map(|n| (n.as_str(), 0)).collect();
-        for e in &inner.edges {
-            *indeg.entry(e.to.as_str()).or_insert(0) += 1;
+            snapshot.keys().map(|n| (n.as_str(), 0)).collect();
+        for links in snapshot.values() {
+            for e in &links.out {
+                *indeg.entry(e.to.as_str()).or_insert(0) += 1;
+            }
         }
         let mut ready: Vec<&str> = indeg
             .iter()
@@ -186,10 +203,10 @@ impl GraphStore {
         let mut ready: VecDeque<&str> = ready.into();
         while let Some(n) = ready.pop_front() {
             out.push(n.to_string());
-            if let Some(edges) = inner.out.get(n) {
+            if let Some(links) = snapshot.get(n) {
                 let mut newly: Vec<&str> = vec![];
-                for &e in edges {
-                    let t = inner.edges[e].to.as_str();
+                for e in &links.out {
+                    let t = e.to.as_str();
                     let d = indeg.get_mut(t).unwrap();
                     *d -= 1;
                     if *d == 0 {
@@ -205,8 +222,84 @@ impl GraphStore {
 
     /// (node count, edge count).
     pub fn stats(&self) -> (usize, usize) {
-        let inner = self.inner.lock().unwrap();
-        (inner.nodes.len(), inner.edges.len())
+        (self.nodes.len(), self.edge_count.load(Ordering::Relaxed))
+    }
+}
+
+/// [`Table`] view: rows are JSON property documents attached to graph
+/// nodes (`table` is the property namespace via
+/// [`crate::storage::ns_key`], `key` the node id).  A put materializes
+/// the node, so properties and topology stay navigable together;
+/// deleting a row leaves the node and its edges intact.
+impl Table for GraphStore {
+    fn get(&self, table: &str, key: &str) -> Option<Json> {
+        self.props.get(&ns_key(table, key))
+    }
+
+    fn put(&self, table: &str, key: &str, value: Json) -> Result<()> {
+        self.add_node(key);
+        self.props.insert(ns_key(table, key), value);
+        Ok(())
+    }
+
+    fn delete(&self, table: &str, key: &str) -> Result<bool> {
+        Ok(self.props.remove(&ns_key(table, key)).is_some())
+    }
+
+    fn scan(&self, table: &str) -> Vec<(String, Json)> {
+        Table::scan_prefix(self, table, "")
+    }
+
+    fn scan_prefix(&self, table: &str, prefix: &str) -> Vec<(String, Json)> {
+        let (lo, hi) = ns_range(table, prefix);
+        self.props
+            .range(lo..hi)
+            .into_iter()
+            .filter_map(|(k, v)| {
+                let key = ns_split(&k)?;
+                key.starts_with(prefix).then(|| (key.to_string(), v))
+            })
+            .collect()
+    }
+
+    fn scan_range(&self, table: &str, lo: &str, hi: &str) -> Vec<(String, Json)> {
+        self.props
+            .range(ns_key(table, lo)..ns_key(table, hi))
+            .into_iter()
+            .filter_map(|(k, v)| Some((ns_split(&k)?.to_string(), v)))
+            .collect()
+    }
+
+    fn count(&self, table: &str) -> usize {
+        let (lo, hi) = ns_range(table, "");
+        self.props.count_range(lo..hi)
+    }
+
+    fn read_modify_write(
+        &self,
+        table: &str,
+        key: &str,
+        f: &mut dyn FnMut(Option<&Json>) -> Result<Rmw>,
+    ) -> Result<Option<Json>> {
+        let pkey = ns_key(table, key);
+        let result = self.props.locked(&pkey, |shard| {
+            let cur = shard.get(&pkey);
+            match f(cur)? {
+                Rmw::Put(v) => {
+                    shard.insert(pkey.clone(), v.clone());
+                    Ok(Some(v))
+                }
+                Rmw::Delete => {
+                    shard.remove(&pkey);
+                    Ok(None)
+                }
+                Rmw::Keep => Ok(shard.get(&pkey).cloned()),
+            }
+        })?;
+        if result.is_some() {
+            self.add_node(key);
+        }
+        Ok(result)
     }
 }
 
@@ -291,5 +384,47 @@ mod tests {
         g.add_node("x");
         g.add_node("x");
         assert_eq!(g.stats().0, 1);
+    }
+
+    #[test]
+    fn concurrent_edge_adds_preserve_acyclicity() {
+        let g = Arc::new(GraphStore::new());
+        // 8 threads race to build a chain plus reverse edges; the DAG
+        // invariant must hold regardless of interleaving.
+        let mut handles = vec![];
+        for t in 0..8u64 {
+            let g = g.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50u64 {
+                    let a = format!("n{}", (t * 50 + i) % 20);
+                    let b = format!("n{}", (t * 50 + i + 1) % 20);
+                    let _ = g.add_edge(&a, &b, &format!("job-{t}-{i}"), "job_execution");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // acyclic: topo order covers every node exactly once
+        let (nodes, _) = g.whole_graph();
+        assert_eq!(g.topo_order().len(), nodes.len());
+    }
+
+    #[test]
+    fn table_rows_attach_properties_to_nodes() {
+        let g = GraphStore::new();
+        let table: &dyn Table = &g;
+        table
+            .put("meta", "fs:1", Json::obj().field("creator", "a").build())
+            .unwrap();
+        assert!(g.has_node("fs:1"));
+        assert_eq!(
+            table.get("meta", "fs:1").unwrap().get("creator").unwrap().as_str(),
+            Some("a")
+        );
+        assert_eq!(table.scan("meta").len(), 1);
+        assert!(table.delete("meta", "fs:1").unwrap());
+        // the node survives its property row
+        assert!(g.has_node("fs:1"));
     }
 }

@@ -84,8 +84,15 @@ impl Default for IdGen {
 
 impl IdGen {
     pub fn new() -> Self {
+        Self::starting_at(1)
+    }
+
+    /// Generator resuming from `first` (clamped to at least 1) — used
+    /// when rebuilding a service over persisted state so fresh ids never
+    /// collide with surviving rows.
+    pub fn starting_at(first: u64) -> Self {
         Self {
-            next: std::sync::atomic::AtomicU64::new(1),
+            next: std::sync::atomic::AtomicU64::new(first.max(1)),
         }
     }
 

@@ -9,7 +9,7 @@ mod parse;
 mod value;
 
 pub use parse::parse;
-pub use value::{Json, JsonObject};
+pub use value::{Json, JsonBuilder, JsonObject};
 
 #[cfg(test)]
 mod tests {

@@ -4,271 +4,270 @@
 //! sessions in MySQL tables.  This store provides what those paths need:
 //!
 //! - named tables of JSON rows keyed by a string primary key;
-//! - read-modify-write under a per-database lock (the "server-side lock"
-//!   the paper uses to guarantee sequential version-number assignment);
+//! - per-key read-modify-write (the sharded successor of the paper's
+//!   "server-side lock": sequential version-number assignment holds per
+//!   key, without serializing unrelated keys — see [`crate::storage`]);
 //! - optional append-only journal persistence with crash recovery
 //!   (sessions survive a server restart, §4.4.3).
 //!
-//! The journal is a line-oriented log of JSON records; replaying it
-//! rebuilds the tables.  `reopen()` in tests simulates a crash/restart.
+//! Storage is a [`ShardedMap`] keyed by `(table, key)`: point operations
+//! lock one of 16 shards, so concurrent pipelines touching different
+//! keys no longer contend.  The journal is a line-oriented log of JSON
+//! records ([`crate::storage::Journal`]); replaying it rebuilds the
+//! tables.  `reopen()` in tests simulates a crash/restart.
 
-use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Write};
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::error::{AcaiError, Result};
-use crate::json::{parse, Json};
+use crate::json::Json;
+use crate::storage::{Journal, Rmw, ShardedMap, Table, DEFAULT_SHARDS};
 
-#[derive(Default)]
-struct Inner {
-    tables: BTreeMap<String, BTreeMap<String, Json>>,
-    journal: Option<std::fs::File>,
-    journal_path: Option<PathBuf>,
-    writes: u64,
-}
+/// Fully-qualified row key: (table, primary key).
+type RowKey = (String, String);
 
 /// The embedded store handle.
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct KvStore {
-    inner: Arc<Mutex<Inner>>,
+    map: Arc<ShardedMap<RowKey, Json>>,
+    journal: Option<Arc<Journal>>,
+    /// Journal flush batch (remembered so `reopen` preserves it).
+    batch: usize,
+    writes: Arc<AtomicU64>,
+}
+
+impl Default for KvStore {
+    fn default() -> Self {
+        Self::with_shards(DEFAULT_SHARDS)
+    }
 }
 
 impl KvStore {
-    /// Purely in-memory store.
+    /// Purely in-memory store with the default shard count.
     pub fn in_memory() -> Self {
         Self::default()
     }
 
+    /// In-memory store with an explicit shard count (1 = the old global
+    /// lock, for the shard-scaling bench).
+    pub fn with_shards(shards: usize) -> Self {
+        Self {
+            map: Arc::new(ShardedMap::new(shards)),
+            journal: None,
+            batch: 1,
+            writes: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
     /// Journal-backed store; replays an existing journal on open.
     pub fn open(path: impl Into<PathBuf>) -> Result<Self> {
+        Self::open_with(path, DEFAULT_SHARDS, 1)
+    }
+
+    /// Journal-backed store with explicit shard count and journal flush
+    /// batch (batch 1 = write-through, the durable default).
+    pub fn open_with(
+        path: impl Into<PathBuf>,
+        shards: usize,
+        batch: usize,
+    ) -> Result<Self> {
         let path = path.into();
-        let mut tables: BTreeMap<String, BTreeMap<String, Json>> = BTreeMap::new();
-        if path.exists() {
-            let f = std::fs::File::open(&path)?;
-            for (lineno, line) in BufReader::new(f).lines().enumerate() {
-                let line = line?;
-                if line.trim().is_empty() {
-                    continue;
+        let map = ShardedMap::new(shards);
+        for rec in Journal::replay(&path)? {
+            let table = rec
+                .get("t")
+                .and_then(Json::as_str)
+                .ok_or_else(|| AcaiError::Storage("journal: missing table".into()))?;
+            let key = rec
+                .get("k")
+                .and_then(Json::as_str)
+                .ok_or_else(|| AcaiError::Storage("journal: missing key".into()))?;
+            let row_key = (table.to_string(), key.to_string());
+            match rec.get("v") {
+                Some(Json::Null) | None => {
+                    map.remove(&row_key);
                 }
-                let rec = parse(&line).map_err(|e| {
-                    AcaiError::Storage(format!(
-                        "journal {path:?} line {}: {e}",
-                        lineno + 1
-                    ))
-                })?;
-                let table = rec
-                    .get("t")
-                    .and_then(Json::as_str)
-                    .ok_or_else(|| AcaiError::Storage("journal: missing table".into()))?;
-                let key = rec
-                    .get("k")
-                    .and_then(Json::as_str)
-                    .ok_or_else(|| AcaiError::Storage("journal: missing key".into()))?;
-                match rec.get("v") {
-                    Some(Json::Null) | None => {
-                        tables.entry(table.into()).or_default().remove(key);
-                    }
-                    Some(v) => {
-                        tables
-                            .entry(table.into())
-                            .or_default()
-                            .insert(key.into(), v.clone());
-                    }
+                Some(v) => {
+                    map.insert(row_key, v.clone());
                 }
             }
         }
-        let journal = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(&path)?;
         Ok(Self {
-            inner: Arc::new(Mutex::new(Inner {
-                tables,
-                journal: Some(journal),
-                journal_path: Some(path),
-                writes: 0,
-            })),
+            map: Arc::new(map),
+            journal: Some(Arc::new(Journal::open_batched(path, batch)?)),
+            batch,
+            writes: Arc::new(AtomicU64::new(0)),
         })
     }
 
-    /// Simulate a crash + restart: drop in-memory state and replay.
+    /// Simulate a crash + restart: drop in-memory state and replay,
+    /// preserving the shard count and journal batch configuration.
     pub fn reopen(&self) -> Result<Self> {
-        let path = self
-            .inner
-            .lock()
-            .unwrap()
-            .journal_path
-            .clone()
+        let journal = self
+            .journal
+            .as_ref()
             .ok_or_else(|| AcaiError::Storage("in-memory store cannot reopen".into()))?;
-        Self::open(path)
+        journal.flush()?;
+        Self::open_with(
+            journal.path().to_path_buf(),
+            self.map.shard_count(),
+            self.batch,
+        )
     }
 
-    fn log(inner: &mut Inner, table: &str, key: &str, value: Option<&Json>) -> Result<()> {
-        inner.writes += 1;
-        if let Some(journal) = inner.journal.as_mut() {
+    fn log(&self, table: &str, key: &str, value: Option<&Json>) -> Result<()> {
+        self.writes.fetch_add(1, Ordering::Relaxed);
+        if let Some(journal) = &self.journal {
             let rec = Json::obj()
                 .field("t", table)
                 .field("k", key)
                 .field("v", value.cloned().unwrap_or(Json::Null))
                 .build();
-            writeln!(journal, "{}", rec.encode())?;
+            journal.append(&rec)?;
         }
         Ok(())
     }
 
     /// Insert or replace a row.
     pub fn put(&self, table: &str, key: &str, value: Json) -> Result<()> {
-        let mut inner = self.inner.lock().unwrap();
-        Self::log(&mut inner, table, key, Some(&value))?;
-        inner
-            .tables
-            .entry(table.to_string())
-            .or_default()
-            .insert(key.to_string(), value);
-        Ok(())
+        let row_key = (table.to_string(), key.to_string());
+        self.map.locked(&row_key, |shard| {
+            self.log(table, key, Some(&value))?;
+            shard.insert(row_key.clone(), value);
+            Ok(())
+        })
     }
 
     /// Fetch a row.
     pub fn get(&self, table: &str, key: &str) -> Option<Json> {
-        self.inner
-            .lock()
-            .unwrap()
-            .tables
-            .get(table)
-            .and_then(|t| t.get(key))
-            .cloned()
+        self.map.get(&(table.to_string(), key.to_string()))
     }
 
     /// Delete a row; true if it existed.
     pub fn delete(&self, table: &str, key: &str) -> Result<bool> {
-        let mut inner = self.inner.lock().unwrap();
-        Self::log(&mut inner, table, key, None)?;
-        Ok(inner
-            .tables
-            .get_mut(table)
-            .map(|t| t.remove(key).is_some())
-            .unwrap_or(false))
+        let row_key = (table.to_string(), key.to_string());
+        self.map.locked(&row_key, |shard| {
+            self.log(table, key, None)?;
+            Ok(shard.remove(&row_key).is_some())
+        })
+    }
+
+    /// Exclusive upper bound for all keys of `table`: `table` is a strict
+    /// prefix of `table\0`, so every `(table, k)` sorts below it.
+    fn table_end(table: &str) -> RowKey {
+        (format!("{table}\u{0}"), String::new())
     }
 
     /// All (key, row) pairs of a table, key-ordered.
     pub fn scan(&self, table: &str) -> Vec<(String, Json)> {
-        self.inner
-            .lock()
-            .unwrap()
-            .tables
-            .get(table)
-            .map(|t| t.iter().map(|(k, v)| (k.clone(), v.clone())).collect())
-            .unwrap_or_default()
+        let lo = (table.to_string(), String::new());
+        self.map
+            .range(lo..Self::table_end(table))
+            .into_iter()
+            .map(|((_, k), v)| (k, v))
+            .collect()
     }
 
     /// (key, row) pairs with keys in [`lo`, `hi`) — range scan on the PK.
     pub fn scan_range(&self, table: &str, lo: &str, hi: &str) -> Vec<(String, Json)> {
-        self.inner
-            .lock()
-            .unwrap()
-            .tables
-            .get(table)
-            .map(|t| {
-                t.range(lo.to_string()..hi.to_string())
-                    .map(|(k, v)| (k.clone(), v.clone()))
-                    .collect()
-            })
-            .unwrap_or_default()
+        let lo = (table.to_string(), lo.to_string());
+        let hi = (table.to_string(), hi.to_string());
+        self.map
+            .range(lo..hi)
+            .into_iter()
+            .map(|((_, k), v)| (k, v))
+            .collect()
     }
 
     /// Keys with a given prefix (used for hierarchy listings).
     pub fn scan_prefix(&self, table: &str, prefix: &str) -> Vec<(String, Json)> {
-        self.inner
-            .lock()
-            .unwrap()
-            .tables
-            .get(table)
-            .map(|t| {
-                t.range(prefix.to_string()..)
-                    .take_while(|(k, _)| k.starts_with(prefix))
-                    .map(|(k, v)| (k.clone(), v.clone()))
-                    .collect()
-            })
-            .unwrap_or_default()
+        let lo = (table.to_string(), prefix.to_string());
+        self.map
+            .range(lo..Self::table_end(table))
+            .into_iter()
+            .map(|((_, k), v)| (k, v))
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .collect()
     }
 
-    /// Row count.
+    /// Row count (no row clones — counts within the table's key range).
     pub fn count(&self, table: &str) -> usize {
-        self.inner
-            .lock()
-            .unwrap()
-            .tables
-            .get(table)
-            .map(|t| t.len())
-            .unwrap_or(0)
+        let lo = (table.to_string(), String::new());
+        self.map.count_range(lo..Self::table_end(table))
     }
 
-    /// Run `f` under the database lock — the paper's "server-side lock"
-    /// for sequential version assignment.  `f` gets a transaction handle
-    /// with the same ops; everything it does is atomic w.r.t. other
-    /// `put`/`transact` callers.
-    pub fn transact<T>(&self, f: impl FnOnce(&mut Txn<'_>) -> Result<T>) -> Result<T> {
-        let inner = self.inner.lock().unwrap();
-        let mut txn = Txn { inner };
-        f(&mut txn)
-    }
-
-    /// Total writes (journal appends) — perf bench counter.
+    /// Total write operations (journal appends when journaled) — perf
+    /// bench counter.
     pub fn write_count(&self) -> u64 {
-        self.inner.lock().unwrap().writes
+        self.writes.load(Ordering::Relaxed)
+    }
+
+    /// Lock shards backing the store.
+    pub fn shard_count(&self) -> usize {
+        self.map.shard_count()
     }
 }
 
-/// Transaction handle: same ops, already under the lock.
-pub struct Txn<'a> {
-    inner: MutexGuard<'a, Inner>,
-}
+impl Table for KvStore {
+    fn get(&self, table: &str, key: &str) -> Option<Json> {
+        KvStore::get(self, table, key)
+    }
 
-impl Txn<'_> {
-    pub fn put(&mut self, table: &str, key: &str, value: Json) -> Result<()> {
-        KvStore::log(&mut self.inner, table, key, Some(&value))?;
-        self.inner
-            .tables
-            .entry(table.to_string())
-            .or_default()
-            .insert(key.to_string(), value);
+    fn put(&self, table: &str, key: &str, value: Json) -> Result<()> {
+        KvStore::put(self, table, key, value)
+    }
+
+    fn delete(&self, table: &str, key: &str) -> Result<bool> {
+        KvStore::delete(self, table, key)
+    }
+
+    fn scan(&self, table: &str) -> Vec<(String, Json)> {
+        KvStore::scan(self, table)
+    }
+
+    fn scan_prefix(&self, table: &str, prefix: &str) -> Vec<(String, Json)> {
+        KvStore::scan_prefix(self, table, prefix)
+    }
+
+    fn scan_range(&self, table: &str, lo: &str, hi: &str) -> Vec<(String, Json)> {
+        KvStore::scan_range(self, table, lo, hi)
+    }
+
+    fn count(&self, table: &str) -> usize {
+        KvStore::count(self, table)
+    }
+
+    fn read_modify_write(
+        &self,
+        table: &str,
+        key: &str,
+        f: &mut dyn FnMut(Option<&Json>) -> Result<Rmw>,
+    ) -> Result<Option<Json>> {
+        let row_key = (table.to_string(), key.to_string());
+        self.map.locked(&row_key, |shard| {
+            let outcome = f(shard.get(&row_key))?;
+            match outcome {
+                Rmw::Put(v) => {
+                    self.log(table, key, Some(&v))?;
+                    shard.insert(row_key.clone(), v.clone());
+                    Ok(Some(v))
+                }
+                Rmw::Delete => {
+                    self.log(table, key, None)?;
+                    shard.remove(&row_key);
+                    Ok(None)
+                }
+                Rmw::Keep => Ok(shard.get(&row_key).cloned()),
+            }
+        })
+    }
+
+    fn flush(&self) -> Result<()> {
+        if let Some(journal) = &self.journal {
+            journal.flush()?;
+        }
         Ok(())
-    }
-
-    pub fn get(&self, table: &str, key: &str) -> Option<Json> {
-        self.inner
-            .tables
-            .get(table)
-            .and_then(|t| t.get(key))
-            .cloned()
-    }
-
-    pub fn delete(&mut self, table: &str, key: &str) -> Result<bool> {
-        KvStore::log(&mut self.inner, table, key, None)?;
-        Ok(self
-            .inner
-            .tables
-            .get_mut(table)
-            .map(|t| t.remove(key).is_some())
-            .unwrap_or(false))
-    }
-
-    pub fn count(&self, table: &str) -> usize {
-        self.inner.tables.get(table).map(|t| t.len()).unwrap_or(0)
-    }
-
-    pub fn scan_prefix(&self, table: &str, prefix: &str) -> Vec<(String, Json)> {
-        self.inner
-            .tables
-            .get(table)
-            .map(|t| {
-                t.range(prefix.to_string()..)
-                    .take_while(|(k, _)| k.starts_with(prefix))
-                    .map(|(k, v)| (k.clone(), v.clone()))
-                    .collect()
-            })
-            .unwrap_or_default()
     }
 }
 
@@ -296,6 +295,17 @@ mod tests {
     }
 
     #[test]
+    fn tables_are_isolated_across_shards() {
+        let db = KvStore::in_memory();
+        db.put("t1", "k", Json::from(1u64)).unwrap();
+        db.put("t2", "k", Json::from(2u64)).unwrap();
+        db.put("t10", "k", Json::from(3u64)).unwrap();
+        assert_eq!(db.count("t1"), 1);
+        assert_eq!(db.scan("t1").len(), 1);
+        assert_eq!(db.get("t2", "k").unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
     fn prefix_scan_matches_hierarchy() {
         let db = KvStore::in_memory();
         for k in ["/data/a", "/data/b", "/model/x", "/data2/c"] {
@@ -306,7 +316,7 @@ mod tests {
     }
 
     #[test]
-    fn transact_is_atomic_read_modify_write() {
+    fn rmw_is_atomic_per_key() {
         let db = KvStore::in_memory();
         db.put("vers", "/f", Json::from(0u64)).unwrap();
         let mut handles = vec![];
@@ -314,9 +324,9 @@ mod tests {
             let db = db.clone();
             handles.push(std::thread::spawn(move || {
                 for _ in 0..100 {
-                    db.transact(|txn| {
-                        let v = txn.get("vers", "/f").unwrap().as_u64().unwrap();
-                        txn.put("vers", "/f", Json::from(v + 1))
+                    db.read_modify_write("vers", "/f", &mut |cur| {
+                        let v = cur.and_then(Json::as_u64).unwrap_or(0);
+                        Ok(Rmw::Put(Json::from(v + 1)))
                     })
                     .unwrap();
                 }
@@ -361,6 +371,22 @@ mod tests {
     }
 
     #[test]
+    fn batched_journal_flushes_on_reopen() {
+        let dir = std::env::temp_dir().join(format!("acai-kv-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("journal-batched.log");
+        let _ = std::fs::remove_file(&path);
+        let db = KvStore::open_with(&path, 4, 64).unwrap();
+        for i in 0..10 {
+            db.put("t", &format!("k{i}"), Json::from(i as u64)).unwrap();
+        }
+        // reopen() flushes the batch before replaying
+        let db2 = db.reopen().unwrap();
+        assert_eq!(db2.count("t"), 10);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
     fn scan_range_bounds_are_half_open() {
         let db = KvStore::in_memory();
         for k in ["a", "b", "c", "d"] {
@@ -368,5 +394,16 @@ mod tests {
         }
         let keys: Vec<_> = db.scan_range("t", "b", "d").into_iter().map(|(k, _)| k).collect();
         assert_eq!(keys, ["b", "c"]);
+    }
+
+    #[test]
+    fn single_shard_behaves_identically() {
+        let db = KvStore::with_shards(1);
+        assert_eq!(db.shard_count(), 1);
+        for k in ["c", "a", "b"] {
+            db.put("t", k, Json::from(k)).unwrap();
+        }
+        let keys: Vec<_> = db.scan("t").into_iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, ["a", "b", "c"]);
     }
 }

@@ -6,19 +6,31 @@
 //! (per-user FIFO scheduling with quotas, containerized execution, log
 //! capture, job profiling, and learned resource auto-provisioning).
 //!
-//! The crate is organised in three tiers:
+//! The crate is organised in four tiers:
 //!
-//! 1. **Substrates** — from-scratch stand-ins for the cloud services the
-//!    paper runs on: [`objectstore`] (S3 + SNS), [`kvstore`] (MySQL),
-//!    [`docstore`] (MongoDB), [`graphstore`] (Neo4j), [`bus`] (Redis
-//!    pub/sub), [`cluster`] (Kubernetes), [`httpd`] (HTTP microservice
-//!    plumbing), plus [`json`], [`prng`], [`simclock`].
-//! 2. **ACAI services** — the paper's contribution: [`credential`],
+//! 1. **Storage substrate** — [`storage`]: the shared machinery under
+//!    every store: `ShardedMap` (N lock shards keyed by key hash — point
+//!    ops lock one shard, not the store), `Journal` (append-only JSON
+//!    log with batched writes and crash-recovery replay), and the
+//!    `Table` trait (get/put/delete/scan/read-modify-write) the upper
+//!    layers program against.
+//! 2. **Cloud-store stand-ins** — from-scratch analogues of the services
+//!    the paper runs on, all backed by tier 1: [`objectstore`]
+//!    (S3 + SNS), [`kvstore`] (MySQL), [`docstore`] (MongoDB),
+//!    [`graphstore`] (Neo4j), plus [`bus`] (Redis pub/sub), [`cluster`]
+//!    (Kubernetes), [`httpd`] (HTTP microservice plumbing), [`json`],
+//!    [`prng`], [`simclock`].
+//! 3. **ACAI services** — the paper's contribution: [`credential`],
 //!    [`datalake`], [`engine`], [`pricing`], [`profiler`],
-//!    [`autoprovision`], [`workload`], [`sdk`], [`usability`].
-//! 3. **Runtime bridge** — [`runtime`]: loads the AOT-lowered JAX/Pallas
+//!    [`autoprovision`], [`workload`], [`sdk`], [`usability`].  The
+//!    datalake and the engine's job registry hold `Arc<dyn Table>`
+//!    handles, never concrete store internals; per-key read-modify-write
+//!    preserves the paper's sequential version assignment (§4.4.3)
+//!    without cross-key serialization.
+//! 4. **Runtime bridge** — [`runtime`]: loads the AOT-lowered JAX/Pallas
 //!    modules (`artifacts/*.hlo.txt`) via PJRT and executes them from the
-//!    hot paths (profiler fit/predict, the MLP job payload).
+//!    hot paths (profiler fit/predict, the MLP job payload); the PJRT
+//!    backend is feature-gated (`pjrt`), with an inert offline stub.
 //!
 //! See `DESIGN.md` for the substitution table and the experiment index.
 
@@ -45,6 +57,7 @@ pub mod profiler;
 pub mod runtime;
 pub mod sdk;
 pub mod simclock;
+pub mod storage;
 pub mod testkit;
 pub mod usability;
 pub mod workload;

@@ -13,17 +13,22 @@
 //! - completed uploads are announced on the [`crate::bus::Bus`] topic
 //!   [`TOPIC_OBJECT_EVENTS`] (the SNS subscription).
 //!
+//! Objects and grants each live in their own
+//! [`crate::storage::ShardedMap`]: concurrent uploads of different
+//! objects take different shard locks, and token consumption is an
+//! atomic per-grant read-modify-write — there is no store-wide lock.
+//!
 //! Failure injection (`fail_next_puts`) simulates dropped uploads so the
 //! upload-session recovery path (§4.4.3) can be tested.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::bus::Bus;
 use crate::error::{AcaiError, Result};
-use crate::json::Json;
+use crate::json::{parse, Json};
 use crate::simclock::SimClock;
+use crate::storage::{ns_key, ns_range, ns_split, Rmw, ShardedMap, Table};
 
 /// Bus topic carrying object-store notifications (the SNS analogue).
 pub const TOPIC_OBJECT_EVENTS: &str = "object-events";
@@ -44,7 +49,7 @@ enum Op {
     Get,
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 struct Grant {
     key: String,
     op: Op,
@@ -52,30 +57,28 @@ struct Grant {
     used: bool,
 }
 
-#[derive(Default)]
-struct Inner {
-    objects: HashMap<String, Arc<Vec<u8>>>,
-    grants: HashMap<String, Grant>,
-    fail_next_puts: u32,
-    bytes_stored: u64,
-}
-
 /// The simulated object store.
 #[derive(Clone)]
 pub struct ObjectStore {
-    inner: Arc<Mutex<Inner>>,
+    objects: Arc<ShardedMap<String, Arc<Vec<u8>>>>,
+    grants: Arc<ShardedMap<String, Grant>>,
     clock: SimClock,
     bus: Bus,
     token_seq: Arc<AtomicU64>,
+    fail_next_puts: Arc<AtomicU32>,
+    bytes_stored: Arc<AtomicU64>,
 }
 
 impl ObjectStore {
     pub fn new(clock: SimClock, bus: Bus) -> Self {
         Self {
-            inner: Arc::new(Mutex::new(Inner::default())),
+            objects: Arc::new(ShardedMap::default()),
+            grants: Arc::new(ShardedMap::default()),
             clock,
             bus,
             token_seq: Arc::new(AtomicU64::new(1)),
+            fail_next_puts: Arc::new(AtomicU32::new(0)),
+            bytes_stored: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -86,7 +89,7 @@ impl ObjectStore {
             Op::Get => "get",
         };
         let token = format!("ps-{kind}-{n:016x}");
-        self.inner.lock().unwrap().grants.insert(
+        self.grants.insert(
             token.clone(),
             Grant {
                 key: key.to_string(),
@@ -108,46 +111,60 @@ impl ObjectStore {
 
     /// Mint a presigned download token for `key`.
     pub fn presign_get(&self, key: &str) -> Result<Presigned> {
-        if !self.inner.lock().unwrap().objects.contains_key(key) {
+        if !self.objects.contains_key(&key.to_string()) {
             return Err(AcaiError::not_found(format!("object {key}")));
         }
         Ok(self.mint(key, Op::Get))
     }
 
+    /// Atomically validate and burn a token (single-use), under the
+    /// grant's shard lock.
     fn consume(&self, token: &str, want: Op) -> Result<String> {
         let now = self.clock.now();
-        let mut inner = self.inner.lock().unwrap();
-        let grant = inner
-            .grants
-            .get_mut(token)
-            .ok_or_else(|| AcaiError::Unauthorized(format!("unknown presigned token {token}")))?;
-        if grant.op != want {
-            return Err(AcaiError::Unauthorized("token op mismatch".into()));
+        self.grants.locked(&token.to_string(), |shard| {
+            let grant = shard
+                .get_mut(token)
+                .ok_or_else(|| AcaiError::Unauthorized(format!("unknown presigned token {token}")))?;
+            if grant.op != want {
+                return Err(AcaiError::Unauthorized("token op mismatch".into()));
+            }
+            if grant.used {
+                return Err(AcaiError::Unauthorized("token already used".into()));
+            }
+            if grant.expires < now {
+                return Err(AcaiError::Unauthorized("token expired".into()));
+            }
+            grant.used = true;
+            Ok(grant.key.clone())
+        })
+    }
+
+    /// Pop one injected failure, if armed (lock-free).
+    fn take_injected_failure(&self) -> bool {
+        loop {
+            let n = self.fail_next_puts.load(Ordering::Acquire);
+            if n == 0 {
+                return false;
+            }
+            if self
+                .fail_next_puts
+                .compare_exchange(n, n - 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return true;
+            }
         }
-        if grant.used {
-            return Err(AcaiError::Unauthorized("token already used".into()));
-        }
-        if grant.expires < now {
-            return Err(AcaiError::Unauthorized("token expired".into()));
-        }
-        grant.used = true;
-        Ok(grant.key.clone())
     }
 
     /// The direct-to-store upload path (client side of a presigned PUT).
     pub fn put_presigned(&self, token: &str, data: Vec<u8>) -> Result<()> {
         let key = self.consume(token, Op::Put)?;
-        {
-            let mut inner = self.inner.lock().unwrap();
-            if inner.fail_next_puts > 0 {
-                inner.fail_next_puts -= 1;
-                return Err(AcaiError::Storage(format!(
-                    "injected upload failure for {key}"
-                )));
-            }
-            inner.bytes_stored += data.len() as u64;
-            inner.objects.insert(key.clone(), Arc::new(data));
+        if self.take_injected_failure() {
+            return Err(AcaiError::Storage(format!(
+                "injected upload failure for {key}"
+            )));
         }
+        self.store(&key, data);
         // SNS: notify subscribers (the storage server) of the completed put.
         self.bus.publish(
             TOPIC_OBJECT_EVENTS,
@@ -163,12 +180,8 @@ impl ObjectStore {
     pub fn get_presigned(&self, token: &str) -> Result<Arc<Vec<u8>>> {
         let key = self.consume(token, Op::Get)?;
         let data = self
-            .inner
-            .lock()
-            .unwrap()
             .objects
             .get(&key)
-            .cloned()
             .ok_or_else(|| AcaiError::not_found(format!("object {key}")))?;
         self.bus.publish(
             TOPIC_OBJECT_EVENTS,
@@ -182,41 +195,127 @@ impl ObjectStore {
 
     /// Trusted in-platform read (agents run inside the trust boundary).
     pub fn get(&self, key: &str) -> Result<Arc<Vec<u8>>> {
-        self.inner
-            .lock()
-            .unwrap()
-            .objects
-            .get(key)
-            .cloned()
+        self.objects
+            .get(&key.to_string())
             .ok_or_else(|| AcaiError::not_found(format!("object {key}")))
+    }
+
+    fn store(&self, key: &str, data: Vec<u8>) {
+        self.bytes_stored
+            .fetch_add(data.len() as u64, Ordering::Relaxed);
+        self.objects.insert(key.to_string(), Arc::new(data));
     }
 
     /// Trusted in-platform write.
     pub fn put(&self, key: &str, data: Vec<u8>) {
-        let mut inner = self.inner.lock().unwrap();
-        inner.bytes_stored += data.len() as u64;
-        inner.objects.insert(key.to_string(), Arc::new(data));
+        self.store(key, data);
     }
 
     /// Does an object exist?
     pub fn exists(&self, key: &str) -> bool {
-        self.inner.lock().unwrap().objects.contains_key(key)
+        self.objects.contains_key(&key.to_string())
     }
 
     /// Delete an object (used by session abort).
     pub fn delete(&self, key: &str) -> bool {
-        self.inner.lock().unwrap().objects.remove(key).is_some()
+        self.objects.remove(&key.to_string()).is_some()
     }
 
     /// Inject `n` upload failures (testing the session recovery path).
     pub fn inject_put_failures(&self, n: u32) {
-        self.inner.lock().unwrap().fail_next_puts = n;
+        self.fail_next_puts.store(n, Ordering::Release);
     }
 
     /// (object count, total bytes).
     pub fn stats(&self) -> (usize, u64) {
-        let inner = self.inner.lock().unwrap();
-        (inner.objects.len(), inner.bytes_stored)
+        (self.objects.len(), self.bytes_stored.load(Ordering::Relaxed))
+    }
+}
+
+/// [`Table`] view: rows are JSON documents serialized into namespaced
+/// objects (`table␟key`, via [`crate::storage::ns_key`]).  Gives
+/// callers a uniform row interface over blob storage; binary objects
+/// written through the plain [`ObjectStore::put`] path live in the
+/// un-namespaced keyspace and are untouched.
+impl Table for ObjectStore {
+    fn get(&self, table: &str, key: &str) -> Option<Json> {
+        let bytes = self.objects.get(&ns_key(table, key))?;
+        parse(std::str::from_utf8(&bytes).ok()?).ok()
+    }
+
+    fn put(&self, table: &str, key: &str, value: Json) -> Result<()> {
+        self.store(&ns_key(table, key), value.encode().into_bytes());
+        Ok(())
+    }
+
+    fn delete(&self, table: &str, key: &str) -> Result<bool> {
+        Ok(self.objects.remove(&ns_key(table, key)).is_some())
+    }
+
+    fn scan(&self, table: &str) -> Vec<(String, Json)> {
+        Table::scan_prefix(self, table, "")
+    }
+
+    fn scan_prefix(&self, table: &str, prefix: &str) -> Vec<(String, Json)> {
+        let (lo, hi) = ns_range(table, prefix);
+        self.objects
+            .range(lo..hi)
+            .into_iter()
+            .filter_map(|(k, v)| {
+                let key = ns_split(&k)?;
+                if !key.starts_with(prefix) {
+                    return None;
+                }
+                let row = parse(std::str::from_utf8(&v).ok()?).ok()?;
+                Some((key.to_string(), row))
+            })
+            .collect()
+    }
+
+    fn scan_range(&self, table: &str, lo: &str, hi: &str) -> Vec<(String, Json)> {
+        let range = ns_key(table, lo)..ns_key(table, hi);
+        self.objects
+            .range(range)
+            .into_iter()
+            .filter_map(|(k, v)| {
+                let key = ns_split(&k)?.to_string();
+                let row = parse(std::str::from_utf8(&v).ok()?).ok()?;
+                Some((key, row))
+            })
+            .collect()
+    }
+
+    fn count(&self, table: &str) -> usize {
+        let (lo, hi) = ns_range(table, "");
+        self.objects.count_range(lo..hi)
+    }
+
+    fn read_modify_write(
+        &self,
+        table: &str,
+        key: &str,
+        f: &mut dyn FnMut(Option<&Json>) -> Result<Rmw>,
+    ) -> Result<Option<Json>> {
+        let okey = ns_key(table, key);
+        self.objects.locked(&okey, |shard| {
+            let cur: Option<Json> = shard
+                .get(&okey)
+                .and_then(|b| parse(std::str::from_utf8(b).ok()?).ok());
+            match f(cur.as_ref())? {
+                Rmw::Put(v) => {
+                    let bytes = v.encode().into_bytes();
+                    self.bytes_stored
+                        .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                    shard.insert(okey.clone(), Arc::new(bytes));
+                    Ok(Some(v))
+                }
+                Rmw::Delete => {
+                    shard.remove(&okey);
+                    Ok(None)
+                }
+                Rmw::Keep => Ok(cur),
+            }
+        })
     }
 }
 
@@ -311,5 +410,29 @@ mod tests {
         let (n, bytes) = s.stats();
         assert_eq!(n, 2);
         assert_eq!(bytes, 150);
+    }
+
+    #[test]
+    fn table_rows_round_trip_and_stay_namespaced() {
+        let (s, _bus, _clock) = store();
+        let table: &dyn Table = &s;
+        table
+            .put("meta", "a", Json::obj().field("x", 1u64).build())
+            .unwrap();
+        table
+            .put("meta", "b", Json::obj().field("x", 2u64).build())
+            .unwrap();
+        s.put("raw-binary", vec![0xff, 0xfe]); // un-namespaced blob
+        assert_eq!(
+            table.get("meta", "a").unwrap().get("x").unwrap().as_u64(),
+            Some(1)
+        );
+        let rows = table.scan("meta");
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, "a");
+        assert!(table.delete("meta", "a").unwrap());
+        assert!(table.get("meta", "a").is_none());
+        // the blob is untouched by table ops
+        assert!(s.exists("raw-binary"));
     }
 }

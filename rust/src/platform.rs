@@ -16,6 +16,7 @@ use crate::pricing::PricingModel;
 use crate::profiler::Profiler;
 use crate::runtime::Runtime;
 use crate::simclock::SimClock;
+use crate::storage::SharedTable;
 use crate::workload::{SimParams, Workloads};
 
 /// One ACAI deployment (paper Figure 6, assembled in-process).
@@ -41,10 +42,10 @@ impl Acai {
     pub fn boot(config: PlatformConfig) -> Result<Acai> {
         let clock = SimClock::new();
         let bus = Bus::new();
-        let kv = match &config.journal {
+        let kv: SharedTable = Arc::new(match &config.journal {
             Some(path) => KvStore::open(path)?,
             None => KvStore::in_memory(),
-        };
+        });
         let objects = ObjectStore::new(clock.clone(), bus.clone());
         let datalake = DataLake::new(kv, objects.clone(), bus.clone(), clock.clone());
         let cluster = Cluster::new(config.cluster.clone(), clock.clone());

@@ -19,6 +19,9 @@ use std::sync::Mutex;
 use crate::error::{AcaiError, Result};
 use crate::json::{parse, Json};
 
+pub mod pjrt;
+use pjrt as xla;
+
 /// Feature-vector width of the log-linear model (must match
 /// `python/compile/model.py::FEATURES`).
 pub const FEATURES: usize = 8;

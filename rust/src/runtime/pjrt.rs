@@ -1,0 +1,135 @@
+//! PJRT backend shim: one import surface for the `xla` crate.
+//!
+//! The crate builds fully offline by default; the real XLA/PJRT bindings
+//! are an *optional* backend behind the `pjrt` cargo feature.  This
+//! module is the seam:
+//!
+//! - with `--features pjrt`, it re-exports the vendored `xla` crate
+//!   (patch it in as a path dependency) and [`super::Runtime`] drives
+//!   real compiled HLO executables;
+//! - without the feature (the default), it provides inert stand-ins with
+//!   the same API whose client constructor fails with a clear error, so
+//!   every caller compiles and `Runtime::load` reports "backend not
+//!   compiled in" instead of link errors.
+//!
+//! Only the slice of the `xla` API the runtime actually touches is
+//! stubbed: client/compile/execute, HLO-text parsing, and f32 literals.
+
+#[cfg(feature = "pjrt")]
+pub use xla::*;
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::*;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::fmt;
+
+    /// Error type mirroring `xla::Error` for display purposes.
+    #[derive(Debug)]
+    pub struct Error(pub String);
+
+    impl fmt::Display for Error {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "{}", self.0)
+        }
+    }
+
+    impl std::error::Error for Error {}
+
+    fn unavailable<T>() -> Result<T, Error> {
+        Err(Error(
+            "PJRT backend not compiled in (rebuild with --features pjrt and a vendored \
+             `xla` crate)"
+                .into(),
+        ))
+    }
+
+    /// Stand-in for `xla::PjRtClient`.
+    pub struct PjRtClient;
+
+    impl PjRtClient {
+        pub fn cpu() -> Result<PjRtClient, Error> {
+            unavailable()
+        }
+
+        pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+            unavailable()
+        }
+    }
+
+    /// Stand-in for `xla::HloModuleProto`.
+    pub struct HloModuleProto;
+
+    impl HloModuleProto {
+        pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+            unavailable()
+        }
+    }
+
+    /// Stand-in for `xla::XlaComputation`.
+    pub struct XlaComputation;
+
+    impl XlaComputation {
+        pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+            XlaComputation
+        }
+    }
+
+    /// Stand-in for `xla::PjRtLoadedExecutable`.
+    pub struct PjRtLoadedExecutable;
+
+    impl PjRtLoadedExecutable {
+        pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+            unavailable()
+        }
+    }
+
+    /// Stand-in for `xla::PjRtBuffer`.
+    pub struct PjRtBuffer;
+
+    impl PjRtBuffer {
+        pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+            unavailable()
+        }
+    }
+
+    /// Stand-in for `xla::Literal` (f32 host tensors only).
+    pub struct Literal;
+
+    impl Literal {
+        pub fn scalar(_v: f32) -> Literal {
+            Literal
+        }
+
+        pub fn vec1(_data: &[f32]) -> Literal {
+            Literal
+        }
+
+        pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+            unavailable()
+        }
+
+        pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+            unavailable()
+        }
+
+        pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+            unavailable()
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn stub_client_fails_with_clear_message() {
+            let err = match PjRtClient::cpu() {
+                Err(e) => e,
+                Ok(_) => panic!("stub client must not construct"),
+            };
+            assert!(err.to_string().contains("pjrt"), "{err}");
+        }
+    }
+}

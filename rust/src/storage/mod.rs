@@ -1,0 +1,38 @@
+//! The shared storage substrate (the tier under the cloud-store
+//! stand-ins).
+//!
+//! Before this module existed, each of the four substrates —
+//! [`crate::kvstore`] (MySQL), [`crate::docstore`] (MongoDB),
+//! [`crate::objectstore`] (S3), [`crate::graphstore`] (Neo4j) — was an
+//! independent `Arc<Mutex<Inner>>`: one global lock per store, private
+//! journal code, private map plumbing.  Under concurrent pipelines
+//! (the paper's §4.4 scalability story) every operation serialized on
+//! those four locks.
+//!
+//! This module factors out the common machinery:
+//!
+//! - [`ShardedMap`] — N lock shards keyed by key hash (default
+//!   [`shard::DEFAULT_SHARDS`] = 16); point ops lock one shard, ordered
+//!   scans merge per-shard runs;
+//! - [`Journal`] — append-only JSON log with batched/buffered writes,
+//!   explicit [`Journal::flush`], and crash-recovery [`Journal::replay`];
+//! - [`Table`] — the get/put/delete/scan/read-modify-write interface all
+//!   four substrates implement, which the data lake and the engine's job
+//!   registry program against ([`SharedTable`] = `Arc<dyn Table>`).
+//!
+//! The paper's correctness anchor — sequential version-number assignment
+//! under the "server-side lock" — is preserved per key:
+//! [`Table::read_modify_write`] bumps each version counter atomically
+//! under its own shard lock, eliminating the cross-key serialization
+//! without giving up the guarantee.
+
+pub mod journal;
+pub mod shard;
+pub mod table;
+
+pub use journal::Journal;
+pub use shard::{ShardedMap, DEFAULT_SHARDS};
+pub use table::{
+    bump_version, claim_version, ns_key, ns_range, ns_split, publish_version, Rmw, SharedTable,
+    Table,
+};

@@ -1,0 +1,233 @@
+//! [`ShardedMap`]: the lock-sharded ordered map under every substrate.
+//!
+//! N independent `Mutex<BTreeMap>` shards, keyed by key hash.  Point
+//! operations (get / insert / remove / per-key read-modify-write) lock
+//! exactly one shard, so operations on different keys proceed in
+//! parallel — this replaces the single global `Mutex<Inner>` the four
+//! cloud-store stand-ins used to serialize on.  Ordered scans visit every
+//! shard (each shard is itself ordered) and merge the per-shard runs.
+//!
+//! Locking discipline: a closure passed to [`ShardedMap::locked`] /
+//! [`ShardedMap::read_modify_write`] runs while holding that key's shard
+//! lock.  It must not call back into the same map (same-shard re-entry
+//! self-deadlocks) nor into another store's locked section (cross-store
+//! lock-order inversions).  Upper layers follow the rule "compute under
+//! one key's lock, compose across keys outside it".
+
+use std::collections::BTreeMap;
+use std::hash::{Hash, Hasher};
+use std::ops::RangeBounds;
+use std::sync::Mutex;
+
+/// Default shard count — enough to make 8-way contention rare while
+/// keeping scan fan-in cheap.
+pub const DEFAULT_SHARDS: usize = 16;
+
+/// A concurrent ordered map with per-shard locking.
+pub struct ShardedMap<K, V> {
+    shards: Box<[Mutex<BTreeMap<K, V>>]>,
+}
+
+impl<K: Ord + Hash, V> Default for ShardedMap<K, V> {
+    fn default() -> Self {
+        Self::new(DEFAULT_SHARDS)
+    }
+}
+
+impl<K: Ord + Hash, V> ShardedMap<K, V> {
+    /// A map with `shards` lock shards (clamped to at least 1).
+    pub fn new(shards: usize) -> Self {
+        let n = shards.max(1);
+        let shards = (0..n).map(|_| Mutex::new(BTreeMap::new())).collect();
+        Self { shards }
+    }
+
+    /// Number of lock shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard(&self, key: &K) -> &Mutex<BTreeMap<K, V>> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    /// Run `f` on the shard owning `key`, holding its lock.  The one
+    /// escape hatch for multi-step operations that must be atomic with
+    /// respect to that key (see the module docs for what `f` must not
+    /// do).
+    pub fn locked<T>(&self, key: &K, f: impl FnOnce(&mut BTreeMap<K, V>) -> T) -> T {
+        let mut shard = self.shard(key).lock().unwrap();
+        f(&mut shard)
+    }
+
+    /// Insert or replace; returns the previous value.
+    pub fn insert(&self, key: K, value: V) -> Option<V> {
+        let mut shard = self.shard(&key).lock().unwrap();
+        shard.insert(key, value)
+    }
+
+    /// Remove; returns the previous value.
+    pub fn remove(&self, key: &K) -> Option<V> {
+        self.shard(key).lock().unwrap().remove(key)
+    }
+
+    pub fn contains_key(&self, key: &K) -> bool {
+        self.shard(key).lock().unwrap().contains_key(key)
+    }
+
+    /// Total entries across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.lock().unwrap().is_empty())
+    }
+
+    /// Remove every entry.
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+}
+
+impl<K: Ord + Hash + Clone, V: Clone> ShardedMap<K, V> {
+    /// Clone of the value at `key`.
+    pub fn get(&self, key: &K) -> Option<V> {
+        self.shard(key).lock().unwrap().get(key).cloned()
+    }
+
+    /// Atomic per-key read-modify-write: `f` sees the current value and
+    /// returns the replacement (`None` deletes).  Holds only the owning
+    /// shard's lock — the primitive behind sequential version assignment.
+    pub fn read_modify_write(
+        &self,
+        key: &K,
+        f: impl FnOnce(Option<&V>) -> Option<V>,
+    ) -> Option<V> {
+        let mut shard = self.shard(key).lock().unwrap();
+        match f(shard.get(key)) {
+            Some(v) => {
+                shard.insert(key.clone(), v.clone());
+                Some(v)
+            }
+            None => {
+                shard.remove(key);
+                None
+            }
+        }
+    }
+
+    /// Key-ordered entries within `range`, merged across shards.  Each
+    /// shard is locked once (in turn, never two at a time).
+    pub fn range<R: RangeBounds<K> + Clone>(&self, range: R) -> Vec<(K, V)> {
+        let mut out: Vec<(K, V)> = Vec::new();
+        for s in &self.shards {
+            let shard = s.lock().unwrap();
+            out.extend(shard.range(range.clone()).map(|(k, v)| (k.clone(), v.clone())));
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// All entries, key-ordered.
+    pub fn snapshot(&self) -> Vec<(K, V)> {
+        self.range(..)
+    }
+
+    /// Number of entries within `range`, without cloning keys or values.
+    pub fn count_range<R: RangeBounds<K> + Clone>(&self, range: R) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().range(range.clone()).count())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn point_ops_round_trip() {
+        let m: ShardedMap<String, u64> = ShardedMap::default();
+        assert!(m.insert("a".into(), 1).is_none());
+        assert_eq!(m.insert("a".into(), 2), Some(1));
+        assert_eq!(m.get(&"a".into()), Some(2));
+        assert!(m.contains_key(&"a".into()));
+        assert_eq!(m.remove(&"a".into()), Some(2));
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn scans_are_key_ordered_across_shards() {
+        let m: ShardedMap<String, u64> = ShardedMap::new(4);
+        for (i, k) in ["d", "a", "c", "b", "e"].iter().enumerate() {
+            m.insert(k.to_string(), i as u64);
+        }
+        let keys: Vec<String> = m.snapshot().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, ["a", "b", "c", "d", "e"]);
+        let mid: Vec<String> = m
+            .range("b".to_string().."d".to_string())
+            .into_iter()
+            .map(|(k, _)| k)
+            .collect();
+        assert_eq!(mid, ["b", "c"]);
+        assert_eq!(m.count_range("b".to_string().."d".to_string()), 2);
+    }
+
+    #[test]
+    fn one_shard_degenerates_to_a_plain_map() {
+        let m: ShardedMap<u64, u64> = ShardedMap::new(1);
+        for i in 0..100 {
+            m.insert(i, i * 2);
+        }
+        assert_eq!(m.len(), 100);
+        assert_eq!(m.shard_count(), 1);
+    }
+
+    #[test]
+    fn rmw_is_atomic_under_contention() {
+        let m: Arc<ShardedMap<String, u64>> = Arc::new(ShardedMap::default());
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    m.read_modify_write(&"ctr".to_string(), |cur| {
+                        Some(cur.copied().unwrap_or(0) + 1)
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.get(&"ctr".to_string()), Some(8000));
+    }
+
+    #[test]
+    fn rmw_none_deletes() {
+        let m: ShardedMap<String, u64> = ShardedMap::default();
+        m.insert("k".into(), 7);
+        assert!(m.read_modify_write(&"k".to_string(), |_| None).is_none());
+        assert!(m.get(&"k".to_string()).is_none());
+    }
+
+    #[test]
+    fn tuple_keys_support_table_scoped_ranges() {
+        let m: ShardedMap<(String, String), u64> = ShardedMap::default();
+        m.insert(("t1".into(), "a".into()), 1);
+        m.insert(("t1".into(), "b".into()), 2);
+        m.insert(("t2".into(), "a".into()), 3);
+        let lo = ("t1".to_string(), String::new());
+        let hi = ("t1\u{0}".to_string(), String::new());
+        let hits = m.range(lo..hi);
+        assert_eq!(hits.len(), 2);
+        assert!(hits.iter().all(|((t, _), _)| t == "t1"));
+    }
+}

@@ -1,0 +1,240 @@
+//! [`Table`]: the uniform row-store interface over every substrate.
+//!
+//! Upper layers (the data lake, the job registry) program against this
+//! trait instead of concrete store internals, so any substrate — the
+//! embedded kvstore, the document store, the object store, even the
+//! graph store's node properties — can back them.  Rows are [`Json`]
+//! values in named tables with string primary keys.
+//!
+//! The load-bearing operation is [`Table::read_modify_write`]: an atomic
+//! per-key update executed under that key's shard lock.  It is how the
+//! paper's "server-side lock" guarantee (sequential version-number
+//! assignment, §4.4.3) survives the sharded refactor: instead of
+//! serializing every writer behind one store-wide mutex, each version
+//! counter is bumped atomically under its own key's lock.
+//!
+//! Rules for `read_modify_write` closures (enforced by convention, see
+//! [`crate::storage::shard`] for why): no calls back into any store, no
+//! I/O other than the store's own journal, and no panics — compute the
+//! next row from the current one, nothing else.  The closure runs at
+//! most once per call and must be side-effect-free on the error path.
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::json::Json;
+
+/// Outcome of a read-modify-write closure.
+#[derive(Debug, Clone)]
+pub enum Rmw {
+    /// Replace (or create) the row.
+    Put(Json),
+    /// Delete the row.
+    Delete,
+    /// Leave the row untouched.
+    Keep,
+}
+
+/// A named-table row store with per-key atomic updates.
+pub trait Table: Send + Sync {
+    /// Fetch a row.
+    fn get(&self, table: &str, key: &str) -> Option<Json>;
+
+    /// Insert or replace a row.
+    fn put(&self, table: &str, key: &str, value: Json) -> Result<()>;
+
+    /// Delete a row; `true` if it existed.
+    fn delete(&self, table: &str, key: &str) -> Result<bool>;
+
+    /// All (key, row) pairs of a table, key-ordered.
+    fn scan(&self, table: &str) -> Vec<(String, Json)>;
+
+    /// (key, row) pairs with keys starting with `prefix`, key-ordered.
+    fn scan_prefix(&self, table: &str, prefix: &str) -> Vec<(String, Json)>;
+
+    /// (key, row) pairs with keys in `[lo, hi)`, key-ordered.
+    fn scan_range(&self, table: &str, lo: &str, hi: &str) -> Vec<(String, Json)>;
+
+    /// Row count of a table.
+    fn count(&self, table: &str) -> usize {
+        self.scan(table).len()
+    }
+
+    /// Atomic per-key read-modify-write.  `f` observes the current row
+    /// (if any) and decides the outcome; errors abort with no write.
+    /// Returns the row *after* the operation (`None` once deleted or
+    /// when `Keep` left an absent row absent).
+    fn read_modify_write(
+        &self,
+        table: &str,
+        key: &str,
+        f: &mut dyn FnMut(Option<&Json>) -> Result<Rmw>,
+    ) -> Result<Option<Json>>;
+
+    /// Flush any buffered durability machinery (no-op for in-memory
+    /// stores).
+    fn flush(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Shared handle the upper layers hold.
+pub type SharedTable = Arc<dyn Table>;
+
+/// Namespace separator for stores whose native keyspace is flat (the
+/// object store's object keys, the graph store's property rows): table
+/// and row key are joined as `table␟key`.
+pub const NS_SEP: char = '\u{1f}';
+
+/// One past [`NS_SEP`] — `table` + this char is the exclusive upper
+/// bound of the table's namespace in a flat ordered keyspace.
+pub const NS_END: char = '\u{20}';
+
+/// Join a table name and row key into a namespaced flat key.
+pub fn ns_key(table: &str, key: &str) -> String {
+    format!("{table}{NS_SEP}{key}")
+}
+
+/// Half-open flat-key range covering `table`'s rows whose keys start at
+/// `prefix` (pass `""` for the whole table).  Prefix scans must still
+/// filter with `starts_with` — the range is bounded by the namespace
+/// end, not the prefix end.
+pub fn ns_range(table: &str, prefix: &str) -> (String, String) {
+    (ns_key(table, prefix), format!("{table}{NS_END}"))
+}
+
+/// Row key of a namespaced flat key (None for keys outside any
+/// namespace).
+pub fn ns_split(flat: &str) -> Option<&str> {
+    flat.split_once(NS_SEP).map(|(_, key)| key)
+}
+
+fn version_of(row: Option<&Json>) -> u32 {
+    row.and_then(|v| v.get("version"))
+        .and_then(Json::as_u64)
+        .unwrap_or(0) as u32
+}
+
+/// Fetch-and-increment a `{"version": n}` counter row, returning the
+/// newly assigned version (1 for a fresh row).  The common idiom behind
+/// sequential version assignment — factored here so every call site
+/// bumps identically.
+pub fn bump_version(table: &dyn Table, table_name: &str, key: &str) -> Result<u32> {
+    let row = table.read_modify_write(table_name, key, &mut |cur| {
+        Ok(Rmw::Put(
+            Json::obj().field("version", version_of(cur) as u64 + 1).build(),
+        ))
+    })?;
+    Ok(version_of(row.as_ref()).max(1))
+}
+
+/// Claim the next version for `key` *without publishing it*: bumps a
+/// private sequence row in `seq_table`, floored by the already-published
+/// pointer in `latest_table` (so stores whose journals predate the
+/// sequence row never re-issue a live version).  Pair with
+/// [`publish_version`] after the versioned row itself is written — the
+/// published pointer then never references a row that does not exist
+/// yet, which the old whole-store transaction used to guarantee.
+pub fn claim_version(
+    table: &dyn Table,
+    seq_table: &str,
+    latest_table: &str,
+    key: &str,
+) -> Result<u32> {
+    let floor = version_of(table.get(latest_table, key).as_ref());
+    let row = table.read_modify_write(seq_table, key, &mut |cur| {
+        let next = version_of(cur).max(floor) + 1;
+        Ok(Rmw::Put(Json::obj().field("version", next as u64).build()))
+    })?;
+    Ok(version_of(row.as_ref()).max(1))
+}
+
+/// Publish `version` as the latest for `key`, monotonically: a stale
+/// publisher (whose claim lost the race) never moves the pointer
+/// backwards.
+pub fn publish_version(
+    table: &dyn Table,
+    latest_table: &str,
+    key: &str,
+    version: u32,
+) -> Result<()> {
+    table.read_modify_write(latest_table, key, &mut |cur| {
+        if version > version_of(cur) {
+            Ok(Rmw::Put(Json::obj().field("version", version as u64).build()))
+        } else {
+            Ok(Rmw::Keep)
+        }
+    })?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::KvStore;
+
+    #[test]
+    fn trait_is_object_safe_and_shared() {
+        let table: SharedTable = Arc::new(KvStore::in_memory());
+        table.put("t", "a", Json::from(1u64)).unwrap();
+        assert_eq!(table.get("t", "a").unwrap().as_u64(), Some(1));
+        assert_eq!(table.count("t"), 1);
+        assert!(table.delete("t", "a").unwrap());
+        assert!(table.get("t", "a").is_none());
+    }
+
+    #[test]
+    fn bump_version_is_dense_from_one() {
+        let kv = KvStore::in_memory();
+        assert_eq!(bump_version(&kv, "latest", "k").unwrap(), 1);
+        assert_eq!(bump_version(&kv, "latest", "k").unwrap(), 2);
+        assert_eq!(bump_version(&kv, "latest", "other").unwrap(), 1);
+    }
+
+    #[test]
+    fn claim_then_publish_never_dangles() {
+        let kv = KvStore::in_memory();
+        // claim does not move the published pointer
+        assert_eq!(claim_version(&kv, "seq", "latest", "k").unwrap(), 1);
+        assert!(kv.get("latest", "k").is_none());
+        publish_version(&kv, "latest", "k", 1).unwrap();
+        assert_eq!(claim_version(&kv, "seq", "latest", "k").unwrap(), 2);
+        // stale publisher cannot move the pointer backwards
+        publish_version(&kv, "latest", "k", 2).unwrap();
+        publish_version(&kv, "latest", "k", 1).unwrap();
+        let latest = kv.get("latest", "k").unwrap();
+        assert_eq!(latest.get("version").and_then(Json::as_u64), Some(2));
+    }
+
+    #[test]
+    fn claim_is_floored_by_published_pointer() {
+        // a journal that predates the sequence row: latest=5, no seq
+        let kv = KvStore::in_memory();
+        kv.put("latest", "k", Json::obj().field("version", 5u64).build())
+            .unwrap();
+        assert_eq!(claim_version(&kv, "seq", "latest", "k").unwrap(), 6);
+    }
+
+    #[test]
+    fn rmw_keep_writes_nothing() {
+        let kv = KvStore::in_memory();
+        kv.put("t", "k", Json::from(5u64)).unwrap();
+        let writes_before = kv.write_count();
+        let after = kv
+            .read_modify_write("t", "k", &mut |_| Ok(Rmw::Keep))
+            .unwrap();
+        assert_eq!(after.unwrap().as_u64(), Some(5));
+        assert_eq!(kv.write_count(), writes_before);
+    }
+
+    #[test]
+    fn rmw_error_aborts_without_write() {
+        let kv = KvStore::in_memory();
+        kv.put("t", "k", Json::from(5u64)).unwrap();
+        let err = kv.read_modify_write("t", "k", &mut |_| {
+            Err(crate::error::AcaiError::conflict("nope"))
+        });
+        assert!(err.is_err());
+        assert_eq!(kv.get("t", "k").unwrap().as_u64(), Some(5));
+    }
+}
