@@ -1,0 +1,108 @@
+//! Perf: requests/sec through the in-process `/v1` handler for the hot
+//! routes (job status poll, file listing) — no sockets, so this
+//! measures routing + middleware + DTO encoding, not the kernel.
+//!
+//! Context for the PR: the seed edge drove the whole engine to idle
+//! inside `POST /jobs`, so a status "poll" did not exist and submission
+//! throughput was bounded by job runtime.  With the async lifecycle the
+//! poll path is a registry read behind the router; these numbers are
+//! the requests/sec budget the edge can sustain per core.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use acai::api::make_handler;
+use acai::cluster::ResourceConfig;
+use acai::httpd::Request;
+use acai::json::Json;
+use acai::sdk::{AcaiApi, Client, JobRequest};
+use acai::Acai;
+
+const WARMUP: usize = 2_000;
+const ITERS: usize = 50_000;
+
+fn get(path: &str, token: &str) -> Request {
+    let (path, query) = match path.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (path.to_string(), String::new()),
+    };
+    let mut headers = HashMap::new();
+    headers.insert("x-acai-token".to_string(), token.to_string());
+    Request {
+        method: "GET".into(),
+        path,
+        query,
+        headers,
+        body: vec![],
+    }
+}
+
+fn bench(label: &str, handler: &acai::httpd::Handler, req: &Request) {
+    for _ in 0..WARMUP {
+        let resp = (**handler)(req);
+        assert!(resp.status < 400, "{label}: {}", resp.status);
+    }
+    let start = Instant::now();
+    for _ in 0..ITERS {
+        let resp = (**handler)(req);
+        assert!(resp.status < 400);
+    }
+    let secs = start.elapsed().as_secs_f64();
+    println!(
+        "{label:<32} {ITERS:>7} reqs  {secs:>7.3}s  {:>10.0} req/s",
+        ITERS as f64 / secs
+    );
+}
+
+fn main() {
+    let acai = Arc::new(Acai::boot_default());
+    let root = acai.credentials.root_token().to_string();
+    let (_p, token) = acai.credentials.create_project(&root, "bench", "u").unwrap();
+    let client = Client::connect(acai.clone(), &token).unwrap();
+
+    // fixture: 64 files + one finished job to poll
+    let contents: Vec<(String, Vec<u8>)> = (0..64)
+        .map(|i| (format!("/data/f{i:03}.bin"), vec![7u8; 128]))
+        .collect();
+    let refs: Vec<(&str, &[u8])> = contents
+        .iter()
+        .map(|(p, b)| (p.as_str(), b.as_slice()))
+        .collect();
+    client.upload_files(&refs).unwrap();
+    let job = client
+        .submit(JobRequest {
+            name: "poll-target".into(),
+            command: "python train_mnist.py --epoch 1".into(),
+            input_fileset: String::new(),
+            output_fileset: "out".into(),
+            resources: ResourceConfig::new(0.5, 512),
+        })
+        .unwrap();
+    let status = client.await_job(job).unwrap();
+    assert_eq!(status.state, "finished");
+
+    let handler = make_handler(acai);
+    println!("in-process /v1 handler throughput ({ITERS} iters after {WARMUP} warmup):");
+    bench(
+        "GET /v1/jobs/{id}  (status poll)",
+        &handler,
+        &get(&format!("/v1/jobs/{job}"), &token),
+    );
+    bench(
+        "GET /v1/jobs?limit=100",
+        &handler,
+        &get("/v1/jobs?limit=100", &token),
+    );
+    bench(
+        "GET /v1/files?limit=100",
+        &handler,
+        &get("/v1/files?prefix=/data&limit=100", &token),
+    );
+    bench(
+        "GET /v1/jobs/{id}/logs",
+        &handler,
+        &get(&format!("/v1/jobs/{job}/logs?offset=0"), &token),
+    );
+    bench("GET /v1/healthz", &handler, &get("/v1/healthz", ""));
+}

@@ -1,0 +1,871 @@
+//! Typed DTO layer of the `/v1` REST API (paper §3.4/§4.1).
+//!
+//! Every payload that crosses the wire has a typed shape here with an
+//! explicit `to_json` / `from_json` codec, validated **at the edge**:
+//! unknown fields, missing required fields, and wrong scalar types are
+//! `400 invalid` — never silently defaulted.  The same types back the
+//! [`crate::sdk::AcaiApi`] trait, so the in-process client and the
+//! remote wire client speak identical structures (round-tripping them
+//! through these codecs is what the conformance suite proves).
+
+use crate::autoprovision::{Decision, Objective};
+use crate::cluster::ResourceConfig;
+use crate::datalake::metadata::ArtifactKind;
+use crate::docstore::{Clause, IndexKey};
+use crate::engine::JobRecord;
+use crate::error::{AcaiError, Result};
+use crate::ids::{JobId, Version};
+use crate::json::{Json, JsonObject};
+use crate::sdk::JobRequest;
+
+use super::router::Query;
+
+// ---------------------------------------------------------------------
+// strict object readers
+// ---------------------------------------------------------------------
+
+/// The body must be a JSON object.
+pub fn as_object(v: &Json) -> Result<&JsonObject> {
+    v.as_object()
+        .ok_or_else(|| AcaiError::invalid("request body must be a JSON object"))
+}
+
+/// Reject unknown fields — the edge never guesses what a typo meant.
+pub fn check_fields(obj: &JsonObject, allowed: &[&str]) -> Result<()> {
+    for key in obj.keys() {
+        if !allowed.contains(&key) {
+            return Err(AcaiError::invalid(format!("unknown field {key:?}")));
+        }
+    }
+    Ok(())
+}
+
+/// Required string field.
+pub fn str_field(obj: &JsonObject, key: &str) -> Result<String> {
+    match obj.get(key) {
+        Some(Json::Str(s)) => Ok(s.clone()),
+        Some(_) => Err(AcaiError::invalid(format!("field {key:?} must be a string"))),
+        None => Err(AcaiError::invalid(format!("missing field {key:?}"))),
+    }
+}
+
+/// Optional string field (absent is fine; wrong type is not).
+pub fn opt_str_field(obj: &JsonObject, key: &str) -> Result<Option<String>> {
+    match obj.get(key) {
+        Some(Json::Str(s)) => Ok(Some(s.clone())),
+        Some(Json::Null) | None => Ok(None),
+        Some(_) => Err(AcaiError::invalid(format!("field {key:?} must be a string"))),
+    }
+}
+
+/// Required numeric field.
+pub fn f64_field(obj: &JsonObject, key: &str) -> Result<f64> {
+    match obj.get(key) {
+        Some(Json::Num(n)) => Ok(*n),
+        Some(_) => Err(AcaiError::invalid(format!("field {key:?} must be a number"))),
+        None => Err(AcaiError::invalid(format!("missing field {key:?}"))),
+    }
+}
+
+/// Required non-negative integer field.
+pub fn u64_field(obj: &JsonObject, key: &str) -> Result<u64> {
+    match obj.get(key) {
+        Some(v @ Json::Num(_)) => v
+            .as_u64()
+            .ok_or_else(|| AcaiError::invalid(format!("field {key:?} must be a non-negative integer"))),
+        Some(_) => Err(AcaiError::invalid(format!("field {key:?} must be a number"))),
+        None => Err(AcaiError::invalid(format!("missing field {key:?}"))),
+    }
+}
+
+/// Optional numeric field (absent/null is fine; wrong type is not).
+pub fn opt_f64_field(obj: &JsonObject, key: &str) -> Result<Option<f64>> {
+    match obj.get(key) {
+        Some(Json::Num(n)) => Ok(Some(*n)),
+        Some(Json::Null) | None => Ok(None),
+        Some(_) => Err(AcaiError::invalid(format!("field {key:?} must be a number"))),
+    }
+}
+
+/// Optional u32 field — strict type and range.
+pub fn opt_u32_field(obj: &JsonObject, key: &str) -> Result<Option<u32>> {
+    match obj.get(key) {
+        Some(Json::Null) | None => Ok(None),
+        Some(v @ Json::Num(_)) => {
+            let n = v.as_u64().ok_or_else(|| {
+                AcaiError::invalid(format!("field {key:?} must be a non-negative integer"))
+            })?;
+            u32::try_from(n)
+                .map(Some)
+                .map_err(|_| AcaiError::invalid(format!("field {key:?} out of range")))
+        }
+        Some(_) => Err(AcaiError::invalid(format!("field {key:?} must be a number"))),
+    }
+}
+
+/// Required u32 field — explicit range check, no silent truncation.
+pub fn u32_field(obj: &JsonObject, key: &str) -> Result<u32> {
+    let v = u64_field(obj, key)?;
+    u32::try_from(v)
+        .map_err(|_| AcaiError::invalid(format!("field {key:?} out of range (max {})", u32::MAX)))
+}
+
+/// Required array field.
+pub fn arr_field<'a>(obj: &'a JsonObject, key: &str) -> Result<&'a [Json]> {
+    match obj.get(key) {
+        Some(Json::Arr(a)) => Ok(a),
+        Some(_) => Err(AcaiError::invalid(format!("field {key:?} must be an array"))),
+        None => Err(AcaiError::invalid(format!("missing field {key:?}"))),
+    }
+}
+
+// ---------------------------------------------------------------------
+// base64 (file content crosses the JSON wire as standard base64)
+// ---------------------------------------------------------------------
+
+const B64_ALPHABET: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Standard (padded) base64 encoding.
+pub fn b64_encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b0 = chunk[0] as u32;
+        let b1 = chunk.get(1).copied().unwrap_or(0) as u32;
+        let b2 = chunk.get(2).copied().unwrap_or(0) as u32;
+        let triple = (b0 << 16) | (b1 << 8) | b2;
+        out.push(B64_ALPHABET[(triple >> 18) as usize & 63] as char);
+        out.push(B64_ALPHABET[(triple >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 {
+            B64_ALPHABET[(triple >> 6) as usize & 63] as char
+        } else {
+            '='
+        });
+        out.push(if chunk.len() > 2 {
+            B64_ALPHABET[triple as usize & 63] as char
+        } else {
+            '='
+        });
+    }
+    out
+}
+
+fn b64_value(c: u8) -> Result<u32> {
+    match c {
+        b'A'..=b'Z' => Ok((c - b'A') as u32),
+        b'a'..=b'z' => Ok((c - b'a') as u32 + 26),
+        b'0'..=b'9' => Ok((c - b'0') as u32 + 52),
+        b'+' => Ok(62),
+        b'/' => Ok(63),
+        _ => Err(AcaiError::invalid(format!(
+            "bad base64 character {:?}",
+            c as char
+        ))),
+    }
+}
+
+/// Standard (padded) base64 decoding.
+pub fn b64_decode(s: &str) -> Result<Vec<u8>> {
+    let bytes = s.as_bytes();
+    if bytes.len() % 4 != 0 {
+        return Err(AcaiError::invalid("base64 length must be a multiple of 4"));
+    }
+    let n_chunks = bytes.len() / 4;
+    let mut out = Vec::with_capacity(n_chunks * 3);
+    for (ci, chunk) in bytes.chunks(4).enumerate() {
+        let pad = chunk.iter().filter(|&&c| c == b'=').count();
+        if pad > 0 && ci + 1 != n_chunks {
+            return Err(AcaiError::invalid("base64 padding before the final chunk"));
+        }
+        if pad > 2 || (pad > 0 && (chunk[2] == b'=') != (pad == 2)) {
+            return Err(AcaiError::invalid("bad base64 padding"));
+        }
+        if chunk[..4 - pad].iter().any(|&c| c == b'=') {
+            return Err(AcaiError::invalid("bad base64 padding"));
+        }
+        let mut triple = 0u32;
+        for &c in &chunk[..4 - pad] {
+            triple = (triple << 6) | b64_value(c)?;
+        }
+        triple <<= 6 * pad as u32;
+        out.push((triple >> 16) as u8);
+        if pad < 2 {
+            out.push((triple >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(triple as u8);
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// pagination
+// ---------------------------------------------------------------------
+
+/// Hard cap on one page of any list endpoint.
+pub const MAX_PAGE_LIMIT: usize = 1000;
+/// Default page size when `?limit=` is absent.
+pub const DEFAULT_PAGE_LIMIT: usize = 100;
+
+/// Cursor-pagination request: `?limit=&after=`.
+#[derive(Debug, Clone)]
+pub struct PageReq {
+    pub limit: usize,
+    /// Opaque cursor: the `next` value of the previous page.
+    pub after: Option<String>,
+}
+
+impl Default for PageReq {
+    fn default() -> Self {
+        Self {
+            limit: DEFAULT_PAGE_LIMIT,
+            after: None,
+        }
+    }
+}
+
+impl PageReq {
+    /// Parse from a query string (validated via [`PageReq::checked`]).
+    pub fn from_query(q: &Query) -> Result<PageReq> {
+        let limit = match q.get("limit") {
+            None => DEFAULT_PAGE_LIMIT,
+            Some(raw) => raw
+                .parse()
+                .map_err(|_| AcaiError::invalid(format!("bad limit {raw:?}")))?,
+        };
+        PageReq {
+            limit,
+            after: q.get("after").map(String::from),
+        }
+        .checked()
+    }
+
+    /// The shared page invariants BOTH clients enforce, so the
+    /// in-process and wire paths agree: `limit == 0` is a 400,
+    /// `limit > MAX_PAGE_LIMIT` is clamped.
+    pub fn checked(&self) -> Result<PageReq> {
+        if self.limit == 0 {
+            return Err(AcaiError::invalid("limit must be >= 1"));
+        }
+        Ok(PageReq {
+            limit: self.limit.min(MAX_PAGE_LIMIT),
+            after: self.after.clone(),
+        })
+    }
+}
+
+/// One page of results plus the cursor for the next.
+#[derive(Debug, Clone)]
+pub struct Page<T> {
+    pub items: Vec<T>,
+    /// Pass back as `?after=` to continue; `None` means exhausted.
+    pub next: Option<String>,
+}
+
+/// Apply cursor pagination to `items`, which must be ascending in
+/// `key` (cursors compare lexicographically — zero-pad numeric keys).
+pub fn cut_page<T>(items: Vec<T>, page: &PageReq, key: impl Fn(&T) -> String) -> Page<T> {
+    let mut out = Vec::new();
+    let mut last_key: Option<String> = None;
+    let mut more = false;
+    for item in items {
+        let k = key(&item);
+        if let Some(after) = &page.after {
+            if k.as_str() <= after.as_str() {
+                continue;
+            }
+        }
+        if out.len() == page.limit {
+            more = true;
+            break;
+        }
+        last_key = Some(k);
+        out.push(item);
+    }
+    Page {
+        items: out,
+        next: if more { last_key } else { None },
+    }
+}
+
+/// Encode a page as `{"items": [...], "next": cursor-or-null}`.
+pub fn page_json(items: Vec<Json>, next: &Option<String>) -> Json {
+    Json::obj()
+        .field("items", Json::Arr(items))
+        .field(
+            "next",
+            match next {
+                Some(c) => Json::from(c.as_str()),
+                None => Json::Null,
+            },
+        )
+        .build()
+}
+
+/// Decode a page, mapping each item through `item`.
+pub fn page_from_json<T>(
+    v: &Json,
+    item: impl Fn(&Json) -> Result<T>,
+) -> Result<Page<T>> {
+    let obj = as_object(v)?;
+    let raw = arr_field(obj, "items")?;
+    let mut items = Vec::with_capacity(raw.len());
+    for it in raw {
+        items.push(item(it)?);
+    }
+    let next = match obj.get("next") {
+        Some(Json::Str(s)) => Some(s.clone()),
+        _ => None,
+    };
+    Ok(Page { items, next })
+}
+
+// ---------------------------------------------------------------------
+// files + file sets
+// ---------------------------------------------------------------------
+
+/// A (path-or-name, version) listing entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FileEntry {
+    pub path: String,
+    pub version: Version,
+}
+
+impl FileEntry {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("path", self.path.as_str())
+            .field("version", self.version)
+            .build()
+    }
+
+    pub fn from_json(v: &Json) -> Result<FileEntry> {
+        let obj = as_object(v)?;
+        Ok(FileEntry {
+            path: str_field(obj, "path")?,
+            version: u32_field(obj, "version")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// jobs
+// ---------------------------------------------------------------------
+
+/// Submission payload (`POST /v1/jobs`).  `input_fileset` is the only
+/// optional field (a job may take no input); everything else is
+/// required, so a typo'd or missing field fails loudly instead of
+/// submitting a half-empty job.
+pub fn job_request_from_json(v: &Json) -> Result<JobRequest> {
+    let obj = as_object(v)?;
+    check_fields(
+        obj,
+        &["name", "command", "input_fileset", "output_fileset", "vcpus", "mem_mb"],
+    )?;
+    Ok(JobRequest {
+        name: str_field(obj, "name")?,
+        command: str_field(obj, "command")?,
+        input_fileset: opt_str_field(obj, "input_fileset")?.unwrap_or_default(),
+        output_fileset: str_field(obj, "output_fileset")?,
+        resources: ResourceConfig::new(f64_field(obj, "vcpus")?, u32_field(obj, "mem_mb")?),
+    })
+}
+
+pub fn job_request_to_json(r: &JobRequest) -> Json {
+    Json::obj()
+        .field("name", r.name.as_str())
+        .field("command", r.command.as_str())
+        .field("input_fileset", r.input_fileset.as_str())
+        .field("output_fileset", r.output_fileset.as_str())
+        .field("vcpus", r.resources.vcpus)
+        .field("mem_mb", r.resources.mem_mb)
+        .build()
+}
+
+/// Job status as seen through the API (the project-public subset of
+/// [`JobRecord`] — internal ids like the container stay inside).
+#[derive(Debug, Clone)]
+pub struct JobStatus {
+    pub id: JobId,
+    pub name: String,
+    /// Lifecycle state string (`queued`, `running`, `finished`, ...).
+    pub state: String,
+    pub command: String,
+    pub submitted_at: f64,
+    pub runtime_secs: Option<f64>,
+    pub cost: Option<f64>,
+    pub output_version: Option<Version>,
+    pub error: Option<String>,
+}
+
+impl JobStatus {
+    pub fn terminal(&self) -> bool {
+        matches!(self.state.as_str(), "finished" | "failed" | "killed")
+    }
+
+    pub fn from_record(r: &JobRecord) -> JobStatus {
+        JobStatus {
+            id: r.id,
+            name: r.spec.name.clone(),
+            state: r.state.as_str().to_string(),
+            command: r.spec.command.clone(),
+            submitted_at: r.submitted_at,
+            runtime_secs: r.runtime_secs,
+            cost: r.cost,
+            output_version: r.output_version,
+            error: r.error.clone(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut b = Json::obj()
+            .field("job", self.id.to_string())
+            .field("name", self.name.as_str())
+            .field("state", self.state.as_str())
+            .field("command", self.command.as_str())
+            .field("submitted_at", self.submitted_at);
+        if let Some(t) = self.runtime_secs {
+            b = b.field("runtime_secs", t);
+        }
+        if let Some(c) = self.cost {
+            b = b.field("cost", c);
+        }
+        if let Some(v) = self.output_version {
+            b = b.field("output_version", v);
+        }
+        if let Some(e) = &self.error {
+            b = b.field("error", e.as_str());
+        }
+        b.build()
+    }
+
+    pub fn from_json(v: &Json) -> Result<JobStatus> {
+        let obj = as_object(v)?;
+        Ok(JobStatus {
+            id: str_field(obj, "job")?.parse()?,
+            name: str_field(obj, "name")?,
+            state: str_field(obj, "state")?,
+            command: str_field(obj, "command")?,
+            submitted_at: f64_field(obj, "submitted_at")?,
+            runtime_secs: opt_f64_field(obj, "runtime_secs")?,
+            cost: opt_f64_field(obj, "cost")?,
+            output_version: opt_u32_field(obj, "output_version")?,
+            error: opt_str_field(obj, "error")?,
+        })
+    }
+}
+
+/// One slice of a job log (`GET /v1/jobs/{id}/logs?offset=`).
+#[derive(Debug, Clone)]
+pub struct LogChunk {
+    pub lines: Vec<String>,
+    /// Pass back as `?offset=` to read only what is new.
+    pub next_offset: usize,
+}
+
+impl LogChunk {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field(
+                "lines",
+                Json::Arr(self.lines.iter().map(|l| Json::from(l.as_str())).collect()),
+            )
+            .field("next_offset", self.next_offset)
+            .build()
+    }
+
+    pub fn from_json(v: &Json) -> Result<LogChunk> {
+        let obj = as_object(v)?;
+        let lines = arr_field(obj, "lines")?
+            .iter()
+            .map(|l| {
+                l.as_str()
+                    .map(String::from)
+                    .ok_or_else(|| AcaiError::invalid("log lines must be strings"))
+            })
+            .collect::<Result<_>>()?;
+        Ok(LogChunk {
+            lines,
+            next_offset: u64_field(obj, "next_offset")? as usize,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// metadata kinds + query clauses
+// ---------------------------------------------------------------------
+
+/// Strict artifact-kind parsing: the only accepted spellings are the
+/// plural collection names.  Anything else is a 400 — never a silent
+/// fallback to jobs.
+pub fn kind_from_str(s: &str) -> Result<ArtifactKind> {
+    match s {
+        "jobs" => Ok(ArtifactKind::Job),
+        "files" => Ok(ArtifactKind::File),
+        "filesets" => Ok(ArtifactKind::FileSet),
+        other => Err(AcaiError::invalid(format!(
+            "unknown artifact kind {other:?} (expected jobs|files|filesets)"
+        ))),
+    }
+}
+
+pub fn kind_to_str(kind: ArtifactKind) -> &'static str {
+    match kind {
+        ArtifactKind::Job => "jobs",
+        ArtifactKind::File => "files",
+        ArtifactKind::FileSet => "filesets",
+    }
+}
+
+/// Shared tag validation — the single source of truth for both the
+/// in-process client and the wire route: tags must be a non-empty set
+/// of scalar (indexable) values.
+pub fn validate_tags(fields: &[(String, Json)]) -> Result<()> {
+    if fields.is_empty() {
+        return Err(AcaiError::invalid("tags need at least one field"));
+    }
+    for (key, value) in fields {
+        if matches!(value, Json::Arr(_) | Json::Obj(_)) {
+            return Err(AcaiError::invalid(format!(
+                "tag {key:?} must be a scalar (indexable) value"
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn index_key_to_json(k: &IndexKey) -> Json {
+    match k {
+        IndexKey::Null => Json::Null,
+        IndexKey::Bool(b) => Json::Bool(*b),
+        IndexKey::Num(n) => Json::Num(*n),
+        IndexKey::Str(s) => Json::Str(s.clone()),
+    }
+}
+
+fn index_key_from_json(v: &Json) -> Result<Option<IndexKey>> {
+    if v.is_null() {
+        return Ok(None);
+    }
+    IndexKey::of(v)
+        .map(Some)
+        .ok_or_else(|| AcaiError::invalid("range bounds must be scalars"))
+}
+
+/// Query-clause wire codec (`POST /v1/metadata/{kind}/query`).
+pub fn clause_to_json(c: &Clause) -> Json {
+    match c {
+        Clause::Eq(key, v) => Json::obj()
+            .field("op", "eq")
+            .field("key", key.as_str())
+            .field("value", v.clone())
+            .build(),
+        Clause::Range { key, lo, hi } => Json::obj()
+            .field("op", "range")
+            .field("key", key.as_str())
+            .field("lo", lo.as_ref().map(index_key_to_json).unwrap_or(Json::Null))
+            .field("hi", hi.as_ref().map(index_key_to_json).unwrap_or(Json::Null))
+            .build(),
+        Clause::Max(key) => Json::obj().field("op", "max").field("key", key.as_str()).build(),
+        Clause::Min(key) => Json::obj().field("op", "min").field("key", key.as_str()).build(),
+    }
+}
+
+pub fn clause_from_json(v: &Json) -> Result<Clause> {
+    let obj = as_object(v)?;
+    check_fields(obj, &["op", "key", "value", "lo", "hi"])?;
+    let op = str_field(obj, "op")?;
+    let key = str_field(obj, "key")?;
+    match op.as_str() {
+        "eq" => {
+            let value = obj
+                .get("value")
+                .ok_or_else(|| AcaiError::invalid("eq clause needs \"value\""))?;
+            Ok(Clause::Eq(key, value.clone()))
+        }
+        "range" => {
+            let lo = index_key_from_json(obj.get("lo").unwrap_or(&Json::Null))?;
+            let hi = index_key_from_json(obj.get("hi").unwrap_or(&Json::Null))?;
+            if lo.is_none() && hi.is_none() {
+                return Err(AcaiError::invalid("range clause needs lo and/or hi"));
+            }
+            Ok(Clause::Range { key, lo, hi })
+        }
+        "max" => Ok(Clause::Max(key)),
+        "min" => Ok(Clause::Min(key)),
+        other => Err(AcaiError::invalid(format!("unknown clause op {other:?}"))),
+    }
+}
+
+// ---------------------------------------------------------------------
+// provenance + provisioning
+// ---------------------------------------------------------------------
+
+/// Trace direction for `GET /v1/filesets/{name}/trace`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceDir {
+    Forward,
+    Backward,
+}
+
+impl TraceDir {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TraceDir::Forward => "forward",
+            TraceDir::Backward => "backward",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<TraceDir> {
+        match s {
+            "forward" => Ok(TraceDir::Forward),
+            "backward" => Ok(TraceDir::Backward),
+            other => Err(AcaiError::invalid(format!(
+                "unknown trace direction {other:?} (expected forward|backward)"
+            ))),
+        }
+    }
+}
+
+pub fn edge_to_json(e: &crate::graphstore::Edge) -> Json {
+    Json::obj()
+        .field("from", e.from.as_str())
+        .field("to", e.to.as_str())
+        .field("action", e.action.as_str())
+        .field("kind", e.kind.as_str())
+        .build()
+}
+
+pub fn edge_from_json(v: &Json) -> Result<crate::graphstore::Edge> {
+    let obj = as_object(v)?;
+    Ok(crate::graphstore::Edge {
+        from: str_field(obj, "from")?,
+        to: str_field(obj, "to")?,
+        action: str_field(obj, "action")?,
+        kind: str_field(obj, "kind")?,
+    })
+}
+
+/// The auto-provisioner's answer, wire-sized (the full scored grid of
+/// [`Decision`] stays server-side; Fig 16 consumers use the SDK
+/// in-process).
+#[derive(Debug, Clone)]
+pub struct ProvisionChoice {
+    pub config: ResourceConfig,
+    pub predicted_runtime: f64,
+    pub predicted_cost: f64,
+}
+
+impl ProvisionChoice {
+    pub fn from_decision(d: &Decision) -> ProvisionChoice {
+        ProvisionChoice {
+            config: d.config,
+            predicted_runtime: d.predicted_runtime,
+            predicted_cost: d.predicted_cost,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("vcpus", self.config.vcpus)
+            .field("mem_mb", self.config.mem_mb)
+            .field("predicted_runtime", self.predicted_runtime)
+            .field("predicted_cost", self.predicted_cost)
+            .build()
+    }
+
+    pub fn from_json(v: &Json) -> Result<ProvisionChoice> {
+        let obj = as_object(v)?;
+        Ok(ProvisionChoice {
+            config: ResourceConfig::new(f64_field(obj, "vcpus")?, u32_field(obj, "mem_mb")?),
+            predicted_runtime: f64_field(obj, "predicted_runtime")?,
+            predicted_cost: f64_field(obj, "predicted_cost")?,
+        })
+    }
+}
+
+pub fn objective_to_json(o: &Objective) -> Json {
+    match o {
+        Objective::MinRuntime { max_cost } => Json::obj()
+            .field("kind", "min_runtime")
+            .field("max_cost", *max_cost)
+            .build(),
+        Objective::MinCost { max_runtime } => Json::obj()
+            .field("kind", "min_cost")
+            .field("max_runtime", *max_runtime)
+            .build(),
+    }
+}
+
+pub fn objective_from_json(v: &Json) -> Result<Objective> {
+    let obj = as_object(v)?;
+    check_fields(obj, &["kind", "max_cost", "max_runtime"])?;
+    match str_field(obj, "kind")?.as_str() {
+        "min_runtime" => Ok(Objective::MinRuntime {
+            max_cost: f64_field(obj, "max_cost")?,
+        }),
+        "min_cost" => Ok(Objective::MinCost {
+            max_runtime: f64_field(obj, "max_runtime")?,
+        }),
+        other => Err(AcaiError::invalid(format!(
+            "unknown objective kind {other:?} (expected min_runtime|min_cost)"
+        ))),
+    }
+}
+
+/// Zero-padded numeric cursor so lexicographic cursor comparison
+/// matches numeric order.
+pub fn num_cursor(n: u64) -> String {
+    format!("{n:020}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base64_round_trips() {
+        for data in [
+            &b""[..],
+            b"f",
+            b"fo",
+            b"foo",
+            b"foob",
+            b"fooba",
+            b"foobar",
+            &[0u8, 255, 17, 3, 99],
+        ] {
+            let enc = b64_encode(data);
+            assert_eq!(b64_decode(&enc).unwrap(), data, "{enc}");
+        }
+        assert_eq!(b64_encode(b"foobar"), "Zm9vYmFy");
+        assert_eq!(b64_encode(b"fo"), "Zm8=");
+    }
+
+    #[test]
+    fn base64_rejects_garbage() {
+        assert!(b64_decode("Zm9vYmF").is_err()); // bad length
+        assert!(b64_decode("Zm9v!mFy").is_err()); // bad char
+        assert!(b64_decode("Zm=v").is_err()); // pad in the middle of a chunk
+        assert!(b64_decode("Zm8=Zm8=").is_err()); // pad before the final chunk
+        assert!(b64_decode("====").is_err());
+    }
+
+    #[test]
+    fn unknown_fields_are_rejected() {
+        let v = crate::json::parse(
+            r#"{"name":"j","command":"python t.py --epoch 1","output_fileset":"o","vcpus":1,"mem_mb":512,"vcpu":2}"#,
+        )
+        .unwrap();
+        let err = job_request_from_json(&v).unwrap_err();
+        assert_eq!(err.status(), 400);
+        assert!(err.to_string().contains("vcpu"), "{err}");
+    }
+
+    #[test]
+    fn missing_required_fields_are_rejected_not_defaulted() {
+        let v = crate::json::parse(r#"{"name":"j"}"#).unwrap();
+        assert_eq!(job_request_from_json(&v).unwrap_err().status(), 400);
+    }
+
+    #[test]
+    fn wrong_typed_optional_fields_are_errors_not_none() {
+        // a strict codec must not mask wire corruption as "absent"
+        let v = crate::json::parse(
+            r#"{"job":"job-1","name":"j","state":"finished","command":"c","submitted_at":0,"runtime_secs":"3.2"}"#,
+        )
+        .unwrap();
+        assert_eq!(JobStatus::from_json(&v).unwrap_err().status(), 400);
+        let v = crate::json::parse(
+            r#"{"job":"job-1","name":"j","state":"finished","command":"c","submitted_at":0,"output_version":4294967296}"#,
+        )
+        .unwrap();
+        assert_eq!(JobStatus::from_json(&v).unwrap_err().status(), 400);
+    }
+
+    #[test]
+    fn out_of_range_integers_are_rejected_not_truncated() {
+        // 2^32 + 512 would silently become 512 under an `as u32` cast
+        let v = crate::json::parse(
+            r#"{"name":"j","command":"python t.py --epoch 1","output_fileset":"o","vcpus":1,"mem_mb":4294967808}"#,
+        )
+        .unwrap();
+        let err = job_request_from_json(&v).unwrap_err();
+        assert_eq!(err.status(), 400);
+        assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn job_request_round_trips() {
+        let v = crate::json::parse(
+            r#"{"name":"j","command":"python t.py --epoch 1","input_fileset":"in:2","output_fileset":"o","vcpus":1.5,"mem_mb":512}"#,
+        )
+        .unwrap();
+        let r = job_request_from_json(&v).unwrap();
+        let r2 = job_request_from_json(&job_request_to_json(&r)).unwrap();
+        assert_eq!(r2.name, "j");
+        assert_eq!(r2.input_fileset, "in:2");
+        assert_eq!(r2.resources.vcpus, 1.5);
+        assert_eq!(r2.resources.mem_mb, 512);
+    }
+
+    #[test]
+    fn kind_parsing_is_strict() {
+        assert_eq!(kind_from_str("jobs").unwrap(), ArtifactKind::Job);
+        assert_eq!(kind_from_str("files").unwrap(), ArtifactKind::File);
+        assert_eq!(kind_from_str("filesets").unwrap(), ArtifactKind::FileSet);
+        // the seed bug: any unknown kind silently mapped to Job
+        assert_eq!(kind_from_str("job").unwrap_err().status(), 400);
+        assert_eq!(kind_from_str("experiments").unwrap_err().status(), 400);
+        assert_eq!(kind_from_str("").unwrap_err().status(), 400);
+    }
+
+    #[test]
+    fn clauses_round_trip() {
+        let clauses = [
+            Clause::eq("model", "BERT"),
+            Clause::gte("precision", 0.5),
+            Clause::lte("cost", 2.0),
+            Clause::Min("training_loss".into()),
+            Clause::Max("precision".into()),
+        ];
+        for c in &clauses {
+            let v = clause_to_json(c);
+            let back = clause_from_json(&v).unwrap();
+            assert_eq!(clause_to_json(&back).encode(), v.encode());
+        }
+        assert!(clause_from_json(&crate::json::parse(r#"{"op":"like","key":"x"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn pagination_cuts_and_chains() {
+        let items: Vec<u64> = (1..=10).collect();
+        let page1 = cut_page(items.clone(), &PageReq { limit: 4, after: None }, |n| num_cursor(*n));
+        assert_eq!(page1.items, vec![1, 2, 3, 4]);
+        let page2 = cut_page(
+            items.clone(),
+            &PageReq { limit: 4, after: page1.next.clone() },
+            |n| num_cursor(*n),
+        );
+        assert_eq!(page2.items, vec![5, 6, 7, 8]);
+        let page3 = cut_page(
+            items,
+            &PageReq { limit: 4, after: page2.next.clone() },
+            |n| num_cursor(*n),
+        );
+        assert_eq!(page3.items, vec![9, 10]);
+        assert!(page3.next.is_none());
+    }
+
+    #[test]
+    fn objective_round_trips() {
+        for o in [
+            Objective::MinCost { max_runtime: 120.0 },
+            Objective::MinRuntime { max_cost: 3.5 },
+        ] {
+            let back = objective_from_json(&objective_to_json(&o)).unwrap();
+            assert_eq!(back, o);
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Per-route API metrics (request counters + latency), collected by
+//! the metrics middleware and served at `GET /v1/metrics` — the
+//! observability hook the ROADMAP's "millions of users" scaling work
+//! measures against.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::json::Json;
+
+/// Aggregated stats for one route template.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RouteStats {
+    pub count: u64,
+    /// Responses with status >= 400.
+    pub errors: u64,
+    pub total_micros: u64,
+}
+
+/// Thread-safe metrics registry (one per [`super::make_handler`]).
+#[derive(Default)]
+pub struct ApiMetrics {
+    routes: Mutex<BTreeMap<String, RouteStats>>,
+}
+
+impl ApiMetrics {
+    pub fn new() -> ApiMetrics {
+        ApiMetrics::default()
+    }
+
+    /// Record one request outcome under a route label
+    /// (e.g. `"GET /v1/jobs/{id}"`).
+    pub fn record(&self, route: &str, status: u16, micros: u64) {
+        let mut routes = self.routes.lock().unwrap();
+        let stats = routes.entry(route.to_string()).or_default();
+        stats.count += 1;
+        if status >= 400 {
+            stats.errors += 1;
+        }
+        stats.total_micros += micros;
+    }
+
+    /// Current totals, route-sorted.
+    pub fn snapshot(&self) -> Vec<(String, RouteStats)> {
+        self.routes
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
+    }
+
+    /// `{"routes": [{"route", "count", "errors", "avg_micros"}, ...]}`.
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .snapshot()
+            .into_iter()
+            .map(|(route, s)| {
+                Json::obj()
+                    .field("route", route)
+                    .field("count", s.count)
+                    .field("errors", s.errors)
+                    .field(
+                        "avg_micros",
+                        if s.count == 0 { 0 } else { s.total_micros / s.count },
+                    )
+                    .build()
+            })
+            .collect();
+        Json::obj().field("routes", Json::Arr(rows)).build()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_counts_errors_and_latency() {
+        let m = ApiMetrics::new();
+        m.record("GET /v1/jobs", 200, 100);
+        m.record("GET /v1/jobs", 200, 300);
+        m.record("GET /v1/jobs", 404, 50);
+        m.record("POST /v1/jobs", 202, 80);
+        let snap = m.snapshot();
+        assert_eq!(snap.len(), 2);
+        let (route, stats) = &snap[0];
+        assert_eq!(route, "GET /v1/jobs");
+        assert_eq!(stats.count, 3);
+        assert_eq!(stats.errors, 1);
+        assert_eq!(stats.total_micros, 450);
+        let v = m.to_json();
+        let rows = v.get("routes").and_then(Json::as_array).unwrap();
+        assert_eq!(rows[0].get("avg_micros").and_then(Json::as_u64), Some(150));
+    }
+}

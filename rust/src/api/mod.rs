@@ -1,0 +1,175 @@
+//! REST edge of the platform — the versioned, resource-oriented `/v1`
+//! API (paper §4.1, Figure 7).
+//!
+//! The tier is three layers:
+//!
+//! - [`router`] — path templates with typed parameters
+//!   (`GET /v1/jobs/{id}`), percent-decoding, a 405-vs-404 distinction,
+//!   and an ordered middleware chain (request-id → per-route metrics →
+//!   token auth) around every matched handler;
+//! - [`dto`] — typed payload codecs with strict edge validation
+//!   (unknown fields and unknown kinds are 400, never silent defaults)
+//!   and the uniform error envelope
+//!   `{"error": {"code", "message", "request_id"}}`;
+//! - [`routes`] — the `/v1` route table, each endpoint a thin adapter
+//!   onto the SDK ([`crate::sdk::AcaiApi`]).
+//!
+//! Job submission is **asynchronous**: `POST /v1/jobs` registers the
+//! job, pokes the background [`crate::engine::EngineDriver`], and
+//! returns `202 Accepted` immediately — no request ever blocks on the
+//! engine draining (the seed's edge called `wait_all()` in-handler and
+//! could not serve two users at once).
+
+pub mod dto;
+pub mod metrics;
+pub mod router;
+pub mod routes;
+
+pub use dto::{FileEntry, JobStatus, LogChunk, Page, PageReq, ProvisionChoice, TraceDir};
+pub use metrics::{ApiMetrics, RouteStats};
+pub use router::{ApiCtx, Middleware, PathParams, Query, Router};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::error::{AcaiError, Result};
+use crate::httpd::{Handler, Request, Response};
+use crate::platform::Acai;
+use crate::sdk::Client;
+
+use router::{run_chain, Match, Next, RouteHandler};
+
+/// Stamps `x-request-id` on every response (the id itself is minted by
+/// the edge before dispatch so even 404s carry one).
+struct RequestIdStamp;
+
+impl Middleware for RequestIdStamp {
+    fn call(&self, req: &Request, ctx: &mut ApiCtx, next: Next<'_>) -> Result<Response> {
+        let mut resp = next(req, ctx)?;
+        resp.headers
+            .push(("x-request-id".into(), ctx.request_id.clone()));
+        Ok(resp)
+    }
+}
+
+/// Per-route request counter + latency, including error outcomes.
+struct MetricsLayer {
+    metrics: Arc<ApiMetrics>,
+}
+
+impl Middleware for MetricsLayer {
+    fn call(&self, req: &Request, ctx: &mut ApiCtx, next: Next<'_>) -> Result<Response> {
+        let start = Instant::now();
+        let out = next(req, ctx);
+        let status = match &out {
+            Ok(r) => r.status,
+            Err(e) => e.status(),
+        };
+        let route = ctx.route.clone();
+        self.metrics
+            .record(&route, status, start.elapsed().as_micros() as u64);
+        out
+    }
+}
+
+/// Token authentication (paper Figure 7: authenticate, then redirect).
+/// Public routes (bootstrap, health) pass through.
+struct AuthLayer;
+
+impl Middleware for AuthLayer {
+    fn call(&self, req: &Request, ctx: &mut ApiCtx, next: Next<'_>) -> Result<Response> {
+        if !ctx.public {
+            let token = req
+                .header("x-acai-token")
+                .ok_or_else(|| AcaiError::Unauthorized("missing x-acai-token".into()))?;
+            let client = Client::connect(ctx.acai.clone(), token)?;
+            ctx.set_client(client, token.to_string());
+        }
+        next(req, ctx)
+    }
+}
+
+/// Metrics label for requests that never match a route.
+const UNMATCHED: &str = "UNMATCHED";
+
+/// Build the `/v1` REST handler (used by `acai serve` and the HTTP
+/// integration tests).
+pub fn make_handler(acai: Arc<Acai>) -> Handler {
+    let metrics = Arc::new(ApiMetrics::new());
+    let router = Arc::new(routes::v1_router(metrics.clone()));
+    let chain: Arc<[Arc<dyn Middleware>]> = Arc::from(vec![
+        Arc::new(RequestIdStamp) as Arc<dyn Middleware>,
+        Arc::new(MetricsLayer {
+            metrics: metrics.clone(),
+        }) as Arc<dyn Middleware>,
+        Arc::new(AuthLayer) as Arc<dyn Middleware>,
+    ]);
+    let next_id = Arc::new(AtomicU64::new(1));
+    Arc::new(move |req: &Request| {
+        let request_id = format!("req-{}", next_id.fetch_add(1, Ordering::Relaxed));
+        serve_one(&acai, &router, &chain, &metrics, req, &request_id)
+    })
+}
+
+fn serve_one(
+    acai: &Arc<Acai>,
+    router: &Router,
+    chain: &[Arc<dyn Middleware>],
+    metrics: &ApiMetrics,
+    req: &Request,
+    request_id: &str,
+) -> Response {
+    let started = Instant::now();
+    let unmatched = |e: &AcaiError| {
+        metrics.record(UNMATCHED, e.status(), started.elapsed().as_micros() as u64);
+        with_request_id(
+            Response::error_with_request_id(e, Some(request_id)),
+            request_id,
+        )
+    };
+    let query = match Query::parse(&req.query) {
+        Ok(q) => q,
+        Err(e) => return unmatched(&e),
+    };
+    match router.dispatch(&req.method, &req.path) {
+        Ok(Match::Route(route, params)) => {
+            let mut ctx = ApiCtx::new(acai.clone(), request_id.to_string(), route, params, query);
+            let handler: &RouteHandler = &route.handler;
+            // MetricsLayer records success and error outcomes per-route
+            match run_chain(chain, req, &mut ctx, handler) {
+                Ok(resp) => with_request_id(resp, request_id),
+                Err(e) => with_request_id(
+                    Response::error_with_request_id(&e, Some(request_id)),
+                    request_id,
+                ),
+            }
+        }
+        Ok(Match::MethodNotAllowed(allow)) => {
+            let e = AcaiError::MethodNotAllowed(format!(
+                "{} is not allowed on {}",
+                req.method, req.path
+            ));
+            let mut resp = unmatched(&e);
+            resp.headers.push(("allow".into(), allow.join(", ")));
+            resp
+        }
+        Ok(Match::NotFound) => unmatched(&AcaiError::not_found(format!(
+            "{} {}",
+            req.method, req.path
+        ))),
+        Err(e) => unmatched(&e),
+    }
+}
+
+/// Idempotent stamp: every response leaving `serve_one` carries exactly
+/// one `x-request-id` (the RequestIdStamp middleware already stamped
+/// routed successes; this is the unconditional backstop for every
+/// other exit path).
+fn with_request_id(mut resp: Response, request_id: &str) -> Response {
+    if !resp.headers.iter().any(|(k, _)| k == "x-request-id") {
+        resp.headers
+            .push(("x-request-id".into(), request_id.to_string()));
+    }
+    resp
+}

@@ -1,0 +1,461 @@
+//! Path-template router + middleware chain for the `/v1` edge.
+//!
+//! Routes are declared as `(method, template, handler)` — e.g.
+//! `("GET", "/v1/jobs/{id}", ...)` — instead of living in one flat
+//! `match`.  Dispatch percent-decodes path segments and the query
+//! string, binds typed path parameters, and distinguishes *unknown
+//! path* (404) from *known path, wrong method* (405 + `allow` header).
+//! Cross-cutting concerns (request ids, per-route metrics, token auth)
+//! run as an ordered middleware chain around the matched handler.
+
+use std::sync::Arc;
+
+use crate::error::{AcaiError, Result};
+use crate::httpd::{Request, Response};
+use crate::ids::Version;
+use crate::sdk::Client;
+
+// ---------------------------------------------------------------------
+// percent encoding (RFC 3986)
+// ---------------------------------------------------------------------
+
+/// Encode one path segment or query value: unreserved characters pass
+/// through, everything else (including `/`) becomes `%XX`.
+pub fn percent_encode(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for b in s.bytes() {
+        match b {
+            b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'-' | b'_' | b'.' | b'~' => {
+                out.push(b as char)
+            }
+            _ => out.push_str(&format!("%{b:02X}")),
+        }
+    }
+    out
+}
+
+/// Decode `%XX` escapes; malformed escapes are a 400, never passed
+/// through silently.
+pub fn percent_decode(s: &str) -> Result<String> {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'%' {
+            let hex = bytes
+                .get(i + 1..i + 3)
+                .and_then(|h| std::str::from_utf8(h).ok())
+                .and_then(|h| u8::from_str_radix(h, 16).ok())
+                .ok_or_else(|| AcaiError::invalid(format!("bad percent escape in {s:?}")))?;
+            out.push(hex);
+            i += 3;
+        } else {
+            out.push(bytes[i]);
+            i += 1;
+        }
+    }
+    String::from_utf8(out).map_err(|_| AcaiError::invalid("percent-decoded bytes are not utf-8"))
+}
+
+// ---------------------------------------------------------------------
+// typed path + query parameters
+// ---------------------------------------------------------------------
+
+/// Bound `{name}` template parameters, percent-decoded.
+#[derive(Debug, Default, Clone)]
+pub struct PathParams(Vec<(String, String)>);
+
+impl PathParams {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.0.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Required raw parameter (template guarantees presence; missing is
+    /// a programming error surfaced as 400, not a panic).
+    pub fn raw(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| AcaiError::invalid(format!("missing path parameter {name:?}")))
+    }
+
+    /// Typed parameter through [`std::str::FromStr`]
+    /// (e.g. `params.id::<JobId>("id")`).
+    pub fn id<T>(&self, name: &str) -> Result<T>
+    where
+        T: std::str::FromStr<Err = AcaiError>,
+    {
+        self.raw(name)?.parse()
+    }
+
+    /// Version-number parameter.
+    pub fn version(&self, name: &str) -> Result<Version> {
+        let raw = self.raw(name)?;
+        raw.parse::<Version>()
+            .map_err(|_| AcaiError::invalid(format!("bad version {raw:?}")))
+    }
+}
+
+/// Parsed, percent-decoded query parameters.
+#[derive(Debug, Default, Clone)]
+pub struct Query(Vec<(String, String)>);
+
+impl Query {
+    /// Parse `a=1&b=x%2Fy`; keys without `=` get an empty value.
+    pub fn parse(raw: &str) -> Result<Query> {
+        let mut pairs = Vec::new();
+        for pair in raw.split('&') {
+            if pair.is_empty() {
+                continue;
+            }
+            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+            pairs.push((percent_decode(k)?, percent_decode(v)?));
+        }
+        Ok(Query(pairs))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.0.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Optional non-negative integer (`?offset=`); present-but-garbage
+    /// is a 400.
+    pub fn u64(&self, name: &str) -> Result<Option<u64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(raw) => raw
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| AcaiError::invalid(format!("bad {name} {raw:?}"))),
+        }
+    }
+
+    /// Optional version number; out-of-range values are a 400, never
+    /// truncated.
+    pub fn version(&self, name: &str) -> Result<Option<Version>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(raw) => raw
+                .parse::<Version>()
+                .map(Some)
+                .map_err(|_| AcaiError::invalid(format!("bad {name} {raw:?}"))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// routes
+// ---------------------------------------------------------------------
+
+/// Per-request context threaded through the middleware chain into the
+/// handler.
+pub struct ApiCtx {
+    pub acai: Arc<crate::platform::Acai>,
+    /// Unique id stamped on the response (`x-request-id`) and into
+    /// every error envelope.
+    pub request_id: String,
+    /// The matched route's label (metrics key), e.g.
+    /// `"GET /v1/jobs/{id}"`.
+    pub route: String,
+    /// Whether the matched route skips token auth.
+    pub public: bool,
+    pub params: PathParams,
+    pub query: Query,
+    /// Set by the auth middleware on non-public routes.
+    client: Option<Client>,
+    /// The raw bearer token (some handlers re-delegate, e.g. user
+    /// creation checks admin rights against it).
+    pub token: Option<String>,
+}
+
+impl ApiCtx {
+    pub fn new(
+        acai: Arc<crate::platform::Acai>,
+        request_id: String,
+        route: &Route,
+        params: PathParams,
+        query: Query,
+    ) -> ApiCtx {
+        ApiCtx {
+            acai,
+            request_id,
+            route: format!("{} {}", route.method, route.template),
+            public: route.public,
+            params,
+            query,
+            client: None,
+            token: None,
+        }
+    }
+
+    pub fn set_client(&mut self, client: Client, token: String) {
+        self.client = Some(client);
+        self.token = Some(token);
+    }
+
+    /// The authenticated SDK client (guaranteed on non-public routes).
+    pub fn client(&self) -> Result<&Client> {
+        self.client
+            .as_ref()
+            .ok_or_else(|| AcaiError::Unauthorized("route requires authentication".into()))
+    }
+}
+
+/// A route endpoint.
+pub type RouteHandler = Arc<dyn Fn(&Request, &mut ApiCtx) -> Result<Response> + Send + Sync>;
+
+enum Seg {
+    Lit(&'static str),
+    Param(&'static str),
+}
+
+/// One declared route.
+pub struct Route {
+    pub method: &'static str,
+    pub template: &'static str,
+    /// Public routes skip token auth (project bootstrap, health).
+    pub public: bool,
+    segments: Vec<Seg>,
+    pub handler: RouteHandler,
+}
+
+/// Dispatch outcome.
+pub enum Match<'r> {
+    /// Matched: route + bound params.
+    Route(&'r Route, PathParams),
+    /// Path exists under a different method set.
+    MethodNotAllowed(Vec<&'static str>),
+    /// No template matches the path.
+    NotFound,
+}
+
+/// The routing table.
+#[derive(Default)]
+pub struct Router {
+    routes: Vec<Route>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    /// Declare an authenticated route.
+    pub fn route(
+        &mut self,
+        method: &'static str,
+        template: &'static str,
+        handler: RouteHandler,
+    ) -> &mut Self {
+        self.push(method, template, false, handler)
+    }
+
+    /// Declare a public (unauthenticated) route.
+    pub fn public(
+        &mut self,
+        method: &'static str,
+        template: &'static str,
+        handler: RouteHandler,
+    ) -> &mut Self {
+        self.push(method, template, true, handler)
+    }
+
+    fn push(
+        &mut self,
+        method: &'static str,
+        template: &'static str,
+        public: bool,
+        handler: RouteHandler,
+    ) -> &mut Self {
+        let segments = template
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                if let Some(name) = s.strip_prefix('{').and_then(|s| s.strip_suffix('}')) {
+                    Seg::Param(name)
+                } else {
+                    Seg::Lit(s)
+                }
+            })
+            .collect();
+        self.routes.push(Route {
+            method,
+            template,
+            public,
+            segments,
+            handler,
+        });
+        self
+    }
+
+    /// Match a request path.  Percent-decodes each segment before
+    /// binding parameters (so `/v1/files/%2Fdata%2Fa.bin` binds
+    /// `path = "/data/a.bin"`).
+    pub fn dispatch(&self, method: &str, path: &str) -> Result<Match<'_>> {
+        let raw_segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+        let mut allowed: Vec<&'static str> = Vec::new();
+        let mut best: Option<(&Route, PathParams)> = None;
+        for route in &self.routes {
+            let Some(params) = bind(&route.segments, &raw_segs)? else {
+                continue;
+            };
+            if route.method == method {
+                if best.is_none() {
+                    best = Some((route, params));
+                }
+            } else if !allowed.contains(&route.method) {
+                allowed.push(route.method);
+            }
+        }
+        if let Some((route, params)) = best {
+            return Ok(Match::Route(route, params));
+        }
+        if !allowed.is_empty() {
+            allowed.sort_unstable();
+            return Ok(Match::MethodNotAllowed(allowed));
+        }
+        Ok(Match::NotFound)
+    }
+}
+
+/// Try to bind a template against raw path segments.
+fn bind(segments: &[Seg], raw: &[&str]) -> Result<Option<PathParams>> {
+    if segments.len() != raw.len() {
+        return Ok(None);
+    }
+    let mut params = Vec::new();
+    for (seg, got) in segments.iter().zip(raw) {
+        match seg {
+            Seg::Lit(want) => {
+                if want != got {
+                    return Ok(None);
+                }
+            }
+            Seg::Param(name) => params.push((name.to_string(), percent_decode(got)?)),
+        }
+    }
+    Ok(Some(PathParams(params)))
+}
+
+// ---------------------------------------------------------------------
+// middleware chain
+// ---------------------------------------------------------------------
+
+/// Continuation passed to middleware.
+pub type Next<'a> = &'a mut dyn FnMut(&Request, &mut ApiCtx) -> Result<Response>;
+
+/// A middleware wraps the rest of the chain (auth, request-id,
+/// metrics, ...).
+pub trait Middleware: Send + Sync {
+    fn call(&self, req: &Request, ctx: &mut ApiCtx, next: Next<'_>) -> Result<Response>;
+}
+
+/// Run `middlewares` innermost-last around `endpoint`.
+pub fn run_chain(
+    middlewares: &[Arc<dyn Middleware>],
+    req: &Request,
+    ctx: &mut ApiCtx,
+    endpoint: &RouteHandler,
+) -> Result<Response> {
+    match middlewares.split_first() {
+        None => (**endpoint)(req, ctx),
+        Some((mw, rest)) => {
+            mw.call(req, ctx, &mut |rq, cx| run_chain(rest, rq, cx, endpoint))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::Json;
+
+    fn ok_handler(tag: &'static str) -> RouteHandler {
+        Arc::new(move |_req, ctx| {
+            Ok(Response::json(
+                &Json::obj()
+                    .field("tag", tag)
+                    .field("id", ctx.params.get("id").unwrap_or(""))
+                    .build(),
+            ))
+        })
+    }
+
+    fn router() -> Router {
+        let mut r = Router::new();
+        r.route("GET", "/v1/jobs", ok_handler("list"));
+        r.route("POST", "/v1/jobs", ok_handler("submit"));
+        r.route("GET", "/v1/jobs/{id}", ok_handler("get"));
+        r.route("GET", "/v1/files/{path}/versions/{v}", ok_handler("filev"));
+        r
+    }
+
+    #[test]
+    fn templates_bind_typed_params() {
+        let r = router();
+        match r.dispatch("GET", "/v1/jobs/job-7").unwrap() {
+            Match::Route(route, params) => {
+                assert_eq!(route.template, "/v1/jobs/{id}");
+                assert_eq!(params.get("id"), Some("job-7"));
+                let id: crate::ids::JobId = params.id("id").unwrap();
+                assert_eq!(id.raw(), 7);
+            }
+            _ => panic!("expected a match"),
+        }
+    }
+
+    #[test]
+    fn percent_decoding_binds_slashes_in_segments() {
+        let r = router();
+        match r.dispatch("GET", "/v1/files/%2Fdata%2Fa.bin/versions/3").unwrap() {
+            Match::Route(route, params) => {
+                assert_eq!(route.template, "/v1/files/{path}/versions/{v}");
+                assert_eq!(params.get("path"), Some("/data/a.bin"));
+                assert_eq!(params.version("v").unwrap(), 3);
+            }
+            _ => panic!("expected a match"),
+        }
+        // round trip with the encoder
+        assert_eq!(percent_encode("/data/a.bin"), "%2Fdata%2Fa.bin");
+        assert_eq!(percent_decode("%2Fdata%2Fa.bin").unwrap(), "/data/a.bin");
+    }
+
+    #[test]
+    fn method_mismatch_is_405_with_allow_set() {
+        let r = router();
+        match r.dispatch("DELETE", "/v1/jobs").unwrap() {
+            Match::MethodNotAllowed(allow) => assert_eq!(allow, vec!["GET", "POST"]),
+            _ => panic!("expected 405"),
+        }
+    }
+
+    #[test]
+    fn unknown_path_is_not_found() {
+        let r = router();
+        assert!(matches!(r.dispatch("GET", "/v1/nope").unwrap(), Match::NotFound));
+        assert!(matches!(
+            r.dispatch("GET", "/v1/jobs/job-1/extra").unwrap(),
+            Match::NotFound
+        ));
+    }
+
+    #[test]
+    fn bad_percent_escape_is_invalid() {
+        let r = router();
+        assert!(r.dispatch("GET", "/v1/jobs/%zz").is_err());
+        assert!(percent_decode("%2").is_err());
+        assert!(percent_decode("%zz").is_err());
+    }
+
+    #[test]
+    fn query_parses_and_decodes() {
+        let q = Query::parse("limit=5&after=job%2D3&flag").unwrap();
+        assert_eq!(q.get("limit"), Some("5"));
+        assert_eq!(q.get("after"), Some("job-3"));
+        assert_eq!(q.get("flag"), Some(""));
+        assert_eq!(q.u64("limit").unwrap(), Some(5));
+        assert!(q.u64("after").is_err());
+        assert_eq!(q.u64("missing").unwrap(), None);
+        // out of u32 range: 400, not truncation to version 1
+        let q = Query::parse("version=4294967297").unwrap();
+        assert!(q.version("version").is_err());
+    }
+}

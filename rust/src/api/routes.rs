@@ -1,0 +1,413 @@
+//! The `/v1` route table: every endpoint of the resource-oriented REST
+//! surface, each a thin adapter between the DTO layer and the SDK
+//! (paper Figure 7: the credential server redirects an authenticated
+//! request to the matching internal service).
+//!
+//! | Resource    | Endpoints |
+//! |-------------|-----------|
+//! | projects    | `POST /v1/projects` (public bootstrap) |
+//! | users       | `POST /v1/users` |
+//! | files       | `GET/POST /v1/files`, `GET /v1/files/{path}`, `GET /v1/files/{path}/versions` |
+//! | file sets   | `GET/POST /v1/filesets`, `GET /v1/filesets/{name}/trace`, `.../lineage` |
+//! | jobs        | `POST /v1/jobs` (202), `GET /v1/jobs`, `GET /v1/jobs/{id}`, `GET /v1/jobs/{id}/logs`, `POST /v1/jobs/{id}/kill` |
+//! | metadata    | `GET /v1/metadata/{kind}/{id}`, `POST /v1/metadata/{kind}/query`, `POST /v1/metadata/{kind}/{id}/tags` |
+//! | provenance  | `GET /v1/provenance` |
+//! | profiles    | `POST /v1/profiles`, `POST /v1/autoprovision` |
+//! | operational | `GET /v1/healthz` (public), `GET /v1/metrics` |
+
+use std::sync::Arc;
+
+use crate::error::{AcaiError, Result};
+use crate::httpd::{Request, Response};
+use crate::ids::JobId;
+use crate::json::Json;
+use crate::sdk::AcaiApi;
+
+use super::dto::{
+    self, FileEntry, JobStatus, PageReq, TraceDir,
+};
+use super::metrics::ApiMetrics;
+use super::router::{ApiCtx, RouteHandler, Router};
+
+fn h(
+    f: impl Fn(&Request, &mut ApiCtx) -> Result<Response> + Send + Sync + 'static,
+) -> RouteHandler {
+    Arc::new(f)
+}
+
+/// Build the `/v1` routing table.
+pub fn v1_router(metrics: Arc<ApiMetrics>) -> Router {
+    let mut r = Router::new();
+
+    // ---- public: bootstrap + health ----
+    r.public("POST", "/v1/projects", h(create_project));
+    r.public("GET", "/v1/healthz", h(|_req, _ctx| {
+        Ok(Response::json(&Json::obj().field("status", "ok").build()))
+    }));
+
+    // ---- users ----
+    r.route("POST", "/v1/users", h(create_user));
+
+    // ---- files ----
+    r.route("GET", "/v1/files", h(list_files));
+    r.route("POST", "/v1/files", h(upload_files));
+    r.route("GET", "/v1/files/{path}", h(download_file));
+    r.route("GET", "/v1/files/{path}/versions", h(list_file_versions));
+
+    // ---- file sets + provenance ----
+    r.route("GET", "/v1/filesets", h(list_file_sets));
+    r.route("POST", "/v1/filesets", h(create_file_set));
+    r.route("GET", "/v1/filesets/{name}/trace", h(trace_file_set));
+    r.route("GET", "/v1/filesets/{name}/lineage", h(lineage_file_set));
+    r.route("GET", "/v1/provenance", h(provenance_graph));
+
+    // ---- jobs (async lifecycle) ----
+    r.route("POST", "/v1/jobs", h(submit_job));
+    r.route("GET", "/v1/jobs", h(list_jobs));
+    r.route("GET", "/v1/jobs/{id}", h(get_job));
+    r.route("GET", "/v1/jobs/{id}/logs", h(get_job_logs));
+    r.route("POST", "/v1/jobs/{id}/kill", h(kill_job));
+
+    // ---- metadata ----
+    r.route("GET", "/v1/metadata/{kind}/{id}", h(get_metadata));
+    r.route("POST", "/v1/metadata/{kind}/query", h(query_metadata));
+    r.route("POST", "/v1/metadata/{kind}/{id}/tags", h(tag_metadata));
+
+    // ---- profiler + auto-provisioner ----
+    r.route("POST", "/v1/profiles", h(create_profile));
+    r.route("POST", "/v1/autoprovision", h(autoprovision));
+
+    // ---- operational ----
+    r.route(
+        "GET",
+        "/v1/metrics",
+        h(move |_req, _ctx| Ok(Response::json(&metrics.to_json()))),
+    );
+
+    r
+}
+
+// ---------------------------------------------------------------------
+// projects + users
+// ---------------------------------------------------------------------
+
+fn create_project(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let body = req.json()?;
+    let obj = dto::as_object(&body)?;
+    dto::check_fields(obj, &["root_token", "name", "admin"])?;
+    let root = dto::str_field(obj, "root_token")?;
+    let name = dto::str_field(obj, "name")?;
+    let admin = dto::str_field(obj, "admin")?;
+    let (pid, token) = ctx.acai.credentials.create_project(&root, &name, &admin)?;
+    Ok(Response::json_with_status(
+        201,
+        &Json::obj()
+            .field("project", pid.to_string())
+            .field("admin_token", token)
+            .build(),
+    ))
+}
+
+fn create_user(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let body = req.json()?;
+    let obj = dto::as_object(&body)?;
+    dto::check_fields(obj, &["name"])?;
+    let name = dto::str_field(obj, "name")?;
+    let token = ctx
+        .token
+        .as_deref()
+        .ok_or_else(|| AcaiError::Unauthorized("route requires authentication".into()))?;
+    let new_token = ctx.acai.credentials.create_user(token, &name)?;
+    Ok(Response::json_with_status(
+        201,
+        &Json::obj().field("token", new_token).build(),
+    ))
+}
+
+// ---------------------------------------------------------------------
+// files
+// ---------------------------------------------------------------------
+
+fn list_files(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let page = PageReq::from_query(&ctx.query)?;
+    let prefix = ctx.query.get("prefix").unwrap_or("/").to_string();
+    let out = ctx.client()?.files(&prefix, &page)?;
+    Ok(Response::json(&dto::page_json(
+        out.items.iter().map(FileEntry::to_json).collect(),
+        &out.next,
+    )))
+}
+
+fn upload_files(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let body = req.json()?;
+    let obj = dto::as_object(&body)?;
+    dto::check_fields(obj, &["files"])?;
+    let mut decoded: Vec<(String, Vec<u8>)> = Vec::new();
+    for item in dto::arr_field(obj, "files")? {
+        let o = dto::as_object(item)?;
+        dto::check_fields(o, &["path", "content_b64"])?;
+        decoded.push((
+            dto::str_field(o, "path")?,
+            dto::b64_decode(&dto::str_field(o, "content_b64")?)?,
+        ));
+    }
+    if decoded.is_empty() {
+        return Err(AcaiError::invalid("upload needs at least one file"));
+    }
+    let refs: Vec<(&str, &[u8])> = decoded
+        .iter()
+        .map(|(p, b)| (p.as_str(), b.as_slice()))
+        .collect();
+    let uploaded = ctx.client()?.upload(&refs)?;
+    Ok(Response::json_with_status(
+        201,
+        &Json::obj()
+            .field(
+                "files",
+                Json::Arr(uploaded.iter().map(FileEntry::to_json).collect()),
+            )
+            .build(),
+    ))
+}
+
+fn download_file(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let path = ctx.params.raw("path")?.to_string();
+    let version = ctx.query.version("version")?;
+    let bytes = ctx.client()?.fetch(&path, version)?;
+    let mut b = Json::obj()
+        .field("path", path.as_str())
+        .field("content_b64", dto::b64_encode(&bytes));
+    if let Some(v) = version {
+        b = b.field("version", v);
+    }
+    Ok(Response::json(&b.build()))
+}
+
+fn list_file_versions(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let path = ctx.params.raw("path")?.to_string();
+    let page = PageReq::from_query(&ctx.query)?;
+    let out = ctx.client()?.file_versions(&path, &page)?;
+    Ok(Response::json(&dto::page_json(
+        out.items.iter().map(|v| Json::from(*v)).collect(),
+        &out.next,
+    )))
+}
+
+// ---------------------------------------------------------------------
+// file sets + provenance
+// ---------------------------------------------------------------------
+
+fn list_file_sets(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let page = PageReq::from_query(&ctx.query)?;
+    let out = ctx.client()?.file_sets(&page)?;
+    Ok(Response::json(&dto::page_json(
+        out.items.iter().map(FileEntry::to_json).collect(),
+        &out.next,
+    )))
+}
+
+fn create_file_set(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let body = req.json()?;
+    let obj = dto::as_object(&body)?;
+    dto::check_fields(obj, &["name", "specs"])?;
+    let name = dto::str_field(obj, "name")?;
+    let specs: Vec<String> = dto::arr_field(obj, "specs")?
+        .iter()
+        .map(|s| {
+            s.as_str()
+                .map(String::from)
+                .ok_or_else(|| AcaiError::invalid("specs must be strings"))
+        })
+        .collect::<Result<_>>()?;
+    let spec_refs: Vec<&str> = specs.iter().map(|s| s.as_str()).collect();
+    let version = ctx.client()?.make_file_set(&name, &spec_refs)?;
+    Ok(Response::json_with_status(
+        201,
+        &Json::obj()
+            .field("name", name.as_str())
+            .field("version", version)
+            .build(),
+    ))
+}
+
+fn trace_file_set(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let name = ctx.params.raw("name")?.to_string();
+    let version = ctx
+        .query
+        .version("version")?
+        .ok_or_else(|| AcaiError::invalid("missing ?version="))?;
+    let dir = TraceDir::parse(
+        ctx.query
+            .get("dir")
+            .ok_or_else(|| AcaiError::invalid("missing ?dir="))?,
+    )?;
+    let edges = ctx.client()?.trace(&name, version, dir)?;
+    Ok(Response::json(
+        &Json::obj()
+            .field("edges", Json::Arr(edges.iter().map(dto::edge_to_json).collect()))
+            .build(),
+    ))
+}
+
+fn lineage_file_set(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let name = ctx.params.raw("name")?.to_string();
+    let version = ctx
+        .query
+        .version("version")?
+        .ok_or_else(|| AcaiError::invalid("missing ?version="))?;
+    let ancestors = ctx.client()?.lineage_of(&name, version)?;
+    Ok(Response::json(
+        &Json::obj()
+            .field(
+                "ancestors",
+                Json::Arr(ancestors.into_iter().map(Json::from).collect()),
+            )
+            .build(),
+    ))
+}
+
+fn provenance_graph(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let (nodes, edges) = ctx.client()?.provenance()?;
+    Ok(Response::json(
+        &Json::obj()
+            .field("nodes", Json::Arr(nodes.into_iter().map(Json::from).collect()))
+            .field("edges", Json::Arr(edges.iter().map(dto::edge_to_json).collect()))
+            .build(),
+    ))
+}
+
+// ---------------------------------------------------------------------
+// jobs — the async lifecycle
+// ---------------------------------------------------------------------
+
+/// `POST /v1/jobs` → **202 Accepted** with the job id immediately.
+/// The background engine driver completes the job off the request
+/// path; clients poll `GET /v1/jobs/{id}` and stream logs with
+/// `GET /v1/jobs/{id}/logs?offset=`.
+fn submit_job(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let body = req.json()?;
+    let request = dto::job_request_from_json(&body)?;
+    let id = ctx.client()?.submit_job(&request)?;
+    ctx.acai.driver().notify();
+    let status = ctx.client()?.job_status(id)?;
+    Ok(Response::json_with_status(202, &status.to_json()))
+}
+
+fn list_jobs(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let page = PageReq::from_query(&ctx.query)?;
+    let out = ctx.client()?.jobs(&page)?;
+    Ok(Response::json(&dto::page_json(
+        out.items.iter().map(JobStatus::to_json).collect(),
+        &out.next,
+    )))
+}
+
+fn get_job(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let id: JobId = ctx.params.id("id")?;
+    let status = ctx.client()?.job_status(id)?;
+    Ok(Response::json(&status.to_json()))
+}
+
+fn get_job_logs(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let id: JobId = ctx.params.id("id")?;
+    let offset = ctx.query.u64("offset")?.unwrap_or(0) as usize;
+    let chunk = ctx.client()?.job_logs(id, offset)?;
+    Ok(Response::json(&chunk.to_json()))
+}
+
+fn kill_job(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let id: JobId = ctx.params.id("id")?;
+    ctx.client()?.kill_job(id)?;
+    ctx.acai.driver().notify();
+    let status = ctx.client()?.job_status(id)?;
+    Ok(Response::json(&status.to_json()))
+}
+
+// ---------------------------------------------------------------------
+// metadata
+// ---------------------------------------------------------------------
+
+fn get_metadata(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let kind = dto::kind_from_str(ctx.params.raw("kind")?)?;
+    let id = ctx.params.raw("id")?.to_string();
+    let doc = ctx.client()?.metadata_doc(kind, &id)?;
+    Ok(Response::json(&doc))
+}
+
+fn query_metadata(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let kind = dto::kind_from_str(ctx.params.raw("kind")?)?;
+    let body = req.json()?;
+    let obj = dto::as_object(&body)?;
+    dto::check_fields(obj, &["clauses"])?;
+    let clauses = dto::arr_field(obj, "clauses")?
+        .iter()
+        .map(dto::clause_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    let hits = ctx.client()?.metadata_query(kind, &clauses)?;
+    let rows: Vec<Json> = hits
+        .into_iter()
+        .map(|(id, doc)| Json::obj().field("id", id).field("doc", doc).build())
+        .collect();
+    Ok(Response::json(&Json::obj().field("hits", Json::Arr(rows)).build()))
+}
+
+fn tag_metadata(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let kind = dto::kind_from_str(ctx.params.raw("kind")?)?;
+    let id = ctx.params.raw("id")?.to_string();
+    let body = req.json()?;
+    let obj = dto::as_object(&body)?;
+    dto::check_fields(obj, &["fields"])?;
+    let fields_obj = match obj.get("fields") {
+        Some(Json::Obj(o)) => o,
+        _ => return Err(AcaiError::invalid("field \"fields\" must be an object")),
+    };
+    let fields: Vec<(String, Json)> = fields_obj
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.clone()))
+        .collect();
+    // value validation is the client's (shared dto::validate_tags)
+    ctx.client()?.tag_artifact(kind, &id, &fields)?;
+    Ok(Response::json(
+        &Json::obj().field("tagged", fields.len()).build(),
+    ))
+}
+
+// ---------------------------------------------------------------------
+// profiler + auto-provisioner
+// ---------------------------------------------------------------------
+
+fn create_profile(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let body = req.json()?;
+    let obj = dto::as_object(&body)?;
+    dto::check_fields(obj, &["name", "template", "input_fileset"])?;
+    let name = dto::str_field(obj, "name")?;
+    let template = dto::str_field(obj, "template")?;
+    let input_fileset = dto::str_field(obj, "input_fileset")?;
+    let id = ctx
+        .client()?
+        .profile_template(&name, &template, &input_fileset)?;
+    Ok(Response::json_with_status(
+        201,
+        &Json::obj().field("template", id.to_string()).build(),
+    ))
+}
+
+fn autoprovision(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let body = req.json()?;
+    let obj = dto::as_object(&body)?;
+    dto::check_fields(obj, &["template_name", "values", "objective"])?;
+    let template_name = dto::str_field(obj, "template_name")?;
+    let values: Vec<f64> = dto::arr_field(obj, "values")?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .ok_or_else(|| AcaiError::invalid("values must be numbers"))
+        })
+        .collect::<Result<_>>()?;
+    let objective = dto::objective_from_json(
+        obj.get("objective")
+            .ok_or_else(|| AcaiError::invalid("missing field \"objective\""))?,
+    )?;
+    let choice = ctx.client()?.provision(&template_name, &values, objective)?;
+    Ok(Response::json(&choice.to_json()))
+}

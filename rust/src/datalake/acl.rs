@@ -123,6 +123,35 @@ impl AclStore {
         }
     }
 
+    /// Bulk read filter under ONE lock acquisition: retains the items
+    /// whose ACL resource the caller may read (unguarded resources
+    /// pass, like [`AclStore::check`]).  Listing endpoints use this so
+    /// a 10k-entry scan costs one mutex cycle, not 10k.
+    pub fn retain_readable<T>(
+        &self,
+        project: ProjectId,
+        caller: UserId,
+        items: Vec<T>,
+        resource: impl Fn(&T) -> String,
+    ) -> Vec<T> {
+        let entries = self.entries.lock().unwrap();
+        items
+            .into_iter()
+            .filter(|item| {
+                match entries.get(&(project.raw(), resource(item))) {
+                    None => true, // default: shared within the project
+                    Some(entry) => {
+                        if entry.owner == caller {
+                            entry.mode.owner_read
+                        } else {
+                            entry.mode.project_read
+                        }
+                    }
+                }
+            })
+            .collect()
+    }
+
     /// The owner of a guarded resource.
     pub fn owner(&self, project: ProjectId, resource: &str) -> Option<UserId> {
         self.entries
@@ -145,6 +174,18 @@ mod tests {
     fn unguarded_resources_are_shared() {
         let acl = AclStore::new();
         acl.check(P, "file:/open", BOB, Access::Write).unwrap();
+    }
+
+    #[test]
+    fn retain_readable_matches_per_item_checks() {
+        let acl = AclStore::new();
+        acl.protect(P, "file:/secret", ALICE, Mode::PRIVATE).unwrap();
+        acl.protect(P, "file:/guarded", ALICE, Mode::PROTECTED).unwrap();
+        let items = vec!["/secret", "/guarded", "/open"];
+        let bob_view = acl.retain_readable(P, BOB, items.clone(), |p| format!("file:{p}"));
+        assert_eq!(bob_view, vec!["/guarded", "/open"]);
+        let alice_view = acl.retain_readable(P, ALICE, items, |p| format!("file:{p}"));
+        assert_eq!(alice_view, vec!["/secret", "/guarded", "/open"]);
     }
 
     #[test]

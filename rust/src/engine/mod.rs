@@ -14,6 +14,7 @@
 //!    the output file set, and the engine records provenance, parses
 //!    logs into metadata, bills the job, and frees the quota slot.
 
+pub mod driver;
 pub mod launcher;
 pub mod lifecycle;
 pub mod logserver;
@@ -22,6 +23,7 @@ pub mod pipeline;
 pub mod registry;
 pub mod scheduler;
 
+pub use driver::EngineDriver;
 pub use launcher::Launcher;
 pub use lifecycle::JobState;
 pub use logserver::LogServer;
@@ -59,6 +61,12 @@ pub struct ExecutionEngine {
     pub pricing: PricingModel,
     clock: SimClock,
     rng: Mutex<Rng>,
+    /// Serializes event-loop *driving* (the background [`EngineDriver`],
+    /// [`Self::run_until_idle`] callers, and the profiler's straggler
+    /// barrier) so two threads never interleave `step()` loops.  `submit`
+    /// and `kill` do NOT take it — they stay non-blocking under a busy
+    /// driver.
+    drive: Mutex<()>,
 }
 
 impl ExecutionEngine {
@@ -83,8 +91,17 @@ impl ExecutionEngine {
             workloads,
             pricing,
             clock,
-            rng: Mutex::new(Rng::new(seed ^ 0xE46))
+            rng: Mutex::new(Rng::new(seed ^ 0xE46)),
+            drive: Mutex::new(()),
         }
+    }
+
+    /// Exclusive right to drive the event loop (see the `drive` field).
+    /// Callers running their own `step()` loop (e.g. the profiler
+    /// barrier) hold this for the duration; drop it before calling
+    /// [`Self::run_until_idle`], which re-acquires.
+    pub fn drive_guard(&self) -> std::sync::MutexGuard<'_, ()> {
+        self.drive.lock().unwrap()
     }
 
     /// Current virtual time.
@@ -216,8 +233,11 @@ impl ExecutionEngine {
         true
     }
 
-    /// Drive until every submitted job is terminal.
+    /// Drive until every submitted job is terminal.  Safe to call while
+    /// a background [`EngineDriver`] is running: drivers serialize on
+    /// the drive lock, and each `step()` is individually consistent.
     pub fn run_until_idle(&self) {
+        let _drive = self.drive.lock().unwrap();
         self.pump();
         let mut events = 0;
         while self.step() {

@@ -20,6 +20,9 @@ pub enum AcaiError {
     /// Entity lookup failed.
     NotFound(String),
 
+    /// Path exists but does not support the HTTP method.
+    MethodNotAllowed(String),
+
     /// Entity already exists / version conflict / illegal state change.
     Conflict(String),
 
@@ -51,6 +54,7 @@ impl fmt::Display for AcaiError {
             AcaiError::Unauthorized(m) => write!(f, "unauthorized: {m}"),
             AcaiError::Forbidden(m) => write!(f, "forbidden: {m}"),
             AcaiError::NotFound(m) => write!(f, "not found: {m}"),
+            AcaiError::MethodNotAllowed(m) => write!(f, "method not allowed: {m}"),
             AcaiError::Conflict(m) => write!(f, "conflict: {m}"),
             AcaiError::Invalid(m) => write!(f, "invalid: {m}"),
             AcaiError::Exhausted(m) => write!(f, "resources exhausted: {m}"),
@@ -85,11 +89,51 @@ impl AcaiError {
             AcaiError::Unauthorized(_) => 401,
             AcaiError::Forbidden(_) => 403,
             AcaiError::NotFound(_) => 404,
+            AcaiError::MethodNotAllowed(_) => 405,
             AcaiError::Conflict(_) => 409,
             AcaiError::Invalid(_) | AcaiError::Json(_) => 400,
             AcaiError::Exhausted(_) => 429,
             AcaiError::Infeasible(_) => 422,
             AcaiError::Storage(_) | AcaiError::Runtime(_) | AcaiError::Io(_) => 500,
+        }
+    }
+
+    /// Stable machine-readable code for the REST error envelope
+    /// (`{"error": {"code", "message", "request_id"}}`).
+    pub fn code(&self) -> &'static str {
+        match self {
+            AcaiError::Unauthorized(_) => "unauthorized",
+            AcaiError::Forbidden(_) => "forbidden",
+            AcaiError::NotFound(_) => "not_found",
+            AcaiError::MethodNotAllowed(_) => "method_not_allowed",
+            AcaiError::Conflict(_) => "conflict",
+            AcaiError::Invalid(_) => "invalid",
+            AcaiError::Exhausted(_) => "exhausted",
+            AcaiError::Infeasible(_) => "infeasible",
+            AcaiError::Storage(_) => "storage",
+            AcaiError::Runtime(_) => "runtime",
+            AcaiError::Json(_) => "json",
+            AcaiError::Io(_) => "io",
+        }
+    }
+
+    /// Rebuild an error from a wire envelope (`code` + `message`) — the
+    /// inverse of [`AcaiError::code`], used by the remote SDK client so
+    /// an error crosses HTTP without losing its variant.
+    pub fn from_code(code: &str, message: &str) -> Self {
+        let m = message.to_string();
+        match code {
+            "unauthorized" => AcaiError::Unauthorized(m),
+            "forbidden" => AcaiError::Forbidden(m),
+            "not_found" => AcaiError::NotFound(m),
+            "method_not_allowed" => AcaiError::MethodNotAllowed(m),
+            "conflict" => AcaiError::Conflict(m),
+            "exhausted" => AcaiError::Exhausted(m),
+            "infeasible" => AcaiError::Infeasible(m),
+            "storage" | "io" => AcaiError::Storage(m),
+            "runtime" => AcaiError::Runtime(m),
+            "json" => AcaiError::Json(m),
+            _ => AcaiError::Invalid(m),
         }
     }
 
@@ -117,6 +161,7 @@ mod tests {
         assert_eq!(AcaiError::Unauthorized("x".into()).status(), 401);
         assert_eq!(AcaiError::Forbidden("x".into()).status(), 403);
         assert_eq!(AcaiError::not_found("x").status(), 404);
+        assert_eq!(AcaiError::MethodNotAllowed("x".into()).status(), 405);
         assert_eq!(AcaiError::conflict("x").status(), 409);
         assert_eq!(AcaiError::invalid("x").status(), 400);
         assert_eq!(AcaiError::Exhausted("x".into()).status(), 429);
@@ -128,6 +173,30 @@ mod tests {
     fn display_includes_context() {
         let e = AcaiError::not_found("file /data/train.json");
         assert!(e.to_string().contains("/data/train.json"));
+    }
+
+    #[test]
+    fn codes_round_trip_through_the_wire_envelope() {
+        let cases = [
+            AcaiError::Unauthorized("a".into()),
+            AcaiError::Forbidden("b".into()),
+            AcaiError::not_found("c"),
+            AcaiError::MethodNotAllowed("m".into()),
+            AcaiError::conflict("d"),
+            AcaiError::invalid("e"),
+            AcaiError::Exhausted("f".into()),
+            AcaiError::Infeasible("g".into()),
+            AcaiError::Storage("h".into()),
+            AcaiError::Runtime("i".into()),
+            AcaiError::Json("j".into()),
+        ];
+        for e in cases {
+            let back = AcaiError::from_code(e.code(), "m");
+            assert_eq!(back.code(), e.code(), "{e}");
+            assert_eq!(back.status(), e.status(), "{e}");
+        }
+        // io degrades to storage (both 500) — io::Error cannot cross the wire
+        assert_eq!(AcaiError::from_code("io", "m").status(), 500);
     }
 
     #[test]

@@ -2,10 +2,12 @@
 //! plumbing (paper §4.1: an Apache reverse proxy redirects external
 //! HTTPS to the credential server; services speak plain HTTP internally).
 //!
-//! One OS thread per connection, `Connection: close` semantics, bodies
-//! framed by `Content-Length`.  Enough surface for the ACAI REST edge
-//! (`acai serve`) and the credential-server redirect flow, with hard
-//! input limits so a misbehaving client cannot wedge a service.
+//! One OS thread per connection with HTTP/1.1 keep-alive (requests are
+//! served sequentially per connection until the peer closes or sends
+//! `Connection: close`), bodies framed by `Content-Length`.  Enough
+//! surface for the ACAI REST edge (`acai serve`) and the
+//! credential-server redirect flow, with hard input limits so a
+//! misbehaving client cannot wedge a service.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -71,28 +73,55 @@ impl Response {
         r
     }
 
-    /// Error response with a JSON `{"error": ...}` body.
-    pub fn error(e: &AcaiError) -> Self {
-        let mut r = Self::new(e.status());
+    /// JSON body with an explicit status code.
+    pub fn json_with_status(status: u16, value: &Json) -> Self {
+        let mut r = Self::new(status);
         r.headers
             .push(("content-type".into(), "application/json".into()));
-        r.body = Json::obj()
-            .field("error", e.to_string())
-            .build()
-            .encode()
-            .into_bytes();
+        r.body = value.encode().into_bytes();
         r
+    }
+
+    /// Error response carrying the uniform envelope
+    /// `{"error": {"code", "message", "request_id"}}`.  Connection-level
+    /// failures (before routing assigns an id) carry `request_id: null`;
+    /// the API tier re-emits the envelope with the real id.
+    pub fn error(e: &AcaiError) -> Self {
+        Self::error_with_request_id(e, None)
+    }
+
+    /// The uniform envelope with an explicit request id.
+    pub fn error_with_request_id(e: &AcaiError, request_id: Option<&str>) -> Self {
+        let rid = match request_id {
+            Some(id) => Json::from(id),
+            None => Json::Null,
+        };
+        Self::json_with_status(
+            e.status(),
+            &Json::obj()
+                .field(
+                    "error",
+                    Json::obj()
+                        .field("code", e.code())
+                        .field("message", e.to_string())
+                        .field("request_id", rid)
+                        .build(),
+                )
+                .build(),
+        )
     }
 
     fn reason(&self) -> &'static str {
         match self.status {
             200 => "OK",
             201 => "Created",
+            202 => "Accepted",
             204 => "No Content",
             400 => "Bad Request",
             401 => "Unauthorized",
             403 => "Forbidden",
             404 => "Not Found",
+            405 => "Method Not Allowed",
             409 => "Conflict",
             422 => "Unprocessable Entity",
             429 => "Too Many Requests",
@@ -124,8 +153,9 @@ impl Server {
                 match listener.accept() {
                     Ok((stream, _)) => {
                         let handler = handler.clone();
+                        let stop = stop2.clone();
                         std::thread::spawn(move || {
-                            let _ = handle_connection(stream, handler);
+                            let _ = handle_connection(stream, handler, stop);
                         });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -157,23 +187,67 @@ impl Drop for Server {
     }
 }
 
-fn handle_connection(stream: TcpStream, handler: Handler) -> Result<()> {
+fn handle_connection(stream: TcpStream, handler: Handler, stop: Arc<AtomicBool>) -> Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
-    let request = match read_request(&mut reader) {
-        Ok(r) => r,
-        Err(e) => {
-            write_response(&stream, &Response::error(&e))?;
+    loop {
+        let (request, http11) = match read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            // peer closed (or went idle past the read timeout): done
+            Ok(None) => return Ok(()),
+            Err(e) => {
+                // malformed input: answer with the envelope, then close —
+                // framing is unknown so the connection cannot be reused
+                let _ = write_response(&stream, &Response::error(&e), false);
+                return Ok(());
+            }
+        };
+        // a dropped Server must stop serving keep-alive connections too,
+        // not just stop accepting new ones
+        if stop.load(Ordering::SeqCst) {
             return Ok(());
         }
-    };
-    let response = handler(&request);
-    write_response(&stream, &response)
+        // keep-alive is the HTTP/1.1 default; HTTP/1.0 clients must ask
+        // for it, and an explicit Connection header always wins
+        let keep_alive = match request.header("connection") {
+            Some(c) => c.eq_ignore_ascii_case("keep-alive"),
+            None => http11,
+        };
+        let response = handler(&request);
+        write_response(&stream, &response, keep_alive)?;
+        if !keep_alive {
+            return Ok(());
+        }
+    }
 }
 
-fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Request> {
+/// Read one request off the connection; the `bool` is whether the
+/// request line declared HTTP/1.1 (keep-alive default).  `Ok(None)`
+/// means the peer closed (or idled out) cleanly between requests.
+fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<(Request, bool)>> {
     let mut line = String::new();
-    reader.read_line(&mut line)?;
+    match reader.read_line(&mut line) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        // a timeout/close with NOTHING read is an idle keep-alive
+        // connection going away — close silently.  A timeout after
+        // partial input is a malformed/stalled request and still gets
+        // an error response (read_line keeps the partial bytes in
+        // `line` on error).
+        Err(e)
+            if line.is_empty()
+                && matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::UnexpectedEof
+                        | std::io::ErrorKind::ConnectionReset
+                ) =>
+        {
+            return Ok(None)
+        }
+        Err(e) => return Err(e.into()),
+    }
     let mut parts = line.trim_end().splitn(3, ' ');
     let method = parts
         .next()
@@ -187,12 +261,20 @@ fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Request> {
         Some((p, q)) => (p.to_string(), q.to_string()),
         None => (target.to_string(), String::new()),
     };
+    let http11 = parts
+        .next()
+        .map(|v| v.trim().eq_ignore_ascii_case("HTTP/1.1"))
+        .unwrap_or(false);
 
     let mut headers = HashMap::new();
     let mut total = 0usize;
     loop {
         let mut h = String::new();
-        reader.read_line(&mut h)?;
+        if reader.read_line(&mut h)? == 0 {
+            // EOF inside the header block is a truncated request, NOT
+            // the end-of-headers blank line — never dispatch it
+            return Err(AcaiError::invalid("unexpected eof in header block"));
+        }
         total += h.len();
         if total > MAX_HEADER_BYTES {
             return Err(AcaiError::invalid("header block too large"));
@@ -216,49 +298,89 @@ fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Request> {
     }
     let mut body = vec![0u8; len];
     reader.read_exact(&mut body)?;
-    Ok(Request {
-        method,
-        path,
-        query,
-        headers,
-        body,
-    })
+    Ok(Some((
+        Request {
+            method,
+            path,
+            query,
+            headers,
+            body,
+        },
+        http11,
+    )))
 }
 
-fn write_response(mut stream: &TcpStream, r: &Response) -> Result<()> {
+fn write_response(mut stream: &TcpStream, r: &Response, keep_alive: bool) -> Result<()> {
     let mut head = format!("HTTP/1.1 {} {}\r\n", r.status, r.reason());
     for (k, v) in &r.headers {
         head.push_str(&format!("{k}: {v}\r\n"));
     }
-    head.push_str(&format!("content-length: {}\r\nconnection: close\r\n\r\n", r.body.len()));
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    head.push_str(&format!(
+        "content-length: {}\r\nconnection: {conn}\r\n\r\n",
+        r.body.len()
+    ));
     stream.write_all(head.as_bytes())?;
     stream.write_all(&r.body)?;
     stream.flush()?;
     Ok(())
 }
 
-/// Blocking HTTP client request against a local service.
-pub fn request(
+/// A client-side persistent HTTP/1.1 connection: sequential requests
+/// reuse one socket (keep-alive), so pollers — e.g. the remote SDK
+/// waiting on a job — don't pay a connect + server-thread spawn per
+/// request.
+pub struct HttpConn {
     addr: SocketAddr,
-    method: &str,
-    path: &str,
-    headers: &[(&str, &str)],
-    body: &[u8],
-) -> Result<Response> {
-    let mut stream = TcpStream::connect(addr)?;
-    stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
-    let mut head = format!("{method} {path} HTTP/1.1\r\nhost: {addr}\r\n");
-    for (k, v) in headers {
-        head.push_str(&format!("{k}: {v}\r\n"));
-    }
-    head.push_str(&format!("content-length: {}\r\n\r\n", body.len()));
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(body)?;
-    stream.flush()?;
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
 
-    let mut reader = BufReader::new(stream);
+impl HttpConn {
+    pub fn connect(addr: SocketAddr) -> Result<HttpConn> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(HttpConn {
+            addr,
+            stream,
+            reader,
+        })
+    }
+
+    /// One request/response exchange.  The connection stays usable for
+    /// the next request; a server that went away surfaces as an
+    /// [`AcaiError::Io`] (callers holding a pooled connection reconnect
+    /// on that).
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> Result<Response> {
+        let mut head = format!("{method} {path} HTTP/1.1\r\nhost: {}\r\n", self.addr);
+        for (k, v) in headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str(&format!("content-length: {}\r\n\r\n", body.len()));
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(body)?;
+        self.stream.flush()?;
+        read_response(&mut self.reader)
+    }
+}
+
+fn read_response(reader: &mut BufReader<TcpStream>) -> Result<Response> {
     let mut status_line = String::new();
-    reader.read_line(&mut status_line)?;
+    if reader.read_line(&mut status_line)? == 0 {
+        // distinguishable from a malformed status line: pooled callers
+        // treat Io as "stale connection, reconnect"
+        return Err(AcaiError::Io(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "connection closed by server",
+        )));
+    }
     let status: u16 = status_line
         .split_whitespace()
         .nth(1)
@@ -294,6 +416,26 @@ pub fn request(
     })
 }
 
+/// Blocking one-shot HTTP client request against a local service
+/// (opens and drops a connection; use [`HttpConn`] to poll).
+pub fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> Result<Response> {
+    HttpConn::connect(addr)?.request(method, path, headers, body)
+}
+
+/// Extract the human message out of the uniform error envelope.
+fn envelope_message(v: &Json) -> &str {
+    v.get("error")
+        .and_then(|e| e.get("message"))
+        .and_then(Json::as_str)
+        .unwrap_or("?")
+}
+
 /// GET helper returning parsed JSON.
 pub fn get_json(addr: SocketAddr, path: &str, token: &str) -> Result<Json> {
     let resp = request(addr, "GET", path, &[("x-acai-token", token)], b"")?;
@@ -303,7 +445,7 @@ pub fn get_json(addr: SocketAddr, path: &str, token: &str) -> Result<Json> {
         return Err(AcaiError::Invalid(format!(
             "HTTP {}: {}",
             resp.status,
-            v.get("error").and_then(Json::as_str).unwrap_or("?")
+            envelope_message(&v)
         )));
     }
     Ok(v)
@@ -324,7 +466,7 @@ pub fn post_json(addr: SocketAddr, path: &str, token: &str, body: &Json) -> Resu
         return Err(AcaiError::Invalid(format!(
             "HTTP {}: {}",
             resp.status,
-            v.get("error").and_then(Json::as_str).unwrap_or("?")
+            envelope_message(&v)
         )));
     }
     Ok(v)
@@ -403,6 +545,121 @@ mod tests {
         let resp = request(server.addr(), "GET", "/", &[("x-acai-token", "t-1")], b"").unwrap();
         let v = crate::json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
         assert_eq!(v.get("token").and_then(Json::as_str), Some("t-1"));
+    }
+
+    #[test]
+    fn keep_alive_serves_sequential_requests_on_one_socket() {
+        let server = echo_server();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(5)))
+            .unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        for i in 0..3 {
+            let req = format!("GET /ping{i} HTTP/1.1\r\nhost: x\r\ncontent-length: 0\r\n\r\n");
+            stream.write_all(req.as_bytes()).unwrap();
+            stream.flush().unwrap();
+            // status line
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.starts_with("HTTP/1.1 200"), "{line:?}");
+            // headers: find content-length, confirm keep-alive
+            let mut len = 0usize;
+            let mut keep_alive = false;
+            loop {
+                let mut h = String::new();
+                reader.read_line(&mut h).unwrap();
+                let h = h.trim_end().to_ascii_lowercase();
+                if h.is_empty() {
+                    break;
+                }
+                if let Some(v) = h.strip_prefix("content-length:") {
+                    len = v.trim().parse().unwrap();
+                }
+                if h == "connection: keep-alive" {
+                    keep_alive = true;
+                }
+            }
+            assert!(keep_alive, "round {i} was not keep-alive");
+            let mut body = vec![0u8; len];
+            reader.read_exact(&mut body).unwrap();
+            let v = crate::json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+            assert_eq!(
+                v.get("path").and_then(Json::as_str),
+                Some(format!("/ping{i}").as_str())
+            );
+        }
+    }
+
+    #[test]
+    fn http_conn_reuses_one_connection_for_sequential_requests() {
+        let server = echo_server();
+        let mut conn = HttpConn::connect(server.addr()).unwrap();
+        // if the server closed the socket between requests this would
+        // surface as an Io error — success proves keep-alive reuse
+        for i in 0..3 {
+            let resp = conn.request("GET", &format!("/r{i}"), &[], b"").unwrap();
+            assert_eq!(resp.status, 200);
+            let v = crate::json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+            assert_eq!(
+                v.get("path").and_then(Json::as_str),
+                Some(format!("/r{i}").as_str())
+            );
+        }
+    }
+
+    #[test]
+    fn connection_close_is_honored() {
+        let server = echo_server();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(5)))
+            .unwrap();
+        stream
+            .write_all(b"GET / HTTP/1.1\r\nconnection: close\r\ncontent-length: 0\r\n\r\n")
+            .unwrap();
+        let mut buf = Vec::new();
+        // server must close the socket after the response (read to EOF)
+        BufReader::new(&stream).read_to_end(&mut buf).unwrap();
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.contains("connection: close"), "{text}");
+    }
+
+    #[test]
+    fn truncated_header_block_is_rejected_not_dispatched() {
+        // a request whose sender dies mid-headers must never reach the
+        // handler as a complete (empty-body) request
+        let server = echo_server();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(5)))
+            .unwrap();
+        stream
+            .write_all(b"POST /v1/jobs/job-1/kill HTTP/1.1\r\nx-acai-token: t\r\n")
+            .unwrap();
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut buf = Vec::new();
+        BufReader::new(&stream).read_to_end(&mut buf).unwrap();
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.starts_with("HTTP/1.1 400"), "{text}");
+    }
+
+    #[test]
+    fn http_1_0_defaults_to_close() {
+        // an HTTP/1.0 client without a Connection header expects the
+        // server to close; keeping the socket open would hang it
+        let server = echo_server();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(5)))
+            .unwrap();
+        stream
+            .write_all(b"GET / HTTP/1.0\r\ncontent-length: 0\r\n\r\n")
+            .unwrap();
+        let mut buf = Vec::new();
+        BufReader::new(&stream).read_to_end(&mut buf).unwrap();
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.contains("connection: close"), "{text}");
     }
 
     #[test]

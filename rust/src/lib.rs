@@ -31,8 +31,17 @@
 //!    modules (`artifacts/*.hlo.txt`) via PJRT and executes them from the
 //!    hot paths (profiler fit/predict, the MLP job payload); the PJRT
 //!    backend is feature-gated (`pjrt`), with an inert offline stub.
+//! 5. **API tier** — [`api`]: the versioned `/v1` REST edge — a
+//!    path-template router with typed parameters and a middleware chain
+//!    (request-id, per-route metrics, token auth), strict DTO codecs
+//!    with the uniform error envelope, and an **async job lifecycle**
+//!    (`POST /v1/jobs` → 202, completion via the background
+//!    [`engine::EngineDriver`]).  The [`sdk`] exposes the same surface
+//!    through the `AcaiApi` trait, implemented both in-process
+//!    ([`sdk::Client`]) and over the wire ([`sdk::RemoteClient`]).
 //!
-//! See `DESIGN.md` for the substitution table and the experiment index.
+//! See `DESIGN.md` for the substitution table, the `/v1` route table,
+//! and the experiment index.
 
 pub mod autoprovision;
 pub mod api;

@@ -1,15 +1,18 @@
 //! ACAI command-line entry point.
 //!
 //! ```text
-//! acai serve   [--port 8080] [--artifacts DIR]   REST edge (credential server)
+//! acai serve   [--port 8080] [--artifacts DIR]   REST edge (/v1, credential server)
 //! acai demo    [--artifacts DIR]                 end-to-end pipeline demo
 //! acai grid                                      print the provisioning grid + prices
 //! acai version
 //! ```
 //!
-//! The serve mode exposes the credential-server flow of paper §4.1 over
-//! real HTTP: every request authenticates `x-acai-token` and is routed
-//! to the matching service.
+//! The serve mode exposes the versioned `/v1` REST API of paper §4.1
+//! over real HTTP: every request authenticates `x-acai-token`, is
+//! routed by path template to the matching service, and job submission
+//! is asynchronous (`POST /v1/jobs` returns 202; a background engine
+//! driver completes the work).  See DESIGN.md ("The API tier") for the
+//! route table.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -145,9 +148,12 @@ fn serve(flags: &HashMap<String, String>) -> acai::Result<()> {
         .unwrap_or(8080);
     let acai = boot(flags)?;
     println!("root token: {}", acai.credentials.root_token());
+    // start the background engine driver up front: POST /v1/jobs only
+    // notifies it, nothing ever drives the engine in-request
+    acai.driver();
     let handler = make_handler(acai);
     let server = Server::serve(port, handler)?;
-    println!("acai REST edge on http://{}", server.addr());
+    println!("acai /v1 REST edge on http://{}", server.addr());
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

@@ -8,7 +8,7 @@ use crate::cluster::Cluster;
 pub use crate::config::PlatformConfig;
 use crate::credential::CredentialServer;
 use crate::datalake::DataLake;
-use crate::engine::ExecutionEngine;
+use crate::engine::{EngineDriver, ExecutionEngine};
 use crate::error::Result;
 use crate::kvstore::KvStore;
 use crate::objectstore::ObjectStore;
@@ -33,6 +33,10 @@ pub struct Acai {
     pub pricing: PricingModel,
     pub runtime: Option<Arc<Runtime>>,
     objects: ObjectStore,
+    /// Background engine driver (async job lifecycle).  Started lazily
+    /// by the first [`Acai::driver`] call — unit tests that drive the
+    /// engine manually never pay for (or race with) the thread.
+    driver: std::sync::OnceLock<EngineDriver>,
 }
 
 impl Acai {
@@ -85,7 +89,16 @@ impl Acai {
             pricing,
             runtime,
             objects,
+            driver: std::sync::OnceLock::new(),
         })
+    }
+
+    /// The background engine driver, starting it on first use.  The API
+    /// tier calls this on submit/kill so `POST /v1/jobs` can return 202
+    /// immediately and let jobs complete off the request path.
+    pub fn driver(&self) -> &EngineDriver {
+        self.driver
+            .get_or_init(|| EngineDriver::start(self.engine.clone()))
     }
 
     /// The underlying object store (testing + failure injection).

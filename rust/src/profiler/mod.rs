@@ -252,10 +252,15 @@ impl Profiler {
                 })
                 .count()
         };
-        self.engine.pump();
-        while done_count(&self.engine) < need {
-            if !self.engine.step() {
-                break; // nothing running: all remaining failed to launch
+        {
+            // exclusive driving: a background EngineDriver may be live,
+            // and two interleaved step() loops must never race
+            let _drive = self.engine.drive_guard();
+            self.engine.pump();
+            while done_count(&self.engine) < need {
+                if !self.engine.step() {
+                    break; // nothing running: all remaining failed to launch
+                }
             }
         }
 

@@ -2,20 +2,128 @@
 //! platform, mirroring the Python SDK / CLI surface — upload, file-set
 //! management, job submission, monitoring, metadata queries, provenance
 //! tracing, profiling and auto-provisioning.
+//!
+//! Two interchangeable clients implement the [`AcaiApi`] trait:
+//!
+//! - [`Client`] — in-process, calling the services directly;
+//! - [`RemoteClient`] — speaking the `/v1` REST wire protocol over
+//!   HTTP ([`crate::api`]), for callers outside the platform process.
+//!
+//! Code written against `AcaiApi` runs unchanged against either; the
+//! API conformance suite (`rust/tests/api_conformance.rs`) holds both
+//! to the same behavior, which is what proves the DTO codecs
+//! round-trip.
+
+pub mod remote;
+
+pub use remote::RemoteClient;
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
+use crate::api::dto::{
+    cut_page, num_cursor, FileEntry, JobStatus, LogChunk, Page, PageReq, ProvisionChoice,
+    TraceDir,
+};
 use crate::autoprovision::{Decision, Objective};
 use crate::cluster::ResourceConfig;
 use crate::credential::Identity;
 use crate::datalake::metadata::ArtifactKind;
 use crate::docstore::Clause;
 use crate::engine::{JobRecord, JobSpec};
-use crate::error::Result;
+use crate::error::{AcaiError, Result};
 use crate::graphstore::Edge;
 use crate::ids::{JobId, TemplateId, Version};
 use crate::json::Json;
 use crate::platform::Acai;
+
+/// How long [`AcaiApi::await_job`] polls before giving up (wall time;
+/// the simulated engine finishes jobs in milliseconds).
+const AWAIT_JOB_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// The platform API surface shared by the in-process [`Client`] and
+/// the wire [`RemoteClient`].  Types crossing this boundary are the
+/// wire DTOs of [`crate::api::dto`], so everything here survives an
+/// HTTP round trip by construction.
+pub trait AcaiApi {
+    // ---- data lake ----
+
+    /// Upload files in one transactional session; returns assigned
+    /// versions.
+    fn upload(&self, files: &[(&str, &[u8])]) -> Result<Vec<FileEntry>>;
+
+    /// Download one file (latest version if `None`).
+    fn fetch(&self, path: &str, version: Option<Version>) -> Result<Vec<u8>>;
+
+    /// List readable files under a prefix (cursor-paginated).
+    fn files(&self, prefix: &str, page: &PageReq) -> Result<Page<FileEntry>>;
+
+    /// List versions of one file (cursor-paginated).
+    fn file_versions(&self, path: &str, page: &PageReq) -> Result<Page<Version>>;
+
+    /// Create a file set from spec strings (§3.2.2).
+    fn make_file_set(&self, name: &str, specs: &[&str]) -> Result<Version>;
+
+    /// List readable file sets (cursor-paginated; `path` holds the
+    /// set name).
+    fn file_sets(&self, page: &PageReq) -> Result<Page<FileEntry>>;
+
+    // ---- metadata ----
+
+    /// Fetch one artifact's metadata document.
+    fn metadata_doc(&self, kind: ArtifactKind, id: &str) -> Result<Json>;
+
+    /// Equality/range/max-min metadata query.
+    fn metadata_query(&self, kind: ArtifactKind, clauses: &[Clause])
+        -> Result<Vec<(String, Json)>>;
+
+    /// Attach custom metadata tags to an artifact.
+    fn tag_artifact(&self, kind: ArtifactKind, id: &str, fields: &[(String, Json)])
+        -> Result<()>;
+
+    // ---- provenance ----
+
+    /// The whole provenance graph of the project.
+    fn provenance(&self) -> Result<(Vec<String>, Vec<Edge>)>;
+
+    /// One step forward/backward from a file-set version.
+    fn trace(&self, fileset: &str, version: Version, dir: TraceDir) -> Result<Vec<Edge>>;
+
+    /// Full ancestry of a file-set version — the reproducibility set.
+    fn lineage_of(&self, fileset: &str, version: Version) -> Result<Vec<String>>;
+
+    // ---- jobs (async lifecycle) ----
+
+    /// Submit a job; returns its id without waiting for execution.
+    fn submit_job(&self, request: &JobRequest) -> Result<JobId>;
+
+    /// Poll one job's status.
+    fn job_status(&self, id: JobId) -> Result<JobStatus>;
+
+    /// List the project's jobs (cursor-paginated, submission order).
+    fn jobs(&self, page: &PageReq) -> Result<Page<JobStatus>>;
+
+    /// Read the job log from `offset`; `next_offset` resumes the
+    /// stream incrementally.
+    fn job_logs(&self, id: JobId, offset: usize) -> Result<LogChunk>;
+
+    /// Kill a non-terminal job.
+    fn kill_job(&self, id: JobId) -> Result<()>;
+
+    /// Block until the job is terminal (poll-based; never drives the
+    /// engine in a remote client).
+    fn await_job(&self, id: JobId) -> Result<JobStatus>;
+
+    // ---- profiler + auto-provisioner ----
+
+    /// Profile a command template (runs the trial grid).
+    fn profile_template(&self, name: &str, template: &str, input_fileset: &str)
+        -> Result<TemplateId>;
+
+    /// Optimize a resource config for a profiled template.
+    fn provision(&self, template_name: &str, values: &[f64], objective: Objective)
+        -> Result<ProvisionChoice>;
+}
 
 /// What a client submits through the SDK.
 #[derive(Debug, Clone)]
@@ -82,9 +190,18 @@ impl Client {
             .to_vec())
     }
 
-    /// List files under a prefix with latest versions.
+    /// List files under a prefix with latest versions.  Entries the
+    /// caller has no read access to are filtered out — listing must not
+    /// leak paths that `download` would refuse (the seed skipped this
+    /// check).
     pub fn list_files(&self, prefix: &str) -> Vec<(String, Version)> {
-        self.acai.datalake.storage.list(self.identity.project, prefix)
+        let listed = self.acai.datalake.storage.list(self.identity.project, prefix);
+        self.acai.datalake.acl.retain_readable(
+            self.identity.project,
+            self.identity.user,
+            listed,
+            |(path, _)| format!("file:{path}"),
+        )
     }
 
     /// Create a file set from spec strings (§3.2.2).
@@ -101,9 +218,16 @@ impl Client {
             .create(self.identity.project, name, specs, &self.creator())
     }
 
-    /// List file sets of the project.
+    /// List file sets of the project, filtered to those the caller may
+    /// read (same ACL `download`/`create_file_set` enforce).
     pub fn list_file_sets(&self) -> Vec<(String, Version)> {
-        self.acai.datalake.filesets.list(self.identity.project)
+        let listed = self.acai.datalake.filesets.list(self.identity.project);
+        self.acai.datalake.acl.retain_readable(
+            self.identity.project,
+            self.identity.user,
+            listed,
+            |(name, _)| format!("fileset:{name}"),
+        )
     }
 
     /// Tag an artifact with custom metadata.
@@ -265,6 +389,272 @@ impl Client {
             output_fileset: output_fileset.to_string(),
             resources: decision.config,
         })
+    }
+}
+
+/// `"name:version"` → `"name"` (the whole id when there is no version
+/// suffix) — provenance nodes and file-set metadata ids carry the
+/// version inline.
+fn fileset_name_of(id: &str) -> &str {
+    match id.rsplit_once(':') {
+        Some((name, v)) if v.parse::<Version>().is_ok() => name,
+        _ => id,
+    }
+}
+
+/// The ACL resource guarding an artifact id of a metadata kind, if
+/// that kind is ACL-protected (jobs are not).
+fn read_guard(kind: ArtifactKind, id: &str) -> Option<String> {
+    match kind {
+        ArtifactKind::Job => None,
+        ArtifactKind::File => Some(format!("file:{id}")),
+        ArtifactKind::FileSet => Some(format!("fileset:{}", fileset_name_of(id))),
+    }
+}
+
+impl Client {
+    fn check_read(&self, resource: &str) -> Result<()> {
+        self.acai.datalake.acl.check(
+            self.identity.project,
+            resource,
+            self.identity.user,
+            crate::datalake::Access::Read,
+        )
+    }
+
+    fn can_read(&self, resource: &str) -> bool {
+        self.check_read(resource).is_ok()
+    }
+
+    /// Is this provenance node (a `name:version` file-set id) readable?
+    fn node_readable(&self, node: &str) -> bool {
+        self.can_read(&format!("fileset:{}", fileset_name_of(node)))
+    }
+}
+
+impl AcaiApi for Client {
+    fn upload(&self, files: &[(&str, &[u8])]) -> Result<Vec<FileEntry>> {
+        Ok(self
+            .upload_files(files)?
+            .into_iter()
+            .map(|(path, version)| FileEntry { path, version })
+            .collect())
+    }
+
+    fn fetch(&self, path: &str, version: Option<Version>) -> Result<Vec<u8>> {
+        self.download(path, version)
+    }
+
+    fn files(&self, prefix: &str, page: &PageReq) -> Result<Page<FileEntry>> {
+        let page = page.checked()?;
+        let mut entries: Vec<FileEntry> = self
+            .list_files(prefix)
+            .into_iter()
+            .map(|(path, version)| FileEntry { path, version })
+            .collect();
+        entries.sort_by(|a, b| a.path.cmp(&b.path));
+        Ok(cut_page(entries, &page, |e| e.path.clone()))
+    }
+
+    fn file_versions(&self, path: &str, page: &PageReq) -> Result<Page<Version>> {
+        self.acai.datalake.acl.check(
+            self.identity.project,
+            &format!("file:{path}"),
+            self.identity.user,
+            crate::datalake::Access::Read,
+        )?;
+        let page = page.checked()?;
+        let mut versions = self.acai.datalake.storage.versions(self.identity.project, path);
+        if versions.is_empty() {
+            return Err(AcaiError::not_found(format!("file {path}")));
+        }
+        versions.sort_unstable();
+        Ok(cut_page(versions, &page, |v| num_cursor(*v as u64)))
+    }
+
+    fn make_file_set(&self, name: &str, specs: &[&str]) -> Result<Version> {
+        self.create_file_set(name, specs)
+    }
+
+    fn file_sets(&self, page: &PageReq) -> Result<Page<FileEntry>> {
+        let page = page.checked()?;
+        let mut entries: Vec<FileEntry> = self
+            .list_file_sets()
+            .into_iter()
+            .map(|(path, version)| FileEntry { path, version })
+            .collect();
+        entries.sort_by(|a, b| a.path.cmp(&b.path));
+        Ok(cut_page(entries, &page, |e| e.path.clone()))
+    }
+
+    fn metadata_doc(&self, kind: ArtifactKind, id: &str) -> Result<Json> {
+        // same ACL read check download enforces — metadata must not
+        // leak what the data path refuses
+        if let Some(resource) = read_guard(kind, id) {
+            self.check_read(&resource)?;
+        }
+        self.acai
+            .datalake
+            .metadata
+            .get(self.identity.project, kind, id)
+            .map(|doc| (*doc).clone())
+            .ok_or_else(|| AcaiError::not_found(id.to_string()))
+    }
+
+    fn metadata_query(
+        &self,
+        kind: ArtifactKind,
+        clauses: &[Clause],
+    ) -> Result<Vec<(String, Json)>> {
+        let hits = self.query(kind, clauses)?;
+        let hits = if matches!(kind, ArtifactKind::Job) {
+            hits // jobs are not ACL-guarded
+        } else {
+            self.acai.datalake.acl.retain_readable(
+                self.identity.project,
+                self.identity.user,
+                hits,
+                |(id, _)| read_guard(kind, id).expect("non-job kinds are guarded"),
+            )
+        };
+        Ok(hits
+            .into_iter()
+            .map(|(id, doc)| (id, (*doc).clone()))
+            .collect())
+    }
+
+    fn tag_artifact(
+        &self,
+        kind: ArtifactKind,
+        id: &str,
+        fields: &[(String, Json)],
+    ) -> Result<()> {
+        crate::api::dto::validate_tags(fields)?;
+        self.tag(kind, id, fields);
+        Ok(())
+    }
+
+    fn provenance(&self) -> Result<(Vec<String>, Vec<Edge>)> {
+        // the graph is project-wide; drop nodes (and edges touching
+        // them) the caller has no read access to, so private file sets
+        // cannot be enumerated through provenance
+        let (nodes, edges) = self.provenance_graph();
+        let nodes = self.acai.datalake.acl.retain_readable(
+            self.identity.project,
+            self.identity.user,
+            nodes,
+            |n| format!("fileset:{}", fileset_name_of(n)),
+        );
+        let edges = {
+            let readable: std::collections::HashSet<&str> =
+                nodes.iter().map(|n| n.as_str()).collect();
+            edges
+                .into_iter()
+                .filter(|e| {
+                    readable.contains(e.from.as_str()) && readable.contains(e.to.as_str())
+                })
+                .collect()
+        };
+        Ok((nodes, edges))
+    }
+
+    fn trace(&self, fileset: &str, version: Version, dir: TraceDir) -> Result<Vec<Edge>> {
+        self.check_read(&format!("fileset:{fileset}"))?;
+        let edges = match dir {
+            TraceDir::Forward => self.trace_forward(fileset, version),
+            TraceDir::Backward => self.trace_backward(fileset, version),
+        };
+        Ok(edges
+            .into_iter()
+            .filter(|e| self.node_readable(&e.from) && self.node_readable(&e.to))
+            .collect())
+    }
+
+    fn lineage_of(&self, fileset: &str, version: Version) -> Result<Vec<String>> {
+        self.check_read(&format!("fileset:{fileset}"))?;
+        let ancestors = self.lineage(fileset, version);
+        Ok(self.acai.datalake.acl.retain_readable(
+            self.identity.project,
+            self.identity.user,
+            ancestors,
+            |n| format!("fileset:{}", fileset_name_of(n)),
+        ))
+    }
+
+    fn submit_job(&self, request: &JobRequest) -> Result<JobId> {
+        self.submit(request.clone())
+    }
+
+    fn job_status(&self, id: JobId) -> Result<JobStatus> {
+        let record = self.acai.engine.registry.get(id)?;
+        // never leak another project's jobs — same 404 as a missing id
+        if record.spec.project != self.identity.project {
+            return Err(AcaiError::not_found(format!("{id}")));
+        }
+        Ok(JobStatus::from_record(&record))
+    }
+
+    fn jobs(&self, page: &PageReq) -> Result<Page<JobStatus>> {
+        let page = page.checked()?;
+        // registry.list is submission-ordered (ascending ids)
+        let records = self.acai.engine.registry.list(self.identity.project, None);
+        let statuses: Vec<JobStatus> = records.iter().map(JobStatus::from_record).collect();
+        Ok(cut_page(statuses, &page, |s| num_cursor(s.id.raw())))
+    }
+
+    fn job_logs(&self, id: JobId, offset: usize) -> Result<LogChunk> {
+        self.job_status(id)?; // existence + project scoping
+        let lines = self.acai.engine.logs.get(id);
+        let offset = offset.min(lines.len());
+        Ok(LogChunk {
+            next_offset: lines.len(),
+            lines: lines[offset..].to_vec(),
+        })
+    }
+
+    fn kill_job(&self, id: JobId) -> Result<()> {
+        self.job_status(id)?; // project scoping before mutating
+        self.kill(id)
+    }
+
+    fn await_job(&self, id: JobId) -> Result<JobStatus> {
+        let deadline = Instant::now() + AWAIT_JOB_TIMEOUT;
+        loop {
+            let status = self.job_status(id)?;
+            if status.terminal() {
+                return Ok(status);
+            }
+            // drive the engine forward ourselves (serializes with any
+            // background driver on the engine's drive lock)
+            self.acai.engine.run_until_idle();
+            let status = self.job_status(id)?;
+            if status.terminal() {
+                return Ok(status);
+            }
+            if Instant::now() > deadline {
+                return Err(AcaiError::Storage(format!("timed out waiting for {id}")));
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    fn profile_template(
+        &self,
+        name: &str,
+        template: &str,
+        input_fileset: &str,
+    ) -> Result<TemplateId> {
+        self.profile(name, template, input_fileset)
+    }
+
+    fn provision(
+        &self,
+        template_name: &str,
+        values: &[f64],
+        objective: Objective,
+    ) -> Result<ProvisionChoice> {
+        let decision = self.autoprovision(template_name, values, objective)?;
+        Ok(ProvisionChoice::from_decision(&decision))
     }
 }
 

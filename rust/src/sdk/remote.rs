@@ -1,0 +1,422 @@
+//! Remote SDK client: [`AcaiApi`] over the `/v1` wire protocol.
+//!
+//! Where [`super::Client`] calls services in-process, `RemoteClient`
+//! serializes every call through the DTO codecs of
+//! [`crate::api::dto`], sends it over a pooled keep-alive connection
+//! ([`crate::httpd::HttpConn`]), and decodes the response — including
+//! rehydrating typed [`AcaiError`]s from the uniform error envelope,
+//! so error handling is identical on both sides of the wire.
+
+use std::net::SocketAddr;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::api::dto::{
+    self, b64_decode, b64_encode, FileEntry, JobStatus, LogChunk, Page, PageReq,
+    ProvisionChoice, TraceDir,
+};
+use crate::api::router::percent_encode;
+use crate::autoprovision::Objective;
+use crate::datalake::metadata::ArtifactKind;
+use crate::docstore::Clause;
+use crate::error::{AcaiError, Result};
+use crate::graphstore::Edge;
+use crate::ids::{JobId, TemplateId, Version};
+use crate::json::Json;
+
+use super::{AcaiApi, JobRequest};
+
+/// How long [`AcaiApi::await_job`] polls before giving up.
+const AWAIT_JOB_TIMEOUT: Duration = Duration::from_secs(30);
+/// Delay between status polls.
+const POLL_DELAY: Duration = Duration::from_millis(2);
+/// Non-idempotent requests never reuse a pooled connection older than
+/// this (well under the server's 10s idle timeout), so they are never
+/// in the retry-ambiguous position of a stale socket.
+const POOLED_CONN_MAX_IDLE: Duration = Duration::from_secs(5);
+
+/// A token-authenticated client of a remote ACAI deployment.  Keeps
+/// one pooled keep-alive connection ([`crate::httpd::HttpConn`]) so
+/// status polling doesn't open a socket per request.
+pub struct RemoteClient {
+    addr: SocketAddr,
+    token: String,
+    conn: Mutex<Option<(crate::httpd::HttpConn, Instant)>>,
+}
+
+impl RemoteClient {
+    /// Build a client without touching the network.
+    pub fn new(addr: SocketAddr, token: impl Into<String>) -> RemoteClient {
+        RemoteClient {
+            addr,
+            token: token.into(),
+            conn: Mutex::new(None),
+        }
+    }
+
+    /// Build a client and validate the token with one round trip.
+    pub fn connect(addr: SocketAddr, token: impl Into<String>) -> Result<RemoteClient> {
+        let client = RemoteClient::new(addr, token);
+        client.call("GET", "/v1/jobs?limit=1", None)?;
+        Ok(client)
+    }
+
+    /// Bootstrap a project over the public endpoint; returns
+    /// `(project_id_string, admin RemoteClient)`.
+    pub fn create_project(
+        addr: SocketAddr,
+        root_token: &str,
+        name: &str,
+        admin: &str,
+    ) -> Result<(String, RemoteClient)> {
+        let anon = RemoteClient::new(addr, "");
+        let resp = anon.call(
+            "POST",
+            "/v1/projects",
+            Some(
+                &Json::obj()
+                    .field("root_token", root_token)
+                    .field("name", name)
+                    .field("admin", admin)
+                    .build(),
+            ),
+        )?;
+        let project = resp
+            .get("project")
+            .and_then(Json::as_str)
+            .ok_or_else(|| AcaiError::Json("missing project in response".into()))?
+            .to_string();
+        let token = resp
+            .get("admin_token")
+            .and_then(Json::as_str)
+            .ok_or_else(|| AcaiError::Json("missing admin_token in response".into()))?
+            .to_string();
+        Ok((project, RemoteClient::new(addr, token)))
+    }
+
+    /// One exchange over the pooled keep-alive connection.
+    ///
+    /// Retry policy: only idempotent GETs are re-sent after an `Io`
+    /// failure on a reused connection (the stale-idle case).  A POST is
+    /// never retried — re-sending one whose connection died after the
+    /// server consumed it would double-apply (e.g. submit a job twice).
+    /// Instead, POSTs simply refuse to ride a pooled connection that
+    /// has been idle long enough to be stale ([`POOLED_CONN_MAX_IDLE`]).
+    fn exchange(
+        &self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> Result<crate::httpd::Response> {
+        let idempotent = method == "GET";
+        let mut slot = self.conn.lock().unwrap();
+        if let Some((mut conn, last_used)) = slot.take() {
+            if idempotent || last_used.elapsed() < POOLED_CONN_MAX_IDLE {
+                match conn.request(method, path, headers, body) {
+                    Ok(resp) => {
+                        *slot = Some((conn, Instant::now()));
+                        return Ok(resp);
+                    }
+                    // stale reused socket on a GET: reconnect + retry below
+                    Err(AcaiError::Io(_)) if idempotent => {}
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        let mut conn = crate::httpd::HttpConn::connect(self.addr)?;
+        let resp = conn.request(method, path, headers, body)?;
+        *slot = Some((conn, Instant::now()));
+        Ok(resp)
+    }
+
+    /// One HTTP round trip; decodes the error envelope into a typed
+    /// [`AcaiError`] on any >= 400 status.
+    fn call(&self, method: &str, path: &str, body: Option<&Json>) -> Result<Json> {
+        let payload = body.map(|b| b.encode()).unwrap_or_default();
+        let mut headers: Vec<(&str, &str)> = vec![("x-acai-token", self.token.as_str())];
+        if body.is_some() {
+            headers.push(("content-type", "application/json"));
+        }
+        let resp = self.exchange(method, path, &headers, payload.as_bytes())?;
+        let text = String::from_utf8_lossy(&resp.body).to_string();
+        let parsed = if text.trim().is_empty() {
+            Json::Null
+        } else {
+            crate::json::parse(&text)?
+        };
+        if resp.status >= 400 {
+            let envelope = parsed.get("error");
+            let code = envelope
+                .and_then(|e| e.get("code"))
+                .and_then(Json::as_str)
+                .unwrap_or("storage");
+            let message = envelope
+                .and_then(|e| e.get("message"))
+                .and_then(Json::as_str)
+                .unwrap_or("remote call failed without an envelope");
+            return Err(AcaiError::from_code(code, message));
+        }
+        Ok(parsed)
+    }
+
+    fn get(&self, path: &str) -> Result<Json> {
+        self.call("GET", path, None)
+    }
+
+    fn post(&self, path: &str, body: &Json) -> Result<Json> {
+        self.call("POST", path, Some(body))
+    }
+}
+
+/// Append `?limit=&after=` to a path (with `&` if it already has a
+/// query).
+fn with_page(path: &str, page: &PageReq) -> String {
+    let sep = if path.contains('?') { '&' } else { '?' };
+    let mut out = format!("{path}{sep}limit={}", page.limit);
+    if let Some(after) = &page.after {
+        out.push_str(&format!("&after={}", percent_encode(after)));
+    }
+    out
+}
+
+impl AcaiApi for RemoteClient {
+    fn upload(&self, files: &[(&str, &[u8])]) -> Result<Vec<FileEntry>> {
+        let items: Vec<Json> = files
+            .iter()
+            .map(|(path, bytes)| {
+                Json::obj()
+                    .field("path", *path)
+                    .field("content_b64", b64_encode(bytes))
+                    .build()
+            })
+            .collect();
+        let resp = self.post(
+            "/v1/files",
+            &Json::obj().field("files", Json::Arr(items)).build(),
+        )?;
+        dto::arr_field(dto::as_object(&resp)?, "files")?
+            .iter()
+            .map(FileEntry::from_json)
+            .collect()
+    }
+
+    fn fetch(&self, path: &str, version: Option<Version>) -> Result<Vec<u8>> {
+        let mut url = format!("/v1/files/{}", percent_encode(path));
+        if let Some(v) = version {
+            url.push_str(&format!("?version={v}"));
+        }
+        let resp = self.get(&url)?;
+        b64_decode(&dto::str_field(dto::as_object(&resp)?, "content_b64")?)
+    }
+
+    fn files(&self, prefix: &str, page: &PageReq) -> Result<Page<FileEntry>> {
+        let path = with_page(
+            &format!("/v1/files?prefix={}", percent_encode(prefix)),
+            page,
+        );
+        dto::page_from_json(&self.get(&path)?, FileEntry::from_json)
+    }
+
+    fn file_versions(&self, path: &str, page: &PageReq) -> Result<Page<Version>> {
+        let url = with_page(&format!("/v1/files/{}/versions", percent_encode(path)), page);
+        dto::page_from_json(&self.get(&url)?, |v| {
+            v.as_u64()
+                .and_then(|n| Version::try_from(n).ok())
+                .ok_or_else(|| AcaiError::Json("version items must be u32 numbers".into()))
+        })
+    }
+
+    fn make_file_set(&self, name: &str, specs: &[&str]) -> Result<Version> {
+        let resp = self.post(
+            "/v1/filesets",
+            &Json::obj()
+                .field("name", name)
+                .field(
+                    "specs",
+                    Json::Arr(specs.iter().map(|s| Json::from(*s)).collect()),
+                )
+                .build(),
+        )?;
+        dto::u32_field(dto::as_object(&resp)?, "version")
+    }
+
+    fn file_sets(&self, page: &PageReq) -> Result<Page<FileEntry>> {
+        dto::page_from_json(&self.get(&with_page("/v1/filesets", page))?, FileEntry::from_json)
+    }
+
+    fn metadata_doc(&self, kind: ArtifactKind, id: &str) -> Result<Json> {
+        self.get(&format!(
+            "/v1/metadata/{}/{}",
+            dto::kind_to_str(kind),
+            percent_encode(id)
+        ))
+    }
+
+    fn metadata_query(
+        &self,
+        kind: ArtifactKind,
+        clauses: &[Clause],
+    ) -> Result<Vec<(String, Json)>> {
+        let resp = self.post(
+            &format!("/v1/metadata/{}/query", dto::kind_to_str(kind)),
+            &Json::obj()
+                .field(
+                    "clauses",
+                    Json::Arr(clauses.iter().map(dto::clause_to_json).collect()),
+                )
+                .build(),
+        )?;
+        dto::arr_field(dto::as_object(&resp)?, "hits")?
+            .iter()
+            .map(|hit| {
+                let obj = dto::as_object(hit)?;
+                let id = dto::str_field(obj, "id")?;
+                let doc = obj
+                    .get("doc")
+                    .cloned()
+                    .ok_or_else(|| AcaiError::Json("hit missing doc".into()))?;
+                Ok((id, doc))
+            })
+            .collect()
+    }
+
+    fn tag_artifact(
+        &self,
+        kind: ArtifactKind,
+        id: &str,
+        fields: &[(String, Json)],
+    ) -> Result<()> {
+        let mut obj = crate::json::JsonObject::new();
+        for (k, v) in fields {
+            obj.set(k.clone(), v.clone());
+        }
+        self.post(
+            &format!(
+                "/v1/metadata/{}/{}/tags",
+                dto::kind_to_str(kind),
+                percent_encode(id)
+            ),
+            &Json::obj().field("fields", Json::Obj(obj)).build(),
+        )?;
+        Ok(())
+    }
+
+    fn provenance(&self) -> Result<(Vec<String>, Vec<Edge>)> {
+        let resp = self.get("/v1/provenance")?;
+        let obj = dto::as_object(&resp)?;
+        let nodes = dto::arr_field(obj, "nodes")?
+            .iter()
+            .map(|n| {
+                n.as_str()
+                    .map(String::from)
+                    .ok_or_else(|| AcaiError::Json("nodes must be strings".into()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let edges = dto::arr_field(obj, "edges")?
+            .iter()
+            .map(dto::edge_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok((nodes, edges))
+    }
+
+    fn trace(&self, fileset: &str, version: Version, dir: TraceDir) -> Result<Vec<Edge>> {
+        let resp = self.get(&format!(
+            "/v1/filesets/{}/trace?version={version}&dir={}",
+            percent_encode(fileset),
+            dir.as_str()
+        ))?;
+        dto::arr_field(dto::as_object(&resp)?, "edges")?
+            .iter()
+            .map(dto::edge_from_json)
+            .collect()
+    }
+
+    fn lineage_of(&self, fileset: &str, version: Version) -> Result<Vec<String>> {
+        let resp = self.get(&format!(
+            "/v1/filesets/{}/lineage?version={version}",
+            percent_encode(fileset)
+        ))?;
+        dto::arr_field(dto::as_object(&resp)?, "ancestors")?
+            .iter()
+            .map(|n| {
+                n.as_str()
+                    .map(String::from)
+                    .ok_or_else(|| AcaiError::Json("ancestors must be strings".into()))
+            })
+            .collect()
+    }
+
+    fn submit_job(&self, request: &JobRequest) -> Result<JobId> {
+        let resp = self.post("/v1/jobs", &dto::job_request_to_json(request))?;
+        dto::str_field(dto::as_object(&resp)?, "job")?.parse()
+    }
+
+    fn job_status(&self, id: JobId) -> Result<JobStatus> {
+        JobStatus::from_json(&self.get(&format!("/v1/jobs/{id}"))?)
+    }
+
+    fn jobs(&self, page: &PageReq) -> Result<Page<JobStatus>> {
+        dto::page_from_json(&self.get(&with_page("/v1/jobs", page))?, JobStatus::from_json)
+    }
+
+    fn job_logs(&self, id: JobId, offset: usize) -> Result<LogChunk> {
+        LogChunk::from_json(&self.get(&format!("/v1/jobs/{id}/logs?offset={offset}"))?)
+    }
+
+    fn kill_job(&self, id: JobId) -> Result<()> {
+        self.post(&format!("/v1/jobs/{id}/kill"), &Json::obj().build())?;
+        Ok(())
+    }
+
+    fn await_job(&self, id: JobId) -> Result<JobStatus> {
+        let deadline = Instant::now() + AWAIT_JOB_TIMEOUT;
+        loop {
+            let status = self.job_status(id)?;
+            if status.terminal() {
+                return Ok(status);
+            }
+            if Instant::now() > deadline {
+                return Err(AcaiError::Storage(format!("timed out waiting for {id}")));
+            }
+            std::thread::sleep(POLL_DELAY);
+        }
+    }
+
+    fn profile_template(
+        &self,
+        name: &str,
+        template: &str,
+        input_fileset: &str,
+    ) -> Result<TemplateId> {
+        let resp = self.post(
+            "/v1/profiles",
+            &Json::obj()
+                .field("name", name)
+                .field("template", template)
+                .field("input_fileset", input_fileset)
+                .build(),
+        )?;
+        dto::str_field(dto::as_object(&resp)?, "template")?.parse()
+    }
+
+    fn provision(
+        &self,
+        template_name: &str,
+        values: &[f64],
+        objective: Objective,
+    ) -> Result<ProvisionChoice> {
+        let resp = self.post(
+            "/v1/autoprovision",
+            &Json::obj()
+                .field("template_name", template_name)
+                .field(
+                    "values",
+                    Json::Arr(values.iter().map(|v| Json::from(*v)).collect()),
+                )
+                .field("objective", dto::objective_to_json(&objective))
+                .build(),
+        )?;
+        ProvisionChoice::from_json(&resp)
+    }
+}

@@ -1,0 +1,256 @@
+//! API conformance: the in-process [`Client`] and the wire
+//! [`RemoteClient`] implement the same [`AcaiApi`] trait and must pass
+//! the **same** behavioral suite — upload/download, file sets,
+//! pagination, the async job lifecycle with incremental logs,
+//! metadata, provenance, profiling/provisioning, and typed error
+//! statuses.  Running the suite over HTTP is what proves every DTO
+//! codec round-trips.
+
+use std::sync::Arc;
+
+use acai::api::dto::{PageReq, TraceDir};
+use acai::api::make_handler;
+use acai::autoprovision::Objective;
+use acai::cluster::ResourceConfig;
+use acai::datalake::metadata::ArtifactKind;
+use acai::docstore::Clause;
+use acai::httpd::Server;
+use acai::ids::JobId;
+use acai::json::Json;
+use acai::sdk::{AcaiApi, Client, JobRequest, RemoteClient};
+use acai::Acai;
+
+fn page(limit: usize, after: Option<String>) -> PageReq {
+    PageReq { limit, after }
+}
+
+fn job_request(name: &str, input: &str, output: &str) -> JobRequest {
+    JobRequest {
+        name: name.into(),
+        command: "python train_mnist.py --epoch 2".into(),
+        input_fileset: input.into(),
+        output_fileset: output.into(),
+        resources: ResourceConfig::new(1.0, 1024),
+    }
+}
+
+/// The shared behavioral suite.  Every assertion here holds for both
+/// clients; `api` is the only platform handle the suite touches.
+fn conformance_suite(api: &dyn AcaiApi) {
+    // ---- upload / download round trip ----
+    let uploaded = api
+        .upload(&[("/data/a.bin", b"alpha"), ("/data/b.bin", b"beta")])
+        .unwrap();
+    assert_eq!(uploaded.len(), 2);
+    assert!(uploaded.iter().all(|e| e.version == 1));
+    assert_eq!(api.fetch("/data/a.bin", None).unwrap(), b"alpha");
+    assert_eq!(api.fetch("/data/a.bin", Some(1)).unwrap(), b"alpha");
+
+    // second version of a path
+    api.upload(&[("/data/a.bin", b"alpha-2")]).unwrap();
+    assert_eq!(api.fetch("/data/a.bin", None).unwrap(), b"alpha-2");
+    assert_eq!(api.fetch("/data/a.bin", Some(1)).unwrap(), b"alpha");
+    let versions = api.file_versions("/data/a.bin", &page(10, None)).unwrap();
+    assert_eq!(versions.items, vec![1, 2]);
+    assert!(versions.next.is_none());
+
+    // ---- file listing with cursor pagination ----
+    let p1 = api.files("/data", &page(1, None)).unwrap();
+    assert_eq!(p1.items.len(), 1);
+    assert_eq!(p1.items[0].path, "/data/a.bin");
+    assert_eq!(p1.items[0].version, 2);
+    let cursor = p1.next.clone().expect("more pages");
+    let p2 = api.files("/data", &page(10, Some(cursor))).unwrap();
+    assert_eq!(p2.items.len(), 1);
+    assert_eq!(p2.items[0].path, "/data/b.bin");
+    assert!(p2.next.is_none());
+
+    // ---- file sets ----
+    let v = api.make_file_set("corpus", &["/data/a.bin", "/data/b.bin"]).unwrap();
+    assert_eq!(v, 1);
+    let sets = api.file_sets(&page(10, None)).unwrap();
+    assert_eq!(sets.items.len(), 1);
+    assert_eq!(sets.items[0].path, "corpus");
+
+    // ---- async job lifecycle ----
+    let job = api.submit_job(&job_request("train", "corpus", "model")).unwrap();
+    let status = api.await_job(job).unwrap();
+    assert_eq!(status.state, "finished");
+    assert_eq!(status.id, job);
+    assert!(status.runtime_secs.unwrap() > 0.0);
+    assert!(status.cost.unwrap() > 0.0);
+    assert_eq!(status.output_version, Some(1));
+
+    // incremental log streaming
+    let chunk = api.job_logs(job, 0).unwrap();
+    assert!(!chunk.lines.is_empty());
+    assert_eq!(chunk.next_offset, chunk.lines.len());
+    let tail = api.job_logs(job, chunk.next_offset).unwrap();
+    assert!(tail.lines.is_empty());
+    assert_eq!(tail.next_offset, chunk.next_offset);
+    let mid = api.job_logs(job, 1).unwrap();
+    assert_eq!(mid.lines.len(), chunk.lines.len() - 1);
+
+    // job listing
+    let jobs = api.jobs(&page(10, None)).unwrap();
+    assert_eq!(jobs.items.len(), 1);
+    assert_eq!(jobs.items[0].id, job);
+
+    // ---- metadata ----
+    let doc = api.metadata_doc(ArtifactKind::Job, &job.to_string()).unwrap();
+    assert_eq!(doc.get("state").and_then(Json::as_str), Some("finished"));
+    let hits = api
+        .metadata_query(ArtifactKind::Job, &[Clause::eq("name", "train")])
+        .unwrap();
+    assert_eq!(hits.len(), 1);
+    assert_eq!(hits[0].0, job.to_string());
+
+    api.tag_artifact(
+        ArtifactKind::FileSet,
+        "corpus:1",
+        &[
+            ("model".to_string(), Json::from("BERT")),
+            ("precision".to_string(), Json::from(0.72)),
+        ],
+    )
+    .unwrap();
+    let hits = api
+        .metadata_query(
+            ArtifactKind::FileSet,
+            &[Clause::eq("model", "BERT"), Clause::gte("precision", 0.5)],
+        )
+        .unwrap();
+    assert_eq!(hits.len(), 1);
+    assert_eq!(hits[0].0, "corpus:1");
+
+    // tag validation is part of the shared contract: non-scalar values
+    // and empty field lists are 400 on BOTH clients
+    assert_eq!(
+        api.tag_artifact(
+            ArtifactKind::FileSet,
+            "corpus:1",
+            &[("runs".to_string(), Json::Arr(vec![Json::from(1u64)]))],
+        )
+        .unwrap_err()
+        .status(),
+        400
+    );
+    assert_eq!(
+        api.tag_artifact(ArtifactKind::FileSet, "corpus:1", &[]).unwrap_err().status(),
+        400
+    );
+
+    // ---- provenance ----
+    let (nodes, edges) = api.provenance().unwrap();
+    assert!(nodes.contains(&"corpus:1".to_string()));
+    assert!(nodes.contains(&"model:1".to_string()));
+    assert!(edges.iter().any(|e| e.kind == "job_execution"));
+    let back = api.trace("model", 1, TraceDir::Backward).unwrap();
+    assert_eq!(back[0].from, "corpus:1");
+    let fwd = api.trace("corpus", 1, TraceDir::Forward).unwrap();
+    assert!(fwd.iter().any(|e| e.to == "model:1"));
+    let lineage = api.lineage_of("model", 1).unwrap();
+    assert!(lineage.contains(&"corpus:1".to_string()));
+
+    // ---- profiler + auto-provisioner ----
+    let template = api
+        .profile_template("mnist", "python train_mnist.py --epoch {1,2,3}", "corpus")
+        .unwrap();
+    assert!(template.raw() >= 1);
+    let choice = api
+        .provision("mnist", &[20.0], Objective::MinCost { max_runtime: 200.0 })
+        .unwrap();
+    assert!(choice.predicted_runtime <= 200.0);
+    assert!(choice.predicted_cost > 0.0);
+    assert!(choice.config.vcpus >= 0.5);
+
+    // ---- typed error statuses survive the boundary ----
+    // page invariants are shared: limit 0 is a 400 on both clients
+    assert_eq!(api.files("/", &page(0, None)).unwrap_err().status(), 400);
+    assert_eq!(api.jobs(&page(0, None)).unwrap_err().status(), 400);
+    assert_eq!(api.fetch("/nope.bin", None).unwrap_err().status(), 404);
+    assert_eq!(api.file_versions("/nope.bin", &page(10, None)).unwrap_err().status(), 404);
+    assert_eq!(api.job_status(JobId(99_999)).unwrap_err().status(), 404);
+    assert_eq!(api.job_logs(JobId(99_999), 0).unwrap_err().status(), 404);
+    // killing a finished job is a 409 conflict
+    assert_eq!(api.kill_job(job).unwrap_err().status(), 409);
+    // submitting against a missing input file set is a 404
+    assert_eq!(
+        api.submit_job(&job_request("bad", "ghost", "out")).unwrap_err().status(),
+        404
+    );
+    // a nameless output file set is a 400
+    assert_eq!(
+        api.submit_job(&job_request("bad", "corpus", "")).unwrap_err().status(),
+        400
+    );
+    // unknown profile template is a 404
+    assert_eq!(
+        api.provision("ghost", &[1.0], Objective::MinCost { max_runtime: 10.0 })
+            .unwrap_err()
+            .status(),
+        404
+    );
+}
+
+#[test]
+fn in_process_client_conforms() {
+    let acai = Arc::new(Acai::boot_default());
+    let root = acai.credentials.root_token().to_string();
+    let (_p, token) = acai.credentials.create_project(&root, "conf", "alice").unwrap();
+    let client = Client::connect(acai.clone(), &token).unwrap();
+    conformance_suite(&client);
+}
+
+#[test]
+fn remote_client_conforms() {
+    let acai = Arc::new(Acai::boot_default());
+    let root = acai.credentials.root_token().to_string();
+    let server = Server::serve(0, make_handler(acai.clone())).unwrap();
+    let (_project, remote) =
+        RemoteClient::create_project(server.addr(), &root, "conf-remote", "alice").unwrap();
+    conformance_suite(&remote);
+}
+
+#[test]
+fn remote_connect_validates_tokens() {
+    let acai = Arc::new(Acai::boot_default());
+    let root = acai.credentials.root_token().to_string();
+    let server = Server::serve(0, make_handler(acai.clone())).unwrap();
+    assert_eq!(
+        RemoteClient::connect(server.addr(), "forged").unwrap_err().status(),
+        401
+    );
+    let (_p, token) = acai.credentials.create_project(&root, "p", "u").unwrap();
+    assert!(RemoteClient::connect(server.addr(), token).is_ok());
+}
+
+#[test]
+fn remote_kill_interrupts_a_queued_job() {
+    // kill through the wire: submit a burst so at least the last jobs
+    // sit in the queue, then kill one before it can finish
+    let acai = Arc::new(Acai::boot_default());
+    let root = acai.credentials.root_token().to_string();
+    let server = Server::serve(0, make_handler(acai.clone())).unwrap();
+    let (_project, remote) =
+        RemoteClient::create_project(server.addr(), &root, "killer", "alice").unwrap();
+
+    let mut last = None;
+    for i in 0..4 {
+        let id = remote
+            .submit_job(&job_request(&format!("burst-{i}"), "", &format!("b{i}-out")))
+            .unwrap();
+        last = Some(id);
+    }
+    let id = last.unwrap();
+    // the job is either still live (kill succeeds -> killed) or already
+    // finished (kill conflicts with 409) — both prove typed errors and
+    // state transitions cross the wire
+    match remote.kill_job(id) {
+        Ok(()) => {
+            let status = remote.await_job(id).unwrap();
+            assert_eq!(status.state, "killed");
+        }
+        Err(e) => assert_eq!(e.status(), 409),
+    }
+}

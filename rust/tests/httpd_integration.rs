@@ -1,9 +1,16 @@
-//! REST edge over real sockets: the credential-server authenticate +
-//! redirect flow of paper §4.1/Figure 7 driven by an HTTP client.
+//! The `/v1` REST edge over real sockets: authenticate + route
+//! (paper §4.1/Figure 7), the async job lifecycle (202 + poll + log
+//! streaming), the uniform error envelope, and httpd robustness
+//! against malformed/hostile input.
 
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
+use acai::api::dto::b64_encode;
 use acai::api::make_handler;
+use acai::api::router::percent_encode;
 use acai::httpd::{get_json, post_json, request, Server};
 use acai::json::Json;
 use acai::Acai;
@@ -15,146 +22,483 @@ fn serve() -> (Arc<Acai>, Server, String) {
     (acai, server, root)
 }
 
-#[test]
-fn bootstrap_project_then_full_flow_over_http() {
-    let (_acai, server, root) = serve();
-    let addr = server.addr();
-
-    // 1. create a project (global admin)
+fn bootstrap(addr: std::net::SocketAddr, root: &str, name: &str) -> String {
     let resp = post_json(
         addr,
-        "/projects",
+        "/v1/projects",
         "",
         &Json::obj()
-            .field("root_token", root.as_str())
-            .field("name", "nlp")
+            .field("root_token", root)
+            .field("name", name)
             .field("admin", "alice")
             .build(),
     )
     .unwrap();
-    let token = resp.get("admin_token").and_then(Json::as_str).unwrap().to_string();
+    resp.get("admin_token")
+        .and_then(Json::as_str)
+        .unwrap()
+        .to_string()
+}
 
-    // 2. create a second user (project admin privilege)
+fn job_body(i: usize) -> Json {
+    Json::obj()
+        .field("name", format!("job-{i}"))
+        .field("command", "python train_mnist.py --epoch 1")
+        .field("output_fileset", format!("out-{i}"))
+        .field("vcpus", 0.5)
+        .field("mem_mb", 512u64)
+        .build()
+}
+
+/// Poll a job to a terminal state over HTTP.
+fn wait_terminal(addr: std::net::SocketAddr, token: &str, job: &str) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let v = get_json(addr, &format!("/v1/jobs/{job}"), token).unwrap();
+        let state = v.get("state").and_then(Json::as_str).unwrap().to_string();
+        if matches!(state.as_str(), "finished" | "failed" | "killed") {
+            return v;
+        }
+        assert!(Instant::now() < deadline, "job {job} never finished");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn bootstrap_project_then_full_flow_over_http() {
+    let (_acai, server, root) = serve();
+    let addr = server.addr();
+    let token = bootstrap(addr, &root, "nlp");
+
+    // project admin creates a second user
     let resp = post_json(
         addr,
-        "/users",
+        "/v1/users",
         &token,
         &Json::obj().field("name", "bob").build(),
     )
     .unwrap();
     assert!(resp.get("token").and_then(Json::as_str).is_some());
 
-    // 3. build a file set (requires data; upload through the data path
-    //    is presigned/direct — here we preload via a spec-less set error
-    //    first, then a real one after a job runs)
-    //    Submit a job with no input instead:
+    // upload data (base64 over the wire) + build a file set
     let resp = post_json(
         addr,
-        "/jobs",
+        "/v1/files",
         &token,
         &Json::obj()
-            .field("name", "http-train")
-            .field("command", "python train_mnist.py --epoch 2")
-            .field("input_fileset", "")
-            .field("output_fileset", "http-model")
-            .field("vcpus", 1.0)
-            .field("mem_mb", 1024u64)
+            .field(
+                "files",
+                Json::Arr(vec![Json::obj()
+                    .field("path", "/data/train.bin")
+                    .field("content_b64", b64_encode(b"train-data"))
+                    .build()]),
+            )
             .build(),
     )
     .unwrap();
-    assert_eq!(resp.get("state").and_then(Json::as_str), Some("finished"));
-    assert!(resp.get("runtime_secs").and_then(Json::as_f64).unwrap() > 0.0);
+    let uploaded = resp.get("files").and_then(Json::as_array).unwrap();
+    assert_eq!(uploaded[0].get("version").and_then(Json::as_u64), Some(1));
 
-    // 4. job listing + metadata over HTTP
-    let jobs = get_json(addr, "/jobs", &token).unwrap();
-    assert_eq!(jobs.as_array().unwrap().len(), 1);
-    let job_id = jobs.at(0).unwrap().get("job").unwrap().as_str().unwrap().to_string();
-    let meta = get_json(addr, &format!("/metadata?kind=jobs&id={job_id}"), &token).unwrap();
+    post_json(
+        addr,
+        "/v1/filesets",
+        &token,
+        &Json::obj()
+            .field("name", "corpus")
+            .field("specs", Json::Arr(vec![Json::from("/data/train.bin")]))
+            .build(),
+    )
+    .unwrap();
+
+    // async submit: 202, then poll to completion
+    let body = Json::obj()
+        .field("name", "http-train")
+        .field("command", "python train_mnist.py --epoch 2")
+        .field("input_fileset", "corpus")
+        .field("output_fileset", "model")
+        .field("vcpus", 1.0)
+        .field("mem_mb", 1024u64)
+        .build();
+    let resp = request(
+        addr,
+        "POST",
+        "/v1/jobs",
+        &[("x-acai-token", token.as_str()), ("content-type", "application/json")],
+        body.encode().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 202, "{}", String::from_utf8_lossy(&resp.body));
+    let v = acai::json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    let job = v.get("job").and_then(Json::as_str).unwrap().to_string();
+    let done = wait_terminal(addr, &token, &job);
+    assert_eq!(done.get("state").and_then(Json::as_str), Some("finished"));
+    assert!(done.get("runtime_secs").and_then(Json::as_f64).unwrap() > 0.0);
+
+    // paginated job listing
+    let jobs = get_json(addr, "/v1/jobs", &token).unwrap();
+    assert_eq!(jobs.get("items").and_then(Json::as_array).unwrap().len(), 1);
+
+    // metadata by strict kind
+    let meta = get_json(addr, &format!("/v1/metadata/jobs/{job}"), &token).unwrap();
     assert_eq!(meta.get("state").and_then(Json::as_str), Some("finished"));
 
-    // 5. provenance graph over HTTP
-    let graph = get_json(addr, "/provenance", &token).unwrap();
+    // provenance graph records the output file set
+    let graph = get_json(addr, "/v1/provenance", &token).unwrap();
     let nodes = graph.get("nodes").and_then(Json::as_array).unwrap();
-    assert!(nodes.iter().any(|n| n.as_str() == Some("http-model:1")));
+    assert!(nodes.iter().any(|n| n.as_str() == Some("model:1")));
+
+    // download a produced file through the percent-encoded path route
+    let file = get_json(
+        addr,
+        &format!("/v1/files/{}", percent_encode("/model/mlp.bin")),
+        &token,
+    )
+    .unwrap();
+    assert!(!file.get("content_b64").and_then(Json::as_str).unwrap().is_empty());
+
+    // versions listing of the uploaded file
+    let versions = get_json(
+        addr,
+        &format!("/v1/files/{}/versions", percent_encode("/data/train.bin")),
+        &token,
+    )
+    .unwrap();
+    assert_eq!(
+        versions.get("items").and_then(Json::as_array).unwrap().len(),
+        1
+    );
+
+    // per-route metrics were collected
+    let metrics = get_json(addr, "/v1/metrics", &token).unwrap();
+    let routes = metrics.get("routes").and_then(Json::as_array).unwrap();
+    assert!(routes
+        .iter()
+        .any(|r| r.get("route").and_then(Json::as_str) == Some("POST /v1/jobs")));
 }
 
 #[test]
-fn requests_without_token_are_401() {
-    let (_acai, server, _root) = serve();
-    let resp = request(server.addr(), "GET", "/jobs", &[], b"").unwrap();
+fn concurrent_submissions_return_202_and_stream_logs_incrementally() {
+    let (_acai, server, root) = serve();
+    let addr = server.addr();
+    let token = bootstrap(addr, &root, "bulk");
+
+    // N jobs submitted concurrently over HTTP; every response is an
+    // immediate 202 (the engine is never driven in-request)
+    const N: usize = 6;
+    let handles: Vec<_> = (0..N)
+        .map(|i| {
+            let token = token.clone();
+            std::thread::spawn(move || {
+                let resp = request(
+                    addr,
+                    "POST",
+                    "/v1/jobs",
+                    &[
+                        ("x-acai-token", token.as_str()),
+                        ("content-type", "application/json"),
+                    ],
+                    job_body(i).encode().as_bytes(),
+                )
+                .unwrap();
+                assert_eq!(resp.status, 202, "{}", String::from_utf8_lossy(&resp.body));
+                let v = acai::json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+                v.get("job").and_then(Json::as_str).unwrap().to_string()
+            })
+        })
+        .collect();
+    let ids: Vec<String> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // poll every job to completion, then read logs incrementally
+    for job in &ids {
+        let done = wait_terminal(addr, &token, job);
+        assert_eq!(done.get("state").and_then(Json::as_str), Some("finished"));
+
+        let chunk = get_json(addr, &format!("/v1/jobs/{job}/logs?offset=0"), &token).unwrap();
+        let lines = chunk.get("lines").and_then(Json::as_array).unwrap();
+        assert!(!lines.is_empty(), "{job} has no logs");
+        let next = chunk.get("next_offset").and_then(Json::as_u64).unwrap();
+        assert_eq!(next as usize, lines.len());
+
+        // a second fetch from the cursor returns only what is new (nothing)
+        let tail = get_json(
+            addr,
+            &format!("/v1/jobs/{job}/logs?offset={next}"),
+            &token,
+        )
+        .unwrap();
+        assert!(tail.get("lines").and_then(Json::as_array).unwrap().is_empty());
+        // and a mid-stream offset returns the strict suffix
+        let mid = get_json(addr, &format!("/v1/jobs/{job}/logs?offset=1"), &token).unwrap();
+        assert_eq!(
+            mid.get("lines").and_then(Json::as_array).unwrap().len(),
+            lines.len() - 1
+        );
+    }
+
+    // pagination walks all N jobs in order
+    let mut seen = Vec::new();
+    let mut after = String::new();
+    loop {
+        let path = if after.is_empty() {
+            "/v1/jobs?limit=2".to_string()
+        } else {
+            format!("/v1/jobs?limit=2&after={after}")
+        };
+        let page = get_json(addr, &path, &token).unwrap();
+        for item in page.get("items").and_then(Json::as_array).unwrap() {
+            seen.push(item.get("job").and_then(Json::as_str).unwrap().to_string());
+        }
+        match page.get("next").and_then(Json::as_str) {
+            Some(cursor) => after = cursor.to_string(),
+            None => break,
+        }
+    }
+    assert_eq!(seen.len(), N);
+    let mut sorted = ids.clone();
+    sorted.sort_by_key(|s| s.trim_start_matches("job-").parse::<u64>().unwrap());
+    assert_eq!(seen, sorted);
+}
+
+#[test]
+fn error_envelope_is_uniform_with_correct_statuses() {
+    let (_acai, server, root) = serve();
+    let addr = server.addr();
+    let token = bootstrap(addr, &root, "errs");
+
+    let envelope = |resp: &acai::httpd::Response| -> (String, String) {
+        let v = acai::json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let e = v.get("error").expect("envelope").clone();
+        assert!(
+            e.get("request_id").and_then(Json::as_str).is_some(),
+            "missing request_id: {}",
+            v.encode()
+        );
+        (
+            e.get("code").and_then(Json::as_str).unwrap().to_string(),
+            e.get("message").and_then(Json::as_str).unwrap().to_string(),
+        )
+    };
+    let auth: [(&str, &str); 1] = [("x-acai-token", token.as_str())];
+
+    // 401: no token
+    let resp = request(addr, "GET", "/v1/jobs", &[], b"").unwrap();
     assert_eq!(resp.status, 401);
+    assert_eq!(envelope(&resp).0, "unauthorized");
+
+    // 401: forged token
+    let resp = request(addr, "GET", "/v1/jobs", &[("x-acai-token", "forged")], b"").unwrap();
+    assert_eq!(resp.status, 401);
+
+    // 403: wrong root token on bootstrap
+    let body = Json::obj()
+        .field("root_token", "wrong")
+        .field("name", "x")
+        .field("admin", "a")
+        .build();
+    let resp = request(addr, "POST", "/v1/projects", &[], body.encode().as_bytes()).unwrap();
+    assert_eq!(resp.status, 403);
+    assert_eq!(envelope(&resp).0, "forbidden");
+
+    // 404: unknown path
+    let resp = request(addr, "GET", "/v1/nope", &auth, b"").unwrap();
+    assert_eq!(resp.status, 404);
+    assert_eq!(envelope(&resp).0, "not_found");
+
+    // 404: unknown job id
+    let resp = request(addr, "GET", "/v1/jobs/job-999", &auth, b"").unwrap();
+    assert_eq!(resp.status, 404);
+
+    // 405: known path, wrong method — with an allow header
+    let resp = request(addr, "DELETE", "/v1/jobs", &auth, b"").unwrap();
+    assert_eq!(resp.status, 405);
+    assert_eq!(envelope(&resp).0, "method_not_allowed");
+    let allow = resp
+        .headers
+        .iter()
+        .find(|(k, _)| k == "allow")
+        .map(|(_, v)| v.as_str())
+        .unwrap();
+    assert!(allow.contains("GET") && allow.contains("POST"), "{allow}");
+
+    // 400: unknown metadata kind (the seed silently mapped this to Job)
+    let resp = request(addr, "GET", "/v1/metadata/experiments/job-1", &auth, b"").unwrap();
+    assert_eq!(resp.status, 400);
+    let (code, message) = envelope(&resp);
+    assert_eq!(code, "invalid");
+    assert!(message.contains("experiments"), "{message}");
+
+    // 400: unknown field in a DTO (no silent defaults)
+    let body = Json::obj()
+        .field("name", "j")
+        .field("command", "python t.py --epoch 1")
+        .field("output_fileset", "o")
+        .field("vcpus", 1.0)
+        .field("mem_mb", 512u64)
+        .field("vcpu_count", 4.0)
+        .build();
+    let resp = request(
+        addr,
+        "POST",
+        "/v1/jobs",
+        &[
+            ("x-acai-token", token.as_str()),
+            ("content-type", "application/json"),
+        ],
+        body.encode().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 400);
+    assert!(envelope(&resp).1.contains("vcpu_count"));
+
+    // 400: missing required field is an error, not a default
+    let resp = request(
+        addr,
+        "POST",
+        "/v1/jobs",
+        &[
+            ("x-acai-token", token.as_str()),
+            ("content-type", "application/json"),
+        ],
+        Json::obj().field("name", "j").build().encode().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 400);
+
+    // every response carries the x-request-id header
+    let resp = request(addr, "GET", "/v1/nope", &auth, b"").unwrap();
+    assert!(resp.headers.iter().any(|(k, _)| k == "x-request-id"));
 }
 
 #[test]
-fn requests_with_bad_token_are_401() {
-    let (_acai, server, _root) = serve();
+fn concurrent_clients_are_isolated_by_token() {
+    let (_acai, server, root) = serve();
+    let addr = server.addr();
+    let t1 = bootstrap(addr, &root, "a");
+    let t2 = bootstrap(addr, &root, "b");
+
+    let resp = post_json(addr, "/v1/jobs", &t1, &job_body(0)).unwrap();
+    let job = resp.get("job").and_then(Json::as_str).unwrap().to_string();
+    wait_terminal(addr, &t1, &job);
+
+    // project b sees no jobs — and cannot read project a's job by id
+    let jobs = get_json(addr, "/v1/jobs", &t2).unwrap();
+    assert!(jobs.get("items").and_then(Json::as_array).unwrap().is_empty());
     let resp = request(
-        server.addr(),
+        addr,
         "GET",
-        "/jobs",
-        &[("x-acai-token", "forged")],
+        &format!("/v1/jobs/{job}"),
+        &[("x-acai-token", t2.as_str())],
         b"",
     )
     .unwrap();
-    assert_eq!(resp.status, 401);
-}
-
-#[test]
-fn project_creation_with_wrong_root_is_403() {
-    let (_acai, server, _root) = serve();
-    let err = post_json(
-        server.addr(),
-        "/projects",
-        "",
-        &Json::obj()
-            .field("root_token", "wrong")
-            .field("name", "x")
-            .field("admin", "a")
-            .build(),
-    )
-    .unwrap_err();
-    assert!(err.to_string().contains("403"), "{err}");
-}
-
-#[test]
-fn unknown_route_is_404() {
-    let (acai, server, root) = serve();
-    let (_p, token) = acai.credentials.create_project(&root, "p", "u").unwrap();
+    assert_eq!(resp.status, 404);
     let resp = request(
-        server.addr(),
+        addr,
         "GET",
-        "/nope",
-        &[("x-acai-token", token.as_str())],
+        &format!("/v1/jobs/{job}/logs"),
+        &[("x-acai-token", t2.as_str())],
         b"",
     )
     .unwrap();
     assert_eq!(resp.status, 404);
 }
 
+// ---------------------------------------------------------------------
+// httpd robustness (satellite: malformed request line, oversized body,
+// missing content-length, concurrent keep-alive connections)
+// ---------------------------------------------------------------------
+
+/// Read one HTTP response off a raw socket; returns (status, body).
+fn read_raw_response(reader: &mut BufReader<TcpStream>) -> (u16, String) {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    let status: u16 = status_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        let h = h.trim_end().to_ascii_lowercase();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.strip_prefix("content-length:") {
+            len = v.trim().parse().unwrap();
+        }
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).unwrap();
+    (status, String::from_utf8_lossy(&body).to_string())
+}
+
 #[test]
-fn concurrent_clients_are_isolated_by_token() {
-    let (acai, server, root) = serve();
+fn malformed_request_line_is_400() {
+    let (_acai, server, _root) = serve();
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    stream.write_all(b"GARBAGE\r\n\r\n").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let (status, body) = read_raw_response(&mut reader);
+    assert_eq!(status, 400);
+    assert!(body.contains("\"error\""), "{body}");
+}
+
+#[test]
+fn oversized_body_is_rejected_without_reading_it() {
+    let (_acai, server, _root) = serve();
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    // claim a 33 MiB body (limit is 32 MiB) but send none of it: the
+    // server must answer 400 from the header alone
+    stream
+        .write_all(b"POST /v1/jobs HTTP/1.1\r\ncontent-length: 34603008\r\n\r\n")
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let (status, body) = read_raw_response(&mut reader);
+    assert_eq!(status, 400);
+    assert!(body.contains("too large"), "{body}");
+}
+
+#[test]
+fn missing_content_length_means_empty_body() {
+    let (_acai, server, root) = serve();
     let addr = server.addr();
-    let (_p1, t1) = acai.credentials.create_project(&root, "a", "u").unwrap();
-    let (_p2, t2) = acai.credentials.create_project(&root, "b", "u").unwrap();
-    let h1 = std::thread::spawn(move || {
-        post_json(
-            addr,
-            "/jobs",
-            &t1,
-            &Json::obj()
-                .field("name", "j1")
-                .field("command", "python train_mnist.py --epoch 1")
-                .field("input_fileset", "")
-                .field("output_fileset", "m1")
-                .field("vcpus", 0.5)
-                .field("mem_mb", 512u64)
-                .build(),
-        )
-        .unwrap()
-    });
-    h1.join().unwrap();
-    // project b sees no jobs
-    let jobs = get_json(addr, "/jobs", &t2).unwrap();
-    assert!(jobs.as_array().unwrap().is_empty());
+    let token = bootstrap(addr, &root, "nolen");
+    // POST with a body but no content-length: the body is not read, so
+    // the handler sees an empty (invalid JSON) payload -> 400, and the
+    // connection is NOT poisoned for the next request
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let req = format!(
+        "POST /v1/filesets HTTP/1.1\r\nx-acai-token: {token}\r\n\r\n"
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let (status, body) = read_raw_response(&mut reader);
+    assert_eq!(status, 400, "{body}");
+}
+
+#[test]
+fn concurrent_keep_alive_connections_serve_sequential_requests() {
+    let (_acai, server, _root) = serve();
+    let addr = server.addr();
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                for _ in 0..5 {
+                    stream
+                        .write_all(b"GET /v1/healthz HTTP/1.1\r\ncontent-length: 0\r\n\r\n")
+                        .unwrap();
+                    let (status, body) = read_raw_response(&mut reader);
+                    assert_eq!(status, 200);
+                    assert!(body.contains("ok"), "{body}");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
 }

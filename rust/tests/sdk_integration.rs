@@ -207,6 +207,57 @@ fn acl_protects_files_and_filesets_across_users() {
 }
 
 #[test]
+fn listing_respects_acls_like_download_does() {
+    // regression: list_files / list_file_sets used to skip the ACL read
+    // check, letting unauthorized users enumerate paths they could not
+    // download
+    let acai = Arc::new(Acai::boot_default());
+    let root = acai.credentials.root_token().to_string();
+    let (_p, alice_tok) = acai.credentials.create_project(&root, "nlp", "alice").unwrap();
+    let bob_tok = acai.credentials.create_user(&alice_tok, "bob").unwrap();
+    let alice = Client::connect(acai.clone(), &alice_tok).unwrap();
+    let bob = Client::connect(acai.clone(), &bob_tok).unwrap();
+
+    alice
+        .upload_files(&[("/data/secret.bin", b"x"), ("/data/open.bin", b"y")])
+        .unwrap();
+    alice
+        .protect_file("/data/secret.bin", acai::datalake::Mode::PRIVATE)
+        .unwrap();
+    alice.create_file_set("hidden", &["/data/secret.bin"]).unwrap();
+    alice.create_file_set("shared", &["/data/open.bin"]).unwrap();
+    alice
+        .protect_file_set("hidden", acai::datalake::Mode::PRIVATE)
+        .unwrap();
+
+    // bob cannot download the secret — so he must not list it either
+    assert_eq!(bob.download("/data/secret.bin", None).unwrap_err().status(), 403);
+    let listed: Vec<String> = bob.list_files("/").into_iter().map(|(p, _)| p).collect();
+    assert_eq!(listed, vec!["/data/open.bin".to_string()]);
+    let sets: Vec<String> = bob.list_file_sets().into_iter().map(|(n, _)| n).collect();
+    assert_eq!(sets, vec!["shared".to_string()]);
+
+    // the owner still sees everything
+    assert_eq!(alice.list_files("/").len(), 2);
+    assert_eq!(alice.list_file_sets().len(), 2);
+
+    // the leak must also be closed on the adjacent read surfaces:
+    // metadata documents and the provenance graph
+    use acai::sdk::AcaiApi;
+    assert_eq!(
+        bob.metadata_doc(ArtifactKind::FileSet, "hidden:1").unwrap_err().status(),
+        403
+    );
+    assert!(alice.metadata_doc(ArtifactKind::FileSet, "hidden:1").is_ok());
+    let (bob_nodes, _) = bob.provenance().unwrap();
+    assert!(bob_nodes.contains(&"shared:1".to_string()), "{bob_nodes:?}");
+    assert!(!bob_nodes.contains(&"hidden:1".to_string()), "{bob_nodes:?}");
+    assert_eq!(bob.trace("hidden", 1, acai::api::dto::TraceDir::Backward).unwrap_err().status(), 403);
+    let hits = bob.metadata_query(ArtifactKind::FileSet, &[]).unwrap();
+    assert!(hits.iter().all(|(id, _)| !id.starts_with("hidden:")), "{hits:?}");
+}
+
+#[test]
 fn pipeline_chains_stages_and_cache_serves_repeat_inputs() {
     // §7.2 pipelines + §7.1.2 inter-job cache, through the public API
     use acai::engine::pipeline::{Pipeline, Stage};
