@@ -1,0 +1,71 @@
+//! Perf: experiment-subsystem throughput — a 100-trial grid sweep
+//! through the in-process engine, submission → completion → best-trial
+//! selection.  Establishes the baseline for future scheduler work.
+
+mod common;
+
+use std::time::Instant;
+
+use acai::cluster::ResourceConfig;
+use acai::engine::{ExperimentSpec, MetricMode, SweepStrategy};
+use common::*;
+
+const TEMPLATE: &str = "python train_mnist.py \
+     --epoch {1,2,3,4,5,6,7,8,9,10} \
+     --learning-rate {0.05,0.1,0.15,0.2,0.25,0.3,0.35,0.4,0.45,0.5}";
+
+fn main() {
+    header(
+        "Perf: 100-trial sweep (experiment subsystem)",
+        "submission -> completion through the engine; trials/sec is the scheduler baseline",
+    );
+    let acai = platform(0.0);
+
+    let mut best_rate = 0.0f64;
+    for round in 0..3 {
+        let start = Instant::now();
+        let status = acai
+            .experiments
+            .create(
+                &acai.engine,
+                &acai.profiler,
+                &acai.provisioner,
+                P,
+                U,
+                ExperimentSpec {
+                    name: format!("bench-{round}"),
+                    template: TEMPLATE.into(),
+                    input_fileset: "mnist".into(),
+                    strategy: SweepStrategy::Grid,
+                    resources: ResourceConfig::new(0.5, 512),
+                    profile: None,
+                    objective: None,
+                },
+            )
+            .expect("create sweep");
+        let submitted = start.elapsed();
+        acai.engine.run_until_idle();
+        let done = acai
+            .experiments
+            .get(&acai.engine, P, status.id)
+            .expect("experiment status");
+        assert_eq!(done.finished, 100, "all trials must finish");
+        let best = acai
+            .experiments
+            .best(&acai.engine, P, status.id, "training_loss", MetricMode::Min)
+            .expect("best trial");
+        let total = start.elapsed();
+        let rate = 100.0 / total.as_secs_f64();
+        best_rate = best_rate.max(rate);
+        println!(
+            "round {round}: submit {:>6.1} ms, run {:>7.1} ms total, {:>7.1} trials/s (winner #{} loss {:.4})",
+            submitted.as_secs_f64() * 1e3,
+            total.as_secs_f64() * 1e3,
+            rate,
+            best.index,
+            best.metric("training_loss").unwrap_or(f64::NAN),
+        );
+    }
+    println!("best: {best_rate:.1} trials/s");
+    assert!(best_rate > 2.0, "sweep throughput collapsed: {best_rate} trials/s");
+}

@@ -1,0 +1,85 @@
+//! A 3×3 grid sweep through the experiment subsystem, end to end over
+//! the `/v1` wire protocol: boot a platform, serve it over HTTP, fan
+//! out nine trials with `POST /v1/experiments`, watch them complete
+//! under the scheduler quota, and pick the winner with
+//! `GET /v1/experiments/{id}/best?metric=training_loss&mode=min`.
+//!
+//! ```text
+//! cargo run --release --example sweep
+//! ```
+
+use std::sync::Arc;
+
+use acai::api::make_handler;
+use acai::cluster::ResourceConfig;
+use acai::engine::{ExperimentSpec, MetricMode, SweepStrategy};
+use acai::httpd::Server;
+use acai::sdk::{AcaiApi, RemoteClient};
+use acai::{Acai, PlatformConfig};
+
+fn main() -> acai::Result<()> {
+    // ---- a running deployment (normally `acai serve`) ----
+    let mut config = PlatformConfig::default();
+    let artifacts = PlatformConfig::default_artifacts_dir();
+    if artifacts.join("manifest.json").exists() {
+        config.artifacts_dir = Some(artifacts);
+    }
+    config.quota_k = 4; // paper §3.3.1: at most k concurrent jobs per user
+    let acai = Arc::new(Acai::boot(config)?);
+    let root = acai.credentials.root_token().to_string();
+    let server = Server::serve(0, make_handler(acai.clone()))?;
+    println!("serving /v1 on {}", server.addr());
+
+    // ---- everything below happens over real HTTP ----
+    let (_project, client) = RemoteClient::create_project(server.addr(), &root, "sweep", "bob")?;
+    client.upload(&[("/data/speech.bin", b"wsj frames" as &[u8])])?;
+    client.make_file_set("frames", &["/data/speech.bin"])?;
+
+    // 3 epochs × 3 learning rates = 9 trials, fanned out as one DAG
+    let exp = client.create_experiment(&ExperimentSpec {
+        name: "mlp-grid".into(),
+        template: "python train_mnist.py --epoch {2,4,8} --learning-rate {0.1,0.2,0.3}".into(),
+        input_fileset: "frames".into(),
+        strategy: SweepStrategy::Grid,
+        resources: ResourceConfig::new(2.0, 2048),
+        profile: None,
+        objective: None,
+    })?;
+    println!("submitted experiment {} with {} trials (quota k=4)", exp.id, exp.trials);
+
+    let done = client.await_experiment(exp.id)?;
+    println!("experiment {}: {} ({} finished, {} failed)", done.id, done.state, done.finished, done.failed);
+
+    // dashboard-style report
+    println!("\ntrial  args                      state      runtime      cost   final loss");
+    let trials = client.experiment_trials(exp.id, &Default::default())?;
+    for t in &trials.items {
+        let args: Vec<String> = t.args.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        println!(
+            "{:<6} {:<25} {:<9} {:>7.1}s  ${:<7.5} {:.4}",
+            t.index,
+            args.join(" "),
+            t.state,
+            t.runtime_secs.unwrap_or(0.0),
+            t.cost.unwrap_or(0.0),
+            t.metric("training_loss").unwrap_or(f64::NAN),
+        );
+    }
+
+    // best-trial selection replaces the spreadsheet
+    let best = client.best_trial(exp.id, "training_loss", MetricMode::Min)?;
+    println!(
+        "\nbest trial: #{} `{}` loss={:.4} model={}",
+        best.index,
+        best.command,
+        best.metric("training_loss").unwrap_or(f64::NAN),
+        best.output.as_deref().unwrap_or("?"),
+    );
+    // the winning model's full lineage, one provenance query away
+    if let Some(output) = &best.output {
+        let (name, version) = output.rsplit_once(':').unwrap();
+        let lineage = client.lineage_of(name, version.parse().unwrap())?;
+        println!("winner lineage: {lineage:?}");
+    }
+    Ok(())
+}

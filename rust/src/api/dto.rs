@@ -12,11 +12,15 @@ use crate::autoprovision::{Decision, Objective};
 use crate::cluster::ResourceConfig;
 use crate::datalake::metadata::ArtifactKind;
 use crate::docstore::{Clause, IndexKey};
-use crate::engine::JobRecord;
+use crate::engine::{
+    ExperimentSpec, ExperimentStatus, JobRecord, SweepStrategy, TrialStatus,
+};
 use crate::error::{AcaiError, Result};
-use crate::ids::{JobId, Version};
+use crate::ids::{ExperimentId, JobId, Version};
 use crate::json::{Json, JsonObject};
 use crate::sdk::JobRequest;
+
+pub use crate::engine::MetricMode;
 
 use super::router::Query;
 
@@ -599,6 +603,188 @@ pub fn clause_from_json(v: &Json) -> Result<Clause> {
 }
 
 // ---------------------------------------------------------------------
+// experiments (hyperparameter sweeps)
+// ---------------------------------------------------------------------
+
+/// Submission payload (`POST /v1/experiments`).  `strategy` is `grid`
+/// (no extra fields allowed) or `random` (requires `samples`, takes an
+/// optional `seed`); `profile` + `objective` opt into per-trial
+/// auto-provisioning and must come together.
+pub fn experiment_spec_from_json(v: &Json) -> Result<ExperimentSpec> {
+    let obj = as_object(v)?;
+    check_fields(
+        obj,
+        &[
+            "name", "template", "input_fileset", "strategy", "samples", "seed", "vcpus",
+            "mem_mb", "profile", "objective",
+        ],
+    )?;
+    let strategy = match str_field(obj, "strategy")?.as_str() {
+        "grid" => {
+            if obj.contains_key("samples") || obj.contains_key("seed") {
+                return Err(AcaiError::invalid(
+                    "grid strategy takes no \"samples\"/\"seed\"",
+                ));
+            }
+            SweepStrategy::Grid
+        }
+        "random" => SweepStrategy::Random {
+            samples: u64_field(obj, "samples")? as usize,
+            seed: match obj.get("seed") {
+                None | Some(Json::Null) => 0xACA1,
+                Some(_) => u64_field(obj, "seed")?,
+            },
+        },
+        other => {
+            return Err(AcaiError::invalid(format!(
+                "unknown strategy {other:?} (expected grid|random)"
+            )))
+        }
+    };
+    let objective = match obj.get("objective") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(objective_from_json(v)?),
+    };
+    Ok(ExperimentSpec {
+        name: str_field(obj, "name")?,
+        template: str_field(obj, "template")?,
+        input_fileset: opt_str_field(obj, "input_fileset")?.unwrap_or_default(),
+        strategy,
+        resources: ResourceConfig::new(f64_field(obj, "vcpus")?, u32_field(obj, "mem_mb")?),
+        profile: opt_str_field(obj, "profile")?,
+        objective,
+    })
+}
+
+pub fn experiment_spec_to_json(s: &ExperimentSpec) -> Json {
+    let mut b = Json::obj()
+        .field("name", s.name.as_str())
+        .field("template", s.template.as_str())
+        .field("input_fileset", s.input_fileset.as_str())
+        .field("strategy", s.strategy.as_str())
+        .field("vcpus", s.resources.vcpus)
+        .field("mem_mb", s.resources.mem_mb);
+    if let SweepStrategy::Random { samples, seed } = s.strategy {
+        b = b.field("samples", samples).field("seed", seed);
+    }
+    if let Some(p) = &s.profile {
+        b = b.field("profile", p.as_str());
+    }
+    if let Some(o) = &s.objective {
+        b = b.field("objective", objective_to_json(o));
+    }
+    b.build()
+}
+
+pub fn experiment_status_to_json(s: &ExperimentStatus) -> Json {
+    Json::obj()
+        .field("experiment", s.id.to_string())
+        .field("name", s.name.as_str())
+        .field("state", s.state.as_str())
+        .field("trials", s.trials)
+        .field("finished", s.finished)
+        .field("failed", s.failed)
+        .field("created_at", s.created_at)
+        .build()
+}
+
+pub fn experiment_status_from_json(v: &Json) -> Result<ExperimentStatus> {
+    let obj = as_object(v)?;
+    Ok(ExperimentStatus {
+        id: str_field(obj, "experiment")?.parse()?,
+        name: str_field(obj, "name")?,
+        state: str_field(obj, "state")?,
+        trials: u64_field(obj, "trials")? as usize,
+        finished: u64_field(obj, "finished")? as usize,
+        failed: u64_field(obj, "failed")? as usize,
+        created_at: f64_field(obj, "created_at")?,
+    })
+}
+
+fn f64_pairs_to_json(pairs: &[(String, f64)]) -> Json {
+    let mut obj = JsonObject::new();
+    for (k, v) in pairs {
+        obj.set(k.clone(), *v);
+    }
+    Json::Obj(obj)
+}
+
+fn f64_pairs_from_json(obj: &JsonObject, key: &str) -> Result<Vec<(String, f64)>> {
+    match obj.get(key) {
+        Some(Json::Obj(o)) => o
+            .iter()
+            .map(|(k, v)| {
+                v.as_f64().map(|n| (k.to_string(), n)).ok_or_else(|| {
+                    AcaiError::invalid(format!("field {key:?} values must be numbers"))
+                })
+            })
+            .collect(),
+        Some(_) => Err(AcaiError::invalid(format!("field {key:?} must be an object"))),
+        None => Err(AcaiError::invalid(format!("missing field {key:?}"))),
+    }
+}
+
+pub fn trial_status_to_json(t: &TrialStatus) -> Json {
+    let mut b = Json::obj()
+        .field("experiment", t.experiment.to_string())
+        .field("index", t.index)
+        .field("name", t.name.as_str())
+        .field("command", t.command.as_str())
+        .field("args", f64_pairs_to_json(&t.args))
+        .field("vcpus", t.resources.vcpus)
+        .field("mem_mb", t.resources.mem_mb)
+        .field("state", t.state.as_str())
+        .field("metrics", f64_pairs_to_json(&t.metrics));
+    if let Some(j) = t.job {
+        b = b.field("job", j.to_string());
+    }
+    if let Some(v) = t.predicted_runtime {
+        b = b.field("predicted_runtime", v);
+    }
+    if let Some(v) = t.predicted_cost {
+        b = b.field("predicted_cost", v);
+    }
+    if let Some(v) = t.runtime_secs {
+        b = b.field("runtime_secs", v);
+    }
+    if let Some(c) = t.cost {
+        b = b.field("cost", c);
+    }
+    if let Some(o) = &t.output {
+        b = b.field("output", o.as_str());
+    }
+    if let Some(e) = &t.error {
+        b = b.field("error", e.as_str());
+    }
+    b.build()
+}
+
+pub fn trial_status_from_json(v: &Json) -> Result<TrialStatus> {
+    let obj = as_object(v)?;
+    let job = match opt_str_field(obj, "job")? {
+        Some(s) => Some(s.parse::<JobId>()?),
+        None => None,
+    };
+    Ok(TrialStatus {
+        experiment: str_field(obj, "experiment")?.parse::<ExperimentId>()?,
+        index: u64_field(obj, "index")? as usize,
+        job,
+        name: str_field(obj, "name")?,
+        command: str_field(obj, "command")?,
+        args: f64_pairs_from_json(obj, "args")?,
+        resources: ResourceConfig::new(f64_field(obj, "vcpus")?, u32_field(obj, "mem_mb")?),
+        predicted_runtime: opt_f64_field(obj, "predicted_runtime")?,
+        predicted_cost: opt_f64_field(obj, "predicted_cost")?,
+        state: str_field(obj, "state")?,
+        runtime_secs: opt_f64_field(obj, "runtime_secs")?,
+        cost: opt_f64_field(obj, "cost")?,
+        output: opt_str_field(obj, "output")?,
+        metrics: f64_pairs_from_json(obj, "metrics")?,
+        error: opt_str_field(obj, "error")?,
+    })
+}
+
+// ---------------------------------------------------------------------
 // provenance + provisioning
 // ---------------------------------------------------------------------
 
@@ -856,6 +1042,74 @@ mod tests {
         );
         assert_eq!(page3.items, vec![9, 10]);
         assert!(page3.next.is_none());
+    }
+
+    #[test]
+    fn experiment_spec_codec_is_strict() {
+        // unknown strategy is a 400, never a silent default
+        let v = crate::json::parse(
+            r#"{"name":"s","template":"python t.py --epoch {1,2}","strategy":"bayesian","vcpus":1,"mem_mb":512}"#,
+        )
+        .unwrap();
+        let err = experiment_spec_from_json(&v).unwrap_err();
+        assert_eq!(err.status(), 400);
+        assert!(err.to_string().contains("bayesian"), "{err}");
+        // grid + samples is contradictory
+        let v = crate::json::parse(
+            r#"{"name":"s","template":"python t.py --epoch {1,2}","strategy":"grid","samples":4,"vcpus":1,"mem_mb":512}"#,
+        )
+        .unwrap();
+        assert_eq!(experiment_spec_from_json(&v).unwrap_err().status(), 400);
+        // random needs samples
+        let v = crate::json::parse(
+            r#"{"name":"s","template":"python t.py --epoch {1,2}","strategy":"random","vcpus":1,"mem_mb":512}"#,
+        )
+        .unwrap();
+        assert_eq!(experiment_spec_from_json(&v).unwrap_err().status(), 400);
+    }
+
+    #[test]
+    fn experiment_spec_round_trips() {
+        let v = crate::json::parse(
+            r#"{"name":"s","template":"python t.py --epoch {1,2}","input_fileset":"in","strategy":"random","samples":5,"seed":9,"vcpus":1.5,"mem_mb":512,"profile":"p","objective":{"kind":"min_cost","max_runtime":60}}"#,
+        )
+        .unwrap();
+        let spec = experiment_spec_from_json(&v).unwrap();
+        let back = experiment_spec_from_json(&experiment_spec_to_json(&spec)).unwrap();
+        assert_eq!(back.name, "s");
+        assert_eq!(back.strategy, SweepStrategy::Random { samples: 5, seed: 9 });
+        assert_eq!(back.profile.as_deref(), Some("p"));
+        assert_eq!(back.objective, Some(Objective::MinCost { max_runtime: 60.0 }));
+        assert_eq!(back.resources.vcpus, 1.5);
+    }
+
+    #[test]
+    fn trial_status_round_trips() {
+        let t = TrialStatus {
+            experiment: ExperimentId(3),
+            index: 7,
+            job: Some(JobId(12)),
+            name: "trial-0007".into(),
+            command: "python t.py --epoch 2".into(),
+            args: vec![("epoch".into(), 2.0)],
+            resources: ResourceConfig::new(1.0, 1024),
+            predicted_runtime: Some(10.5),
+            predicted_cost: None,
+            state: "finished".into(),
+            runtime_secs: Some(9.0),
+            cost: Some(0.02),
+            output: Some("s-trial-0007:1".into()),
+            metrics: vec![("training_loss".into(), 0.4), ("accuracy".into(), 0.9)],
+            error: None,
+        };
+        let back = trial_status_from_json(&trial_status_to_json(&t)).unwrap();
+        assert_eq!(back.index, 7);
+        assert_eq!(back.job, Some(JobId(12)));
+        assert_eq!(back.args, t.args);
+        assert_eq!(back.metrics, t.metrics);
+        assert_eq!(back.predicted_runtime, Some(10.5));
+        assert_eq!(back.predicted_cost, None);
+        assert_eq!(back.output.as_deref(), Some("s-trial-0007:1"));
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! | files       | `GET/POST /v1/files`, `GET /v1/files/{path}`, `GET /v1/files/{path}/versions` |
 //! | file sets   | `GET/POST /v1/filesets`, `GET /v1/filesets/{name}/trace`, `.../lineage` |
 //! | jobs        | `POST /v1/jobs` (202), `GET /v1/jobs`, `GET /v1/jobs/{id}`, `GET /v1/jobs/{id}/logs`, `POST /v1/jobs/{id}/kill` |
+//! | experiments | `POST /v1/experiments` (202), `GET /v1/experiments`, `GET /v1/experiments/{id}`, `.../trials`, `.../best?metric=&mode=` |
 //! | metadata    | `GET /v1/metadata/{kind}/{id}`, `POST /v1/metadata/{kind}/query`, `POST /v1/metadata/{kind}/{id}/tags` |
 //! | provenance  | `GET /v1/provenance` |
 //! | profiles    | `POST /v1/profiles`, `POST /v1/autoprovision` |
@@ -17,9 +18,10 @@
 
 use std::sync::Arc;
 
+use crate::engine::MetricMode;
 use crate::error::{AcaiError, Result};
 use crate::httpd::{Request, Response};
-use crate::ids::JobId;
+use crate::ids::{ExperimentId, JobId};
 use crate::json::Json;
 use crate::sdk::AcaiApi;
 
@@ -67,6 +69,13 @@ pub fn v1_router(metrics: Arc<ApiMetrics>) -> Router {
     r.route("GET", "/v1/jobs/{id}", h(get_job));
     r.route("GET", "/v1/jobs/{id}/logs", h(get_job_logs));
     r.route("POST", "/v1/jobs/{id}/kill", h(kill_job));
+
+    // ---- experiments (hyperparameter sweeps) ----
+    r.route("POST", "/v1/experiments", h(create_experiment));
+    r.route("GET", "/v1/experiments", h(list_experiments));
+    r.route("GET", "/v1/experiments/{id}", h(get_experiment));
+    r.route("GET", "/v1/experiments/{id}/trials", h(list_trials));
+    r.route("GET", "/v1/experiments/{id}/best", h(best_trial));
 
     // ---- metadata ----
     r.route("GET", "/v1/metadata/{kind}/{id}", h(get_metadata));
@@ -321,6 +330,66 @@ fn kill_job(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
     ctx.acai.driver().notify();
     let status = ctx.client()?.job_status(id)?;
     Ok(Response::json(&status.to_json()))
+}
+
+// ---------------------------------------------------------------------
+// experiments — sweeps through the async lifecycle
+// ---------------------------------------------------------------------
+
+/// `POST /v1/experiments` → **202 Accepted**: the sweep is expanded and
+/// every trial submitted (under scheduler quota), then the background
+/// driver completes them off the request path.  Clients poll
+/// `GET /v1/experiments/{id}` and pick a winner with `.../best`.
+fn create_experiment(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let body = req.json()?;
+    let spec = dto::experiment_spec_from_json(&body)?;
+    let status = ctx.client()?.create_experiment(&spec)?;
+    ctx.acai.driver().notify();
+    Ok(Response::json_with_status(
+        202,
+        &dto::experiment_status_to_json(&status),
+    ))
+}
+
+fn list_experiments(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let page = PageReq::from_query(&ctx.query)?;
+    let out = ctx.client()?.experiments(&page)?;
+    Ok(Response::json(&dto::page_json(
+        out.items.iter().map(dto::experiment_status_to_json).collect(),
+        &out.next,
+    )))
+}
+
+fn get_experiment(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let id: ExperimentId = ctx.params.id("id")?;
+    let status = ctx.client()?.experiment(id)?;
+    Ok(Response::json(&dto::experiment_status_to_json(&status)))
+}
+
+fn list_trials(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let id: ExperimentId = ctx.params.id("id")?;
+    let page = PageReq::from_query(&ctx.query)?;
+    let out = ctx.client()?.experiment_trials(id, &page)?;
+    Ok(Response::json(&dto::page_json(
+        out.items.iter().map(dto::trial_status_to_json).collect(),
+        &out.next,
+    )))
+}
+
+fn best_trial(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let id: ExperimentId = ctx.params.id("id")?;
+    let metric = ctx
+        .query
+        .get("metric")
+        .ok_or_else(|| AcaiError::invalid("missing ?metric="))?
+        .to_string();
+    let mode = MetricMode::parse(
+        ctx.query
+            .get("mode")
+            .ok_or_else(|| AcaiError::invalid("missing ?mode="))?,
+    )?;
+    let trial = ctx.client()?.best_trial(id, &metric, mode)?;
+    Ok(Response::json(&dto::trial_status_to_json(&trial)))
 }
 
 // ---------------------------------------------------------------------

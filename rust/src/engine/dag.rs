@@ -1,0 +1,581 @@
+//! Dependency-DAG job scheduling — the shared execution path under
+//! pipelines (§7.2), workflow replay (§7.1.3) and hyperparameter
+//! sweeps (§1: "many such pipelines may be required to find the best
+//! model within a search space of model configurations").
+//!
+//! A [`JobDag`] is a validated set of named nodes with dependency
+//! edges: construction rejects duplicate names, unknown dependencies
+//! and cycles (Kahn's algorithm), so every dag that exists is
+//! runnable.  A [`DagRun`] executes one:
+//!
+//! - **wave submission** — every node whose dependencies are all
+//!   finished is submitted in the same wave, so independent nodes
+//!   (sweep trials, diamond branches) run concurrently, bounded only
+//!   by the scheduler's per-(project, user) quota `k`;
+//! - **version pinning** — a node declaring `input_from` consumes the
+//!   *exact* output version its upstream produced (reproducibility),
+//!   while a static `input_fileset` resolves like any job input;
+//! - **failure cancellation** — when a node fails, every transitive
+//!   dependent is marked [`NodeOutcome::Cancelled`] and never
+//!   submitted; independent branches keep running.
+//!
+//! [`DagRun::advance`] is non-blocking (submit what is ready, absorb
+//! what finished), which is how the asynchronous experiment path fans
+//! out trials and lets the background [`super::EngineDriver`] drain
+//! them; [`DagRun::run`] is the synchronous wrapper pipelines use.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::cluster::ResourceConfig;
+use crate::error::{AcaiError, Result};
+use crate::ids::{JobId, ProjectId, UserId, Version};
+
+use super::registry::JobSpec;
+use super::{ExecutionEngine, JobState};
+
+/// One node of a job DAG.
+#[derive(Debug, Clone)]
+pub struct DagNode {
+    /// Unique within the dag; the job is named `{dag}/{node}`.
+    pub name: String,
+    pub command: String,
+    /// Static input file set (`name` or `name:version`); empty means
+    /// no input (or an input pinned via `input_from`).
+    pub input_fileset: String,
+    /// Consume the pinned output of this upstream node (must be listed
+    /// in `deps`) instead of a static file set.
+    pub input_from: Option<String>,
+    pub output_fileset: String,
+    pub resources: ResourceConfig,
+    /// Names of nodes that must finish before this one launches.
+    pub deps: Vec<String>,
+}
+
+/// Terminal fate of one node.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NodeOutcome {
+    /// The job finished; its output file set got this version.
+    Finished { job: JobId, output_version: Version },
+    /// The job failed or was killed (`job` is `None` when submission
+    /// itself was rejected).
+    Failed { job: Option<JobId>, error: String },
+    /// Never submitted: the named upstream failed or was cancelled.
+    Cancelled { upstream: String },
+}
+
+impl NodeOutcome {
+    pub fn is_finished(&self) -> bool {
+        matches!(self, NodeOutcome::Finished { .. })
+    }
+}
+
+/// A validated job DAG.
+#[derive(Debug, Clone)]
+pub struct JobDag {
+    pub name: String,
+    nodes: Vec<DagNode>,
+    /// Node indices in a valid execution order (insertion-stable).
+    topo: Vec<usize>,
+    index: HashMap<String, usize>,
+}
+
+impl JobDag {
+    /// Validate and build.  Rejects empty dags, duplicate node names,
+    /// unknown dependencies, `input_from` outside `deps`, and cycles.
+    pub fn new(name: impl Into<String>, nodes: Vec<DagNode>) -> Result<JobDag> {
+        let name = name.into();
+        if nodes.is_empty() {
+            return Err(AcaiError::invalid(format!("dag {name:?} has no nodes")));
+        }
+        let mut index = HashMap::with_capacity(nodes.len());
+        for (i, node) in nodes.iter().enumerate() {
+            if node.name.is_empty() {
+                return Err(AcaiError::invalid("dag node needs a name"));
+            }
+            if index.insert(node.name.clone(), i).is_some() {
+                return Err(AcaiError::invalid(format!(
+                    "duplicate dag node {:?}",
+                    node.name
+                )));
+            }
+        }
+        for node in &nodes {
+            for dep in &node.deps {
+                if !index.contains_key(dep) {
+                    return Err(AcaiError::invalid(format!(
+                        "node {:?} depends on unknown node {dep:?}",
+                        node.name
+                    )));
+                }
+                if dep == &node.name {
+                    return Err(AcaiError::invalid(format!(
+                        "node {:?} depends on itself",
+                        node.name
+                    )));
+                }
+            }
+            if let Some(from) = &node.input_from {
+                if !node.deps.contains(from) {
+                    return Err(AcaiError::invalid(format!(
+                        "node {:?} takes input from {from:?} which is not in its deps",
+                        node.name
+                    )));
+                }
+            }
+        }
+        // Kahn's algorithm; queue seeded in insertion order so
+        // independent nodes execute (and get job ids) deterministically.
+        let n = nodes.len();
+        let mut indegree = vec![0usize; n];
+        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, node) in nodes.iter().enumerate() {
+            indegree[i] = node.deps.len();
+            for dep in &node.deps {
+                dependents[index[dep]].push(i);
+            }
+        }
+        let mut queue: VecDeque<usize> =
+            (0..n).filter(|i| indegree[*i] == 0).collect();
+        let mut topo = Vec::with_capacity(n);
+        while let Some(i) = queue.pop_front() {
+            topo.push(i);
+            for &d in &dependents[i] {
+                indegree[d] -= 1;
+                if indegree[d] == 0 {
+                    queue.push_back(d);
+                }
+            }
+        }
+        if topo.len() < n {
+            let stuck = (0..n)
+                .find(|i| indegree[*i] > 0)
+                .map(|i| nodes[i].name.clone())
+                .unwrap_or_default();
+            return Err(AcaiError::invalid(format!(
+                "dag {name:?} has a dependency cycle (involving {stuck:?})"
+            )));
+        }
+        Ok(JobDag {
+            name,
+            nodes,
+            topo,
+            index,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Node by insertion index.
+    pub fn node(&self, index: usize) -> &DagNode {
+        &self.nodes[index]
+    }
+
+    /// Node indices in execution (topological) order.
+    pub fn topo_order(&self) -> &[usize] {
+        &self.topo
+    }
+}
+
+/// Execution state of one dag over an engine.
+pub struct DagRun<'a> {
+    dag: &'a JobDag,
+    project: ProjectId,
+    user: UserId,
+    jobs: Vec<Option<JobId>>,
+    outcomes: Vec<Option<NodeOutcome>>,
+}
+
+impl<'a> DagRun<'a> {
+    pub fn new(dag: &'a JobDag, project: ProjectId, user: UserId) -> DagRun<'a> {
+        DagRun {
+            dag,
+            project,
+            user,
+            jobs: vec![None; dag.len()],
+            outcomes: vec![None; dag.len()],
+        }
+    }
+
+    /// The job submitted for a node (by insertion index), if any yet.
+    pub fn job(&self, index: usize) -> Option<JobId> {
+        self.jobs[index]
+    }
+
+    /// The node's outcome, once resolved.
+    pub fn outcome(&self, index: usize) -> Option<&NodeOutcome> {
+        self.outcomes[index].as_ref()
+    }
+
+    /// Every node has a terminal outcome.
+    pub fn done(&self) -> bool {
+        self.outcomes.iter().all(|o| o.is_some())
+    }
+
+    /// One non-blocking scheduling round: absorb terminal jobs from the
+    /// registry, cancel nodes whose upstream failed, submit every node
+    /// whose dependencies are all finished.  Returns the jobs submitted
+    /// in this wave (insertion order for independent nodes).
+    pub fn advance(&mut self, engine: &ExecutionEngine) -> Result<Vec<JobId>> {
+        self.absorb(engine)?;
+        self.cancel_blocked();
+        let dag = self.dag;
+        let mut wave = Vec::new();
+        for &i in &dag.topo {
+            if self.outcomes[i].is_some() || self.jobs[i].is_some() {
+                continue;
+            }
+            let node = &dag.nodes[i];
+            let ready = node.deps.iter().all(|dep| {
+                matches!(
+                    self.outcomes[dag.index[dep]],
+                    Some(NodeOutcome::Finished { .. })
+                )
+            });
+            if !ready {
+                continue;
+            }
+            let input_fileset = match &node.input_from {
+                Some(from) => {
+                    let up = dag.index[from];
+                    let output_version = match &self.outcomes[up] {
+                        Some(NodeOutcome::Finished { output_version, .. }) => *output_version,
+                        _ => unreachable!("ready node with unfinished input_from"),
+                    };
+                    // pin the exact upstream version (reproducibility)
+                    format!("{}:{}", dag.nodes[up].output_fileset, output_version)
+                }
+                None => node.input_fileset.clone(),
+            };
+            let spec = JobSpec {
+                project: self.project,
+                user: self.user,
+                name: format!("{}/{}", self.dag.name, node.name),
+                command: node.command.clone(),
+                input_fileset,
+                output_fileset: node.output_fileset.clone(),
+                resources: node.resources,
+            };
+            match engine.submit(spec) {
+                Ok(id) => {
+                    self.jobs[i] = Some(id);
+                    wave.push(id);
+                }
+                Err(e) => {
+                    // the node is terminal without a job; dependents
+                    // will be cancelled on the next round
+                    self.outcomes[i] = Some(NodeOutcome::Failed {
+                        job: None,
+                        error: e.to_string(),
+                    });
+                }
+            }
+        }
+        Ok(wave)
+    }
+
+    /// Read the registry for submitted-but-unresolved nodes.
+    fn absorb(&mut self, engine: &ExecutionEngine) -> Result<()> {
+        for i in 0..self.dag.len() {
+            if self.outcomes[i].is_some() {
+                continue;
+            }
+            let Some(job) = self.jobs[i] else { continue };
+            let record = engine.registry.get(job)?;
+            if !record.state.is_terminal() {
+                continue;
+            }
+            self.outcomes[i] = Some(match (record.state, record.output_version) {
+                (JobState::Finished, Some(v)) => NodeOutcome::Finished {
+                    job,
+                    output_version: v,
+                },
+                _ => NodeOutcome::Failed {
+                    job: Some(job),
+                    error: record
+                        .error
+                        .unwrap_or_else(|| format!("job {} (killed)", record.state.as_str())),
+                },
+            });
+        }
+        Ok(())
+    }
+
+    /// Cancel (transitively) every unsubmitted node with a failed or
+    /// cancelled dependency.
+    fn cancel_blocked(&mut self) {
+        let dag = self.dag;
+        for &i in &dag.topo {
+            if self.outcomes[i].is_some() || self.jobs[i].is_some() {
+                continue;
+            }
+            let blocked = dag.nodes[i].deps.iter().find(|dep| {
+                matches!(
+                    self.outcomes[dag.index[dep.as_str()]],
+                    Some(NodeOutcome::Failed { .. }) | Some(NodeOutcome::Cancelled { .. })
+                )
+            });
+            if let Some(upstream) = blocked {
+                self.outcomes[i] = Some(NodeOutcome::Cancelled {
+                    upstream: upstream.clone(),
+                });
+            }
+        }
+    }
+
+    /// Drive the dag to completion synchronously (the pipeline path):
+    /// submit a wave, drain the engine, repeat until every node is
+    /// terminal.
+    pub fn run(mut self, engine: &ExecutionEngine) -> Result<DagReport> {
+        let mut rounds = 0usize;
+        loop {
+            self.advance(engine)?;
+            if self.done() {
+                break;
+            }
+            engine.run_until_idle();
+            rounds += 1;
+            assert!(
+                rounds <= self.dag.len() + 1,
+                "dag {:?} failed to make progress",
+                self.dag.name
+            );
+        }
+        Ok(self.into_report())
+    }
+
+    /// Freeze into a report (requires [`DagRun::done`]).
+    pub fn into_report(self) -> DagReport {
+        debug_assert!(self.done(), "report of an unfinished dag run");
+        DagReport {
+            outcomes: self
+                .dag
+                .topo
+                .iter()
+                .map(|&i| {
+                    (
+                        self.dag.nodes[i].name.clone(),
+                        self.outcomes[i].clone().unwrap_or_else(|| {
+                            NodeOutcome::Cancelled {
+                                upstream: "(unresolved)".into(),
+                            }
+                        }),
+                    )
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Per-node outcomes of a completed dag run, in execution order.
+#[derive(Debug, Clone)]
+pub struct DagReport {
+    pub outcomes: Vec<(String, NodeOutcome)>,
+}
+
+impl DagReport {
+    /// Outcome of one node.
+    pub fn outcome(&self, name: &str) -> Option<&NodeOutcome> {
+        self.outcomes
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, o)| o)
+    }
+
+    /// Jobs actually submitted, execution-ordered.
+    pub fn jobs(&self) -> Vec<JobId> {
+        self.outcomes
+            .iter()
+            .filter_map(|(_, o)| match o {
+                NodeOutcome::Finished { job, .. } => Some(*job),
+                NodeOutcome::Failed { job, .. } => *job,
+                NodeOutcome::Cancelled { .. } => None,
+            })
+            .collect()
+    }
+
+    /// The first failure in execution order, if any.
+    pub fn first_failure(&self) -> Option<(&str, &str)> {
+        self.outcomes.iter().find_map(|(name, o)| match o {
+            NodeOutcome::Failed { error, .. } => Some((name.as_str(), error.as_str())),
+            _ => None,
+        })
+    }
+
+    /// Did every node finish?
+    pub fn all_finished(&self) -> bool {
+        self.outcomes.iter().all(|(_, o)| o.is_finished())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::Acai;
+
+    const P: ProjectId = ProjectId(1);
+    const U: UserId = UserId(1);
+
+    fn node(name: &str, deps: &[&str]) -> DagNode {
+        DagNode {
+            name: name.into(),
+            command: "python train_mnist.py --epoch 1".into(),
+            input_fileset: String::new(),
+            input_from: None,
+            output_fileset: format!("{name}-out"),
+            resources: ResourceConfig::new(0.5, 512),
+            deps: deps.iter().map(|d| d.to_string()).collect(),
+        }
+    }
+
+    fn seeded() -> Acai {
+        let acai = Acai::boot_default();
+        acai.datalake.storage.upload(P, &[("/raw", b"raw")]).unwrap();
+        acai.datalake.filesets.create(P, "raw", &["/raw"], "u").unwrap();
+        acai
+    }
+
+    #[test]
+    fn cycles_are_rejected() {
+        let err = JobDag::new(
+            "cyc",
+            vec![node("a", &["c"]), node("b", &["a"]), node("c", &["b"])],
+        )
+        .unwrap_err();
+        assert_eq!(err.status(), 400);
+        assert!(err.to_string().contains("cycle"), "{err}");
+        // self-loop
+        assert!(JobDag::new("self", vec![node("a", &["a"])]).is_err());
+    }
+
+    #[test]
+    fn bad_shapes_are_rejected() {
+        assert!(JobDag::new("empty", vec![]).is_err());
+        assert!(JobDag::new("dup", vec![node("a", &[]), node("a", &[])]).is_err());
+        assert!(JobDag::new("ghost", vec![node("a", &["zz"])]).is_err());
+        let mut n = node("b", &[]);
+        n.input_from = Some("a".into()); // not in deps
+        assert!(JobDag::new("badfrom", vec![node("a", &[]), n]).is_err());
+    }
+
+    #[test]
+    fn topo_order_respects_deps_and_insertion() {
+        let dag = JobDag::new(
+            "t",
+            vec![
+                node("join", &["left", "right"]),
+                node("left", &["root"]),
+                node("right", &["root"]),
+                node("root", &[]),
+            ],
+        )
+        .unwrap();
+        let names: Vec<&str> = dag
+            .topo_order()
+            .iter()
+            .map(|&i| dag.node(i).name.as_str())
+            .collect();
+        assert_eq!(names, vec!["root", "left", "right", "join"]);
+    }
+
+    #[test]
+    fn diamond_runs_and_pins_versions() {
+        let acai = seeded();
+        let mut root = node("root", &[]);
+        root.input_fileset = "raw".into();
+        let mut left = node("left", &["root"]);
+        left.input_from = Some("root".into());
+        let mut right = node("right", &["root"]);
+        right.input_from = Some("root".into());
+        let mut join = node("join", &["left", "right"]);
+        join.input_from = Some("left".into());
+        let dag = JobDag::new("diamond", vec![root, left, right, join]).unwrap();
+        let report = DagRun::new(&dag, P, U).run(&acai.engine).unwrap();
+        assert!(report.all_finished(), "{report:?}");
+        assert_eq!(report.jobs().len(), 4);
+        // both branches consumed the pinned root output
+        let Some(NodeOutcome::Finished { output_version, .. }) = report.outcome("root")
+        else {
+            panic!("root not finished")
+        };
+        let left_job = match report.outcome("left").unwrap() {
+            NodeOutcome::Finished { job, .. } => *job,
+            other => panic!("{other:?}"),
+        };
+        let record = acai.engine.registry.get(left_job).unwrap();
+        assert_eq!(record.spec.input_fileset, format!("root-out:{output_version}"));
+    }
+
+    #[test]
+    fn failed_upstream_cancels_dependents_but_not_siblings() {
+        // a submission-rejected node (missing input file set) fails
+        // without ever running; its dependents cancel, the independent
+        // branch still finishes
+        let acai = seeded();
+        let mut broken = node("broken", &[]);
+        broken.input_fileset = "no-such-set".into();
+        let dependent = node("dependent", &["broken"]);
+        let grand = node("grand", &["dependent"]);
+        let free = node("free", &[]);
+        let dag =
+            JobDag::new("partial", vec![broken, dependent, grand, free]).unwrap();
+        let report = DagRun::new(&dag, P, U).run(&acai.engine).unwrap();
+        assert!(matches!(
+            report.outcome("broken"),
+            Some(NodeOutcome::Failed { job: None, .. })
+        ));
+        assert_eq!(
+            report.outcome("dependent"),
+            Some(&NodeOutcome::Cancelled {
+                upstream: "broken".into()
+            })
+        );
+        assert_eq!(
+            report.outcome("grand"),
+            Some(&NodeOutcome::Cancelled {
+                upstream: "dependent".into()
+            })
+        );
+        assert!(report.outcome("free").unwrap().is_finished());
+        // only "free" ever reached the registry: broken was rejected
+        // pre-registration and its dependents were never submitted
+        assert_eq!(acai.engine.registry.count(), 1);
+        assert_eq!(report.first_failure().unwrap().0, "broken");
+    }
+
+    #[test]
+    fn runtime_failure_cancels_downstream() {
+        let mut config = crate::PlatformConfig::default();
+        config.cluster.failure_rate = 1.0;
+        let acai = Acai::boot(config).unwrap();
+        let dag = JobDag::new("chain", vec![node("a", &[]), node("b", &["a"])]).unwrap();
+        let report = DagRun::new(&dag, P, U).run(&acai.engine).unwrap();
+        assert!(matches!(
+            report.outcome("a"),
+            Some(NodeOutcome::Failed { job: Some(_), .. })
+        ));
+        assert!(matches!(
+            report.outcome("b"),
+            Some(NodeOutcome::Cancelled { .. })
+        ));
+        assert_eq!(acai.engine.registry.count(), 1, "b never submitted");
+    }
+
+    #[test]
+    fn independent_nodes_fan_out_in_one_wave() {
+        let acai = seeded();
+        let nodes: Vec<DagNode> = (0..6).map(|i| node(&format!("n{i}"), &[])).collect();
+        let dag = JobDag::new("fan", nodes).unwrap();
+        let mut run = DagRun::new(&dag, P, U);
+        let wave = run.advance(&acai.engine).unwrap();
+        assert_eq!(wave.len(), 6, "all independent nodes submit together");
+        acai.engine.run_until_idle();
+        run.advance(&acai.engine).unwrap();
+        assert!(run.done());
+    }
+}

@@ -1,0 +1,1091 @@
+//! Experiment tracking: hyperparameter sweeps as first-class, persisted
+//! platform objects (paper §1's horizontal dimension — finding the best
+//! model within a search space — plus NSML-style experiment tracking).
+//!
+//! An **experiment** is one sweep: a [`crate::engine::sweep::SearchSpace`]
+//! expanded into N **trials**, fanned out through the shared DAG
+//! scheduler path ([`super::dag`]) as an edge-free fan-out, so trial
+//! concurrency is bounded by the scheduler's per-(project, user) quota
+//! `k` like any other job load.  Each trial records:
+//!
+//! - the concrete argument point and rendered command;
+//! - its job id, lifecycle state, billed runtime and cost;
+//! - the **metrics** parsed from its log lines (the `[[acai]] key=value`
+//!   auto-tag format of [`super::logserver`]);
+//! - its provenance (`output_fileset:version`), so the winning model is
+//!   one lineage query away;
+//! - optionally, the per-trial auto-provisioning
+//!   [`crate::autoprovision::Decision`] that sized it (the paper's
+//!   Fig-16 grid search run once *per trial*, with that trial's
+//!   argument values).
+//!
+//! Everything is persisted as JSON rows behind the storage
+//! [`crate::storage::Table`] tier ([`ExperimentStore::with_table`]), so
+//! a journal-backed deployment keeps its experiment history across
+//! restarts.  Reads are *pull-consistent*: every accessor first folds
+//! the current job-registry state into the stored trial rows, so the
+//! background [`super::EngineDriver`] never has to call back into the
+//! store.
+
+use std::sync::Arc;
+
+use crate::autoprovision::{AutoProvisioner, Objective};
+use crate::cluster::ResourceConfig;
+use crate::error::{AcaiError, Result};
+use crate::ids::{ExperimentId, IdGen, JobId, ProjectId, UserId};
+use crate::json::{Json, JsonObject};
+use crate::kvstore::KvStore;
+use crate::profiler::Profiler;
+use crate::storage::SharedTable;
+
+use super::dag::{DagNode, DagRun, JobDag, NodeOutcome};
+use super::sweep::SearchSpace;
+pub use super::sweep::SweepStrategy;
+use super::ExecutionEngine;
+
+/// Table holding one row per experiment.
+const T_EXP: &str = "experiments";
+/// Table holding one row per trial, keyed `{experiment}/{index}`.
+const T_TRIAL: &str = "exp_trials";
+
+fn exp_key(id: ExperimentId) -> String {
+    format!("{:020}", id.raw())
+}
+
+fn trial_prefix(id: ExperimentId) -> String {
+    format!("{:020}/", id.raw())
+}
+
+fn trial_key(id: ExperimentId, index: usize) -> String {
+    format!("{:020}/{:06}", id.raw(), index)
+}
+
+/// The dag name (= job name prefix): `{experiment-name}#{id}`, unique
+/// per experiment so trial jobs fingerprint unambiguously.
+fn job_prefix(name: &str, id: ExperimentId) -> String {
+    format!("{name}#{}", id.raw())
+}
+
+/// Best-trial selection direction (`?mode=min|max`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricMode {
+    Min,
+    Max,
+}
+
+impl MetricMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MetricMode::Min => "min",
+            MetricMode::Max => "max",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<MetricMode> {
+        match s {
+            "min" => Ok(MetricMode::Min),
+            "max" => Ok(MetricMode::Max),
+            other => Err(AcaiError::invalid(format!(
+                "unknown metric mode {other:?} (expected min|max)"
+            ))),
+        }
+    }
+}
+
+/// What a client submits to start a sweep.
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    /// Experiment name; trial jobs are `{name}#{exp-id}/trial-NNNN`
+    /// (the id makes job fingerprints unique across experiments) and
+    /// trial output file sets `{name}-trial-NNNN`.
+    pub name: String,
+    /// Profiler-style command template with `{a,b,c}` hint sets.
+    pub template: String,
+    /// Input file set every trial consumes (`name` or `name:version`;
+    /// empty for none).
+    pub input_fileset: String,
+    pub strategy: SweepStrategy,
+    /// Resource config for every trial when not auto-provisioned.
+    pub resources: ResourceConfig,
+    /// Name of a fitted profile ([`Profiler::by_name`]); set together
+    /// with `objective` to auto-provision each trial from its own
+    /// argument values.
+    pub profile: Option<String>,
+    pub objective: Option<Objective>,
+}
+
+/// Summary state of one experiment.
+#[derive(Debug, Clone)]
+pub struct ExperimentStatus {
+    pub id: ExperimentId,
+    pub name: String,
+    /// `running` until every trial is terminal, then `completed`.
+    pub state: String,
+    /// Total trial count.
+    pub trials: usize,
+    /// Trials whose job finished.
+    pub finished: usize,
+    /// Trials that failed, were killed, or could not be submitted.
+    pub failed: usize,
+    pub created_at: f64,
+}
+
+impl ExperimentStatus {
+    pub fn terminal(&self) -> bool {
+        self.state == "completed"
+    }
+}
+
+/// Full record of one trial.
+#[derive(Debug, Clone)]
+pub struct TrialStatus {
+    pub experiment: ExperimentId,
+    pub index: usize,
+    /// Absent when submission itself was rejected.
+    pub job: Option<JobId>,
+    pub name: String,
+    pub command: String,
+    /// The argument point, in template order.
+    pub args: Vec<(String, f64)>,
+    pub resources: ResourceConfig,
+    /// Present when the trial was auto-provisioned.
+    pub predicted_runtime: Option<f64>,
+    pub predicted_cost: Option<f64>,
+    /// Job lifecycle state string (`pending` before submission, then
+    /// `queued`, ..., `finished`).
+    pub state: String,
+    pub runtime_secs: Option<f64>,
+    pub cost: Option<f64>,
+    /// `fileset:version` produced on success (provenance anchor).
+    pub output: Option<String>,
+    /// Numeric metrics parsed from the job log (last report wins).
+    pub metrics: Vec<(String, f64)>,
+    pub error: Option<String>,
+}
+
+impl TrialStatus {
+    pub fn terminal(&self) -> bool {
+        matches!(self.state.as_str(), "finished" | "failed" | "killed")
+    }
+
+    /// One metric by name.
+    pub fn metric(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+
+    fn to_row(&self) -> Json {
+        let mut args = JsonObject::new();
+        for (k, v) in &self.args {
+            args.set(k.clone(), *v);
+        }
+        let mut metrics = JsonObject::new();
+        for (k, v) in &self.metrics {
+            metrics.set(k.clone(), *v);
+        }
+        let mut b = Json::obj()
+            .field("experiment", self.experiment.raw())
+            .field("index", self.index)
+            .field("name", self.name.as_str())
+            .field("command", self.command.as_str())
+            .field("args", Json::Obj(args))
+            .field("vcpus", self.resources.vcpus)
+            .field("mem_mb", self.resources.mem_mb)
+            .field("state", self.state.as_str())
+            .field("metrics", Json::Obj(metrics));
+        if let Some(j) = self.job {
+            b = b.field("job", j.raw());
+        }
+        if let Some(v) = self.predicted_runtime {
+            b = b.field("predicted_runtime", v);
+        }
+        if let Some(v) = self.predicted_cost {
+            b = b.field("predicted_cost", v);
+        }
+        if let Some(v) = self.runtime_secs {
+            b = b.field("runtime_secs", v);
+        }
+        if let Some(v) = self.cost {
+            b = b.field("cost", v);
+        }
+        if let Some(o) = &self.output {
+            b = b.field("output", o.as_str());
+        }
+        if let Some(e) = &self.error {
+            b = b.field("error", e.as_str());
+        }
+        b.build()
+    }
+
+    fn from_row(row: &Json) -> Result<TrialStatus> {
+        let missing = |key: &str| AcaiError::Storage(format!("trial row missing {key}"));
+        let args = match row.get("args") {
+            Some(Json::Obj(o)) => o
+                .iter()
+                .map(|(k, v)| {
+                    v.as_f64()
+                        .map(|n| (k.to_string(), n))
+                        .ok_or_else(|| missing("args"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            _ => return Err(missing("args")),
+        };
+        let metrics = match row.get("metrics") {
+            Some(Json::Obj(o)) => o
+                .iter()
+                .filter_map(|(k, v)| v.as_f64().map(|n| (k.to_string(), n)))
+                .collect(),
+            _ => Vec::new(),
+        };
+        Ok(TrialStatus {
+            experiment: ExperimentId(
+                row.get("experiment").and_then(Json::as_u64).ok_or_else(|| missing("experiment"))?,
+            ),
+            index: row.get("index").and_then(Json::as_u64).ok_or_else(|| missing("index"))?
+                as usize,
+            job: row.get("job").and_then(Json::as_u64).map(JobId),
+            name: row
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| missing("name"))?
+                .to_string(),
+            command: row
+                .get("command")
+                .and_then(Json::as_str)
+                .ok_or_else(|| missing("command"))?
+                .to_string(),
+            args,
+            resources: ResourceConfig {
+                vcpus: row.get("vcpus").and_then(Json::as_f64).ok_or_else(|| missing("vcpus"))?,
+                mem_mb: row.get("mem_mb").and_then(Json::as_u64).ok_or_else(|| missing("mem_mb"))?
+                    as u32,
+            },
+            predicted_runtime: row.get("predicted_runtime").and_then(Json::as_f64),
+            predicted_cost: row.get("predicted_cost").and_then(Json::as_f64),
+            state: row
+                .get("state")
+                .and_then(Json::as_str)
+                .ok_or_else(|| missing("state"))?
+                .to_string(),
+            runtime_secs: row.get("runtime_secs").and_then(Json::as_f64),
+            cost: row.get("cost").and_then(Json::as_f64),
+            output: row.get("output").and_then(Json::as_str).map(String::from),
+            metrics,
+            error: row.get("error").and_then(Json::as_str).map(String::from),
+        })
+    }
+}
+
+/// Numeric auto-tags from a job log; the last report of a key wins
+/// (a training loss logged per epoch resolves to the final epoch's).
+fn numeric_metrics(tags: Vec<(String, Json)>) -> Vec<(String, f64)> {
+    let mut out: Vec<(String, f64)> = Vec::new();
+    for (key, value) in tags {
+        let Some(n) = value.as_f64() else { continue };
+        match out.iter().position(|(k, _)| *k == key) {
+            Some(i) => out[i].1 = n,
+            None => out.push((key, n)),
+        }
+    }
+    out
+}
+
+/// The experiment registry: sweeps and their trials as persisted rows.
+#[derive(Clone)]
+pub struct ExperimentStore {
+    table: SharedTable,
+    ids: Arc<IdGen>,
+}
+
+impl Default for ExperimentStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ExperimentStore {
+    /// Store over a private in-memory sharded table.
+    pub fn new() -> Self {
+        Self::with_table(Arc::new(KvStore::in_memory()))
+    }
+
+    /// Store over any row substrate (a journal-backed table keeps the
+    /// experiment history across restarts).  The id generator resumes
+    /// past the highest persisted experiment id.
+    pub fn with_table(table: SharedTable) -> Self {
+        let next_id = table
+            .scan(T_EXP)
+            .iter()
+            .filter_map(|(_, row)| row.get("id").and_then(Json::as_u64))
+            .max()
+            .map(|max| max + 1)
+            .unwrap_or(1);
+        Self {
+            table,
+            ids: Arc::new(IdGen::starting_at(next_id)),
+        }
+    }
+
+    /// Expand the search space, auto-provision each trial when a
+    /// profile + objective are given, fan the trials out through the
+    /// DAG scheduler path (submission only — the caller's driver or
+    /// `run_until_idle` executes them), and persist every record.
+    pub fn create(
+        &self,
+        engine: &ExecutionEngine,
+        profiler: &Profiler,
+        provisioner: &AutoProvisioner,
+        project: ProjectId,
+        user: UserId,
+        spec: ExperimentSpec,
+    ) -> Result<ExperimentStatus> {
+        if spec.name.is_empty() {
+            return Err(AcaiError::invalid("experiment needs a name"));
+        }
+        let space = SearchSpace::parse(&spec.template, spec.strategy)?;
+        let points = space.points();
+
+        // Per-trial resource plan: the paper's Fig-16 grid search, run
+        // with each trial's own argument values.
+        let provision = match (&spec.profile, spec.objective) {
+            (Some(profile), Some(objective)) => Some((profiler.by_name(profile)?, objective)),
+            (None, None) => None,
+            _ => {
+                return Err(AcaiError::invalid(
+                    "per-trial provisioning needs both \"profile\" and \"objective\"",
+                ))
+            }
+        };
+        let mut planned: Vec<(ResourceConfig, Option<(f64, f64)>)> =
+            Vec::with_capacity(points.len());
+        for point in &points {
+            match &provision {
+                Some((fitted, objective)) => {
+                    let mut arg_values = Vec::with_capacity(fitted.template.hints.len());
+                    for (hint, _) in &fitted.template.hints {
+                        let v = point
+                            .iter()
+                            .find(|(n, _)| n == hint)
+                            .map(|(_, v)| *v)
+                            .or_else(|| {
+                                space
+                                    .template
+                                    .fixed
+                                    .iter()
+                                    .find(|(n, _)| n == hint)
+                                    .map(|(_, v)| *v)
+                            })
+                            .ok_or_else(|| {
+                                AcaiError::invalid(format!(
+                                    "profiled argument --{hint} is neither swept nor \
+                                     fixed in the experiment template"
+                                ))
+                            })?;
+                        arg_values.push(v);
+                    }
+                    let decision =
+                        provisioner.optimize(profiler, fitted, &arg_values, *objective)?;
+                    planned.push((
+                        decision.config,
+                        Some((decision.predicted_runtime, decision.predicted_cost)),
+                    ));
+                }
+                None => planned.push((spec.resources, None)),
+            }
+        }
+
+        // Validate the fan-out shape before any write or submission.
+        let id = ExperimentId(self.ids.next());
+        let nodes: Vec<DagNode> = points
+            .iter()
+            .enumerate()
+            .map(|(i, point)| DagNode {
+                name: format!("trial-{i:04}"),
+                command: space.template.render(point),
+                input_fileset: spec.input_fileset.clone(),
+                input_from: None,
+                output_fileset: format!("{}-trial-{i:04}", spec.name),
+                resources: planned[i].0,
+                deps: Vec::new(),
+            })
+            .collect();
+        // The dag (= job name prefix) embeds the experiment id, so trial
+        // job names are unique across experiments — re-creating an
+        // identically-named sweep after a restart can never produce jobs
+        // whose (name, command) fingerprint matches a stale experiment's
+        // rows (see the recycled-id guard in `refresh`).
+        let dag = JobDag::new(job_prefix(&spec.name, id), nodes)?;
+
+        let created_at = engine.now();
+        // The experiment row goes in FIRST: it claims the id, so a crash
+        // between it and the trial rows can never lead a reopened store
+        // (whose id generator resumes from this table) to reuse the id
+        // and merge orphaned trial rows into a future experiment.
+        // State starts at "creating": while the fence is up, refresh()
+        // neither orphans job-less rows nor stamps completion, so no
+        // racing poll can misjudge half-written trial rows.  The fence
+        // drops to "running" as create()'s last act.
+        let row = Json::obj()
+            .field("id", id.raw())
+            .field("project", project.raw())
+            .field("user", user.raw())
+            .field("name", spec.name.as_str())
+            .field("state", "creating")
+            .field("template", spec.template.as_str())
+            .field("input_fileset", spec.input_fileset.as_str())
+            .field("strategy", spec.strategy.as_str())
+            .field("trials", points.len())
+            .field("created_at", created_at)
+            .build();
+        self.table.put(T_EXP, &exp_key(id), row)?;
+        // Trial rows are persisted BEFORE any job is submitted: a
+        // storage failure aborts the create with zero jobs in flight,
+        // and a failure later can never leave running jobs invisible.
+        let mut trials: Vec<TrialStatus> = Vec::with_capacity(points.len());
+        for (i, point) in points.iter().enumerate() {
+            let trial = TrialStatus {
+                experiment: id,
+                index: i,
+                job: None,
+                name: format!("trial-{i:04}"),
+                command: dag.node(i).command.clone(),
+                args: point.clone(),
+                resources: planned[i].0,
+                predicted_runtime: planned[i].1.map(|(rt, _)| rt),
+                predicted_cost: planned[i].1.map(|(_, c)| c),
+                state: "pending".to_string(),
+                runtime_secs: None,
+                cost: None,
+                output: None,
+                metrics: Vec::new(),
+                error: None,
+            };
+            self.table.put(T_TRIAL, &trial_key(id, i), trial.to_row())?;
+            trials.push(trial);
+        }
+
+        // Fan out as an edge-free DAG: one wave submits every trial;
+        // the scheduler quota k paces actual launches.
+        let mut run = DagRun::new(&dag, project, user);
+        run.advance(engine)?;
+        for (i, mut trial) in trials.into_iter().enumerate() {
+            match run.outcome(i) {
+                Some(NodeOutcome::Failed { error, .. }) => {
+                    trial.state = "failed".to_string();
+                    trial.error = Some(error.clone());
+                }
+                _ => {
+                    trial.state = "queued".to_string();
+                    trial.job = run.job(i);
+                }
+            }
+            // Plain put is safe: no reader can have folded this row yet
+            // (folding requires the job id, which only this write
+            // publishes), and create() writes each row exactly once here.
+            self.table.put(T_TRIAL, &trial_key(id, i), trial.to_row())?;
+        }
+        // Drop the "creating" fence: from here refresh() may orphan and
+        // stamp normally.  (If create() dies before this line, the
+        // experiment stays visibly "running" with pending rows — an
+        // honest zombie, never a wrong completion.)
+        self.table.read_modify_write(T_EXP, &exp_key(id), &mut |cur| {
+            Ok(match cur {
+                Some(row)
+                    if row.get("state").and_then(Json::as_str) == Some("creating") =>
+                {
+                    let mut obj = row.as_object().cloned().unwrap_or_default();
+                    obj.set("state", "running");
+                    crate::storage::Rmw::Put(Json::Obj(obj))
+                }
+                _ => crate::storage::Rmw::Keep,
+            })
+        })?;
+        self.status(project, id)
+    }
+
+    /// Write a trial row only while the stored row is still
+    /// non-terminal — an atomic per-key guard (the storage tier's RMW)
+    /// so a reader that folded a *terminal* registry state can never be
+    /// clobbered by a concurrent reader holding a stale in-flight one.
+    fn put_if_open(&self, key: &str, row: Json) -> Result<()> {
+        let mut next = Some(row);
+        self.table.read_modify_write(T_TRIAL, key, &mut |cur| {
+            let open = cur
+                .and_then(|r| r.get("state").and_then(Json::as_str))
+                .map(|s| !matches!(s, "finished" | "failed" | "killed"))
+                .unwrap_or(false);
+            Ok(match (open, next.take()) {
+                (true, Some(row)) => crate::storage::Rmw::Put(row),
+                _ => crate::storage::Rmw::Keep,
+            })
+        })?;
+        Ok(())
+    }
+
+    /// Fold the current job-registry state into the stored trial rows,
+    /// unless the experiment row already says `completed` — a terminal
+    /// experiment's rows are immutable, so listings and polls of old
+    /// sweeps cost one row read instead of a trial scan + rewrites.
+    fn refresh_if_open(&self, engine: &ExecutionEngine, id: ExperimentId) -> Result<()> {
+        if let Some(row) = self.table.get(T_EXP, &exp_key(id)) {
+            if row.get("state").and_then(Json::as_str) == Some("completed") {
+                return Ok(());
+            }
+        }
+        self.refresh(engine, id)
+    }
+
+    /// Fold the current job-registry state into the stored trial rows
+    /// (and the experiment's own state once every trial is terminal).
+    fn refresh(&self, engine: &ExecutionEngine, id: ExperimentId) -> Result<()> {
+        let exp_row = self.table.get(T_EXP, &exp_key(id));
+        let exp_name = exp_row
+            .as_ref()
+            .and_then(|r| r.get("name").and_then(Json::as_str))
+            .unwrap_or_default()
+            .to_string();
+        // While create() still holds the "creating" fence, half-written
+        // rows are expected: never orphan them and never stamp.
+        let creating = exp_row
+            .as_ref()
+            .and_then(|r| r.get("state").and_then(Json::as_str))
+            == Some("creating");
+        let mut all_terminal = true;
+        let mut seen = 0usize;
+        let mut fin = 0usize;
+        let mut fail = 0usize;
+        for (key, row) in self.table.scan_prefix(T_TRIAL, &trial_prefix(id)) {
+            seen += 1;
+            let mut trial = TrialStatus::from_row(&row)?;
+            if trial.terminal() {
+                if trial.state == "finished" {
+                    fin += 1;
+                } else {
+                    fail += 1;
+                }
+                continue;
+            }
+            let Some(job) = trial.job else {
+                if creating {
+                    // create() is still attaching job ids: leave the
+                    // pending row alone, the experiment stays running
+                    all_terminal = false;
+                    continue;
+                }
+                // The fence is down yet the row is still "pending" with
+                // no job id: create() hit a storage error between
+                // persisting the row and recording its submission.
+                // Nothing will ever attach a job, so resolve it as
+                // failed and let the experiment converge.
+                trial.state = "failed".to_string();
+                trial.error =
+                    Some("trial was never submitted (create aborted)".to_string());
+                self.put_if_open(&key, trial.to_row())?;
+                fail += 1;
+                continue;
+            };
+            // The registry record must actually be THIS trial's job —
+            // after an engine restart the in-memory registry reassigns
+            // job ids from 1, so a recycled id can resolve to a total
+            // stranger (the job name embeds the experiment id, so even an
+            // identically-named re-created sweep cannot collide).  A
+            // missing or mismatched record means the original job is gone
+            // and will never complete: resolve the persisted trial as
+            // failed so the experiment converges instead of reporting
+            // "running" forever (or folding a stranger's metrics in).
+            let expected_job_name =
+                format!("{}/{}", job_prefix(&exp_name, id), trial.name);
+            let record = match engine.registry.get(job) {
+                Ok(record)
+                    if record.spec.name == expected_job_name
+                        && record.spec.command == trial.command =>
+                {
+                    record
+                }
+                _ => {
+                    trial.state = "failed".to_string();
+                    trial.error = Some(format!(
+                        "job {job} not in the registry (engine restarted); trial orphaned"
+                    ));
+                    self.put_if_open(&key, trial.to_row())?;
+                    fail += 1;
+                    continue;
+                }
+            };
+            let state = record.state.as_str();
+            if !record.state.is_terminal() {
+                all_terminal = false;
+                // keep live listings honest (queued -> running)
+                if state != trial.state {
+                    trial.state = state.to_string();
+                    self.put_if_open(&key, trial.to_row())?;
+                }
+                continue;
+            }
+            trial.state = state.to_string();
+            trial.runtime_secs = record.runtime_secs;
+            trial.cost = record.cost;
+            trial.error = record.error.clone();
+            trial.output = record
+                .output_version
+                .map(|v| format!("{}:{}", record.spec.output_fileset, v));
+            trial.metrics = numeric_metrics(engine.logs.tags(job));
+            self.put_if_open(&key, trial.to_row())?;
+            if trial.state == "finished" {
+                fin += 1;
+            } else {
+                fail += 1;
+            }
+        }
+        if all_terminal && !creating {
+            let key = exp_key(id);
+            if let Some(row) = self.table.get(T_EXP, &key) {
+                // Guard against a racing read between create()'s
+                // experiment-row and trial-row writes: completion may
+                // only be stamped once every expected trial row exists
+                // (a premature stamp would freeze refresh_if_open
+                // forever while the late trial rows sit unfolded).
+                let expected =
+                    row.get("trials").and_then(Json::as_u64).unwrap_or(0) as usize;
+                if seen >= expected
+                    && seen > 0
+                    && row.get("state").and_then(Json::as_str) != Some("completed")
+                {
+                    // stamp the counts accumulated above with the state,
+                    // so a completed experiment's status is one row read
+                    let mut obj = row.as_object().cloned().unwrap_or_default();
+                    obj.set("state", "completed");
+                    obj.set("finished", fin);
+                    obj.set("failed", fail);
+                    self.table.put(T_EXP, &key, Json::Obj(obj))?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The experiment row, project-scoped (a foreign project's id is
+    /// indistinguishable from a missing one).
+    fn row(&self, project: ProjectId, id: ExperimentId) -> Result<Json> {
+        let row = self
+            .table
+            .get(T_EXP, &exp_key(id))
+            .ok_or_else(|| AcaiError::not_found(format!("{id}")))?;
+        if row.get("project").and_then(Json::as_u64) != Some(project.raw()) {
+            return Err(AcaiError::not_found(format!("{id}")));
+        }
+        Ok(row)
+    }
+
+    fn status(&self, project: ProjectId, id: ExperimentId) -> Result<ExperimentStatus> {
+        let row = self.row(project, id)?;
+        let name = row
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+        let created_at = row.get("created_at").and_then(Json::as_f64).unwrap_or(0.0);
+        // completed experiments answer from the stamped row alone (the
+        // refresh fast path made the rows immutable; no trial scan)
+        if row.get("state").and_then(Json::as_str) == Some("completed") {
+            if let (Some(fin), Some(fail), Some(total)) = (
+                row.get("finished").and_then(Json::as_u64),
+                row.get("failed").and_then(Json::as_u64),
+                row.get("trials").and_then(Json::as_u64),
+            ) {
+                return Ok(ExperimentStatus {
+                    id,
+                    name,
+                    state: "completed".to_string(),
+                    trials: total as usize,
+                    finished: fin as usize,
+                    failed: fail as usize,
+                    created_at,
+                });
+            }
+        }
+        let mut finished = 0usize;
+        let mut failed = 0usize;
+        let mut trials = 0usize;
+        let mut all_terminal = true;
+        for (_, trow) in self.table.scan_prefix(T_TRIAL, &trial_prefix(id)) {
+            trials += 1;
+            match trow.get("state").and_then(Json::as_str) {
+                Some("finished") => finished += 1,
+                Some("failed") | Some("killed") => failed += 1,
+                _ => all_terminal = false,
+            }
+        }
+        // a read racing create() may see a partial trial set; never call
+        // that completed (same guard refresh() applies before stamping)
+        let expected = row.get("trials").and_then(Json::as_u64).unwrap_or(0) as usize;
+        Ok(ExperimentStatus {
+            id,
+            name,
+            state: if all_terminal && trials > 0 && trials >= expected {
+                "completed".to_string()
+            } else {
+                "running".to_string()
+            },
+            trials,
+            finished,
+            failed,
+            created_at,
+        })
+    }
+
+    /// One experiment's summary (refreshes first).
+    pub fn get(
+        &self,
+        engine: &ExecutionEngine,
+        project: ProjectId,
+        id: ExperimentId,
+    ) -> Result<ExperimentStatus> {
+        self.row(project, id)?;
+        self.refresh_if_open(engine, id)?;
+        self.status(project, id)
+    }
+
+    /// Every experiment of a project, id-ordered, refreshed.
+    pub fn list(&self, engine: &ExecutionEngine, project: ProjectId) -> Vec<ExperimentStatus> {
+        let mut out = Vec::new();
+        for (_, row) in self.table.scan(T_EXP) {
+            if row.get("project").and_then(Json::as_u64) != Some(project.raw()) {
+                continue;
+            }
+            let Some(id) = row.get("id").and_then(Json::as_u64).map(ExperimentId) else {
+                continue;
+            };
+            // a refresh error (e.g. one corrupt trial row) must not hide
+            // the experiment from listings — status() only reads state
+            // strings, so the degraded record stays findable here while
+            // get() on it surfaces the underlying error
+            let _ = self.refresh_if_open(engine, id);
+            if let Ok(status) = self.status(project, id) {
+                out.push(status);
+            }
+        }
+        out
+    }
+
+    /// All trials of an experiment, index-ordered, refreshed.
+    pub fn trials(
+        &self,
+        engine: &ExecutionEngine,
+        project: ProjectId,
+        id: ExperimentId,
+    ) -> Result<Vec<TrialStatus>> {
+        self.row(project, id)?;
+        self.refresh_if_open(engine, id)?;
+        self.table
+            .scan_prefix(T_TRIAL, &trial_prefix(id))
+            .iter()
+            .map(|(_, row)| TrialStatus::from_row(row))
+            .collect()
+    }
+
+    /// The best finished trial by a metric.  Deterministic: strict
+    /// comparison, so ties resolve to the lowest trial index.
+    pub fn best(
+        &self,
+        engine: &ExecutionEngine,
+        project: ProjectId,
+        id: ExperimentId,
+        metric: &str,
+        mode: MetricMode,
+    ) -> Result<TrialStatus> {
+        let mut best: Option<(TrialStatus, f64)> = None;
+        for trial in self.trials(engine, project, id)? {
+            if trial.state != "finished" {
+                continue;
+            }
+            let Some(value) = trial.metric(metric) else { continue };
+            let better = match &best {
+                None => true,
+                Some((_, incumbent)) => match mode {
+                    MetricMode::Min => value < *incumbent,
+                    MetricMode::Max => value > *incumbent,
+                },
+            };
+            if better {
+                best = Some((trial, value));
+            }
+        }
+        best.map(|(t, _)| t).ok_or_else(|| {
+            AcaiError::not_found(format!(
+                "no finished trial of {id} reports metric {metric:?}"
+            ))
+        })
+    }
+
+    /// Number of stored experiments (tests + dashboards).
+    pub fn count(&self) -> usize {
+        self.table.count(T_EXP)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::Acai;
+
+    const P: ProjectId = ProjectId(1);
+    const U: UserId = UserId(1);
+
+    fn seeded() -> Acai {
+        let acai = Acai::boot_default();
+        acai.datalake.storage.upload(P, &[("/raw", b"raw")]).unwrap();
+        acai.datalake.filesets.create(P, "raw", &["/raw"], "u").unwrap();
+        acai
+    }
+
+    fn spec(name: &str, strategy: SweepStrategy) -> ExperimentSpec {
+        ExperimentSpec {
+            name: name.into(),
+            template: "python train_mnist.py --epoch {1,2} --learning-rate {0.1,0.3}".into(),
+            input_fileset: "raw".into(),
+            strategy,
+            resources: ResourceConfig::new(1.0, 1024),
+            profile: None,
+            objective: None,
+        }
+    }
+
+    #[test]
+    fn grid_sweep_runs_tracks_and_selects() {
+        let acai = seeded();
+        let status = acai
+            .experiments
+            .create(
+                &acai.engine,
+                &acai.profiler,
+                &acai.provisioner,
+                P,
+                U,
+                spec("mlp", SweepStrategy::Grid),
+            )
+            .unwrap();
+        assert_eq!(status.trials, 4);
+        assert_eq!(status.state, "running");
+        acai.engine.run_until_idle();
+
+        let done = acai.experiments.get(&acai.engine, P, status.id).unwrap();
+        assert_eq!(done.state, "completed");
+        assert_eq!(done.finished, 4);
+        assert_eq!(done.failed, 0);
+
+        let trials = acai.experiments.trials(&acai.engine, P, status.id).unwrap();
+        assert_eq!(trials.len(), 4);
+        for (i, t) in trials.iter().enumerate() {
+            assert_eq!(t.index, i);
+            assert_eq!(t.state, "finished");
+            assert!(t.cost.unwrap() > 0.0);
+            assert!(t.metric("training_loss").is_some(), "{t:?}");
+            assert_eq!(t.output.as_deref(), Some(format!("mlp-trial-{i:04}:1").as_str()));
+        }
+        // fallback loss decays with epochs: a 2-epoch trial wins; the
+        // tie between the two 2-epoch points resolves to the lower index
+        let best = acai
+            .experiments
+            .best(&acai.engine, P, status.id, "training_loss", MetricMode::Min)
+            .unwrap();
+        assert_eq!(best.index, 2);
+        assert_eq!(best.args[0], ("epoch".to_string(), 2.0));
+        // unknown metric is a 404
+        assert_eq!(
+            acai.experiments
+                .best(&acai.engine, P, status.id, "nope", MetricMode::Min)
+                .unwrap_err()
+                .status(),
+            404
+        );
+    }
+
+    #[test]
+    fn sweep_respects_scheduler_quota() {
+        let mut config = crate::PlatformConfig::default();
+        config.quota_k = 3;
+        let acai = Acai::boot(config).unwrap();
+        acai.datalake.storage.upload(P, &[("/raw", b"raw")]).unwrap();
+        acai.datalake.filesets.create(P, "raw", &["/raw"], "u").unwrap();
+        let mut s = spec("quota", SweepStrategy::Random { samples: 12, seed: 3 });
+        s.resources = ResourceConfig::new(0.5, 512);
+        let status = acai
+            .experiments
+            .create(&acai.engine, &acai.profiler, &acai.provisioner, P, U, s)
+            .unwrap();
+        assert_eq!(status.trials, 12);
+        // the whole sweep is submitted, but only k hold launch slots
+        assert!(acai.engine.scheduler.active((P, U)) <= 3);
+        assert_eq!(
+            acai.engine.scheduler.active((P, U)) + acai.engine.scheduler.queued((P, U)),
+            12
+        );
+        // quota holds at every completion event
+        loop {
+            assert!(acai.engine.scheduler.active((P, U)) <= 3, "quota violated");
+            if !acai.engine.step() {
+                break;
+            }
+        }
+        acai.engine.run_until_idle();
+        let done = acai.experiments.get(&acai.engine, P, status.id).unwrap();
+        assert_eq!(done.state, "completed");
+        assert_eq!(done.finished, 12);
+    }
+
+    #[test]
+    fn records_survive_a_store_reopen() {
+        let acai = seeded();
+        let status = acai
+            .experiments
+            .create(
+                &acai.engine,
+                &acai.profiler,
+                &acai.provisioner,
+                P,
+                U,
+                spec("durable", SweepStrategy::Grid),
+            )
+            .unwrap();
+        acai.engine.run_until_idle();
+        acai.experiments.get(&acai.engine, P, status.id).unwrap();
+
+        // "restart": a fresh store over the same (persisted) table rows
+        let reopened = ExperimentStore::with_table(acai.experiments.table.clone());
+        let survived = reopened.get(&acai.engine, P, status.id).unwrap();
+        assert_eq!(survived.state, "completed");
+        assert_eq!(survived.trials, 4);
+        let trials = reopened.trials(&acai.engine, P, status.id).unwrap();
+        assert!(trials.iter().all(|t| t.metric("training_loss").is_some()));
+        // fresh ids never collide with survivors
+        let next = reopened
+            .create(
+                &acai.engine,
+                &acai.profiler,
+                &acai.provisioner,
+                P,
+                U,
+                spec("durable-2", SweepStrategy::Grid),
+            )
+            .unwrap();
+        assert!(next.id > status.id);
+    }
+
+    #[test]
+    fn orphaned_trials_resolve_after_engine_restart() {
+        // trials were submitted but never drained; a "restarted" engine
+        // (fresh in-memory job registry) has no record of their jobs —
+        // the persisted experiment must converge to completed/failed
+        // instead of reporting "running" forever
+        let acai = seeded();
+        let status = acai
+            .experiments
+            .create(
+                &acai.engine,
+                &acai.profiler,
+                &acai.provisioner,
+                P,
+                U,
+                spec("orphan", SweepStrategy::Grid),
+            )
+            .unwrap();
+        let fresh = Acai::boot_default();
+        // the restarted registry recycles job ids from 1: submit a decoy
+        // so the persisted trials' job ids resolve to a STRANGER's
+        // record — it must be rejected by the name/command fingerprint,
+        // never folded into the old trials
+        fresh
+            .engine
+            .submit(crate::engine::JobSpec {
+                project: P,
+                user: U,
+                name: "decoy".into(),
+                command: "python train_mnist.py --epoch 1".into(),
+                input_fileset: String::new(),
+                output_fileset: "decoy-out".into(),
+                resources: ResourceConfig::new(0.5, 512),
+            })
+            .unwrap();
+        fresh.engine.run_until_idle();
+        let reopened = ExperimentStore::with_table(acai.experiments.table.clone());
+        let done = reopened.get(&fresh.engine, P, status.id).unwrap();
+        assert_eq!(done.state, "completed");
+        assert_eq!(done.failed, 4);
+        assert_eq!(done.finished, 0);
+        let trials = reopened.trials(&fresh.engine, P, status.id).unwrap();
+        assert!(trials
+            .iter()
+            .all(|t| t.state == "failed" && t.error.as_deref().unwrap().contains("orphaned")));
+    }
+
+    #[test]
+    fn experiments_are_project_scoped() {
+        let acai = seeded();
+        let status = acai
+            .experiments
+            .create(
+                &acai.engine,
+                &acai.profiler,
+                &acai.provisioner,
+                P,
+                U,
+                spec("scoped", SweepStrategy::Grid),
+            )
+            .unwrap();
+        let other = ProjectId(9);
+        assert_eq!(
+            acai.experiments.get(&acai.engine, other, status.id).unwrap_err().status(),
+            404
+        );
+        assert!(acai.experiments.list(&acai.engine, other).is_empty());
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let acai = seeded();
+        let mut s = spec("", SweepStrategy::Grid);
+        let err = acai
+            .experiments
+            .create(&acai.engine, &acai.profiler, &acai.provisioner, P, U, s.clone())
+            .unwrap_err();
+        assert_eq!(err.status(), 400);
+        s.name = "x".into();
+        s.template = "python train_mnist.py --epoch 3".into(); // no hints
+        assert_eq!(
+            acai.experiments
+                .create(&acai.engine, &acai.profiler, &acai.provisioner, P, U, s.clone())
+                .unwrap_err()
+                .status(),
+            400
+        );
+        // profile without objective
+        s.template = "python train_mnist.py --epoch {1,2}".into();
+        s.profile = Some("mnist".into());
+        assert_eq!(
+            acai.experiments
+                .create(&acai.engine, &acai.profiler, &acai.provisioner, P, U, s)
+                .unwrap_err()
+                .status(),
+            400
+        );
+    }
+
+    #[test]
+    fn submission_rejected_trials_mark_failed_without_blocking_others() {
+        // an experiment against a missing input file set: every trial is
+        // rejected at submission, the experiment still completes
+        let acai = Acai::boot_default();
+        let mut s = spec("ghost", SweepStrategy::Grid);
+        s.input_fileset = "no-such-set".into();
+        let status = acai
+            .experiments
+            .create(&acai.engine, &acai.profiler, &acai.provisioner, P, U, s)
+            .unwrap();
+        let done = acai.experiments.get(&acai.engine, P, status.id).unwrap();
+        assert_eq!(done.state, "completed");
+        assert_eq!(done.failed, 4);
+        assert_eq!(done.finished, 0);
+        let trials = acai.experiments.trials(&acai.engine, P, status.id).unwrap();
+        assert!(trials.iter().all(|t| t.job.is_none() && t.error.is_some()));
+    }
+}

@@ -13,8 +13,18 @@
 //!    agent executes the payload (real PJRT training for MNIST), uploads
 //!    the output file set, and the engine records provenance, parses
 //!    logs into metadata, bills the job, and frees the quota slot.
+//!
+//! On top of single jobs sits one shared **dependency-DAG scheduling
+//! path** ([`dag`]): pipelines ([`pipeline`]) are linear chains with
+//! pinned stage-to-stage versions, workflow replay re-runs the
+//! downstream provenance subgraph, and hyperparameter sweeps
+//! ([`sweep`], tracked by the persisted experiment registry
+//! [`experiment`]) fan out as edge-free DAGs — all bounded by the same
+//! per-(project, user) scheduler quota.
 
+pub mod dag;
 pub mod driver;
+pub mod experiment;
 pub mod launcher;
 pub mod lifecycle;
 pub mod logserver;
@@ -22,14 +32,20 @@ pub mod monitor;
 pub mod pipeline;
 pub mod registry;
 pub mod scheduler;
+pub mod sweep;
 
+pub use dag::{DagNode, DagReport, DagRun, JobDag, NodeOutcome};
 pub use driver::EngineDriver;
+pub use experiment::{
+    ExperimentSpec, ExperimentStatus, ExperimentStore, MetricMode, TrialStatus,
+};
 pub use launcher::Launcher;
 pub use lifecycle::JobState;
 pub use logserver::LogServer;
 pub use monitor::Monitor;
 pub use registry::{JobRecord, JobRegistry, JobSpec};
 pub use scheduler::{QueueKey, Scheduler};
+pub use sweep::{SearchSpace, SweepStrategy};
 
 use std::sync::{Arc, Mutex};
 

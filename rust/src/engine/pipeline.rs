@@ -8,12 +8,19 @@
 //! in a subgraph updates, users might want to update downstream models by
 //! re-running all jobs in the subgraph") — the jobs to re-run and their
 //! order come from the provenance DAG.
+//!
+//! Both are thin lowerings onto the shared dependency-DAG scheduler
+//! path ([`super::dag`]): a pipeline is a linear chain with pinned
+//! stage-to-stage versions, a replay is the downstream provenance
+//! subgraph with unpinned (latest) inputs.  Hyperparameter sweeps
+//! ([`super::sweep`], [`super::experiment`]) ride the same path as an
+//! edge-free fan-out.
 
 use crate::cluster::ResourceConfig;
 use crate::error::{AcaiError, Result};
 use crate::ids::{JobId, ProjectId, UserId};
 
-use super::registry::JobSpec;
+use super::dag::{DagNode, DagRun, JobDag, NodeOutcome};
 use super::ExecutionEngine;
 
 /// One stage of a pipeline.
@@ -44,54 +51,80 @@ pub struct PipelineRun {
 }
 
 impl Pipeline {
-    /// Execute the stages sequentially as one scheduled entity.  Each
-    /// stage waits for its predecessor (its input is the predecessor's
-    /// freshly created output version) — the engine still interleaves
-    /// other users' jobs between stages.
+    /// Lower the linear stage list onto the shared DAG scheduler path
+    /// ([`super::dag`]): stage N depends on (and consumes the pinned
+    /// output of) stage N-1.  Stage names must be unique — dag nodes
+    /// are keyed by name, so a duplicate is rejected loudly here where
+    /// the seed's positional chaining silently allowed the ambiguity.
+    pub fn to_dag(&self) -> Result<JobDag> {
+        if self.stages.is_empty() {
+            return Err(AcaiError::invalid("pipeline has no stages"));
+        }
+        let mut nodes = Vec::with_capacity(self.stages.len());
+        let mut prev: Option<String> = None;
+        for stage in &self.stages {
+            nodes.push(DagNode {
+                name: stage.name.clone(),
+                command: stage.command.clone(),
+                input_fileset: match prev {
+                    None => self.input_fileset.clone(),
+                    Some(_) => String::new(),
+                },
+                input_from: prev.clone(),
+                output_fileset: stage.output_fileset.clone(),
+                resources: stage.resources,
+                deps: prev.iter().cloned().collect(),
+            });
+            prev = Some(stage.name.clone());
+        }
+        JobDag::new(self.name.clone(), nodes)
+    }
+
+    /// Execute the stages as one scheduled entity via the DAG runner.
+    /// Each stage waits for its predecessor (its input is the
+    /// predecessor's freshly created output version) — the engine still
+    /// interleaves other users' jobs between stages, and a failed stage
+    /// cancels everything downstream of it.
     pub fn run(
         &self,
         engine: &ExecutionEngine,
         project: ProjectId,
         user: UserId,
     ) -> Result<PipelineRun> {
-        if self.stages.is_empty() {
-            return Err(AcaiError::invalid("pipeline has no stages"));
+        let dag = self.to_dag()?;
+        let report = DagRun::new(&dag, project, user).run(engine)?;
+        if let Some((stage, error)) = report.first_failure() {
+            return Err(AcaiError::Storage(format!(
+                "pipeline {}: stage {} failed: {}",
+                self.name, stage, error
+            )));
         }
-        let mut input = self.input_fileset.clone();
-        let mut jobs = Vec::with_capacity(self.stages.len());
-        let mut final_output = (String::new(), 0u32);
-        for stage in &self.stages {
-            let id = engine.submit(JobSpec {
-                project,
-                user,
-                name: format!("{}/{}", self.name, stage.name),
-                command: stage.command.clone(),
-                input_fileset: input.clone(),
-                output_fileset: stage.output_fileset.clone(),
-                resources: stage.resources,
-            })?;
-            engine.run_until_idle();
-            let record = engine.registry.get(id)?;
-            let version = record.output_version.ok_or_else(|| {
-                AcaiError::Storage(format!(
-                    "pipeline {}: stage {} failed: {}",
-                    self.name,
-                    stage.name,
-                    record.error.unwrap_or_else(|| "unknown".into())
-                ))
-            })?;
-            jobs.push(id);
-            // pin the exact version for the next stage (reproducibility)
-            input = format!("{}:{}", stage.output_fileset, version);
-            final_output = (stage.output_fileset.clone(), version);
-        }
-        Ok(PipelineRun { jobs, final_output })
+        let last = self.stages.last().expect("non-empty pipeline");
+        let final_version = match report.outcome(&last.name) {
+            Some(NodeOutcome::Finished { output_version, .. }) => *output_version,
+            _ => {
+                return Err(AcaiError::Storage(format!(
+                    "pipeline {}: final stage {} did not finish",
+                    self.name, last.name
+                )))
+            }
+        };
+        Ok(PipelineRun {
+            jobs: report.jobs(),
+            final_output: (last.output_fileset.clone(), final_version),
+        })
     }
 }
 
 /// Workflow replay: after `updated_fileset` gained a new version, re-run
-/// every job downstream of it (in provenance topological order) against
-/// the latest inputs.  Returns the new job ids, in execution order.
+/// every job downstream of it against the latest inputs.  The jobs to
+/// re-run and their order come from the provenance DAG, lowered onto the
+/// shared [`super::dag`] scheduler path as a sequential chain in replay
+/// order — versions assign deterministically even across repeated
+/// replays of the same fileset, unpinned "latest" inputs are whatever
+/// the preceding rerun just produced, and a failed rerun cancels the
+/// replays behind it instead of rerunning against stale data.  Returns
+/// the new job ids, in execution order.
 pub fn replay_downstream(
     engine: &ExecutionEngine,
     project: ProjectId,
@@ -116,27 +149,27 @@ pub fn replay_downstream(
             downstream.insert(node);
         }
     }
-    // Original jobs that produced those nodes, in replay (topo) order.
+    // One dag node per downstream provenance node with a producing job;
+    // replay_order keeps node construction deterministic.
     let order = engine.datalake.provenance.replay_order(project);
-    let mut new_jobs = Vec::new();
-    // Map from original output fileset name -> the replayed version, so
-    // chained jobs consume the refreshed artifacts.
-    for node in order {
-        if !downstream.contains(&node) {
+    let mut nodes: Vec<DagNode> = Vec::new();
+    for prov_node in order {
+        if !downstream.contains(&prov_node) {
             continue;
         }
-        let Some((fs_name, fs_version)) = node.rsplit_once(':') else {
+        let Some((fs_name, fs_version)) = prov_node.rsplit_once(':') else {
             continue;
         };
         let fs_version: u32 = fs_version.parse().unwrap_or(0);
         // find the job whose output was this fileset version
-        let producer = engine
+        let back = engine
             .datalake
             .provenance
-            .backward(project, fs_name, fs_version)
-            .into_iter()
-            .find(|e| e.kind == crate::datalake::provenance::KIND_JOB);
-        let Some(edge) = producer else {
+            .backward(project, fs_name, fs_version);
+        let Some(edge) = back
+            .iter()
+            .find(|e| e.kind == crate::datalake::provenance::KIND_JOB)
+        else {
             continue; // created by hand (fileset_creation), nothing to rerun
         };
         let original: JobId = edge
@@ -144,26 +177,38 @@ pub fn replay_downstream(
             .parse()
             .map_err(|_| AcaiError::Storage(format!("bad job id {}", edge.action)))?;
         let record = engine.registry.get(original)?;
-        // re-run against the *latest* version of its input file set
+        // re-run against the *latest* version of the input file set
+        // (ordering comes from the chain below; the data stays unpinned)
         let (input_name, _) = super::parse_fileset_ref(&record.spec.input_fileset)?;
-        let id = engine.submit(JobSpec {
-            project,
-            user,
-            name: format!("replay-{}", record.spec.name),
+        // Chain onto the previous replay node: without this, two
+        // downstream versions of the SAME fileset (from repeated
+        // replays) would submit in one wave and race for version
+        // numbers, and an unpinned "latest" input could resolve
+        // mid-rerun.  The chain keeps version assignment and consumed
+        // inputs deterministic (the seed's sequential submit-and-drain
+        // semantics); a failed rerun cancels the replays behind it.
+        let deps: Vec<String> = nodes
+            .last()
+            .map(|prev: &DagNode| vec![prev.name.clone()])
+            .unwrap_or_default();
+        nodes.push(DagNode {
+            name: prov_node.clone(),
             command: record.spec.command.clone(),
             input_fileset: input_name, // unpinned: latest
+            input_from: None,
             output_fileset: record.spec.output_fileset.clone(),
             resources: record.spec.resources,
-        })?;
-        engine.run_until_idle();
-        new_jobs.push(id);
+            deps,
+        });
     }
-    if new_jobs.is_empty() {
+    if nodes.is_empty() {
         return Err(AcaiError::not_found(format!(
             "nothing downstream of {updated_fileset} to replay"
         )));
     }
-    Ok(new_jobs)
+    let dag = JobDag::new(format!("replay-{updated_fileset}"), nodes)?;
+    let report = DagRun::new(&dag, project, user).run(engine)?;
+    Ok(report.jobs())
 }
 
 #[cfg(test)]

@@ -1,0 +1,194 @@
+//! Hyperparameter search spaces (paper §1: "many such pipelines may be
+//! required to find the best model within a search space of model
+//! configurations").
+//!
+//! A [`SearchSpace`] is a profiler command template
+//! (`python train.py --epoch {1,2,5} --lr {0.1,0.3}`, see
+//! [`crate::profiler::CommandTemplate`]) plus a [`SweepStrategy`] that
+//! decides which points of the hint grid become trials:
+//!
+//! - [`SweepStrategy::Grid`] — the full Cartesian product, in template
+//!   order (first hint varies slowest);
+//! - [`SweepStrategy::Random`] — `samples` independent draws over the
+//!   hint sets, seeded through the deterministic [`crate::prng::Rng`]
+//!   so a sweep is replayable from its seed (draws are with
+//!   replacement; duplicate points are legal trials).
+//!
+//! Point expansion is pure — the experiment subsystem
+//! ([`super::experiment`]) turns points into jobs.
+
+use crate::error::{AcaiError, Result};
+use crate::prng::Rng;
+use crate::profiler::CommandTemplate;
+
+/// Ceiling on the number of trials a single sweep may expand to — a
+/// runaway grid must fail loudly at the edge, not enqueue forever.
+pub const MAX_TRIALS: usize = 4096;
+
+/// How trial points are drawn from the template's hint sets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepStrategy {
+    /// Full Cartesian product of every `{a,b,c}` hint set.
+    Grid,
+    /// `samples` seeded draws, each hint sampled independently.
+    Random { samples: usize, seed: u64 },
+}
+
+impl SweepStrategy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SweepStrategy::Grid => "grid",
+            SweepStrategy::Random { .. } => "random",
+        }
+    }
+}
+
+/// A search space over a command template's hinted arguments.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub template: CommandTemplate,
+    pub strategy: SweepStrategy,
+}
+
+impl SearchSpace {
+    /// Parse the template and validate the strategy against it.
+    pub fn parse(template: &str, strategy: SweepStrategy) -> Result<SearchSpace> {
+        let template = CommandTemplate::parse(template)?;
+        if template.hints.is_empty() {
+            return Err(AcaiError::invalid(
+                "sweep template needs at least one {a,b,c} hint set",
+            ));
+        }
+        let space = SearchSpace { template, strategy };
+        let n = space.trial_count();
+        if n == 0 {
+            return Err(AcaiError::invalid("sweep expands to zero trials"));
+        }
+        if n > MAX_TRIALS {
+            return Err(AcaiError::invalid(format!(
+                "sweep expands to {n} trials (max {MAX_TRIALS})"
+            )));
+        }
+        Ok(space)
+    }
+
+    /// How many trials [`SearchSpace::points`] will produce.  A grid
+    /// product that overflows saturates to `usize::MAX`, so a crafted
+    /// giant template trips the [`MAX_TRIALS`] cap instead of wrapping
+    /// past it (and then materializing the true product).
+    pub fn trial_count(&self) -> usize {
+        match self.strategy {
+            SweepStrategy::Grid => self
+                .template
+                .hints
+                .iter()
+                .try_fold(1usize, |acc, (_, opts)| acc.checked_mul(opts.len()))
+                .unwrap_or(usize::MAX),
+            SweepStrategy::Random { samples, .. } => samples,
+        }
+    }
+
+    /// The trial points, deterministic for a given strategy (and seed).
+    /// Each point assigns every hinted argument one value, in template
+    /// order — ready for [`CommandTemplate::render`].
+    pub fn points(&self) -> Vec<Vec<(String, f64)>> {
+        match self.strategy {
+            SweepStrategy::Grid => self.template.combinations(),
+            SweepStrategy::Random { samples, seed } => {
+                let mut rng = Rng::new(seed);
+                (0..samples)
+                    .map(|_| {
+                        self.template
+                            .hints
+                            .iter()
+                            .map(|(name, opts)| {
+                                let pick = rng.below(opts.len() as u64) as usize;
+                                (name.clone(), opts[pick])
+                            })
+                            .collect()
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TEMPLATE: &str = "python train_mnist.py --epoch {1,2,3} --learning-rate {0.1,0.2,0.3}";
+
+    #[test]
+    fn grid_expands_the_full_cartesian_product() {
+        let space = SearchSpace::parse(TEMPLATE, SweepStrategy::Grid).unwrap();
+        let points = space.points();
+        assert_eq!(points.len(), 9);
+        assert_eq!(space.trial_count(), 9);
+        // first hint varies slowest (template order)
+        assert_eq!(points[0], vec![("epoch".into(), 1.0), ("learning-rate".into(), 0.1)]);
+        assert_eq!(points[8], vec![("epoch".into(), 3.0), ("learning-rate".into(), 0.3)]);
+        // every point is unique
+        let rendered: std::collections::HashSet<String> =
+            points.iter().map(|p| space.template.render(p)).collect();
+        assert_eq!(rendered.len(), 9);
+    }
+
+    #[test]
+    fn random_is_seed_deterministic() {
+        let s1 = SearchSpace::parse(
+            TEMPLATE,
+            SweepStrategy::Random { samples: 12, seed: 7 },
+        )
+        .unwrap();
+        let s2 = SearchSpace::parse(
+            TEMPLATE,
+            SweepStrategy::Random { samples: 12, seed: 7 },
+        )
+        .unwrap();
+        assert_eq!(s1.points(), s2.points());
+        assert_eq!(s1.points().len(), 12);
+        let other = SearchSpace::parse(
+            TEMPLATE,
+            SweepStrategy::Random { samples: 12, seed: 8 },
+        )
+        .unwrap();
+        assert_ne!(s1.points(), other.points(), "different seed, different draw");
+        // every drawn value comes from the hint sets
+        for point in s1.points() {
+            assert!([1.0, 2.0, 3.0].contains(&point[0].1));
+            assert!([0.1, 0.2, 0.3].contains(&point[1].1));
+        }
+    }
+
+    #[test]
+    fn degenerate_spaces_are_rejected() {
+        // no hints at all
+        assert!(SearchSpace::parse(
+            "python train_mnist.py --epoch 3",
+            SweepStrategy::Grid
+        )
+        .is_err());
+        // zero samples
+        assert!(SearchSpace::parse(
+            TEMPLATE,
+            SweepStrategy::Random { samples: 0, seed: 1 }
+        )
+        .is_err());
+        // over the trial ceiling
+        assert!(SearchSpace::parse(
+            TEMPLATE,
+            SweepStrategy::Random { samples: MAX_TRIALS + 1, seed: 1 }
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rendered_points_are_valid_job_commands() {
+        let space = SearchSpace::parse(TEMPLATE, SweepStrategy::Grid).unwrap();
+        for point in space.points() {
+            let cmd = space.template.render(&point);
+            crate::workload::JobCommand::parse(&cmd).unwrap();
+        }
+    }
+}

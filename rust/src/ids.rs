@@ -69,6 +69,10 @@ id_type!(
 id_type!(
     /// A profiling template (command template + fitted model).
     TemplateId, "tmpl");
+id_type!(
+    /// An experiment: one hyperparameter sweep fanned out as trials
+    /// (tracked by [`crate::engine::ExperimentStore`]).
+    ExperimentId, "exp");
 
 /// Monotonic id generator (one per platform instance). Ids start at 1.
 #[derive(Debug)]

@@ -23,10 +23,13 @@
 //! 3. **ACAI services** — the paper's contribution: [`credential`],
 //!    [`datalake`], [`engine`], [`pricing`], [`profiler`],
 //!    [`autoprovision`], [`workload`], [`sdk`], [`usability`].  The
-//!    datalake and the engine's job registry hold `Arc<dyn Table>`
-//!    handles, never concrete store internals; per-key read-modify-write
-//!    preserves the paper's sequential version assignment (§4.4.3)
-//!    without cross-key serialization.
+//!    datalake, the engine's job registry, and the experiment registry
+//!    ([`engine::experiment`]) hold `Arc<dyn Table>` handles, never
+//!    concrete store internals; per-key read-modify-write preserves the
+//!    paper's sequential version assignment (§4.4.3) without cross-key
+//!    serialization.  Pipelines, workflow replay, and hyperparameter
+//!    sweeps share one dependency-DAG scheduling path ([`engine::dag`])
+//!    under the per-user quota.
 //! 4. **Runtime bridge** — [`runtime`]: loads the AOT-lowered JAX/Pallas
 //!    modules (`artifacts/*.hlo.txt`) via PJRT and executes them from the
 //!    hot paths (profiler fit/predict, the MLP job payload); the PJRT
@@ -34,11 +37,12 @@
 //! 5. **API tier** — [`api`]: the versioned `/v1` REST edge — a
 //!    path-template router with typed parameters and a middleware chain
 //!    (request-id, per-route metrics, token auth), strict DTO codecs
-//!    with the uniform error envelope, and an **async job lifecycle**
-//!    (`POST /v1/jobs` → 202, completion via the background
-//!    [`engine::EngineDriver`]).  The [`sdk`] exposes the same surface
-//!    through the `AcaiApi` trait, implemented both in-process
-//!    ([`sdk::Client`]) and over the wire ([`sdk::RemoteClient`]).
+//!    with the uniform error envelope, and an **async job + experiment
+//!    lifecycle** (`POST /v1/jobs` and `POST /v1/experiments` → 202,
+//!    completion via the background [`engine::EngineDriver`]).  The
+//!    [`sdk`] exposes the same surface through the `AcaiApi` trait,
+//!    implemented both in-process ([`sdk::Client`]) and over the wire
+//!    ([`sdk::RemoteClient`]).
 //!
 //! See `DESIGN.md` for the substitution table, the `/v1` route table,
 //! and the experiment index.

@@ -8,7 +8,7 @@ use crate::cluster::Cluster;
 pub use crate::config::PlatformConfig;
 use crate::credential::CredentialServer;
 use crate::datalake::DataLake;
-use crate::engine::{EngineDriver, ExecutionEngine};
+use crate::engine::{EngineDriver, ExecutionEngine, ExperimentStore};
 use crate::error::Result;
 use crate::kvstore::KvStore;
 use crate::objectstore::ObjectStore;
@@ -30,6 +30,9 @@ pub struct Acai {
     pub engine: Arc<ExecutionEngine>,
     pub profiler: Profiler,
     pub provisioner: AutoProvisioner,
+    /// Experiment registry (hyperparameter sweeps + trial tracking),
+    /// persisted on the same storage table tier as the data lake.
+    pub experiments: ExperimentStore,
     pub pricing: PricingModel,
     pub runtime: Option<Arc<Runtime>>,
     objects: ObjectStore,
@@ -51,7 +54,8 @@ impl Acai {
             None => KvStore::in_memory(),
         });
         let objects = ObjectStore::new(clock.clone(), bus.clone());
-        let datalake = DataLake::new(kv, objects.clone(), bus.clone(), clock.clone());
+        let datalake = DataLake::new(kv.clone(), objects.clone(), bus.clone(), clock.clone());
+        let experiments = ExperimentStore::with_table(kv);
         let cluster = Cluster::new(config.cluster.clone(), clock.clone());
         let runtime = match &config.artifacts_dir {
             Some(dir) => Some(Arc::new(Runtime::load(dir)?)),
@@ -86,6 +90,7 @@ impl Acai {
             engine,
             profiler,
             provisioner,
+            experiments,
             pricing,
             runtime,
             objects,

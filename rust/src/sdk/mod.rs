@@ -30,10 +30,12 @@ use crate::cluster::ResourceConfig;
 use crate::credential::Identity;
 use crate::datalake::metadata::ArtifactKind;
 use crate::docstore::Clause;
-use crate::engine::{JobRecord, JobSpec};
+use crate::engine::{
+    ExperimentSpec, ExperimentStatus, JobRecord, JobSpec, MetricMode, TrialStatus,
+};
 use crate::error::{AcaiError, Result};
 use crate::graphstore::Edge;
-use crate::ids::{JobId, TemplateId, Version};
+use crate::ids::{ExperimentId, JobId, TemplateId, Version};
 use crate::json::Json;
 use crate::platform::Acai;
 
@@ -113,6 +115,32 @@ pub trait AcaiApi {
     /// Block until the job is terminal (poll-based; never drives the
     /// engine in a remote client).
     fn await_job(&self, id: JobId) -> Result<JobStatus>;
+
+    // ---- experiments (hyperparameter sweeps) ----
+
+    /// Start a sweep: expand the search space, fan every trial out
+    /// through the scheduler, and return the tracking record (trials
+    /// complete asynchronously, like jobs).
+    fn create_experiment(&self, spec: &ExperimentSpec) -> Result<ExperimentStatus>;
+
+    /// Poll one experiment's summary.
+    fn experiment(&self, id: ExperimentId) -> Result<ExperimentStatus>;
+
+    /// List the project's experiments (cursor-paginated, id order).
+    fn experiments(&self, page: &PageReq) -> Result<Page<ExperimentStatus>>;
+
+    /// List an experiment's trials (cursor-paginated, index order).
+    fn experiment_trials(&self, id: ExperimentId, page: &PageReq)
+        -> Result<Page<TrialStatus>>;
+
+    /// The best finished trial by a reported metric.  Deterministic:
+    /// ties resolve to the lowest trial index.
+    fn best_trial(&self, id: ExperimentId, metric: &str, mode: MetricMode)
+        -> Result<TrialStatus>;
+
+    /// Block until every trial is terminal (poll-based; never drives
+    /// the engine in a remote client).
+    fn await_experiment(&self, id: ExperimentId) -> Result<ExperimentStatus>;
 
     // ---- profiler + auto-provisioner ----
 
@@ -628,6 +656,77 @@ impl AcaiApi for Client {
             // background driver on the engine's drive lock)
             self.acai.engine.run_until_idle();
             let status = self.job_status(id)?;
+            if status.terminal() {
+                return Ok(status);
+            }
+            if Instant::now() > deadline {
+                return Err(AcaiError::Storage(format!("timed out waiting for {id}")));
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    fn create_experiment(&self, spec: &ExperimentSpec) -> Result<ExperimentStatus> {
+        self.acai.experiments.create(
+            &self.acai.engine,
+            &self.acai.profiler,
+            &self.acai.provisioner,
+            self.identity.project,
+            self.identity.user,
+            spec.clone(),
+        )
+    }
+
+    fn experiment(&self, id: ExperimentId) -> Result<ExperimentStatus> {
+        self.acai
+            .experiments
+            .get(&self.acai.engine, self.identity.project, id)
+    }
+
+    fn experiments(&self, page: &PageReq) -> Result<Page<ExperimentStatus>> {
+        let page = page.checked()?;
+        let statuses = self
+            .acai
+            .experiments
+            .list(&self.acai.engine, self.identity.project);
+        Ok(cut_page(statuses, &page, |s| num_cursor(s.id.raw())))
+    }
+
+    fn experiment_trials(
+        &self,
+        id: ExperimentId,
+        page: &PageReq,
+    ) -> Result<Page<TrialStatus>> {
+        let page = page.checked()?;
+        let trials = self
+            .acai
+            .experiments
+            .trials(&self.acai.engine, self.identity.project, id)?;
+        Ok(cut_page(trials, &page, |t| num_cursor(t.index as u64)))
+    }
+
+    fn best_trial(
+        &self,
+        id: ExperimentId,
+        metric: &str,
+        mode: MetricMode,
+    ) -> Result<TrialStatus> {
+        self.acai
+            .experiments
+            .best(&self.acai.engine, self.identity.project, id, metric, mode)
+    }
+
+    fn await_experiment(&self, id: ExperimentId) -> Result<ExperimentStatus> {
+        let deadline = Instant::now() + AWAIT_JOB_TIMEOUT;
+        loop {
+            let status = self.experiment(id)?;
+            if status.terminal() {
+                return Ok(status);
+            }
+            // drive the engine forward ourselves (serializes with any
+            // background driver on the engine's drive lock)
+            self.acai.engine.run_until_idle();
+            let status = self.experiment(id)?;
             if status.terminal() {
                 return Ok(status);
             }

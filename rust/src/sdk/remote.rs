@@ -19,9 +19,10 @@ use crate::api::router::percent_encode;
 use crate::autoprovision::Objective;
 use crate::datalake::metadata::ArtifactKind;
 use crate::docstore::Clause;
+use crate::engine::{ExperimentSpec, ExperimentStatus, MetricMode, TrialStatus};
 use crate::error::{AcaiError, Result};
 use crate::graphstore::Edge;
-use crate::ids::{JobId, TemplateId, Version};
+use crate::ids::{ExperimentId, JobId, TemplateId, Version};
 use crate::json::Json;
 
 use super::{AcaiApi, JobRequest};
@@ -373,6 +374,60 @@ impl AcaiApi for RemoteClient {
         let deadline = Instant::now() + AWAIT_JOB_TIMEOUT;
         loop {
             let status = self.job_status(id)?;
+            if status.terminal() {
+                return Ok(status);
+            }
+            if Instant::now() > deadline {
+                return Err(AcaiError::Storage(format!("timed out waiting for {id}")));
+            }
+            std::thread::sleep(POLL_DELAY);
+        }
+    }
+
+    fn create_experiment(&self, spec: &ExperimentSpec) -> Result<ExperimentStatus> {
+        let resp = self.post("/v1/experiments", &dto::experiment_spec_to_json(spec))?;
+        dto::experiment_status_from_json(&resp)
+    }
+
+    fn experiment(&self, id: ExperimentId) -> Result<ExperimentStatus> {
+        dto::experiment_status_from_json(&self.get(&format!("/v1/experiments/{id}"))?)
+    }
+
+    fn experiments(&self, page: &PageReq) -> Result<Page<ExperimentStatus>> {
+        dto::page_from_json(
+            &self.get(&with_page("/v1/experiments", page))?,
+            dto::experiment_status_from_json,
+        )
+    }
+
+    fn experiment_trials(
+        &self,
+        id: ExperimentId,
+        page: &PageReq,
+    ) -> Result<Page<TrialStatus>> {
+        dto::page_from_json(
+            &self.get(&with_page(&format!("/v1/experiments/{id}/trials"), page))?,
+            dto::trial_status_from_json,
+        )
+    }
+
+    fn best_trial(
+        &self,
+        id: ExperimentId,
+        metric: &str,
+        mode: MetricMode,
+    ) -> Result<TrialStatus> {
+        dto::trial_status_from_json(&self.get(&format!(
+            "/v1/experiments/{id}/best?metric={}&mode={}",
+            percent_encode(metric),
+            mode.as_str()
+        ))?)
+    }
+
+    fn await_experiment(&self, id: ExperimentId) -> Result<ExperimentStatus> {
+        let deadline = Instant::now() + AWAIT_JOB_TIMEOUT;
+        loop {
+            let status = self.experiment(id)?;
             if status.terminal() {
                 return Ok(status);
             }

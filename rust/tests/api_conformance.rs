@@ -14,8 +14,9 @@ use acai::autoprovision::Objective;
 use acai::cluster::ResourceConfig;
 use acai::datalake::metadata::ArtifactKind;
 use acai::docstore::Clause;
+use acai::engine::{ExperimentSpec, MetricMode, SweepStrategy};
 use acai::httpd::Server;
-use acai::ids::JobId;
+use acai::ids::{ExperimentId, JobId};
 use acai::json::Json;
 use acai::sdk::{AcaiApi, Client, JobRequest, RemoteClient};
 use acai::Acai;
@@ -31,6 +32,18 @@ fn job_request(name: &str, input: &str, output: &str) -> JobRequest {
         input_fileset: input.into(),
         output_fileset: output.into(),
         resources: ResourceConfig::new(1.0, 1024),
+    }
+}
+
+fn experiment_spec(name: &str, template: &str, input: &str) -> ExperimentSpec {
+    ExperimentSpec {
+        name: name.into(),
+        template: template.into(),
+        input_fileset: input.into(),
+        strategy: SweepStrategy::Grid,
+        resources: ResourceConfig::new(1.0, 1024),
+        profile: None,
+        objective: None,
     }
 }
 
@@ -164,6 +177,59 @@ fn conformance_suite(api: &dyn AcaiApi) {
     assert!(choice.predicted_cost > 0.0);
     assert!(choice.config.vcpus >= 0.5);
 
+    // ---- experiments: async sweep lifecycle ----
+    let exp = api
+        .create_experiment(&experiment_spec(
+            "sweep",
+            "python train_mnist.py --epoch {1,2} --learning-rate {0.1,0.3}",
+            "corpus",
+        ))
+        .unwrap();
+    assert_eq!(exp.trials, 4);
+    let done = api.await_experiment(exp.id).unwrap();
+    assert_eq!(done.state, "completed");
+    assert_eq!(done.finished, 4);
+    assert_eq!(done.failed, 0);
+
+    // experiment listing + trial cursor pagination
+    let exps = api.experiments(&page(10, None)).unwrap();
+    assert!(exps.items.iter().any(|e| e.id == exp.id));
+    let t1 = api.experiment_trials(exp.id, &page(3, None)).unwrap();
+    assert_eq!(t1.items.len(), 3);
+    let cursor = t1.next.clone().expect("more trials");
+    let t2 = api.experiment_trials(exp.id, &page(10, Some(cursor))).unwrap();
+    assert_eq!(t2.items.len(), 1);
+    assert!(t2.next.is_none());
+    for trial in t1.items.iter().chain(&t2.items) {
+        assert_eq!(trial.state, "finished");
+        assert!(trial.cost.unwrap() > 0.0);
+        assert!(trial.metric("training_loss").is_some());
+        assert!(trial.output.is_some(), "provenance anchor recorded");
+    }
+
+    // deterministic best-trial selection: loss decays with epochs, and
+    // the tie between the two epoch-2 points resolves to the lower index
+    let best = api.best_trial(exp.id, "training_loss", MetricMode::Min).unwrap();
+    assert_eq!(best.index, 2);
+    assert_eq!(best.args[0], ("epoch".to_string(), 2.0));
+
+    // per-trial auto-provisioning from the fitted "mnist" profile
+    let mut prov_spec = experiment_spec(
+        "provisioned",
+        "python train_mnist.py --epoch {1,2}",
+        "corpus",
+    );
+    prov_spec.profile = Some("mnist".into());
+    prov_spec.objective = Some(Objective::MinCost { max_runtime: 200.0 });
+    let prov = api.create_experiment(&prov_spec).unwrap();
+    let prov_done = api.await_experiment(prov.id).unwrap();
+    assert_eq!(prov_done.finished, 2);
+    let prov_trials = api.experiment_trials(prov.id, &page(10, None)).unwrap();
+    for trial in &prov_trials.items {
+        assert!(trial.predicted_runtime.unwrap() <= 200.0);
+        assert!(trial.predicted_cost.unwrap() > 0.0);
+    }
+
     // ---- typed error statuses survive the boundary ----
     // page invariants are shared: limit 0 is a 400 on both clients
     assert_eq!(api.files("/", &page(0, None)).unwrap_err().status(), 400);
@@ -190,6 +256,28 @@ fn conformance_suite(api: &dyn AcaiApi) {
             .unwrap_err()
             .status(),
         404
+    );
+    // experiment errors: unknown ids 404, bad pages and specs 400
+    assert_eq!(api.experiment(ExperimentId(99_999)).unwrap_err().status(), 404);
+    assert_eq!(
+        api.experiment_trials(ExperimentId(99_999), &page(10, None)).unwrap_err().status(),
+        404
+    );
+    assert_eq!(
+        api.best_trial(exp.id, "no-such-metric", MetricMode::Min).unwrap_err().status(),
+        404
+    );
+    assert_eq!(api.experiments(&page(0, None)).unwrap_err().status(), 400);
+    // a sweep template without hint sets cannot expand
+    assert_eq!(
+        api.create_experiment(&experiment_spec(
+            "flat",
+            "python train_mnist.py --epoch 3",
+            "corpus"
+        ))
+        .unwrap_err()
+        .status(),
+        400
     );
 }
 
@@ -223,6 +311,72 @@ fn remote_connect_validates_tokens() {
     );
     let (_p, token) = acai.credentials.create_project(&root, "p", "u").unwrap();
     assert!(RemoteClient::connect(server.addr(), token).is_ok());
+}
+
+/// The acceptance sweep: 100 trials through the experiment surface.
+/// Returns (winner index, winner metric) so the two client runs can be
+/// compared for determinism.
+fn hundred_trial_sweep(api: &dyn AcaiApi) -> (usize, f64) {
+    api.upload(&[("/data/corpus.bin", b"bytes")]).unwrap();
+    api.make_file_set("data", &["/data/corpus.bin"]).unwrap();
+    let exp = api
+        .create_experiment(&experiment_spec(
+            "century",
+            "python train_mnist.py \
+             --epoch {1,2,3,4,5,6,7,8,9,10} \
+             --learning-rate {0.05,0.1,0.15,0.2,0.25,0.3,0.35,0.4,0.45,0.5}",
+            "data",
+        ))
+        .unwrap();
+    assert_eq!(exp.trials, 100);
+    let done = api.await_experiment(exp.id).unwrap();
+    assert_eq!(done.state, "completed");
+    assert_eq!(done.finished, 100);
+    // every trial record persisted with metrics, billing and provenance
+    let mut seen = 0usize;
+    let mut cursor: Option<String> = None;
+    loop {
+        let out = api.experiment_trials(exp.id, &page(37, cursor.clone())).unwrap();
+        for trial in &out.items {
+            assert_eq!(trial.index, seen);
+            seen += 1;
+            assert_eq!(trial.state, "finished");
+            assert!(trial.cost.unwrap() > 0.0);
+            assert!(trial.metric("training_loss").is_some());
+            assert!(trial.output.is_some());
+        }
+        match out.next {
+            Some(c) => cursor = Some(c),
+            None => break,
+        }
+    }
+    assert_eq!(seen, 100);
+    let best = api.best_trial(exp.id, "training_loss", MetricMode::Min).unwrap();
+    (best.index, best.metric("training_loss").unwrap())
+}
+
+#[test]
+fn hundred_trial_sweep_is_deterministic_across_clients() {
+    // in-process client on a fresh platform
+    let acai = Arc::new(Acai::boot_default());
+    let root = acai.credentials.root_token().to_string();
+    let (_p, token) = acai.credentials.create_project(&root, "c100", "alice").unwrap();
+    let client = Client::connect(acai.clone(), &token).unwrap();
+    let local = hundred_trial_sweep(&client);
+
+    // remote client on its own fresh platform behind real HTTP
+    let acai2 = Arc::new(Acai::boot_default());
+    let root2 = acai2.credentials.root_token().to_string();
+    let server = Server::serve(0, make_handler(acai2.clone())).unwrap();
+    let (_proj, remote) =
+        RemoteClient::create_project(server.addr(), &root2, "c100", "alice").unwrap();
+    let wire = hundred_trial_sweep(&remote);
+
+    assert_eq!(local.0, wire.0, "winner index must agree across clients");
+    assert!((local.1 - wire.1).abs() < 1e-12, "winner metric must agree");
+    // grid order: epoch varies slowest, so indices 90..=99 are the
+    // epoch-10 points; their losses tie and the lowest index wins
+    assert_eq!(local.0, 90);
 }
 
 #[test]
