@@ -88,6 +88,7 @@ pub fn profile_and_eval(acai: &Arc<Acai>, scale: f64) -> Vec<EvalTrial> {
                         input_fileset: "mnist".into(),
                         output_fileset: "eval-out".into(),
                         resources: res,
+                        pool: None,
                     })
                     .expect("submit");
                 pending.push((id, epochs, res));

@@ -18,6 +18,7 @@ fn run(acai: &std::sync::Arc<acai::Acai>, epochs: u32, cpu: f64) -> f64 {
             input_fileset: "mnist".into(),
             output_fileset: "fig10-out".into(),
             resources: ResourceConfig::new(cpu, 2048),
+            pool: None,
         })
         .unwrap();
     acai.engine.run_until_idle();

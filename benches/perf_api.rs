@@ -77,6 +77,7 @@ fn main() {
             input_fileset: String::new(),
             output_fileset: "out".into(),
             resources: ResourceConfig::new(0.5, 512),
+            pool: None,
         })
         .unwrap();
     let status = client.await_job(job).unwrap();

@@ -1,0 +1,116 @@
+//! Perf: elastic cluster substrate — placement decision throughput at a
+//! 1k-job backlog, and autoscale convergence for a 10×-queue spike.
+//!
+//! The placement engine must stay off the scheduling hot path's
+//! critical budget: every pump placement is one best-fit scan over the
+//! live node set, and the autoscaler must converge to a spike-sized
+//! fleet in a bounded number of ticks (not creep one node at a time).
+
+mod common;
+
+use acai::cluster::{
+    placement, AutoscalePolicy, Cluster, ClusterConfig, NodeSpec, PoolConfig, ResourceConfig,
+};
+use acai::simclock::SimClock;
+use common::*;
+
+const NODE: NodeSpec = NodeSpec {
+    vcpus: 16.0,
+    mem_mb: 65536,
+};
+
+fn backlog(n: usize) -> Vec<ResourceConfig> {
+    // deterministic mixed shapes: 0.5–4 vCPU, 512–4096 MB
+    (0..n)
+        .map(|i| {
+            ResourceConfig::new(
+                ((i % 8) as f64 + 1.0) * 0.5,
+                ((i % 14) as u32 + 2) * 256,
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    header(
+        "Perf: cluster placement + autoscale",
+        "ISSUE 4 substrate — the §5 economics run on this placement/scaling loop",
+    );
+
+    // ---- live placement: launch/kill cycles against a 64-node fleet ----
+    let clock = SimClock::new();
+    let cluster = Cluster::new(
+        ClusterConfig::fixed(NODE, 64),
+        clock.clone(),
+    );
+    let reqs = backlog(1000);
+    let mut i = 0usize;
+    let mut live: Vec<acai::ids::ContainerId> = Vec::new();
+    let ns = bench_ns(1_000, 100_000, || {
+        // steady state: place one container, kill the oldest once the
+        // fleet carries ~256 — every iteration is one placement decision
+        let id = cluster
+            .launch(reqs[i % reqs.len()], 1e9)
+            .expect("fleet has room");
+        live.push(id);
+        i += 1;
+        if live.len() > 256 {
+            cluster.kill(live.remove(0)).unwrap();
+        }
+    });
+    println!(
+        "placement: {ns:.0} ns per decision ({:.0}k decisions/s) over 64 nodes, ~256 live",
+        1e6 / ns
+    );
+    assert!(ns < 1_000_000.0, "placement decision too slow: {ns} ns");
+
+    // ---- batch planner: BFD over a 1k-job backlog ----
+    let plan_ns = bench_ns(10, 200, || {
+        let (nodes, skipped) = placement::plan_nodes(NODE, &reqs);
+        assert!(nodes > 0 && skipped == 0);
+    });
+    let (nodes_needed, _) = placement::plan_nodes(NODE, &reqs);
+    println!(
+        "bfd plan: {:.2} ms to pack 1k queued jobs into {nodes_needed} nodes",
+        plan_ns / 1e6
+    );
+
+    // ---- autoscale convergence: a 10× queue spike ----
+    for (label, cooldown) in [("no cooldown", 0.0), ("5s cooldown", 5.0)] {
+        let clock = SimClock::new();
+        let config = ClusterConfig {
+            pools: vec![PoolConfig {
+                name: "spot".into(),
+                spec: NODE,
+                price_multiplier: 0.3,
+                min_nodes: 2,
+                max_nodes: 256,
+                preemption_mean_secs: 0.0,
+            }],
+            autoscale: AutoscalePolicy {
+                jobs_per_node: 4,
+                up_cooldown: cooldown,
+                down_idle: 30.0,
+            },
+            ..Default::default()
+        };
+        let cluster = Cluster::new(config, clock.clone());
+        let baseline_queue = 8usize; // steady state sized for 2 nodes
+        let spike = baseline_queue * 10; // the 10× spike
+        cluster.autoscale(baseline_queue);
+        let start_nodes = cluster.node_count();
+        let target = (spike as f64 / 4.0).ceil() as usize;
+        let mut steps = 0usize;
+        while cluster.node_count() < target {
+            steps += 1;
+            assert!(steps <= 64, "autoscaler failed to converge");
+            cluster.autoscale(spike);
+            clock.advance(1.0); // one virtual second per tick
+        }
+        println!(
+            "autoscale [{label}]: {start_nodes} -> {} nodes for a 10x spike in {steps} tick(s)",
+            cluster.node_count()
+        );
+        assert!(steps >= 1);
+    }
+}

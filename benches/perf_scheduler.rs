@@ -64,6 +64,7 @@ fn main() {
                 input_fileset: "mnist".into(),
                 output_fileset: format!("perf-{n}-out"),
                 resources: acai::cluster::ResourceConfig::new(0.5, 512),
+                pool: None,
             })
             .unwrap();
         acai.engine.run_until_idle();

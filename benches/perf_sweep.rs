@@ -40,6 +40,7 @@ fn main() {
                     resources: ResourceConfig::new(0.5, 512),
                     profile: None,
                     objective: None,
+                    pool: None,
                 },
             )
             .expect("create sweep");

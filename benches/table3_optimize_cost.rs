@@ -23,6 +23,7 @@ fn run_avg(acai: &std::sync::Arc<acai::Acai>, epochs: f64, res: ResourceConfig) 
                 input_fileset: "mnist".into(),
                 output_fileset: format!("t3-out-{epochs}-{i}"),
                 resources: res,
+                pool: None,
             })
             .unwrap();
         acai.engine.run_until_idle();

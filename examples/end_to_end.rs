@@ -81,6 +81,7 @@ fn main() -> acai::Result<()> {
                 input_fileset: "mnist".into(),
                 output_fileset: format!("t2-{tag}-{epochs}-model"),
                 resources: res,
+                pool: None,
             })?;
             client.wait_all();
             let r = client.job(job)?;

@@ -44,6 +44,7 @@ fn main() -> acai::Result<()> {
                 input_fileset: "frames".into(),
                 output_fileset: format!("{name}-model"),
                 resources: ResourceConfig::new(2.0, 2048),
+                pool: None,
             })?;
             jobs.push((job, name));
         }

@@ -47,6 +47,7 @@ fn main() -> acai::Result<()> {
             input_fileset: input.to_string(),
             output_fileset: format!("features-{i}"),
             resources: ResourceConfig::new(1.0, 1024),
+            pool: None,
         })?;
     }
     client.wait_all();

@@ -48,6 +48,7 @@ fn main() -> acai::Result<()> {
         input_fileset: "mnist".into(),
         output_fileset: "model".into(),
         resources: ResourceConfig::new(2.0, 2048),
+        pool: None,
     })?;
     client.wait_all();
 

@@ -44,6 +44,7 @@ fn main() -> acai::Result<()> {
         resources: ResourceConfig::new(2.0, 2048),
         profile: None,
         objective: None,
+        pool: None,
     })?;
     println!("submitted experiment {} with {} trials (quota k=4)", exp.id, exp.trials);
 

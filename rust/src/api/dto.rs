@@ -9,7 +9,9 @@
 //! through these codecs is what the conformance suite proves).
 
 use crate::autoprovision::{Decision, Objective};
-use crate::cluster::ResourceConfig;
+use crate::cluster::{
+    ClusterCounters, NodeSnapshot, NodeSpec, PoolConfig, PoolSnapshot, ResourceConfig,
+};
 use crate::datalake::metadata::ArtifactKind;
 use crate::docstore::{Clause, IndexKey};
 use crate::engine::{
@@ -87,6 +89,18 @@ pub fn opt_f64_field(obj: &JsonObject, key: &str) -> Result<Option<f64>> {
     match obj.get(key) {
         Some(Json::Num(n)) => Ok(Some(*n)),
         Some(Json::Null) | None => Ok(None),
+        Some(_) => Err(AcaiError::invalid(format!("field {key:?} must be a number"))),
+    }
+}
+
+/// Optional non-negative integer field (absent/null is fine; wrong
+/// type is not).
+pub fn opt_u64_field(obj: &JsonObject, key: &str) -> Result<Option<u64>> {
+    match obj.get(key) {
+        Some(Json::Null) | None => Ok(None),
+        Some(v @ Json::Num(_)) => v.as_u64().map(Some).ok_or_else(|| {
+            AcaiError::invalid(format!("field {key:?} must be a non-negative integer"))
+        }),
         Some(_) => Err(AcaiError::invalid(format!("field {key:?} must be a number"))),
     }
 }
@@ -357,15 +371,16 @@ impl FileEntry {
 // jobs
 // ---------------------------------------------------------------------
 
-/// Submission payload (`POST /v1/jobs`).  `input_fileset` is the only
-/// optional field (a job may take no input); everything else is
-/// required, so a typo'd or missing field fails loudly instead of
-/// submitting a half-empty job.
+/// Submission payload (`POST /v1/jobs`).  `input_fileset` (a job may
+/// take no input) and `pool` (a placement constraint; `None` = any
+/// pool) are the only optional fields; everything else is required, so
+/// a typo'd or missing field fails loudly instead of submitting a
+/// half-empty job.
 pub fn job_request_from_json(v: &Json) -> Result<JobRequest> {
     let obj = as_object(v)?;
     check_fields(
         obj,
-        &["name", "command", "input_fileset", "output_fileset", "vcpus", "mem_mb"],
+        &["name", "command", "input_fileset", "output_fileset", "vcpus", "mem_mb", "pool"],
     )?;
     Ok(JobRequest {
         name: str_field(obj, "name")?,
@@ -373,18 +388,22 @@ pub fn job_request_from_json(v: &Json) -> Result<JobRequest> {
         input_fileset: opt_str_field(obj, "input_fileset")?.unwrap_or_default(),
         output_fileset: str_field(obj, "output_fileset")?,
         resources: ResourceConfig::new(f64_field(obj, "vcpus")?, u32_field(obj, "mem_mb")?),
+        pool: opt_str_field(obj, "pool")?,
     })
 }
 
 pub fn job_request_to_json(r: &JobRequest) -> Json {
-    Json::obj()
+    let mut b = Json::obj()
         .field("name", r.name.as_str())
         .field("command", r.command.as_str())
         .field("input_fileset", r.input_fileset.as_str())
         .field("output_fileset", r.output_fileset.as_str())
         .field("vcpus", r.resources.vcpus)
-        .field("mem_mb", r.resources.mem_mb)
-        .build()
+        .field("mem_mb", r.resources.mem_mb);
+    if let Some(pool) = &r.pool {
+        b = b.field("pool", pool.as_str());
+    }
+    b.build()
 }
 
 /// Job status as seen through the API (the project-public subset of
@@ -401,6 +420,8 @@ pub struct JobStatus {
     pub cost: Option<f64>,
     pub output_version: Option<Version>,
     pub error: Option<String>,
+    /// Spot revocations this job survived (0 for on-demand runs).
+    pub preemptions: u64,
 }
 
 impl JobStatus {
@@ -419,6 +440,7 @@ impl JobStatus {
             cost: r.cost,
             output_version: r.output_version,
             error: r.error.clone(),
+            preemptions: r.preemptions,
         }
     }
 
@@ -441,6 +463,9 @@ impl JobStatus {
         if let Some(e) = &self.error {
             b = b.field("error", e.as_str());
         }
+        if self.preemptions > 0 {
+            b = b.field("preemptions", self.preemptions);
+        }
         b.build()
     }
 
@@ -456,6 +481,7 @@ impl JobStatus {
             cost: opt_f64_field(obj, "cost")?,
             output_version: opt_u32_field(obj, "output_version")?,
             error: opt_str_field(obj, "error")?,
+            preemptions: opt_u64_field(obj, "preemptions")?.unwrap_or(0),
         })
     }
 }
@@ -616,7 +642,7 @@ pub fn experiment_spec_from_json(v: &Json) -> Result<ExperimentSpec> {
         obj,
         &[
             "name", "template", "input_fileset", "strategy", "samples", "seed", "vcpus",
-            "mem_mb", "profile", "objective",
+            "mem_mb", "profile", "objective", "pool",
         ],
     )?;
     let strategy = match str_field(obj, "strategy")?.as_str() {
@@ -653,6 +679,7 @@ pub fn experiment_spec_from_json(v: &Json) -> Result<ExperimentSpec> {
         resources: ResourceConfig::new(f64_field(obj, "vcpus")?, u32_field(obj, "mem_mb")?),
         profile: opt_str_field(obj, "profile")?,
         objective,
+        pool: opt_str_field(obj, "pool")?,
     })
 }
 
@@ -672,6 +699,9 @@ pub fn experiment_spec_to_json(s: &ExperimentSpec) -> Json {
     }
     if let Some(o) = &s.objective {
         b = b.field("objective", objective_to_json(o));
+    }
+    if let Some(pool) = &s.pool {
+        b = b.field("pool", pool.as_str());
     }
     b.build()
 }
@@ -782,6 +812,205 @@ pub fn trial_status_from_json(v: &Json) -> Result<TrialStatus> {
         metrics: f64_pairs_from_json(obj, "metrics")?,
         error: opt_str_field(obj, "error")?,
     })
+}
+
+// ---------------------------------------------------------------------
+// cluster: node pools, nodes, counters
+// ---------------------------------------------------------------------
+
+/// Wire shape of one node-pool configuration (`PUT /v1/cluster/pools`
+/// body, and the config half of [`PoolStatus`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolSpec {
+    pub name: String,
+    pub vcpus: f64,
+    pub mem_mb: u32,
+    pub price_multiplier: f64,
+    pub min_nodes: usize,
+    pub max_nodes: usize,
+    pub preemption_mean_secs: f64,
+}
+
+impl PoolSpec {
+    pub fn from_config(c: &PoolConfig) -> PoolSpec {
+        PoolSpec {
+            name: c.name.clone(),
+            vcpus: c.spec.vcpus,
+            mem_mb: c.spec.mem_mb,
+            price_multiplier: c.price_multiplier,
+            min_nodes: c.min_nodes,
+            max_nodes: c.max_nodes,
+            preemption_mean_secs: c.preemption_mean_secs,
+        }
+    }
+
+    pub fn to_config(&self) -> PoolConfig {
+        PoolConfig {
+            name: self.name.clone(),
+            spec: NodeSpec {
+                vcpus: self.vcpus,
+                mem_mb: self.mem_mb,
+            },
+            price_multiplier: self.price_multiplier,
+            min_nodes: self.min_nodes,
+            max_nodes: self.max_nodes,
+            preemption_mean_secs: self.preemption_mean_secs,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("name", self.name.as_str())
+            .field("vcpus", self.vcpus)
+            .field("mem_mb", self.mem_mb)
+            .field("price_multiplier", self.price_multiplier)
+            .field("min_nodes", self.min_nodes)
+            .field("max_nodes", self.max_nodes)
+            .field("preemption_mean_secs", self.preemption_mean_secs)
+            .build()
+    }
+
+    /// Strict codec: `price_multiplier` defaults to 1.0 (on-demand) and
+    /// `preemption_mean_secs` to 0.0 (never revoked); everything else
+    /// is required.
+    pub fn from_json(v: &Json) -> Result<PoolSpec> {
+        let obj = as_object(v)?;
+        check_fields(
+            obj,
+            &[
+                "name",
+                "vcpus",
+                "mem_mb",
+                "price_multiplier",
+                "min_nodes",
+                "max_nodes",
+                "preemption_mean_secs",
+            ],
+        )?;
+        Ok(PoolSpec {
+            name: str_field(obj, "name")?,
+            vcpus: f64_field(obj, "vcpus")?,
+            mem_mb: u32_field(obj, "mem_mb")?,
+            price_multiplier: opt_f64_field(obj, "price_multiplier")?.unwrap_or(1.0),
+            min_nodes: u64_field(obj, "min_nodes")? as usize,
+            max_nodes: u64_field(obj, "max_nodes")? as usize,
+            preemption_mean_secs: opt_f64_field(obj, "preemption_mean_secs")?.unwrap_or(0.0),
+        })
+    }
+}
+
+/// One pool's config + live state (`GET /v1/cluster/pools`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolStatus {
+    pub spec: PoolSpec,
+    /// Current live node count.
+    pub nodes: usize,
+    /// Nodes lost to spot revocation so far.
+    pub preempted_nodes: u64,
+}
+
+impl PoolStatus {
+    pub fn from_snapshot(s: &PoolSnapshot) -> PoolStatus {
+        PoolStatus {
+            spec: PoolSpec::from_config(&s.config),
+            nodes: s.nodes,
+            preempted_nodes: s.preempted_nodes,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = self
+            .spec
+            .to_json()
+            .as_object()
+            .cloned()
+            .unwrap_or_default();
+        obj.set("nodes", self.nodes);
+        obj.set("preempted_nodes", self.preempted_nodes);
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(v: &Json) -> Result<PoolStatus> {
+        let obj = as_object(v)?;
+        let nodes = u64_field(obj, "nodes")? as usize;
+        let preempted_nodes = u64_field(obj, "preempted_nodes")?;
+        // the remaining fields are the spec; re-read them strictly
+        let mut spec_obj = obj.clone();
+        spec_obj.remove("nodes");
+        spec_obj.remove("preempted_nodes");
+        Ok(PoolStatus {
+            spec: PoolSpec::from_json(&Json::Obj(spec_obj))?,
+            nodes,
+            preempted_nodes,
+        })
+    }
+}
+
+/// One live node (`GET /v1/cluster/nodes`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeStatus {
+    /// `node-N` id string.
+    pub id: String,
+    pub pool: String,
+    pub vcpus: f64,
+    pub mem_mb: u32,
+    pub used_milli_vcpus: u64,
+    pub used_mem_mb: u32,
+    pub containers: usize,
+}
+
+impl NodeStatus {
+    pub fn from_snapshot(s: &NodeSnapshot) -> NodeStatus {
+        NodeStatus {
+            id: s.id.to_string(),
+            pool: s.pool.clone(),
+            vcpus: s.spec.vcpus,
+            mem_mb: s.spec.mem_mb,
+            used_milli_vcpus: s.used_milli,
+            used_mem_mb: s.used_mem,
+            containers: s.containers,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("id", self.id.as_str())
+            .field("pool", self.pool.as_str())
+            .field("vcpus", self.vcpus)
+            .field("mem_mb", self.mem_mb)
+            .field("used_milli_vcpus", self.used_milli_vcpus)
+            .field("used_mem_mb", self.used_mem_mb)
+            .field("containers", self.containers)
+            .build()
+    }
+
+    pub fn from_json(v: &Json) -> Result<NodeStatus> {
+        let obj = as_object(v)?;
+        Ok(NodeStatus {
+            id: str_field(obj, "id")?,
+            pool: str_field(obj, "pool")?,
+            vcpus: f64_field(obj, "vcpus")?,
+            mem_mb: u32_field(obj, "mem_mb")?,
+            used_milli_vcpus: u64_field(obj, "used_milli_vcpus")?,
+            used_mem_mb: u32_field(obj, "used_mem_mb")?,
+            containers: u64_field(obj, "containers")? as usize,
+        })
+    }
+}
+
+/// The cluster counter block served under `/v1/metrics`.
+pub fn cluster_counters_to_json(c: &ClusterCounters) -> Json {
+    Json::obj()
+        .field("containers_launched", c.launched)
+        .field("containers_completed", c.completed)
+        .field("containers_preempted", c.preempted_containers)
+        .field("nodes_preempted", c.preempted_nodes)
+        .field("scale_up_events", c.scale_up_events)
+        .field("scale_down_events", c.scale_down_events)
+        .field("nodes_added", c.nodes_added)
+        .field("nodes_removed", c.nodes_removed)
+        .field("placement_failures", c.placement_failures)
+        .build()
 }
 
 // ---------------------------------------------------------------------
@@ -1110,6 +1339,99 @@ mod tests {
         assert_eq!(back.predicted_runtime, Some(10.5));
         assert_eq!(back.predicted_cost, None);
         assert_eq!(back.output.as_deref(), Some("s-trial-0007:1"));
+    }
+
+    #[test]
+    fn pool_spec_codec_is_strict_and_defaults_sanely() {
+        // full round trip
+        let spec = PoolSpec {
+            name: "spot".into(),
+            vcpus: 4.0,
+            mem_mb: 8192,
+            price_multiplier: 0.3,
+            min_nodes: 0,
+            max_nodes: 6,
+            preemption_mean_secs: 12.5,
+        };
+        let back = PoolSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        // omitted price/preemption default to on-demand semantics
+        let v = crate::json::parse(
+            r#"{"name":"batch","vcpus":4,"mem_mb":8192,"min_nodes":1,"max_nodes":2}"#,
+        )
+        .unwrap();
+        let p = PoolSpec::from_json(&v).unwrap();
+        assert_eq!(p.price_multiplier, 1.0);
+        assert_eq!(p.preemption_mean_secs, 0.0);
+        // unknown fields are a 400 — a typo'd knob must not be ignored
+        let v = crate::json::parse(
+            r#"{"name":"x","vcpus":4,"mem_mb":8192,"min_nodes":1,"max_nodes":2,"preemption_rate":0.5}"#,
+        )
+        .unwrap();
+        assert_eq!(PoolSpec::from_json(&v).unwrap_err().status(), 400);
+        // missing required fields are a 400
+        let v = crate::json::parse(r#"{"name":"x","vcpus":4}"#).unwrap();
+        assert_eq!(PoolSpec::from_json(&v).unwrap_err().status(), 400);
+    }
+
+    #[test]
+    fn pool_and_node_status_round_trip() {
+        let status = PoolStatus {
+            spec: PoolSpec {
+                name: "spot".into(),
+                vcpus: 4.0,
+                mem_mb: 8192,
+                price_multiplier: 0.3,
+                min_nodes: 0,
+                max_nodes: 6,
+                preemption_mean_secs: 9.0,
+            },
+            nodes: 3,
+            preempted_nodes: 7,
+        };
+        let back = PoolStatus::from_json(&status.to_json()).unwrap();
+        assert_eq!(back, status);
+        let node = NodeStatus {
+            id: "node-4".into(),
+            pool: "spot".into(),
+            vcpus: 4.0,
+            mem_mb: 8192,
+            used_milli_vcpus: 1500,
+            used_mem_mb: 2048,
+            containers: 2,
+        };
+        let back = NodeStatus::from_json(&node.to_json()).unwrap();
+        assert_eq!(back, node);
+    }
+
+    #[test]
+    fn job_request_pool_round_trips_and_preemptions_decode() {
+        let v = crate::json::parse(
+            r#"{"name":"j","command":"python t.py --epoch 1","output_fileset":"o","vcpus":1,"mem_mb":512,"pool":"spot"}"#,
+        )
+        .unwrap();
+        let r = job_request_from_json(&v).unwrap();
+        assert_eq!(r.pool.as_deref(), Some("spot"));
+        let r2 = job_request_from_json(&job_request_to_json(&r)).unwrap();
+        assert_eq!(r2.pool.as_deref(), Some("spot"));
+        // absent pool stays unconstrained
+        let v = crate::json::parse(
+            r#"{"name":"j","command":"python t.py --epoch 1","output_fileset":"o","vcpus":1,"mem_mb":512}"#,
+        )
+        .unwrap();
+        assert_eq!(job_request_from_json(&v).unwrap().pool, None);
+        // a job status without the preemptions field decodes to 0; a
+        // preempted one round-trips the count
+        let v = crate::json::parse(
+            r#"{"job":"job-1","name":"j","state":"finished","command":"c","submitted_at":0}"#,
+        )
+        .unwrap();
+        assert_eq!(JobStatus::from_json(&v).unwrap().preemptions, 0);
+        let v = crate::json::parse(
+            r#"{"job":"job-1","name":"j","state":"finished","command":"c","submitted_at":0,"preemptions":3}"#,
+        )
+        .unwrap();
+        assert_eq!(JobStatus::from_json(&v).unwrap().preemptions, 3);
     }
 
     #[test]

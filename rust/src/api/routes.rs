@@ -14,7 +14,8 @@
 //! | metadata    | `GET /v1/metadata/{kind}/{id}`, `POST /v1/metadata/{kind}/query`, `POST /v1/metadata/{kind}/{id}/tags` |
 //! | provenance  | `GET /v1/provenance` |
 //! | profiles    | `POST /v1/profiles`, `POST /v1/autoprovision` |
-//! | operational | `GET /v1/healthz` (public), `GET /v1/metrics` |
+//! | cluster     | `GET /v1/cluster/pools`, `PUT /v1/cluster/pools` (upsert one pool; project-admin), `GET /v1/cluster/nodes` |
+//! | operational | `GET /v1/healthz` (public), `GET /v1/metrics` (per-route stats + cluster/autoscaler/preemption counters) |
 
 use std::sync::Arc;
 
@@ -86,11 +87,31 @@ pub fn v1_router(metrics: Arc<ApiMetrics>) -> Router {
     r.route("POST", "/v1/profiles", h(create_profile));
     r.route("POST", "/v1/autoprovision", h(autoprovision));
 
+    // ---- cluster (elastic node pools) ----
+    r.route("GET", "/v1/cluster/pools", h(get_cluster_pools));
+    r.route("PUT", "/v1/cluster/pools", h(put_cluster_pool));
+    r.route("GET", "/v1/cluster/nodes", h(get_cluster_nodes));
+
     // ---- operational ----
     r.route(
         "GET",
         "/v1/metrics",
-        h(move |_req, _ctx| Ok(Response::json(&metrics.to_json()))),
+        h(move |_req, ctx| {
+            let per_route = metrics.to_json();
+            let routes = per_route
+                .get("routes")
+                .cloned()
+                .unwrap_or(Json::Arr(Vec::new()));
+            Ok(Response::json(
+                &Json::obj()
+                    .field("routes", routes)
+                    .field(
+                        "cluster",
+                        dto::cluster_counters_to_json(&ctx.acai.cluster.counters()),
+                    )
+                    .build(),
+            ))
+        }),
     );
 
     r
@@ -390,6 +411,42 @@ fn best_trial(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
     )?;
     let trial = ctx.client()?.best_trial(id, &metric, mode)?;
     Ok(Response::json(&dto::trial_status_to_json(&trial)))
+}
+
+// ---------------------------------------------------------------------
+// cluster — elastic node pools
+// ---------------------------------------------------------------------
+
+fn get_cluster_pools(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let pools = ctx.client()?.cluster_pools()?;
+    Ok(Response::json(
+        &Json::obj()
+            .field("pools", Json::Arr(pools.iter().map(|p| p.to_json()).collect()))
+            .build(),
+    ))
+}
+
+/// `PUT /v1/cluster/pools` — upsert one pool by name.  Reconciles node
+/// counts immediately (grow to min, shed idle nodes above max) and
+/// pokes the driver: new capacity may unblock queued jobs.
+fn put_cluster_pool(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let spec = dto::PoolSpec::from_json(&req.json()?)?;
+    let pools = ctx.client()?.put_cluster_pool(&spec)?;
+    ctx.acai.driver().notify();
+    Ok(Response::json(
+        &Json::obj()
+            .field("pools", Json::Arr(pools.iter().map(|p| p.to_json()).collect()))
+            .build(),
+    ))
+}
+
+fn get_cluster_nodes(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let nodes = ctx.client()?.cluster_nodes()?;
+    Ok(Response::json(
+        &Json::obj()
+            .field("nodes", Json::Arr(nodes.iter().map(|n| n.to_json()).collect()))
+            .build(),
+    ))
 }
 
 // ---------------------------------------------------------------------

@@ -68,7 +68,8 @@ impl AutoProvisioner {
         Self { pricing }
     }
 
-    /// Score the whole grid and pick the optimum for the objective.
+    /// Score the whole grid and pick the optimum for the objective, at
+    /// on-demand (multiplier 1.0) prices.
     pub fn optimize(
         &self,
         profiler: &Profiler,
@@ -76,11 +77,26 @@ impl AutoProvisioner {
         arg_values: &[f64],
         objective: Objective,
     ) -> Result<Decision> {
+        self.optimize_priced(profiler, fitted, arg_values, objective, 1.0)
+    }
+
+    /// [`AutoProvisioner::optimize`] with a pool price multiplier: the
+    /// whole Fig-16 grid is priced at `price_multiplier ×` the sliding
+    /// unit cost, so spot capacity widens the feasible (green) region
+    /// under a cost cap — the spot-vs-on-demand cost/runtime frontier.
+    pub fn optimize_priced(
+        &self,
+        profiler: &Profiler,
+        fitted: &FittedTemplate,
+        arg_values: &[f64],
+        objective: Objective,
+        price_multiplier: f64,
+    ) -> Result<Decision> {
         let grid = provisioning_grid();
         let runtimes = profiler.predict_grid(fitted, arg_values, &grid)?;
         let mut points = Vec::with_capacity(grid.len());
         for (config, rt) in grid.iter().zip(&runtimes) {
-            let cost = self.pricing.cost(*config, *rt);
+            let cost = self.pricing.cost(*config, *rt) * price_multiplier;
             let feasible = match objective {
                 Objective::MinRuntime { max_cost } => cost <= max_cost,
                 Objective::MinCost { max_runtime } => *rt <= max_runtime,

@@ -1,23 +1,40 @@
-//! Container cluster simulator — the Kubernetes analogue (paper §4.2.1).
+//! Elastic container cluster simulator — the Kubernetes analogue
+//! (paper §4.2.1), grown into the substrate the paper's §5 economics
+//! actually run on: named node pools, autoscaling, bin-packing
+//! placement, and seeded spot preemption.
 //!
-//! The paper's job launcher provisions containers in a Kubernetes cluster
-//! and watches their status.  This simulator provides that contract on a
-//! virtual clock:
+//! The cluster is organised as named **node pools** ([`PoolConfig`]):
+//! each pool has one [`NodeSpec`] shape, a price multiplier applied to
+//! every container-second bought on its nodes (spot capacity is cheap),
+//! min/max node counts, and — for spot pools — a mean time between
+//! revocations.  On top of the pools sit three processes:
 //!
-//! - a fleet of nodes with (vCPU, memory) capacity;
-//! - first-fit container placement with exact resource accounting
-//!   (milli-vCPU integers — no float drift);
-//! - event-driven completion: the engine asks for the next completion
-//!   time, advances the [`SimClock`], and collects status events (the
-//!   "watch" stream the paper's launcher subscribes to);
-//! - failure + straggler injection, deterministic per seed, so the
-//!   profiler's 95%-barrier and the scheduler's failure paths are
-//!   testable.
+//! - a **placement engine**: containers are packed onto nodes best-fit
+//!   (least free vCPU, then memory, after placement; cheapest pool
+//!   first for unconstrained requests), with exact per-node free
+//!   capacity accounting in milli-vCPU integers.  The batch planner
+//!   (best-fit-decreasing) lives in [`placement`];
+//! - an **autoscaler** ([`AutoscalePolicy`]): pools grow toward the
+//!   scheduler's queue depth (jobs-per-node sizing estimate, per-pool
+//!   cooldown, every pool below its max scales so pool-constrained
+//!   work can never starve) and shrink by reaping long-idle empty
+//!   nodes, down to zero for `min_nodes = 0` pools;
+//! - a **preemption process**: spot pools draw exponential
+//!   inter-revocation times from the cluster's seeded [`Rng`]; each
+//!   revocation removes one uniformly-chosen node and reports its
+//!   containers with the [`ContainerPhase::Preempted`] phase, merged
+//!   chronologically with ordinary completions on the watch stream.
 //!
-//! Durations are decided by the caller (the [`crate::workload`] runtime
-//! model owns the t ≈ t₁·e·c⁻¹ law); the cluster applies stragglers.
+//! Everything remains deterministic per seed and event-driven on the
+//! virtual [`SimClock`]: the engine asks for the next event time
+//! (completion *or* revocation), advances the clock, and collects
+//! status events.  Durations are decided by the caller (the
+//! [`crate::workload`] runtime model owns the t ≈ t₁·e·c⁻¹ law); the
+//! cluster applies stragglers and failures.
 
-use std::collections::HashMap;
+pub mod placement;
+
+use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
 
 use crate::error::{AcaiError, Result};
@@ -72,10 +89,123 @@ pub struct NodeSpec {
     pub mem_mb: u32,
 }
 
+/// One named node pool: a shape, a price, and elasticity bounds.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    pub name: String,
+    pub spec: NodeSpec,
+    /// Multiplier on the sliding unit price for every container-second
+    /// bought on this pool's nodes (1.0 = on-demand anchor; spot < 1).
+    pub price_multiplier: f64,
+    /// The autoscaler never shrinks the pool below this.
+    pub min_nodes: usize,
+    /// The autoscaler never grows the pool above this.
+    pub max_nodes: usize,
+    /// Mean virtual seconds between spot revocations while the pool has
+    /// nodes; 0 disables preemption (on-demand capacity).
+    pub preemption_mean_secs: f64,
+}
+
+impl PoolConfig {
+    /// A fixed-size on-demand pool (`min == max == count`, multiplier 1).
+    pub fn on_demand(name: impl Into<String>, spec: NodeSpec, count: usize) -> PoolConfig {
+        PoolConfig {
+            name: name.into(),
+            spec,
+            price_multiplier: 1.0,
+            min_nodes: count,
+            max_nodes: count,
+            preemption_mean_secs: 0.0,
+        }
+    }
+
+    /// A scale-to-zero spot pool: cheap, revocable capacity.
+    pub fn spot(
+        name: impl Into<String>,
+        spec: NodeSpec,
+        max_nodes: usize,
+        price_multiplier: f64,
+        preemption_mean_secs: f64,
+    ) -> PoolConfig {
+        PoolConfig {
+            name: name.into(),
+            spec,
+            price_multiplier,
+            min_nodes: 0,
+            max_nodes,
+            preemption_mean_secs,
+        }
+    }
+
+    /// Does this pool's capacity get revoked?
+    pub fn preemptible(&self) -> bool {
+        self.preemption_mean_secs > 0.0
+    }
+
+    /// Sanity checks applied on the admin path (`PUT /v1/cluster/pools`).
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            return Err(AcaiError::invalid("pool needs a name"));
+        }
+        if self.min_nodes > self.max_nodes {
+            return Err(AcaiError::invalid(format!(
+                "pool {:?}: min_nodes {} > max_nodes {}",
+                self.name, self.min_nodes, self.max_nodes
+            )));
+        }
+        let mult_ok = self.price_multiplier.is_finite() && self.price_multiplier > 0.0;
+        if !mult_ok {
+            return Err(AcaiError::invalid(format!(
+                "pool {:?}: price_multiplier must be > 0",
+                self.name
+            )));
+        }
+        let spec_ok = self.spec.vcpus > 0.0 && self.spec.mem_mb > 0;
+        if !spec_ok {
+            return Err(AcaiError::invalid(format!(
+                "pool {:?}: node spec must have positive capacity",
+                self.name
+            )));
+        }
+        if self.preemption_mean_secs < 0.0 {
+            return Err(AcaiError::invalid(format!(
+                "pool {:?}: preemption_mean_secs must be >= 0",
+                self.name
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Autoscaler policy knobs (one policy for the whole cluster).
+#[derive(Debug, Clone, Copy)]
+pub struct AutoscalePolicy {
+    /// Sizing estimate for a scale-up: target nodes =
+    /// ⌈queued jobs / jobs_per_node⌉ (clamped to each pool's bounds).
+    pub jobs_per_node: usize,
+    /// Min virtual seconds between scale-ups of one pool.
+    pub up_cooldown: f64,
+    /// An empty node idle at least this long is reaped (when the queue
+    /// is empty and the pool is above `min_nodes`).
+    pub down_idle: f64,
+}
+
+impl Default for AutoscalePolicy {
+    fn default() -> Self {
+        Self {
+            jobs_per_node: 4,
+            up_cooldown: 0.0,
+            down_idle: 60.0,
+        }
+    }
+}
+
 /// Cluster-wide simulation parameters.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
-    pub nodes: Vec<NodeSpec>,
+    /// Named node pools; the first pool is the default on-demand tier.
+    pub pools: Vec<PoolConfig>,
+    pub autoscale: AutoscalePolicy,
     /// Probability a container fails instead of succeeding.
     pub failure_rate: f64,
     /// Probability a container is a straggler…
@@ -85,17 +215,30 @@ pub struct ClusterConfig {
     pub seed: u64,
 }
 
+impl ClusterConfig {
+    /// A single fixed-size on-demand pool (the seed's fixed-array shape).
+    pub fn fixed(spec: NodeSpec, count: usize) -> ClusterConfig {
+        ClusterConfig {
+            pools: vec![PoolConfig::on_demand("ondemand", spec, count)],
+            ..Default::default()
+        }
+    }
+}
+
 impl Default for ClusterConfig {
     fn default() -> Self {
         Self {
-            // 8 × n1-highcpu-ish nodes: plenty for the paper's sweeps.
-            nodes: vec![
+            // 8 × n1-highcpu-ish on-demand nodes: plenty for the paper's
+            // sweeps, and identical to the seed's fixed array.
+            pools: vec![PoolConfig::on_demand(
+                "ondemand",
                 NodeSpec {
                     vcpus: 16.0,
                     mem_mb: 65536,
-                };
-                8
-            ],
+                },
+                8,
+            )],
+            autoscale: AutoscalePolicy::default(),
             failure_rate: 0.0,
             straggler_rate: 0.0,
             straggler_factor: 4.0,
@@ -111,6 +254,9 @@ pub enum ContainerPhase {
     Succeeded,
     Failed,
     Killed,
+    /// The spot node under the container was revoked; the job is not at
+    /// fault and restarts from its checkpoint.
+    Preempted,
 }
 
 /// One watch-stream event.
@@ -122,25 +268,240 @@ pub struct ContainerEvent {
     pub at: f64,
 }
 
+/// Monotonic cluster counters (served under `/v1/metrics`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClusterCounters {
+    pub launched: u64,
+    pub completed: u64,
+    pub preempted_containers: u64,
+    pub preempted_nodes: u64,
+    pub scale_up_events: u64,
+    pub scale_down_events: u64,
+    pub nodes_added: u64,
+    pub nodes_removed: u64,
+    /// Placement attempts that found no fitting node (`Exhausted`).
+    pub placement_failures: u64,
+}
+
+/// Read-only view of one pool (`GET /v1/cluster/pools`).
+#[derive(Debug, Clone)]
+pub struct PoolSnapshot {
+    pub config: PoolConfig,
+    /// Current live node count.
+    pub nodes: usize,
+    /// Nodes this pool has lost to preemption so far.
+    pub preempted_nodes: u64,
+}
+
+/// Read-only view of one node (`GET /v1/cluster/nodes`).
+#[derive(Debug, Clone)]
+pub struct NodeSnapshot {
+    pub id: NodeId,
+    pub pool: String,
+    pub spec: NodeSpec,
+    pub used_milli: u64,
+    pub used_mem: u32,
+    pub containers: usize,
+}
+
 struct Node {
+    pool: usize,
     spec: NodeSpec,
     used_milli: u64,
     used_mem: u32,
+    containers: usize,
+    /// When the node last became (or was created) empty.
+    idle_since: f64,
+}
+
+struct PoolState {
+    config: PoolConfig,
+    nodes: usize,
+    /// Armed while the pool is preemptible and non-empty.
+    next_preempt: Option<f64>,
+    last_scale_up: f64,
+    preempted_nodes: u64,
 }
 
 struct RunningContainer {
-    node: usize,
+    node: u64,
     res: ResourceConfig,
     end: f64,
     will_fail: bool,
 }
 
 struct Inner {
-    nodes: Vec<Node>,
+    pools: Vec<PoolState>,
+    /// Live nodes by id — BTreeMap so every scan is id-ordered and the
+    /// seeded preemption process is deterministic.
+    nodes: BTreeMap<u64, Node>,
+    next_node_id: u64,
     running: HashMap<ContainerId, RunningContainer>,
+    /// Preemption events raised outside a collect call (launch-time
+    /// sweeps), drained by the next `collect_completions`.
+    pending: Vec<ContainerEvent>,
     rng: Rng,
-    launched: u64,
-    completed: u64,
+    counters: ClusterCounters,
+}
+
+/// Tolerance: the SimClock stores rounded micros, so an event time can
+/// exceed the advanced clock by up to half a microsecond.
+const TOL: f64 = 1e-5;
+
+impl Inner {
+    fn sample_interval(&mut self, mean: f64) -> f64 {
+        // exponential inter-arrival; the floor keeps pathological draws
+        // strictly positive so the event loop always advances
+        let u = self.rng.f64();
+        (-(1.0 - u).ln() * mean).max(mean * 1e-3)
+    }
+
+    fn add_node(&mut self, pool_idx: usize, now: f64) {
+        let id = self.next_node_id;
+        self.next_node_id += 1;
+        let spec = self.pools[pool_idx].config.spec;
+        self.nodes.insert(
+            id,
+            Node {
+                pool: pool_idx,
+                spec,
+                used_milli: 0,
+                used_mem: 0,
+                containers: 0,
+                idle_since: now,
+            },
+        );
+        self.pools[pool_idx].nodes += 1;
+        self.counters.nodes_added += 1;
+        if self.pools[pool_idx].config.preemptible()
+            && self.pools[pool_idx].next_preempt.is_none()
+        {
+            let mean = self.pools[pool_idx].config.preemption_mean_secs;
+            let interval = self.sample_interval(mean);
+            self.pools[pool_idx].next_preempt = Some(now + interval);
+        }
+    }
+
+    /// Remove an (empty) node on the scale-down path.
+    fn reap_node(&mut self, id: u64) {
+        if let Some(n) = self.nodes.remove(&id) {
+            self.pools[n.pool].nodes -= 1;
+            self.counters.nodes_removed += 1;
+            if self.pools[n.pool].nodes == 0 {
+                self.pools[n.pool].next_preempt = None;
+            }
+        }
+    }
+
+    /// Best-fit placement: cheapest pool first, then the node left with
+    /// the least free vCPU (then memory) after placement, then the
+    /// lowest node id.  Returns the chosen node id.
+    fn place(&self, milli: u64, mem: u32, pool: Option<&str>) -> Option<u64> {
+        let mut best: Option<(u64, u64, u64, u64)> = None;
+        for (id, n) in &self.nodes {
+            let p = &self.pools[n.pool];
+            if let Some(want) = pool {
+                if p.config.name != want {
+                    continue;
+                }
+            }
+            let cap_milli = (n.spec.vcpus * 1000.0).round() as u64;
+            let free_milli = cap_milli.saturating_sub(n.used_milli);
+            let free_mem = n.spec.mem_mb.saturating_sub(n.used_mem) as u64;
+            if free_milli < milli || free_mem < mem as u64 {
+                continue;
+            }
+            let key = (
+                (p.config.price_multiplier * 1e6).round() as u64,
+                free_milli - milli,
+                free_mem - mem as u64,
+                *id,
+            );
+            if best.map_or(true, |b| key < b) {
+                best = Some(key);
+            }
+        }
+        best.map(|(_, _, _, id)| id)
+    }
+
+    /// Free a container's resources on its node (if the node is alive).
+    fn release(&mut self, c: &RunningContainer, at: f64) {
+        if let Some(n) = self.nodes.get_mut(&c.node) {
+            n.used_milli = n.used_milli.saturating_sub(c.res.milli_vcpus());
+            n.used_mem = n.used_mem.saturating_sub(c.res.mem_mb);
+            n.containers = n.containers.saturating_sub(1);
+            if n.containers == 0 {
+                n.idle_since = at;
+            }
+        }
+    }
+
+    /// Revoke one uniformly-chosen node of a spot pool at time `at`;
+    /// returns the Preempted events for its containers.
+    fn preempt_one(&mut self, pool_idx: usize, at: f64) -> Vec<ContainerEvent> {
+        let candidates: Vec<u64> = self
+            .nodes
+            .iter()
+            .filter(|(_, n)| n.pool == pool_idx)
+            .map(|(id, _)| *id)
+            .collect();
+        let mut events = Vec::new();
+        let Some(&victim) = candidates
+            .get(self.rng.below(candidates.len().max(1) as u64) as usize)
+        else {
+            return events;
+        };
+        let mut doomed: Vec<ContainerId> = self
+            .running
+            .iter()
+            .filter(|(_, c)| c.node == victim)
+            .map(|(id, _)| *id)
+            .collect();
+        doomed.sort();
+        for cid in doomed {
+            self.running.remove(&cid);
+            self.counters.preempted_containers += 1;
+            events.push(ContainerEvent {
+                container: cid,
+                node: NodeId(victim),
+                phase: ContainerPhase::Preempted,
+                at,
+            });
+        }
+        self.nodes.remove(&victim);
+        self.pools[pool_idx].nodes -= 1;
+        self.pools[pool_idx].preempted_nodes += 1;
+        self.counters.preempted_nodes += 1;
+        // re-arm (or disarm) the pool's revocation clock
+        if self.pools[pool_idx].nodes > 0 {
+            let mean = self.pools[pool_idx].config.preemption_mean_secs;
+            let interval = self.sample_interval(mean);
+            self.pools[pool_idx].next_preempt = Some(at + interval);
+        } else {
+            self.pools[pool_idx].next_preempt = None;
+        }
+        events
+    }
+
+    /// Process every revocation already due at `now`, buffering the
+    /// events for the next collect (called before placements so a fresh
+    /// container can never land on a node that is already past its
+    /// revocation time).
+    fn sweep_due_preemptions(&mut self, now: f64) {
+        loop {
+            let due = self
+                .pools
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| p.nodes > 0)
+                .filter_map(|(i, p)| p.next_preempt.map(|t| (t, i)))
+                .filter(|(t, _)| *t <= now + TOL)
+                .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            let Some((at, pool_idx)) = due else { break };
+            let events = self.preempt_one(pool_idx, at);
+            self.pending.extend(events);
+        }
+    }
 }
 
 /// The simulated cluster.
@@ -154,23 +515,35 @@ pub struct Cluster {
 
 impl Cluster {
     pub fn new(config: ClusterConfig, clock: SimClock) -> Self {
-        let nodes = config
-            .nodes
-            .iter()
-            .map(|spec| Node {
-                spec: *spec,
-                used_milli: 0,
-                used_mem: 0,
-            })
-            .collect();
+        let mut inner = Inner {
+            pools: config
+                .pools
+                .iter()
+                .map(|c| PoolState {
+                    config: c.clone(),
+                    nodes: 0,
+                    next_preempt: None,
+                    last_scale_up: f64::NEG_INFINITY,
+                    preempted_nodes: 0,
+                })
+                .collect(),
+            nodes: BTreeMap::new(),
+            next_node_id: 1,
+            running: HashMap::new(),
+            pending: Vec::new(),
+            rng: Rng::new(config.seed),
+            counters: ClusterCounters::default(),
+        };
+        let now = clock.now();
+        for pi in 0..inner.pools.len() {
+            for _ in 0..inner.pools[pi].config.min_nodes {
+                inner.add_node(pi, now);
+            }
+        }
+        // boot-time nodes are baseline capacity, not autoscaler activity
+        inner.counters.nodes_added = 0;
         Self {
-            inner: Arc::new(Mutex::new(Inner {
-                nodes,
-                running: HashMap::new(),
-                rng: Rng::new(config.seed),
-                launched: 0,
-                completed: 0,
-            })),
+            inner: Arc::new(Mutex::new(inner)),
             clock,
             ids: Arc::new(IdGen::new()),
             config,
@@ -178,116 +551,393 @@ impl Cluster {
     }
 
     /// Place + start a container that will run for `duration` virtual
-    /// seconds.  First-fit across nodes; `Exhausted` if nothing fits.
+    /// seconds, on any pool.  Best-fit across nodes; `Exhausted` if
+    /// nothing fits.
     pub fn launch(&self, res: ResourceConfig, duration: f64) -> Result<ContainerId> {
+        self.launch_in(res, duration, None)
+    }
+
+    /// [`Cluster::launch`] constrained to one named pool (`None` = any;
+    /// unconstrained requests prefer the cheapest capacity).
+    pub fn launch_in(
+        &self,
+        res: ResourceConfig,
+        duration: f64,
+        pool: Option<&str>,
+    ) -> Result<ContainerId> {
         res.validate()?;
+        let now = self.clock.now();
         let mut inner = self.inner.lock().unwrap();
+        inner.sweep_due_preemptions(now);
         let milli = res.milli_vcpus();
-        let slot = inner.nodes.iter().position(|n| {
-            (n.spec.vcpus * 1000.0) as u64 - n.used_milli >= milli
-                && n.spec.mem_mb - n.used_mem >= res.mem_mb
-        });
-        let Some(node_idx) = slot else {
-            return Err(AcaiError::Exhausted(format!(
-                "no node fits {:.1} vCPU / {} MB",
-                res.vcpus, res.mem_mb
-            )));
+        let Some(node_id) = inner.place(milli, res.mem_mb, pool) else {
+            inner.counters.placement_failures += 1;
+            return Err(AcaiError::Exhausted(match pool {
+                Some(p) => format!(
+                    "no node in pool {p:?} fits {:.1} vCPU / {} MB",
+                    res.vcpus, res.mem_mb
+                ),
+                None => format!("no node fits {:.1} vCPU / {} MB", res.vcpus, res.mem_mb),
+            }));
         };
-        inner.nodes[node_idx].used_milli += milli;
-        inner.nodes[node_idx].used_mem += res.mem_mb;
+        {
+            let node = inner.nodes.get_mut(&node_id).unwrap();
+            node.used_milli += milli;
+            node.used_mem += res.mem_mb;
+            node.containers += 1;
+        }
         let mut effective = duration;
         if self.config.straggler_rate > 0.0 && inner.rng.chance(self.config.straggler_rate) {
             effective *= self.config.straggler_factor;
         }
-        let will_fail = self.config.failure_rate > 0.0
-            && inner.rng.chance(self.config.failure_rate);
+        let will_fail =
+            self.config.failure_rate > 0.0 && inner.rng.chance(self.config.failure_rate);
         let id = ContainerId(self.ids.next());
-        let end = self.clock.now() + effective.max(0.0);
+        let end = now + effective.max(0.0);
         inner.running.insert(
             id,
             RunningContainer {
-                node: node_idx,
+                node: node_id,
                 res,
                 end,
                 will_fail,
             },
         );
-        inner.launched += 1;
+        inner.counters.launched += 1;
         Ok(id)
     }
 
     /// Kill a running container immediately, freeing its resources.
     pub fn kill(&self, id: ContainerId) -> Result<ContainerEvent> {
         let mut inner = self.inner.lock().unwrap();
+        let now = self.clock.now();
         let c = inner
             .running
             .remove(&id)
             .ok_or_else(|| AcaiError::not_found(format!("container {id}")))?;
-        let node = c.node;
-        inner.nodes[node].used_milli -= c.res.milli_vcpus();
-        inner.nodes[node].used_mem -= c.res.mem_mb;
+        inner.release(&c, now);
         Ok(ContainerEvent {
             container: id,
-            node: NodeId(node as u64),
+            node: NodeId(c.node),
             phase: ContainerPhase::Killed,
-            at: self.clock.now(),
+            at: now,
         })
     }
 
-    /// Earliest pending completion time, if any containers are running.
+    /// Earliest pending event time — a container completion or, while
+    /// the cluster is busy, a spot revocation.  `None` when idle (an
+    /// idle cluster does not tick, so the engine's event loop halts).
     pub fn next_completion(&self) -> Option<f64> {
         let inner = self.inner.lock().unwrap();
-        inner
-            .running
-            .values()
-            .map(|c| c.end)
-            .min_by(|a, b| a.total_cmp(b))
+        if !inner.pending.is_empty() {
+            // buffered revocation events are already due
+            return Some(self.clock.now());
+        }
+        if inner.running.is_empty() {
+            return None;
+        }
+        let mut t = f64::INFINITY;
+        for c in inner.running.values() {
+            t = t.min(c.end);
+        }
+        for p in inner.pools.iter().filter(|p| p.nodes > 0) {
+            if let Some(np) = p.next_preempt {
+                t = t.min(np);
+            }
+        }
+        Some(t)
     }
 
-    /// Collect every container whose end time has passed the clock,
-    /// freeing resources.  Events are ordered by completion time.
+    /// Collect every event whose time has passed the clock — container
+    /// completions and spot revocations, merged in chronological order
+    /// (a container that would finish before its node is revoked
+    /// completes normally).  Resources are freed as events process.
+    /// Due completions are snapshotted and sorted once (O(k log k)), so
+    /// a large wave does not rescan the running set per event; only
+    /// preemptions — which mutate the node/container sets — pay a scan.
     pub fn collect_completions(&self) -> Vec<ContainerEvent> {
         let now = self.clock.now();
         let mut inner = self.inner.lock().unwrap();
-        // Tolerance: the SimClock stores rounded micros, so an end time
-        // can exceed the advanced clock by up to half a microsecond.
-        let done: Vec<ContainerId> = inner
+        let mut events: Vec<ContainerEvent> = std::mem::take(&mut inner.pending);
+        let mut due: Vec<(f64, ContainerId)> = inner
             .running
             .iter()
-            .filter(|(_, c)| c.end <= now + 1e-5)
-            .map(|(id, _)| *id)
+            .filter(|(_, c)| c.end <= now + TOL)
+            .map(|(id, c)| (c.end, *id))
             .collect();
-        let mut events: Vec<ContainerEvent> = done
-            .into_iter()
-            .map(|id| {
-                let c = inner.running.remove(&id).unwrap();
-                let node = c.node;
-                inner.nodes[node].used_milli -= c.res.milli_vcpus();
-                inner.nodes[node].used_mem -= c.res.mem_mb;
-                inner.completed += 1;
-                ContainerEvent {
-                    container: id,
-                    node: NodeId(node as u64),
-                    phase: if c.will_fail {
-                        ContainerPhase::Failed
-                    } else {
-                        ContainerPhase::Succeeded
-                    },
-                    at: c.end,
+        due.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut di = 0usize;
+        loop {
+            // a container preempted mid-collect is no longer running:
+            // its queued completion entry is dead
+            while di < due.len() && !inner.running.contains_key(&due[di].1) {
+                di += 1;
+            }
+            let next_end = due.get(di).copied();
+            let next_pre = inner
+                .pools
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| p.nodes > 0)
+                .filter_map(|(i, p)| p.next_preempt.map(|t| (t, i)))
+                .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
+                .filter(|(t, _)| *t <= now + TOL);
+            match (next_end, next_pre) {
+                // completion first on ties: the program finished before
+                // the revocation landed
+                (Some((te, cid)), pre) if pre.map_or(true, |(tp, _)| te <= tp) => {
+                    di += 1;
+                    let c = inner.running.remove(&cid).unwrap();
+                    inner.release(&c, te);
+                    inner.counters.completed += 1;
+                    events.push(ContainerEvent {
+                        container: cid,
+                        node: NodeId(c.node),
+                        phase: if c.will_fail {
+                            ContainerPhase::Failed
+                        } else {
+                            ContainerPhase::Succeeded
+                        },
+                        at: c.end,
+                    });
                 }
-            })
-            .collect();
+                (_, Some((tp, pi))) => {
+                    let evs = inner.preempt_one(pi, tp);
+                    events.extend(evs);
+                }
+                // (None, None): nothing due — and a (Some, None) pair
+                // always takes the first arm (its guard is vacuously
+                // true without a pending revocation)
+                _ => break,
+            }
+        }
         events.sort_by(|a, b| a.at.total_cmp(&b.at).then(a.container.cmp(&b.container)));
         events
+    }
+
+    /// Autoscaler tick: grow every pool toward the backlog (cheapest
+    /// capacity is preferred by placement, but every pool below its max
+    /// scales so pool-constrained jobs can never starve), and reap
+    /// long-idle empty nodes once the queue drains.
+    pub fn autoscale(&self, queued_jobs: usize) {
+        let now = self.clock.now();
+        let policy = self.config.autoscale;
+        let mut inner = self.inner.lock().unwrap();
+        if queued_jobs > 0 {
+            let target = queued_jobs.div_ceil(policy.jobs_per_node.max(1));
+            for pi in 0..inner.pools.len() {
+                let p = &inner.pools[pi];
+                // min wins over a smaller max (never panics, unlike clamp)
+                let want = target.min(p.config.max_nodes).max(p.config.min_nodes);
+                if p.nodes >= want || now - p.last_scale_up < policy.up_cooldown {
+                    continue;
+                }
+                let add = want - p.nodes;
+                for _ in 0..add {
+                    inner.add_node(pi, now);
+                }
+                inner.pools[pi].last_scale_up = now;
+                inner.counters.scale_up_events += 1;
+            }
+        } else {
+            // reap: empty nodes idle >= down_idle, newest first, floor min
+            let mut reaped_pools = std::collections::HashSet::new();
+            let mut candidates: Vec<(u64, usize)> = inner
+                .nodes
+                .iter()
+                .filter(|(_, n)| n.containers == 0 && now - n.idle_since >= policy.down_idle)
+                .map(|(id, n)| (*id, n.pool))
+                .collect();
+            candidates.sort_unstable_by_key(|(id, _)| std::cmp::Reverse(*id));
+            for (id, pi) in candidates {
+                if inner.pools[pi].nodes <= inner.pools[pi].config.min_nodes {
+                    continue;
+                }
+                inner.reap_node(id);
+                reaped_pools.insert(pi);
+            }
+            inner.counters.scale_down_events += reaped_pools.len() as u64;
+        }
+    }
+
+    /// Create or reconfigure a pool (the `PUT /v1/cluster/pools` path).
+    /// Grows the pool to its new minimum immediately and sheds empty
+    /// nodes above the new maximum (busy nodes drain naturally).
+    pub fn set_pool(&self, config: PoolConfig) -> Result<()> {
+        config.validate()?;
+        let now = self.clock.now();
+        let mut inner = self.inner.lock().unwrap();
+        let pi = match inner.pools.iter().position(|p| p.config.name == config.name) {
+            Some(pi) => {
+                // a changed node shape applies to future nodes: shed the
+                // pool's empty nodes now so the min-grow below re-adds
+                // them with the new spec (busy nodes keep the old shape
+                // until they drain — their accounting stays consistent)
+                let old = inner.pools[pi].config.spec;
+                let reshaped =
+                    old.vcpus != config.spec.vcpus || old.mem_mb != config.spec.mem_mb;
+                inner.pools[pi].config = config;
+                if reshaped {
+                    let empties: Vec<u64> = inner
+                        .nodes
+                        .iter()
+                        .filter(|(_, n)| n.pool == pi && n.containers == 0)
+                        .map(|(id, _)| *id)
+                        .collect();
+                    for id in empties {
+                        inner.reap_node(id);
+                    }
+                }
+                // the revocation clock follows the new mean
+                if !inner.pools[pi].config.preemptible() {
+                    inner.pools[pi].next_preempt = None;
+                } else if inner.pools[pi].nodes > 0 && inner.pools[pi].next_preempt.is_none() {
+                    let mean = inner.pools[pi].config.preemption_mean_secs;
+                    let interval = inner.sample_interval(mean);
+                    inner.pools[pi].next_preempt = Some(now + interval);
+                }
+                pi
+            }
+            None => {
+                inner.pools.push(PoolState {
+                    config,
+                    nodes: 0,
+                    next_preempt: None,
+                    last_scale_up: f64::NEG_INFINITY,
+                    preempted_nodes: 0,
+                });
+                inner.pools.len() - 1
+            }
+        };
+        while inner.pools[pi].nodes < inner.pools[pi].config.min_nodes {
+            inner.add_node(pi, now);
+        }
+        if inner.pools[pi].nodes > inner.pools[pi].config.max_nodes {
+            let mut empties: Vec<u64> = inner
+                .nodes
+                .iter()
+                .filter(|(_, n)| n.pool == pi && n.containers == 0)
+                .map(|(id, _)| *id)
+                .collect();
+            empties.sort_unstable_by_key(|id| std::cmp::Reverse(*id));
+            for id in empties {
+                if inner.pools[pi].nodes <= inner.pools[pi].config.max_nodes {
+                    break;
+                }
+                inner.reap_node(id);
+            }
+        }
+        Ok(())
+    }
+
+    /// Could this request EVER be placed: does it fit an *empty* node
+    /// of the pinned pool (or, unconstrained, of any pool) that is
+    /// allowed to own nodes (`max_nodes > 0`)?  The engine rejects
+    /// submissions that fail this — a job that can never fit would
+    /// otherwise sit queued forever.
+    pub fn can_ever_fit(&self, res: ResourceConfig, pool: Option<&str>) -> bool {
+        let milli = res.milli_vcpus();
+        self.inner.lock().unwrap().pools.iter().any(|p| {
+            pool.map_or(true, |want| p.config.name == want)
+                && p.config.max_nodes > 0
+                && placement::Free::of(p.config.spec).fits(milli, res.mem_mb as u64)
+        })
+    }
+
+    /// Is there a pool of this name?
+    pub fn has_pool(&self, name: &str) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .pools
+            .iter()
+            .any(|p| p.config.name == name)
+    }
+
+    /// A pool's price multiplier, if it exists.
+    pub fn pool_price_multiplier(&self, name: &str) -> Option<f64> {
+        self.inner
+            .lock()
+            .unwrap()
+            .pools
+            .iter()
+            .find(|p| p.config.name == name)
+            .map(|p| p.config.price_multiplier)
+    }
+
+    /// The price multiplier of the pool a running container sits on.
+    pub fn container_price_multiplier(&self, id: ContainerId) -> Option<f64> {
+        let inner = self.inner.lock().unwrap();
+        let c = inner.running.get(&id)?;
+        let n = inner.nodes.get(&c.node)?;
+        Some(inner.pools[n.pool].config.price_multiplier)
+    }
+
+    /// Read-only pool views, declaration-ordered.
+    pub fn pools(&self) -> Vec<PoolSnapshot> {
+        self.inner
+            .lock()
+            .unwrap()
+            .pools
+            .iter()
+            .map(|p| PoolSnapshot {
+                config: p.config.clone(),
+                nodes: p.nodes,
+                preempted_nodes: p.preempted_nodes,
+            })
+            .collect()
+    }
+
+    /// Read-only node views, id-ordered.
+    pub fn nodes(&self) -> Vec<NodeSnapshot> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .nodes
+            .iter()
+            .map(|(id, n)| NodeSnapshot {
+                id: NodeId(*id),
+                pool: inner.pools[n.pool].config.name.clone(),
+                spec: n.spec,
+                used_milli: n.used_milli,
+                used_mem: n.used_mem,
+                containers: n.containers,
+            })
+            .collect()
+    }
+
+    /// Current node count of one pool (0 if unknown).
+    pub fn pool_size(&self, name: &str) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .pools
+            .iter()
+            .find(|p| p.config.name == name)
+            .map(|p| p.nodes)
+            .unwrap_or(0)
+    }
+
+    /// How many `pool`-shaped nodes the given backlog would need
+    /// (best-fit-decreasing plan); `None` for an unknown pool.
+    pub fn plan_capacity(&self, pool: &str, reqs: &[ResourceConfig]) -> Option<usize> {
+        let spec = self
+            .inner
+            .lock()
+            .unwrap()
+            .pools
+            .iter()
+            .find(|p| p.config.name == pool)
+            .map(|p| p.config.spec)?;
+        Some(placement::plan_nodes(spec, reqs).0)
     }
 
     /// (used milli-vCPUs, total milli-vCPUs, used MB, total MB).
     pub fn utilization(&self) -> (u64, u64, u64, u64) {
         let inner = self.inner.lock().unwrap();
         let mut out = (0u64, 0u64, 0u64, 0u64);
-        for n in &inner.nodes {
+        for n in inner.nodes.values() {
             out.0 += n.used_milli;
-            out.1 += (n.spec.vcpus * 1000.0) as u64;
+            out.1 += (n.spec.vcpus * 1000.0).round() as u64;
             out.2 += n.used_mem as u64;
             out.3 += n.spec.mem_mb as u64;
         }
@@ -299,10 +949,20 @@ impl Cluster {
         self.inner.lock().unwrap().running.len()
     }
 
+    /// Total live node count.
+    pub fn node_count(&self) -> usize {
+        self.inner.lock().unwrap().nodes.len()
+    }
+
     /// (launched, completed) counters.
     pub fn stats(&self) -> (u64, u64) {
         let inner = self.inner.lock().unwrap();
-        (inner.launched, inner.completed)
+        (inner.counters.launched, inner.counters.completed)
+    }
+
+    /// The full monotonic counter set.
+    pub fn counters(&self) -> ClusterCounters {
+        self.inner.lock().unwrap().counters
     }
 }
 
@@ -312,11 +972,31 @@ mod tests {
 
     fn small_cluster() -> (Cluster, SimClock) {
         let clock = SimClock::new();
-        let config = ClusterConfig {
-            nodes: vec![NodeSpec {
+        let config = ClusterConfig::fixed(
+            NodeSpec {
                 vcpus: 4.0,
                 mem_mb: 4096,
+            },
+            1,
+        );
+        (Cluster::new(config, clock.clone()), clock)
+    }
+
+    fn spot_cluster(mean: f64, seed: u64) -> (Cluster, SimClock) {
+        let clock = SimClock::new();
+        let config = ClusterConfig {
+            pools: vec![PoolConfig {
+                name: "spot".into(),
+                spec: NodeSpec {
+                    vcpus: 4.0,
+                    mem_mb: 4096,
+                },
+                price_multiplier: 0.3,
+                min_nodes: 2,
+                max_nodes: 4,
+                preemption_mean_secs: mean,
             }],
+            seed,
             ..Default::default()
         };
         (Cluster::new(config, clock.clone()), clock)
@@ -344,6 +1024,7 @@ mod tests {
         cluster.launch(ResourceConfig::new(4.0, 4096), 5.0).unwrap();
         // full node: next launch must fail
         assert!(cluster.launch(ResourceConfig::new(0.5, 512), 5.0).is_err());
+        assert_eq!(cluster.counters().placement_failures, 1);
         clock.advance(5.0);
         cluster.collect_completions();
         assert!(cluster.launch(ResourceConfig::new(4.0, 4096), 5.0).is_ok());
@@ -449,5 +1130,244 @@ mod tests {
             .unwrap_err();
         assert_eq!(err.status(), 429);
         assert_eq!(cluster.running_count(), 0);
+    }
+
+    #[test]
+    fn placement_is_best_fit_and_prefers_cheap_pools() {
+        let clock = SimClock::new();
+        let spec = NodeSpec { vcpus: 4.0, mem_mb: 4096 };
+        let config = ClusterConfig {
+            pools: vec![
+                PoolConfig::on_demand("ondemand", spec, 1),
+                PoolConfig {
+                    name: "spot".into(),
+                    spec,
+                    price_multiplier: 0.3,
+                    min_nodes: 1,
+                    max_nodes: 1,
+                    preemption_mean_secs: 0.0,
+                },
+            ],
+            ..Default::default()
+        };
+        let cluster = Cluster::new(config, clock);
+        // unconstrained: lands on the cheaper spot node
+        cluster.launch(ResourceConfig::new(1.0, 512), 10.0).unwrap();
+        let nodes = cluster.nodes();
+        let spot = nodes.iter().find(|n| n.pool == "spot").unwrap();
+        assert_eq!(spot.used_milli, 1000);
+        // best fit: the next container stacks onto the same (now
+        // tighter) node instead of the empty on-demand one
+        cluster.launch(ResourceConfig::new(1.0, 512), 10.0).unwrap();
+        let nodes = cluster.nodes();
+        let spot = nodes.iter().find(|n| n.pool == "spot").unwrap();
+        let od = nodes.iter().find(|n| n.pool == "ondemand").unwrap();
+        assert_eq!(spot.used_milli, 2000);
+        assert_eq!(od.used_milli, 0);
+        // constrained: the on-demand pool is honored even though spot
+        // still has room
+        cluster
+            .launch_in(ResourceConfig::new(1.0, 512), 10.0, Some("ondemand"))
+            .unwrap();
+        let nodes = cluster.nodes();
+        let od = nodes.iter().find(|n| n.pool == "ondemand").unwrap();
+        assert_eq!(od.used_milli, 1000);
+        // a pool constraint that cannot fit is Exhausted, not mis-placed
+        assert_eq!(
+            cluster
+                .launch_in(ResourceConfig::new(4.0, 4096), 1.0, Some("spot"))
+                .unwrap_err()
+                .status(),
+            429
+        );
+    }
+
+    #[test]
+    fn autoscaler_grows_with_queue_and_reaps_idle_nodes() {
+        let clock = SimClock::new();
+        let spec = NodeSpec { vcpus: 4.0, mem_mb: 4096 };
+        let config = ClusterConfig {
+            pools: vec![PoolConfig {
+                name: "spot".into(),
+                spec,
+                price_multiplier: 0.3,
+                min_nodes: 0,
+                max_nodes: 6,
+                preemption_mean_secs: 0.0,
+            }],
+            autoscale: AutoscalePolicy {
+                jobs_per_node: 4,
+                up_cooldown: 0.0,
+                down_idle: 30.0,
+            },
+            ..Default::default()
+        };
+        let cluster = Cluster::new(config, clock.clone());
+        // scale-to-zero start
+        assert_eq!(cluster.node_count(), 0);
+        assert!(cluster.launch(ResourceConfig::new(1.0, 512), 5.0).is_err());
+        // a 10-job backlog sizes to ceil(10/4) = 3 nodes
+        cluster.autoscale(10);
+        assert_eq!(cluster.node_count(), 3);
+        assert_eq!(cluster.pool_size("spot"), 3);
+        // converged: the same backlog adds nothing more
+        cluster.autoscale(10);
+        assert_eq!(cluster.node_count(), 3);
+        // a bigger spike is capped at max_nodes
+        cluster.autoscale(100);
+        assert_eq!(cluster.node_count(), 6);
+        let counters = cluster.counters();
+        assert_eq!(counters.nodes_added, 6);
+        assert!(counters.scale_up_events >= 2);
+        // queue drains; nodes idle past the threshold are reaped to zero
+        clock.advance(31.0);
+        cluster.autoscale(0);
+        assert_eq!(cluster.node_count(), 0);
+        assert_eq!(cluster.counters().nodes_removed, 6);
+        assert!(cluster.counters().scale_down_events >= 1);
+    }
+
+    #[test]
+    fn preemption_revokes_nodes_and_reports_containers() {
+        let (cluster, clock) = spot_cluster(10.0, 7);
+        for _ in 0..4 {
+            cluster.launch(ResourceConfig::new(1.0, 512), 200.0).unwrap();
+        }
+        // drive until a revocation hits a busy node (the victim is
+        // uniform over the pool, so an empty node may go first)
+        let mut events = Vec::new();
+        while cluster.counters().preempted_containers == 0 {
+            let t = cluster.next_completion().expect("events pending");
+            assert!(t < 200.0, "a revocation must precede the completions");
+            clock.advance_to(t);
+            events.extend(cluster.collect_completions());
+        }
+        assert!(!events.is_empty());
+        assert!(events.iter().all(|e| e.phase == ContainerPhase::Preempted));
+        let counters = cluster.counters();
+        assert!(counters.preempted_nodes >= 1);
+        assert_eq!(counters.preempted_containers, events.len() as u64);
+        assert_eq!(counters.completed, 0);
+        // all four containers sat on one best-fit-packed node
+        assert_eq!(events.len(), 4);
+        assert_eq!(cluster.running_count(), 0);
+    }
+
+    #[test]
+    fn preemption_sequence_is_deterministic_per_seed() {
+        let run = |seed: u64| {
+            let (cluster, clock) = spot_cluster(5.0, seed);
+            for _ in 0..6 {
+                cluster.launch(ResourceConfig::new(1.0, 512), 60.0).unwrap();
+            }
+            let mut log = Vec::new();
+            while let Some(t) = cluster.next_completion() {
+                clock.advance_to(t);
+                for e in cluster.collect_completions() {
+                    log.push((e.container.raw(), e.node.raw(), format!("{:?}", e.phase)));
+                }
+                if cluster.running_count() == 0 {
+                    break;
+                }
+            }
+            (log, cluster.counters())
+        };
+        let (log_a, counters_a) = run(1234);
+        let (log_b, counters_b) = run(1234);
+        assert_eq!(log_a, log_b);
+        assert_eq!(counters_a, counters_b);
+        assert!(counters_a.preempted_containers > 0, "{counters_a:?}");
+        let (log_c, _) = run(99);
+        assert_ne!(log_a, log_c, "different seeds must differ");
+    }
+
+    #[test]
+    fn completion_before_revocation_wins_the_tie() {
+        // container ends at 5; the node is revoked later — advancing
+        // past both in one jump must still complete the container first
+        let (cluster, clock) = spot_cluster(1e9, 3);
+        // force a deterministic revocation by reconfiguring the mean
+        // small AFTER the container would finish is hard without peeking;
+        // instead assert the chronological merge directly: a short
+        // container completes even when the clock jumps far ahead
+        let id = cluster.launch(ResourceConfig::new(1.0, 512), 5.0).unwrap();
+        clock.advance(1000.0);
+        let events = cluster.collect_completions();
+        let done = events.iter().find(|e| e.container == id).unwrap();
+        assert_eq!(done.phase, ContainerPhase::Succeeded);
+        assert_eq!(done.at, 5.0);
+    }
+
+    #[test]
+    fn set_pool_reconciles_node_counts() {
+        let (cluster, _clock) = small_cluster();
+        assert_eq!(cluster.node_count(), 1);
+        // grow the pool
+        cluster
+            .set_pool(PoolConfig::on_demand(
+                "ondemand",
+                NodeSpec { vcpus: 4.0, mem_mb: 4096 },
+                3,
+            ))
+            .unwrap();
+        assert_eq!(cluster.pool_size("ondemand"), 3);
+        // shrink it back: empty nodes shed immediately
+        cluster
+            .set_pool(PoolConfig::on_demand(
+                "ondemand",
+                NodeSpec { vcpus: 4.0, mem_mb: 4096 },
+                1,
+            ))
+            .unwrap();
+        assert_eq!(cluster.pool_size("ondemand"), 1);
+        // add a second pool via the admin path
+        cluster
+            .set_pool(PoolConfig::spot(
+                "spot",
+                NodeSpec { vcpus: 2.0, mem_mb: 2048 },
+                4,
+                0.25,
+                0.0,
+            ))
+            .unwrap();
+        assert!(cluster.has_pool("spot"));
+        assert_eq!(cluster.pool_size("spot"), 0);
+        assert_eq!(cluster.pool_price_multiplier("spot"), Some(0.25));
+        // reshaping the node spec re-adds the pool's empty nodes at the
+        // new shape immediately
+        cluster
+            .set_pool(PoolConfig::on_demand(
+                "ondemand",
+                NodeSpec { vcpus: 8.0, mem_mb: 8192 },
+                1,
+            ))
+            .unwrap();
+        let reshaped: Vec<_> = cluster
+            .nodes()
+            .into_iter()
+            .filter(|n| n.pool == "ondemand")
+            .collect();
+        assert_eq!(reshaped.len(), 1);
+        assert_eq!(reshaped[0].spec.vcpus, 8.0);
+        assert_eq!(reshaped[0].spec.mem_mb, 8192);
+        // invalid configs are rejected
+        assert!(cluster
+            .set_pool(PoolConfig {
+                name: "bad".into(),
+                spec: NodeSpec { vcpus: 1.0, mem_mb: 1024 },
+                price_multiplier: 0.5,
+                min_nodes: 5,
+                max_nodes: 2,
+                preemption_mean_secs: 0.0,
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn plan_capacity_uses_the_bfd_planner() {
+        let (cluster, _clock) = small_cluster();
+        let reqs = vec![ResourceConfig::new(2.0, 1024); 4];
+        assert_eq!(cluster.plan_capacity("ondemand", &reqs), Some(2));
+        assert_eq!(cluster.plan_capacity("ghost", &reqs), None);
     }
 }

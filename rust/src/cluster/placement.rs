@@ -1,0 +1,134 @@
+//! Bin-packing placement planner (best-fit-decreasing).
+//!
+//! The live cluster places one container at a time with a best-fit
+//! policy over per-node free capacity (see [`super::Cluster`]); this
+//! module holds the pure batch planner used to size scale-ups, answer
+//! "how many nodes would this backlog need?", and drive the placement
+//! benches — classic best-fit-decreasing over (milli-vCPU, MB) bins.
+
+use crate::cluster::{NodeSpec, ResourceConfig};
+
+/// Free capacity of one bin (node), in exact integer units.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Free {
+    pub milli_vcpus: u64,
+    pub mem_mb: u64,
+}
+
+impl Free {
+    /// A whole empty node of `spec`.
+    pub fn of(spec: NodeSpec) -> Free {
+        Free {
+            milli_vcpus: (spec.vcpus * 1000.0).round() as u64,
+            mem_mb: spec.mem_mb as u64,
+        }
+    }
+
+    pub fn fits(&self, milli: u64, mem: u64) -> bool {
+        self.milli_vcpus >= milli && self.mem_mb >= mem
+    }
+}
+
+/// Best-fit choice among open bins: the bin that leaves the *least*
+/// free vCPU (then memory) after placement; ties resolve to the lowest
+/// index, so planning is deterministic.
+pub fn best_fit(bins: &[Free], milli: u64, mem: u64) -> Option<usize> {
+    let mut best: Option<(u64, u64, usize)> = None;
+    for (i, bin) in bins.iter().enumerate() {
+        if !bin.fits(milli, mem) {
+            continue;
+        }
+        let key = (bin.milli_vcpus - milli, bin.mem_mb - mem, i);
+        if best.map_or(true, |b| key < b) {
+            best = Some(key);
+        }
+    }
+    best.map(|(_, _, i)| i)
+}
+
+/// Best-fit-decreasing plan: how many `spec`-shaped nodes hold `reqs`.
+/// Requests that cannot fit an empty node at all are skipped and
+/// reported in the second tuple slot (the caller decides whether that
+/// is an error).
+pub fn plan_nodes(spec: NodeSpec, reqs: &[ResourceConfig]) -> (usize, usize) {
+    let whole = Free::of(spec);
+    let mut sized: Vec<(u64, u64)> = reqs
+        .iter()
+        .map(|r| ((r.vcpus * 1000.0).round() as u64, r.mem_mb as u64))
+        .collect();
+    // decreasing by vCPU, then memory: large items first pack tightest
+    sized.sort_unstable_by_key(|r| std::cmp::Reverse(*r));
+    let mut bins: Vec<Free> = Vec::new();
+    let mut unplaceable = 0usize;
+    for (milli, mem) in sized {
+        if !whole.fits(milli, mem) {
+            unplaceable += 1;
+            continue;
+        }
+        match best_fit(&bins, milli, mem) {
+            Some(i) => {
+                bins[i].milli_vcpus -= milli;
+                bins[i].mem_mb -= mem;
+            }
+            None => {
+                bins.push(Free {
+                    milli_vcpus: whole.milli_vcpus - milli,
+                    mem_mb: whole.mem_mb - mem,
+                });
+            }
+        }
+    }
+    (bins.len(), unplaceable)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NODE: NodeSpec = NodeSpec {
+        vcpus: 4.0,
+        mem_mb: 4096,
+    };
+
+    #[test]
+    fn best_fit_prefers_tightest_bin() {
+        let bins = [
+            Free { milli_vcpus: 4000, mem_mb: 4096 },
+            Free { milli_vcpus: 1000, mem_mb: 1024 },
+            Free { milli_vcpus: 2000, mem_mb: 2048 },
+        ];
+        // a 1-vCPU/1GB request fits all three; the tightest (index 1) wins
+        assert_eq!(best_fit(&bins, 1000, 1024), Some(1));
+        // too big for the tight bins: only the empty node fits
+        assert_eq!(best_fit(&bins, 3000, 3072), Some(0));
+        assert_eq!(best_fit(&bins, 9000, 512), None);
+    }
+
+    #[test]
+    fn plan_packs_decreasing() {
+        // 2×(2 vCPU) + 4×(1 vCPU) = 8 vCPU over 4-vCPU nodes → 2 nodes
+        let reqs: Vec<ResourceConfig> = [2.0, 1.0, 1.0, 2.0, 1.0, 1.0]
+            .iter()
+            .map(|c| ResourceConfig::new(*c, 512))
+            .collect();
+        let (nodes, skipped) = plan_nodes(NODE, &reqs);
+        assert_eq!(nodes, 2);
+        assert_eq!(skipped, 0);
+    }
+
+    #[test]
+    fn plan_reports_unplaceable_requests() {
+        let reqs = vec![ResourceConfig::new(8.0, 8192), ResourceConfig::new(1.0, 512)];
+        let (nodes, skipped) = plan_nodes(NODE, &reqs);
+        assert_eq!(nodes, 1);
+        assert_eq!(skipped, 1);
+    }
+
+    #[test]
+    fn plan_is_memory_aware() {
+        // vCPU fits 4 per node, but memory only 2 per node
+        let reqs = vec![ResourceConfig::new(1.0, 2048); 4];
+        let (nodes, _) = plan_nodes(NODE, &reqs);
+        assert_eq!(nodes, 2);
+    }
+}

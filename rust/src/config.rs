@@ -16,6 +16,11 @@ pub struct PlatformConfig {
     /// Runtime-model noise scale (0 disables noise; see
     /// [`crate::workload::SimParams`]).
     pub noise: f64,
+    /// How often (virtual seconds of progress) the in-container agent
+    /// persists a `[[acai]] checkpoint` — work before the last
+    /// checkpoint survives a spot preemption, so a rescheduled job pays
+    /// only post-checkpoint rework.
+    pub checkpoint_secs: f64,
     /// Master seed for all stochastic components.
     pub seed: u64,
     /// Directory containing the AOT artifacts (`*.hlo.txt` + manifest).
@@ -33,6 +38,7 @@ impl Default for PlatformConfig {
             quota_k: 8,
             profile_barrier: 0.95,
             noise: 0.0,
+            checkpoint_secs: 5.0,
             seed: 0xACA1,
             artifacts_dir: None,
             journal: None,

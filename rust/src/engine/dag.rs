@@ -47,6 +47,8 @@ pub struct DagNode {
     pub input_from: Option<String>,
     pub output_fileset: String,
     pub resources: ResourceConfig,
+    /// Constrain the node's container to one named node pool.
+    pub pool: Option<String>,
     /// Names of nodes that must finish before this one launches.
     pub deps: Vec<String>,
 }
@@ -260,6 +262,7 @@ impl<'a> DagRun<'a> {
                 input_fileset,
                 output_fileset: node.output_fileset.clone(),
                 resources: node.resources,
+                pool: node.pool.clone(),
             };
             match engine.submit(spec) {
                 Ok(id) => {
@@ -429,6 +432,7 @@ mod tests {
             input_from: None,
             output_fileset: format!("{name}-out"),
             resources: ResourceConfig::new(0.5, 512),
+            pool: None,
             deps: deps.iter().map(|d| d.to_string()).collect(),
         }
     }

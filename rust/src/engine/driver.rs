@@ -99,6 +99,7 @@ mod tests {
             input_fileset: String::new(),
             output_fileset: format!("{name}-out"),
             resources: ResourceConfig::new(0.5, 512),
+            pool: None,
         }
     }
 

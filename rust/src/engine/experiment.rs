@@ -112,6 +112,10 @@ pub struct ExperimentSpec {
     /// argument values.
     pub profile: Option<String>,
     pub objective: Option<Objective>,
+    /// Run every trial on one named node pool (e.g. a cheap spot pool);
+    /// per-trial provisioning prices the grid at that pool's multiplier,
+    /// so the predicted cost/runtime frontier reflects spot economics.
+    pub pool: Option<String>,
 }
 
 /// Summary state of one experiment.
@@ -277,9 +281,17 @@ impl TrialStatus {
 
 /// Numeric auto-tags from a job log; the last report of a key wins
 /// (a training loss logged per epoch resolves to the final epoch's).
+/// The `checkpoint` key is reserved: the engine's preemption path
+/// emits `[[acai]] checkpoint=<secs>` resume offsets, which are
+/// bookkeeping (folded by the monitor), not trial metrics — folding
+/// them here would pollute the metric namespace and let `/best`
+/// select on an internal value.
 fn numeric_metrics(tags: Vec<(String, Json)>) -> Vec<(String, f64)> {
     let mut out: Vec<(String, f64)> = Vec::new();
     for (key, value) in tags {
+        if key == "checkpoint" {
+            continue;
+        }
         let Some(n) = value.as_f64() else { continue };
         match out.iter().position(|(k, _)| *k == key) {
             Some(i) => out[i].1 = n,
@@ -287,6 +299,18 @@ fn numeric_metrics(tags: Vec<(String, Json)>) -> Vec<(String, f64)> {
         }
     }
     out
+}
+
+/// Counts accumulated by one refresh scan of an experiment's trial
+/// prefix — enough to answer `status()` without scanning again.
+#[derive(Debug, Clone, Copy)]
+struct Fold {
+    trials: usize,
+    finished: usize,
+    failed: usize,
+    /// Every expected trial row exists and is terminal (the refresh
+    /// stamped — or confirmed — completion).
+    completed: bool,
 }
 
 /// The experiment registry: sweeps and their trials as persisted rows.
@@ -341,6 +365,15 @@ impl ExperimentStore {
         if spec.name.is_empty() {
             return Err(AcaiError::invalid("experiment needs a name"));
         }
+        // fail before any write: a sweep aimed at a nonexistent pool
+        // would queue every trial forever
+        let pool_multiplier = match &spec.pool {
+            Some(pool) => engine
+                .launcher
+                .pool_price_multiplier(pool)
+                .ok_or_else(|| AcaiError::invalid(format!("unknown node pool {pool:?}")))?,
+            None => 1.0,
+        };
         let space = SearchSpace::parse(&spec.template, spec.strategy)?;
         let points = space.points();
 
@@ -382,8 +415,13 @@ impl ExperimentStore {
                             })?;
                         arg_values.push(v);
                     }
-                    let decision =
-                        provisioner.optimize(profiler, fitted, &arg_values, *objective)?;
+                    let decision = provisioner.optimize_priced(
+                        profiler,
+                        fitted,
+                        &arg_values,
+                        *objective,
+                        pool_multiplier,
+                    )?;
                     planned.push((
                         decision.config,
                         Some((decision.predicted_runtime, decision.predicted_cost)),
@@ -405,6 +443,7 @@ impl ExperimentStore {
                 input_from: None,
                 output_fileset: format!("{}-trial-{i:04}", spec.name),
                 resources: planned[i].0,
+                pool: spec.pool.clone(),
                 deps: Vec::new(),
             })
             .collect();
@@ -464,7 +503,14 @@ impl ExperimentStore {
         }
 
         // Fan out as an edge-free DAG: one wave submits every trial;
-        // the scheduler quota k paces actual launches.
+        // the scheduler quota k paces actual launches.  The fan-out is
+        // atomic with respect to the event loop — holding the engine's
+        // drive guard keeps a background driver from advancing virtual
+        // time mid-submission, so a sweep's placement (and any spot
+        // preemption timeline) is a pure function of the platform seed
+        // even through the wire (the seeded-spot acceptance test
+        // asserts bit-identical cost across runs on both clients).
+        let _drive = engine.drive_guard();
         let mut run = DagRun::new(&dag, project, user);
         run.advance(engine)?;
         for (i, mut trial) in trials.into_iter().enumerate() {
@@ -525,18 +571,25 @@ impl ExperimentStore {
     /// unless the experiment row already says `completed` — a terminal
     /// experiment's rows are immutable, so listings and polls of old
     /// sweeps cost one row read instead of a trial scan + rewrites.
-    fn refresh_if_open(&self, engine: &ExecutionEngine, id: ExperimentId) -> Result<()> {
+    /// `None` means the stamped row is authoritative.
+    fn refresh_if_open(
+        &self,
+        engine: &ExecutionEngine,
+        id: ExperimentId,
+    ) -> Result<Option<Fold>> {
         if let Some(row) = self.table.get(T_EXP, &exp_key(id)) {
             if row.get("state").and_then(Json::as_str) == Some("completed") {
-                return Ok(());
+                return Ok(None);
             }
         }
-        self.refresh(engine, id)
+        self.refresh(engine, id).map(Some)
     }
 
     /// Fold the current job-registry state into the stored trial rows
     /// (and the experiment's own state once every trial is terminal).
-    fn refresh(&self, engine: &ExecutionEngine, id: ExperimentId) -> Result<()> {
+    /// Returns the counts accumulated in the single scan, so callers
+    /// answer status questions without scanning the prefix again.
+    fn refresh(&self, engine: &ExecutionEngine, id: ExperimentId) -> Result<Fold> {
         let exp_row = self.table.get(T_EXP, &exp_key(id));
         let exp_name = exp_row
             .as_ref()
@@ -636,7 +689,12 @@ impl ExperimentStore {
                 fail += 1;
             }
         }
-        if all_terminal && !creating {
+        let mut expected = seen;
+        if let Some(row) = &exp_row {
+            expected = row.get("trials").and_then(Json::as_u64).unwrap_or(0) as usize;
+        }
+        let completed = all_terminal && !creating && seen > 0 && seen >= expected;
+        if completed {
             let key = exp_key(id);
             if let Some(row) = self.table.get(T_EXP, &key) {
                 // Guard against a racing read between create()'s
@@ -644,12 +702,7 @@ impl ExperimentStore {
                 // only be stamped once every expected trial row exists
                 // (a premature stamp would freeze refresh_if_open
                 // forever while the late trial rows sit unfolded).
-                let expected =
-                    row.get("trials").and_then(Json::as_u64).unwrap_or(0) as usize;
-                if seen >= expected
-                    && seen > 0
-                    && row.get("state").and_then(Json::as_str) != Some("completed")
-                {
+                if row.get("state").and_then(Json::as_str) != Some("completed") {
                     // stamp the counts accumulated above with the state,
                     // so a completed experiment's status is one row read
                     let mut obj = row.as_object().cloned().unwrap_or_default();
@@ -660,7 +713,12 @@ impl ExperimentStore {
                 }
             }
         }
-        Ok(())
+        Ok(Fold {
+            trials: seen,
+            finished: fin,
+            failed: fail,
+            completed,
+        })
     }
 
     /// The experiment row, project-scoped (a foreign project's id is
@@ -733,38 +791,85 @@ impl ExperimentStore {
         })
     }
 
-    /// One experiment's summary (refreshes first).
+    /// Build a status from an already-read experiment row plus the
+    /// counts of the refresh scan that just ran — no second trial scan
+    /// (the seed version scanned the prefix once in `refresh` and again
+    /// in `status` on every poll of a running experiment).
+    fn status_from_fold(id: ExperimentId, row: &Json, fold: Fold) -> ExperimentStatus {
+        ExperimentStatus {
+            id,
+            name: row
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            state: if fold.completed {
+                "completed".to_string()
+            } else {
+                "running".to_string()
+            },
+            trials: fold.trials,
+            finished: fold.finished,
+            failed: fold.failed,
+            created_at: row.get("created_at").and_then(Json::as_f64).unwrap_or(0.0),
+        }
+    }
+
+    /// One experiment's summary — one trial scan while running (fold +
+    /// status in the same pass), one row read once completed.
     pub fn get(
         &self,
         engine: &ExecutionEngine,
         project: ProjectId,
         id: ExperimentId,
     ) -> Result<ExperimentStatus> {
-        self.row(project, id)?;
-        self.refresh_if_open(engine, id)?;
-        self.status(project, id)
+        let row = self.row(project, id)?;
+        match self.refresh_if_open(engine, id)? {
+            // completed: the stamped row answers alone
+            None => self.status(project, id),
+            Some(fold) => Ok(Self::status_from_fold(id, &row, fold)),
+        }
     }
 
-    /// Every experiment of a project, id-ordered, refreshed.
-    pub fn list(&self, engine: &ExecutionEngine, project: ProjectId) -> Vec<ExperimentStatus> {
-        let mut out = Vec::new();
-        for (_, row) in self.table.scan(T_EXP) {
-            if row.get("project").and_then(Json::as_u64) != Some(project.raw()) {
-                continue;
-            }
-            let Some(id) = row.get("id").and_then(Json::as_u64).map(ExperimentId) else {
-                continue;
-            };
-            // a refresh error (e.g. one corrupt trial row) must not hide
-            // the experiment from listings — status() only reads state
-            // strings, so the degraded record stays findable here while
-            // get() on it surfaces the underlying error
-            let _ = self.refresh_if_open(engine, id);
-            if let Ok(status) = self.status(project, id) {
-                out.push(status);
-            }
+    /// Experiment ids of a project, ascending — *no* refresh, so paged
+    /// listings can cut the page first and only refresh what they
+    /// return.
+    pub fn ids(&self, project: ProjectId) -> Vec<ExperimentId> {
+        self.table
+            .scan(T_EXP)
+            .iter()
+            .filter(|(_, row)| {
+                row.get("project").and_then(Json::as_u64) == Some(project.raw())
+            })
+            .filter_map(|(_, row)| row.get("id").and_then(Json::as_u64).map(ExperimentId))
+            .collect()
+    }
+
+    /// One experiment's summary for listings: refreshed, but tolerant —
+    /// a refresh error (e.g. one corrupt trial row) must not hide the
+    /// experiment, so the degraded record stays findable here while
+    /// `get()` on it surfaces the underlying error.
+    pub fn status_refreshed(
+        &self,
+        engine: &ExecutionEngine,
+        project: ProjectId,
+        id: ExperimentId,
+    ) -> Option<ExperimentStatus> {
+        let row = self.row(project, id).ok()?;
+        match self.refresh_if_open(engine, id) {
+            Ok(Some(fold)) => Some(Self::status_from_fold(id, &row, fold)),
+            Ok(None) | Err(_) => self.status(project, id).ok(),
         }
-        out
+    }
+
+    /// Every experiment of a project, id-ordered, refreshed.  Paged
+    /// callers (the SDK) should cut `ids()` first and refresh only the
+    /// returned page.
+    pub fn list(&self, engine: &ExecutionEngine, project: ProjectId) -> Vec<ExperimentStatus> {
+        self.ids(project)
+            .into_iter()
+            .filter_map(|id| self.status_refreshed(engine, project, id))
+            .collect()
     }
 
     /// All trials of an experiment, index-ordered, refreshed.
@@ -847,6 +952,7 @@ mod tests {
             resources: ResourceConfig::new(1.0, 1024),
             profile: None,
             objective: None,
+            pool: None,
         }
     }
 
@@ -1004,6 +1110,7 @@ mod tests {
                 input_fileset: String::new(),
                 output_fileset: "decoy-out".into(),
                 resources: ResourceConfig::new(0.5, 512),
+                pool: None,
             })
             .unwrap();
         fresh.engine.run_until_idle();

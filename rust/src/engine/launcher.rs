@@ -28,12 +28,48 @@ impl Launcher {
     }
 
     /// Provision a container for a job that will run `duration` virtual
-    /// seconds.  Publishes a `running` container-status event.
-    pub fn launch(&self, job: JobId, res: ResourceConfig, duration: f64) -> Result<ContainerId> {
-        let container = self.cluster.launch(res, duration)?;
+    /// seconds, optionally constrained to one node pool.  Publishes a
+    /// `running` container-status event.
+    pub fn launch(
+        &self,
+        job: JobId,
+        res: ResourceConfig,
+        duration: f64,
+        pool: Option<&str>,
+    ) -> Result<ContainerId> {
+        let container = self.cluster.launch_in(res, duration, pool)?;
         self.by_container.lock().unwrap().insert(container, job);
         self.publish(container, job, "running");
         Ok(container)
+    }
+
+    /// Price multiplier of the pool a freshly-launched container sits
+    /// on (1.0 when unknown — e.g. the container already completed).
+    pub fn price_multiplier(&self, container: ContainerId) -> f64 {
+        self.cluster.container_price_multiplier(container).unwrap_or(1.0)
+    }
+
+    /// Does the cluster have a pool of this name?
+    pub fn has_pool(&self, name: &str) -> bool {
+        self.cluster.has_pool(name)
+    }
+
+    /// Could this request ever be placed (on its pinned pool, or on any
+    /// pool when unconstrained)?
+    pub fn can_ever_fit(&self, res: ResourceConfig, pool: Option<&str>) -> bool {
+        self.cluster.can_ever_fit(res, pool)
+    }
+
+    /// A pool's price multiplier (per-trial provisioning prices spot
+    /// against on-demand with this).
+    pub fn pool_price_multiplier(&self, name: &str) -> Option<f64> {
+        self.cluster.pool_price_multiplier(name)
+    }
+
+    /// Autoscaler tick, driven by the engine's pump with the
+    /// scheduler's queue depth.
+    pub fn autoscale(&self, queued_jobs: usize) {
+        self.cluster.autoscale(queued_jobs);
     }
 
     /// Kill the container of a job.
@@ -56,6 +92,7 @@ impl Launcher {
                 let status = match e.phase {
                     ContainerPhase::Succeeded => "succeeded",
                     ContainerPhase::Failed => "failed",
+                    ContainerPhase::Preempted => "preempted",
                     _ => "unknown",
                 };
                 drop(map);
@@ -101,7 +138,7 @@ mod tests {
     fn launch_watch_round_trip() {
         let (l, clock, bus) = launcher();
         let rx = bus.subscribe(TOPIC_CONTAINER_STATUS);
-        l.launch(JobId(1), ResourceConfig::new(1.0, 1024), 5.0).unwrap();
+        l.launch(JobId(1), ResourceConfig::new(1.0, 1024), 5.0, None).unwrap();
         clock.advance(5.0);
         let done = l.watch();
         assert_eq!(done.len(), 1);
@@ -118,7 +155,7 @@ mod tests {
     fn kill_publishes_event() {
         let (l, _clock, bus) = launcher();
         let rx = bus.subscribe(TOPIC_CONTAINER_STATUS);
-        let c = l.launch(JobId(2), ResourceConfig::new(1.0, 1024), 100.0).unwrap();
+        let c = l.launch(JobId(2), ResourceConfig::new(1.0, 1024), 100.0, None).unwrap();
         l.kill(c).unwrap();
         let statuses: Vec<String> = rx
             .try_iter()
@@ -131,8 +168,8 @@ mod tests {
     #[test]
     fn watch_maps_containers_to_jobs() {
         let (l, clock, _bus) = launcher();
-        l.launch(JobId(10), ResourceConfig::new(0.5, 512), 2.0).unwrap();
-        l.launch(JobId(11), ResourceConfig::new(0.5, 512), 1.0).unwrap();
+        l.launch(JobId(10), ResourceConfig::new(0.5, 512), 2.0, None).unwrap();
+        l.launch(JobId(11), ResourceConfig::new(0.5, 512), 1.0, None).unwrap();
         clock.advance(2.0);
         let done = l.watch();
         let jobs: Vec<JobId> = done.iter().map(|(j, _, _)| *j).collect();

@@ -2,12 +2,17 @@
 //!
 //! ```text
 //! Queued ──▶ Launching ──▶ Running ──▶ Finished
-//!    │            │            │  └───▶ Failed
-//!    └────────────┴────────────┴──────▶ Killed   (user, any time)
+//!    ▲            │            │  └───▶ Failed
+//!    │            │            └──────▶ Preempted ──▶ (Queued)
+//!    └────────────┴──── Killed ◀── any non-terminal (user, any time)
 //! ```
 //!
-//! The (input file set, job, output file set) triplet is immutable: a job
-//! is submitted and scheduled exactly once; terminal states never leave.
+//! The (input file set, job, output file set) triplet is immutable; a
+//! terminal state never leaves.  `Preempted` is the one exception to
+//! "scheduled exactly once": a spot revocation is *not* a job failure —
+//! the preempted job re-enters its queue front-of-line and restarts
+//! from its last `[[acai]] checkpoint`, paying only post-checkpoint
+//! rework.
 
 use crate::error::{AcaiError, Result};
 
@@ -26,6 +31,10 @@ pub enum JobState {
     Failed,
     /// Killed by the user.
     Killed,
+    /// The spot node under the container was revoked; transient — the
+    /// engine requeues the job (front of its queue) to resume from its
+    /// checkpoint.
+    Preempted,
 }
 
 impl JobState {
@@ -46,6 +55,8 @@ impl JobState {
             (Launching, Running) => true,
             (Launching, Queued) => true, // cluster full: back to queue
             (Running, Finished) | (Running, Failed) => true,
+            (Running, Preempted) => true, // spot node revoked
+            (Preempted, Queued) => true,  // rescheduled from checkpoint
             // user can kill any non-terminal job
             (s, Killed) if !s.is_terminal() => true,
             _ => false,
@@ -71,6 +82,7 @@ impl JobState {
             JobState::Finished => "finished",
             JobState::Failed => "failed",
             JobState::Killed => "killed",
+            JobState::Preempted => "preempted",
         }
     }
 
@@ -84,6 +96,7 @@ impl JobState {
             "finished" => JobState::Finished,
             "failed" => JobState::Failed,
             "killed" => JobState::Killed,
+            "preempted" => JobState::Preempted,
             other => {
                 return Err(AcaiError::invalid(format!("unknown job state {other:?}")))
             }
@@ -105,7 +118,7 @@ mod tests {
 
     #[test]
     fn kill_from_any_nonterminal() {
-        for s in [Queued, Launching, Running] {
+        for s in [Queued, Launching, Running, Preempted] {
             assert!(s.can_transition(Killed), "{s:?}");
         }
         for s in [Finished, Failed, Killed] {
@@ -116,7 +129,7 @@ mod tests {
     #[test]
     fn terminal_states_are_sinks() {
         for s in [Finished, Failed, Killed] {
-            for t in [Queued, Launching, Running, Finished, Failed, Killed] {
+            for t in [Queued, Launching, Running, Finished, Failed, Killed, Preempted] {
                 assert!(!s.can_transition(t), "{s:?} -> {t:?}");
             }
         }
@@ -127,6 +140,21 @@ mod tests {
         assert!(!Queued.can_transition(Running));
         assert!(!Queued.can_transition(Finished));
         assert!(!Launching.can_transition(Finished));
+        // only a running container can be preempted, and a preempted
+        // job must pass through the queue to run again
+        assert!(!Queued.can_transition(Preempted));
+        assert!(!Launching.can_transition(Preempted));
+        assert!(!Preempted.can_transition(Running));
+        assert!(!Preempted.can_transition(Launching));
+    }
+
+    #[test]
+    fn preemption_cycle_is_legal() {
+        assert!(Running.can_transition(Preempted));
+        assert!(Preempted.can_transition(Queued));
+        assert!(Queued.can_transition(Launching));
+        assert!(!Preempted.is_terminal());
+        assert!(!Preempted.is_active());
     }
 
     #[test]
@@ -143,7 +171,7 @@ mod tests {
 
     #[test]
     fn state_strings_round_trip() {
-        for s in [Queued, Launching, Running, Finished, Failed, Killed] {
+        for s in [Queued, Launching, Running, Finished, Failed, Killed, Preempted] {
             assert_eq!(super::JobState::parse(s.as_str()).unwrap(), s);
         }
         assert!(super::JobState::parse("bogus").is_err());

@@ -21,6 +21,15 @@
 //! ([`sweep`], tracked by the persisted experiment registry
 //! [`experiment`]) fan out as edge-free DAGs — all bounded by the same
 //! per-(project, user) scheduler quota.
+//!
+//! The engine decouples **job lifecycle from machine lifecycle**: every
+//! pump ticks the cluster's autoscaler with the scheduler's queue
+//! depth, and a [`ContainerPhase::Preempted`] watch event (a spot node
+//! revocation) does not fail the job — the attempt is billed at the
+//! pool's discounted rate, the agent's last `[[acai]] checkpoint` is
+//! folded into a resume point, and the job re-enters its queue *front
+//! of line* to restart from the checkpoint, paying only
+//! post-checkpoint rework.
 
 pub mod dag;
 pub mod driver;
@@ -77,6 +86,9 @@ pub struct ExecutionEngine {
     pub pricing: PricingModel,
     clock: SimClock,
     rng: Mutex<Rng>,
+    /// Agent checkpoint cadence (virtual seconds of progress between
+    /// `[[acai]] checkpoint` persists) — see [`crate::PlatformConfig`].
+    checkpoint_secs: f64,
     /// Serializes event-loop *driving* (the background [`EngineDriver`],
     /// [`Self::run_until_idle`] callers, and the profiler's straggler
     /// barrier) so two threads never interleave `step()` loops.  `submit`
@@ -96,6 +108,7 @@ impl ExecutionEngine {
         clock: SimClock,
         quota_k: usize,
         seed: u64,
+        checkpoint_secs: f64,
     ) -> Self {
         Self {
             registry: JobRegistry::new(),
@@ -108,6 +121,7 @@ impl ExecutionEngine {
             pricing,
             clock,
             rng: Mutex::new(Rng::new(seed ^ 0xE46)),
+            checkpoint_secs,
             drive: Mutex::new(()),
         }
     }
@@ -129,6 +143,25 @@ impl ExecutionEngine {
     /// and the input file set, registers, enqueues, and pumps.
     pub fn submit(&self, spec: JobSpec) -> Result<JobId> {
         spec.resources.validate()?;
+        if let Some(pool) = &spec.pool {
+            if !self.launcher.has_pool(pool) {
+                return Err(AcaiError::invalid(format!("unknown node pool {pool:?}")));
+            }
+        }
+        // reject what could never be placed (request bigger than every
+        // eligible pool's node shape): such a job would sit queued
+        // forever, and its Exhausted launches would stall other pools
+        if !self.launcher.can_ever_fit(spec.resources, spec.pool.as_deref()) {
+            return Err(AcaiError::invalid(format!(
+                "no {} can fit {:.1} vCPU / {} MB",
+                match &spec.pool {
+                    Some(pool) => format!("node of pool {pool:?}"),
+                    None => "node pool".to_string(),
+                },
+                spec.resources.vcpus,
+                spec.resources.mem_mb
+            )));
+        }
         let cmd = JobCommand::parse(&spec.command)?;
         if !spec.input_fileset.is_empty() {
             let (name, version) = parse_fileset_ref(&spec.input_fileset)?;
@@ -165,26 +198,46 @@ impl ExecutionEngine {
         Ok(id)
     }
 
-    /// Launch everything the scheduler allows (Fig 9 steps 2–4).
+    /// Launch everything the scheduler allows (Fig 9 steps 2–4).  An
+    /// autoscaler tick runs first so backlog-driven capacity is placeable
+    /// in the same round.
     pub fn pump(&self) {
+        self.launcher.autoscale(self.scheduler.total_queued());
         let batch = self.scheduler.launchable();
-        let mut saturated = false;
+        // Saturation is tracked per placement constraint: a failed
+        // placement requeues every later job aimed at the SAME pool
+        // (FIFO preserved within the pool), while jobs bound for other
+        // pools still launch this round — one over-sized or starved
+        // pool can never stall the whole cluster's pump.
+        let mut saturated: Vec<Option<String>> = Vec::new();
         for (key, job) in batch {
-            if saturated {
-                // cluster already full this round: hand the slot back
+            let record = match self.registry.get(job) {
+                Ok(record) => record,
+                Err(e) => {
+                    let _ = self.registry.update(job, Some(JobState::Killed), |j| {
+                        j.error = Some(e.to_string());
+                    });
+                    self.scheduler.on_terminal(key);
+                    self.monitor.report(job, "failed", self.clock.now());
+                    continue;
+                }
+            };
+            if saturated.contains(&record.spec.pool) {
+                // this job's pool already failed a placement this
+                // round: hand the slot back, keep its queue order
                 self.scheduler.requeue_front(key, job);
                 continue;
             }
-            if let Err(e) = self.launch_one(key, job) {
+            if let Err(e) = self.launch_one(&record) {
                 if matches!(e, AcaiError::Exhausted(_)) {
-                    // cluster saturated: put the job back (front, FIFO
+                    // pool saturated: put the job back (front, FIFO
                     // preserved), retry after the next completion frees
                     // capacity
                     let _ = self
                         .registry
                         .update(job, Some(JobState::Queued), |_| {});
                     self.scheduler.requeue_front(key, job);
-                    saturated = true;
+                    saturated.push(record.spec.pool.clone());
                     continue;
                 }
                 let _ = self.registry.update(job, Some(JobState::Killed), |j| {
@@ -196,8 +249,8 @@ impl ExecutionEngine {
         }
     }
 
-    fn launch_one(&self, _key: QueueKey, job: JobId) -> Result<()> {
-        let record = self.registry.get(job)?;
+    fn launch_one(&self, record: &JobRecord) -> Result<()> {
+        let job = record.id;
         self.registry.update(job, Some(JobState::Launching), |_| {})?;
         // Agent: download the input file set (bytes counted for the log).
         self.monitor.report(job, "downloading", self.clock.now());
@@ -213,23 +266,48 @@ impl ExecutionEngine {
             }
         }
         let cmd = JobCommand::parse(&record.spec.command)?;
-        let duration = {
-            let mut rng = self.rng.lock().unwrap();
-            self.workloads.duration(&cmd, record.spec.resources, &mut rng)
+        // Checkpointed rescheduling: a preempted job keeps its original
+        // planned duration and restarts from its last checkpoint — only
+        // post-checkpoint rework is re-executed (and billed).
+        let (duration, planned) = match (record.checkpoint, record.planned_secs) {
+            (Some(checkpoint), Some(planned)) => {
+                ((planned - checkpoint).max(0.0), planned)
+            }
+            _ => {
+                let d = {
+                    let mut rng = self.rng.lock().unwrap();
+                    self.workloads.duration(&cmd, record.spec.resources, &mut rng)
+                };
+                (d, d)
+            }
         };
-        let container = self
-            .launcher
-            .launch(job, record.spec.resources, duration)?;
+        let container = self.launcher.launch(
+            job,
+            record.spec.resources,
+            duration,
+            record.spec.pool.as_deref(),
+        )?;
+        // the pool's price multiplier is fixed at launch time — billing
+        // uses what the capacity cost when it was bought
+        let price_mult = self.launcher.price_multiplier(container);
         self.registry.update(job, Some(JobState::Running), |j| {
             j.launched_at = Some(self.clock.now());
             j.container = Some(container);
+            j.planned_secs = Some(planned);
+            j.price_mult = Some(price_mult);
         })?;
         self.logs.append(
             job,
-            &[format!(
-                "agent: input fileset {} ({} bytes) downloaded; starting `{}`",
-                record.spec.input_fileset, input_bytes, record.spec.command
-            )],
+            &[match record.checkpoint {
+                Some(ck) => format!(
+                    "agent: input fileset {} ({} bytes) downloaded; resuming `{}` from checkpoint {ck:.3}s",
+                    record.spec.input_fileset, input_bytes, record.spec.command
+                ),
+                None => format!(
+                    "agent: input fileset {} ({} bytes) downloaded; starting `{}`",
+                    record.spec.input_fileset, input_bytes, record.spec.command
+                ),
+            }],
         );
         self.monitor.report(job, "running", self.clock.now());
         Ok(())
@@ -243,7 +321,10 @@ impl ExecutionEngine {
         };
         self.clock.advance_to(t);
         for (job, phase, at) in self.launcher.watch() {
-            self.finish_job(job, phase, at);
+            match phase {
+                ContainerPhase::Preempted => self.preempt_job(job, at),
+                _ => self.finish_job(job, phase, at),
+            }
         }
         self.pump();
         true
@@ -262,13 +343,80 @@ impl ExecutionEngine {
         }
     }
 
+    /// A spot revocation interrupted a running job: bill the attempt at
+    /// the pool's (discounted) rate, fold the agent's last checkpoint
+    /// into the record and the monitor, and requeue the job *front of
+    /// its queue* so it restarts from the checkpoint ahead of new
+    /// arrivals.
+    fn preempt_job(&self, job: JobId, at: f64) {
+        let Ok(record) = self.registry.get(job) else {
+            return;
+        };
+        let key: QueueKey = (record.spec.project, record.spec.user);
+        let attempt = (at - record.launched_at.unwrap_or(at)).max(0.0);
+        // work before the last checkpoint survives; the tail is rework.
+        // Credit is wall-clock-based, so a straggler container (which
+        // makes work progress slower than wall time) is clamped to the
+        // planned total — it can finish early after a late revocation,
+        // but the resume offset can never exceed the job's actual work.
+        let base = record.checkpoint.unwrap_or(0.0);
+        let interval = self.checkpoint_secs.max(1e-9);
+        let checkpoint = (base + (attempt / interval).floor() * interval)
+            .min(record.planned_secs.unwrap_or(f64::INFINITY));
+        let mult = record.price_mult.unwrap_or(1.0);
+        let attempt_cost = self.pricing.cost(record.spec.resources, attempt) * mult;
+        // the agent's dying gasp: a checkpoint tag the log parser (and
+        // the monitor) fold into the resume point
+        self.logs.append(
+            job,
+            &[
+                format!(
+                    "agent: spot node revoked after {attempt:.3}s; checkpoint at {checkpoint:.3}s survives"
+                ),
+                format!("[[acai]] checkpoint={checkpoint}"),
+            ],
+        );
+        self.monitor.checkpoint(job, checkpoint, at);
+        let preempted = self.registry.update(job, Some(JobState::Preempted), |j| {
+            j.preemptions += 1;
+            j.checkpoint = Some(checkpoint);
+            j.container = None;
+            j.launched_at = None;
+            // billing is cumulative across attempts
+            j.runtime_secs = Some(record.runtime_secs.unwrap_or(0.0) + attempt);
+            j.cost = Some(record.cost.unwrap_or(0.0) + attempt_cost);
+        });
+        self.monitor.report(job, "preempted", at);
+        if preempted.is_err() {
+            // the job raced into a terminal state (e.g. user kill);
+            // nothing to reschedule
+            return;
+        }
+        let _ = self.registry.update(job, Some(JobState::Queued), |_| {});
+        self.scheduler.requeue_front(key, job);
+        self.datalake.metadata.tag(
+            record.spec.project,
+            ArtifactKind::Job,
+            &job.to_string(),
+            &[
+                ("state".into(), Json::from("queued")),
+                ("preemptions".into(), Json::from(record.preemptions + 1)),
+            ],
+        );
+    }
+
     fn finish_job(&self, job: JobId, phase: ContainerPhase, at: f64) {
         let Ok(record) = self.registry.get(job) else {
             return;
         };
         let key: QueueKey = (record.spec.project, record.spec.user);
-        let runtime = at - record.launched_at.unwrap_or(at);
-        let cost = self.pricing.cost(record.spec.resources, runtime);
+        let attempt = (at - record.launched_at.unwrap_or(at)).max(0.0);
+        // cumulative billing: earlier preempted attempts are already in
+        // the record; this attempt is priced at its pool's multiplier
+        let mult = record.price_mult.unwrap_or(1.0);
+        let runtime = record.runtime_secs.unwrap_or(0.0) + attempt;
+        let cost = record.cost.unwrap_or(0.0)
+            + self.pricing.cost(record.spec.resources, attempt) * mult;
 
         let result = match phase {
             ContainerPhase::Succeeded => self.complete_success(&record, runtime, cost),
@@ -413,6 +561,11 @@ impl ExecutionEngine {
                 })?;
                 self.scheduler.on_terminal(key);
                 self.pump();
+            }
+            JobState::Preempted => {
+                // transient state inside the engine's own preemption
+                // handling; externally unreachable
+                return Err(AcaiError::conflict("job is being rescheduled"));
             }
             s => {
                 return Err(AcaiError::conflict(format!(

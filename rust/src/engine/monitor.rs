@@ -1,19 +1,33 @@
 //! Job monitor (paper §4.2): tracks real-time job progress published by
 //! the in-container agents on the job-progress topic, and fans it out to
 //! dashboard watchers (the WebSocket analogue is a pull subscription).
+//!
+//! Two bounds keep the monitor healthy on long-lived deployments:
+//!
+//! - per-job history is a **ring buffer** capped at [`HISTORY_CAP`]
+//!   entries — a job that reports progress forever costs constant
+//!   memory (the latest stage and the resume point are tracked
+//!   separately and never evicted);
+//! - `[[acai]] checkpoint` progress reports are **folded into a resume
+//!   point** per job: the engine reschedules a preempted job from
+//!   `resume_point`, paying only post-checkpoint rework.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 
 use crate::bus::{Bus, Event, TOPIC_JOB_PROGRESS};
 use crate::ids::JobId;
 use crate::json::Json;
 
+/// Per-job history cap: older progress entries are evicted FIFO.
+pub const HISTORY_CAP: usize = 256;
+
 /// One progress update.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Progress {
     pub job: JobId,
-    /// downloading | running | uploading | finished | failed | killed...
+    /// downloading | running | checkpoint | uploading | finished |
+    /// failed | preempted | killed...
     pub stage: String,
     pub at: f64,
 }
@@ -21,7 +35,10 @@ pub struct Progress {
 #[derive(Default)]
 struct Inner {
     latest: HashMap<JobId, Progress>,
-    history: HashMap<JobId, Vec<Progress>>,
+    history: HashMap<JobId, VecDeque<Progress>>,
+    /// Folded resume point per job (monotonic: a checkpoint never
+    /// regresses).
+    checkpoints: HashMap<JobId, f64>,
 }
 
 /// The monitor.
@@ -38,8 +55,17 @@ impl Monitor {
         let inner2 = inner.clone();
         bus.subscribe_fn(TOPIC_JOB_PROGRESS, move |event: &Event| {
             if let Some(p) = Self::parse(event) {
+                let checkpoint = event.payload.get("checkpoint").and_then(Json::as_f64);
                 let mut inner = inner2.lock().unwrap();
-                inner.history.entry(p.job).or_default().push(p.clone());
+                if let Some(ck) = checkpoint {
+                    let entry = inner.checkpoints.entry(p.job).or_insert(ck);
+                    *entry = (*entry).max(ck);
+                }
+                let history = inner.history.entry(p.job).or_default();
+                if history.len() == HISTORY_CAP {
+                    history.pop_front();
+                }
+                history.push_back(p.clone());
                 inner.latest.insert(p.job, p);
             }
         });
@@ -67,19 +93,39 @@ impl Monitor {
         );
     }
 
+    /// Publish a checkpoint report (the agent's `[[acai]] checkpoint`
+    /// line): `resume_point` virtual seconds of work are durable.
+    pub fn checkpoint(&self, job: JobId, resume_point: f64, at: f64) {
+        self.bus.publish(
+            TOPIC_JOB_PROGRESS,
+            Json::obj()
+                .field("job", job.to_string())
+                .field("stage", "checkpoint")
+                .field("at", at)
+                .field("checkpoint", resume_point)
+                .build(),
+        );
+    }
+
+    /// The folded resume point of a job, if it ever checkpointed.
+    pub fn resume_point(&self, job: JobId) -> Option<f64> {
+        self.inner.lock().unwrap().checkpoints.get(&job).copied()
+    }
+
     /// Latest known stage of a job.
     pub fn latest(&self, job: JobId) -> Option<Progress> {
         self.inner.lock().unwrap().latest.get(&job).cloned()
     }
 
-    /// Full progress history of a job (dashboard timeline).
+    /// Progress history of a job (dashboard timeline) — the most recent
+    /// [`HISTORY_CAP`] entries, oldest first.
     pub fn history(&self, job: JobId) -> Vec<Progress> {
         self.inner
             .lock()
             .unwrap()
             .history
             .get(&job)
-            .cloned()
+            .map(|h| h.iter().cloned().collect())
             .unwrap_or_default()
     }
 
@@ -133,5 +179,41 @@ mod tests {
         bus.publish(TOPIC_JOB_PROGRESS, Json::from("garbage"));
         bus.publish(TOPIC_JOB_PROGRESS, Json::obj().field("job", "not-an-id").build());
         assert!(m.latest(JobId(1)).is_none());
+    }
+
+    #[test]
+    fn history_is_a_bounded_ring() {
+        let bus = Bus::new();
+        let m = Monitor::new(bus);
+        for i in 0..(HISTORY_CAP + 44) {
+            m.report(JobId(9), &format!("stage-{i}"), i as f64);
+        }
+        let history = m.history(JobId(9));
+        assert_eq!(history.len(), HISTORY_CAP);
+        // oldest entries evicted FIFO: the ring starts at entry 44
+        assert_eq!(history[0].stage, "stage-44");
+        assert_eq!(
+            history.last().unwrap().stage,
+            format!("stage-{}", HISTORY_CAP + 43)
+        );
+        // latest survives regardless of eviction
+        assert_eq!(
+            m.latest(JobId(9)).unwrap().stage,
+            format!("stage-{}", HISTORY_CAP + 43)
+        );
+    }
+
+    #[test]
+    fn checkpoints_fold_into_a_monotonic_resume_point() {
+        let bus = Bus::new();
+        let m = Monitor::new(bus);
+        assert_eq!(m.resume_point(JobId(4)), None);
+        m.checkpoint(JobId(4), 10.0, 12.0);
+        m.checkpoint(JobId(4), 25.0, 30.0);
+        // a stale (lower) report never regresses the resume point
+        m.checkpoint(JobId(4), 5.0, 31.0);
+        assert_eq!(m.resume_point(JobId(4)), Some(25.0));
+        // checkpoint reports land in the history stream too
+        assert!(m.history(JobId(4)).iter().all(|p| p.stage == "checkpoint"));
     }
 }

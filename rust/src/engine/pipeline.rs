@@ -31,6 +31,8 @@ pub struct Stage {
     /// Output file-set name; the next stage consumes it.
     pub output_fileset: String,
     pub resources: ResourceConfig,
+    /// Constrain the stage's container to one named node pool.
+    pub pool: Option<String>,
 }
 
 /// A pipeline definition.
@@ -73,6 +75,7 @@ impl Pipeline {
                 input_from: prev.clone(),
                 output_fileset: stage.output_fileset.clone(),
                 resources: stage.resources,
+                pool: stage.pool.clone(),
                 deps: prev.iter().cloned().collect(),
             });
             prev = Some(stage.name.clone());
@@ -198,6 +201,7 @@ pub fn replay_downstream(
             input_from: None,
             output_fileset: record.spec.output_fileset.clone(),
             resources: record.spec.resources,
+            pool: record.spec.pool.clone(),
             deps,
         });
     }
@@ -237,12 +241,14 @@ mod tests {
                     command: "python train_mnist.py --epoch 1".into(),
                     output_fileset: "features".into(),
                     resources: ResourceConfig::new(1.0, 1024),
+                    pool: None,
                 },
                 Stage {
                     name: "train".into(),
                     command: "python train_mnist.py --epoch 3".into(),
                     output_fileset: "model".into(),
                     resources: ResourceConfig::new(2.0, 2048),
+                    pool: None,
                 },
             ],
         }

@@ -41,6 +41,9 @@ pub struct JobSpec {
     /// Name for the output file set created on success.
     pub output_fileset: String,
     pub resources: ResourceConfig,
+    /// Constrain placement to one named node pool (`None` = any pool;
+    /// unconstrained jobs prefer the cheapest capacity).
+    pub pool: Option<String>,
 }
 
 /// The registry's record of a job.
@@ -60,6 +63,16 @@ pub struct JobRecord {
     /// Output file set version created on success.
     pub output_version: Option<Version>,
     pub error: Option<String>,
+    /// How many times a spot revocation interrupted this job.
+    pub preemptions: u64,
+    /// Resume point (virtual seconds of completed work) persisted by the
+    /// agent's last `[[acai]] checkpoint` before a preemption.
+    pub checkpoint: Option<f64>,
+    /// Full planned duration of the payload, fixed at first launch so a
+    /// resumed attempt runs exactly `planned - checkpoint`.
+    pub planned_secs: Option<f64>,
+    /// Price multiplier of the pool the current/last container ran on.
+    pub price_mult: Option<f64>,
 }
 
 fn opt_f64(b: JsonBuilder, key: &str, v: Option<f64>) -> JsonBuilder {
@@ -83,10 +96,19 @@ impl JobRecord {
             .field("output_fileset", self.spec.output_fileset.as_str())
             .field("vcpus", self.spec.resources.vcpus)
             .field("mem_mb", self.spec.resources.mem_mb);
+        if let Some(pool) = &self.spec.pool {
+            b = b.field("pool", pool.as_str());
+        }
+        if self.preemptions > 0 {
+            b = b.field("preemptions", self.preemptions);
+        }
         b = opt_f64(b, "launched_at", self.launched_at);
         b = opt_f64(b, "finished_at", self.finished_at);
         b = opt_f64(b, "runtime_secs", self.runtime_secs);
         b = opt_f64(b, "cost", self.cost);
+        b = opt_f64(b, "checkpoint", self.checkpoint);
+        b = opt_f64(b, "planned_secs", self.planned_secs);
+        b = opt_f64(b, "price_mult", self.price_mult);
         if let Some(c) = self.container {
             b = b.field("container", c.raw());
         }
@@ -125,6 +147,7 @@ impl JobRecord {
                     vcpus: row.get("vcpus").and_then(Json::as_f64).unwrap_or(0.0),
                     mem_mb: field_u64("mem_mb")? as u32,
                 },
+                pool: row.get("pool").and_then(Json::as_str).map(String::from),
             },
             state: JobState::parse(
                 row.get("state").and_then(Json::as_str).unwrap_or_default(),
@@ -143,6 +166,10 @@ impl JobRecord {
                 .and_then(Json::as_u64)
                 .map(|v| v as Version),
             error: row.get("error").and_then(Json::as_str).map(String::from),
+            preemptions: row.get("preemptions").and_then(Json::as_u64).unwrap_or(0),
+            checkpoint: opt("checkpoint"),
+            planned_secs: opt("planned_secs"),
+            price_mult: opt("price_mult"),
         })
     }
 }
@@ -201,6 +228,10 @@ impl JobRegistry {
             container: None,
             output_version: None,
             error: None,
+            preemptions: 0,
+            checkpoint: None,
+            planned_secs: None,
+            price_mult: None,
         };
         self.table.put(T_JOBS, &job_key(id), record.to_json())?;
         Ok(id)
@@ -291,6 +322,7 @@ mod tests {
             input_fileset: "mnist".into(),
             output_fileset: "model".into(),
             resources: ResourceConfig::new(1.0, 1024),
+            pool: None,
         }
     }
 
@@ -365,6 +397,36 @@ mod tests {
         assert_eq!(rec.container, Some(ContainerId(7)));
         assert_eq!(rec.output_version, None);
         assert_eq!(rec.error, None);
+        assert_eq!(rec.preemptions, 0);
+        assert_eq!(rec.checkpoint, None);
+        assert_eq!(rec.spec.pool, None);
+    }
+
+    #[test]
+    fn preemption_fields_round_trip_through_json() {
+        let r = JobRegistry::new();
+        let mut s = spec();
+        s.pool = Some("spot".into());
+        let id = r.register(s, 0.0).unwrap();
+        r.update(id, Some(JobState::Launching), |_| {}).unwrap();
+        r.update(id, Some(JobState::Running), |j| {
+            j.planned_secs = Some(40.0);
+            j.price_mult = Some(0.3);
+        })
+        .unwrap();
+        r.update(id, Some(JobState::Preempted), |j| {
+            j.preemptions += 1;
+            j.checkpoint = Some(15.0);
+        })
+        .unwrap();
+        r.update(id, Some(JobState::Queued), |_| {}).unwrap();
+        let rec = r.get(id).unwrap();
+        assert_eq!(rec.state, JobState::Queued);
+        assert_eq!(rec.spec.pool.as_deref(), Some("spot"));
+        assert_eq!(rec.preemptions, 1);
+        assert_eq!(rec.checkpoint, Some(15.0));
+        assert_eq!(rec.planned_secs, Some(40.0));
+        assert_eq!(rec.price_mult, Some(0.3));
     }
 
     #[test]

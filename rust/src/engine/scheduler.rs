@@ -144,6 +144,18 @@ impl Scheduler {
         *self.inner.lock().unwrap().active.get(&key).unwrap_or(&0)
     }
 
+    /// Total queued depth across every tuple (the autoscaler's demand
+    /// signal).
+    pub fn total_queued(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .queues
+            .values()
+            .map(|q| q.len())
+            .sum()
+    }
+
     /// Anything queued anywhere?
     pub fn any_queued(&self) -> bool {
         self.inner

@@ -18,8 +18,9 @@
 //!    the paper runs on, all backed by tier 1: [`objectstore`]
 //!    (S3 + SNS), [`kvstore`] (MySQL), [`docstore`] (MongoDB),
 //!    [`graphstore`] (Neo4j), plus [`bus`] (Redis pub/sub), [`cluster`]
-//!    (Kubernetes), [`httpd`] (HTTP microservice plumbing), [`json`],
-//!    [`prng`], [`simclock`].
+//!    (Kubernetes — elastic node pools with autoscaling, best-fit
+//!    bin-packing placement, and seeded spot preemption), [`httpd`]
+//!    (HTTP microservice plumbing), [`json`], [`prng`], [`simclock`].
 //! 3. **ACAI services** — the paper's contribution: [`credential`],
 //!    [`datalake`], [`engine`], [`pricing`], [`profiler`],
 //!    [`autoprovision`], [`workload`], [`sdk`], [`usability`].  The

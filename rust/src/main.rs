@@ -108,6 +108,7 @@ fn demo(flags: &HashMap<String, String>) -> acai::Result<()> {
         input_fileset: "mnist".into(),
         output_fileset: "model".into(),
         resources: ResourceConfig::new(2.0, 2048),
+        pool: None,
     })?;
     client.wait_all();
     let record = client.job(job)?;

@@ -76,6 +76,7 @@ impl Acai {
             clock.clone(),
             config.quota_k,
             config.seed,
+            config.checkpoint_secs,
         ));
         let profiler = Profiler::new(engine.clone(), runtime.clone(), config.profile_barrier);
         let provisioner = AutoProvisioner::new(pricing);

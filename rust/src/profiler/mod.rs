@@ -232,6 +232,7 @@ impl Profiler {
                         input_fileset: input_fileset.to_string(),
                         output_fileset: format!("profile-{name}-out"),
                         resources: res,
+                        pool: None,
                     })?;
                     jobs.push((id, combo.clone(), res));
                 }

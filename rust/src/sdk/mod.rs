@@ -22,8 +22,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::api::dto::{
-    cut_page, num_cursor, FileEntry, JobStatus, LogChunk, Page, PageReq, ProvisionChoice,
-    TraceDir,
+    cut_page, num_cursor, FileEntry, JobStatus, LogChunk, NodeStatus, Page, PageReq,
+    PoolSpec, PoolStatus, ProvisionChoice, TraceDir,
 };
 use crate::autoprovision::{Decision, Objective};
 use crate::cluster::ResourceConfig;
@@ -151,6 +151,20 @@ pub trait AcaiApi {
     /// Optimize a resource config for a profiled template.
     fn provision(&self, template_name: &str, values: &[f64], objective: Objective)
         -> Result<ProvisionChoice>;
+
+    // ---- cluster (elastic node pools) ----
+
+    /// The cluster's node pools: config, live node count, preemption
+    /// counter.
+    fn cluster_pools(&self) -> Result<Vec<PoolStatus>>;
+
+    /// Create or reconfigure one pool by name; returns the updated pool
+    /// set.  Capacity reconciles immediately (grow to min, shed idle
+    /// nodes above max).
+    fn put_cluster_pool(&self, spec: &PoolSpec) -> Result<Vec<PoolStatus>>;
+
+    /// Every live node with its per-node free-capacity accounting.
+    fn cluster_nodes(&self) -> Result<Vec<NodeStatus>>;
 }
 
 /// What a client submits through the SDK.
@@ -161,6 +175,9 @@ pub struct JobRequest {
     pub input_fileset: String,
     pub output_fileset: String,
     pub resources: ResourceConfig,
+    /// Constrain placement to one named node pool (`None` = any pool;
+    /// unconstrained jobs prefer the cheapest capacity).
+    pub pool: Option<String>,
 }
 
 /// A token-authenticated SDK client.
@@ -341,6 +358,7 @@ impl Client {
             input_fileset: request.input_fileset,
             output_fileset: request.output_fileset,
             resources: request.resources,
+            pool: request.pool,
         })
     }
 
@@ -416,6 +434,7 @@ impl Client {
             input_fileset: input_fileset.to_string(),
             output_fileset: output_fileset.to_string(),
             resources: decision.config,
+            pool: None,
         })
     }
 }
@@ -685,11 +704,27 @@ impl AcaiApi for Client {
 
     fn experiments(&self, page: &PageReq) -> Result<Page<ExperimentStatus>> {
         let page = page.checked()?;
-        let statuses = self
-            .acai
-            .experiments
-            .list(&self.acai.engine, self.identity.project);
-        Ok(cut_page(statuses, &page, |s| num_cursor(s.id.raw())))
+        // cut the page on the (cheap, refresh-free) id scan first, then
+        // refresh only the experiments actually returned — a project
+        // with hundreds of open sweeps no longer pays a full-store
+        // refresh per listing page
+        let ids = self.acai.experiments.ids(self.identity.project);
+        let id_page = cut_page(ids, &page, |id| num_cursor(id.raw()));
+        let items = id_page
+            .items
+            .iter()
+            .filter_map(|id| {
+                self.acai.experiments.status_refreshed(
+                    &self.acai.engine,
+                    self.identity.project,
+                    *id,
+                )
+            })
+            .collect();
+        Ok(Page {
+            items,
+            next: id_page.next,
+        })
     }
 
     fn experiment_trials(
@@ -755,6 +790,40 @@ impl AcaiApi for Client {
         let decision = self.autoprovision(template_name, values, objective)?;
         Ok(ProvisionChoice::from_decision(&decision))
     }
+
+    fn cluster_pools(&self) -> Result<Vec<PoolStatus>> {
+        Ok(self
+            .acai
+            .cluster
+            .pools()
+            .iter()
+            .map(PoolStatus::from_snapshot)
+            .collect())
+    }
+
+    fn put_cluster_pool(&self, spec: &PoolSpec) -> Result<Vec<PoolStatus>> {
+        // pools are cluster-global, shared by every project: only a
+        // project admin may reconfigure them (reads stay open)
+        if !self.identity.is_project_admin {
+            return Err(AcaiError::Unauthorized(
+                "cluster pool administration requires a project admin token".into(),
+            ));
+        }
+        self.acai.cluster.set_pool(spec.to_config())?;
+        // new capacity may unblock queued jobs right away
+        self.acai.engine.pump();
+        self.cluster_pools()
+    }
+
+    fn cluster_nodes(&self) -> Result<Vec<NodeStatus>> {
+        Ok(self
+            .acai
+            .cluster
+            .nodes()
+            .iter()
+            .map(NodeStatus::from_snapshot)
+            .collect())
+    }
 }
 
 #[cfg(test)]
@@ -772,6 +841,30 @@ mod tests {
         let (_p, tok) = acai.credentials.create_project(&root, "nlp", "alice").unwrap();
         let client = Client::connect(acai, &tok).unwrap();
         assert!(client.identity().is_project_admin);
+    }
+
+    #[test]
+    fn pool_administration_requires_a_project_admin() {
+        let acai = Arc::new(Acai::boot_default());
+        let root = acai.credentials.root_token().to_string();
+        let (_p, admin_tok) = acai.credentials.create_project(&root, "ops", "alice").unwrap();
+        let admin = Client::connect(acai.clone(), &admin_tok).unwrap();
+        let member_tok = acai.credentials.create_user(&admin_tok, "bob").unwrap();
+        let member = Client::connect(acai, &member_tok).unwrap();
+        let spec = crate::api::dto::PoolSpec {
+            name: "spot".into(),
+            vcpus: 4.0,
+            mem_mb: 8192,
+            price_multiplier: 0.5,
+            min_nodes: 0,
+            max_nodes: 2,
+            preemption_mean_secs: 0.0,
+        };
+        // pools are cluster-global: a plain member may look, not touch
+        assert_eq!(member.put_cluster_pool(&spec).unwrap_err().status(), 401);
+        assert!(!member.cluster_pools().unwrap().is_empty());
+        assert!(member.cluster_nodes().is_ok());
+        assert_eq!(admin.put_cluster_pool(&spec).unwrap().len(), 2);
     }
 
     #[test]

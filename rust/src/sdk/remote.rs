@@ -12,8 +12,8 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::api::dto::{
-    self, b64_decode, b64_encode, FileEntry, JobStatus, LogChunk, Page, PageReq,
-    ProvisionChoice, TraceDir,
+    self, b64_decode, b64_encode, FileEntry, JobStatus, LogChunk, NodeStatus, Page, PageReq,
+    PoolSpec, PoolStatus, ProvisionChoice, TraceDir,
 };
 use crate::api::router::percent_encode;
 use crate::autoprovision::Objective;
@@ -473,5 +473,29 @@ impl AcaiApi for RemoteClient {
                 .build(),
         )?;
         ProvisionChoice::from_json(&resp)
+    }
+
+    fn cluster_pools(&self) -> Result<Vec<PoolStatus>> {
+        let resp = self.get("/v1/cluster/pools")?;
+        dto::arr_field(dto::as_object(&resp)?, "pools")?
+            .iter()
+            .map(PoolStatus::from_json)
+            .collect()
+    }
+
+    fn put_cluster_pool(&self, spec: &PoolSpec) -> Result<Vec<PoolStatus>> {
+        let resp = self.call("PUT", "/v1/cluster/pools", Some(&spec.to_json()))?;
+        dto::arr_field(dto::as_object(&resp)?, "pools")?
+            .iter()
+            .map(PoolStatus::from_json)
+            .collect()
+    }
+
+    fn cluster_nodes(&self) -> Result<Vec<NodeStatus>> {
+        let resp = self.get("/v1/cluster/nodes")?;
+        dto::arr_field(dto::as_object(&resp)?, "nodes")?
+            .iter()
+            .map(NodeStatus::from_json)
+            .collect()
     }
 }

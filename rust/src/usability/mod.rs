@@ -164,6 +164,7 @@ pub fn run_study(
             input_fileset: input_fileset.to_string(),
             output_fileset: format!("study-out-{i}"),
             resources: ResourceConfig::new(8.0, 8192),
+            pool: None,
         })
         .collect();
     let records = acai.engine.run_batch(specs)?;

@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use acai::api::dto::{PageReq, TraceDir};
+use acai::api::dto::{PageReq, PoolSpec, TraceDir};
 use acai::api::make_handler;
 use acai::autoprovision::Objective;
 use acai::cluster::ResourceConfig;
@@ -32,6 +32,7 @@ fn job_request(name: &str, input: &str, output: &str) -> JobRequest {
         input_fileset: input.into(),
         output_fileset: output.into(),
         resources: ResourceConfig::new(1.0, 1024),
+        pool: None,
     }
 }
 
@@ -44,6 +45,7 @@ fn experiment_spec(name: &str, template: &str, input: &str) -> ExperimentSpec {
         resources: ResourceConfig::new(1.0, 1024),
         profile: None,
         objective: None,
+        pool: None,
     }
 }
 
@@ -279,6 +281,77 @@ fn conformance_suite(api: &dyn AcaiApi) {
         .status(),
         400
     );
+
+    // ---- cluster surface: pools, nodes, admin upsert ----
+    let pools = api.cluster_pools().unwrap();
+    assert_eq!(pools.len(), 1);
+    assert_eq!(pools[0].spec.name, "ondemand");
+    assert_eq!(pools[0].spec.price_multiplier, 1.0);
+    assert_eq!(pools[0].nodes, 8);
+    assert_eq!(pools[0].preempted_nodes, 0);
+    let nodes = api.cluster_nodes().unwrap();
+    assert_eq!(nodes.len(), 8);
+    assert!(nodes.iter().all(|n| n.pool == "ondemand" && n.vcpus == 16.0));
+    // upsert a discounted (non-revocable) pool: min_nodes honored now
+    let updated = api
+        .put_cluster_pool(&PoolSpec {
+            name: "batch".into(),
+            vcpus: 4.0,
+            mem_mb: 8192,
+            price_multiplier: 0.5,
+            min_nodes: 2,
+            max_nodes: 4,
+            preemption_mean_secs: 0.0,
+        })
+        .unwrap();
+    assert_eq!(updated.len(), 2);
+    let batch = updated.iter().find(|p| p.spec.name == "batch").unwrap();
+    assert_eq!(batch.nodes, 2);
+    assert_eq!(api.cluster_nodes().unwrap().len(), 10);
+    // a job pinned to the new pool runs there, billed at its multiplier
+    let mut pinned = job_request("pinned", "corpus", "pinned-out");
+    pinned.pool = Some("batch".into());
+    let pinned_job = api.submit_job(&pinned).unwrap();
+    let pinned_done = api.await_job(pinned_job).unwrap();
+    assert_eq!(pinned_done.state, "finished");
+    // same command/resources as the earlier on-demand "train" job: the
+    // runtime matches and the cost is exactly the 0.5 multiplier
+    let train_done = api.job_status(job).unwrap();
+    // tolerances absorb the SimClock's microsecond rounding
+    assert!(
+        (pinned_done.runtime_secs.unwrap() - train_done.runtime_secs.unwrap()).abs() < 1e-4
+    );
+    assert!(
+        (pinned_done.cost.unwrap() - 0.5 * train_done.cost.unwrap()).abs() < 1e-6,
+        "batch-pool cost {} vs on-demand {}",
+        pinned_done.cost.unwrap(),
+        train_done.cost.unwrap()
+    );
+    // pool errors are typed on both clients: unknown pool 400,
+    // malformed pool spec 400
+    let mut ghost_pool = job_request("ghosted", "corpus", "gp-out");
+    ghost_pool.pool = Some("no-such-pool".into());
+    assert_eq!(api.submit_job(&ghost_pool).unwrap_err().status(), 400);
+    assert_eq!(
+        api.put_cluster_pool(&PoolSpec {
+            name: "broken".into(),
+            vcpus: 4.0,
+            mem_mb: 8192,
+            price_multiplier: 0.5,
+            min_nodes: 5,
+            max_nodes: 2,
+            preemption_mean_secs: 0.0,
+        })
+        .unwrap_err()
+        .status(),
+        400
+    );
+    // a pinned request bigger than its pool's node shape can never be
+    // placed — rejected at submit, never queued forever
+    let mut oversized = job_request("oversized", "corpus", "ov-out");
+    oversized.pool = Some("batch".into());
+    oversized.resources = ResourceConfig::new(8.0, 8192);
+    assert_eq!(api.submit_job(&oversized).unwrap_err().status(), 400);
 }
 
 #[test]
@@ -407,4 +480,103 @@ fn remote_kill_interrupts_a_queued_job() {
         }
         Err(e) => assert_eq!(e.status(), 409),
     }
+}
+
+/// ISSUE-4 acceptance: run a seeded spot-pool sweep and the identical
+/// sweep on on-demand capacity.  Returns the bit patterns of both total
+/// costs plus the spot revocation count, so two runs (and the two
+/// clients) can be compared for exact determinism.
+fn spot_sweep_outcome(api: &dyn AcaiApi) -> (u64, u64, u64) {
+    api.upload(&[("/data/corpus.bin", b"bytes")]).unwrap();
+    api.make_file_set("data", &["/data/corpus.bin"]).unwrap();
+    // cheap revocable capacity next to the default on-demand pool
+    api.put_cluster_pool(&PoolSpec {
+        name: "spot".into(),
+        vcpus: 4.0,
+        mem_mb: 8192,
+        price_multiplier: 0.3,
+        min_nodes: 0,
+        max_nodes: 6,
+        preemption_mean_secs: 6.0,
+    })
+    .unwrap();
+
+    let template = "python train_mnist.py --epoch {5,6,7,8,9} --learning-rate {0.1,0.3}";
+    let sweep_cost = |name: &str, pool: &str| -> f64 {
+        let mut spec = experiment_spec(name, template, "data");
+        spec.pool = Some(pool.to_string());
+        let exp = api.create_experiment(&spec).unwrap();
+        assert_eq!(exp.trials, 10);
+        let done = api.await_experiment(exp.id).unwrap();
+        assert_eq!(done.state, "completed");
+        assert_eq!(done.finished, 10, "every trial must survive the storm");
+        assert_eq!(done.failed, 0);
+        let mut total = 0.0f64;
+        let mut cursor: Option<String> = None;
+        loop {
+            let out = api.experiment_trials(exp.id, &page(7, cursor.clone())).unwrap();
+            for trial in &out.items {
+                assert_eq!(trial.state, "finished");
+                total += trial.cost.unwrap();
+            }
+            match out.next {
+                Some(c) => cursor = Some(c),
+                None => break,
+            }
+        }
+        total
+    };
+
+    let spot_cost = sweep_cost("storm", "spot");
+    // the storm was real: at least 5 spot nodes revoked mid-sweep
+    let preempted: u64 = api
+        .cluster_pools()
+        .unwrap()
+        .iter()
+        .map(|p| p.preempted_nodes)
+        .sum();
+    assert!(preempted >= 5, "want a real storm, saw {preempted} revocations");
+
+    let ondemand_cost = sweep_cost("calm", "ondemand");
+    // the paper's cost story: revocable capacity + checkpointed
+    // rescheduling beats on-demand even after paying the rework
+    assert!(
+        spot_cost < ondemand_cost,
+        "spot sweep {spot_cost} must undercut on-demand {ondemand_cost}"
+    );
+    (spot_cost.to_bits(), ondemand_cost.to_bits(), preempted)
+}
+
+fn spot_outcome_in_process() -> (u64, u64, u64) {
+    let acai = Arc::new(Acai::boot_default());
+    let root = acai.credentials.root_token().to_string();
+    let (_p, token) = acai.credentials.create_project(&root, "spot", "alice").unwrap();
+    let client = Client::connect(acai, &token).unwrap();
+    spot_sweep_outcome(&client)
+}
+
+fn spot_outcome_over_the_wire() -> (u64, u64, u64) {
+    let acai = Arc::new(Acai::boot_default());
+    let root = acai.credentials.root_token().to_string();
+    let server = Server::serve(0, make_handler(acai)).unwrap();
+    let (_proj, remote) =
+        RemoteClient::create_project(server.addr(), &root, "spot", "alice").unwrap();
+    spot_sweep_outcome(&remote)
+}
+
+#[test]
+fn seeded_spot_sweep_is_cheaper_and_deterministic_in_process() {
+    let a = spot_outcome_in_process();
+    let b = spot_outcome_in_process();
+    assert_eq!(a, b, "same seed must replay the same storm bit-for-bit");
+}
+
+#[test]
+fn seeded_spot_sweep_is_cheaper_and_deterministic_over_the_wire() {
+    let a = spot_outcome_over_the_wire();
+    let b = spot_outcome_over_the_wire();
+    assert_eq!(a, b, "same seed must replay the same storm over HTTP");
+    // and the wire changes nothing: the in-process platform sees the
+    // exact same placement, preemption sequence, and bill
+    assert_eq!(a, spot_outcome_in_process());
 }

@@ -37,6 +37,7 @@ fn job(name: &str, epochs: u32, res: ResourceConfig) -> JobSpec {
         input_fileset: "mnist".into(),
         output_fileset: format!("{name}-out"),
         resources: res,
+        pool: None,
     }
 }
 
@@ -210,10 +211,13 @@ fn submit_validates_resources_and_input() {
 fn cluster_saturation_requeues_and_retries() {
     // a cluster with a single small node: jobs must take turns
     let mut config = PlatformConfig::default();
-    config.cluster.nodes = vec![acai::cluster::NodeSpec {
-        vcpus: 2.0,
-        mem_mb: 2048,
-    }];
+    config.cluster = acai::cluster::ClusterConfig::fixed(
+        acai::cluster::NodeSpec {
+            vcpus: 2.0,
+            mem_mb: 2048,
+        },
+        1,
+    );
     config.quota_k = 8;
     let acai = Acai::boot(config).unwrap();
     seed_input(&acai);
@@ -231,6 +235,58 @@ fn cluster_saturation_requeues_and_retries() {
     for id in ids {
         assert_eq!(acai.engine.registry.get(id).unwrap().state, JobState::Finished);
     }
+}
+
+#[test]
+fn one_saturated_pool_does_not_stall_other_pools() {
+    use acai::cluster::{ClusterConfig, NodeSpec, PoolConfig};
+    let mut config = PlatformConfig::default();
+    config.cluster = ClusterConfig {
+        pools: vec![
+            PoolConfig::on_demand("small", NodeSpec { vcpus: 1.0, mem_mb: 1024 }, 1),
+            PoolConfig::on_demand("big", NodeSpec { vcpus: 8.0, mem_mb: 8192 }, 1),
+        ],
+        ..Default::default()
+    };
+    let acai = Acai::boot(config).unwrap();
+    seed_input(&acai);
+    let pinned = |name: &str, pool: &str, vcpus: f64| {
+        let mut spec = job(name, 20, ResourceConfig::new(vcpus, 1024));
+        spec.pool = Some(pool.into());
+        spec
+    };
+    // fill the small pool, then queue another job behind it
+    let running_small = acai.engine.submit(pinned("s0", "small", 1.0)).unwrap();
+    let blocked = acai.engine.submit(pinned("s1", "small", 1.0)).unwrap();
+    // a job for the OTHER pool, submitted after the blocked one, must
+    // still launch in the same pump round — per-pool saturation
+    let big = acai.engine.submit(pinned("b0", "big", 2.0)).unwrap();
+    assert_eq!(acai.engine.registry.get(running_small).unwrap().state, JobState::Running);
+    assert_eq!(acai.engine.registry.get(blocked).unwrap().state, JobState::Queued);
+    assert_eq!(acai.engine.registry.get(big).unwrap().state, JobState::Running);
+    acai.engine.run_until_idle();
+    for id in [running_small, blocked, big] {
+        assert_eq!(acai.engine.registry.get(id).unwrap().state, JobState::Finished);
+    }
+}
+
+#[test]
+fn never_placeable_submissions_are_rejected_up_front() {
+    use acai::cluster::{ClusterConfig, NodeSpec};
+    let mut config = PlatformConfig::default();
+    config.cluster = ClusterConfig::fixed(NodeSpec { vcpus: 4.0, mem_mb: 4096 }, 2);
+    let acai = Acai::boot(config).unwrap();
+    seed_input(&acai);
+    // bigger than any node the cluster can ever own: 400 at submit,
+    // not a forever-queued zombie
+    let err = acai
+        .engine
+        .submit(job("huge", 1, ResourceConfig::new(8.0, 8192)))
+        .unwrap_err();
+    assert_eq!(err.status(), 400);
+    // a same-shape job that fits is unaffected
+    assert!(acai.engine.submit(job("ok", 1, ResourceConfig::new(4.0, 4096))).is_ok());
+    acai.engine.run_until_idle();
 }
 
 #[test]

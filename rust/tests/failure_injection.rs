@@ -2,7 +2,7 @@
 //! and crash recovery of the session journal — the paths §4.4.3 and
 //! §4.2.2 exist for.
 
-use acai::cluster::ResourceConfig;
+use acai::cluster::{ClusterConfig, NodeSpec, PoolConfig, ResourceConfig};
 use acai::datalake::SessionState;
 use acai::engine::{JobSpec, JobState};
 use acai::ids::{ProjectId, UserId};
@@ -26,6 +26,7 @@ fn job(i: usize) -> JobSpec {
         input_fileset: "in".into(),
         output_fileset: format!("o{i}"),
         resources: ResourceConfig::new(1.0, 1024),
+        pool: None,
     }
 }
 
@@ -168,6 +169,163 @@ fn presigned_token_abuse_is_rejected() {
     assert_eq!(
         objects.put_presigned("ps-put-ffff", b"evil".to_vec()).unwrap_err().status(),
         401
+    );
+}
+
+/// Platform with a small fixed on-demand pool plus a cheap, revocable
+/// spot pool (the ISSUE-4 elastic substrate under storm conditions).
+fn spot_platform(seed: u64, preemption_mean: f64, checkpoint_secs: f64) -> Acai {
+    let node = NodeSpec {
+        vcpus: 4.0,
+        mem_mb: 8192,
+    };
+    let mut config = PlatformConfig::default();
+    config.checkpoint_secs = checkpoint_secs;
+    config.cluster = ClusterConfig {
+        pools: vec![
+            PoolConfig::on_demand("ondemand", node, 2),
+            PoolConfig::spot("spot", node, 6, 0.3, preemption_mean),
+        ],
+        seed,
+        ..Default::default()
+    };
+    let acai = Acai::boot(config).unwrap();
+    seed_data(&acai);
+    acai
+}
+
+fn seed_data(acai: &Acai) {
+    seed(acai);
+}
+
+#[test]
+fn spot_storm_same_seed_identical_placement_preemptions_and_cost() {
+    // a seeded storm: every job pinned to the revocable pool; the run
+    // must complete despite the revocations, and two runs with the same
+    // seed must agree bit-for-bit on cost and event counts
+    let run = |seed: u64| {
+        let acai = spot_platform(seed, 8.0, 2.0);
+        let mut ids = Vec::new();
+        for i in 0..16 {
+            let mut spec = job(i);
+            spec.command = "python train_mnist.py --epoch 6".into();
+            spec.pool = Some("spot".into());
+            ids.push(acai.engine.submit(spec).unwrap());
+        }
+        acai.engine.run_until_idle();
+        let mut total_cost = 0.0f64;
+        let mut job_preemptions = 0u64;
+        let mut runtimes = Vec::new();
+        for id in &ids {
+            let r = acai.engine.registry.get(*id).unwrap();
+            assert_eq!(r.state, JobState::Finished, "{id} stuck as {:?}", r.state);
+            total_cost += r.cost.unwrap();
+            job_preemptions += r.preemptions;
+            runtimes.push(r.runtime_secs.unwrap().to_bits());
+        }
+        // everything returned: no leaked capacity on revoked nodes
+        assert_eq!(acai.cluster.utilization().0, 0);
+        (total_cost, job_preemptions, runtimes, acai.cluster.counters())
+    };
+    let (cost_a, pre_a, runtimes_a, counters_a) = run(0xBEEF);
+    let (cost_b, pre_b, runtimes_b, counters_b) = run(0xBEEF);
+    assert_eq!(cost_a.to_bits(), cost_b.to_bits(), "{cost_a} vs {cost_b}");
+    assert_eq!(pre_a, pre_b);
+    assert_eq!(runtimes_a, runtimes_b, "per-job timelines must replay exactly");
+    assert_eq!(counters_a, counters_b);
+    // it was a storm, and the platform rode it out
+    assert!(
+        counters_a.preempted_containers >= 5,
+        "want a real storm, got {counters_a:?}"
+    );
+    assert!(counters_a.preempted_nodes >= 2, "{counters_a:?}");
+    // a different seed produces a different storm
+    let (cost_c, _, _, counters_c) = run(0xD00D);
+    assert!(
+        cost_a.to_bits() != cost_c.to_bits()
+            || counters_a.preempted_containers != counters_c.preempted_containers,
+        "different seeds should not replay the same storm"
+    );
+}
+
+#[test]
+fn checkpointed_resume_reworks_less_than_a_full_rerun() {
+    let long_job = || {
+        let mut spec = job(0);
+        spec.command = "python train_mnist.py --epoch 20".into();
+        spec
+    };
+    // baseline: the same job on preemption-free capacity
+    let baseline = {
+        let acai = Acai::boot_default();
+        seed_data(&acai);
+        let id = acai.engine.submit(long_job()).unwrap();
+        acai.engine.run_until_idle();
+        acai.engine.registry.get(id).unwrap().runtime_secs.unwrap()
+    };
+
+    // spot-only platform with aggressive revocation: the ~133 s job is
+    // interrupted many times (mean 15 s between revocations) but
+    // checkpoints every 5 s of progress
+    let node = NodeSpec {
+        vcpus: 4.0,
+        mem_mb: 8192,
+    };
+    let mut config = PlatformConfig::default();
+    config.checkpoint_secs = 5.0;
+    config.cluster = ClusterConfig {
+        pools: vec![PoolConfig {
+            name: "spot".into(),
+            spec: node,
+            price_multiplier: 0.3,
+            min_nodes: 1,
+            max_nodes: 1,
+            preemption_mean_secs: 15.0,
+        }],
+        seed: 0xACA1,
+        ..Default::default()
+    };
+    let acai = Acai::boot(config).unwrap();
+    seed_data(&acai);
+    let mut spec = long_job();
+    spec.pool = Some("spot".into());
+    let id = acai.engine.submit(spec).unwrap();
+    acai.engine.run_until_idle();
+
+    let r = acai.engine.registry.get(id).unwrap();
+    assert_eq!(r.state, JobState::Finished);
+    assert!(r.preemptions >= 1, "expected at least one revocation: {r:?}");
+    let runtime = r.runtime_secs.unwrap();
+    // resumed from checkpoints: total billed time is the planned run
+    // plus strictly less than one checkpoint interval of rework per
+    // preemption — never a full re-run per revocation
+    assert!(runtime >= baseline - 1e-6, "{runtime} < baseline {baseline}");
+    assert!(
+        runtime < baseline + r.preemptions as f64 * 5.0 + 1e-6,
+        "rework exceeded the checkpoint bound: runtime {runtime}, baseline {baseline}, \
+         preemptions {}",
+        r.preemptions
+    );
+    assert!(
+        runtime < 2.0 * baseline,
+        "rework time must stay below a full re-run: {runtime} vs {baseline}"
+    );
+    // the monitor folded the agent's checkpoint tags into a resume point
+    assert_eq!(acai.engine.monitor.resume_point(id), r.checkpoint);
+    assert!(acai
+        .engine
+        .logs
+        .get(id)
+        .iter()
+        .any(|l| l.contains("[[acai]] checkpoint=")));
+    // spot pricing: the interrupted run still billed at the pool's
+    // multiplier — cheaper than the on-demand baseline despite rework
+    let od_cost = acai.pricing.cost(r.spec.resources, baseline);
+    assert!(
+        r.cost.unwrap() < od_cost,
+        "spot run should be cheaper: {} vs on-demand {}",
+        r.cost.unwrap(),
+        od_cost
     );
 }
 

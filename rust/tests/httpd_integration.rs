@@ -174,6 +174,17 @@ fn bootstrap_project_then_full_flow_over_http() {
     assert!(routes
         .iter()
         .any(|r| r.get("route").and_then(Json::as_str) == Some("POST /v1/jobs")));
+    // ...alongside the cluster's autoscaler/preemption counter block
+    let cluster = metrics.get("cluster").expect("cluster counters");
+    assert!(cluster.get("containers_launched").and_then(Json::as_u64).unwrap() >= 1);
+    assert_eq!(
+        cluster.get("nodes_preempted").and_then(Json::as_u64),
+        Some(0),
+        "no spot pools configured: nothing may be preempted"
+    );
+    for key in ["scale_up_events", "scale_down_events", "placement_failures"] {
+        assert!(cluster.get(key).and_then(Json::as_u64).is_some(), "{key}");
+    }
 }
 
 #[test]

@@ -265,6 +265,7 @@ fn prop_engine_batches_always_terminate_with_conserved_billing() {
                             g.usize(1..16) as f64 * 0.5,
                             (g.usize(2..32) * 256) as u32,
                         ),
+                        pool: None,
                     })
                     .unwrap(),
             );

@@ -111,6 +111,7 @@ fn optimize_runtime_fixed_cost_beats_baseline() {
                 input_fileset: "mnist".into(),
                 output_fileset: "verify-out".into(),
                 resources: res,
+                pool: None,
             })
             .unwrap();
         acai.engine.run_until_idle();

@@ -41,6 +41,7 @@ fn complete_user_journey() {
             input_fileset: "corpus".into(),
             output_fileset: "model".into(),
             resources: ResourceConfig::new(2.0, 2048),
+            pool: None,
         })
         .unwrap();
     client.wait_all();
@@ -83,6 +84,7 @@ fn hyperparameter_sweep_with_metadata_leaderboard() {
                 input_fileset: "in".into(),
                 output_fileset: format!("sweep-{i}-out"),
                 resources: ResourceConfig::new(1.0, 1024),
+                pool: None,
             })
             .unwrap();
     }
@@ -274,12 +276,14 @@ fn pipeline_chains_stages_and_cache_serves_repeat_inputs() {
                 command: "python train_mnist.py --epoch 1".into(),
                 output_fileset: "features".into(),
                 resources: ResourceConfig::new(1.0, 1024),
+                pool: None,
             },
             Stage {
                 name: "train".into(),
                 command: "python train_mnist.py --epoch 2".into(),
                 output_fileset: "model".into(),
                 resources: ResourceConfig::new(1.0, 1024),
+                pool: None,
             },
         ],
     };
@@ -299,6 +303,7 @@ fn pipeline_chains_stages_and_cache_serves_repeat_inputs() {
                 input_fileset: "raw:1".into(),
                 output_fileset: format!("re-{i}-out"),
                 resources: ResourceConfig::new(0.5, 512),
+                pool: None,
             })
             .unwrap();
     }
