@@ -1,0 +1,116 @@
+//! Perf: content-addressed data plane — chunk/hash throughput, dedup
+//! re-upload vs cold write, and warm vs cold launch transfer bytes.
+//!
+//! The chunker sits on every upload-commit path, so its MB/s budget
+//! bounds ingest throughput; the dedup re-upload and warm-launch
+//! numbers are the ISSUE-5 acceptance story measured head-on.
+
+mod common;
+
+use std::sync::Arc;
+
+use acai::cluster::ResourceConfig;
+use acai::datalake::cas::{chunk_id, ChunkStore};
+use acai::engine::JobSpec;
+use acai::objectstore::ObjectStore;
+use acai::simclock::SimClock;
+use acai::{Acai, PlatformConfig};
+use common::*;
+
+fn payload(mb: usize) -> Vec<u8> {
+    (0..mb * 1024 * 1024).map(|i| (i % 251) as u8).collect()
+}
+
+fn main() {
+    header(
+        "Perf: content-addressed data plane",
+        "ISSUE 5 — dedup storage + locality-aware placement under the §4.4 body path",
+    );
+
+    // ---- chunk/hash throughput over a 16 MiB payload ----
+    let bytes = payload(16);
+    let hash_ns = bench_ns(2, 10, || {
+        let mut acc = 0u64;
+        for chunk in bytes.chunks(64 * 1024) {
+            acc = acc.wrapping_add(chunk_id(chunk).len() as u64);
+        }
+        assert!(acc > 0);
+    });
+    let mbps = 16.0 * 1e9 / hash_ns;
+    println!("chunk+hash: {mbps:.0} MB/s over 64 KiB chunks");
+
+    // ---- cold write vs dedup re-upload through the storage server ----
+    let clock = SimClock::new();
+    let bus = acai::bus::Bus::new();
+    let kv: acai::storage::SharedTable = Arc::new(acai::kvstore::KvStore::in_memory());
+    let objects = ObjectStore::new(clock.clone(), bus.clone());
+    let cas = ChunkStore::new(kv.clone(), objects.clone());
+    let storage = acai::datalake::Storage::new(
+        kv,
+        objects,
+        cas.clone(),
+        bus,
+        clock,
+        Arc::new(acai::ids::IdGen::new()),
+    );
+    let mut ds = payload(8);
+    let cold_ns = bench_ns(1, 5, || {
+        // touch every chunk so each round is a genuinely cold write
+        for b in ds.iter_mut().step_by(4096) {
+            *b = b.wrapping_add(1);
+        }
+        storage.upload(P, &[("/cold", &ds)]).unwrap();
+    });
+    let warm_ns = bench_ns(1, 5, || {
+        storage.upload(P, &[("/cold", &ds)]).unwrap(); // identical content
+    });
+    let stats = cas.stats();
+    println!(
+        "cold write: {:.1} ms / 8 MiB; dedup re-upload: {:.1} ms ({:.2}x dedup ratio, {} chunks)",
+        cold_ns / 1e6,
+        warm_ns / 1e6,
+        stats.dedup_ratio(),
+        stats.chunks,
+    );
+    assert!(stats.dedup_ratio() > 1.5, "re-uploads must dedup");
+
+    // ---- warm vs cold launch: transfer bytes through the engine ----
+    let acai = Arc::new(Acai::boot(PlatformConfig::default()).expect("boot"));
+    let blob = payload(4);
+    acai.datalake.storage.upload(P, &[("/ds/a.bin", &blob)]).unwrap();
+    acai.datalake
+        .filesets
+        .create(P, "ds", &["/ds/a.bin"], "bench")
+        .unwrap();
+    let submit = |name: &str| {
+        acai.engine
+            .submit(JobSpec {
+                project: P,
+                user: U,
+                name: name.into(),
+                command: "python train_mnist.py --epoch 1".into(),
+                input_fileset: "ds".into(),
+                output_fileset: format!("{name}-out"),
+                resources: ResourceConfig::new(1.0, 1024),
+                pool: None,
+            })
+            .unwrap()
+    };
+    let cold_job = submit("cold");
+    acai.engine.run_until_idle();
+    let warm_job = submit("warm");
+    acai.engine.run_until_idle();
+    let cold = acai.engine.registry.get(cold_job).unwrap();
+    let warm = acai.engine.registry.get(warm_job).unwrap();
+    let counters = acai.cluster.counters();
+    println!(
+        "launch transfer: cold {:.6}s ({} bytes), warm {:.6}s ({} cache-hit bytes)",
+        cold.transfer_secs.unwrap_or(0.0),
+        counters.cold_bytes_transferred,
+        warm.transfer_secs.unwrap_or(0.0),
+        counters.cache_hit_bytes,
+    );
+    assert_eq!(counters.cold_bytes_transferred, blob.len() as u64);
+    assert_eq!(counters.cache_hit_bytes, blob.len() as u64);
+    assert!(warm.runtime_secs.unwrap() < cold.runtime_secs.unwrap());
+}

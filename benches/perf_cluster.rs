@@ -14,10 +14,7 @@ use acai::cluster::{
 use acai::simclock::SimClock;
 use common::*;
 
-const NODE: NodeSpec = NodeSpec {
-    vcpus: 16.0,
-    mem_mb: 65536,
-};
+const NODE: NodeSpec = NodeSpec::new(16.0, 65536);
 
 fn backlog(n: usize) -> Vec<ResourceConfig> {
     // deterministic mixed shapes: 0.5–4 vCPU, 512–4096 MB

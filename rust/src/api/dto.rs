@@ -367,6 +367,117 @@ impl FileEntry {
     }
 }
 
+/// Chunk-manifest view of one file version
+/// (`GET /v1/files/{path}/stat`): the content-addressed decomposition
+/// the data plane stores the body as.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FileManifest {
+    pub path: String,
+    pub version: Version,
+    /// Logical size in bytes.
+    pub size: u64,
+    /// Chunking granularity the manifest was built with.
+    pub chunk_size: u64,
+    /// Ordered chunk ids (each id embeds its own length).
+    pub chunks: Vec<String>,
+}
+
+impl FileManifest {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("path", self.path.as_str())
+            .field("version", self.version)
+            .field("size", self.size)
+            .field("chunk_size", self.chunk_size)
+            .field(
+                "chunks",
+                Json::Arr(self.chunks.iter().map(|c| Json::from(c.as_str())).collect()),
+            )
+            .build()
+    }
+
+    pub fn from_json(v: &Json) -> Result<FileManifest> {
+        let obj = as_object(v)?;
+        check_fields(obj, &["path", "version", "size", "chunk_size", "chunks"])?;
+        let chunks = arr_field(obj, "chunks")?
+            .iter()
+            .map(|c| {
+                c.as_str()
+                    .map(String::from)
+                    .ok_or_else(|| AcaiError::invalid("chunk ids must be strings"))
+            })
+            .collect::<Result<_>>()?;
+        Ok(FileManifest {
+            path: str_field(obj, "path")?,
+            version: u32_field(obj, "version")?,
+            size: u64_field(obj, "size")?,
+            chunk_size: u64_field(obj, "chunk_size")?,
+            chunks,
+        })
+    }
+}
+
+/// The data-plane counter block of `GET /v1/metrics`: dedup counters
+/// from the chunk store plus transfer/cache counters from the cluster.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DataPlaneMetrics {
+    /// Bytes ingested (pre-dedup).
+    pub logical_bytes: u64,
+    /// Bytes written as fresh chunks (post-dedup).
+    pub stored_bytes: u64,
+    /// Bytes an ingest skipped because the chunk already existed.
+    pub deduped_bytes: u64,
+    /// Chunk-level dedup hits.
+    pub dedup_hits: u64,
+    /// Live chunk rows.
+    pub chunks: u64,
+    /// Input bytes served from node-local chunk caches at launch.
+    pub cache_hit_bytes: u64,
+    /// Input bytes pulled cold over the simulated network.
+    pub cold_transfer_bytes: u64,
+    /// Simulated transfer time spent pulling cold bytes.
+    pub transfer_secs: f64,
+}
+
+impl DataPlaneMetrics {
+    /// logical / stored (1.0 when nothing is stored yet).
+    pub fn dedup_ratio(&self) -> f64 {
+        if self.stored_bytes == 0 {
+            1.0
+        } else {
+            self.logical_bytes as f64 / self.stored_bytes as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("logical_bytes", self.logical_bytes)
+            .field("stored_bytes", self.stored_bytes)
+            .field("deduped_bytes", self.deduped_bytes)
+            .field("dedup_hits", self.dedup_hits)
+            .field("chunks", self.chunks)
+            .field("dedup_ratio", self.dedup_ratio())
+            .field("cache_hit_bytes", self.cache_hit_bytes)
+            .field("cold_transfer_bytes", self.cold_transfer_bytes)
+            .field("transfer_secs", self.transfer_secs)
+            .build()
+    }
+
+    pub fn from_json(v: &Json) -> Result<DataPlaneMetrics> {
+        let obj = as_object(v)?;
+        Ok(DataPlaneMetrics {
+            logical_bytes: u64_field(obj, "logical_bytes")?,
+            stored_bytes: u64_field(obj, "stored_bytes")?,
+            deduped_bytes: u64_field(obj, "deduped_bytes")?,
+            dedup_hits: u64_field(obj, "dedup_hits")?,
+            chunks: u64_field(obj, "chunks")?,
+            cache_hit_bytes: u64_field(obj, "cache_hit_bytes")?,
+            cold_transfer_bytes: u64_field(obj, "cold_transfer_bytes")?,
+            transfer_secs: f64_field(obj, "transfer_secs")?,
+        })
+    }
+}
+
 // ---------------------------------------------------------------------
 // jobs
 // ---------------------------------------------------------------------
@@ -422,6 +533,9 @@ pub struct JobStatus {
     pub error: Option<String>,
     /// Spot revocations this job survived (0 for on-demand runs).
     pub preemptions: u64,
+    /// Simulated cold-input transfer seconds folded into
+    /// `runtime_secs` (absent when every input byte was node-local).
+    pub transfer_secs: Option<f64>,
 }
 
 impl JobStatus {
@@ -441,6 +555,9 @@ impl JobStatus {
             output_version: r.output_version,
             error: r.error.clone(),
             preemptions: r.preemptions,
+            // normalized so the wire (which omits zero) and the
+            // in-process path agree: zero transfer reads as absent
+            transfer_secs: r.transfer_secs.filter(|t| *t > 0.0),
         }
     }
 
@@ -466,6 +583,9 @@ impl JobStatus {
         if self.preemptions > 0 {
             b = b.field("preemptions", self.preemptions);
         }
+        if let Some(t) = self.transfer_secs {
+            b = b.field("transfer_secs", t);
+        }
         b.build()
     }
 
@@ -482,6 +602,7 @@ impl JobStatus {
             output_version: opt_u32_field(obj, "output_version")?,
             error: opt_str_field(obj, "error")?,
             preemptions: opt_u64_field(obj, "preemptions")?.unwrap_or(0),
+            transfer_secs: opt_f64_field(obj, "transfer_secs")?,
         })
     }
 }
@@ -825,6 +946,9 @@ pub struct PoolSpec {
     pub name: String,
     pub vcpus: f64,
     pub mem_mb: u32,
+    /// Per-node NIC bandwidth in MB/s (cold input chunks transfer at
+    /// this rate).
+    pub bandwidth_mbps: f64,
     pub price_multiplier: f64,
     pub min_nodes: usize,
     pub max_nodes: usize,
@@ -837,6 +961,7 @@ impl PoolSpec {
             name: c.name.clone(),
             vcpus: c.spec.vcpus,
             mem_mb: c.spec.mem_mb,
+            bandwidth_mbps: c.spec.bandwidth_mbps,
             price_multiplier: c.price_multiplier,
             min_nodes: c.min_nodes,
             max_nodes: c.max_nodes,
@@ -850,6 +975,7 @@ impl PoolSpec {
             spec: NodeSpec {
                 vcpus: self.vcpus,
                 mem_mb: self.mem_mb,
+                bandwidth_mbps: self.bandwidth_mbps,
             },
             price_multiplier: self.price_multiplier,
             min_nodes: self.min_nodes,
@@ -863,6 +989,7 @@ impl PoolSpec {
             .field("name", self.name.as_str())
             .field("vcpus", self.vcpus)
             .field("mem_mb", self.mem_mb)
+            .field("bandwidth_mbps", self.bandwidth_mbps)
             .field("price_multiplier", self.price_multiplier)
             .field("min_nodes", self.min_nodes)
             .field("max_nodes", self.max_nodes)
@@ -870,9 +997,10 @@ impl PoolSpec {
             .build()
     }
 
-    /// Strict codec: `price_multiplier` defaults to 1.0 (on-demand) and
-    /// `preemption_mean_secs` to 0.0 (never revoked); everything else
-    /// is required.
+    /// Strict codec: `price_multiplier` defaults to 1.0 (on-demand),
+    /// `preemption_mean_secs` to 0.0 (never revoked), and
+    /// `bandwidth_mbps` to the platform default NIC; everything else is
+    /// required.
     pub fn from_json(v: &Json) -> Result<PoolSpec> {
         let obj = as_object(v)?;
         check_fields(
@@ -881,6 +1009,7 @@ impl PoolSpec {
                 "name",
                 "vcpus",
                 "mem_mb",
+                "bandwidth_mbps",
                 "price_multiplier",
                 "min_nodes",
                 "max_nodes",
@@ -891,6 +1020,8 @@ impl PoolSpec {
             name: str_field(obj, "name")?,
             vcpus: f64_field(obj, "vcpus")?,
             mem_mb: u32_field(obj, "mem_mb")?,
+            bandwidth_mbps: opt_f64_field(obj, "bandwidth_mbps")?
+                .unwrap_or(crate::cluster::DEFAULT_BANDWIDTH_MBPS),
             price_multiplier: opt_f64_field(obj, "price_multiplier")?.unwrap_or(1.0),
             min_nodes: u64_field(obj, "min_nodes")? as usize,
             max_nodes: u64_field(obj, "max_nodes")? as usize,
@@ -954,9 +1085,12 @@ pub struct NodeStatus {
     pub pool: String,
     pub vcpus: f64,
     pub mem_mb: u32,
+    pub bandwidth_mbps: f64,
     pub used_milli_vcpus: u64,
     pub used_mem_mb: u32,
     pub containers: usize,
+    /// Bytes resident in the node's chunk cache (data locality).
+    pub cached_bytes: u64,
 }
 
 impl NodeStatus {
@@ -966,9 +1100,11 @@ impl NodeStatus {
             pool: s.pool.clone(),
             vcpus: s.spec.vcpus,
             mem_mb: s.spec.mem_mb,
+            bandwidth_mbps: s.spec.bandwidth_mbps,
             used_milli_vcpus: s.used_milli,
             used_mem_mb: s.used_mem,
             containers: s.containers,
+            cached_bytes: s.cached_bytes,
         }
     }
 
@@ -978,9 +1114,11 @@ impl NodeStatus {
             .field("pool", self.pool.as_str())
             .field("vcpus", self.vcpus)
             .field("mem_mb", self.mem_mb)
+            .field("bandwidth_mbps", self.bandwidth_mbps)
             .field("used_milli_vcpus", self.used_milli_vcpus)
             .field("used_mem_mb", self.used_mem_mb)
             .field("containers", self.containers)
+            .field("cached_bytes", self.cached_bytes)
             .build()
     }
 
@@ -991,9 +1129,11 @@ impl NodeStatus {
             pool: str_field(obj, "pool")?,
             vcpus: f64_field(obj, "vcpus")?,
             mem_mb: u32_field(obj, "mem_mb")?,
+            bandwidth_mbps: f64_field(obj, "bandwidth_mbps")?,
             used_milli_vcpus: u64_field(obj, "used_milli_vcpus")?,
             used_mem_mb: u32_field(obj, "used_mem_mb")?,
             containers: u64_field(obj, "containers")? as usize,
+            cached_bytes: u64_field(obj, "cached_bytes")?,
         })
     }
 }
@@ -1010,6 +1150,9 @@ pub fn cluster_counters_to_json(c: &ClusterCounters) -> Json {
         .field("nodes_added", c.nodes_added)
         .field("nodes_removed", c.nodes_removed)
         .field("placement_failures", c.placement_failures)
+        .field("cache_hit_bytes", c.cache_hit_bytes)
+        .field("cold_bytes_transferred", c.cold_bytes_transferred)
+        .field("transfer_micros", c.transfer_micros)
         .build()
 }
 
@@ -1348,6 +1491,7 @@ mod tests {
             name: "spot".into(),
             vcpus: 4.0,
             mem_mb: 8192,
+            bandwidth_mbps: 40.0,
             price_multiplier: 0.3,
             min_nodes: 0,
             max_nodes: 6,
@@ -1363,6 +1507,7 @@ mod tests {
         let p = PoolSpec::from_json(&v).unwrap();
         assert_eq!(p.price_multiplier, 1.0);
         assert_eq!(p.preemption_mean_secs, 0.0);
+        assert_eq!(p.bandwidth_mbps, crate::cluster::DEFAULT_BANDWIDTH_MBPS);
         // unknown fields are a 400 — a typo'd knob must not be ignored
         let v = crate::json::parse(
             r#"{"name":"x","vcpus":4,"mem_mb":8192,"min_nodes":1,"max_nodes":2,"preemption_rate":0.5}"#,
@@ -1381,6 +1526,7 @@ mod tests {
                 name: "spot".into(),
                 vcpus: 4.0,
                 mem_mb: 8192,
+                bandwidth_mbps: 125.0,
                 price_multiplier: 0.3,
                 min_nodes: 0,
                 max_nodes: 6,
@@ -1396,9 +1542,11 @@ mod tests {
             pool: "spot".into(),
             vcpus: 4.0,
             mem_mb: 8192,
+            bandwidth_mbps: 125.0,
             used_milli_vcpus: 1500,
             used_mem_mb: 2048,
             containers: 2,
+            cached_bytes: 4096,
         };
         let back = NodeStatus::from_json(&node.to_json()).unwrap();
         assert_eq!(back, node);

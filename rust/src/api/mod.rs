@@ -25,7 +25,10 @@ pub mod metrics;
 pub mod router;
 pub mod routes;
 
-pub use dto::{FileEntry, JobStatus, LogChunk, Page, PageReq, ProvisionChoice, TraceDir};
+pub use dto::{
+    DataPlaneMetrics, FileEntry, FileManifest, JobStatus, LogChunk, Page, PageReq,
+    ProvisionChoice, TraceDir,
+};
 pub use metrics::{ApiMetrics, RouteStats};
 pub use router::{ApiCtx, Middleware, PathParams, Query, Router};
 

@@ -7,7 +7,7 @@
 //! |-------------|-----------|
 //! | projects    | `POST /v1/projects` (public bootstrap) |
 //! | users       | `POST /v1/users` |
-//! | files       | `GET/POST /v1/files`, `GET /v1/files/{path}`, `GET /v1/files/{path}/versions` |
+//! | files       | `GET/POST /v1/files`, `GET /v1/files/{path}` (`?offset=&len=` for ranged reads), `GET /v1/files/{path}/versions`, `GET /v1/files/{path}/stat` (chunk manifest) |
 //! | file sets   | `GET/POST /v1/filesets`, `GET /v1/filesets/{name}/trace`, `.../lineage` |
 //! | jobs        | `POST /v1/jobs` (202), `GET /v1/jobs`, `GET /v1/jobs/{id}`, `GET /v1/jobs/{id}/logs`, `POST /v1/jobs/{id}/kill` |
 //! | experiments | `POST /v1/experiments` (202), `GET /v1/experiments`, `GET /v1/experiments/{id}`, `.../trials`, `.../best?metric=&mode=` |
@@ -15,7 +15,7 @@
 //! | provenance  | `GET /v1/provenance` |
 //! | profiles    | `POST /v1/profiles`, `POST /v1/autoprovision` |
 //! | cluster     | `GET /v1/cluster/pools`, `PUT /v1/cluster/pools` (upsert one pool; project-admin), `GET /v1/cluster/nodes` |
-//! | operational | `GET /v1/healthz` (public), `GET /v1/metrics` (per-route stats + cluster/autoscaler/preemption counters) |
+//! | operational | `GET /v1/healthz` (public), `GET /v1/metrics` (per-route stats + cluster/autoscaler/preemption counters + data-plane dedup/transfer block) |
 
 use std::sync::Arc;
 
@@ -56,6 +56,7 @@ pub fn v1_router(metrics: Arc<ApiMetrics>) -> Router {
     r.route("POST", "/v1/files", h(upload_files));
     r.route("GET", "/v1/files/{path}", h(download_file));
     r.route("GET", "/v1/files/{path}/versions", h(list_file_versions));
+    r.route("GET", "/v1/files/{path}/stat", h(stat_file));
 
     // ---- file sets + provenance ----
     r.route("GET", "/v1/filesets", h(list_file_sets));
@@ -109,6 +110,7 @@ pub fn v1_router(metrics: Arc<ApiMetrics>) -> Router {
                         "cluster",
                         dto::cluster_counters_to_json(&ctx.acai.cluster.counters()),
                     )
+                    .field("data", ctx.client()?.data_metrics()?.to_json())
                     .build(),
             ))
         }),
@@ -200,17 +202,42 @@ fn upload_files(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
     ))
 }
 
+/// `GET /v1/files/{path}?version=&offset=&len=` — whole-body download,
+/// or a ranged one when `offset`/`len` are present (only the chunks
+/// overlapping the range leave the object store).
 fn download_file(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
     let path = ctx.params.raw("path")?.to_string();
     let version = ctx.query.version("version")?;
-    let bytes = ctx.client()?.fetch(&path, version)?;
+    let offset = ctx.query.u64("offset")?;
+    let len = ctx.query.u64("len")?;
+    let ranged = offset.is_some() || len.is_some();
+    let bytes = if ranged {
+        ctx.client()?
+            .fetch_range(&path, version, offset.unwrap_or(0), len)?
+    } else {
+        ctx.client()?.fetch(&path, version)?
+    };
     let mut b = Json::obj()
         .field("path", path.as_str())
         .field("content_b64", dto::b64_encode(&bytes));
     if let Some(v) = version {
         b = b.field("version", v);
     }
+    if ranged {
+        b = b
+            .field("offset", offset.unwrap_or(0))
+            .field("len", bytes.len());
+    }
     Ok(Response::json(&b.build()))
+}
+
+/// `GET /v1/files/{path}/stat?version=` — the chunk manifest view of a
+/// file version (size, chunking granularity, ordered chunk ids).
+fn stat_file(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let path = ctx.params.raw("path")?.to_string();
+    let version = ctx.query.version("version")?;
+    let stat = ctx.client()?.file_stat(&path, version)?;
+    Ok(Response::json(&stat.to_json()))
 }
 
 fn list_file_versions(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {

@@ -1,0 +1,140 @@
+//! Per-node chunk cache — the locality substrate of the data plane.
+//!
+//! Every node keeps an LRU, byte-budgeted set of the content-addressed
+//! chunks ([`crate::datalake::cas`]) that past container launches
+//! pulled onto it.  The cache tracks *ids and sizes only* (the bytes
+//! live in the object store): it models which data is node-local, so
+//!
+//! - placement can score candidate nodes by the input bytes their
+//!   caches already hold ([`super::Cluster`]'s warm-cache tie-break),
+//! - a launch bills only the *missing* bytes as cold transfer time.
+//!
+//! Eviction is deterministic (least-recently-used, lowest id on ties)
+//! so seeded runs replay bit-for-bit.  A revoked or reaped node takes
+//! its cache with it — locality is a property of the machine.
+
+use std::collections::HashMap;
+
+struct Slot {
+    len: u64,
+    last_used: u64,
+}
+
+/// One node's chunk cache.
+pub struct ChunkCache {
+    capacity: u64,
+    bytes: u64,
+    tick: u64,
+    entries: HashMap<String, Slot>,
+}
+
+impl ChunkCache {
+    pub fn new(capacity: u64) -> ChunkCache {
+        ChunkCache {
+            capacity,
+            bytes: 0,
+            tick: 0,
+            entries: HashMap::new(),
+        }
+    }
+
+    /// Resident bytes.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Is a chunk resident?
+    pub fn contains(&self, id: &str) -> bool {
+        self.entries.contains_key(id)
+    }
+
+    /// Bytes of `chunks` NOT resident — the cold-transfer cost a launch
+    /// on this node would pay.  Non-mutating (placement scoring).
+    pub fn missing_bytes(&self, chunks: &[(String, u64)]) -> u64 {
+        chunks
+            .iter()
+            .filter(|(id, _)| !self.entries.contains_key(id))
+            .map(|(_, len)| *len)
+            .sum()
+    }
+
+    /// Admit a launch's input chunks: resident chunks are touched
+    /// (warm), missing ones inserted (cold), then LRU entries are
+    /// evicted until the budget holds.  Returns `(warm, cold)` bytes.
+    pub fn admit(&mut self, chunks: &[(String, u64)]) -> (u64, u64) {
+        self.tick += 1;
+        let now = self.tick;
+        let (mut warm, mut cold) = (0u64, 0u64);
+        for (id, len) in chunks {
+            match self.entries.get_mut(id) {
+                Some(slot) => {
+                    slot.last_used = now;
+                    warm += len;
+                }
+                None => {
+                    cold += len;
+                    self.entries.insert(id.clone(), Slot { len: *len, last_used: now });
+                    self.bytes += len;
+                }
+            }
+        }
+        while self.bytes > self.capacity {
+            // deterministic victim: oldest tick, lowest id on ties
+            let Some(victim) = self
+                .entries
+                .iter()
+                .min_by(|a, b| (a.1.last_used, a.0.as_str()).cmp(&(b.1.last_used, b.0.as_str())))
+                .map(|(id, _)| id.clone())
+            else {
+                break;
+            };
+            let slot = self.entries.remove(&victim).expect("victim resident");
+            self.bytes -= slot.len;
+        }
+        (warm, cold)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunks(ids: &[(&str, u64)]) -> Vec<(String, u64)> {
+        ids.iter().map(|(id, len)| (id.to_string(), *len)).collect()
+    }
+
+    #[test]
+    fn admit_classifies_warm_and_cold() {
+        let mut cache = ChunkCache::new(1000);
+        let (warm, cold) = cache.admit(&chunks(&[("a", 100), ("b", 200)]));
+        assert_eq!((warm, cold), (0, 300));
+        let (warm, cold) = cache.admit(&chunks(&[("a", 100), ("c", 50)]));
+        assert_eq!((warm, cold), (100, 50));
+        assert_eq!(cache.bytes(), 350);
+        assert_eq!(cache.missing_bytes(&chunks(&[("a", 100), ("z", 9)])), 9);
+    }
+
+    #[test]
+    fn lru_eviction_holds_the_byte_budget() {
+        let mut cache = ChunkCache::new(250);
+        cache.admit(&chunks(&[("a", 100)]));
+        cache.admit(&chunks(&[("b", 100)]));
+        cache.admit(&chunks(&[("a", 100)])); // touch a
+        cache.admit(&chunks(&[("c", 100)])); // evicts b (LRU)
+        assert!(cache.contains("a"));
+        assert!(!cache.contains("b"));
+        assert!(cache.contains("c"));
+        assert!(cache.bytes() <= 250);
+    }
+
+    #[test]
+    fn oversized_working_set_stays_bounded() {
+        let mut cache = ChunkCache::new(150);
+        let (warm, cold) = cache.admit(&chunks(&[("a", 100), ("b", 100), ("c", 100)]));
+        assert_eq!((warm, cold), (0, 300));
+        assert!(cache.bytes() <= 150);
+        // same-tick eviction is deterministic: lowest ids go first
+        assert!(!cache.contains("a") && !cache.contains("b"));
+        assert!(cache.contains("c"));
+    }
+}

@@ -25,6 +25,17 @@
 //!   containers with the [`ContainerPhase::Preempted`] phase, merged
 //!   chronologically with ordinary completions on the watch stream.
 //!
+//! On top of the capacity model sits the **data plane** (ISSUE 5):
+//! every node spec carries a simulated NIC bandwidth, every node keeps
+//! an LRU byte-budgeted cache of the content-addressed input chunks
+//! past launches pulled onto it ([`cache::ChunkCache`]), and placement
+//! is **locality-aware** — after price, candidate nodes are ranked by
+//! how few of the job's input bytes are missing from their caches,
+//! then best-fit.  A launch returns a [`TransferPlan`]: the cold
+//! (missing) bytes are billed as transfer time *added to the container
+//! duration*, so the autoscaler, the spot economics, and the job's
+//! runtime/cost all see data gravity.
+//!
 //! Everything remains deterministic per seed and event-driven on the
 //! virtual [`SimClock`]: the engine asks for the next event time
 //! (completion *or* revocation), advances the clock, and collects
@@ -32,6 +43,7 @@
 //! [`crate::workload`] runtime model owns the t ≈ t₁·e·c⁻¹ law); the
 //! cluster applies stragglers and failures.
 
+pub mod cache;
 pub mod placement;
 
 use std::collections::{BTreeMap, HashMap};
@@ -41,6 +53,8 @@ use crate::error::{AcaiError, Result};
 use crate::ids::{ContainerId, IdGen, NodeId};
 use crate::prng::Rng;
 use crate::simclock::SimClock;
+
+use cache::ChunkCache;
 
 /// Resources requested for one container (paper §4.3: 0.5–8 vCPU in 0.5
 /// steps, 512–8192 MB in 256 MB steps).
@@ -82,11 +96,28 @@ impl ResourceConfig {
     }
 }
 
+/// Default simulated NIC bandwidth: 125 MB/s (≈ 1 Gbit/s).
+pub const DEFAULT_BANDWIDTH_MBPS: f64 = 125.0;
+
 /// Capacity of one simulated node.
 #[derive(Debug, Clone, Copy)]
 pub struct NodeSpec {
     pub vcpus: f64,
     pub mem_mb: u32,
+    /// NIC bandwidth in MB/s — cold input chunks land at this rate, and
+    /// the resulting transfer time is added to container runtime.
+    pub bandwidth_mbps: f64,
+}
+
+impl NodeSpec {
+    /// A node shape with the default NIC bandwidth.
+    pub const fn new(vcpus: f64, mem_mb: u32) -> NodeSpec {
+        NodeSpec {
+            vcpus,
+            mem_mb,
+            bandwidth_mbps: DEFAULT_BANDWIDTH_MBPS,
+        }
+    }
 }
 
 /// One named node pool: a shape, a price, and elasticity bounds.
@@ -167,6 +198,13 @@ impl PoolConfig {
                 self.name
             )));
         }
+        let bw_ok = self.spec.bandwidth_mbps.is_finite() && self.spec.bandwidth_mbps > 0.0;
+        if !bw_ok {
+            return Err(AcaiError::invalid(format!(
+                "pool {:?}: bandwidth_mbps must be > 0",
+                self.name
+            )));
+        }
         if self.preemption_mean_secs < 0.0 {
             return Err(AcaiError::invalid(format!(
                 "pool {:?}: preemption_mean_secs must be >= 0",
@@ -212,6 +250,8 @@ pub struct ClusterConfig {
     pub straggler_rate: f64,
     /// …running this many times longer.
     pub straggler_factor: f64,
+    /// Per-node chunk-cache byte budget (LRU beyond it).
+    pub node_cache_bytes: u64,
     pub seed: u64,
 }
 
@@ -232,16 +272,14 @@ impl Default for ClusterConfig {
             // sweeps, and identical to the seed's fixed array.
             pools: vec![PoolConfig::on_demand(
                 "ondemand",
-                NodeSpec {
-                    vcpus: 16.0,
-                    mem_mb: 65536,
-                },
+                NodeSpec::new(16.0, 65536),
                 8,
             )],
             autoscale: AutoscalePolicy::default(),
             failure_rate: 0.0,
             straggler_rate: 0.0,
             straggler_factor: 4.0,
+            node_cache_bytes: 256 << 20,
             seed: 0xACA1,
         }
     }
@@ -281,6 +319,25 @@ pub struct ClusterCounters {
     pub nodes_removed: u64,
     /// Placement attempts that found no fitting node (`Exhausted`).
     pub placement_failures: u64,
+    /// Input bytes already resident in a node's chunk cache at launch.
+    pub cache_hit_bytes: u64,
+    /// Input bytes pulled cold over the simulated network.
+    pub cold_bytes_transferred: u64,
+    /// Simulated transfer time, in integer microseconds (kept integral
+    /// so the counter block stays `Eq`-comparable in replay tests).
+    pub transfer_micros: u64,
+}
+
+/// Data-gravity outcome of one container launch.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TransferPlan {
+    /// Input bytes missing from the chosen node's cache.
+    pub cold_bytes: u64,
+    /// Input bytes already resident on the chosen node.
+    pub warm_bytes: u64,
+    /// Simulated seconds spent pulling the cold bytes — already folded
+    /// into the container's duration (and therefore its bill).
+    pub transfer_secs: f64,
 }
 
 /// Read-only view of one pool (`GET /v1/cluster/pools`).
@@ -302,6 +359,8 @@ pub struct NodeSnapshot {
     pub used_milli: u64,
     pub used_mem: u32,
     pub containers: usize,
+    /// Bytes resident in the node's chunk cache.
+    pub cached_bytes: u64,
 }
 
 struct Node {
@@ -312,6 +371,8 @@ struct Node {
     containers: usize,
     /// When the node last became (or was created) empty.
     idle_since: f64,
+    /// Node-local chunk cache (dies with the node).
+    cache: ChunkCache,
 }
 
 struct PoolState {
@@ -335,6 +396,8 @@ struct Inner {
     /// Live nodes by id — BTreeMap so every scan is id-ordered and the
     /// seeded preemption process is deterministic.
     nodes: BTreeMap<u64, Node>,
+    /// Per-node chunk-cache budget (from [`ClusterConfig`]).
+    node_cache_bytes: u64,
     next_node_id: u64,
     running: HashMap<ContainerId, RunningContainer>,
     /// Preemption events raised outside a collect call (launch-time
@@ -369,6 +432,7 @@ impl Inner {
                 used_mem: 0,
                 containers: 0,
                 idle_since: now,
+                cache: ChunkCache::new(self.node_cache_bytes),
             },
         );
         self.pools[pool_idx].nodes += 1;
@@ -393,11 +457,19 @@ impl Inner {
         }
     }
 
-    /// Best-fit placement: cheapest pool first, then the node left with
-    /// the least free vCPU (then memory) after placement, then the
-    /// lowest node id.  Returns the chosen node id.
-    fn place(&self, milli: u64, mem: u32, pool: Option<&str>) -> Option<u64> {
-        let mut best: Option<(u64, u64, u64, u64)> = None;
+    /// Locality-aware best-fit placement: cheapest pool first, then the
+    /// node missing the *fewest* input bytes from its chunk cache (warm
+    /// capacity beats tight packing), then the node left with the least
+    /// free vCPU (then memory) after placement, then the lowest node
+    /// id.  Returns the chosen node id.
+    fn place(
+        &self,
+        milli: u64,
+        mem: u32,
+        pool: Option<&str>,
+        chunks: &[(String, u64)],
+    ) -> Option<u64> {
+        let mut best: Option<(u64, u64, u64, u64, u64)> = None;
         for (id, n) in &self.nodes {
             let p = &self.pools[n.pool];
             if let Some(want) = pool {
@@ -413,6 +485,7 @@ impl Inner {
             }
             let key = (
                 (p.config.price_multiplier * 1e6).round() as u64,
+                n.cache.missing_bytes(chunks),
                 free_milli - milli,
                 free_mem - mem as u64,
                 *id,
@@ -421,7 +494,7 @@ impl Inner {
                 best = Some(key);
             }
         }
-        best.map(|(_, _, _, id)| id)
+        best.map(|(_, _, _, _, id)| id)
     }
 
     /// Free a container's resources on its node (if the node is alive).
@@ -528,6 +601,7 @@ impl Cluster {
                 })
                 .collect(),
             nodes: BTreeMap::new(),
+            node_cache_bytes: config.node_cache_bytes,
             next_node_id: 1,
             running: HashMap::new(),
             pending: Vec::new(),
@@ -565,12 +639,26 @@ impl Cluster {
         duration: f64,
         pool: Option<&str>,
     ) -> Result<ContainerId> {
+        self.launch_with_data(res, duration, pool, &[]).map(|(id, _)| id)
+    }
+
+    /// [`Cluster::launch_in`] with the job's input chunk set: placement
+    /// prefers nodes whose caches already hold the bytes, the chosen
+    /// node's cache admits the chunks, and the *missing* bytes are
+    /// billed as transfer time added onto the container duration.
+    pub fn launch_with_data(
+        &self,
+        res: ResourceConfig,
+        duration: f64,
+        pool: Option<&str>,
+        chunks: &[(String, u64)],
+    ) -> Result<(ContainerId, TransferPlan)> {
         res.validate()?;
         let now = self.clock.now();
         let mut inner = self.inner.lock().unwrap();
         inner.sweep_due_preemptions(now);
         let milli = res.milli_vcpus();
-        let Some(node_id) = inner.place(milli, res.mem_mb, pool) else {
+        let Some(node_id) = inner.place(milli, res.mem_mb, pool, chunks) else {
             inner.counters.placement_failures += 1;
             return Err(AcaiError::Exhausted(match pool {
                 Some(p) => format!(
@@ -580,13 +668,27 @@ impl Cluster {
                 None => format!("no node fits {:.1} vCPU / {} MB", res.vcpus, res.mem_mb),
             }));
         };
-        {
+        let plan = {
             let node = inner.nodes.get_mut(&node_id).unwrap();
             node.used_milli += milli;
             node.used_mem += res.mem_mb;
             node.containers += 1;
-        }
-        let mut effective = duration;
+            let (warm_bytes, cold_bytes) = node.cache.admit(chunks);
+            let transfer_secs = if cold_bytes == 0 {
+                0.0
+            } else {
+                cold_bytes as f64 / (node.spec.bandwidth_mbps.max(1e-9) * 1e6)
+            };
+            TransferPlan {
+                cold_bytes,
+                warm_bytes,
+                transfer_secs,
+            }
+        };
+        inner.counters.cache_hit_bytes += plan.warm_bytes;
+        inner.counters.cold_bytes_transferred += plan.cold_bytes;
+        inner.counters.transfer_micros += (plan.transfer_secs * 1e6).round() as u64;
+        let mut effective = duration + plan.transfer_secs;
         if self.config.straggler_rate > 0.0 && inner.rng.chance(self.config.straggler_rate) {
             effective *= self.config.straggler_factor;
         }
@@ -604,7 +706,7 @@ impl Cluster {
             },
         );
         inner.counters.launched += 1;
-        Ok(id)
+        Ok((id, plan))
     }
 
     /// Kill a running container immediately, freeing its resources.
@@ -774,8 +876,9 @@ impl Cluster {
                 // them with the new spec (busy nodes keep the old shape
                 // until they drain — their accounting stays consistent)
                 let old = inner.pools[pi].config.spec;
-                let reshaped =
-                    old.vcpus != config.spec.vcpus || old.mem_mb != config.spec.mem_mb;
+                let reshaped = old.vcpus != config.spec.vcpus
+                    || old.mem_mb != config.spec.mem_mb
+                    || old.bandwidth_mbps != config.spec.bandwidth_mbps;
                 inner.pools[pi].config = config;
                 if reshaped {
                     let empties: Vec<u64> = inner
@@ -901,6 +1004,7 @@ impl Cluster {
                 used_milli: n.used_milli,
                 used_mem: n.used_mem,
                 containers: n.containers,
+                cached_bytes: n.cache.bytes(),
             })
             .collect()
     }
@@ -973,10 +1077,7 @@ mod tests {
     fn small_cluster() -> (Cluster, SimClock) {
         let clock = SimClock::new();
         let config = ClusterConfig::fixed(
-            NodeSpec {
-                vcpus: 4.0,
-                mem_mb: 4096,
-            },
+            NodeSpec::new(4.0, 4096),
             1,
         );
         (Cluster::new(config, clock.clone()), clock)
@@ -987,10 +1088,7 @@ mod tests {
         let config = ClusterConfig {
             pools: vec![PoolConfig {
                 name: "spot".into(),
-                spec: NodeSpec {
-                    vcpus: 4.0,
-                    mem_mb: 4096,
-                },
+                spec: NodeSpec::new(4.0, 4096),
                 price_multiplier: 0.3,
                 min_nodes: 2,
                 max_nodes: 4,
@@ -1135,7 +1233,7 @@ mod tests {
     #[test]
     fn placement_is_best_fit_and_prefers_cheap_pools() {
         let clock = SimClock::new();
-        let spec = NodeSpec { vcpus: 4.0, mem_mb: 4096 };
+        let spec = NodeSpec::new(4.0, 4096);
         let config = ClusterConfig {
             pools: vec![
                 PoolConfig::on_demand("ondemand", spec, 1),
@@ -1185,7 +1283,7 @@ mod tests {
     #[test]
     fn autoscaler_grows_with_queue_and_reaps_idle_nodes() {
         let clock = SimClock::new();
-        let spec = NodeSpec { vcpus: 4.0, mem_mb: 4096 };
+        let spec = NodeSpec::new(4.0, 4096);
         let config = ClusterConfig {
             pools: vec![PoolConfig {
                 name: "spot".into(),
@@ -1306,7 +1404,7 @@ mod tests {
         cluster
             .set_pool(PoolConfig::on_demand(
                 "ondemand",
-                NodeSpec { vcpus: 4.0, mem_mb: 4096 },
+                NodeSpec::new(4.0, 4096),
                 3,
             ))
             .unwrap();
@@ -1315,7 +1413,7 @@ mod tests {
         cluster
             .set_pool(PoolConfig::on_demand(
                 "ondemand",
-                NodeSpec { vcpus: 4.0, mem_mb: 4096 },
+                NodeSpec::new(4.0, 4096),
                 1,
             ))
             .unwrap();
@@ -1324,7 +1422,7 @@ mod tests {
         cluster
             .set_pool(PoolConfig::spot(
                 "spot",
-                NodeSpec { vcpus: 2.0, mem_mb: 2048 },
+                NodeSpec::new(2.0, 2048),
                 4,
                 0.25,
                 0.0,
@@ -1338,7 +1436,7 @@ mod tests {
         cluster
             .set_pool(PoolConfig::on_demand(
                 "ondemand",
-                NodeSpec { vcpus: 8.0, mem_mb: 8192 },
+                NodeSpec::new(8.0, 8192),
                 1,
             ))
             .unwrap();
@@ -1354,13 +1452,76 @@ mod tests {
         assert!(cluster
             .set_pool(PoolConfig {
                 name: "bad".into(),
-                spec: NodeSpec { vcpus: 1.0, mem_mb: 1024 },
+                spec: NodeSpec::new(1.0, 1024),
                 price_multiplier: 0.5,
                 min_nodes: 5,
                 max_nodes: 2,
                 preemption_mean_secs: 0.0,
             })
             .is_err());
+    }
+
+    #[test]
+    fn warm_cache_breaks_placement_ties_and_skips_transfer() {
+        let clock = SimClock::new();
+        let config = ClusterConfig::fixed(NodeSpec::new(4.0, 4096), 2);
+        let cluster = Cluster::new(config, clock.clone());
+        let chunks: Vec<(String, u64)> =
+            vec![("c-1".into(), 1_000_000), ("c-2".into(), 250_000)];
+        // cold launch: both nodes empty -> lowest id; full transfer at
+        // the default 125 MB/s NIC
+        let (_, plan) = cluster
+            .launch_with_data(ResourceConfig::new(1.0, 512), 10.0, None, &chunks)
+            .unwrap();
+        assert_eq!(plan.cold_bytes, 1_250_000);
+        assert_eq!(plan.warm_bytes, 0);
+        assert!((plan.transfer_secs - 0.01).abs() < 1e-12);
+        // the transfer extends the container's wall time
+        let t = cluster.next_completion().unwrap();
+        assert!((t - 10.01).abs() < 1e-9, "end {t}");
+        clock.advance(10.011);
+        cluster.collect_completions();
+        // warm launch: the cache on node 1 outranks the equally-empty
+        // node 2, and nothing transfers
+        let (_, plan2) = cluster
+            .launch_with_data(ResourceConfig::new(1.0, 512), 10.0, None, &chunks)
+            .unwrap();
+        assert_eq!(plan2.cold_bytes, 0);
+        assert_eq!(plan2.warm_bytes, 1_250_000);
+        assert_eq!(plan2.transfer_secs, 0.0);
+        let nodes = cluster.nodes();
+        assert_eq!(nodes[0].cached_bytes, 1_250_000);
+        assert_eq!(nodes[0].containers, 1);
+        assert_eq!(nodes[1].cached_bytes, 0);
+        let counters = cluster.counters();
+        assert_eq!(counters.cold_bytes_transferred, 1_250_000);
+        assert_eq!(counters.cache_hit_bytes, 1_250_000);
+        assert_eq!(counters.transfer_micros, 10_000);
+    }
+
+    #[test]
+    fn node_cache_budget_evicts_lru_per_node() {
+        let clock = SimClock::new();
+        let config = ClusterConfig {
+            node_cache_bytes: 1_000,
+            ..ClusterConfig::fixed(NodeSpec::new(4.0, 4096), 1)
+        };
+        let cluster = Cluster::new(config, clock.clone());
+        let launch = |ids: &[(&str, u64)]| {
+            let chunks: Vec<(String, u64)> =
+                ids.iter().map(|(id, len)| (id.to_string(), *len)).collect();
+            cluster
+                .launch_with_data(ResourceConfig::new(0.5, 512), 1.0, None, &chunks)
+                .unwrap()
+                .1
+        };
+        launch(&[("a", 600)]);
+        launch(&[("b", 600)]); // evicts a
+        assert_eq!(cluster.nodes()[0].cached_bytes, 600);
+        let plan = launch(&[("a", 600)]); // a is cold again
+        assert_eq!(plan.cold_bytes, 600);
+        clock.advance(100.0);
+        cluster.collect_completions();
     }
 
     #[test]

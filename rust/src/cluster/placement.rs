@@ -2,9 +2,12 @@
 //!
 //! The live cluster places one container at a time with a best-fit
 //! policy over per-node free capacity (see [`super::Cluster`]); this
-//! module holds the pure batch planner used to size scale-ups, answer
-//! "how many nodes would this backlog need?", and drive the placement
-//! benches — classic best-fit-decreasing over (milli-vCPU, MB) bins.
+//! module holds the pure batch planner behind the capacity-planning
+//! query ([`super::Cluster::plan_capacity`]: "how many nodes would
+//! this backlog need?") and the placement benches — classic
+//! best-fit-decreasing over (milli-vCPU, MB) bins.  The autoscaler
+//! itself sizes scale-ups with the simpler shape-blind
+//! `jobs_per_node` heuristic ([`super::AutoscalePolicy`]).
 
 use crate::cluster::{NodeSpec, ResourceConfig};
 
@@ -85,10 +88,7 @@ pub fn plan_nodes(spec: NodeSpec, reqs: &[ResourceConfig]) -> (usize, usize) {
 mod tests {
     use super::*;
 
-    const NODE: NodeSpec = NodeSpec {
-        vcpus: 4.0,
-        mem_mb: 4096,
-    };
+    const NODE: NodeSpec = NodeSpec::new(4.0, 4096);
 
     #[test]
     fn best_fit_prefers_tightest_bin() {

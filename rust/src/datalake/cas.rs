@@ -1,0 +1,439 @@
+//! Content-addressed chunk store — the deduplicating body path of the
+//! data lake (paper §3.2.1/§4.4, grown per the dataset-versioning dedup
+//! designs the ROADMAP cites).
+//!
+//! File versions no longer own one opaque object each.  Bodies are
+//! split into fixed-size chunks; each chunk is named by a hand-rolled
+//! 64-bit content hash of its bytes ([`chunk_id`]) and stored **once**
+//! in the object store, refcounted in a `chunks` table on the shared
+//! [`Table`] substrate.  A file version is then just a **manifest** —
+//! an ordered list of chunk ids — so:
+//!
+//! - re-uploading a dataset version that shares content with its
+//!   predecessor stores only the new chunks (dedup is cross-version,
+//!   cross-file, and cross-project: chunk ids carry no namespace);
+//! - ranged reads touch only the chunks overlapping the range;
+//! - the cluster can reason about data gravity per chunk (node-local
+//!   chunk caches, [`crate::cluster`]).
+//!
+//! Refcounts move under per-chunk atomic read-modify-writes (the same
+//! discipline as the version counters, see [`crate::storage`]).
+//! Releasing a manifest decrements; rows that reach zero stay behind as
+//! tombstones for the garbage collector ([`super::gc`]) to reclaim —
+//! release itself never deletes bytes, so a concurrent reader holding a
+//! manifest can always finish.
+//!
+//! [`Table`]: crate::storage::Table
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::error::{AcaiError, Result};
+use crate::json::Json;
+use crate::objectstore::ObjectStore;
+use crate::storage::{Rmw, SharedTable};
+
+/// Fixed chunking granularity (64 KiB).
+pub const DEFAULT_CHUNK_SIZE: usize = 64 * 1024;
+
+/// Refcount table: chunk id -> `{refs, len}`.
+const T_CHUNKS: &str = "chunks";
+
+/// Hand-rolled 64-bit content hash: FNV-1a over the bytes, finished
+/// with a splitmix64 avalanche so nearby inputs land far apart.
+pub fn hash64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d0_49bb_1331_11eb);
+    h ^ (h >> 31)
+}
+
+/// Content address of one chunk: `<hash:016x>-<len:x>`.  The length is
+/// part of the id so a manifest alone can answer size/offset questions
+/// without touching the refcount table.
+pub fn chunk_id(bytes: &[u8]) -> String {
+    format!("{:016x}-{:x}", hash64(bytes), bytes.len())
+}
+
+/// Byte length embedded in a chunk id (0 for a malformed id).
+pub fn chunk_len(id: &str) -> u64 {
+    id.rsplit_once('-')
+        .and_then(|(_, l)| u64::from_str_radix(l, 16).ok())
+        .unwrap_or(0)
+}
+
+/// Object-store key of a chunk (un-namespaced blob keyspace).  Public
+/// so the storage server can presign direct chunk downloads (§4.4.2).
+pub fn chunk_object_key(id: &str) -> String {
+    format!("cas-{id}")
+}
+
+/// Walk a manifest and assemble bytes `[offset, offset+len)`, fetching
+/// only the chunks that overlap the range through `read`.  The one
+/// copy of the overlap arithmetic, shared by the trusted in-process
+/// path ([`ChunkStore::materialize_range`]) and the presigned wire
+/// path ([`crate::datalake::Storage::download_range`]).
+pub fn slice_chunks(
+    manifest: &[String],
+    offset: u64,
+    len: u64,
+    mut read: impl FnMut(&str) -> Result<Arc<Vec<u8>>>,
+) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    let mut pos = 0u64;
+    let end = offset.saturating_add(len);
+    for id in manifest {
+        let clen = chunk_len(id);
+        let (lo, hi) = (pos, pos + clen);
+        pos = hi;
+        if hi <= offset {
+            continue; // wholly before the range
+        }
+        if lo >= end {
+            break; // wholly after — done
+        }
+        let bytes = read(id)?;
+        let from = offset.saturating_sub(lo) as usize;
+        let to = (end.min(hi) - lo) as usize;
+        out.extend_from_slice(&bytes[from..to]);
+    }
+    Ok(out)
+}
+
+/// Monotonic dedup counters (served under `GET /v1/metrics`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CasStats {
+    /// Every byte ever ingested (pre-dedup).
+    pub logical_bytes: u64,
+    /// Bytes written as fresh chunks (post-dedup).
+    pub stored_bytes: u64,
+    /// Bytes an ingest did NOT write because the chunk already existed.
+    pub deduped_bytes: u64,
+    /// Chunk-level dedup hits.
+    pub dedup_hits: u64,
+    /// Live chunk rows (including zero-ref tombstones awaiting GC).
+    pub chunks: u64,
+}
+
+impl CasStats {
+    /// logical / stored — 1.0 means no sharing, 2.0 means every byte
+    /// was stored once but referenced twice.
+    pub fn dedup_ratio(&self) -> f64 {
+        if self.stored_bytes == 0 {
+            1.0
+        } else {
+            self.logical_bytes as f64 / self.stored_bytes as f64
+        }
+    }
+}
+
+/// The chunk store handle.
+#[derive(Clone)]
+pub struct ChunkStore {
+    kv: SharedTable,
+    objects: ObjectStore,
+    chunk_size: usize,
+    logical: Arc<AtomicU64>,
+    stored: Arc<AtomicU64>,
+    deduped: Arc<AtomicU64>,
+    hits: Arc<AtomicU64>,
+}
+
+impl ChunkStore {
+    pub fn new(kv: SharedTable, objects: ObjectStore) -> ChunkStore {
+        Self::with_chunk_size(kv, objects, DEFAULT_CHUNK_SIZE)
+    }
+
+    /// A store with a non-default granularity (tests shrink it to
+    /// exercise multi-chunk paths on small payloads).
+    pub fn with_chunk_size(kv: SharedTable, objects: ObjectStore, chunk_size: usize) -> ChunkStore {
+        assert!(chunk_size > 0, "chunk size must be positive");
+        ChunkStore {
+            kv,
+            objects,
+            chunk_size,
+            logical: Arc::new(AtomicU64::new(0)),
+            stored: Arc::new(AtomicU64::new(0)),
+            deduped: Arc::new(AtomicU64::new(0)),
+            hits: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    pub fn chunk_size(&self) -> usize {
+        self.chunk_size
+    }
+
+    /// Split `bytes` into chunks, store each at most once, bump every
+    /// refcount, and return the manifest.  Identical content always
+    /// yields an identical manifest.
+    pub fn ingest(&self, bytes: &[u8]) -> Result<Vec<String>> {
+        let mut manifest = Vec::with_capacity(bytes.len().div_ceil(self.chunk_size));
+        for chunk in bytes.chunks(self.chunk_size) {
+            let id = chunk_id(chunk);
+            let key = chunk_object_key(&id);
+            // Bytes land before the refcount so a manifest published by
+            // a racing ingest of the same chunk never references an
+            // object that is not there yet (both writers store the same
+            // content — the put is idempotent).
+            if !self.objects.exists(&key) {
+                self.objects.put(&key, chunk.to_vec());
+            }
+            let mut fresh = false;
+            let len = chunk.len() as u64;
+            self.kv.read_modify_write(T_CHUNKS, &id, &mut |cur| {
+                let refs = match cur {
+                    None => {
+                        fresh = true;
+                        0
+                    }
+                    Some(row) => row.get("refs").and_then(Json::as_u64).unwrap_or(0),
+                };
+                Ok(Rmw::Put(
+                    Json::obj().field("refs", refs + 1).field("len", len).build(),
+                ))
+            })?;
+            if fresh {
+                // The row did not exist when we bumped — a reclaim pass
+                // may have deleted a zero-ref tombstone (row, then
+                // bytes) between the exists-check above and the bump.
+                // Re-store the bytes now that the row (refs = 1) pins
+                // them against any later reclaim.
+                if !self.objects.exists(&key) {
+                    self.objects.put(&key, chunk.to_vec());
+                }
+                self.stored.fetch_add(len, Ordering::Relaxed);
+            } else {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.deduped.fetch_add(len, Ordering::Relaxed);
+            }
+            manifest.push(id);
+        }
+        self.logical.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        Ok(manifest)
+    }
+
+    /// Drop one reference from every chunk of a manifest.  Rows that
+    /// reach zero stay behind (with their bytes) as GC candidates.
+    pub fn release(&self, manifest: &[String]) -> Result<()> {
+        for id in manifest {
+            self.kv.read_modify_write(T_CHUNKS, id, &mut |cur| {
+                let Some(row) = cur else {
+                    return Ok(Rmw::Keep); // already reclaimed
+                };
+                let refs = row.get("refs").and_then(Json::as_u64).unwrap_or(0);
+                let len = row.get("len").and_then(Json::as_u64).unwrap_or(0);
+                Ok(Rmw::Put(
+                    Json::obj()
+                        .field("refs", refs.saturating_sub(1))
+                        .field("len", len)
+                        .build(),
+                ))
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Current refcount of a chunk (None once reclaimed / never stored).
+    pub fn refs(&self, id: &str) -> Option<u64> {
+        self.kv
+            .get(T_CHUNKS, id)
+            .and_then(|row| row.get("refs").and_then(Json::as_u64))
+    }
+
+    /// One chunk's bytes.
+    pub fn read(&self, id: &str) -> Result<Arc<Vec<u8>>> {
+        self.objects
+            .get(&chunk_object_key(id))
+            .map_err(|_| AcaiError::Storage(format!("chunk {id} missing from object store")))
+    }
+
+    /// Join a manifest back into contiguous bytes.
+    pub fn materialize(&self, manifest: &[String]) -> Result<Arc<Vec<u8>>> {
+        if manifest.len() == 1 {
+            // the common small-file case shares the chunk buffer itself
+            return self.read(&manifest[0]);
+        }
+        let total: u64 = manifest.iter().map(|id| chunk_len(id)).sum();
+        let mut out = Vec::with_capacity(total as usize);
+        for id in manifest {
+            out.extend_from_slice(&self.read(id)?);
+        }
+        Ok(Arc::new(out))
+    }
+
+    /// Bytes `[offset, offset+len)` of a manifest, touching only the
+    /// chunks that overlap the range.  `len` is clamped to EOF.
+    pub fn materialize_range(
+        &self,
+        manifest: &[String],
+        offset: u64,
+        len: u64,
+    ) -> Result<Vec<u8>> {
+        slice_chunks(manifest, offset, len, |id| self.read(id))
+    }
+
+    /// Chunks whose refcount has dropped to zero: `(id, len)` pairs the
+    /// garbage collector may reclaim.
+    pub fn zero_ref_chunks(&self) -> Vec<(String, u64)> {
+        self.kv
+            .scan(T_CHUNKS)
+            .into_iter()
+            .filter(|(_, row)| row.get("refs").and_then(Json::as_u64) == Some(0))
+            .map(|(id, row)| {
+                let len = row.get("len").and_then(Json::as_u64).unwrap_or(0);
+                (id, len)
+            })
+            .collect()
+    }
+
+    /// Delete every zero-ref chunk (row + bytes); returns reclaimed
+    /// bytes.  Each row is re-checked under its own lock, so a chunk
+    /// whose refcount was bumped since the scan survives.  Like the
+    /// rest of the GC sweep (see [`super::gc`]), reclaim is a
+    /// **single-writer maintenance pass**: it must not run concurrently
+    /// with uploads — an ingest racing the row-then-bytes deletion
+    /// could otherwise observe the bytes mid-removal.
+    pub fn reclaim_zero_refs(&self) -> Result<u64> {
+        let mut reclaimed = 0u64;
+        for (id, len) in self.zero_ref_chunks() {
+            let mut gone = false;
+            self.kv.read_modify_write(T_CHUNKS, &id, &mut |cur| {
+                match cur.and_then(|row| row.get("refs").and_then(Json::as_u64)) {
+                    Some(0) => {
+                        gone = true;
+                        Ok(Rmw::Delete)
+                    }
+                    _ => Ok(Rmw::Keep),
+                }
+            })?;
+            if gone {
+                self.objects.delete(&chunk_object_key(&id));
+                reclaimed += len;
+            }
+        }
+        Ok(reclaimed)
+    }
+
+    /// The monotonic dedup counter block.
+    pub fn stats(&self) -> CasStats {
+        CasStats {
+            logical_bytes: self.logical.load(Ordering::Relaxed),
+            stored_bytes: self.stored.load(Ordering::Relaxed),
+            deduped_bytes: self.deduped.load(Ordering::Relaxed),
+            dedup_hits: self.hits.load(Ordering::Relaxed),
+            chunks: self.kv.count(T_CHUNKS) as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bus::Bus;
+    use crate::kvstore::KvStore;
+    use crate::simclock::SimClock;
+
+    fn store(chunk_size: usize) -> ChunkStore {
+        let clock = SimClock::new();
+        let bus = Bus::new();
+        ChunkStore::with_chunk_size(
+            Arc::new(KvStore::in_memory()),
+            ObjectStore::new(clock, bus),
+            chunk_size,
+        )
+    }
+
+    #[test]
+    fn split_join_round_trip_identity() {
+        let cas = store(4);
+        for len in [0usize, 1, 3, 4, 5, 8, 13] {
+            let bytes: Vec<u8> = (0..len as u8).collect();
+            let manifest = cas.ingest(&bytes).unwrap();
+            assert_eq!(manifest.len(), len.div_ceil(4));
+            assert_eq!(&**cas.materialize(&manifest).unwrap(), &bytes);
+            let lens: u64 = manifest.iter().map(|id| chunk_len(id)).sum();
+            assert_eq!(lens, len as u64);
+        }
+    }
+
+    #[test]
+    fn identical_content_dedups_to_one_copy() {
+        let cas = store(4);
+        let m1 = cas.ingest(b"aaaabbbb").unwrap();
+        let m2 = cas.ingest(b"aaaabbbb").unwrap();
+        assert_eq!(m1, m2, "identical content must yield identical ids");
+        let s = cas.stats();
+        assert_eq!(s.logical_bytes, 16);
+        assert_eq!(s.stored_bytes, 8);
+        assert_eq!(s.deduped_bytes, 8);
+        assert_eq!(s.dedup_hits, 2);
+        assert_eq!(s.chunks, 2);
+        assert!((s.dedup_ratio() - 2.0).abs() < 1e-12);
+        // each chunk carries both references
+        for id in &m1 {
+            assert_eq!(cas.refs(id), Some(2));
+        }
+    }
+
+    #[test]
+    fn shared_chunks_dedup_across_different_payloads() {
+        let cas = store(4);
+        cas.ingest(b"aaaaXXXX").unwrap();
+        // same first chunk, different tail
+        cas.ingest(b"aaaaYYYY").unwrap();
+        let s = cas.stats();
+        assert_eq!(s.dedup_hits, 1);
+        assert_eq!(s.stored_bytes, 12);
+        assert_eq!(s.chunks, 3);
+    }
+
+    #[test]
+    fn ranged_materialize_touches_only_overlapping_chunks() {
+        let cas = store(4);
+        let bytes = b"0123456789abcdef!";
+        let manifest = cas.ingest(bytes).unwrap();
+        assert_eq!(cas.materialize_range(&manifest, 0, 17).unwrap(), bytes);
+        assert_eq!(cas.materialize_range(&manifest, 3, 6).unwrap(), b"345678");
+        assert_eq!(cas.materialize_range(&manifest, 15, 10).unwrap(), b"f!");
+        assert_eq!(cas.materialize_range(&manifest, 4, 0).unwrap(), b"");
+        assert_eq!(cas.materialize_range(&manifest, 16, 1).unwrap(), b"!");
+    }
+
+    #[test]
+    fn release_leaves_tombstones_for_gc() {
+        let cas = store(4);
+        let m = cas.ingest(b"datadata").unwrap(); // "data" twice -> 1 chunk, 2 refs
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0], m[1]);
+        assert_eq!(cas.refs(&m[0]), Some(2));
+        cas.release(&m[..1]).unwrap();
+        assert_eq!(cas.refs(&m[0]), Some(1));
+        // still materializable while referenced
+        assert_eq!(&**cas.read(&m[0]).unwrap(), b"data");
+        cas.release(&m[1..]).unwrap();
+        assert_eq!(cas.refs(&m[0]), Some(0));
+        // bytes survive until a reclaim pass
+        assert!(cas.read(&m[0]).is_ok());
+        assert_eq!(cas.zero_ref_chunks(), vec![(m[0].clone(), 4)]);
+        assert_eq!(cas.reclaim_zero_refs().unwrap(), 4);
+        assert!(cas.read(&m[0]).is_err());
+        assert_eq!(cas.refs(&m[0]), None);
+        // a second pass is a no-op
+        assert_eq!(cas.reclaim_zero_refs().unwrap(), 0);
+    }
+
+    #[test]
+    fn hash_is_stable_and_length_scoped() {
+        assert_eq!(hash64(b"acai"), hash64(b"acai"));
+        assert_ne!(hash64(b"acai"), hash64(b"acaj"));
+        let id = chunk_id(b"hello");
+        assert_eq!(chunk_len(&id), 5);
+        assert_eq!(chunk_len("garbage"), 0);
+    }
+}

@@ -384,7 +384,8 @@ mod tests {
         let kv: SharedTable = Arc::new(KvStore::in_memory());
         let objects = ObjectStore::new(clock.clone(), bus.clone());
         let ids = Arc::new(IdGen::new());
-        let storage = Storage::new(kv.clone(), objects, bus, clock.clone(), ids.clone());
+        let cas = super::cas::ChunkStore::new(kv.clone(), objects.clone());
+        let storage = Storage::new(kv.clone(), objects, cas, bus, clock.clone(), ids.clone());
         let metadata = MetadataStore::new(clock.clone());
         let provenance = ProvenanceStore::new();
         let fs = FileSetStore::new(

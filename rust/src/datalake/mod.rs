@@ -2,9 +2,11 @@
 //!
 //! Four cooperating services over the substrates:
 //!
-//! - [`storage`] — versioned file storage on the object store, with
-//!   transactional batch **upload sessions** (§4.4.3) and presigned-URL
-//!   data transfer (§4.4.2);
+//! - [`storage`] — versioned file storage, with transactional batch
+//!   **upload sessions** (§4.4.3) and presigned-URL data transfer
+//!   (§4.4.2), lowered onto the content-addressed chunk store
+//!   ([`cas`]): file versions are chunk manifests, deduped and
+//!   refcounted across versions/files/projects;
 //! - [`fileset`] — file sets: versioned lists of (path, version)
 //!   references with the `@FileSet:version` spec language (§3.2.2);
 //! - [`metadata`] — key-value metadata with indexed retrieval (§3.2.3);
@@ -16,6 +18,7 @@
 
 pub mod acl;
 pub mod cache;
+pub mod cas;
 pub mod fileset;
 pub mod gc;
 pub mod metadata;
@@ -25,11 +28,12 @@ pub mod storage;
 
 pub use acl::{Access, AclStore, Mode};
 pub use cache::FileSetCache;
+pub use cas::{CasStats, ChunkStore};
 pub use fileset::{FileSetStore, ResolvedSet};
 pub use metadata::{ArtifactKind, MetadataStore};
 pub use provenance::ProvenanceStore;
 pub use session::{SessionState, UploadSession};
-pub use storage::Storage;
+pub use storage::{FileStat, Storage};
 
 use crate::bus::Bus;
 use crate::ids::IdGen;
@@ -52,12 +56,23 @@ pub struct DataLake {
     pub acl: AclStore,
     /// Inter-job file-set cache (§7.1.2).
     pub cache: FileSetCache,
+    /// Content-addressed chunk store — the deduplicating body path
+    /// every file version lowers onto.
+    pub cas: ChunkStore,
 }
 
 impl DataLake {
     pub fn new(kv: SharedTable, objects: ObjectStore, bus: Bus, clock: SimClock) -> Self {
         let ids = Arc::new(IdGen::new());
-        let storage = Storage::new(kv.clone(), objects, bus, clock.clone(), ids.clone());
+        let cas = ChunkStore::new(kv.clone(), objects.clone());
+        let storage = Storage::new(
+            kv.clone(),
+            objects,
+            cas.clone(),
+            bus,
+            clock.clone(),
+            ids.clone(),
+        );
         let metadata = MetadataStore::new(clock.clone());
         let provenance = ProvenanceStore::new();
         let filesets = FileSetStore::new(
@@ -75,6 +90,7 @@ impl DataLake {
             provenance,
             acl: AclStore::new(),
             cache: FileSetCache::new(DEFAULT_CACHE_BYTES),
+            cas,
         }
     }
 
@@ -100,5 +116,30 @@ impl DataLake {
         let files = std::sync::Arc::new(self.filesets.materialize(project, name, Some(v))?);
         self.cache.put(project, name, v, files.clone());
         Ok(files)
+    }
+
+    /// The deduplicated chunk set of a file-set version: every distinct
+    /// `(chunk id, len)` pinned by any entry.  The engine hands this to
+    /// the cluster so placement can score candidate nodes by how many
+    /// of the job's input bytes their caches already hold, and so the
+    /// launch can bill only the *missing* bytes as cold transfer.
+    pub fn fileset_chunks(
+        &self,
+        project: crate::ids::ProjectId,
+        name: &str,
+        version: Option<crate::ids::Version>,
+    ) -> crate::error::Result<Vec<(String, u64)>> {
+        let entries = self.filesets.get(project, name, version)?;
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for (path, v) in entries {
+            for id in self.storage.manifest(project, &path, Some(v))? {
+                if seen.insert(id.clone()) {
+                    let len = cas::chunk_len(&id);
+                    out.push((id, len));
+                }
+            }
+        }
+        Ok(out)
     }
 }

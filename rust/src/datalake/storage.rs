@@ -1,11 +1,20 @@
 //! Versioned file storage (paper §3.2.1, §4.4).
 //!
-//! Files live in the object store (one object per *file version*, keyed
-//! by a unique numeric file id); the hierarchy and version tables live
-//! behind the [`Table`] trait (the MySQL analogue by default, but any
-//! substrate implementing the trait works).  Versioning is implemented
-//! **on top of** the object store rather than using a native versioning
-//! feature, exactly as the paper does to avoid vendor lock-in.
+//! File *bodies* live in the content-addressed chunk store
+//! ([`super::cas`]): a file version row holds a **chunk manifest**, not
+//! an opaque object, so versions that share content share storage.
+//! The hierarchy and version tables live behind the [`Table`] trait
+//! (the MySQL analogue by default, but any substrate implementing the
+//! trait works).  Versioning is implemented **on top of** the object
+//! store rather than using a native versioning feature, exactly as the
+//! paper does to avoid vendor lock-in.
+//!
+//! Upload keeps the paper's wire shape: clients still PUT whole bodies
+//! against presigned staging objects (§4.4.2); at commit time the
+//! storage server *ingests* each staging object into the chunk store,
+//! writes the manifest row, and drops the staging copy.  Download is
+//! a per-chunk presigned flow — ranged reads fetch only the chunks
+//! overlapping the range.
 //!
 //! Concurrency model: every version counter (`latest` row per path) is
 //! bumped with an atomic per-key read-modify-write — the paper's
@@ -29,9 +38,10 @@ use crate::objectstore::{ObjectStore, Presigned, TOPIC_OBJECT_EVENTS};
 use crate::simclock::SimClock;
 use crate::storage::{Rmw, SharedTable};
 
+use super::cas::ChunkStore;
 use super::session::{SessionState, UploadSession};
 
-const T_FILES: &str = "files"; // "<proj>|<path>|<ver:08>" -> {file_id,size,created}
+const T_FILES: &str = "files"; // "<proj>|<path>|<ver:08>" -> {chunks,size,created}
 const T_LATEST: &str = "latest"; // "<proj>|<path>" -> {version}, published only after the row exists
 const T_VSEQ: &str = "vseq"; // "<proj>|<path>" -> {version}: claimed-but-unpublished counter
 const T_SESSIONS: &str = "sessions"; // "<sess id>" -> session json
@@ -44,11 +54,47 @@ fn latest_key(project: ProjectId, path: &str) -> String {
     format!("{}|{}", project.raw(), path)
 }
 
+/// Validate + clamp a ranged-read request against a file row: an
+/// offset past EOF is invalid; `len = None` (or one overshooting EOF)
+/// reads to EOF.  Returns the byte count to take.
+fn clamped_take(row: &Json, offset: u64, len: Option<u64>) -> Result<u64> {
+    let size = row.get("size").and_then(Json::as_u64).unwrap_or(0);
+    if offset > size {
+        return Err(AcaiError::invalid(format!(
+            "offset {offset} past end of file ({size} bytes)"
+        )));
+    }
+    Ok(len.unwrap_or(size - offset).min(size - offset))
+}
+
+/// Chunk manifest of a file row.
+fn row_manifest(row: &Json) -> Vec<String> {
+    row.get("chunks")
+        .and_then(Json::as_array)
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|c| c.as_str().map(String::from))
+        .collect()
+}
+
+/// Manifest + size view of one file version (`GET /v1/files/{path}/stat`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FileStat {
+    pub version: Version,
+    /// Logical size in bytes.
+    pub size: u64,
+    /// Chunking granularity the manifest was built with.
+    pub chunk_size: u64,
+    /// Ordered chunk ids (each embeds its own length).
+    pub chunks: Vec<String>,
+}
+
 /// The storage server.
 #[derive(Clone)]
 pub struct Storage {
     kv: SharedTable,
     objects: ObjectStore,
+    cas: ChunkStore,
     clock: SimClock,
     ids: Arc<IdGen>,
     /// object key -> session, for SNS-driven commit.
@@ -65,6 +111,7 @@ impl Storage {
     pub fn new(
         kv: SharedTable,
         objects: ObjectStore,
+        cas: ChunkStore,
         bus: Bus,
         clock: SimClock,
         ids: Arc<IdGen>,
@@ -72,6 +119,7 @@ impl Storage {
         let storage = Self {
             kv,
             objects,
+            cas,
             clock,
             ids,
             pending_keys: Arc::new(Mutex::new(Default::default())),
@@ -221,22 +269,30 @@ impl Storage {
         for (path, object_key, _) in &session.files {
             let lk = latest_key(project, path);
             // Claim the next version atomically (concurrent sessions on
-            // the same path serialize here and nowhere else), write the
-            // file row, and only then publish the `latest` pointer — a
+            // the same path serialize here and nowhere else), ingest the
+            // staging object into the chunk store, write the manifest
+            // row, and only then publish the `latest` pointer — a
             // reader resolving "latest" never sees a version whose row
             // does not exist yet.
             let next = crate::storage::claim_version(self.kv.as_ref(), T_VSEQ, T_LATEST, &lk)?;
-            let size = self.objects.get(object_key).map(|b| b.len()).unwrap_or(0);
+            let bytes = self.objects.get(object_key).unwrap_or_default();
+            let manifest = self.cas.ingest(&bytes)?;
             self.kv.put(
                 T_FILES,
                 &file_key(project, path, next),
                 Json::obj()
-                    .field("object", object_key.as_str())
-                    .field("size", size)
+                    .field(
+                        "chunks",
+                        Json::Arr(manifest.iter().map(|c| Json::from(c.as_str())).collect()),
+                    )
+                    .field("size", bytes.len())
                     .field("created", self.clock.now())
                     .build(),
             )?;
             crate::storage::publish_version(self.kv.as_ref(), T_LATEST, &lk, next)?;
+            // the whole-body staging copy is no longer needed — the
+            // chunk store owns the bytes now
+            self.objects.delete(object_key);
             versions.push((path.clone(), next));
         }
         self.kv
@@ -382,40 +438,111 @@ impl Storage {
         }
     }
 
-    /// Presigned download flow (client side).
+    /// The manifest row of one resolved file version.
+    fn row(
+        &self,
+        project: ProjectId,
+        path: &str,
+        version: Option<Version>,
+    ) -> Result<(Version, Json)> {
+        let v = self.resolve_version(project, path, version)?;
+        let row = self
+            .kv
+            .get(T_FILES, &file_key(project, path, v))
+            .ok_or_else(|| AcaiError::not_found(format!("{path}#{v}")))?;
+        Ok((v, row))
+    }
+
+    /// Presigned download flow (client side of §4.4.2): the storage
+    /// server hands out one presigned GET per chunk; the client fetches
+    /// the chunks directly from the object store and assembles them.
     pub fn download(
         &self,
         project: ProjectId,
         path: &str,
         version: Option<Version>,
     ) -> Result<Arc<Vec<u8>>> {
-        let v = self.resolve_version(project, path, version)?;
-        let row = self
-            .kv
-            .get(T_FILES, &file_key(project, path, v))
-            .ok_or_else(|| AcaiError::not_found(format!("{path}#{v}")))?;
-        let object = row
-            .get("object")
-            .and_then(Json::as_str)
-            .ok_or_else(|| AcaiError::Storage("file row missing object".into()))?;
-        let grant = self.objects.presign_get(object)?;
-        self.objects.get_presigned(&grant.token)
+        let (_, row) = self.row(project, path, version)?;
+        let manifest = row_manifest(&row);
+        let size = row.get("size").and_then(Json::as_u64).unwrap_or(0);
+        let mut out = Vec::with_capacity(size as usize);
+        for id in &manifest {
+            let grant = self.objects.presign_get(&super::cas::chunk_object_key(id))?;
+            out.extend_from_slice(&self.objects.get_presigned(&grant.token)?);
+        }
+        Ok(Arc::new(out))
     }
 
-    /// Trusted read (in-platform agents).
+    /// Ranged presigned download: only the chunks overlapping
+    /// `[offset, offset+len)` cross the wire.  `len = None` reads to
+    /// EOF; an offset past EOF is invalid.
+    pub fn download_range(
+        &self,
+        project: ProjectId,
+        path: &str,
+        version: Option<Version>,
+        offset: u64,
+        len: Option<u64>,
+    ) -> Result<Vec<u8>> {
+        let (_, row) = self.row(project, path, version)?;
+        let take = clamped_take(&row, offset, len)?;
+        super::cas::slice_chunks(&row_manifest(&row), offset, take, |id| {
+            let grant = self.objects.presign_get(&super::cas::chunk_object_key(id))?;
+            self.objects.get_presigned(&grant.token)
+        })
+    }
+
+    /// Trusted read (in-platform agents): manifest → chunk store.
     pub fn read(
         &self,
         project: ProjectId,
         path: &str,
         version: Option<Version>,
     ) -> Result<Arc<Vec<u8>>> {
-        let v = self.resolve_version(project, path, version)?;
-        let row = self
-            .kv
-            .get(T_FILES, &file_key(project, path, v))
-            .ok_or_else(|| AcaiError::not_found(format!("{path}#{v}")))?;
-        let object = row.get("object").and_then(Json::as_str).unwrap_or_default();
-        self.objects.get(object)
+        let (_, row) = self.row(project, path, version)?;
+        self.cas.materialize(&row_manifest(&row))
+    }
+
+    /// Trusted ranged read (same clamping as [`Self::download_range`]).
+    pub fn read_range(
+        &self,
+        project: ProjectId,
+        path: &str,
+        version: Option<Version>,
+        offset: u64,
+        len: Option<u64>,
+    ) -> Result<Vec<u8>> {
+        let (_, row) = self.row(project, path, version)?;
+        let take = clamped_take(&row, offset, len)?;
+        self.cas.materialize_range(&row_manifest(&row), offset, take)
+    }
+
+    /// The chunk manifest of a file version (the engine's locality
+    /// planner feeds these to the cluster).
+    pub fn manifest(
+        &self,
+        project: ProjectId,
+        path: &str,
+        version: Option<Version>,
+    ) -> Result<Vec<String>> {
+        let (_, row) = self.row(project, path, version)?;
+        Ok(row_manifest(&row))
+    }
+
+    /// Manifest + size view (`GET /v1/files/{path}/stat`).
+    pub fn stat(
+        &self,
+        project: ProjectId,
+        path: &str,
+        version: Option<Version>,
+    ) -> Result<FileStat> {
+        let (v, row) = self.row(project, path, version)?;
+        Ok(FileStat {
+            version: v,
+            size: row.get("size").and_then(Json::as_u64).unwrap_or(0),
+            chunk_size: self.cas.chunk_size() as u64,
+            chunks: row_manifest(&row),
+        })
     }
 
     /// List paths under a prefix with their latest versions.
@@ -443,10 +570,13 @@ impl Storage {
     }
 
     /// Delete one file version (the GC sweep path, §7.1.3): removes the
-    /// object and its row, and repoints `latest` at the highest surviving
-    /// version (or drops it when none survive).  Callers are responsible
-    /// for referential safety — [`crate::datalake::gc`] only deletes
-    /// versions no file set pins.
+    /// row, drops one reference from every chunk of its manifest (the
+    /// bytes themselves are reclaimed by the GC once a chunk's refcount
+    /// reaches zero — a chunk shared with a surviving version lives on),
+    /// and repoints `latest` at the highest surviving version (or drops
+    /// it when none survive).  Callers are responsible for referential
+    /// safety — [`crate::datalake::gc`] only deletes versions no file
+    /// set pins.
     pub fn delete_version(
         &self,
         project: ProjectId,
@@ -454,16 +584,16 @@ impl Storage {
         version: Version,
     ) -> Result<()> {
         let fk = file_key(project, path, version);
-        // Atomically detach the file row, capturing the object key.
-        let mut object: Option<String> = None;
+        // Atomically detach the file row, capturing the manifest.
+        let mut manifest: Vec<String> = Vec::new();
         self.kv.read_modify_write(T_FILES, &fk, &mut |cur| {
             let row = cur.ok_or_else(|| AcaiError::not_found(format!("{path}#{version}")))?;
-            object = row.get("object").and_then(Json::as_str).map(String::from);
+            manifest = row_manifest(row);
             Ok(Rmw::Delete)
         })?;
-        if let Some(object) = object {
-            self.objects.delete(&object);
-        }
+        // refcounts move outside the row's key lock (RMW closures must
+        // not re-enter the store)
+        self.cas.release(&manifest)?;
         // Repoint the latest pointer at the highest surviving version.
         // The surviving set is computed outside the pointer's key lock
         // (RMW closures must not re-enter the store); GC sweeps are
@@ -518,13 +648,18 @@ mod tests {
     use crate::bus::Bus;
     use crate::kvstore::KvStore;
 
+    /// A storage server over a tiny (4-byte) chunk size so small test
+    /// payloads exercise the multi-chunk manifest paths.
     fn lake() -> (Storage, ObjectStore, SimClock) {
         let clock = SimClock::new();
         let bus = Bus::new();
         let objects = ObjectStore::new(clock.clone(), bus.clone());
+        let kv: SharedTable = Arc::new(KvStore::in_memory());
+        let cas = ChunkStore::with_chunk_size(kv.clone(), objects.clone(), 4);
         let storage = Storage::new(
-            Arc::new(KvStore::in_memory()),
+            kv,
             objects.clone(),
+            cas,
             bus,
             clock.clone(),
             Arc::new(IdGen::new()),
@@ -667,6 +802,63 @@ mod tests {
         assert_eq!(s.read(P, "/nope", None).unwrap_err().status(), 404);
         s.upload(P, &[("/f", b"x")]).unwrap();
         assert_eq!(s.read(P, "/f", Some(9)).unwrap_err().status(), 404);
+    }
+
+    #[test]
+    fn bodies_land_as_deduped_chunk_manifests() {
+        let (s, _o, _c) = lake();
+        // 10 bytes over 4-byte chunks -> 3-chunk manifest
+        s.upload(P, &[("/f", b"0123456789")]).unwrap();
+        let stat = s.stat(P, "/f", None).unwrap();
+        assert_eq!(stat.version, 1);
+        assert_eq!(stat.size, 10);
+        assert_eq!(stat.chunk_size, 4);
+        assert_eq!(stat.chunks.len(), 3);
+        // identical content re-uploaded: new version, zero new bytes
+        let before = s.cas.stats().stored_bytes;
+        s.upload(P, &[("/f", b"0123456789")]).unwrap();
+        assert_eq!(s.cas.stats().stored_bytes, before);
+        assert_eq!(s.manifest(P, "/f", Some(1)).unwrap(), stat.chunks);
+        assert_eq!(s.manifest(P, "/f", Some(2)).unwrap(), stat.chunks);
+        for id in &stat.chunks {
+            assert_eq!(s.cas.refs(id), Some(2));
+        }
+        // an append-modified version shares its prefix chunks
+        s.upload(P, &[("/f", b"0123456789AB")]).unwrap();
+        let m3 = s.manifest(P, "/f", Some(3)).unwrap();
+        assert_eq!(m3[..2], stat.chunks[..2], "aligned prefix chunks dedup");
+        assert_ne!(m3[2], stat.chunks[2], "the modified tail is a new chunk");
+        assert_eq!(&**s.read(P, "/f", Some(3)).unwrap(), b"0123456789AB");
+    }
+
+    #[test]
+    fn ranged_reads_slice_across_chunk_boundaries() {
+        let (s, _o, _c) = lake();
+        s.upload(P, &[("/f", b"0123456789abcdef!")]).unwrap();
+        assert_eq!(s.read_range(P, "/f", None, 0, None).unwrap(), b"0123456789abcdef!");
+        assert_eq!(s.read_range(P, "/f", None, 3, Some(6)).unwrap(), b"345678");
+        assert_eq!(s.read_range(P, "/f", None, 15, Some(99)).unwrap(), b"f!");
+        assert_eq!(s.read_range(P, "/f", None, 17, None).unwrap(), b"");
+        assert_eq!(s.read_range(P, "/f", None, 18, None).unwrap_err().status(), 400);
+        // the presigned variant agrees byte for byte
+        assert_eq!(s.download_range(P, "/f", None, 3, Some(6)).unwrap(), b"345678");
+        assert_eq!(s.download_range(P, "/f", None, 99, None).unwrap_err().status(), 400);
+    }
+
+    #[test]
+    fn delete_version_keeps_chunks_shared_with_survivors() {
+        let (s, _o, _c) = lake();
+        // two versions with identical content share every chunk
+        s.upload(P, &[("/f", b"shared-bytes")]).unwrap();
+        s.upload(P, &[("/f", b"shared-bytes")]).unwrap();
+        let manifest = s.manifest(P, "/f", Some(1)).unwrap();
+        s.delete_version(P, "/f", 1).unwrap();
+        // the surviving version still materializes — refs dropped 2 -> 1
+        assert_eq!(&**s.read(P, "/f", Some(2)).unwrap(), b"shared-bytes");
+        for id in &manifest {
+            assert_eq!(s.cas.refs(id), Some(1));
+        }
+        assert!(s.cas.zero_ref_chunks().is_empty());
     }
 
     #[test]

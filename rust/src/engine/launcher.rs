@@ -5,7 +5,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::bus::{Bus, TOPIC_CONTAINER_STATUS};
-use crate::cluster::{Cluster, ContainerEvent, ContainerPhase, ResourceConfig};
+use crate::cluster::{Cluster, ContainerEvent, ContainerPhase, ResourceConfig, TransferPlan};
 use crate::error::Result;
 use crate::ids::{ContainerId, JobId};
 use crate::json::Json;
@@ -28,19 +28,24 @@ impl Launcher {
     }
 
     /// Provision a container for a job that will run `duration` virtual
-    /// seconds, optionally constrained to one node pool.  Publishes a
-    /// `running` container-status event.
+    /// seconds, optionally constrained to one node pool.  `chunks` is
+    /// the job's input chunk set — placement prefers nodes whose caches
+    /// already hold the bytes, and the returned [`TransferPlan`] says
+    /// how many bytes moved cold (that transfer time is already folded
+    /// into the container's duration).  Publishes a `running`
+    /// container-status event.
     pub fn launch(
         &self,
         job: JobId,
         res: ResourceConfig,
         duration: f64,
         pool: Option<&str>,
-    ) -> Result<ContainerId> {
-        let container = self.cluster.launch_in(res, duration, pool)?;
+        chunks: &[(String, u64)],
+    ) -> Result<(ContainerId, TransferPlan)> {
+        let (container, plan) = self.cluster.launch_with_data(res, duration, pool, chunks)?;
         self.by_container.lock().unwrap().insert(container, job);
         self.publish(container, job, "running");
-        Ok(container)
+        Ok((container, plan))
     }
 
     /// Price multiplier of the pool a freshly-launched container sits
@@ -138,7 +143,7 @@ mod tests {
     fn launch_watch_round_trip() {
         let (l, clock, bus) = launcher();
         let rx = bus.subscribe(TOPIC_CONTAINER_STATUS);
-        l.launch(JobId(1), ResourceConfig::new(1.0, 1024), 5.0, None).unwrap();
+        l.launch(JobId(1), ResourceConfig::new(1.0, 1024), 5.0, None, &[]).unwrap();
         clock.advance(5.0);
         let done = l.watch();
         assert_eq!(done.len(), 1);
@@ -155,7 +160,7 @@ mod tests {
     fn kill_publishes_event() {
         let (l, _clock, bus) = launcher();
         let rx = bus.subscribe(TOPIC_CONTAINER_STATUS);
-        let c = l.launch(JobId(2), ResourceConfig::new(1.0, 1024), 100.0, None).unwrap();
+        let (c, _) = l.launch(JobId(2), ResourceConfig::new(1.0, 1024), 100.0, None, &[]).unwrap();
         l.kill(c).unwrap();
         let statuses: Vec<String> = rx
             .try_iter()
@@ -168,8 +173,8 @@ mod tests {
     #[test]
     fn watch_maps_containers_to_jobs() {
         let (l, clock, _bus) = launcher();
-        l.launch(JobId(10), ResourceConfig::new(0.5, 512), 2.0, None).unwrap();
-        l.launch(JobId(11), ResourceConfig::new(0.5, 512), 1.0, None).unwrap();
+        l.launch(JobId(10), ResourceConfig::new(0.5, 512), 2.0, None, &[]).unwrap();
+        l.launch(JobId(11), ResourceConfig::new(0.5, 512), 1.0, None, &[]).unwrap();
         clock.advance(2.0);
         let done = l.watch();
         let jobs: Vec<JobId> = done.iter().map(|(j, _, _)| *j).collect();

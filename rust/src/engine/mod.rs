@@ -30,6 +30,13 @@
 //! folded into a resume point, and the job re-enters its queue *front
 //! of line* to restart from the checkpoint, paying only
 //! post-checkpoint rework.
+//!
+//! The launcher also threads the **data plane** through placement: a
+//! job's input file set resolves to its content-addressed chunk set
+//! ([`crate::datalake::cas`]), the cluster prefers nodes whose caches
+//! already hold those chunks, and the cold (missing) bytes are billed
+//! as transfer time added to container runtime and cost — so the
+//! provisioner and the spot economics see data gravity.
 
 pub mod dag;
 pub mod driver;
@@ -230,6 +237,24 @@ impl ExecutionEngine {
             }
             if let Err(e) = self.launch_one(&record) {
                 if matches!(e, AcaiError::Exhausted(_)) {
+                    // The submit-time can_ever_fit guard can be
+                    // invalidated later by a pool reshape
+                    // (`PUT /v1/cluster/pools` shrinking the node
+                    // shape): a job that can no longer EVER fit must
+                    // fail loudly, not requeue forever.
+                    if !self
+                        .launcher
+                        .can_ever_fit(record.spec.resources, record.spec.pool.as_deref())
+                    {
+                        let _ = self.registry.update(job, Some(JobState::Killed), |j| {
+                            j.error = Some(format!(
+                                "pool reshaped under queued job: {e}"
+                            ));
+                        });
+                        self.scheduler.on_terminal(key);
+                        self.monitor.report(job, "failed", self.clock.now());
+                        continue;
+                    }
                     // pool saturated: put the job back (front, FIFO
                     // preserved), retry after the next completion frees
                     // capacity
@@ -252,9 +277,11 @@ impl ExecutionEngine {
     fn launch_one(&self, record: &JobRecord) -> Result<()> {
         let job = record.id;
         self.registry.update(job, Some(JobState::Launching), |_| {})?;
-        // Agent: download the input file set (bytes counted for the log).
+        // Agent: download the input file set (bytes counted for the log)
+        // and resolve its chunk set so placement can weigh data gravity.
         self.monitor.report(job, "downloading", self.clock.now());
         let mut input_bytes = 0usize;
+        let mut chunks: Vec<(String, u64)> = Vec::new();
         if !record.spec.input_fileset.is_empty() {
             let (name, version) = parse_fileset_ref(&record.spec.input_fileset)?;
             // the inter-job cache (§7.1.2) makes repeat downloads free
@@ -264,6 +291,9 @@ impl ExecutionEngine {
             for (_, bytes) in files.iter() {
                 input_bytes += bytes.len();
             }
+            chunks = self
+                .datalake
+                .fileset_chunks(record.spec.project, &name, version)?;
         }
         let cmd = JobCommand::parse(&record.spec.command)?;
         // Checkpointed rescheduling: a preempted job keeps its original
@@ -281,11 +311,12 @@ impl ExecutionEngine {
                 (d, d)
             }
         };
-        let container = self.launcher.launch(
+        let (container, plan) = self.launcher.launch(
             job,
             record.spec.resources,
             duration,
             record.spec.pool.as_deref(),
+            &chunks,
         )?;
         // the pool's price multiplier is fixed at launch time — billing
         // uses what the capacity cost when it was bought
@@ -295,6 +326,9 @@ impl ExecutionEngine {
             j.container = Some(container);
             j.planned_secs = Some(planned);
             j.price_mult = Some(price_mult);
+            j.attempt_transfer = Some(plan.transfer_secs);
+            j.transfer_secs =
+                Some(record.transfer_secs.unwrap_or(0.0) + plan.transfer_secs);
         })?;
         self.logs.append(
             job,
@@ -309,6 +343,15 @@ impl ExecutionEngine {
                 ),
             }],
         );
+        if plan.cold_bytes + plan.warm_bytes > 0 {
+            self.logs.append(
+                job,
+                &[format!(
+                    "agent: node chunk cache: {} bytes warm, {} bytes cold ({:.6}s transfer)",
+                    plan.warm_bytes, plan.cold_bytes, plan.transfer_secs
+                )],
+            );
+        }
         self.monitor.report(job, "running", self.clock.now());
         Ok(())
     }
@@ -355,13 +398,16 @@ impl ExecutionEngine {
         let key: QueueKey = (record.spec.project, record.spec.user);
         let attempt = (at - record.launched_at.unwrap_or(at)).max(0.0);
         // work before the last checkpoint survives; the tail is rework.
-        // Credit is wall-clock-based, so a straggler container (which
-        // makes work progress slower than wall time) is clamped to the
-        // planned total — it can finish early after a late revocation,
-        // but the resume offset can never exceed the job's actual work.
+        // Credit is wall-clock-based minus the attempt's cold-transfer
+        // time (moving bytes is not training progress), and a straggler
+        // container (which makes work progress slower than wall time)
+        // is clamped to the planned total — it can finish early after a
+        // late revocation, but the resume offset can never exceed the
+        // job's actual work.
+        let worked = (attempt - record.attempt_transfer.unwrap_or(0.0)).max(0.0);
         let base = record.checkpoint.unwrap_or(0.0);
         let interval = self.checkpoint_secs.max(1e-9);
-        let checkpoint = (base + (attempt / interval).floor() * interval)
+        let checkpoint = (base + (worked / interval).floor() * interval)
             .min(record.planned_secs.unwrap_or(f64::INFINITY));
         let mult = record.price_mult.unwrap_or(1.0);
         let attempt_cost = self.pricing.cost(record.spec.resources, attempt) * mult;

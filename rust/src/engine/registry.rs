@@ -69,10 +69,19 @@ pub struct JobRecord {
     /// agent's last `[[acai]] checkpoint` before a preemption.
     pub checkpoint: Option<f64>,
     /// Full planned duration of the payload, fixed at first launch so a
-    /// resumed attempt runs exactly `planned - checkpoint`.
+    /// resumed attempt runs exactly `planned - checkpoint` (plus any
+    /// cold-input transfer on the new node).
     pub planned_secs: Option<f64>,
     /// Price multiplier of the pool the current/last container ran on.
     pub price_mult: Option<f64>,
+    /// Simulated cold-input transfer time accumulated across attempts
+    /// (already inside `runtime_secs` — tracked separately so the data
+    /// plane is observable).
+    pub transfer_secs: Option<f64>,
+    /// Transfer time of the current/last attempt.  Excluded from
+    /// checkpoint credit on preemption: moving bytes is not training
+    /// progress.
+    pub attempt_transfer: Option<f64>,
 }
 
 fn opt_f64(b: JsonBuilder, key: &str, v: Option<f64>) -> JsonBuilder {
@@ -109,6 +118,8 @@ impl JobRecord {
         b = opt_f64(b, "checkpoint", self.checkpoint);
         b = opt_f64(b, "planned_secs", self.planned_secs);
         b = opt_f64(b, "price_mult", self.price_mult);
+        b = opt_f64(b, "transfer_secs", self.transfer_secs);
+        b = opt_f64(b, "attempt_transfer", self.attempt_transfer);
         if let Some(c) = self.container {
             b = b.field("container", c.raw());
         }
@@ -170,6 +181,8 @@ impl JobRecord {
             checkpoint: opt("checkpoint"),
             planned_secs: opt("planned_secs"),
             price_mult: opt("price_mult"),
+            transfer_secs: opt("transfer_secs"),
+            attempt_transfer: opt("attempt_transfer"),
         })
     }
 }
@@ -232,6 +245,8 @@ impl JobRegistry {
             checkpoint: None,
             planned_secs: None,
             price_mult: None,
+            transfer_secs: None,
+            attempt_transfer: None,
         };
         self.table.put(T_JOBS, &job_key(id), record.to_json())?;
         Ok(id)

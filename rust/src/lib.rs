@@ -28,9 +28,13 @@
 //!    ([`engine::experiment`]) hold `Arc<dyn Table>` handles, never
 //!    concrete store internals; per-key read-modify-write preserves the
 //!    paper's sequential version assignment (§4.4.3) without cross-key
-//!    serialization.  Pipelines, workflow replay, and hyperparameter
-//!    sweeps share one dependency-DAG scheduling path ([`engine::dag`])
-//!    under the per-user quota.
+//!    serialization.  File bodies lower onto a content-addressed,
+//!    refcounted chunk store ([`datalake::cas`]) — versions that share
+//!    content share storage, and job placement prefers nodes whose
+//!    chunk caches already hold the input (cold bytes bill as transfer
+//!    time).  Pipelines, workflow replay, and hyperparameter sweeps
+//!    share one dependency-DAG scheduling path ([`engine::dag`]) under
+//!    the per-user quota.
 //! 4. **Runtime bridge** — [`runtime`]: loads the AOT-lowered JAX/Pallas
 //!    modules (`artifacts/*.hlo.txt`) via PJRT and executes them from the
 //!    hot paths (profiler fit/predict, the MLP job payload); the PJRT

@@ -22,8 +22,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::api::dto::{
-    cut_page, num_cursor, FileEntry, JobStatus, LogChunk, NodeStatus, Page, PageReq,
-    PoolSpec, PoolStatus, ProvisionChoice, TraceDir,
+    cut_page, num_cursor, DataPlaneMetrics, FileEntry, FileManifest, JobStatus, LogChunk,
+    NodeStatus, Page, PageReq, PoolSpec, PoolStatus, ProvisionChoice, TraceDir,
 };
 use crate::autoprovision::{Decision, Objective};
 use crate::cluster::ResourceConfig;
@@ -56,6 +56,25 @@ pub trait AcaiApi {
 
     /// Download one file (latest version if `None`).
     fn fetch(&self, path: &str, version: Option<Version>) -> Result<Vec<u8>>;
+
+    /// Ranged download: bytes `[offset, offset+len)` of one file
+    /// version (`len = None` reads to EOF, clamped).  Only the chunks
+    /// overlapping the range move; an offset past EOF is a 400.
+    fn fetch_range(
+        &self,
+        path: &str,
+        version: Option<Version>,
+        offset: u64,
+        len: Option<u64>,
+    ) -> Result<Vec<u8>>;
+
+    /// The chunk-manifest view of one file version: logical size,
+    /// chunking granularity, ordered chunk ids.
+    fn file_stat(&self, path: &str, version: Option<Version>) -> Result<FileManifest>;
+
+    /// The data-plane counter block: dedup ratio of the chunk store
+    /// plus node-cache hit bytes and simulated transfer time.
+    fn data_metrics(&self) -> Result<DataPlaneMetrics>;
 
     /// List readable files under a prefix (cursor-paginated).
     fn files(&self, prefix: &str, page: &PageReq) -> Result<Page<FileEntry>>;
@@ -492,6 +511,51 @@ impl AcaiApi for Client {
         self.download(path, version)
     }
 
+    fn fetch_range(
+        &self,
+        path: &str,
+        version: Option<Version>,
+        offset: u64,
+        len: Option<u64>,
+    ) -> Result<Vec<u8>> {
+        self.check_read(&format!("file:{path}"))?;
+        self.acai
+            .datalake
+            .storage
+            .download_range(self.identity.project, path, version, offset, len)
+    }
+
+    fn file_stat(&self, path: &str, version: Option<Version>) -> Result<FileManifest> {
+        self.check_read(&format!("file:{path}"))?;
+        let stat = self
+            .acai
+            .datalake
+            .storage
+            .stat(self.identity.project, path, version)?;
+        Ok(FileManifest {
+            path: path.to_string(),
+            version: stat.version,
+            size: stat.size,
+            chunk_size: stat.chunk_size,
+            chunks: stat.chunks,
+        })
+    }
+
+    fn data_metrics(&self) -> Result<DataPlaneMetrics> {
+        let cas = self.acai.datalake.cas.stats();
+        let cluster = self.acai.cluster.counters();
+        Ok(DataPlaneMetrics {
+            logical_bytes: cas.logical_bytes,
+            stored_bytes: cas.stored_bytes,
+            deduped_bytes: cas.deduped_bytes,
+            dedup_hits: cas.dedup_hits,
+            chunks: cas.chunks,
+            cache_hit_bytes: cluster.cache_hit_bytes,
+            cold_transfer_bytes: cluster.cold_bytes_transferred,
+            transfer_secs: cluster.transfer_micros as f64 / 1e6,
+        })
+    }
+
     fn files(&self, prefix: &str, page: &PageReq) -> Result<Page<FileEntry>> {
         let page = page.checked()?;
         let mut entries: Vec<FileEntry> = self
@@ -855,6 +919,7 @@ mod tests {
             name: "spot".into(),
             vcpus: 4.0,
             mem_mb: 8192,
+            bandwidth_mbps: 125.0,
             price_multiplier: 0.5,
             min_nodes: 0,
             max_nodes: 2,

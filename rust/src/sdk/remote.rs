@@ -12,8 +12,8 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::api::dto::{
-    self, b64_decode, b64_encode, FileEntry, JobStatus, LogChunk, NodeStatus, Page, PageReq,
-    PoolSpec, PoolStatus, ProvisionChoice, TraceDir,
+    self, b64_decode, b64_encode, DataPlaneMetrics, FileEntry, FileManifest, JobStatus,
+    LogChunk, NodeStatus, Page, PageReq, PoolSpec, PoolStatus, ProvisionChoice, TraceDir,
 };
 use crate::api::router::percent_encode;
 use crate::autoprovision::Objective;
@@ -209,6 +209,40 @@ impl AcaiApi for RemoteClient {
         }
         let resp = self.get(&url)?;
         b64_decode(&dto::str_field(dto::as_object(&resp)?, "content_b64")?)
+    }
+
+    fn fetch_range(
+        &self,
+        path: &str,
+        version: Option<Version>,
+        offset: u64,
+        len: Option<u64>,
+    ) -> Result<Vec<u8>> {
+        let mut url = format!("/v1/files/{}?offset={offset}", percent_encode(path));
+        if let Some(l) = len {
+            url.push_str(&format!("&len={l}"));
+        }
+        if let Some(v) = version {
+            url.push_str(&format!("&version={v}"));
+        }
+        let resp = self.get(&url)?;
+        b64_decode(&dto::str_field(dto::as_object(&resp)?, "content_b64")?)
+    }
+
+    fn file_stat(&self, path: &str, version: Option<Version>) -> Result<FileManifest> {
+        let mut url = format!("/v1/files/{}/stat", percent_encode(path));
+        if let Some(v) = version {
+            url.push_str(&format!("?version={v}"));
+        }
+        FileManifest::from_json(&self.get(&url)?)
+    }
+
+    fn data_metrics(&self) -> Result<DataPlaneMetrics> {
+        let resp = self.get("/v1/metrics")?;
+        let data = resp
+            .get("data")
+            .ok_or_else(|| AcaiError::Json("metrics missing data block".into()))?;
+        DataPlaneMetrics::from_json(data)
     }
 
     fn files(&self, prefix: &str, page: &PageReq) -> Result<Page<FileEntry>> {

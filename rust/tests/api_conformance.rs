@@ -69,6 +69,38 @@ fn conformance_suite(api: &dyn AcaiApi) {
     assert_eq!(versions.items, vec![1, 2]);
     assert!(versions.next.is_none());
 
+    // ---- data plane: ranged download + chunk manifest + dedup ----
+    assert_eq!(api.fetch_range("/data/a.bin", None, 2, Some(3)).unwrap(), b"pha");
+    assert_eq!(api.fetch_range("/data/a.bin", Some(1), 3, None).unwrap(), b"ha");
+    assert_eq!(api.fetch_range("/data/a.bin", None, 0, Some(999)).unwrap(), b"alpha-2");
+    assert_eq!(api.fetch_range("/data/a.bin", None, 99, None).unwrap_err().status(), 400);
+    assert_eq!(api.fetch_range("/nope.bin", None, 0, None).unwrap_err().status(), 404);
+    let stat = api.file_stat("/data/a.bin", None).unwrap();
+    assert_eq!(stat.path, "/data/a.bin");
+    assert_eq!(stat.version, 2);
+    assert_eq!(stat.size, 7);
+    assert!(stat.chunk_size > 0);
+    assert_eq!(stat.chunks.len(), 1, "7 bytes fit one chunk");
+    assert_ne!(
+        api.file_stat("/data/a.bin", Some(1)).unwrap().chunks,
+        stat.chunks,
+        "different content, different chunk ids"
+    );
+    assert_eq!(api.file_stat("/nope.bin", None).unwrap_err().status(), 404);
+    // identical bytes uploaded under a new path store nothing new
+    let before = api.data_metrics().unwrap();
+    api.upload(&[("/dup/a-copy.bin", b"alpha-2")]).unwrap();
+    let after = api.data_metrics().unwrap();
+    assert_eq!(after.stored_bytes, before.stored_bytes, "dedup across paths");
+    assert_eq!(after.logical_bytes, before.logical_bytes + 7);
+    assert!(after.dedup_hits > before.dedup_hits);
+    assert!(after.dedup_ratio() > before.dedup_ratio());
+    assert_eq!(
+        api.file_stat("/dup/a-copy.bin", None).unwrap().chunks,
+        stat.chunks,
+        "identical content resolves to the same chunk ids"
+    );
+
     // ---- file listing with cursor pagination ----
     let p1 = api.files("/data", &page(1, None)).unwrap();
     assert_eq!(p1.items.len(), 1);
@@ -298,6 +330,7 @@ fn conformance_suite(api: &dyn AcaiApi) {
             name: "batch".into(),
             vcpus: 4.0,
             mem_mb: 8192,
+            bandwidth_mbps: 125.0,
             price_multiplier: 0.5,
             min_nodes: 2,
             max_nodes: 4,
@@ -337,6 +370,7 @@ fn conformance_suite(api: &dyn AcaiApi) {
             name: "broken".into(),
             vcpus: 4.0,
             mem_mb: 8192,
+            bandwidth_mbps: 125.0,
             price_multiplier: 0.5,
             min_nodes: 5,
             max_nodes: 2,
@@ -494,6 +528,7 @@ fn spot_sweep_outcome(api: &dyn AcaiApi) -> (u64, u64, u64) {
         name: "spot".into(),
         vcpus: 4.0,
         mem_mb: 8192,
+        bandwidth_mbps: 125.0,
         price_multiplier: 0.3,
         min_nodes: 0,
         max_nodes: 6,
@@ -579,4 +614,123 @@ fn seeded_spot_sweep_is_cheaper_and_deterministic_over_the_wire() {
     // and the wire changes nothing: the in-process platform sees the
     // exact same placement, preemption sequence, and bill
     assert_eq!(a, spot_outcome_in_process());
+}
+
+/// ISSUE-5 acceptance: the content-addressed data plane end to end.
+/// A slow two-node pool makes transfer time dominate: the first (cold)
+/// job pays the full dataset over the wire; the second job lands on
+/// the warm node via the locality tie-break and transfers nothing.
+/// Returns the bit patterns of both runtimes and costs so two runs
+/// (and the two clients) can be compared for exact determinism.
+fn locality_outcome(api: &dyn AcaiApi) -> (u64, u64, u64, u64) {
+    // 1 MB/s NIC: a ~96 KiB dataset costs ~0.1s of transfer, far above
+    // the SimClock's microsecond resolution
+    api.put_cluster_pool(&PoolSpec {
+        name: "edge".into(),
+        vcpus: 4.0,
+        mem_mb: 8192,
+        bandwidth_mbps: 1.0,
+        price_multiplier: 1.0,
+        min_nodes: 2,
+        max_nodes: 2,
+        preemption_mean_secs: 0.0,
+    })
+    .unwrap();
+
+    // a deterministic ~96 KiB dataset (two 64 KiB chunks, one partial)
+    let v1: Vec<u8> = (0..96 * 1024u32).map(|i| (i % 251) as u8).collect();
+    api.upload(&[("/ds/shard.bin", &v1)]).unwrap();
+    api.make_file_set("ds", &["/ds/shard.bin"]).unwrap();
+
+    // dedup acceptance: v2 appends 16 KiB to v1 — the shared 64 KiB
+    // prefix chunk is stored once, so the delta is far below 2x
+    let before = api.data_metrics().unwrap();
+    let mut v2 = v1.clone();
+    v2.extend((0..16 * 1024u32).map(|i| (i % 13) as u8));
+    api.upload(&[("/ds/shard.bin", &v2)]).unwrap();
+    let after = api.data_metrics().unwrap();
+    let logical_delta = after.logical_bytes - before.logical_bytes;
+    let stored_delta = after.stored_bytes - before.stored_bytes;
+    assert_eq!(logical_delta, v2.len() as u64);
+    assert!(
+        2 * stored_delta < logical_delta,
+        "re-upload sharing >=90% must store far less than it ingests: \
+         stored {stored_delta} vs logical {logical_delta}"
+    );
+    // total stored across both versions stays under 2x one version
+    assert!(
+        after.stored_bytes < 2 * v1.len() as u64 + before.stored_bytes,
+        "stored {} must undercut 2x the logical dataset {}",
+        after.stored_bytes,
+        v1.len()
+    );
+    assert!(after.dedup_ratio() > 1.0);
+
+    // cold run: every input chunk crosses the 1 MB/s wire
+    let mut cold_req = job_request("cold", "ds:1", "cold-out");
+    cold_req.pool = Some("edge".into());
+    let cold = api.await_job(api.submit_job(&cold_req).unwrap()).unwrap();
+    assert_eq!(cold.state, "finished");
+    let cold_transfer = cold.transfer_secs.expect("cold run must pay transfer");
+    assert!(cold_transfer > 0.05, "1 MB/s x 96 KiB ~ 0.1s, saw {cold_transfer}");
+
+    // warm replay: same input — placement must pick the node whose
+    // cache already holds the chunks, and transfer exactly nothing
+    let mut warm_req = job_request("warm", "ds:1", "warm-out");
+    warm_req.pool = Some("edge".into());
+    let warm = api.await_job(api.submit_job(&warm_req).unwrap()).unwrap();
+    assert_eq!(warm.state, "finished");
+    assert_eq!(warm.transfer_secs, None, "warm replay transfers nothing");
+    assert!(
+        warm.runtime_secs.unwrap() < cold.runtime_secs.unwrap(),
+        "warm {} must finish strictly earlier than cold {}",
+        warm.runtime_secs.unwrap(),
+        cold.runtime_secs.unwrap()
+    );
+    assert!(
+        warm.cost.unwrap() < cold.cost.unwrap(),
+        "warm {} must bill strictly less than cold {}",
+        warm.cost.unwrap(),
+        cold.cost.unwrap()
+    );
+
+    // the counters saw it all: one cold pull, one full cache hit
+    let dm = api.data_metrics().unwrap();
+    assert_eq!(dm.cold_transfer_bytes, v1.len() as u64);
+    assert_eq!(dm.cache_hit_bytes, v1.len() as u64);
+    assert!(dm.transfer_secs > 0.05);
+    // node listing exposes the warm cache
+    let nodes = api.cluster_nodes().unwrap();
+    let warm_nodes = nodes.iter().filter(|n| n.cached_bytes > 0).count();
+    assert_eq!(warm_nodes, 1, "exactly one edge node holds the dataset");
+
+    (
+        cold.runtime_secs.unwrap().to_bits(),
+        cold.cost.unwrap().to_bits(),
+        warm.runtime_secs.unwrap().to_bits(),
+        warm.cost.unwrap().to_bits(),
+    )
+}
+
+#[test]
+fn warm_cache_launch_is_cheaper_and_bit_identical_across_clients() {
+    // in-process client on a fresh platform, twice (replay determinism)
+    let in_process = || {
+        let acai = Arc::new(Acai::boot_default());
+        let root = acai.credentials.root_token().to_string();
+        let (_p, token) = acai.credentials.create_project(&root, "loc", "alice").unwrap();
+        let client = Client::connect(acai, &token).unwrap();
+        locality_outcome(&client)
+    };
+    let a = in_process();
+    let b = in_process();
+    assert_eq!(a, b, "same seed must replay the same transfer timeline");
+
+    // and the wire changes nothing
+    let acai = Arc::new(Acai::boot_default());
+    let root = acai.credentials.root_token().to_string();
+    let server = Server::serve(0, make_handler(acai)).unwrap();
+    let (_proj, remote) =
+        RemoteClient::create_project(server.addr(), &root, "loc", "alice").unwrap();
+    assert_eq!(a, locality_outcome(&remote), "wire and in-process must agree bitwise");
 }

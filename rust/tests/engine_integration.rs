@@ -212,10 +212,7 @@ fn cluster_saturation_requeues_and_retries() {
     // a cluster with a single small node: jobs must take turns
     let mut config = PlatformConfig::default();
     config.cluster = acai::cluster::ClusterConfig::fixed(
-        acai::cluster::NodeSpec {
-            vcpus: 2.0,
-            mem_mb: 2048,
-        },
+        acai::cluster::NodeSpec::new(2.0, 2048),
         1,
     );
     config.quota_k = 8;
@@ -243,8 +240,8 @@ fn one_saturated_pool_does_not_stall_other_pools() {
     let mut config = PlatformConfig::default();
     config.cluster = ClusterConfig {
         pools: vec![
-            PoolConfig::on_demand("small", NodeSpec { vcpus: 1.0, mem_mb: 1024 }, 1),
-            PoolConfig::on_demand("big", NodeSpec { vcpus: 8.0, mem_mb: 8192 }, 1),
+            PoolConfig::on_demand("small", NodeSpec::new(1.0, 1024), 1),
+            PoolConfig::on_demand("big", NodeSpec::new(8.0, 8192), 1),
         ],
         ..Default::default()
     };
@@ -274,7 +271,7 @@ fn one_saturated_pool_does_not_stall_other_pools() {
 fn never_placeable_submissions_are_rejected_up_front() {
     use acai::cluster::{ClusterConfig, NodeSpec};
     let mut config = PlatformConfig::default();
-    config.cluster = ClusterConfig::fixed(NodeSpec { vcpus: 4.0, mem_mb: 4096 }, 2);
+    config.cluster = ClusterConfig::fixed(NodeSpec::new(4.0, 4096), 2);
     let acai = Acai::boot(config).unwrap();
     seed_input(&acai);
     // bigger than any node the cluster can ever own: 400 at submit,
@@ -287,6 +284,42 @@ fn never_placeable_submissions_are_rejected_up_front() {
     // a same-shape job that fits is unaffected
     assert!(acai.engine.submit(job("ok", 1, ResourceConfig::new(4.0, 4096))).is_ok());
     acai.engine.run_until_idle();
+}
+
+#[test]
+fn pool_reshape_under_a_queued_job_fails_it_loudly() {
+    use acai::cluster::{ClusterConfig, NodeSpec, PoolConfig};
+    let mut config = PlatformConfig::default();
+    config.cluster = ClusterConfig {
+        pools: vec![PoolConfig::on_demand("small", NodeSpec::new(8.0, 8192), 1)],
+        ..Default::default()
+    };
+    let acai = Acai::boot(config).unwrap();
+    seed_input(&acai);
+    let pinned = |name: &str| {
+        let mut spec = job(name, 10, ResourceConfig::new(8.0, 8192));
+        spec.pool = Some("small".into());
+        spec
+    };
+    // a fills the single node; b queues behind it
+    let a = acai.engine.submit(pinned("a")).unwrap();
+    let b = acai.engine.submit(pinned("b")).unwrap();
+    assert_eq!(acai.engine.registry.get(b).unwrap().state, JobState::Queued);
+    // reshape the pool's node spec below b's request while it is queued
+    acai.cluster
+        .set_pool(PoolConfig::on_demand("small", NodeSpec::new(4.0, 4096), 1))
+        .unwrap();
+    acai.engine.run_until_idle();
+    // a (already placed on the old-shape node) drains normally; b can
+    // never fit the new shape — failed loudly, not queued forever
+    assert_eq!(acai.engine.registry.get(a).unwrap().state, JobState::Finished);
+    let rb = acai.engine.registry.get(b).unwrap();
+    assert_eq!(rb.state, JobState::Killed);
+    assert!(
+        rb.error.as_deref().unwrap_or("").contains("reshaped"),
+        "{:?}",
+        rb.error
+    );
 }
 
 #[test]

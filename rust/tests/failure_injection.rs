@@ -175,10 +175,7 @@ fn presigned_token_abuse_is_rejected() {
 /// Platform with a small fixed on-demand pool plus a cheap, revocable
 /// spot pool (the ISSUE-4 elastic substrate under storm conditions).
 fn spot_platform(seed: u64, preemption_mean: f64, checkpoint_secs: f64) -> Acai {
-    let node = NodeSpec {
-        vcpus: 4.0,
-        mem_mb: 8192,
-    };
+    let node = NodeSpec::new(4.0, 8192);
     let mut config = PlatformConfig::default();
     config.checkpoint_secs = checkpoint_secs;
     config.cluster = ClusterConfig {
@@ -267,10 +264,7 @@ fn checkpointed_resume_reworks_less_than_a_full_rerun() {
     // spot-only platform with aggressive revocation: the ~133 s job is
     // interrupted many times (mean 15 s between revocations) but
     // checkpoints every 5 s of progress
-    let node = NodeSpec {
-        vcpus: 4.0,
-        mem_mb: 8192,
-    };
+    let node = NodeSpec::new(4.0, 8192);
     let mut config = PlatformConfig::default();
     config.checkpoint_secs = 5.0;
     config.cluster = ClusterConfig {

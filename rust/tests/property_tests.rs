@@ -416,3 +416,63 @@ fn prop_log_parser_never_panics_and_tags_are_well_formed() {
         }
     });
 }
+
+#[test]
+fn prop_chunker_split_join_is_identity_and_deterministic() {
+    use acai::datalake::cas::chunk_len;
+    property("cas chunker", 25, |g| {
+        let acai = Acai::boot_default();
+        let cas = acai.datalake.cas.clone();
+        // spans empty, sub-chunk, exact-multiple, and multi-chunk sizes
+        let n = g.usize(0..200_000);
+        let bytes: Vec<u8> = (0..n).map(|_| g.usize(0..256) as u8).collect();
+        let m1 = cas.ingest(&bytes).unwrap();
+        let m2 = cas.ingest(&bytes).unwrap();
+        // INVARIANT: identical content => identical chunk ids
+        assert_eq!(m1, m2);
+        // INVARIANT: split -> join is the identity
+        assert_eq!(&**cas.materialize(&m1).unwrap(), &bytes);
+        // INVARIANT: manifest lengths partition the payload exactly
+        assert_eq!(m1.iter().map(|id| chunk_len(id)).sum::<u64>(), n as u64);
+        assert_eq!(m1.len(), n.div_ceil(cas.chunk_size()));
+        // INVARIANT: a ranged join agrees with slicing the original
+        if n > 0 {
+            let off = g.usize(0..n);
+            let len = g.usize(0..n - off + 1);
+            assert_eq!(
+                cas.materialize_range(&m1, off as u64, len as u64).unwrap(),
+                &bytes[off..off + len]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_dedup_reupload_stores_less_than_double() {
+    property("cas dedup on re-upload", 10, |g| {
+        let acai = Acai::boot_default();
+        let p = ProjectId(1);
+        let chunk = acai.datalake.cas.chunk_size();
+        // a dataset of several chunks, then an appended v2 sharing >=90%
+        let n = g.usize(3 * chunk..8 * chunk);
+        let v1: Vec<u8> = (0..n).map(|_| g.usize(0..256) as u8).collect();
+        acai.datalake.storage.upload(p, &[("/ds", &v1)]).unwrap();
+        let mut v2 = v1.clone();
+        v2.extend((0..g.usize(1..chunk / 2)).map(|_| g.usize(0..256) as u8));
+        acai.datalake.storage.upload(p, &[("/ds", &v2)]).unwrap();
+        let stats = acai.datalake.cas.stats();
+        // INVARIANT: two versions sharing almost everything store far
+        // less than two full copies
+        assert!(
+            stats.stored_bytes < 2 * v1.len() as u64,
+            "stored {} vs logical-per-version {}",
+            stats.stored_bytes,
+            v1.len()
+        );
+        // every aligned shared chunk deduped
+        assert!(stats.dedup_hits >= (v1.len() / chunk) as u64);
+        // INVARIANT: dedup is invisible to reads
+        assert_eq!(&**acai.datalake.storage.read(p, "/ds", Some(1)).unwrap(), &v1);
+        assert_eq!(&**acai.datalake.storage.read(p, "/ds", Some(2)).unwrap(), &v2);
+    });
+}
