@@ -1,6 +1,13 @@
-//! Perf: requests/sec through the in-process `/v1` handler for the hot
-//! routes (job status poll, file listing) — no sockets, so this
-//! measures routing + middleware + DTO encoding, not the kernel.
+//! Perf: requests/sec through the `/v1` edge.
+//!
+//! Section 1 drives the in-process handler directly (no sockets) for
+//! the hot routes — routing + middleware + DTO encoding cost.
+//!
+//! Section 2 is the PR-headline concurrency comparison: N keep-alive
+//! HTTP clients (1/8/32) hammering a status-poll/list/submit mix over
+//! real sockets, worker-pool server vs the thread-per-connection
+//! baseline (`Server::serve_unpooled`).  The acceptance bar is pooled
+//! req/s >= 2x unpooled at 32 clients.
 //!
 //! Context for the PR: the seed edge drove the whole engine to idle
 //! inside `POST /jobs`, so a status "poll" did not exist and submission
@@ -9,18 +16,20 @@
 //! the requests/sec budget the edge can sustain per core.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Barrier};
 use std::time::Instant;
 
 use acai::api::make_handler;
 use acai::cluster::ResourceConfig;
-use acai::httpd::Request;
+use acai::httpd::{HttpConn, Request, Server};
 use acai::json::Json;
 use acai::sdk::{AcaiApi, Client, JobRequest};
 use acai::Acai;
 
 const WARMUP: usize = 2_000;
 const ITERS: usize = 50_000;
+/// Per-client request count for the concurrent (socket) section.
+const CONC_ITERS: usize = 300;
 
 fn get(path: &str, token: &str) -> Request {
     let (path, query) = match path.split_once('?') {
@@ -106,4 +115,97 @@ fn main() {
         &get(&format!("/v1/jobs/{job}/logs?offset=0"), &token),
     );
     bench("GET /v1/healthz", &handler, &get("/v1/healthz", ""));
+
+    println!();
+    println!(
+        "concurrent clients over sockets ({CONC_ITERS} reqs/client, 75% status poll / 12.5% list / 12.5% submit):"
+    );
+    let mut pooled_32 = 0.0;
+    let mut unpooled_32 = 0.0;
+    for clients in [1usize, 8, 32] {
+        let pooled = bench_concurrent(true, clients);
+        let unpooled = bench_concurrent(false, clients);
+        println!(
+            "  {clients:>2} clients   pooled {pooled:>10.0} req/s   unpooled {unpooled:>10.0} req/s   ratio {:.2}x",
+            pooled / unpooled
+        );
+        if clients == 32 {
+            pooled_32 = pooled;
+            unpooled_32 = unpooled;
+        }
+    }
+    println!(
+        "worker pool vs thread-per-connection at 32 clients: {:.2}x",
+        pooled_32 / unpooled_32
+    );
+}
+
+/// One server mode under `clients` concurrent keep-alive connections.
+/// Every run boots a fresh platform so registry growth from one mode's
+/// submits never skews the other's list calls.
+fn bench_concurrent(pooled: bool, clients: usize) -> f64 {
+    let acai = Arc::new(Acai::boot_default());
+    let root = acai.credentials.root_token().to_string();
+    let (_p, token) = acai.credentials.create_project(&root, "bench", "u").unwrap();
+    let client = Client::connect(acai.clone(), &token).unwrap();
+    let job = client
+        .submit(JobRequest {
+            name: "poll-target".into(),
+            command: "python train_mnist.py --epoch 1".into(),
+            input_fileset: String::new(),
+            output_fileset: "out".into(),
+            resources: ResourceConfig::new(0.5, 512),
+            pool: None,
+        })
+        .unwrap();
+    client.await_job(job).unwrap();
+
+    let handler = make_handler(acai);
+    let server = if pooled {
+        Server::serve(0, handler).unwrap()
+    } else {
+        Server::serve_unpooled(0, handler).unwrap()
+    };
+    let addr = server.addr();
+
+    let submit_body = Json::obj()
+        .field("name", "conc")
+        .field("command", "python train_mnist.py --epoch 1")
+        .field("output_fileset", "out")
+        .field("vcpus", 0.5)
+        .field("mem_mb", 512u64)
+        .build()
+        .encode();
+    let poll = format!("/v1/jobs/{job}");
+
+    let barrier = Arc::new(Barrier::new(clients + 1));
+    let mut threads = Vec::with_capacity(clients);
+    for _ in 0..clients {
+        let barrier = barrier.clone();
+        let token = token.clone();
+        let poll = poll.clone();
+        let submit_body = submit_body.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut conn = HttpConn::connect(addr).unwrap();
+            let headers = [("x-acai-token", token.as_str())];
+            barrier.wait();
+            for i in 0..CONC_ITERS {
+                let resp = match i % 8 {
+                    6 => conn.request("GET", "/v1/jobs?limit=20", &headers, b"").unwrap(),
+                    7 => conn
+                        .request("POST", "/v1/jobs", &headers, submit_body.as_bytes())
+                        .unwrap(),
+                    _ => conn.request("GET", &poll, &headers, b"").unwrap(),
+                };
+                assert!(resp.status < 400, "status {}", resp.status);
+            }
+        }));
+    }
+    barrier.wait();
+    let start = Instant::now();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let secs = start.elapsed().as_secs_f64();
+    (clients * CONC_ITERS) as f64 / secs
 }

@@ -479,6 +479,69 @@ impl DataPlaneMetrics {
 }
 
 // ---------------------------------------------------------------------
+// tenancy
+// ---------------------------------------------------------------------
+
+/// One project's API-edge usage + billing counters
+/// (`GET /v1/tenant`): what the tenant admission layer has counted and
+/// what the [`crate::pricing`] request/byte anchors price it at.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantUsageReport {
+    pub project: String,
+    /// Admitted API calls.
+    pub requests: u64,
+    /// Request payload bytes admitted.
+    pub request_bytes: u64,
+    /// Response payload bytes served.
+    pub response_bytes: u64,
+    /// Calls bounced with 429 by the rate limiter (retryable).
+    pub throttled: u64,
+    /// Calls rejected for quota exhaustion (terminal).
+    pub rejected: u64,
+    /// Dollar cost of the admitted usage.
+    pub api_cost: f64,
+}
+
+impl TenantUsageReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("project", self.project.clone())
+            .field("requests", self.requests)
+            .field("request_bytes", self.request_bytes)
+            .field("response_bytes", self.response_bytes)
+            .field("throttled", self.throttled)
+            .field("rejected", self.rejected)
+            .field("api_cost", self.api_cost)
+            .build()
+    }
+
+    pub fn from_json(v: &Json) -> Result<TenantUsageReport> {
+        let obj = as_object(v)?;
+        check_fields(
+            obj,
+            &[
+                "project",
+                "requests",
+                "request_bytes",
+                "response_bytes",
+                "throttled",
+                "rejected",
+                "api_cost",
+            ],
+        )?;
+        Ok(TenantUsageReport {
+            project: str_field(obj, "project")?,
+            requests: u64_field(obj, "requests")?,
+            request_bytes: u64_field(obj, "request_bytes")?,
+            response_bytes: u64_field(obj, "response_bytes")?,
+            throttled: u64_field(obj, "throttled")?,
+            rejected: u64_field(obj, "rejected")?,
+            api_cost: f64_field(obj, "api_cost")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
 // jobs
 // ---------------------------------------------------------------------
 
@@ -677,6 +740,14 @@ pub fn validate_tags(fields: &[(String, Json)]) -> Result<()> {
         return Err(AcaiError::invalid("tags need at least one field"));
     }
     for (key, value) in fields {
+        if key == crate::docstore::VERSION_FIELD {
+            // the optimistic-concurrency version counter is platform
+            // managed; a user tag overwriting it would break every
+            // subsequent expected_version guard on the document
+            return Err(AcaiError::invalid(
+                "tag key \"version\" is reserved for optimistic concurrency",
+            ));
+        }
         if matches!(value, Json::Arr(_) | Json::Obj(_)) {
             return Err(AcaiError::invalid(format!(
                 "tag {key:?} must be a scalar (indexable) value"
@@ -1308,6 +1379,36 @@ mod tests {
         assert!(b64_decode("Zm=v").is_err()); // pad in the middle of a chunk
         assert!(b64_decode("Zm8=Zm8=").is_err()); // pad before the final chunk
         assert!(b64_decode("====").is_err());
+    }
+
+    #[test]
+    fn tenant_usage_report_round_trips() {
+        let report = TenantUsageReport {
+            project: "proj-3".into(),
+            requests: 120,
+            request_bytes: 4096,
+            response_bytes: 65536,
+            throttled: 7,
+            rejected: 2,
+            api_cost: 0.000054,
+        };
+        let back = TenantUsageReport::from_json(&report.to_json()).unwrap();
+        assert_eq!(back, report);
+        // strict codec: unknown fields are 400
+        let v = crate::json::parse(
+            r#"{"project":"p","requests":1,"request_bytes":0,"response_bytes":0,"throttled":0,"rejected":0,"api_cost":0,"extra":1}"#,
+        )
+        .unwrap();
+        assert_eq!(TenantUsageReport::from_json(&v).unwrap_err().status(), 400);
+    }
+
+    #[test]
+    fn version_tag_key_is_reserved() {
+        let err =
+            validate_tags(&[("version".into(), Json::from(99u64))]).unwrap_err();
+        assert_eq!(err.status(), 400);
+        assert!(err.to_string().contains("reserved"), "{err}");
+        assert!(validate_tags(&[("model".into(), Json::from("BERT"))]).is_ok());
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! - [`router`] — path templates with typed parameters
 //!   (`GET /v1/jobs/{id}`), percent-decoding, a 405-vs-404 distinction,
 //!   and an ordered middleware chain (request-id → per-route metrics →
-//!   token auth) around every matched handler;
+//!   token auth → tenant admission) around every matched handler;
 //! - [`dto`] — typed payload codecs with strict edge validation
 //!   (unknown fields and unknown kinds are 400, never silent defaults)
 //!   and the uniform error envelope
@@ -24,6 +24,7 @@ pub mod dto;
 pub mod metrics;
 pub mod router;
 pub mod routes;
+pub mod tenant;
 
 pub use dto::{
     DataPlaneMetrics, FileEntry, FileManifest, JobStatus, LogChunk, Page, PageReq,
@@ -31,6 +32,7 @@ pub use dto::{
 };
 pub use metrics::{ApiMetrics, RouteStats};
 pub use router::{ApiCtx, Middleware, PathParams, Query, Router};
+pub use tenant::{TenantConfig, TenantLayer, TenantRegistry, TenantUsage};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -86,7 +88,10 @@ impl Middleware for AuthLayer {
             let token = req
                 .header("x-acai-token")
                 .ok_or_else(|| AcaiError::Unauthorized("missing x-acai-token".into()))?;
-            let client = Client::connect(ctx.acai.clone(), token)?;
+            // edge connections skip SDK self-admission: the TenantLayer
+            // right after this is the single admission point, so a
+            // request is never double-charged a rate-limit token
+            let client = Client::connect_edge(ctx.acai.clone(), token)?;
             ctx.set_client(client, token.to_string());
         }
         next(req, ctx)
@@ -107,6 +112,7 @@ pub fn make_handler(acai: Arc<Acai>) -> Handler {
             metrics: metrics.clone(),
         }) as Arc<dyn Middleware>,
         Arc::new(AuthLayer) as Arc<dyn Middleware>,
+        Arc::new(TenantLayer) as Arc<dyn Middleware>,
     ]);
     let next_id = Arc::new(AtomicU64::new(1));
     Arc::new(move |req: &Request| {

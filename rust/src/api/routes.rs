@@ -11,11 +11,12 @@
 //! | file sets   | `GET/POST /v1/filesets`, `GET /v1/filesets/{name}/trace`, `.../lineage` |
 //! | jobs        | `POST /v1/jobs` (202), `GET /v1/jobs`, `GET /v1/jobs/{id}`, `GET /v1/jobs/{id}/logs`, `POST /v1/jobs/{id}/kill` |
 //! | experiments | `POST /v1/experiments` (202), `GET /v1/experiments`, `GET /v1/experiments/{id}`, `.../trials`, `.../best?metric=&mode=` |
-//! | metadata    | `GET /v1/metadata/{kind}/{id}`, `POST /v1/metadata/{kind}/query`, `POST /v1/metadata/{kind}/{id}/tags` |
+//! | metadata    | `GET /v1/metadata/{kind}/{id}`, `POST /v1/metadata/{kind}/query`, `POST /v1/metadata/{kind}/{id}/tags` (body may carry `expected_version` for an optimistic-concurrency guard; stale = 409) |
 //! | provenance  | `GET /v1/provenance` |
 //! | profiles    | `POST /v1/profiles`, `POST /v1/autoprovision` |
 //! | cluster     | `GET /v1/cluster/pools`, `PUT /v1/cluster/pools` (upsert one pool; project-admin), `GET /v1/cluster/nodes` |
-//! | operational | `GET /v1/healthz` (public), `GET /v1/metrics` (per-route stats + cluster/autoscaler/preemption counters + data-plane dedup/transfer block) |
+//! | tenancy     | `GET /v1/tenant` (this project's usage/billing counters; exempt from admission) |
+//! | operational | `GET /v1/healthz` (public), `GET /v1/metrics` (per-route stats + cluster/autoscaler/preemption counters + data-plane dedup/transfer block + per-tenant admission counters) |
 
 use std::sync::Arc;
 
@@ -93,6 +94,9 @@ pub fn v1_router(metrics: Arc<ApiMetrics>) -> Router {
     r.route("PUT", "/v1/cluster/pools", h(put_cluster_pool));
     r.route("GET", "/v1/cluster/nodes", h(get_cluster_nodes));
 
+    // ---- tenancy ----
+    r.route("GET", "/v1/tenant", h(get_tenant_usage));
+
     // ---- operational ----
     r.route(
         "GET",
@@ -111,6 +115,10 @@ pub fn v1_router(metrics: Arc<ApiMetrics>) -> Router {
                         dto::cluster_counters_to_json(&ctx.acai.cluster.counters()),
                     )
                     .field("data", ctx.client()?.data_metrics()?.to_json())
+                    .field(
+                        "tenants",
+                        ctx.acai.tenants.to_json(&ctx.acai.pricing),
+                    )
                     .build(),
             ))
         }),
@@ -504,12 +512,16 @@ fn query_metadata(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
     Ok(Response::json(&Json::obj().field("hits", Json::Arr(rows)).build()))
 }
 
+/// `POST /v1/metadata/{kind}/{id}/tags` — body `{"fields": {...}}`,
+/// optionally guarded with `"expected_version": n` (write only if the
+/// document is still at version `n`; stale = 409, nothing written).
 fn tag_metadata(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
     let kind = dto::kind_from_str(ctx.params.raw("kind")?)?;
     let id = ctx.params.raw("id")?.to_string();
     let body = req.json()?;
     let obj = dto::as_object(&body)?;
-    dto::check_fields(obj, &["fields"])?;
+    dto::check_fields(obj, &["fields", "expected_version"])?;
+    let expected = dto::opt_u64_field(obj, "expected_version")?;
     let fields_obj = match obj.get("fields") {
         Some(Json::Obj(o)) => o,
         _ => return Err(AcaiError::invalid("field \"fields\" must be an object")),
@@ -519,10 +531,27 @@ fn tag_metadata(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
         .map(|(k, v)| (k.to_string(), v.clone()))
         .collect();
     // value validation is the client's (shared dto::validate_tags)
-    ctx.client()?.tag_artifact(kind, &id, &fields)?;
+    let version = ctx
+        .client()?
+        .tag_artifact_guarded(kind, &id, &fields, expected)?;
     Ok(Response::json(
-        &Json::obj().field("tagged", fields.len()).build(),
+        &Json::obj()
+            .field("tagged", fields.len())
+            .field("version", version)
+            .build(),
     ))
+}
+
+// ---------------------------------------------------------------------
+// tenancy
+// ---------------------------------------------------------------------
+
+/// `GET /v1/tenant` — the caller's usage + billing counters.  Exempt
+/// from tenant admission (see `tenant::is_exempt`): a throttled or
+/// quota-capped project must still be able to observe why.
+fn get_tenant_usage(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let report = ctx.client()?.tenant_usage()?;
+    Ok(Response::json(&report.to_json()))
 }
 
 // ---------------------------------------------------------------------

@@ -1,0 +1,369 @@
+//! Multi-tenant admission control for the REST edge: per-project
+//! token-bucket rate limiting, lifetime request/byte quotas, and the
+//! usage counters the billing surface reads (vss's `store_id`-level
+//! throttling + billing model, mapped onto ACAI projects).
+//!
+//! Every authenticated request passes [`TenantLayer`] after auth:
+//!
+//! - **rate limit** — a token bucket per project
+//!   ([`TenantConfig::rate_limit_rps`] refill,
+//!   [`TenantConfig::rate_limit_burst`] capacity).  An empty bucket
+//!   answers `429` through the uniform envelope with a `retry-after`
+//!   header carrying the exact refill wait, so well-behaved SDK
+//!   clients back off precisely instead of hammering;
+//! - **quotas** — lifetime admitted-request and transferred-byte caps.
+//!   Exhausted quotas reject hard (`429` *without* `retry-after`:
+//!   waiting will not help);
+//! - **usage accounting** — requests, request/response bytes,
+//!   throttle and reject counts per project, surfaced via
+//!   `GET /v1/tenant`, folded into `GET /v1/metrics`, and priced by
+//!   [`PricingModel::api_cost`].
+//!
+//! Defaults are fully permissive (rate limiting off, no quotas), so a
+//! platform booted with [`crate::config::PlatformConfig::default`]
+//! behaves exactly as before.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::error::{AcaiError, Result};
+use crate::httpd::{Request, Response};
+use crate::ids::ProjectId;
+use crate::json::Json;
+use crate::pricing::PricingModel;
+
+use super::router::{ApiCtx, Middleware, Next};
+
+/// How long an in-process SDK call waits out its own rate limit before
+/// surfacing `Exhausted` (the remote client retries over the wire
+/// instead, steered by `retry-after`).
+const SELF_ADMIT_MAX_WAIT: Duration = Duration::from_secs(2);
+
+/// Per-project admission policy.  The defaults disable everything.
+#[derive(Debug, Clone)]
+pub struct TenantConfig {
+    /// Token-bucket refill rate, requests/second.  `0.0` disables rate
+    /// limiting.
+    pub rate_limit_rps: f64,
+    /// Token-bucket capacity (burst allowance), in requests.
+    pub rate_limit_burst: f64,
+    /// Lifetime admitted-request cap per project (`None` = unlimited).
+    pub request_quota: Option<u64>,
+    /// Lifetime transferred-byte cap per project, request + response
+    /// bodies combined (`None` = unlimited).
+    pub byte_quota: Option<u64>,
+}
+
+impl Default for TenantConfig {
+    fn default() -> Self {
+        Self {
+            rate_limit_rps: 0.0,
+            rate_limit_burst: 32.0,
+            request_quota: None,
+            byte_quota: None,
+        }
+    }
+}
+
+/// Outcome of one admission decision.
+#[derive(Debug)]
+pub enum Admission {
+    /// Serve the request (it has been counted).
+    Granted,
+    /// Rate-limited: retry after the given wait refills one token.
+    RetryAfter(Duration),
+    /// A lifetime quota is exhausted — retrying will not help.
+    QuotaExceeded(&'static str),
+}
+
+/// Per-project usage counters (the billing surface).
+#[derive(Debug, Clone, Default)]
+pub struct TenantUsage {
+    /// Requests admitted (and therefore served).
+    pub requests: u64,
+    /// Request-body bytes admitted.
+    pub request_bytes: u64,
+    /// Response-body bytes returned.
+    pub response_bytes: u64,
+    /// Requests bounced by the rate limiter (retryable 429s).
+    pub throttled: u64,
+    /// Requests rejected by an exhausted quota (hard 429s).
+    pub rejected: u64,
+}
+
+struct TenantState {
+    /// Token-bucket level at `refilled`.
+    tokens: f64,
+    refilled: Instant,
+    usage: TenantUsage,
+}
+
+/// All projects' admission state, shared platform-wide.
+pub struct TenantRegistry {
+    config: TenantConfig,
+    states: Mutex<HashMap<ProjectId, TenantState>>,
+}
+
+impl TenantRegistry {
+    pub fn new(config: TenantConfig) -> TenantRegistry {
+        TenantRegistry {
+            config,
+            states: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The policy this registry enforces.
+    pub fn config(&self) -> &TenantConfig {
+        &self.config
+    }
+
+    /// One admission decision for `project` carrying `request_bytes`
+    /// of body.  Quotas are checked first (hard rejections), then the
+    /// token bucket; a granted request is counted immediately.
+    pub fn admit(&self, project: ProjectId, request_bytes: u64) -> Admission {
+        let mut states = self.states.lock().unwrap();
+        let burst = self.config.rate_limit_burst.max(1.0);
+        let state = states.entry(project).or_insert_with(|| TenantState {
+            tokens: burst,
+            refilled: Instant::now(),
+            usage: TenantUsage::default(),
+        });
+        if let Some(q) = self.config.request_quota {
+            if state.usage.requests >= q {
+                state.usage.rejected += 1;
+                return Admission::QuotaExceeded("request quota exhausted");
+            }
+        }
+        if let Some(q) = self.config.byte_quota {
+            let transferred = state.usage.request_bytes + state.usage.response_bytes;
+            if transferred + request_bytes > q {
+                state.usage.rejected += 1;
+                return Admission::QuotaExceeded("byte quota exhausted");
+            }
+        }
+        let rps = self.config.rate_limit_rps;
+        if rps > 0.0 {
+            let now = Instant::now();
+            let elapsed = now.duration_since(state.refilled).as_secs_f64();
+            state.tokens = (state.tokens + elapsed * rps).min(burst);
+            state.refilled = now;
+            if state.tokens < 1.0 {
+                state.usage.throttled += 1;
+                let wait = (1.0 - state.tokens) / rps;
+                return Admission::RetryAfter(Duration::from_secs_f64(wait));
+            }
+            state.tokens -= 1.0;
+        }
+        state.usage.requests += 1;
+        state.usage.request_bytes += request_bytes;
+        Admission::Granted
+    }
+
+    /// Admission for in-process SDK calls: waits out short rate-limit
+    /// stalls (bounded by [`SELF_ADMIT_MAX_WAIT`]) and surfaces
+    /// [`AcaiError::Exhausted`] on quota exhaustion or timeout.
+    pub fn admit_blocking(&self, project: ProjectId, request_bytes: u64) -> Result<()> {
+        let deadline = Instant::now() + SELF_ADMIT_MAX_WAIT;
+        loop {
+            match self.admit(project, request_bytes) {
+                Admission::Granted => return Ok(()),
+                Admission::QuotaExceeded(what) => {
+                    return Err(AcaiError::Exhausted(format!("{what} for {project}")))
+                }
+                Admission::RetryAfter(wait) => {
+                    if Instant::now() + wait > deadline {
+                        return Err(AcaiError::Exhausted(format!(
+                            "rate limit exceeded for {project}"
+                        )));
+                    }
+                    std::thread::sleep(wait.min(Duration::from_millis(50)));
+                }
+            }
+        }
+    }
+
+    /// Fold a served response's bytes into the project's usage.
+    pub fn record_response(&self, project: ProjectId, bytes: u64) {
+        let mut states = self.states.lock().unwrap();
+        if let Some(state) = states.get_mut(&project) {
+            state.usage.response_bytes += bytes;
+        }
+    }
+
+    /// One project's usage counters (zeros if it never called).
+    pub fn usage(&self, project: ProjectId) -> TenantUsage {
+        self.states
+            .lock()
+            .unwrap()
+            .get(&project)
+            .map(|s| s.usage.clone())
+            .unwrap_or_default()
+    }
+
+    /// The `tenants` block of `GET /v1/metrics`: per-project counters
+    /// plus the priced API cost, project-ordered for determinism.
+    pub fn to_json(&self, pricing: &PricingModel) -> Json {
+        let states = self.states.lock().unwrap();
+        let mut projects: Vec<(&ProjectId, &TenantState)> = states.iter().collect();
+        projects.sort_by_key(|(p, _)| **p);
+        let rows: Vec<Json> = projects
+            .into_iter()
+            .map(|(project, state)| {
+                let u = &state.usage;
+                Json::obj()
+                    .field("project", project.to_string())
+                    .field("requests", u.requests)
+                    .field("request_bytes", u.request_bytes)
+                    .field("response_bytes", u.response_bytes)
+                    .field("throttled", u.throttled)
+                    .field("rejected", u.rejected)
+                    .field(
+                        "api_cost",
+                        pricing.api_cost(u.requests, u.request_bytes + u.response_bytes),
+                    )
+                    .build()
+            })
+            .collect();
+        Json::obj()
+            .field("rate_limit_rps", self.config.rate_limit_rps)
+            .field("rate_limit_burst", self.config.rate_limit_burst)
+            .field("projects", Json::Arr(rows))
+            .build()
+    }
+}
+
+/// Routes every token can hit even once throttled/quota-exhausted —
+/// usage must stay observable or a capped project cannot find out why
+/// its calls bounce.
+fn is_exempt(route: &str) -> bool {
+    matches!(route, "GET /v1/metrics" | "GET /v1/tenant")
+}
+
+/// The admission middleware.  Runs after auth (it needs the project)
+/// and before the handler; a rate-limited request is answered `429`
+/// **with** `retry-after` through the uniform envelope, which the
+/// error path of the middleware chain cannot carry — hence the direct
+/// `Ok(429)` response here.
+pub struct TenantLayer;
+
+impl Middleware for TenantLayer {
+    fn call(&self, req: &Request, ctx: &mut ApiCtx, next: Next<'_>) -> Result<Response> {
+        if ctx.public || is_exempt(&ctx.route) {
+            return next(req, ctx);
+        }
+        let project = ctx.client()?.identity().project;
+        let acai = ctx.acai.clone();
+        match acai.tenants.admit(project, req.body.len() as u64) {
+            Admission::Granted => {
+                let resp = next(req, ctx)?;
+                acai.tenants
+                    .record_response(project, resp.body.len() as u64);
+                Ok(resp)
+            }
+            Admission::RetryAfter(wait) => {
+                let secs = wait.as_secs_f64().max(0.001);
+                let e = AcaiError::Exhausted(format!(
+                    "rate limit exceeded for {project}; retry after {secs:.3}s"
+                ));
+                let mut resp = Response::error_with_request_id(&e, Some(&ctx.request_id));
+                resp.headers.push(("retry-after".into(), format!("{secs:.3}")));
+                Ok(resp)
+            }
+            Admission::QuotaExceeded(what) => {
+                Err(AcaiError::Exhausted(format!("{what} for {project}")))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: ProjectId = ProjectId(1);
+
+    #[test]
+    fn permissive_defaults_admit_everything() {
+        let reg = TenantRegistry::new(TenantConfig::default());
+        for _ in 0..1000 {
+            assert!(matches!(reg.admit(P, 10), Admission::Granted));
+        }
+        let u = reg.usage(P);
+        assert_eq!(u.requests, 1000);
+        assert_eq!(u.request_bytes, 10_000);
+        assert_eq!(u.throttled, 0);
+        assert_eq!(u.rejected, 0);
+    }
+
+    #[test]
+    fn token_bucket_throttles_then_refills() {
+        let reg = TenantRegistry::new(TenantConfig {
+            rate_limit_rps: 1000.0,
+            rate_limit_burst: 2.0,
+            ..TenantConfig::default()
+        });
+        assert!(matches!(reg.admit(P, 0), Admission::Granted));
+        assert!(matches!(reg.admit(P, 0), Admission::Granted));
+        // bucket empty: the wait must be a positive sub-burst interval
+        match reg.admit(P, 0) {
+            Admission::RetryAfter(wait) => {
+                assert!(wait > Duration::ZERO && wait <= Duration::from_millis(2), "{wait:?}")
+            }
+            other => panic!("expected RetryAfter, got {other:?}"),
+        }
+        assert_eq!(reg.usage(P).throttled, 1);
+        // a refill interval later the bucket admits again
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(matches!(reg.admit(P, 0), Admission::Granted));
+    }
+
+    #[test]
+    fn request_quota_rejects_hard() {
+        let reg = TenantRegistry::new(TenantConfig {
+            request_quota: Some(2),
+            ..TenantConfig::default()
+        });
+        assert!(matches!(reg.admit(P, 0), Admission::Granted));
+        assert!(matches!(reg.admit(P, 0), Admission::Granted));
+        assert!(matches!(reg.admit(P, 0), Admission::QuotaExceeded(_)));
+        // quota exhaustion is terminal, unlike a throttle
+        assert!(matches!(reg.admit(P, 0), Admission::QuotaExceeded(_)));
+        assert_eq!(reg.usage(P).rejected, 2);
+        // another project is unaffected
+        assert!(matches!(reg.admit(ProjectId(2), 0), Admission::Granted));
+    }
+
+    #[test]
+    fn byte_quota_counts_both_directions() {
+        let reg = TenantRegistry::new(TenantConfig {
+            byte_quota: Some(100),
+            ..TenantConfig::default()
+        });
+        assert!(matches!(reg.admit(P, 40), Admission::Granted));
+        reg.record_response(P, 50);
+        // 40 + 50 already transferred: 20 more would cross 100
+        assert!(matches!(reg.admit(P, 20), Admission::QuotaExceeded(_)));
+        assert!(matches!(reg.admit(P, 5), Admission::Granted));
+    }
+
+    #[test]
+    fn admit_blocking_waits_out_short_throttles() {
+        let reg = TenantRegistry::new(TenantConfig {
+            rate_limit_rps: 500.0,
+            rate_limit_burst: 1.0,
+            ..TenantConfig::default()
+        });
+        for _ in 0..5 {
+            reg.admit_blocking(P, 0).unwrap();
+        }
+        assert_eq!(reg.usage(P).requests, 5);
+        let reg = TenantRegistry::new(TenantConfig {
+            request_quota: Some(1),
+            ..TenantConfig::default()
+        });
+        reg.admit_blocking(P, 0).unwrap();
+        let err = reg.admit_blocking(P, 0).unwrap_err();
+        assert_eq!(err.status(), 429);
+    }
+}

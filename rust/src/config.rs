@@ -29,6 +29,12 @@ pub struct PlatformConfig {
     pub artifacts_dir: Option<std::path::PathBuf>,
     /// Journal path for the kvstore (None = in-memory).
     pub journal: Option<std::path::PathBuf>,
+    /// REST-edge worker-pool sizing and connection cap
+    /// (`acai serve` / [`crate::httpd::Server::serve_with`]).
+    pub http: crate::httpd::ServerConfig,
+    /// Per-project admission policy (rate limits + quotas).  Defaults
+    /// are fully permissive.
+    pub tenant: crate::api::tenant::TenantConfig,
 }
 
 impl Default for PlatformConfig {
@@ -42,6 +48,8 @@ impl Default for PlatformConfig {
             seed: 0xACA1,
             artifacts_dir: None,
             journal: None,
+            http: crate::httpd::ServerConfig::default(),
+            tenant: crate::api::tenant::TenantConfig::default(),
         }
     }
 }

@@ -26,6 +26,11 @@ use std::sync::Arc;
 /// hot path materializes thousands of documents per call.
 pub type Doc = Arc<Json>;
 
+/// The reserved per-document version counter maintained by
+/// [`DocStore::update_guarded`] — the optimistic-concurrency guard
+/// (vss `global_version` semantics).  User tags may not shadow it.
+pub const VERSION_FIELD: &str = "version";
+
 use crate::error::{AcaiError, Result};
 use crate::json::Json;
 use crate::storage::{Rmw, ShardedMap, Table};
@@ -310,6 +315,60 @@ impl DocStore {
         });
     }
 
+    /// Merge key-value pairs into an existing document, guarded by an
+    /// optimistic version check (vss `global_version` semantics).  The
+    /// whole read-check-merge runs under the collection's shard lock:
+    ///
+    /// - `expected = Some(v)` — write only if the document's current
+    ///   [`VERSION_FIELD`] equals `v` (a document without one counts
+    ///   as version 0); a mismatch is a [`AcaiError::Conflict`] (409)
+    ///   and nothing is written;
+    /// - `expected = None` — unconditional merge (the legacy
+    ///   [`DocStore::update`] behavior).
+    ///
+    /// Every successful write bumps [`VERSION_FIELD`]; the new version
+    /// is returned so callers can chain guarded writes.
+    pub fn update_guarded(
+        &self,
+        collection: &str,
+        id: &str,
+        fields: &[(String, Json)],
+        expected: Option<u64>,
+    ) -> Result<u64> {
+        self.write(collection, |coll| {
+            let current = coll
+                .docs
+                .get(id)
+                .and_then(|doc| doc.get(VERSION_FIELD))
+                .and_then(Json::as_u64)
+                .unwrap_or(0);
+            if let Some(want) = expected {
+                if want != current {
+                    return Err(AcaiError::conflict(format!(
+                        "{id}: expected version {want}, current is {current}"
+                    )));
+                }
+            }
+            let doc = coll
+                .docs
+                .remove(id)
+                .unwrap_or_else(|| Arc::new(Json::obj().build()));
+            coll.unindex_doc(id, &doc);
+            // copy-on-write: only updates pay a deep clone
+            let mut doc = (*doc).clone();
+            let next = current + 1;
+            if let Json::Obj(obj) = &mut doc {
+                for (k, v) in fields {
+                    obj.set(k.clone(), v.clone());
+                }
+                obj.set(VERSION_FIELD.to_string(), Json::from(next));
+            }
+            coll.index_doc(id, &doc);
+            coll.docs.insert(id.to_string(), Arc::new(doc));
+            Ok(next)
+        })
+    }
+
     /// Fetch by id.
     pub fn get(&self, collection: &str, id: &str) -> Option<Doc> {
         self.read(collection, |coll| coll.and_then(|c| c.docs.get(id).cloned()))
@@ -559,6 +618,44 @@ mod tests {
         // old index entry must be gone
         let low = ds.find("jobs", &[Clause::eq("precision", 0.4)]).unwrap();
         assert!(low.is_empty());
+    }
+
+    #[test]
+    fn guarded_update_enforces_expected_version() {
+        let ds = seeded();
+        // unguarded write on a versionless doc assigns version 1
+        let v = ds
+            .update_guarded("jobs", "job-1", &[("precision".into(), Json::from(0.5))], None)
+            .unwrap();
+        assert_eq!(v, 1);
+        // matching guard writes and bumps
+        let v = ds
+            .update_guarded(
+                "jobs",
+                "job-1",
+                &[("precision".into(), Json::from(0.6))],
+                Some(1),
+            )
+            .unwrap();
+        assert_eq!(v, 2);
+        // stale guard conflicts and writes nothing
+        let err = ds
+            .update_guarded(
+                "jobs",
+                "job-1",
+                &[("precision".into(), Json::from(0.0))],
+                Some(1),
+            )
+            .unwrap_err();
+        assert_eq!(err.status(), 409);
+        let doc = ds.get("jobs", "job-1").unwrap();
+        assert_eq!(doc.get("precision").and_then(Json::as_f64), Some(0.6));
+        assert_eq!(doc.get(VERSION_FIELD).and_then(Json::as_u64), Some(2));
+        // a guard on a fresh doc: expected 0 creates it at version 1
+        let v = ds
+            .update_guarded("jobs", "job-9", &[("model".into(), Json::from("m"))], Some(0))
+            .unwrap();
+        assert_eq!(v, 1);
     }
 
     #[test]

@@ -2,18 +2,29 @@
 //! plumbing (paper §4.1: an Apache reverse proxy redirects external
 //! HTTPS to the credential server; services speak plain HTTP internally).
 //!
-//! One OS thread per connection with HTTP/1.1 keep-alive (requests are
-//! served sequentially per connection until the peer closes or sends
-//! `Connection: close`), bodies framed by `Content-Length`.  Enough
-//! surface for the ACAI REST edge (`acai serve`) and the
-//! credential-server redirect flow, with hard input limits so a
-//! misbehaving client cannot wedge a service.
+//! The server is a bounded **worker pool**: a blocking accept thread
+//! (which survives transient errors such as EMFILE with bounded
+//! backoff) registers connections on a shared ready-queue, and N pool
+//! threads pull connections off it to serve pipelined HTTP/1.1
+//! keep-alive requests with per-connection reusable read/write
+//! buffers.  A connection with no request in flight is parked back on
+//! the queue after a short probe, so a stalled or slow-loris client
+//! occupies at most one worker for one bounded request timeout while
+//! every other connection keeps being served.  Beyond
+//! [`ServerConfig::max_connections`] live connections the server sheds
+//! new arrivals with a graceful `503` + `retry-after` instead of
+//! accepting unboundedly.  Bodies are framed by `Content-Length`, with
+//! hard input limits so a misbehaving client cannot wedge a service.
+//!
+//! [`Server::serve_unpooled`] keeps the original thread-per-connection
+//! model alive as the comparison baseline for `benches/perf_api.rs`.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::error::{AcaiError, Result};
 use crate::json::Json;
@@ -21,6 +32,26 @@ use crate::json::Json;
 /// Maximum header block size (16 KiB) and body size (32 MiB).
 const MAX_HEADER_BYTES: usize = 16 * 1024;
 const MAX_BODY_BYTES: usize = 32 * 1024 * 1024;
+
+/// How long a worker waits for the first byte of the next request
+/// before parking the connection back on the ready-queue.
+const PROBE_TIMEOUT: Duration = Duration::from_millis(2);
+
+/// Once request bytes are in flight the sender gets this long to
+/// finish the request; a stall past it closes the connection.
+const REQUEST_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Parked connections with no traffic for this long are dropped.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Fairness bound: a worker serves at most this many pipelined
+/// requests per turn before the connection goes back to the queue.
+const MAX_TURN_REQUESTS: usize = 64;
+
+/// Accept-error backoff bounds (satellite fix: a transient accept
+/// failure must not kill the accept thread).
+const ACCEPT_BACKOFF_START: Duration = Duration::from_millis(1);
+const ACCEPT_BACKOFF_MAX: Duration = Duration::from_millis(100);
 
 /// A parsed HTTP request.
 #[derive(Debug, Clone)]
@@ -62,6 +93,15 @@ impl Response {
             headers: vec![],
             body: vec![],
         }
+    }
+
+    /// Case-insensitive header lookup (clients inspecting a decoded
+    /// response, e.g. `retry-after`).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
     }
 
     /// 200 with a JSON body.
@@ -125,6 +165,7 @@ impl Response {
             409 => "Conflict",
             422 => "Unprocessable Entity",
             429 => "Too Many Requests",
+            503 => "Service Unavailable",
             _ => "Internal Server Error",
         }
     }
@@ -133,42 +174,235 @@ impl Response {
 /// Request handler.
 pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
 
+/// Worker-pool sizing and admission bounds for [`Server::serve_with`].
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Pool threads.  `0` means `available_parallelism` (floored at 2
+    /// so one stalled client can never starve the whole pool).
+    pub workers: usize,
+    /// Live-connection cap; arrivals beyond it are shed with a
+    /// graceful `503` + `retry-after` instead of queueing unboundedly.
+    pub max_connections: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            workers: 0,
+            max_connections: 256,
+        }
+    }
+}
+
+impl ServerConfig {
+    fn pool_size(&self) -> usize {
+        let n = if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        };
+        n.max(2)
+    }
+}
+
+/// A server-side connection owned by the worker pool between turns.
+/// Read/write buffers live here so keep-alive requests reuse them
+/// instead of reallocating per request; the live-connection count is
+/// tied to this struct's lifetime.
+struct Conn {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+    /// Coalesced response bytes (status line + headers + body).
+    wbuf: Vec<u8>,
+    /// Request-body buffer, reclaimed after each dispatch.
+    body_buf: Vec<u8>,
+    /// Request-line buffer (probe may park a partial line here).
+    line: String,
+    last_active: Instant,
+    /// Fresh from accept or just served: worth a short blocking probe.
+    /// Parked connections get a nonblocking peek instead.
+    hot: bool,
+    live: Arc<AtomicUsize>,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, live: Arc<AtomicUsize>) -> Result<Conn> {
+        let reader = BufReader::new(stream.try_clone()?);
+        live.fetch_add(1, Ordering::SeqCst);
+        Ok(Conn {
+            stream,
+            reader,
+            wbuf: Vec::with_capacity(512),
+            body_buf: Vec::new(),
+            line: String::new(),
+            last_active: Instant::now(),
+            hot: true,
+            live,
+        })
+    }
+
+    /// Nonblocking readiness check for a parked connection.
+    fn readiness(&mut self) -> Readiness {
+        // pipelined bytes already buffered count as ready
+        if !self.reader.buffer().is_empty() {
+            return Readiness::Ready;
+        }
+        if self.stream.set_nonblocking(true).is_err() {
+            return Readiness::Closed;
+        }
+        let mut byte = [0u8; 1];
+        let peeked = self.stream.peek(&mut byte);
+        if self.stream.set_nonblocking(false).is_err() {
+            return Readiness::Closed;
+        }
+        match peeked {
+            Ok(0) => Readiness::Closed,
+            Ok(_) => Readiness::Ready,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Readiness::NotYet,
+            Err(_) => Readiness::Closed,
+        }
+    }
+}
+
+impl Drop for Conn {
+    fn drop(&mut self) {
+        self.live.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+enum Readiness {
+    Ready,
+    NotYet,
+    Closed,
+}
+
+/// Shared ready-queue between the accept thread and the worker pool.
+#[derive(Default)]
+struct ConnQueue {
+    inner: Mutex<VecDeque<Conn>>,
+    ready: Condvar,
+}
+
+impl ConnQueue {
+    fn push(&self, conn: Conn) {
+        self.inner.lock().unwrap().push_back(conn);
+        self.ready.notify_one();
+    }
+
+    /// Blocking pop; `None` once the server is stopping.
+    fn pop(&self, stop: &AtomicBool) -> Option<Conn> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                return None;
+            }
+            if let Some(c) = q.pop_front() {
+                return Some(c);
+            }
+            let (guard, _) = self
+                .ready
+                .wait_timeout(q, Duration::from_millis(10))
+                .unwrap();
+            q = guard;
+        }
+    }
+}
+
 /// A running HTTP server; shuts down on drop.
 pub struct Server {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    thread: Option<std::thread::JoinHandle<()>>,
+    shed: Arc<AtomicU64>,
+    live: Arc<AtomicUsize>,
+    queue: Option<Arc<ConnQueue>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    workers: usize,
+    max_connections: usize,
 }
 
 impl Server {
-    /// Bind 127.0.0.1 on an ephemeral (or given) port and serve.
+    /// Bind 127.0.0.1 on an ephemeral (or given) port and serve with
+    /// the default worker-pool configuration.
     pub fn serve(port: u16, handler: Handler) -> Result<Server> {
+        Self::serve_with(port, handler, ServerConfig::default())
+    }
+
+    /// Worker-pool server with explicit sizing/admission bounds.
+    pub fn serve_with(port: u16, handler: Handler, config: ServerConfig) -> Result<Server> {
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let shed = Arc::new(AtomicU64::new(0));
+        let live = Arc::new(AtomicUsize::new(0));
+        let queue = Arc::new(ConnQueue::default());
+        let max_connections = config.max_connections.max(1);
+
+        let mut threads = Vec::with_capacity(config.pool_size() + 1);
+        for _ in 0..config.pool_size() {
+            let queue = queue.clone();
+            let handler = handler.clone();
+            let stop = stop.clone();
+            threads.push(std::thread::spawn(move || {
+                worker_loop(&queue, &handler, &stop);
+            }));
+        }
+        {
+            let stop = stop.clone();
+            let shed = shed.clone();
+            let live = live.clone();
+            let queue = queue.clone();
+            threads.push(std::thread::spawn(move || {
+                accept_loop(&listener, &stop, |stream| {
+                    if live.load(Ordering::SeqCst) >= max_connections {
+                        shed.fetch_add(1, Ordering::SeqCst);
+                        shed_connection(stream);
+                        return;
+                    }
+                    if let Ok(conn) = Conn::new(stream, live.clone()) {
+                        queue.push(conn);
+                    }
+                });
+            }));
+        }
+        Ok(Server {
+            addr,
+            stop,
+            shed,
+            live,
+            queue: Some(queue),
+            threads,
+            workers: config.pool_size(),
+            max_connections,
+        })
+    }
+
+    /// The original thread-per-connection server, kept as the
+    /// comparison baseline for `benches/perf_api.rs`.
+    pub fn serve_unpooled(port: u16, handler: Handler) -> Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let thread = std::thread::spawn(move || {
-            while !stop2.load(Ordering::SeqCst) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let handler = handler.clone();
-                        let stop = stop2.clone();
-                        std::thread::spawn(move || {
-                            let _ = handle_connection(stream, handler, stop);
-                        });
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(2));
-                    }
-                    Err(_) => break,
-                }
-            }
+            accept_loop(&listener, &stop2, |stream| {
+                let handler = handler.clone();
+                let stop = stop2.clone();
+                std::thread::spawn(move || {
+                    let _ = handle_connection(stream, handler, stop);
+                });
+            });
         });
         Ok(Server {
             addr,
             stop,
-            thread: Some(thread),
+            shed: Arc::new(AtomicU64::new(0)),
+            live: Arc::new(AtomicUsize::new(0)),
+            queue: None,
+            threads: vec![thread],
+            workers: 0,
+            max_connections: usize::MAX,
         })
     }
 
@@ -176,36 +410,169 @@ impl Server {
     pub fn addr(&self) -> SocketAddr {
         self.addr
     }
+
+    /// Connections shed with 503 because the live cap was reached.
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::SeqCst)
+    }
+
+    /// Connections currently registered with the worker pool.
+    pub fn live_connections(&self) -> usize {
+        self.live.load(Ordering::SeqCst)
+    }
+
+    /// Pool threads serving requests (0 for the unpooled baseline).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The live-connection cap arrivals are shed against.
+    pub fn max_connections(&self) -> usize {
+        self.max_connections
+    }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(t) = self.thread.take() {
+        // nudge the blocking accept thread awake so it observes `stop`
+        let _ = TcpStream::connect(self.addr);
+        if let Some(q) = &self.queue {
+            q.ready.notify_all();
+        }
+        for t in self.threads.drain(..) {
             let _ = t.join();
         }
     }
 }
 
-fn handle_connection(stream: TcpStream, handler: Handler, stop: Arc<AtomicBool>) -> Result<()> {
-    stream.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    loop {
-        let (request, http11) = match read_request(&mut reader) {
-            Ok(Some(r)) => r,
-            // peer closed (or went idle past the read timeout): done
-            Ok(None) => return Ok(()),
-            Err(e) => {
-                // malformed input: answer with the envelope, then close —
-                // framing is unknown so the connection cannot be reused
-                let _ = write_response(&stream, &Response::error(&e), false);
-                return Ok(());
+/// Blocking accept loop shared by both server flavors.  Transient
+/// accept errors (EMFILE, ECONNABORTED, ...) back off and retry with a
+/// bounded delay — only shutdown exits the loop.
+fn accept_loop(listener: &TcpListener, stop: &AtomicBool, mut on_conn: impl FnMut(TcpStream)) {
+    let mut backoff = ACCEPT_BACKOFF_START;
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                backoff = ACCEPT_BACKOFF_START;
+                // the shutdown nudge connection lands here
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                on_conn(stream);
             }
-        };
-        // a dropped Server must stop serving keep-alive connections too,
-        // not just stop accepting new ones
+            Err(_) => {
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(ACCEPT_BACKOFF_MAX);
+            }
+        }
+    }
+}
+
+/// The graceful shed response: the uniform envelope (code `exhausted`)
+/// under 503 + `retry-after`, so SDK clients can rehydrate the typed
+/// error and back off.
+fn overload_response() -> Response {
+    let mut r = Response::error(&AcaiError::Exhausted(
+        "server is at its connection limit; retry shortly".into(),
+    ));
+    r.status = 503;
+    r.headers.push(("retry-after".into(), "1".into()));
+    r
+}
+
+/// Write the 503 and close without slamming the door: drain whatever
+/// the client already sent first, so the close does not RST the
+/// response out of the peer's receive buffer.
+fn shed_connection(stream: TcpStream) {
+    let _ = write_response(&stream, &overload_response(), false);
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(10)));
+    let mut sink = [0u8; 1024];
+    let mut r = &stream;
+    while matches!(r.read(&mut sink), Ok(n) if n > 0) {}
+}
+
+fn worker_loop(queue: &ConnQueue, handler: &Handler, stop: &AtomicBool) {
+    while let Some(mut conn) = queue.pop(stop) {
+        if !conn.hot {
+            match conn.readiness() {
+                Readiness::Ready => {}
+                Readiness::Closed => continue,
+                Readiness::NotYet => {
+                    if conn.last_active.elapsed() > IDLE_TIMEOUT {
+                        continue; // idle too long: drop the connection
+                    }
+                    queue.push(conn);
+                    // pace the idle-poll so a queue of parked
+                    // connections doesn't busy-spin the pool
+                    std::thread::sleep(Duration::from_millis(2));
+                    continue;
+                }
+            }
+        }
+        match serve_turn(&mut conn, handler, stop) {
+            Turn::Requeue => {
+                conn.hot = false;
+                queue.push(conn);
+            }
+            Turn::Close => {}
+        }
+    }
+}
+
+enum Turn {
+    Requeue,
+    Close,
+}
+
+/// Serve up to [`MAX_TURN_REQUESTS`] pipelined requests on one
+/// connection, then hand it back to the queue.  A short probe decides
+/// whether a request is in flight; only once bytes arrive does the
+/// worker commit to the full request timeout.
+fn serve_turn(conn: &mut Conn, handler: &Handler, stop: &AtomicBool) -> Turn {
+    for _ in 0..MAX_TURN_REQUESTS {
+        if conn.stream.set_read_timeout(Some(PROBE_TIMEOUT)).is_err() {
+            return Turn::Close;
+        }
+        conn.line.clear();
+        let probe = probe_request_line(&mut conn.reader, &mut conn.line);
+        match probe {
+            Probe::Closed => return Turn::Close,
+            Probe::Idle => return Turn::Requeue,
+            Probe::Err(e) => {
+                let _ = write_response_into(conn, &Response::error(&e), false);
+                return Turn::Close;
+            }
+            Probe::Line | Probe::Partial => {}
+        }
+        // request bytes are in flight: commit to the full timeout
+        if conn.stream.set_read_timeout(Some(REQUEST_TIMEOUT)).is_err() {
+            return Turn::Close;
+        }
+        if matches!(probe, Probe::Partial) {
+            match conn.reader.read_line(&mut conn.line) {
+                Ok(_) => {}
+                Err(_) => {
+                    let e = AcaiError::invalid("stalled mid-request");
+                    let _ = write_response_into(conn, &Response::error(&e), false);
+                    return Turn::Close;
+                }
+            }
+        }
+        let (request, http11) =
+            match finish_request(&mut conn.reader, &conn.line, &mut conn.body_buf) {
+                Ok(r) => r,
+                Err(e) => {
+                    // framing is unknown: answer, then close
+                    let _ = write_response_into(conn, &Response::error(&e), false);
+                    return Turn::Close;
+                }
+            };
+        // a dropped Server must stop serving keep-alive connections
+        // too, not just stop accepting new ones
         if stop.load(Ordering::SeqCst) {
-            return Ok(());
+            return Turn::Close;
         }
         // keep-alive is the HTTP/1.1 default; HTTP/1.0 clients must ask
         // for it, and an explicit Connection header always wins
@@ -213,41 +580,74 @@ fn handle_connection(stream: TcpStream, handler: Handler, stop: Arc<AtomicBool>)
             Some(c) => c.eq_ignore_ascii_case("keep-alive"),
             None => http11,
         };
-        let response = handler(&request);
-        write_response(&stream, &response, keep_alive)?;
-        if !keep_alive {
-            return Ok(());
+        let response = handler.as_ref()(&request);
+        let ok = write_response_into(conn, &response, keep_alive).is_ok();
+        // reclaim the body allocation for the next request
+        conn.body_buf = request.body;
+        conn.body_buf.clear();
+        if !ok || !keep_alive {
+            return Turn::Close;
+        }
+        conn.last_active = Instant::now();
+    }
+    Turn::Requeue // fairness: let other connections have a worker
+}
+
+/// What a short read of the request line produced.
+enum Probe {
+    /// A complete request line is in the buffer.
+    Line,
+    /// Some bytes arrived but the line is not finished yet.
+    Partial,
+    /// Nothing at all: the connection is just idle.
+    Idle,
+    /// The peer is gone (clean close between requests).
+    Closed,
+    /// Malformed traffic that deserves an error response.
+    Err(AcaiError),
+}
+
+fn probe_request_line(reader: &mut BufReader<TcpStream>, line: &mut String) -> Probe {
+    match reader.read_line(line) {
+        Ok(0) => Probe::Closed,
+        Ok(_) => Probe::Line,
+        // read_line keeps partial bytes in `line` on error, which is
+        // how a parked partial request survives to the next attempt
+        Err(e) => {
+            let timeoutish = matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            );
+            let gone = matches!(
+                e.kind(),
+                std::io::ErrorKind::UnexpectedEof
+                    | std::io::ErrorKind::ConnectionReset
+                    | std::io::ErrorKind::BrokenPipe
+            );
+            if timeoutish && line.is_empty() {
+                Probe::Idle
+            } else if timeoutish {
+                Probe::Partial
+            } else if gone && line.is_empty() {
+                Probe::Closed
+            } else if gone {
+                Probe::Err(AcaiError::invalid("unexpected eof in request line"))
+            } else {
+                Probe::Err(e.into())
+            }
         }
     }
 }
 
-/// Read one request off the connection; the `bool` is whether the
-/// request line declared HTTP/1.1 (keep-alive default).  `Ok(None)`
-/// means the peer closed (or idled out) cleanly between requests.
-fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<(Request, bool)>> {
-    let mut line = String::new();
-    match reader.read_line(&mut line) {
-        Ok(0) => return Ok(None),
-        Ok(_) => {}
-        // a timeout/close with NOTHING read is an idle keep-alive
-        // connection going away — close silently.  A timeout after
-        // partial input is a malformed/stalled request and still gets
-        // an error response (read_line keeps the partial bytes in
-        // `line` on error).
-        Err(e)
-            if line.is_empty()
-                && matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock
-                        | std::io::ErrorKind::TimedOut
-                        | std::io::ErrorKind::UnexpectedEof
-                        | std::io::ErrorKind::ConnectionReset
-                ) =>
-        {
-            return Ok(None)
-        }
-        Err(e) => return Err(e.into()),
-    }
+/// Parse the rest of a request whose request line is already in
+/// `line`; the body is read into the reusable `body_buf` and moved
+/// into the returned [`Request`].  The `bool` is whether the request
+/// declared HTTP/1.1 (keep-alive default).
+fn finish_request(
+    reader: &mut BufReader<TcpStream>,
+    line: &str,
+    body_buf: &mut Vec<u8>,
+) -> Result<(Request, bool)> {
     let mut parts = line.trim_end().splitn(3, ' ');
     let method = parts
         .next()
@@ -296,9 +696,11 @@ fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<(Request, bo
     if len > MAX_BODY_BYTES {
         return Err(AcaiError::invalid("body too large"));
     }
-    let mut body = vec![0u8; len];
-    reader.read_exact(&mut body)?;
-    Ok(Some((
+    body_buf.clear();
+    body_buf.resize(len, 0);
+    reader.read_exact(body_buf)?;
+    let body = std::mem::take(body_buf);
+    Ok((
         Request {
             method,
             path,
@@ -307,21 +709,93 @@ fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<(Request, bo
             body,
         },
         http11,
-    )))
+    ))
 }
 
-fn write_response(mut stream: &TcpStream, r: &Response, keep_alive: bool) -> Result<()> {
-    let mut head = format!("HTTP/1.1 {} {}\r\n", r.status, r.reason());
-    for (k, v) in &r.headers {
-        head.push_str(&format!("{k}: {v}\r\n"));
+/// Thread-per-connection serving loop (the unpooled baseline).
+fn handle_connection(stream: TcpStream, handler: Handler, stop: Arc<AtomicBool>) -> Result<()> {
+    stream.set_read_timeout(Some(REQUEST_TIMEOUT))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    loop {
+        let (request, http11) = match read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            // peer closed (or went idle past the read timeout): done
+            Ok(None) => return Ok(()),
+            Err(e) => {
+                // malformed input: answer with the envelope, then close —
+                // framing is unknown so the connection cannot be reused
+                let _ = write_response(&stream, &Response::error(&e), false);
+                return Ok(());
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let keep_alive = match request.header("connection") {
+            Some(c) => c.eq_ignore_ascii_case("keep-alive"),
+            None => http11,
+        };
+        let response = handler(&request);
+        write_response(&stream, &response, keep_alive)?;
+        if !keep_alive {
+            return Ok(());
+        }
     }
+}
+
+/// Read one request off the connection; the `bool` is whether the
+/// request line declared HTTP/1.1 (keep-alive default).  `Ok(None)`
+/// means the peer closed (or idled out) cleanly between requests.
+fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<(Request, bool)>> {
+    let mut line = String::new();
+    match probe_request_line(reader, &mut line) {
+        Probe::Closed | Probe::Idle => return Ok(None),
+        // a timeout after partial input is a malformed/stalled request
+        // and still gets an error response
+        Probe::Partial => return Err(AcaiError::invalid("stalled mid-request")),
+        Probe::Err(e) => return Err(e),
+        Probe::Line => {}
+    }
+    let mut body_buf = Vec::new();
+    finish_request(reader, &line, &mut body_buf).map(Some)
+}
+
+/// Encode status line + headers + framing headers + body into one
+/// contiguous buffer (single syscall per response instead of three).
+fn encode_response(buf: &mut Vec<u8>, r: &Response, keep_alive: bool) {
+    buf.clear();
     let conn = if keep_alive { "keep-alive" } else { "close" };
-    head.push_str(&format!(
+    // Vec<u8> writes are infallible
+    let _ = write!(buf, "HTTP/1.1 {} {}\r\n", r.status, r.reason());
+    for (k, v) in &r.headers {
+        let _ = write!(buf, "{k}: {v}\r\n");
+    }
+    let _ = write!(
+        buf,
         "content-length: {}\r\nconnection: {conn}\r\n\r\n",
         r.body.len()
-    ));
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(&r.body)?;
+    );
+    buf.extend_from_slice(&r.body);
+}
+
+/// Coalesced response write through the connection's reusable buffer.
+fn write_response_into(conn: &mut Conn, r: &Response, keep_alive: bool) -> Result<()> {
+    let mut wbuf = std::mem::take(&mut conn.wbuf);
+    encode_response(&mut wbuf, r, keep_alive);
+    let outcome = conn
+        .stream
+        .write_all(&wbuf)
+        .and_then(|_| conn.stream.flush());
+    conn.wbuf = wbuf;
+    outcome?;
+    Ok(())
+}
+
+/// One-shot coalesced response write (unpooled/shed paths).
+fn write_response(mut stream: &TcpStream, r: &Response, keep_alive: bool) -> Result<()> {
+    let mut buf = Vec::with_capacity(256 + r.body.len());
+    encode_response(&mut buf, r, keep_alive);
+    stream.write_all(&buf)?;
     stream.flush()?;
     Ok(())
 }
@@ -476,21 +950,21 @@ pub fn post_json(addr: SocketAddr, path: &str, token: &str, body: &Json) -> Resu
 mod tests {
     use super::*;
 
+    fn echo_handler() -> Handler {
+        Arc::new(|req: &Request| {
+            Response::json(
+                &Json::obj()
+                    .field("method", req.method.as_str())
+                    .field("path", req.path.as_str())
+                    .field("query", req.query.as_str())
+                    .field("len", req.body.len())
+                    .build(),
+            )
+        })
+    }
+
     fn echo_server() -> Server {
-        Server::serve(
-            0,
-            Arc::new(|req: &Request| {
-                Response::json(
-                    &Json::obj()
-                        .field("method", req.method.as_str())
-                        .field("path", req.path.as_str())
-                        .field("query", req.query.as_str())
-                        .field("len", req.body.len())
-                        .build(),
-                )
-            }),
-        )
-        .unwrap()
+        Server::serve(0, echo_handler()).unwrap()
     }
 
     #[test]
@@ -670,5 +1144,75 @@ mod tests {
         };
         std::thread::sleep(std::time::Duration::from_millis(20));
         assert!(TcpStream::connect_timeout(&addr, std::time::Duration::from_millis(200)).is_err());
+    }
+
+    #[test]
+    fn pipelined_requests_are_answered_in_order() {
+        let server = echo_server();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(5)))
+            .unwrap();
+        // two requests in one write: both must be answered, in order
+        stream
+            .write_all(
+                b"GET /first HTTP/1.1\r\ncontent-length: 0\r\n\r\n\
+                  GET /second HTTP/1.1\r\ncontent-length: 0\r\n\r\n",
+            )
+            .unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        for expect in ["/first", "/second"] {
+            let resp = read_response(&mut reader).unwrap();
+            assert_eq!(resp.status, 200);
+            let v = crate::json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+            assert_eq!(v.get("path").and_then(Json::as_str), Some(expect));
+        }
+    }
+
+    #[test]
+    fn over_capacity_connections_are_shed_with_503() {
+        let server = Server::serve_with(
+            0,
+            echo_handler(),
+            ServerConfig {
+                workers: 2,
+                max_connections: 1,
+            },
+        )
+        .unwrap();
+        // a completed request proves the first connection is registered
+        let mut keep = HttpConn::connect(server.addr()).unwrap();
+        assert_eq!(keep.request("GET", "/", &[], b"").unwrap().status, 200);
+        // the second connection is over the cap: graceful 503 envelope
+        let mut second = HttpConn::connect(server.addr()).unwrap();
+        let resp = second.request("GET", "/", &[], b"").unwrap();
+        assert_eq!(resp.status, 503);
+        assert!(resp
+            .headers
+            .iter()
+            .any(|(k, v)| k == "retry-after" && v == "1"));
+        let v = crate::json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(
+            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("exhausted")
+        );
+        assert_eq!(server.shed_count(), 1);
+        // the in-cap connection keeps working
+        assert_eq!(keep.request("GET", "/again", &[], b"").unwrap().status, 200);
+    }
+
+    #[test]
+    fn unpooled_server_round_trips_and_keeps_alive() {
+        let server = Server::serve_unpooled(0, echo_handler()).unwrap();
+        let mut conn = HttpConn::connect(server.addr()).unwrap();
+        for i in 0..3 {
+            let resp = conn.request("GET", &format!("/u{i}"), &[], b"").unwrap();
+            assert_eq!(resp.status, 200);
+            let v = crate::json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+            assert_eq!(
+                v.get("path").and_then(Json::as_str),
+                Some(format!("/u{i}").as_str())
+            );
+        }
     }
 }

@@ -152,9 +152,15 @@ fn serve(flags: &HashMap<String, String>) -> acai::Result<()> {
     // start the background engine driver up front: POST /v1/jobs only
     // notifies it, nothing ever drives the engine in-request
     acai.driver();
+    let http = acai.config.http.clone();
     let handler = make_handler(acai);
-    let server = Server::serve(port, handler)?;
-    println!("acai /v1 REST edge on http://{}", server.addr());
+    let server = Server::serve_with(port, handler, http)?;
+    println!(
+        "acai /v1 REST edge on http://{} ({} workers, {} connection cap)",
+        server.addr(),
+        server.workers(),
+        server.max_connections()
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

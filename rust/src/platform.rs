@@ -2,6 +2,7 @@
 
 use std::sync::Arc;
 
+use crate::api::tenant::TenantRegistry;
 use crate::autoprovision::AutoProvisioner;
 use crate::bus::Bus;
 use crate::cluster::Cluster;
@@ -34,6 +35,9 @@ pub struct Acai {
     /// persisted on the same storage table tier as the data lake.
     pub experiments: ExperimentStore,
     pub pricing: PricingModel,
+    /// Per-project admission control + usage accounting for the REST
+    /// edge (rate limits, quotas, the billing counters).
+    pub tenants: TenantRegistry,
     pub runtime: Option<Arc<Runtime>>,
     objects: ObjectStore,
     /// Background engine driver (async job lifecycle).  Started lazily
@@ -81,6 +85,7 @@ impl Acai {
         let profiler = Profiler::new(engine.clone(), runtime.clone(), config.profile_barrier);
         let provisioner = AutoProvisioner::new(pricing);
         let credentials = CredentialServer::new(config.seed);
+        let tenants = TenantRegistry::new(config.tenant.clone());
         Ok(Acai {
             config,
             clock,
@@ -93,6 +98,7 @@ impl Acai {
             provisioner,
             experiments,
             pricing,
+            tenants,
             runtime,
             objects,
             driver: std::sync::OnceLock::new(),

@@ -25,6 +25,14 @@ pub const CPU_ANCHOR: f64 = 5.2702e-4;
 /// $/(MB·second) at the anchor.
 pub const MEM_ANCHOR: f64 = 6.7511e-8;
 
+/// $/request at the API edge (the per-call half of the multi-tenant
+/// billing surface; modeled on public cloud API-gateway pricing,
+/// ~$0.40 per million requests).
+pub const REQUEST_ANCHOR: f64 = 4.0e-7;
+/// $/byte transferred through the API edge (request + response bodies;
+/// ~$0.09 per GB).
+pub const BYTE_ANCHOR: f64 = 9.0e-11;
+
 /// vCPU range endpoints (paper §4.3).
 pub const CPU_MIN: f64 = 0.5;
 pub const CPU_MAX: f64 = 8.0;
@@ -75,6 +83,12 @@ impl PricingModel {
     /// Total cost of running `res` for `runtime_secs` (Table 2/3 formula).
     pub fn cost(&self, res: ResourceConfig, runtime_secs: f64) -> f64 {
         self.rate(res) * runtime_secs
+    }
+
+    /// API-edge usage cost: per-request plus per-transferred-byte (the
+    /// tenant billing surface behind `GET /v1/tenant`).
+    pub fn api_cost(&self, requests: u64, bytes: u64) -> f64 {
+        requests as f64 * REQUEST_ANCHOR + bytes as f64 * BYTE_ANCHOR
     }
 }
 
@@ -132,6 +146,18 @@ mod tests {
         let r1 = p.rate(ResourceConfig::new(1.0, 1024));
         let r2 = p.rate(ResourceConfig::new(2.0, 2048));
         assert!(r2 > 2.0 * r1, "vertical scaling must be penalised");
+    }
+
+    #[test]
+    fn api_cost_prices_requests_and_bytes() {
+        let p = PricingModel::default();
+        assert_eq!(p.api_cost(0, 0), 0.0);
+        // a million requests ≈ $0.40, a GB transferred ≈ $0.09
+        assert!((p.api_cost(1_000_000, 0) - 0.40).abs() < 1e-9);
+        assert!((p.api_cost(0, 1_000_000_000) - 0.09).abs() < 1e-9);
+        // linear + additive
+        let one = p.api_cost(1, 100);
+        assert!((p.api_cost(2, 200) - 2.0 * one).abs() < 1e-18);
     }
 
     #[test]

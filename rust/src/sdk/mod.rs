@@ -23,7 +23,8 @@ use std::time::{Duration, Instant};
 
 use crate::api::dto::{
     cut_page, num_cursor, DataPlaneMetrics, FileEntry, FileManifest, JobStatus, LogChunk,
-    NodeStatus, Page, PageReq, PoolSpec, PoolStatus, ProvisionChoice, TraceDir,
+    NodeStatus, Page, PageReq, PoolSpec, PoolStatus, ProvisionChoice, TenantUsageReport,
+    TraceDir,
 };
 use crate::autoprovision::{Decision, Objective};
 use crate::cluster::ResourceConfig;
@@ -101,6 +102,19 @@ pub trait AcaiApi {
     /// Attach custom metadata tags to an artifact.
     fn tag_artifact(&self, kind: ArtifactKind, id: &str, fields: &[(String, Json)])
         -> Result<()>;
+
+    /// Conditional tag write guarded by the artifact's metadata
+    /// version (optimistic concurrency): `Some(v)` writes only if the
+    /// document is still at version `v` — a stale guard is a 409
+    /// conflict and writes nothing — while `None` writes
+    /// unconditionally.  Returns the document's new version.
+    fn tag_artifact_guarded(
+        &self,
+        kind: ArtifactKind,
+        id: &str,
+        fields: &[(String, Json)],
+        expected_version: Option<u64>,
+    ) -> Result<u64>;
 
     // ---- provenance ----
 
@@ -184,6 +198,13 @@ pub trait AcaiApi {
 
     /// Every live node with its per-node free-capacity accounting.
     fn cluster_nodes(&self) -> Result<Vec<NodeStatus>>;
+
+    // ---- tenancy ----
+
+    /// This project's API usage + billing counters.  Exempt from
+    /// admission: a throttled or quota-capped project must still be
+    /// able to observe why its calls bounce.
+    fn tenant_usage(&self) -> Result<TenantUsageReport>;
 }
 
 /// What a client submits through the SDK.
@@ -203,13 +224,55 @@ pub struct JobRequest {
 pub struct Client {
     acai: Arc<Acai>,
     identity: Identity,
+    /// Whether API calls pass tenant admission (rate limits + quotas).
+    /// True for SDK users ([`Client::connect`]); false for the REST
+    /// edge ([`Client::connect_edge`]), where the `TenantLayer`
+    /// middleware already admitted the request — gating again would
+    /// double-charge every remote call.
+    gated: bool,
 }
 
 impl Client {
     /// Authenticate a token against the credential server.
     pub fn connect(acai: Arc<Acai>, token: &str) -> Result<Client> {
         let identity = acai.credentials.authenticate(token)?;
-        Ok(Client { acai, identity })
+        Ok(Client {
+            acai,
+            identity,
+            gated: true,
+        })
+    }
+
+    /// Edge-internal connect: same authentication, but tenant
+    /// admission is the caller's job (the REST middleware chain).
+    pub(crate) fn connect_edge(acai: Arc<Acai>, token: &str) -> Result<Client> {
+        let identity = acai.credentials.authenticate(token)?;
+        Ok(Client {
+            acai,
+            identity,
+            gated: false,
+        })
+    }
+
+    /// Tenant admission for one API call carrying `request_bytes` of
+    /// payload.  Waits out short rate-limit stalls; surfaces
+    /// [`AcaiError::Exhausted`] (429) on quota exhaustion.
+    fn admit(&self, request_bytes: u64) -> Result<()> {
+        if self.gated {
+            self.acai
+                .tenants
+                .admit_blocking(self.identity.project, request_bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Fold a response payload into the project's usage counters.
+    fn record_response(&self, bytes: u64) {
+        if self.gated {
+            self.acai
+                .tenants
+                .record_response(self.identity.project, bytes);
+        }
     }
 
     pub fn identity(&self) -> Identity {
@@ -500,6 +563,8 @@ impl Client {
 
 impl AcaiApi for Client {
     fn upload(&self, files: &[(&str, &[u8])]) -> Result<Vec<FileEntry>> {
+        // uploads are charged by payload size, not just per call
+        self.admit(files.iter().map(|(_, b)| b.len() as u64).sum())?;
         Ok(self
             .upload_files(files)?
             .into_iter()
@@ -508,7 +573,10 @@ impl AcaiApi for Client {
     }
 
     fn fetch(&self, path: &str, version: Option<Version>) -> Result<Vec<u8>> {
-        self.download(path, version)
+        self.admit(0)?;
+        let data = self.download(path, version)?;
+        self.record_response(data.len() as u64);
+        Ok(data)
     }
 
     fn fetch_range(
@@ -518,14 +586,21 @@ impl AcaiApi for Client {
         offset: u64,
         len: Option<u64>,
     ) -> Result<Vec<u8>> {
+        self.admit(0)?;
         self.check_read(&format!("file:{path}"))?;
-        self.acai
-            .datalake
-            .storage
-            .download_range(self.identity.project, path, version, offset, len)
+        let data = self.acai.datalake.storage.download_range(
+            self.identity.project,
+            path,
+            version,
+            offset,
+            len,
+        )?;
+        self.record_response(data.len() as u64);
+        Ok(data)
     }
 
     fn file_stat(&self, path: &str, version: Option<Version>) -> Result<FileManifest> {
+        self.admit(0)?;
         self.check_read(&format!("file:{path}"))?;
         let stat = self
             .acai
@@ -542,6 +617,7 @@ impl AcaiApi for Client {
     }
 
     fn data_metrics(&self) -> Result<DataPlaneMetrics> {
+        self.admit(0)?;
         let cas = self.acai.datalake.cas.stats();
         let cluster = self.acai.cluster.counters();
         Ok(DataPlaneMetrics {
@@ -557,6 +633,7 @@ impl AcaiApi for Client {
     }
 
     fn files(&self, prefix: &str, page: &PageReq) -> Result<Page<FileEntry>> {
+        self.admit(0)?;
         let page = page.checked()?;
         let mut entries: Vec<FileEntry> = self
             .list_files(prefix)
@@ -568,6 +645,7 @@ impl AcaiApi for Client {
     }
 
     fn file_versions(&self, path: &str, page: &PageReq) -> Result<Page<Version>> {
+        self.admit(0)?;
         self.acai.datalake.acl.check(
             self.identity.project,
             &format!("file:{path}"),
@@ -584,10 +662,12 @@ impl AcaiApi for Client {
     }
 
     fn make_file_set(&self, name: &str, specs: &[&str]) -> Result<Version> {
+        self.admit(0)?;
         self.create_file_set(name, specs)
     }
 
     fn file_sets(&self, page: &PageReq) -> Result<Page<FileEntry>> {
+        self.admit(0)?;
         let page = page.checked()?;
         let mut entries: Vec<FileEntry> = self
             .list_file_sets()
@@ -599,6 +679,7 @@ impl AcaiApi for Client {
     }
 
     fn metadata_doc(&self, kind: ArtifactKind, id: &str) -> Result<Json> {
+        self.admit(0)?;
         // same ACL read check download enforces — metadata must not
         // leak what the data path refuses
         if let Some(resource) = read_guard(kind, id) {
@@ -617,6 +698,7 @@ impl AcaiApi for Client {
         kind: ArtifactKind,
         clauses: &[Clause],
     ) -> Result<Vec<(String, Json)>> {
+        self.admit(0)?;
         let hits = self.query(kind, clauses)?;
         let hits = if matches!(kind, ArtifactKind::Job) {
             hits // jobs are not ACL-guarded
@@ -640,12 +722,29 @@ impl AcaiApi for Client {
         id: &str,
         fields: &[(String, Json)],
     ) -> Result<()> {
+        self.tag_artifact_guarded(kind, id, fields, None).map(|_| ())
+    }
+
+    fn tag_artifact_guarded(
+        &self,
+        kind: ArtifactKind,
+        id: &str,
+        fields: &[(String, Json)],
+        expected_version: Option<u64>,
+    ) -> Result<u64> {
+        self.admit(0)?;
         crate::api::dto::validate_tags(fields)?;
-        self.tag(kind, id, fields);
-        Ok(())
+        self.acai.datalake.metadata.tag_guarded(
+            self.identity.project,
+            kind,
+            id,
+            fields,
+            expected_version,
+        )
     }
 
     fn provenance(&self) -> Result<(Vec<String>, Vec<Edge>)> {
+        self.admit(0)?;
         // the graph is project-wide; drop nodes (and edges touching
         // them) the caller has no read access to, so private file sets
         // cannot be enumerated through provenance
@@ -670,6 +769,7 @@ impl AcaiApi for Client {
     }
 
     fn trace(&self, fileset: &str, version: Version, dir: TraceDir) -> Result<Vec<Edge>> {
+        self.admit(0)?;
         self.check_read(&format!("fileset:{fileset}"))?;
         let edges = match dir {
             TraceDir::Forward => self.trace_forward(fileset, version),
@@ -682,6 +782,7 @@ impl AcaiApi for Client {
     }
 
     fn lineage_of(&self, fileset: &str, version: Version) -> Result<Vec<String>> {
+        self.admit(0)?;
         self.check_read(&format!("fileset:{fileset}"))?;
         let ancestors = self.lineage(fileset, version);
         Ok(self.acai.datalake.acl.retain_readable(
@@ -693,10 +794,12 @@ impl AcaiApi for Client {
     }
 
     fn submit_job(&self, request: &JobRequest) -> Result<JobId> {
+        self.admit(0)?;
         self.submit(request.clone())
     }
 
     fn job_status(&self, id: JobId) -> Result<JobStatus> {
+        self.admit(0)?;
         let record = self.acai.engine.registry.get(id)?;
         // never leak another project's jobs — same 404 as a missing id
         if record.spec.project != self.identity.project {
@@ -706,6 +809,7 @@ impl AcaiApi for Client {
     }
 
     fn jobs(&self, page: &PageReq) -> Result<Page<JobStatus>> {
+        self.admit(0)?;
         let page = page.checked()?;
         // registry.list is submission-ordered (ascending ids)
         let records = self.acai.engine.registry.list(self.identity.project, None);
@@ -714,13 +818,15 @@ impl AcaiApi for Client {
     }
 
     fn job_logs(&self, id: JobId, offset: usize) -> Result<LogChunk> {
-        self.job_status(id)?; // existence + project scoping
+        self.job_status(id)?; // existence + project scoping (+ admission)
         let lines = self.acai.engine.logs.get(id);
         let offset = offset.min(lines.len());
-        Ok(LogChunk {
+        let chunk = LogChunk {
             next_offset: lines.len(),
             lines: lines[offset..].to_vec(),
-        })
+        };
+        self.record_response(chunk.lines.iter().map(|l| l.len() as u64).sum());
+        Ok(chunk)
     }
 
     fn kill_job(&self, id: JobId) -> Result<()> {
@@ -729,6 +835,7 @@ impl AcaiApi for Client {
     }
 
     fn await_job(&self, id: JobId) -> Result<JobStatus> {
+        // no admission of its own: each job_status poll inside admits
         let deadline = Instant::now() + AWAIT_JOB_TIMEOUT;
         loop {
             let status = self.job_status(id)?;
@@ -750,6 +857,7 @@ impl AcaiApi for Client {
     }
 
     fn create_experiment(&self, spec: &ExperimentSpec) -> Result<ExperimentStatus> {
+        self.admit(0)?;
         self.acai.experiments.create(
             &self.acai.engine,
             &self.acai.profiler,
@@ -761,12 +869,14 @@ impl AcaiApi for Client {
     }
 
     fn experiment(&self, id: ExperimentId) -> Result<ExperimentStatus> {
+        self.admit(0)?;
         self.acai
             .experiments
             .get(&self.acai.engine, self.identity.project, id)
     }
 
     fn experiments(&self, page: &PageReq) -> Result<Page<ExperimentStatus>> {
+        self.admit(0)?;
         let page = page.checked()?;
         // cut the page on the (cheap, refresh-free) id scan first, then
         // refresh only the experiments actually returned — a project
@@ -796,6 +906,7 @@ impl AcaiApi for Client {
         id: ExperimentId,
         page: &PageReq,
     ) -> Result<Page<TrialStatus>> {
+        self.admit(0)?;
         let page = page.checked()?;
         let trials = self
             .acai
@@ -810,12 +921,14 @@ impl AcaiApi for Client {
         metric: &str,
         mode: MetricMode,
     ) -> Result<TrialStatus> {
+        self.admit(0)?;
         self.acai
             .experiments
             .best(&self.acai.engine, self.identity.project, id, metric, mode)
     }
 
     fn await_experiment(&self, id: ExperimentId) -> Result<ExperimentStatus> {
+        // no admission of its own: each experiment poll inside admits
         let deadline = Instant::now() + AWAIT_JOB_TIMEOUT;
         loop {
             let status = self.experiment(id)?;
@@ -842,6 +955,7 @@ impl AcaiApi for Client {
         template: &str,
         input_fileset: &str,
     ) -> Result<TemplateId> {
+        self.admit(0)?;
         self.profile(name, template, input_fileset)
     }
 
@@ -851,11 +965,13 @@ impl AcaiApi for Client {
         values: &[f64],
         objective: Objective,
     ) -> Result<ProvisionChoice> {
+        self.admit(0)?;
         let decision = self.autoprovision(template_name, values, objective)?;
         Ok(ProvisionChoice::from_decision(&decision))
     }
 
     fn cluster_pools(&self) -> Result<Vec<PoolStatus>> {
+        self.admit(0)?;
         Ok(self
             .acai
             .cluster
@@ -866,6 +982,7 @@ impl AcaiApi for Client {
     }
 
     fn put_cluster_pool(&self, spec: &PoolSpec) -> Result<Vec<PoolStatus>> {
+        self.admit(0)?;
         // pools are cluster-global, shared by every project: only a
         // project admin may reconfigure them (reads stay open)
         if !self.identity.is_project_admin {
@@ -880,6 +997,7 @@ impl AcaiApi for Client {
     }
 
     fn cluster_nodes(&self) -> Result<Vec<NodeStatus>> {
+        self.admit(0)?;
         Ok(self
             .acai
             .cluster
@@ -887,6 +1005,22 @@ impl AcaiApi for Client {
             .iter()
             .map(NodeStatus::from_snapshot)
             .collect())
+    }
+
+    fn tenant_usage(&self) -> Result<TenantUsageReport> {
+        // deliberately NOT admitted: observability must survive
+        // throttling and quota exhaustion
+        let usage = self.acai.tenants.usage(self.identity.project);
+        let transferred = usage.request_bytes + usage.response_bytes;
+        Ok(TenantUsageReport {
+            project: self.identity.project.to_string(),
+            requests: usage.requests,
+            request_bytes: usage.request_bytes,
+            response_bytes: usage.response_bytes,
+            throttled: usage.throttled,
+            rejected: usage.rejected,
+            api_cost: self.acai.pricing.api_cost(usage.requests, transferred),
+        })
     }
 }
 

@@ -13,7 +13,8 @@ use std::time::{Duration, Instant};
 
 use crate::api::dto::{
     self, b64_decode, b64_encode, DataPlaneMetrics, FileEntry, FileManifest, JobStatus,
-    LogChunk, NodeStatus, Page, PageReq, PoolSpec, PoolStatus, ProvisionChoice, TraceDir,
+    LogChunk, NodeStatus, Page, PageReq, PoolSpec, PoolStatus, ProvisionChoice,
+    TenantUsageReport, TraceDir,
 };
 use crate::api::router::percent_encode;
 use crate::autoprovision::Objective;
@@ -35,6 +36,13 @@ const POLL_DELAY: Duration = Duration::from_millis(2);
 /// this (well under the server's 10s idle timeout), so they are never
 /// in the retry-ambiguous position of a stale socket.
 const POOLED_CONN_MAX_IDLE: Duration = Duration::from_secs(5);
+/// How many times a 429/503 with a `retry-after` header is re-sent
+/// before the error surfaces to the caller.
+const BACKPRESSURE_RETRIES: u32 = 8;
+/// Never honor a `retry-after` longer than this per attempt — the
+/// client caps its patience, it doesn't sleep for whatever the server
+/// asks.
+const BACKPRESSURE_SLEEP_CAP: Duration = Duration::from_millis(250);
 
 /// A token-authenticated client of a remote ACAI deployment.  Keeps
 /// one pooled keep-alive connection ([`crate::httpd::HttpConn`]) so
@@ -131,34 +139,57 @@ impl RemoteClient {
         Ok(resp)
     }
 
-    /// One HTTP round trip; decodes the error envelope into a typed
+    /// One logical round trip; decodes the error envelope into a typed
     /// [`AcaiError`] on any >= 400 status.
+    ///
+    /// Backpressure is absorbed here: a 429 (rate limited) or 503
+    /// (server at its connection cap) carrying a `retry-after` header
+    /// is slept out and re-sent up to [`BACKPRESSURE_RETRIES`] times.
+    /// Re-sending is safe for POSTs too — both statuses are emitted
+    /// *before* the handler runs (admission middleware / accept-time
+    /// shedding), so the rejected request had no effect.
     fn call(&self, method: &str, path: &str, body: Option<&Json>) -> Result<Json> {
         let payload = body.map(|b| b.encode()).unwrap_or_default();
         let mut headers: Vec<(&str, &str)> = vec![("x-acai-token", self.token.as_str())];
         if body.is_some() {
             headers.push(("content-type", "application/json"));
         }
-        let resp = self.exchange(method, path, &headers, payload.as_bytes())?;
-        let text = String::from_utf8_lossy(&resp.body).to_string();
-        let parsed = if text.trim().is_empty() {
-            Json::Null
-        } else {
-            crate::json::parse(&text)?
-        };
-        if resp.status >= 400 {
-            let envelope = parsed.get("error");
-            let code = envelope
-                .and_then(|e| e.get("code"))
-                .and_then(Json::as_str)
-                .unwrap_or("storage");
-            let message = envelope
-                .and_then(|e| e.get("message"))
-                .and_then(Json::as_str)
-                .unwrap_or("remote call failed without an envelope");
-            return Err(AcaiError::from_code(code, message));
+        let mut attempts = 0;
+        loop {
+            let resp = self.exchange(method, path, &headers, payload.as_bytes())?;
+            if (resp.status == 429 || resp.status == 503) && attempts < BACKPRESSURE_RETRIES
+            {
+                if let Some(wait) = resp
+                    .header("retry-after")
+                    .and_then(|v| v.parse::<f64>().ok())
+                {
+                    attempts += 1;
+                    std::thread::sleep(
+                        Duration::from_secs_f64(wait.max(0.0)).min(BACKPRESSURE_SLEEP_CAP),
+                    );
+                    continue;
+                }
+            }
+            let text = String::from_utf8_lossy(&resp.body).to_string();
+            let parsed = if text.trim().is_empty() {
+                Json::Null
+            } else {
+                crate::json::parse(&text)?
+            };
+            if resp.status >= 400 {
+                let envelope = parsed.get("error");
+                let code = envelope
+                    .and_then(|e| e.get("code"))
+                    .and_then(Json::as_str)
+                    .unwrap_or("storage");
+                let message = envelope
+                    .and_then(|e| e.get("message"))
+                    .and_then(Json::as_str)
+                    .unwrap_or("remote call failed without an envelope");
+                return Err(AcaiError::from_code(code, message));
+            }
+            return Ok(parsed);
         }
-        Ok(parsed)
     }
 
     fn get(&self, path: &str) -> Result<Json> {
@@ -322,19 +353,33 @@ impl AcaiApi for RemoteClient {
         id: &str,
         fields: &[(String, Json)],
     ) -> Result<()> {
+        self.tag_artifact_guarded(kind, id, fields, None).map(|_| ())
+    }
+
+    fn tag_artifact_guarded(
+        &self,
+        kind: ArtifactKind,
+        id: &str,
+        fields: &[(String, Json)],
+        expected_version: Option<u64>,
+    ) -> Result<u64> {
         let mut obj = crate::json::JsonObject::new();
         for (k, v) in fields {
             obj.set(k.clone(), v.clone());
         }
-        self.post(
+        let mut body = Json::obj().field("fields", Json::Obj(obj));
+        if let Some(v) = expected_version {
+            body = body.field("expected_version", v);
+        }
+        let resp = self.post(
             &format!(
                 "/v1/metadata/{}/{}/tags",
                 dto::kind_to_str(kind),
                 percent_encode(id)
             ),
-            &Json::obj().field("fields", Json::Obj(obj)).build(),
+            &body.build(),
         )?;
-        Ok(())
+        dto::u64_field(dto::as_object(&resp)?, "version")
     }
 
     fn provenance(&self) -> Result<(Vec<String>, Vec<Edge>)> {
@@ -531,5 +576,9 @@ impl AcaiApi for RemoteClient {
             .iter()
             .map(NodeStatus::from_json)
             .collect()
+    }
+
+    fn tenant_usage(&self) -> Result<TenantUsageReport> {
+        TenantUsageReport::from_json(&self.get("/v1/tenant")?)
     }
 }

@@ -9,17 +9,17 @@
 use std::sync::Arc;
 
 use acai::api::dto::{PageReq, PoolSpec, TraceDir};
-use acai::api::make_handler;
+use acai::api::{make_handler, TenantConfig};
 use acai::autoprovision::Objective;
 use acai::cluster::ResourceConfig;
 use acai::datalake::metadata::ArtifactKind;
 use acai::docstore::Clause;
 use acai::engine::{ExperimentSpec, MetricMode, SweepStrategy};
-use acai::httpd::Server;
+use acai::httpd::{HttpConn, Server};
 use acai::ids::{ExperimentId, JobId};
 use acai::json::Json;
 use acai::sdk::{AcaiApi, Client, JobRequest, RemoteClient};
-use acai::Acai;
+use acai::{Acai, PlatformConfig};
 
 fn page(limit: usize, after: Option<String>) -> PageReq {
     PageReq { limit, after }
@@ -184,6 +184,58 @@ fn conformance_suite(api: &dyn AcaiApi) {
     );
     assert_eq!(
         api.tag_artifact(ArtifactKind::FileSet, "corpus:1", &[]).unwrap_err().status(),
+        400
+    );
+
+    // ---- optimistic concurrency: the expected_version matrix ----
+    // registration seeded version 1; the successful tag above bumped it
+    let doc = api.metadata_doc(ArtifactKind::FileSet, "corpus:1").unwrap();
+    let current = doc.get("version").and_then(Json::as_u64).unwrap();
+    assert_eq!(current, 2);
+    // matching guard: the write lands and bumps the version
+    let bumped = api
+        .tag_artifact_guarded(
+            ArtifactKind::FileSet,
+            "corpus:1",
+            &[("stage".to_string(), Json::from("eval"))],
+            Some(current),
+        )
+        .unwrap();
+    assert_eq!(bumped, current + 1);
+    // stale guard: 409 conflict, and the losing write changes nothing
+    assert_eq!(
+        api.tag_artifact_guarded(
+            ArtifactKind::FileSet,
+            "corpus:1",
+            &[("stage".to_string(), Json::from("stale-loser"))],
+            Some(current),
+        )
+        .unwrap_err()
+        .status(),
+        409
+    );
+    let doc = api.metadata_doc(ArtifactKind::FileSet, "corpus:1").unwrap();
+    assert_eq!(doc.get("stage").and_then(Json::as_str), Some("eval"));
+    assert_eq!(doc.get("version").and_then(Json::as_u64), Some(bumped));
+    // absent guard: unconditional last-writer-wins, version still bumps
+    let unconditional = api
+        .tag_artifact_guarded(
+            ArtifactKind::FileSet,
+            "corpus:1",
+            &[("stage".to_string(), Json::from("final"))],
+            None,
+        )
+        .unwrap();
+    assert_eq!(unconditional, bumped + 1);
+    // the version field itself is a reserved tag key on both clients
+    assert_eq!(
+        api.tag_artifact(
+            ArtifactKind::FileSet,
+            "corpus:1",
+            &[("version".to_string(), Json::from(99u64))],
+        )
+        .unwrap_err()
+        .status(),
         400
     );
 
@@ -386,6 +438,17 @@ fn conformance_suite(api: &dyn AcaiApi) {
     oversized.pool = Some("batch".into());
     oversized.resources = ResourceConfig::new(8.0, 8192);
     assert_eq!(api.submit_job(&oversized).unwrap_err().status(), 400);
+
+    // ---- tenancy: usage accounting is observable on both clients ----
+    // (absolute counts differ — the wire client pays per HTTP request,
+    // the in-process client per SDK call — so only invariants hold)
+    let usage = api.tenant_usage().unwrap();
+    assert!(!usage.project.is_empty());
+    assert!(usage.requests > 0, "every admitted call was counted");
+    assert!(usage.request_bytes + usage.response_bytes > 0, "transfers were metered");
+    assert_eq!(usage.throttled, 0, "permissive defaults never throttle");
+    assert_eq!(usage.rejected, 0);
+    assert!(usage.api_cost > 0.0, "usage prices into a positive bill");
 }
 
 #[test]
@@ -614,6 +677,128 @@ fn seeded_spot_sweep_is_cheaper_and_deterministic_over_the_wire() {
     // and the wire changes nothing: the in-process platform sees the
     // exact same placement, preemption sequence, and bill
     assert_eq!(a, spot_outcome_in_process());
+}
+
+/// Lifetime request cap for the throttling acceptance tests.
+const QUOTA: u64 = 40;
+
+/// A restrictive tenant policy: 200 req/s with a burst of 2 (so
+/// back-to-back calls throttle immediately but refill within ~5ms),
+/// plus a lifetime cap of [`QUOTA`] admitted requests.
+fn throttled_config() -> PlatformConfig {
+    PlatformConfig {
+        tenant: TenantConfig {
+            rate_limit_rps: 200.0,
+            rate_limit_burst: 2.0,
+            request_quota: Some(QUOTA),
+            byte_quota: None,
+        },
+        ..PlatformConfig::default()
+    }
+}
+
+/// ISSUE-6 acceptance, shared across clients: transient rate limiting
+/// is absorbed transparently (the in-process client waits out the
+/// refill; the remote client obeys `retry-after` and re-sends), while
+/// quota exhaustion surfaces as a hard 429 — and usage stays
+/// observable throughout because `GET /v1/tenant` is admission-exempt.
+fn throttled_suite(api: &dyn AcaiApi) {
+    // burst 2 at 200 req/s: most of these 30 back-to-back calls hit an
+    // empty bucket, yet every one succeeds — the client absorbed the
+    // throttle instead of surfacing it
+    for _ in 0..30 {
+        api.jobs(&page(10, None)).unwrap();
+    }
+    let usage = api.tenant_usage().unwrap();
+    assert!(usage.requests >= 30);
+    assert!(usage.throttled >= 1, "rapid fire must have tripped the limiter");
+    assert_eq!(usage.rejected, 0);
+
+    // burn the remaining lifetime quota: unlike a throttle, the hard
+    // 429 is not retryable and surfaces on both clients
+    let mut exhausted = None;
+    for _ in 0..2 * QUOTA {
+        match api.jobs(&page(10, None)) {
+            Ok(_) => {}
+            Err(e) => {
+                exhausted = Some(e);
+                break;
+            }
+        }
+    }
+    let err = exhausted.expect("request quota must exhaust");
+    assert_eq!(err.status(), 429);
+    assert!(err.to_string().contains("quota"), "{err}");
+
+    // observability survives exhaustion
+    let usage = api.tenant_usage().unwrap();
+    assert!(usage.requests <= QUOTA, "nothing admitted past the cap");
+    assert!(usage.rejected >= 1);
+    assert!(usage.api_cost > 0.0, "admitted traffic still bills");
+}
+
+#[test]
+fn in_process_client_absorbs_throttles_until_quota() {
+    let acai = Arc::new(Acai::boot(throttled_config()).unwrap());
+    let root = acai.credentials.root_token().to_string();
+    let (_p, token) = acai.credentials.create_project(&root, "capped", "alice").unwrap();
+    let client = Client::connect(acai.clone(), &token).unwrap();
+    throttled_suite(&client);
+}
+
+#[test]
+fn remote_client_absorbs_throttles_until_quota() {
+    let acai = Arc::new(Acai::boot(throttled_config()).unwrap());
+    let root = acai.credentials.root_token().to_string();
+    let server = Server::serve(0, make_handler(acai.clone())).unwrap();
+    let (_p, remote) =
+        RemoteClient::create_project(server.addr(), &root, "capped", "alice").unwrap();
+    throttled_suite(&remote);
+}
+
+#[test]
+fn rate_limited_request_carries_the_envelope_and_retry_after() {
+    // burst 1 at 0.5 req/s: the second raw request must bounce, and
+    // this test reads the wire bytes the SDK retry loop normally hides
+    let config = PlatformConfig {
+        tenant: TenantConfig {
+            rate_limit_rps: 0.5,
+            rate_limit_burst: 1.0,
+            request_quota: None,
+            byte_quota: None,
+        },
+        ..PlatformConfig::default()
+    };
+    let acai = Arc::new(Acai::boot(config).unwrap());
+    let root = acai.credentials.root_token().to_string();
+    let (_p, token) = acai.credentials.create_project(&root, "raw", "alice").unwrap();
+    let server = Server::serve(0, make_handler(acai.clone())).unwrap();
+
+    let mut conn = HttpConn::connect(server.addr()).unwrap();
+    let headers = [("x-acai-token", token.as_str())];
+    // the first request drains the one-token bucket...
+    assert_eq!(conn.request("GET", "/v1/jobs?limit=10", &headers, b"").unwrap().status, 200);
+    // ...and the second answers 429 through the uniform envelope with
+    // the exact refill wait in `retry-after`
+    let resp = conn.request("GET", "/v1/jobs?limit=10", &headers, b"").unwrap();
+    assert_eq!(resp.status, 429);
+    let wait: f64 = resp
+        .header("retry-after")
+        .expect("throttles are retryable")
+        .parse()
+        .unwrap();
+    assert!(wait > 1.0 && wait <= 2.0, "one token at 0.5 rps refills in ~2s, got {wait}");
+    let rid = resp.header("x-request-id").expect("every response is stamped").to_string();
+    let v = acai::json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    let err = v.get("error").expect("uniform envelope");
+    assert_eq!(err.get("code").and_then(Json::as_str), Some("exhausted"));
+    assert!(err.get("message").and_then(Json::as_str).unwrap().contains("rate limit"));
+    assert_eq!(err.get("request_id").and_then(Json::as_str), Some(rid.as_str()));
+
+    // the bounce was counted as throttled, not admitted
+    let u = acai.tenants.usage(_p);
+    assert_eq!(u.throttled, 1);
+    assert_eq!(u.requests, 1);
 }
 
 /// ISSUE-5 acceptance: the content-addressed data plane end to end.

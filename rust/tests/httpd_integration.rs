@@ -489,6 +489,49 @@ fn missing_content_length_means_empty_body() {
 }
 
 #[test]
+fn stalled_client_does_not_block_other_requests() {
+    // slow-loris liveness: a client that sends half a request line and
+    // stalls must not pin a worker — the probe/park design hands the
+    // connection back to the queue, so everyone else keeps being served
+    let (_acai, server, _root) = serve();
+    let addr = server.addr();
+
+    let mut loris = TcpStream::connect(addr).unwrap();
+    loris.write_all(b"GET /v1/healthz HT").unwrap();
+    // no more bytes: the request line never completes
+
+    let start = Instant::now();
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                for _ in 0..5 {
+                    stream
+                        .write_all(b"GET /v1/healthz HTTP/1.1\r\ncontent-length: 0\r\n\r\n")
+                        .unwrap();
+                    let (status, _) = read_raw_response(&mut reader);
+                    assert_eq!(status, 200);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(
+        start.elapsed() < Duration::from_secs(5),
+        "stalled client starved the pool: {:?}",
+        start.elapsed()
+    );
+    drop(loris);
+    // give the pool a beat to notice the loris hangup before the
+    // server (and its worker threads) are torn down
+    std::thread::sleep(Duration::from_millis(50));
+}
+
+#[test]
 fn concurrent_keep_alive_connections_serve_sequential_requests() {
     let (_acai, server, _root) = serve();
     let addr = server.addr();
