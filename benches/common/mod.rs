@@ -89,6 +89,7 @@ pub fn profile_and_eval(acai: &Arc<Acai>, scale: f64) -> Vec<EvalTrial> {
                         output_fileset: "eval-out".into(),
                         resources: res,
                         pool: None,
+                        data_commit: None,
                     })
                     .expect("submit");
                 pending.push((id, epochs, res));

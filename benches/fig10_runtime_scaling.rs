@@ -19,6 +19,7 @@ fn run(acai: &std::sync::Arc<acai::Acai>, epochs: u32, cpu: f64) -> f64 {
             output_fileset: "fig10-out".into(),
             resources: ResourceConfig::new(cpu, 2048),
             pool: None,
+            data_commit: None,
         })
         .unwrap();
     acai.engine.run_until_idle();

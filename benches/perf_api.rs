@@ -87,6 +87,7 @@ fn main() {
             output_fileset: "out".into(),
             resources: ResourceConfig::new(0.5, 512),
             pool: None,
+            data_commit: None,
         })
         .unwrap();
     let status = client.await_job(job).unwrap();
@@ -156,6 +157,7 @@ fn bench_concurrent(pooled: bool, clients: usize) -> f64 {
             output_fileset: "out".into(),
             resources: ResourceConfig::new(0.5, 512),
             pool: None,
+            data_commit: None,
         })
         .unwrap();
     client.await_job(job).unwrap();

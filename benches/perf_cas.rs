@@ -93,6 +93,7 @@ fn main() {
                 output_fileset: format!("{name}-out"),
                 resources: ResourceConfig::new(1.0, 1024),
                 pool: None,
+                data_commit: None,
             })
             .unwrap()
     };

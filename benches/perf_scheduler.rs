@@ -65,6 +65,7 @@ fn main() {
                 output_fileset: format!("perf-{n}-out"),
                 resources: acai::cluster::ResourceConfig::new(0.5, 512),
                 pool: None,
+                data_commit: None,
             })
             .unwrap();
         acai.engine.run_until_idle();

@@ -41,6 +41,7 @@ fn main() {
                     profile: None,
                     objective: None,
                     pool: None,
+                    data_commit: None,
                 },
             )
             .expect("create sweep");

@@ -1,0 +1,100 @@
+//! Perf: datalake time travel — commit latency over wide lakes and
+//! chunk-level diff of a 1%-changed snapshot pair.
+//!
+//! Commits are copy-on-write over manifest rows (no bytes move), so
+//! commit latency should scale with path count, not data volume; diff
+//! is a per-path multiset comparison of manifests, so a 1% change
+//! should cost roughly one full table scan regardless of churn size.
+
+mod common;
+
+use std::sync::Arc;
+
+use acai::Acai;
+use common::*;
+
+/// Upload `paths` small distinct files under `/lake/`.
+fn fill_lake(acai: &Acai, paths: usize) {
+    // batch uploads so the fixture setup stays fast
+    let mut batch: Vec<(String, Vec<u8>)> = Vec::with_capacity(paths);
+    for i in 0..paths {
+        batch.push((format!("/lake/f{i:05}"), format!("payload-{i:05}").into_bytes()));
+    }
+    for group in batch.chunks(256) {
+        let files: Vec<(&str, &[u8])> =
+            group.iter().map(|(p, b)| (p.as_str(), b.as_slice())).collect();
+        acai.datalake.storage.upload(P, &files).unwrap();
+    }
+}
+
+fn main() {
+    header(
+        "Perf: datalake time travel",
+        "commits, branches and chunk-level diffs over the §4.4 manifest rows",
+    );
+
+    // ---- commit latency at 1k and 10k live paths ----
+    for paths in [1_000usize, 10_000] {
+        let acai = Arc::new(Acai::boot_default());
+        fill_lake(&acai, paths);
+        let tt = &acai.datalake.timetravel;
+        let ns = bench_ns(1, 5, || {
+            tt.commit(P, "bench").unwrap();
+        });
+        let per_path = ns / paths as f64;
+        println!(
+            "commit of {paths} paths: {:.2} ms ({per_path:.0} ns/path)",
+            ns / 1e6
+        );
+    }
+
+    // ---- diff of a 1%-changed 10k-path lake ----
+    let acai = Arc::new(Acai::boot_default());
+    let paths = 10_000usize;
+    fill_lake(&acai, paths);
+    let tt = &acai.datalake.timetravel;
+    let a = tt.commit(P, "before").unwrap();
+    // churn 1% of the paths: overwrite half of them, delete a quarter,
+    // add a quarter of new ones
+    let churn = paths / 100;
+    for i in 0..churn / 2 {
+        let path = format!("/lake/f{i:05}");
+        acai.datalake
+            .storage
+            .upload(P, &[(path.as_str(), format!("rewritten-{i:05}").as_bytes())])
+            .unwrap();
+    }
+    for i in churn / 2..churn * 3 / 4 {
+        let path = format!("/lake/f{i:05}");
+        acai.datalake.storage.delete_version(P, &path, 1).unwrap();
+    }
+    for i in 0..churn / 4 {
+        let path = format!("/lake/new{i:05}");
+        acai.datalake
+            .storage
+            .upload(P, &[(path.as_str(), format!("born-{i:05}").as_bytes())])
+            .unwrap();
+    }
+    let b = tt.commit(P, "after").unwrap();
+    let diff = tt.diff(P, a.id, b.id).unwrap();
+    assert_eq!(diff.added.len(), churn / 4);
+    assert_eq!(diff.removed.len(), churn / 4);
+    assert_eq!(diff.changed.len(), churn / 2);
+    let ns = bench_ns(1, 10, || {
+        let d = tt.diff(P, a.id, b.id).unwrap();
+        assert!(!d.is_empty());
+    });
+    println!(
+        "diff of 1%-changed {paths}-path lake: {:.2} ms ({} added / {} removed / {} changed)",
+        ns / 1e6,
+        diff.added.len(),
+        diff.removed.len(),
+        diff.changed.len()
+    );
+
+    // self-diff is the degenerate fast path: full scan, zero output
+    let ns = bench_ns(1, 10, || {
+        assert!(tt.diff(P, a.id, a.id).unwrap().is_empty());
+    });
+    println!("self-diff of {paths}-path snapshot: {:.2} ms", ns / 1e6);
+}

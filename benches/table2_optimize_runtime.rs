@@ -26,6 +26,7 @@ fn run_avg(acai: &std::sync::Arc<acai::Acai>, epochs: f64, res: ResourceConfig) 
                 output_fileset: format!("t2-out-{epochs}-{i}"),
                 resources: res,
                 pool: None,
+                data_commit: None,
             })
             .unwrap();
         acai.engine.run_until_idle();

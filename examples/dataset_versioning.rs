@@ -3,7 +3,10 @@
 //! into v2, watch the chunk store dedup the shared prefix, then sweep
 //! two jobs over the shared dataset and watch the second launch land
 //! on the warm node — fewer transferred bytes, earlier finish, smaller
-//! bill.
+//! bill.  The second half is a time-travel tour: commit the lake,
+//! keep mutating it, diff the two snapshots chunk-by-chunk, roll a
+//! branch back, and re-run a job pinned to the commit to reproduce
+//! the original input bytes exactly.
 //!
 //! ```text
 //! cargo run --release --example dataset_versioning
@@ -78,6 +81,7 @@ fn main() -> acai::Result<()> {
         output_fileset: format!("{name}-out"),
         resources: ResourceConfig::new(1.0, 1024),
         pool: Some("edge".into()),
+        data_commit: None,
     };
     let cold = client.await_job(client.submit_job(&job("cold"))?)?;
     let warm = client.await_job(client.submit_job(&job("warm"))?)?;
@@ -104,5 +108,60 @@ fn main() -> acai::Result<()> {
             println!("  {}: {} cached bytes", node.id, node.cached_bytes);
         }
     }
+
+    // ---- time travel: snapshot the lake before touching it again ----
+    let c1 = client.create_commit("corpus as trained on")?;
+    let release = client.create_branch("release", &c1.id)?;
+    println!(
+        "\ncommitted {} ({} files, {} bytes); branch {:?} pins it",
+        c1.id, c1.files, c1.bytes, release.name
+    );
+
+    // mutate past the snapshot: shrink the corpus, add a sidecar file
+    let v3: Vec<u8> = v1[..64 * 1024].to_vec();
+    client.upload(&[("/ds/corpus.bin", &v3)])?;
+    client.upload(&[("/ds/labels.bin", b"0123456789")])?;
+    let c2 = client.create_commit("truncated corpus + labels")?;
+
+    // chunk-level diff: exact byte deltas, computed from manifests only
+    let diff = client.diff_commits(&c1.id, &c2.id)?;
+    for e in &diff.added {
+        println!("diff: + {} ({} bytes)", e.path, e.bytes);
+    }
+    for e in &diff.removed {
+        println!("diff: - {} ({} bytes)", e.path, e.bytes);
+    }
+    for e in &diff.changed {
+        println!(
+            "diff: ~ {} (+{} / -{} bytes across {} chunks)",
+            e.path,
+            e.bytes_added,
+            e.bytes_removed,
+            e.chunks_added + e.chunks_removed
+        );
+    }
+
+    // a job pinned to the commit reads the ORIGINAL bytes — the live
+    // lake's truncated corpus is invisible to it
+    let mut pinned = job("pinned-rerun");
+    pinned.data_commit = Some(c1.id.clone());
+    let rerun = client.await_job(client.submit_job(&pinned)?)?;
+    println!(
+        "pinned re-run against {}: {} ({:.3}s)",
+        c1.id,
+        rerun.state,
+        rerun.runtime_secs.unwrap_or(0.0)
+    );
+
+    // rollback: restore the file table to the snapshot without moving
+    // bytes, then read the original corpus straight off `latest`
+    let rb = client.rollback_branch("release")?;
+    println!(
+        "rollback to {}: {} rows restored, {} repointed, {} removed",
+        rb.commit, rb.restored, rb.repointed, rb.removed
+    );
+    let restored = client.fetch("/ds/corpus.bin", None)?;
+    assert_eq!(restored, v2, "rollback must restore byte-identical reads");
+    println!("corpus.bin reads {} bytes again — bit-identical to v2", restored.len());
     Ok(())
 }

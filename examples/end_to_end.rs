@@ -82,6 +82,7 @@ fn main() -> acai::Result<()> {
                 output_fileset: format!("t2-{tag}-{epochs}-model"),
                 resources: res,
                 pool: None,
+                data_commit: None,
             })?;
             client.wait_all();
             let r = client.job(job)?;

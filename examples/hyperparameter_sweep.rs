@@ -45,6 +45,7 @@ fn main() -> acai::Result<()> {
                 output_fileset: format!("{name}-model"),
                 resources: ResourceConfig::new(2.0, 2048),
                 pool: None,
+                data_commit: None,
             })?;
             jobs.push((job, name));
         }

@@ -48,6 +48,7 @@ fn main() -> acai::Result<()> {
             output_fileset: format!("features-{i}"),
             resources: ResourceConfig::new(1.0, 1024),
             pool: None,
+            data_commit: None,
         })?;
     }
     client.wait_all();

@@ -49,6 +49,7 @@ fn main() -> acai::Result<()> {
         output_fileset: "model".into(),
         resources: ResourceConfig::new(2.0, 2048),
         pool: None,
+        data_commit: None,
     })?;
     client.wait_all();
 

@@ -45,6 +45,7 @@ fn main() -> acai::Result<()> {
         profile: None,
         objective: None,
         pool: None,
+        data_commit: None,
     })?;
     println!("submitted experiment {} with {} trials (quota k=4)", exp.id, exp.trials);
 

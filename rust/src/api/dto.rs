@@ -13,6 +13,9 @@ use crate::cluster::{
     ClusterCounters, NodeSnapshot, NodeSpec, PoolConfig, PoolSnapshot, ResourceConfig,
 };
 use crate::datalake::metadata::ArtifactKind;
+use crate::datalake::{Branch, ChangedEntry, Commit, CommitDiff, DiffEntry};
+use crate::datalake::gc::GcReport;
+use crate::datalake::timetravel::RollbackReport;
 use crate::docstore::{Clause, IndexKey};
 use crate::engine::{
     ExperimentSpec, ExperimentStatus, JobRecord, SweepStrategy, TrialStatus,
@@ -479,6 +482,286 @@ impl DataPlaneMetrics {
 }
 
 // ---------------------------------------------------------------------
+// datalake time travel (commits, branches, diffs)
+// ---------------------------------------------------------------------
+
+/// Wire summary of one datalake commit (`GET /v1/commits/{id}`): the
+/// snapshot identity and its span, not the per-file manifest table
+/// (that stays server-side; `diff` is the chunk-level view of it).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommitInfo {
+    /// `"commit-N"`.
+    pub id: String,
+    pub message: String,
+    pub created_at: f64,
+    /// Live paths the snapshot pins.
+    pub files: u64,
+    /// Total logical bytes across those paths.
+    pub bytes: u64,
+}
+
+impl CommitInfo {
+    pub fn from_commit(c: &Commit) -> CommitInfo {
+        CommitInfo {
+            id: c.id.to_string(),
+            message: c.message.clone(),
+            created_at: c.created,
+            files: c.files.len() as u64,
+            bytes: c.bytes(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("commit", self.id.as_str())
+            .field("message", self.message.as_str())
+            .field("created_at", self.created_at)
+            .field("files", self.files)
+            .field("bytes", self.bytes)
+            .build()
+    }
+
+    pub fn from_json(v: &Json) -> Result<CommitInfo> {
+        let obj = as_object(v)?;
+        check_fields(obj, &["commit", "message", "created_at", "files", "bytes"])?;
+        Ok(CommitInfo {
+            id: str_field(obj, "commit")?,
+            message: str_field(obj, "message")?,
+            created_at: f64_field(obj, "created_at")?,
+            files: u64_field(obj, "files")?,
+            bytes: u64_field(obj, "bytes")?,
+        })
+    }
+}
+
+/// Wire view of one branch (`GET /v1/branches/{name}`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BranchInfo {
+    pub name: String,
+    /// The commit the ref points at (`"commit-N"`).
+    pub commit: String,
+    pub created_at: f64,
+}
+
+impl BranchInfo {
+    pub fn from_branch(b: &Branch) -> BranchInfo {
+        BranchInfo {
+            name: b.name.clone(),
+            commit: b.commit.to_string(),
+            created_at: b.created,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("name", self.name.as_str())
+            .field("commit", self.commit.as_str())
+            .field("created_at", self.created_at)
+            .build()
+    }
+
+    pub fn from_json(v: &Json) -> Result<BranchInfo> {
+        let obj = as_object(v)?;
+        check_fields(obj, &["name", "commit", "created_at"])?;
+        Ok(BranchInfo {
+            name: str_field(obj, "name")?,
+            commit: str_field(obj, "commit")?,
+            created_at: f64_field(obj, "created_at")?,
+        })
+    }
+}
+
+fn diff_entry_to_json(e: &DiffEntry) -> Json {
+    Json::obj()
+        .field("path", e.path.as_str())
+        .field("bytes", e.bytes)
+        .build()
+}
+
+fn diff_entry_from_json(v: &Json) -> Result<DiffEntry> {
+    let obj = as_object(v)?;
+    check_fields(obj, &["path", "bytes"])?;
+    Ok(DiffEntry {
+        path: str_field(obj, "path")?,
+        bytes: u64_field(obj, "bytes")?,
+    })
+}
+
+fn changed_entry_to_json(e: &ChangedEntry) -> Json {
+    Json::obj()
+        .field("path", e.path.as_str())
+        .field("bytes_added", e.bytes_added)
+        .field("bytes_removed", e.bytes_removed)
+        .field("chunks_added", e.chunks_added)
+        .field("chunks_removed", e.chunks_removed)
+        .field("changed_bytes", e.changed_bytes())
+        .build()
+}
+
+fn changed_entry_from_json(v: &Json) -> Result<ChangedEntry> {
+    let obj = as_object(v)?;
+    check_fields(
+        obj,
+        &[
+            "path",
+            "bytes_added",
+            "bytes_removed",
+            "chunks_added",
+            "chunks_removed",
+            "changed_bytes",
+        ],
+    )?;
+    let entry = ChangedEntry {
+        path: str_field(obj, "path")?,
+        bytes_added: u64_field(obj, "bytes_added")?,
+        bytes_removed: u64_field(obj, "bytes_removed")?,
+        chunks_added: u64_field(obj, "chunks_added")?,
+        chunks_removed: u64_field(obj, "chunks_removed")?,
+    };
+    // derived on the wire for readability; must agree with the parts
+    if u64_field(obj, "changed_bytes")? != entry.changed_bytes() {
+        return Err(AcaiError::invalid(
+            "changed_bytes must equal bytes_added + bytes_removed",
+        ));
+    }
+    Ok(entry)
+}
+
+/// `GET /v1/commits/{a}/diff/{b}` — chunk-level comparison, per path.
+pub fn commit_diff_to_json(d: &CommitDiff) -> Json {
+    Json::obj()
+        .field("added", Json::Arr(d.added.iter().map(diff_entry_to_json).collect()))
+        .field(
+            "removed",
+            Json::Arr(d.removed.iter().map(diff_entry_to_json).collect()),
+        )
+        .field(
+            "changed",
+            Json::Arr(d.changed.iter().map(changed_entry_to_json).collect()),
+        )
+        .build()
+}
+
+pub fn commit_diff_from_json(v: &Json) -> Result<CommitDiff> {
+    let obj = as_object(v)?;
+    check_fields(obj, &["added", "removed", "changed"])?;
+    Ok(CommitDiff {
+        added: arr_field(obj, "added")?
+            .iter()
+            .map(diff_entry_from_json)
+            .collect::<Result<_>>()?,
+        removed: arr_field(obj, "removed")?
+            .iter()
+            .map(diff_entry_from_json)
+            .collect::<Result<_>>()?,
+        changed: arr_field(obj, "changed")?
+            .iter()
+            .map(changed_entry_from_json)
+            .collect::<Result<_>>()?,
+    })
+}
+
+/// What `POST /v1/branches/{name}/rollback` touched.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RollbackSummary {
+    pub branch: String,
+    /// The commit the branch resolved to (`"commit-N"`).
+    pub commit: String,
+    /// File rows re-written from the snapshot.
+    pub restored: u64,
+    /// `latest` pointers moved back onto snapshot versions.
+    pub repointed: u64,
+    /// Paths born after the commit, removed from the live table.
+    pub removed: u64,
+}
+
+impl RollbackSummary {
+    pub fn from_report(branch: &str, r: &RollbackReport) -> RollbackSummary {
+        RollbackSummary {
+            branch: branch.to_string(),
+            commit: r.commit.to_string(),
+            restored: r.restored,
+            repointed: r.repointed,
+            removed: r.removed,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("branch", self.branch.as_str())
+            .field("commit", self.commit.as_str())
+            .field("restored", self.restored)
+            .field("repointed", self.repointed)
+            .field("removed", self.removed)
+            .build()
+    }
+
+    pub fn from_json(v: &Json) -> Result<RollbackSummary> {
+        let obj = as_object(v)?;
+        check_fields(obj, &["branch", "commit", "restored", "repointed", "removed"])?;
+        Ok(RollbackSummary {
+            branch: str_field(obj, "branch")?,
+            commit: str_field(obj, "commit")?,
+            restored: u64_field(obj, "restored")?,
+            repointed: u64_field(obj, "repointed")?,
+            removed: u64_field(obj, "removed")?,
+        })
+    }
+}
+
+/// `POST /v1/gc/sweep` — what one sweep deleted and reclaimed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GcSweepReport {
+    /// File versions (no file set or commit referenced them) deleted.
+    pub unreferenced_files: u64,
+    /// Logical bytes those versions spanned.
+    pub reclaimable_bytes: u64,
+    /// Zero-refcount chunks the reclaim pass deleted.
+    pub reclaimed_chunks: u64,
+    /// Stored bytes that reclaim freed.
+    pub reclaimed_chunk_bytes: u64,
+}
+
+impl GcSweepReport {
+    pub fn from_report(r: &GcReport) -> GcSweepReport {
+        GcSweepReport {
+            unreferenced_files: r.unreferenced.len() as u64,
+            reclaimable_bytes: r.reclaimable_bytes as u64,
+            reclaimed_chunks: r.reclaimed_chunks,
+            reclaimed_chunk_bytes: r.reclaimed_chunk_bytes,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("unreferenced_files", self.unreferenced_files)
+            .field("reclaimable_bytes", self.reclaimable_bytes)
+            .field("reclaimed_chunks", self.reclaimed_chunks)
+            .field("reclaimed_chunk_bytes", self.reclaimed_chunk_bytes)
+            .build()
+    }
+
+    pub fn from_json(v: &Json) -> Result<GcSweepReport> {
+        let obj = as_object(v)?;
+        check_fields(
+            obj,
+            &[
+                "unreferenced_files",
+                "reclaimable_bytes",
+                "reclaimed_chunks",
+                "reclaimed_chunk_bytes",
+            ],
+        )?;
+        Ok(GcSweepReport {
+            unreferenced_files: u64_field(obj, "unreferenced_files")?,
+            reclaimable_bytes: u64_field(obj, "reclaimable_bytes")?,
+            reclaimed_chunks: u64_field(obj, "reclaimed_chunks")?,
+            reclaimed_chunk_bytes: u64_field(obj, "reclaimed_chunk_bytes")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
 // tenancy
 // ---------------------------------------------------------------------
 
@@ -546,15 +829,19 @@ impl TenantUsageReport {
 // ---------------------------------------------------------------------
 
 /// Submission payload (`POST /v1/jobs`).  `input_fileset` (a job may
-/// take no input) and `pool` (a placement constraint; `None` = any
-/// pool) are the only optional fields; everything else is required, so
-/// a typo'd or missing field fails loudly instead of submitting a
-/// half-empty job.
+/// take no input), `pool` (a placement constraint; `None` = any
+/// pool) and `data_commit` (pin input resolution to a datalake
+/// commit; `None` = latest) are the only optional fields; everything
+/// else is required, so a typo'd or missing field fails loudly instead
+/// of submitting a half-empty job.
 pub fn job_request_from_json(v: &Json) -> Result<JobRequest> {
     let obj = as_object(v)?;
     check_fields(
         obj,
-        &["name", "command", "input_fileset", "output_fileset", "vcpus", "mem_mb", "pool"],
+        &[
+            "name", "command", "input_fileset", "output_fileset", "vcpus", "mem_mb", "pool",
+            "data_commit",
+        ],
     )?;
     Ok(JobRequest {
         name: str_field(obj, "name")?,
@@ -563,6 +850,7 @@ pub fn job_request_from_json(v: &Json) -> Result<JobRequest> {
         output_fileset: str_field(obj, "output_fileset")?,
         resources: ResourceConfig::new(f64_field(obj, "vcpus")?, u32_field(obj, "mem_mb")?),
         pool: opt_str_field(obj, "pool")?,
+        data_commit: opt_str_field(obj, "data_commit")?,
     })
 }
 
@@ -576,6 +864,9 @@ pub fn job_request_to_json(r: &JobRequest) -> Json {
         .field("mem_mb", r.resources.mem_mb);
     if let Some(pool) = &r.pool {
         b = b.field("pool", pool.as_str());
+    }
+    if let Some(commit) = &r.data_commit {
+        b = b.field("data_commit", commit.as_str());
     }
     b.build()
 }
@@ -834,7 +1125,7 @@ pub fn experiment_spec_from_json(v: &Json) -> Result<ExperimentSpec> {
         obj,
         &[
             "name", "template", "input_fileset", "strategy", "samples", "seed", "vcpus",
-            "mem_mb", "profile", "objective", "pool",
+            "mem_mb", "profile", "objective", "pool", "data_commit",
         ],
     )?;
     let strategy = match str_field(obj, "strategy")?.as_str() {
@@ -872,6 +1163,7 @@ pub fn experiment_spec_from_json(v: &Json) -> Result<ExperimentSpec> {
         profile: opt_str_field(obj, "profile")?,
         objective,
         pool: opt_str_field(obj, "pool")?,
+        data_commit: opt_str_field(obj, "data_commit")?,
     })
 }
 
@@ -894,6 +1186,9 @@ pub fn experiment_spec_to_json(s: &ExperimentSpec) -> Json {
     }
     if let Some(pool) = &s.pool {
         b = b.field("pool", pool.as_str());
+    }
+    if let Some(commit) = &s.data_commit {
+        b = b.field("data_commit", commit.as_str());
     }
     b.build()
 }
@@ -1692,5 +1987,97 @@ mod tests {
             let back = objective_from_json(&objective_to_json(&o)).unwrap();
             assert_eq!(back, o);
         }
+    }
+
+    #[test]
+    fn data_commit_pin_round_trips_in_job_and_experiment_payloads() {
+        let v = crate::json::parse(
+            r#"{"name":"j","command":"python t.py --epoch 1","output_fileset":"o","vcpus":1,"mem_mb":512,"data_commit":"commit-3"}"#,
+        )
+        .unwrap();
+        let r = job_request_from_json(&v).unwrap();
+        assert_eq!(r.data_commit.as_deref(), Some("commit-3"));
+        let r2 = job_request_from_json(&job_request_to_json(&r)).unwrap();
+        assert_eq!(r2.data_commit.as_deref(), Some("commit-3"));
+        // absent pin resolves against latest
+        let v = crate::json::parse(
+            r#"{"name":"j","command":"python t.py --epoch 1","output_fileset":"o","vcpus":1,"mem_mb":512}"#,
+        )
+        .unwrap();
+        assert_eq!(job_request_from_json(&v).unwrap().data_commit, None);
+        let v = crate::json::parse(
+            r#"{"name":"s","template":"python t.py --epoch {1,2}","strategy":"grid","vcpus":1,"mem_mb":512,"data_commit":"commit-7"}"#,
+        )
+        .unwrap();
+        let spec = experiment_spec_from_json(&v).unwrap();
+        assert_eq!(spec.data_commit.as_deref(), Some("commit-7"));
+        let back = experiment_spec_from_json(&experiment_spec_to_json(&spec)).unwrap();
+        assert_eq!(back.data_commit.as_deref(), Some("commit-7"));
+    }
+
+    #[test]
+    fn commit_and_branch_dtos_round_trip_strictly() {
+        let info = CommitInfo {
+            id: "commit-4".into(),
+            message: "nightly snapshot".into(),
+            created_at: 12.5,
+            files: 3,
+            bytes: 4096,
+        };
+        assert_eq!(CommitInfo::from_json(&info.to_json()).unwrap(), info);
+        // unknown field is a 400, not ignored
+        let v = crate::json::parse(
+            r#"{"commit":"commit-4","message":"m","created_at":0,"files":1,"bytes":2,"sha":"x"}"#,
+        )
+        .unwrap();
+        assert_eq!(CommitInfo::from_json(&v).unwrap_err().status(), 400);
+        let branch = BranchInfo {
+            name: "main".into(),
+            commit: "commit-4".into(),
+            created_at: 1.0,
+        };
+        assert_eq!(BranchInfo::from_json(&branch.to_json()).unwrap(), branch);
+        let rollback = RollbackSummary {
+            branch: "main".into(),
+            commit: "commit-4".into(),
+            restored: 1,
+            repointed: 2,
+            removed: 3,
+        };
+        assert_eq!(
+            RollbackSummary::from_json(&rollback.to_json()).unwrap(),
+            rollback
+        );
+        let gc = GcSweepReport {
+            unreferenced_files: 2,
+            reclaimable_bytes: 64,
+            reclaimed_chunks: 5,
+            reclaimed_chunk_bytes: 320,
+        };
+        assert_eq!(GcSweepReport::from_json(&gc.to_json()).unwrap(), gc);
+    }
+
+    #[test]
+    fn commit_diff_round_trips_and_validates_derived_totals() {
+        let diff = CommitDiff {
+            added: vec![DiffEntry { path: "/d/new".into(), bytes: 7 }],
+            removed: vec![DiffEntry { path: "/d/old".into(), bytes: 9 }],
+            changed: vec![ChangedEntry {
+                path: "/d/mut".into(),
+                bytes_added: 12,
+                bytes_removed: 4,
+                chunks_added: 3,
+                chunks_removed: 1,
+            }],
+        };
+        let back = commit_diff_from_json(&commit_diff_to_json(&diff)).unwrap();
+        assert_eq!(back, diff);
+        // a wire payload whose changed_bytes disagrees with its parts
+        // is corrupt, not trusted
+        let v = crate::json::parse(
+            r#"{"added":[],"removed":[],"changed":[{"path":"/f","bytes_added":1,"bytes_removed":1,"chunks_added":1,"chunks_removed":1,"changed_bytes":5}]}"#,
+        )
+        .unwrap();
+        assert_eq!(commit_diff_from_json(&v).unwrap_err().status(), 400);
     }
 }

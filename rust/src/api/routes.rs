@@ -7,8 +7,11 @@
 //! |-------------|-----------|
 //! | projects    | `POST /v1/projects` (public bootstrap) |
 //! | users       | `POST /v1/users` |
-//! | files       | `GET/POST /v1/files`, `GET /v1/files/{path}` (`?offset=&len=` for ranged reads), `GET /v1/files/{path}/versions`, `GET /v1/files/{path}/stat` (chunk manifest) |
+//! | files       | `GET/POST /v1/files`, `GET /v1/files/{path}` (`?offset=&len=` for ranged reads), `DELETE /v1/files/{path}?version=`, `GET /v1/files/{path}/versions`, `GET /v1/files/{path}/stat` (chunk manifest) |
 //! | file sets   | `GET/POST /v1/filesets`, `GET /v1/filesets/{name}/trace`, `.../lineage` |
+//! | commits     | `POST /v1/commits` (snapshot the lake), `GET /v1/commits`, `GET/DELETE /v1/commits/{id}`, `GET /v1/commits/{a}/diff/{b}` (chunk-level diff) |
+//! | branches    | `GET/POST /v1/branches`, `GET/DELETE /v1/branches/{name}`, `POST /v1/branches/{name}/rollback` |
+//! | gc          | `POST /v1/gc/sweep` (delete unreferenced versions + reclaim zero-ref chunks; commit-pinned data survives) |
 //! | jobs        | `POST /v1/jobs` (202), `GET /v1/jobs`, `GET /v1/jobs/{id}`, `GET /v1/jobs/{id}/logs`, `POST /v1/jobs/{id}/kill` |
 //! | experiments | `POST /v1/experiments` (202), `GET /v1/experiments`, `GET /v1/experiments/{id}`, `.../trials`, `.../best?metric=&mode=` |
 //! | metadata    | `GET /v1/metadata/{kind}/{id}`, `POST /v1/metadata/{kind}/query`, `POST /v1/metadata/{kind}/{id}/tags` (body may carry `expected_version` for an optimistic-concurrency guard; stale = 409) |
@@ -56,8 +59,22 @@ pub fn v1_router(metrics: Arc<ApiMetrics>) -> Router {
     r.route("GET", "/v1/files", h(list_files));
     r.route("POST", "/v1/files", h(upload_files));
     r.route("GET", "/v1/files/{path}", h(download_file));
+    r.route("DELETE", "/v1/files/{path}", h(delete_file));
     r.route("GET", "/v1/files/{path}/versions", h(list_file_versions));
     r.route("GET", "/v1/files/{path}/stat", h(stat_file));
+
+    // ---- datalake time travel ----
+    r.route("POST", "/v1/commits", h(create_commit));
+    r.route("GET", "/v1/commits", h(list_commits));
+    r.route("GET", "/v1/commits/{id}", h(get_commit));
+    r.route("DELETE", "/v1/commits/{id}", h(delete_commit));
+    r.route("GET", "/v1/commits/{a}/diff/{b}", h(diff_commits));
+    r.route("POST", "/v1/branches", h(create_branch));
+    r.route("GET", "/v1/branches", h(list_branches));
+    r.route("GET", "/v1/branches/{name}", h(get_branch));
+    r.route("DELETE", "/v1/branches/{name}", h(delete_branch));
+    r.route("POST", "/v1/branches/{name}/rollback", h(rollback_branch));
+    r.route("POST", "/v1/gc/sweep", h(gc_sweep));
 
     // ---- file sets + provenance ----
     r.route("GET", "/v1/filesets", h(list_file_sets));
@@ -256,6 +273,129 @@ fn list_file_versions(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
         out.items.iter().map(|v| Json::from(*v)).collect(),
         &out.next,
     )))
+}
+
+/// `DELETE /v1/files/{path}?version=` — remove one file version.  The
+/// version is required: deleting "the file" implicitly would race
+/// concurrent uploads.
+fn delete_file(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let path = ctx.params.raw("path")?.to_string();
+    let version = ctx
+        .query
+        .version("version")?
+        .ok_or_else(|| AcaiError::invalid("missing ?version="))?;
+    ctx.client()?.delete_file(&path, version)?;
+    Ok(Response::json(
+        &Json::obj()
+            .field("path", path.as_str())
+            .field("version", version)
+            .field("deleted", true)
+            .build(),
+    ))
+}
+
+// ---------------------------------------------------------------------
+// datalake time travel
+// ---------------------------------------------------------------------
+
+/// `POST /v1/commits` — snapshot every live file path into an
+/// immutable commit.  Body: `{"message": "..."}` (optional).
+fn create_commit(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let message = if req.body.is_empty() {
+        String::new()
+    } else {
+        let body = req.json()?;
+        let obj = dto::as_object(&body)?;
+        dto::check_fields(obj, &["message"])?;
+        dto::opt_str_field(obj, "message")?.unwrap_or_default()
+    };
+    let info = ctx.client()?.create_commit(&message)?;
+    Ok(Response::json_with_status(201, &info.to_json()))
+}
+
+fn list_commits(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let commits = ctx.client()?.commits()?;
+    Ok(Response::json(
+        &Json::obj()
+            .field(
+                "commits",
+                Json::Arr(commits.iter().map(|c| c.to_json()).collect()),
+            )
+            .build(),
+    ))
+}
+
+fn get_commit(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let id = ctx.params.raw("id")?.to_string();
+    let info = ctx.client()?.get_commit(&id)?;
+    Ok(Response::json(&info.to_json()))
+}
+
+fn delete_commit(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let id = ctx.params.raw("id")?.to_string();
+    ctx.client()?.delete_commit(&id)?;
+    Ok(Response::json(
+        &Json::obj().field("commit", id.as_str()).field("deleted", true).build(),
+    ))
+}
+
+/// `GET /v1/commits/{a}/diff/{b}` — per-path chunk-level comparison.
+fn diff_commits(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let a = ctx.params.raw("a")?.to_string();
+    let b = ctx.params.raw("b")?.to_string();
+    let diff = ctx.client()?.diff_commits(&a, &b)?;
+    Ok(Response::json(&dto::commit_diff_to_json(&diff)))
+}
+
+/// `POST /v1/branches` — body `{"name": "...", "commit": "commit-N"}`.
+fn create_branch(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let body = req.json()?;
+    let obj = dto::as_object(&body)?;
+    dto::check_fields(obj, &["name", "commit"])?;
+    let name = dto::str_field(obj, "name")?;
+    let commit = dto::str_field(obj, "commit")?;
+    let branch = ctx.client()?.create_branch(&name, &commit)?;
+    Ok(Response::json_with_status(201, &branch.to_json()))
+}
+
+fn list_branches(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let branches = ctx.client()?.branches()?;
+    Ok(Response::json(
+        &Json::obj()
+            .field(
+                "branches",
+                Json::Arr(branches.iter().map(|b| b.to_json()).collect()),
+            )
+            .build(),
+    ))
+}
+
+fn get_branch(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let name = ctx.params.raw("name")?.to_string();
+    let branch = ctx.client()?.get_branch(&name)?;
+    Ok(Response::json(&branch.to_json()))
+}
+
+fn delete_branch(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let name = ctx.params.raw("name")?.to_string();
+    ctx.client()?.delete_branch(&name)?;
+    Ok(Response::json(
+        &Json::obj().field("name", name.as_str()).field("deleted", true).build(),
+    ))
+}
+
+/// `POST /v1/branches/{name}/rollback` — restore the live file table
+/// to the branch's commit without moving chunk bytes.
+fn rollback_branch(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let name = ctx.params.raw("name")?.to_string();
+    let summary = ctx.client()?.rollback_branch(&name)?;
+    Ok(Response::json(&summary.to_json()))
+}
+
+/// `POST /v1/gc/sweep` — one sweep over the caller's project.
+fn gc_sweep(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let report = ctx.client()?.gc_sweep()?;
+    Ok(Response::json(&report.to_json()))
 }
 
 // ---------------------------------------------------------------------

@@ -218,6 +218,26 @@ impl ChunkStore {
         Ok(manifest)
     }
 
+    /// Take one extra reference on every chunk of a manifest — how a
+    /// datalake commit ([`super::timetravel`]) pins its snapshot's
+    /// bytes against `delete_version` and the reclaim pass.  Errors if
+    /// a chunk row is gone (the caller's manifest must still be live).
+    pub fn retain(&self, manifest: &[String]) -> Result<()> {
+        for id in manifest {
+            self.kv.read_modify_write(T_CHUNKS, id, &mut |cur| {
+                let row = cur.ok_or_else(|| {
+                    AcaiError::Storage(format!("chunk {id} already reclaimed; cannot retain"))
+                })?;
+                let refs = row.get("refs").and_then(Json::as_u64).unwrap_or(0);
+                let len = row.get("len").and_then(Json::as_u64).unwrap_or(0);
+                Ok(Rmw::Put(
+                    Json::obj().field("refs", refs + 1).field("len", len).build(),
+                ))
+            })?;
+        }
+        Ok(())
+    }
+
     /// Drop one reference from every chunk of a manifest.  Rows that
     /// reach zero stay behind (with their bytes) as GC candidates.
     pub fn release(&self, manifest: &[String]) -> Result<()> {
@@ -292,15 +312,17 @@ impl ChunkStore {
             .collect()
     }
 
-    /// Delete every zero-ref chunk (row + bytes); returns reclaimed
-    /// bytes.  Each row is re-checked under its own lock, so a chunk
-    /// whose refcount was bumped since the scan survives.  Like the
-    /// rest of the GC sweep (see [`super::gc`]), reclaim is a
-    /// **single-writer maintenance pass**: it must not run concurrently
-    /// with uploads — an ingest racing the row-then-bytes deletion
-    /// could otherwise observe the bytes mid-removal.
-    pub fn reclaim_zero_refs(&self) -> Result<u64> {
-        let mut reclaimed = 0u64;
+    /// Delete every zero-ref chunk (row + bytes); returns
+    /// `(reclaimed chunks, reclaimed bytes)`.  Each row is re-checked
+    /// under its own lock, so a chunk whose refcount was bumped since
+    /// the scan survives.  Like the rest of the GC sweep (see
+    /// [`super::gc`]), reclaim is a **single-writer maintenance
+    /// pass**: it must not run concurrently with uploads — an ingest
+    /// racing the row-then-bytes deletion could otherwise observe the
+    /// bytes mid-removal.
+    pub fn reclaim_zero_refs(&self) -> Result<(u64, u64)> {
+        let mut chunks = 0u64;
+        let mut bytes = 0u64;
         for (id, len) in self.zero_ref_chunks() {
             let mut gone = false;
             self.kv.read_modify_write(T_CHUNKS, &id, &mut |cur| {
@@ -314,10 +336,11 @@ impl ChunkStore {
             })?;
             if gone {
                 self.objects.delete(&chunk_object_key(&id));
-                reclaimed += len;
+                chunks += 1;
+                bytes += len;
             }
         }
-        Ok(reclaimed)
+        Ok((chunks, bytes))
     }
 
     /// The monotonic dedup counter block.
@@ -421,11 +444,28 @@ mod tests {
         // bytes survive until a reclaim pass
         assert!(cas.read(&m[0]).is_ok());
         assert_eq!(cas.zero_ref_chunks(), vec![(m[0].clone(), 4)]);
-        assert_eq!(cas.reclaim_zero_refs().unwrap(), 4);
+        assert_eq!(cas.reclaim_zero_refs().unwrap(), (1, 4));
         assert!(cas.read(&m[0]).is_err());
         assert_eq!(cas.refs(&m[0]), None);
         // a second pass is a no-op
-        assert_eq!(cas.reclaim_zero_refs().unwrap(), 0);
+        assert_eq!(cas.reclaim_zero_refs().unwrap(), (0, 0));
+    }
+
+    #[test]
+    fn retain_pins_a_chunk_through_release() {
+        let cas = store(4);
+        let m = cas.ingest(b"pinn").unwrap();
+        cas.retain(&m).unwrap();
+        assert_eq!(cas.refs(&m[0]), Some(2));
+        // the original owner lets go; the retainer keeps it alive
+        cas.release(&m).unwrap();
+        assert_eq!(cas.refs(&m[0]), Some(1));
+        assert_eq!(cas.reclaim_zero_refs().unwrap(), (0, 0));
+        assert_eq!(&**cas.read(&m[0]).unwrap(), b"pinn");
+        // retaining a reclaimed chunk is an error
+        cas.release(&m).unwrap();
+        cas.reclaim_zero_refs().unwrap();
+        assert!(cas.retain(&m).is_err());
     }
 
     #[test]

@@ -25,6 +25,7 @@ pub mod metadata;
 pub mod provenance;
 pub mod session;
 pub mod storage;
+pub mod timetravel;
 
 pub use acl::{Access, AclStore, Mode};
 pub use cache::FileSetCache;
@@ -34,6 +35,7 @@ pub use metadata::{ArtifactKind, MetadataStore};
 pub use provenance::ProvenanceStore;
 pub use session::{SessionState, UploadSession};
 pub use storage::{FileStat, Storage};
+pub use timetravel::{Branch, ChangedEntry, Commit, CommitDiff, DiffEntry, RollbackReport, TimeTravelStore};
 
 use crate::bus::Bus;
 use crate::ids::IdGen;
@@ -59,6 +61,9 @@ pub struct DataLake {
     /// Content-addressed chunk store — the deduplicating body path
     /// every file version lowers onto.
     pub cas: ChunkStore,
+    /// Time travel (§4.4 upgraded): whole-lake commits, branches,
+    /// chunk-level diffs, rollback.
+    pub timetravel: TimeTravelStore,
 }
 
 impl DataLake {
@@ -76,13 +81,14 @@ impl DataLake {
         let metadata = MetadataStore::new(clock.clone());
         let provenance = ProvenanceStore::new();
         let filesets = FileSetStore::new(
-            kv,
+            kv.clone(),
             storage.clone(),
             metadata.clone(),
             provenance.clone(),
-            clock,
-            ids,
+            clock.clone(),
+            ids.clone(),
         );
+        let timetravel = TimeTravelStore::new(kv, storage.clone(), cas.clone(), clock, ids);
         Self {
             storage,
             filesets,
@@ -91,6 +97,7 @@ impl DataLake {
             acl: AclStore::new(),
             cache: FileSetCache::new(DEFAULT_CACHE_BYTES),
             cas,
+            timetravel,
         }
     }
 

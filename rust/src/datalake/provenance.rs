@@ -21,6 +21,9 @@ use crate::storage::ShardedMap;
 /// Edge kinds (paper Figure 2).
 pub const KIND_JOB: &str = "job_execution";
 pub const KIND_CREATION: &str = "fileset_creation";
+/// A job whose input resolution was pinned to a datalake commit
+/// ([`super::timetravel`]): commit node → output file-set version.
+pub const KIND_COMMIT_PIN: &str = "commit_pin";
 
 /// Canonical node id for a file-set version.
 pub fn node_id(name: &str, version: Version) -> String {
@@ -73,6 +76,24 @@ impl ProvenanceStore {
             &node_id(output.0, output.1),
             &job.to_string(),
             KIND_JOB,
+        )
+    }
+
+    /// Record that `job` resolved its inputs against a pinned datalake
+    /// commit, so lineage queries can answer "what exact lake state
+    /// produced this artifact".
+    pub fn record_commit_pin(
+        &self,
+        project: ProjectId,
+        commit: &str,
+        output: (&str, Version),
+        job: JobId,
+    ) -> Result<()> {
+        self.graph(project).add_edge(
+            commit,
+            &node_id(output.0, output.1),
+            &job.to_string(),
+            KIND_COMMIT_PIN,
         )
     }
 

@@ -622,6 +622,58 @@ impl Storage {
         Ok(())
     }
 
+    /// Restore a deleted file-version row from a snapshot manifest
+    /// (the [`super::timetravel`] rollback path): writes the row back
+    /// if — and only if — it is absent, and returns whether it did.
+    /// The caller owns re-taking the chunk references the original
+    /// delete released (the snapshot's own references keep the chunks
+    /// alive in between).
+    pub fn restore_version(
+        &self,
+        project: ProjectId,
+        path: &str,
+        version: Version,
+        chunks: &[String],
+        size: u64,
+        created: f64,
+    ) -> Result<bool> {
+        let mut wrote = false;
+        self.kv
+            .read_modify_write(T_FILES, &file_key(project, path, version), &mut |cur| {
+                if cur.is_some() {
+                    return Ok(Rmw::Keep);
+                }
+                wrote = true;
+                Ok(Rmw::Put(
+                    Json::obj()
+                        .field(
+                            "chunks",
+                            Json::Arr(chunks.iter().map(|c| Json::from(c.as_str())).collect()),
+                        )
+                        .field("size", size)
+                        .field("created", created)
+                        .build(),
+                ))
+            })?;
+        Ok(wrote)
+    }
+
+    /// Force the `latest` pointer of a path onto an existing version —
+    /// deliberately non-monotonic (unlike
+    /// [`crate::storage::publish_version`]) so a rollback can move
+    /// reads back onto a snapshot version while newer history remains.
+    pub fn set_latest(&self, project: ProjectId, path: &str, version: Version) -> Result<()> {
+        if self.kv.get(T_FILES, &file_key(project, path, version)).is_none() {
+            return Err(AcaiError::not_found(format!("{path}#{version}")));
+        }
+        self.kv.put(
+            T_LATEST,
+            &latest_key(project, path),
+            Json::obj().field("version", version as u64).build(),
+        )?;
+        Ok(())
+    }
+
     /// File size in bytes.
     pub fn size(&self, project: ProjectId, path: &str, version: Version) -> Option<usize> {
         self.kv

@@ -1,0 +1,695 @@
+//! Datalake time travel (ROADMAP item 2): commits, branches, diffs.
+//!
+//! The content-addressed body path ([`super::cas`]) makes whole-lake
+//! snapshots one copy-on-write step away: a **commit** is an immutable,
+//! project-scoped map from every live file path to its manifest row
+//! (path → version, size, ordered chunk ids).  Creating one is
+//! O(manifests) — no bytes move; the commit takes one extra reference
+//! on every chunk it can see, so committed data survives
+//! [`super::Storage::delete_version`] and the GC's reclaim pass until
+//! the commit itself is deleted.
+//!
+//! **Branches** are named mutable refs onto commits with
+//! `create`/`checkout`/`rollback`.  Rollback restores the lake's file
+//! table to the commit's manifest set, again without moving bytes:
+//! deleted rows are re-written from the snapshot (re-taking the chunk
+//! references the delete released), `latest` pointers are repointed at
+//! the snapshot versions, and paths born after the commit are removed.
+//! Version counters never rewind — the claimed-version sequence
+//! ([`crate::storage::claim_version`]) keeps its high-water mark, so
+//! uploads after a rollback continue above every historical version.
+//!
+//! **diff(a, b)** is chunk-level: because chunk ids are content hashes,
+//! comparing two snapshots reduces to a per-path comparison of chunk
+//! multisets, yielding added/removed/changed files with exact
+//! changed-byte counts (the mojo-style `(page → page′, version)` index
+//! idea, with content addresses instead of page tables).
+//!
+//! The engine threads commits through execution: a job, DAG node, or
+//! experiment carrying `data_commit` resolves its input file set
+//! against the pinned snapshot instead of latest
+//! ([`crate::engine::Engine`]), so any sweep is replayable against the
+//! lake exactly as it was.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::error::{AcaiError, Result};
+use crate::ids::{CommitId, IdGen, ProjectId, Version};
+use crate::json::Json;
+use crate::simclock::SimClock;
+use crate::storage::SharedTable;
+
+use super::cas::{chunk_len, ChunkStore};
+use super::storage::Storage;
+
+/// Commit table: `"<proj>|<id:020>"` -> commit row (zero-padded ids so
+/// lexicographic key order is creation order).
+const T_COMMITS: &str = "commits";
+/// Branch table: `"<proj>|<name>"` -> `{commit, created}`.
+const T_BRANCHES: &str = "branches";
+
+fn commit_key(project: ProjectId, id: CommitId) -> String {
+    format!("{}|{:020}", project.raw(), id.raw())
+}
+
+fn branch_key(project: ProjectId, name: &str) -> String {
+    format!("{}|{}", project.raw(), name)
+}
+
+/// Branch names share the file-set naming rules: non-empty, no
+/// separator characters.
+pub fn validate_branch_name(name: &str) -> Result<()> {
+    if name.is_empty() {
+        return Err(AcaiError::invalid("empty branch name"));
+    }
+    if name.contains(['|', '@', ':', '/', '#']) {
+        return Err(AcaiError::invalid(format!(
+            "branch name {name:?} may not contain | @ : / #"
+        )));
+    }
+    Ok(())
+}
+
+/// One file's snapshot inside a commit: the manifest row as it was.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommitFile {
+    pub path: String,
+    pub version: Version,
+    pub size: u64,
+    /// Ordered chunk manifest (each id embeds its own length).
+    pub chunks: Vec<String>,
+}
+
+/// An immutable whole-lake snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Commit {
+    pub id: CommitId,
+    pub message: String,
+    pub created: f64,
+    /// Every live path at commit time, sorted by path.
+    pub files: Vec<CommitFile>,
+}
+
+impl Commit {
+    /// Total logical bytes the snapshot spans.
+    pub fn bytes(&self) -> u64 {
+        self.files.iter().map(|f| f.size).sum()
+    }
+
+    /// The snapshot entry for one path.
+    pub fn file(&self, path: &str) -> Option<&CommitFile> {
+        self.files.iter().find(|f| f.path == path)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .field("id", self.id.raw())
+            .field("message", self.message.as_str())
+            .field("created", self.created)
+            .field(
+                "files",
+                Json::Arr(
+                    self.files
+                        .iter()
+                        .map(|f| {
+                            Json::obj()
+                                .field("path", f.path.as_str())
+                                .field("version", f.version as u64)
+                                .field("size", f.size)
+                                .field(
+                                    "chunks",
+                                    Json::Arr(
+                                        f.chunks
+                                            .iter()
+                                            .map(|c| Json::from(c.as_str()))
+                                            .collect(),
+                                    ),
+                                )
+                                .build()
+                        })
+                        .collect(),
+                ),
+            )
+            .build()
+    }
+
+    fn from_json(row: &Json) -> Result<Commit> {
+        let bad = || AcaiError::Storage("malformed commit row".into());
+        let id = CommitId(row.get("id").and_then(Json::as_u64).ok_or_else(bad)?);
+        let message = row
+            .get("message")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+        let created = row.get("created").and_then(Json::as_f64).unwrap_or(0.0);
+        let mut files = Vec::new();
+        for f in row.get("files").and_then(Json::as_array).unwrap_or(&[]) {
+            files.push(CommitFile {
+                path: f
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .ok_or_else(bad)?
+                    .to_string(),
+                version: f.get("version").and_then(Json::as_u64).ok_or_else(bad)? as Version,
+                size: f.get("size").and_then(Json::as_u64).unwrap_or(0),
+                chunks: f
+                    .get("chunks")
+                    .and_then(Json::as_array)
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|c| c.as_str().map(String::from))
+                    .collect(),
+            });
+        }
+        Ok(Commit {
+            id,
+            message,
+            created,
+            files,
+        })
+    }
+}
+
+/// A named mutable ref onto a commit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Branch {
+    pub name: String,
+    pub commit: CommitId,
+    pub created: f64,
+}
+
+/// A file present in exactly one side of a diff.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffEntry {
+    pub path: String,
+    /// The file's full logical size on the side it exists on.
+    pub bytes: u64,
+}
+
+/// A file present on both sides with different content.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChangedEntry {
+    pub path: String,
+    /// Bytes in chunks the `b` side has that `a` does not (multiset).
+    pub bytes_added: u64,
+    /// Bytes in chunks the `a` side has that `b` does not.
+    pub bytes_removed: u64,
+    /// Distinct-occurrence chunk counts behind those byte totals.
+    pub chunks_added: u64,
+    pub chunks_removed: u64,
+}
+
+impl ChangedEntry {
+    /// Exact changed-byte count: bytes on either side not shared with
+    /// the other.
+    pub fn changed_bytes(&self) -> u64 {
+        self.bytes_added + self.bytes_removed
+    }
+}
+
+/// Chunk-level comparison of two commits, per path.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CommitDiff {
+    /// Paths only in `b` (sorted).
+    pub added: Vec<DiffEntry>,
+    /// Paths only in `a` (sorted).
+    pub removed: Vec<DiffEntry>,
+    /// Paths in both with different manifests (sorted).
+    pub changed: Vec<ChangedEntry>,
+}
+
+impl CommitDiff {
+    pub fn is_empty(&self) -> bool {
+        self.added.is_empty() && self.removed.is_empty() && self.changed.is_empty()
+    }
+}
+
+/// What a rollback touched.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RollbackReport {
+    /// The commit the branch resolved to.
+    pub commit: CommitId,
+    /// File rows re-written from the snapshot (they had been deleted).
+    pub restored: u64,
+    /// `latest` pointers moved back onto snapshot versions.
+    pub repointed: u64,
+    /// Paths born after the commit, removed from the live table.
+    pub removed: u64,
+}
+
+/// The time-travel store.
+#[derive(Clone)]
+pub struct TimeTravelStore {
+    kv: SharedTable,
+    storage: Storage,
+    cas: ChunkStore,
+    clock: SimClock,
+    ids: Arc<IdGen>,
+}
+
+impl TimeTravelStore {
+    pub fn new(
+        kv: SharedTable,
+        storage: Storage,
+        cas: ChunkStore,
+        clock: SimClock,
+        ids: Arc<IdGen>,
+    ) -> Self {
+        Self {
+            kv,
+            storage,
+            cas,
+            clock,
+            ids,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Commits
+    // ------------------------------------------------------------------
+
+    /// Snapshot every live file path of the project.  O(manifests):
+    /// copies manifest rows, never bytes, and takes one reference on
+    /// every chunk so the snapshot pins its content against
+    /// `delete_version` and the GC's reclaim pass.  Like the GC, commit
+    /// creation is a maintenance-style pass: it must not race a sweep
+    /// that could reclaim a manifest between the scan and the retain.
+    pub fn commit(&self, project: ProjectId, message: &str) -> Result<Commit> {
+        let mut listing = self.storage.list(project, "/");
+        listing.sort();
+        let mut files = Vec::with_capacity(listing.len());
+        for (path, version) in listing {
+            let stat = self.storage.stat(project, &path, Some(version))?;
+            self.cas.retain(&stat.chunks)?;
+            files.push(CommitFile {
+                path,
+                version,
+                size: stat.size,
+                chunks: stat.chunks,
+            });
+        }
+        let commit = Commit {
+            id: CommitId(self.ids.next()),
+            message: message.to_string(),
+            created: self.clock.now(),
+            files,
+        };
+        self.kv
+            .put(T_COMMITS, &commit_key(project, commit.id), commit.to_json())?;
+        Ok(commit)
+    }
+
+    /// One commit by id.
+    pub fn get(&self, project: ProjectId, id: CommitId) -> Result<Commit> {
+        let row = self
+            .kv
+            .get(T_COMMITS, &commit_key(project, id))
+            .ok_or_else(|| AcaiError::not_found(format!("{id}")))?;
+        Commit::from_json(&row)
+    }
+
+    /// Every commit of the project, ascending by id.
+    pub fn list(&self, project: ProjectId) -> Vec<Commit> {
+        let prefix = format!("{}|", project.raw());
+        let mut commits: Vec<Commit> = self
+            .kv
+            .scan_prefix(T_COMMITS, &prefix)
+            .iter()
+            .filter_map(|(_, row)| Commit::from_json(row).ok())
+            .collect();
+        commits.sort_by_key(|c| c.id);
+        commits
+    }
+
+    /// Delete a commit, releasing every chunk reference it holds.
+    /// Refused while any branch still points at it.
+    pub fn delete(&self, project: ProjectId, id: CommitId) -> Result<()> {
+        if let Some(b) = self.branches(project).iter().find(|b| b.commit == id) {
+            return Err(AcaiError::conflict(format!(
+                "branch {} still points at {id}",
+                b.name
+            )));
+        }
+        let commit = self.get(project, id)?;
+        self.kv.delete(T_COMMITS, &commit_key(project, id))?;
+        for f in &commit.files {
+            self.cas.release(&f.chunks)?;
+        }
+        Ok(())
+    }
+
+    /// Chunk-level diff: per-path multiset comparison of the two
+    /// snapshots' manifests.  Because chunk ids are content hashes,
+    /// equal manifests mean equal bytes; the changed-byte counts are
+    /// exact (each id embeds its chunk's length).
+    pub fn diff(&self, project: ProjectId, a: CommitId, b: CommitId) -> Result<CommitDiff> {
+        let (ca, cb) = (self.get(project, a)?, self.get(project, b)?);
+        let files_a: HashMap<&str, &CommitFile> =
+            ca.files.iter().map(|f| (f.path.as_str(), f)).collect();
+        let files_b: HashMap<&str, &CommitFile> =
+            cb.files.iter().map(|f| (f.path.as_str(), f)).collect();
+        let mut diff = CommitDiff::default();
+        for f in &ca.files {
+            match files_b.get(f.path.as_str()) {
+                None => diff.removed.push(DiffEntry {
+                    path: f.path.clone(),
+                    bytes: f.size,
+                }),
+                Some(other) if other.chunks != f.chunks => {
+                    let (bytes_added, chunks_added) = multiset_excess(&other.chunks, &f.chunks);
+                    let (bytes_removed, chunks_removed) = multiset_excess(&f.chunks, &other.chunks);
+                    diff.changed.push(ChangedEntry {
+                        path: f.path.clone(),
+                        bytes_added,
+                        bytes_removed,
+                        chunks_added,
+                        chunks_removed,
+                    });
+                }
+                Some(_) => {}
+            }
+        }
+        for f in &cb.files {
+            if !files_a.contains_key(f.path.as_str()) {
+                diff.added.push(DiffEntry {
+                    path: f.path.clone(),
+                    bytes: f.size,
+                });
+            }
+        }
+        diff.added.sort_by(|x, y| x.path.cmp(&y.path));
+        diff.removed.sort_by(|x, y| x.path.cmp(&y.path));
+        diff.changed.sort_by(|x, y| x.path.cmp(&y.path));
+        Ok(diff)
+    }
+
+    /// Every (path, version) any commit of the project pins — the GC
+    /// unions these into its referenced set so committed version rows
+    /// are never swept.
+    pub fn pinned(&self, project: ProjectId) -> Vec<(String, Version)> {
+        self.list(project)
+            .iter()
+            .flat_map(|c| c.files.iter().map(|f| (f.path.clone(), f.version)))
+            .collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Branches
+    // ------------------------------------------------------------------
+
+    /// Create a named ref onto an existing commit.
+    pub fn create_branch(&self, project: ProjectId, name: &str, id: CommitId) -> Result<Branch> {
+        validate_branch_name(name)?;
+        self.get(project, id)?; // must exist
+        let branch = Branch {
+            name: name.to_string(),
+            commit: id,
+            created: self.clock.now(),
+        };
+        let mut existed = false;
+        self.kv
+            .read_modify_write(T_BRANCHES, &branch_key(project, name), &mut |cur| {
+                if cur.is_some() {
+                    existed = true;
+                    return Ok(crate::storage::Rmw::Keep);
+                }
+                Ok(crate::storage::Rmw::Put(
+                    Json::obj()
+                        .field("commit", id.raw())
+                        .field("created", branch.created)
+                        .build(),
+                ))
+            })?;
+        if existed {
+            return Err(AcaiError::conflict(format!("branch {name} already exists")));
+        }
+        Ok(branch)
+    }
+
+    /// One branch by name.
+    pub fn branch(&self, project: ProjectId, name: &str) -> Result<Branch> {
+        let row = self
+            .kv
+            .get(T_BRANCHES, &branch_key(project, name))
+            .ok_or_else(|| AcaiError::not_found(format!("branch {name}")))?;
+        Ok(Branch {
+            name: name.to_string(),
+            commit: CommitId(row.get("commit").and_then(Json::as_u64).unwrap_or(0)),
+            created: row.get("created").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+
+    /// All branches of the project, sorted by name.
+    pub fn branches(&self, project: ProjectId) -> Vec<Branch> {
+        let prefix = format!("{}|", project.raw());
+        let mut out: Vec<Branch> = self
+            .kv
+            .scan_prefix(T_BRANCHES, &prefix)
+            .iter()
+            .filter_map(|(k, row)| {
+                Some(Branch {
+                    name: k.split_once('|')?.1.to_string(),
+                    commit: CommitId(row.get("commit").and_then(Json::as_u64)?),
+                    created: row.get("created").and_then(Json::as_f64).unwrap_or(0.0),
+                })
+            })
+            .collect();
+        out.sort_by(|x, y| x.name.cmp(&y.name));
+        out
+    }
+
+    /// Resolve a branch to its commit snapshot.
+    pub fn checkout(&self, project: ProjectId, name: &str) -> Result<Commit> {
+        let branch = self.branch(project, name)?;
+        self.get(project, branch.commit)
+    }
+
+    /// Drop a branch ref (the commit stays).
+    pub fn delete_branch(&self, project: ProjectId, name: &str) -> Result<()> {
+        if self.kv.get(T_BRANCHES, &branch_key(project, name)).is_none() {
+            return Err(AcaiError::not_found(format!("branch {name}")));
+        }
+        self.kv.delete(T_BRANCHES, &branch_key(project, name))?;
+        Ok(())
+    }
+
+    /// Restore the lake's file table to the branch's commit without
+    /// moving bytes: re-write deleted rows from the snapshot (and
+    /// re-take the chunk references their deletion released), repoint
+    /// `latest` at the snapshot versions, and remove paths born after
+    /// the commit.  Versions newer than the snapshot survive as
+    /// history (the GC reclaims them once nothing references them).
+    /// Like the GC sweep, rollback is a single-writer maintenance pass.
+    pub fn rollback(&self, project: ProjectId, name: &str) -> Result<RollbackReport> {
+        let commit = self.checkout(project, name)?;
+        let mut report = RollbackReport {
+            commit: commit.id,
+            restored: 0,
+            repointed: 0,
+            removed: 0,
+        };
+        for f in &commit.files {
+            if self.storage.restore_version(
+                project,
+                &f.path,
+                f.version,
+                &f.chunks,
+                f.size,
+                commit.created,
+            )? {
+                // the original delete released these refs; the row owns
+                // them again (the commit's own refs kept the chunks
+                // alive in between)
+                self.cas.retain(&f.chunks)?;
+                report.restored += 1;
+            }
+            if self.storage.resolve_version(project, &f.path, None).ok() != Some(f.version) {
+                self.storage.set_latest(project, &f.path, f.version)?;
+                report.repointed += 1;
+            }
+        }
+        let in_commit: HashMap<&str, Version> = commit
+            .files
+            .iter()
+            .map(|f| (f.path.as_str(), f.version))
+            .collect();
+        for (path, _) in self.storage.list(project, "/") {
+            if !in_commit.contains_key(path.as_str()) {
+                for v in self.storage.versions(project, &path) {
+                    self.storage.delete_version(project, &path, v)?;
+                }
+                report.removed += 1;
+            }
+        }
+        Ok(report)
+    }
+}
+
+/// Bytes and occurrences of chunks in `of` beyond their multiplicity in
+/// `over` — the one-sided multiset difference both diff directions use.
+fn multiset_excess(of: &[String], over: &[String]) -> (u64, u64) {
+    let mut counts: HashMap<&str, i64> = HashMap::new();
+    for id in over {
+        *counts.entry(id.as_str()).or_insert(0) += 1;
+    }
+    let mut bytes = 0u64;
+    let mut chunks = 0u64;
+    for id in of {
+        let slot = counts.entry(id.as_str()).or_insert(0);
+        *slot -= 1;
+        if *slot < 0 {
+            bytes += chunk_len(id);
+            chunks += 1;
+        }
+    }
+    (bytes, chunks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bus::Bus;
+    use crate::kvstore::KvStore;
+    use crate::objectstore::ObjectStore;
+
+    const P: ProjectId = ProjectId(1);
+
+    /// A lake over 4-byte chunks so small payloads span manifests.
+    fn lake() -> (TimeTravelStore, Storage, ChunkStore) {
+        let clock = SimClock::new();
+        let bus = Bus::new();
+        let objects = ObjectStore::new(clock.clone(), bus.clone());
+        let kv: SharedTable = Arc::new(KvStore::in_memory());
+        let cas = ChunkStore::with_chunk_size(kv.clone(), objects.clone(), 4);
+        let ids = Arc::new(IdGen::new());
+        let storage = Storage::new(
+            kv.clone(),
+            objects,
+            cas.clone(),
+            bus,
+            clock.clone(),
+            ids.clone(),
+        );
+        let tt = TimeTravelStore::new(kv, storage.clone(), cas.clone(), clock, ids);
+        (tt, storage, cas)
+    }
+
+    #[test]
+    fn commit_snapshots_live_paths_and_pins_chunks() {
+        let (tt, s, cas) = lake();
+        s.upload(P, &[("/a", b"aaaa"), ("/b", b"bbbb")]).unwrap();
+        let c = tt.commit(P, "first").unwrap();
+        assert_eq!(c.files.len(), 2);
+        assert_eq!(c.bytes(), 8);
+        assert_eq!(tt.get(P, c.id).unwrap(), c);
+        // one row ref + one commit ref per chunk
+        for f in &c.files {
+            for id in &f.chunks {
+                assert_eq!(cas.refs(id), Some(2));
+            }
+        }
+        // deleting the only version leaves the commit readable
+        s.delete_version(P, "/a", 1).unwrap();
+        let pinned = tt.get(P, c.id).unwrap();
+        let chunks = &pinned.file("/a").unwrap().chunks;
+        assert_eq!(&**cas.materialize(chunks).unwrap(), b"aaaa");
+        // dropping the commit releases the last ref
+        tt.delete(P, c.id).unwrap();
+        assert_eq!(cas.refs(&chunks[0]), Some(0));
+        assert!(tt.get(P, c.id).is_err());
+    }
+
+    #[test]
+    fn diff_reports_added_removed_changed_with_exact_bytes() {
+        let (tt, s, _) = lake();
+        s.upload(P, &[("/keep", b"same"), ("/mod", b"aaaabbbb"), ("/gone", b"xx")])
+            .unwrap();
+        let a = tt.commit(P, "a").unwrap();
+        // change the tail chunk of /mod, drop /gone, add /new
+        s.upload(P, &[("/mod", b"aaaacccc"), ("/new", b"fresh")]).unwrap();
+        s.delete_version(P, "/gone", 1).unwrap();
+        let b = tt.commit(P, "b").unwrap();
+
+        let d = tt.diff(P, a.id, b.id).unwrap();
+        assert_eq!(d.added, vec![DiffEntry { path: "/new".into(), bytes: 5 }]);
+        assert_eq!(d.removed, vec![DiffEntry { path: "/gone".into(), bytes: 2 }]);
+        assert_eq!(d.changed.len(), 1);
+        let ch = &d.changed[0];
+        assert_eq!(ch.path, "/mod");
+        assert_eq!((ch.bytes_added, ch.bytes_removed), (4, 4)); // one 4-byte chunk each way
+        assert_eq!((ch.chunks_added, ch.chunks_removed), (1, 1));
+        assert_eq!(ch.changed_bytes(), 8);
+
+        // identity and symmetry
+        assert!(tt.diff(P, a.id, a.id).unwrap().is_empty());
+        let rev = tt.diff(P, b.id, a.id).unwrap();
+        assert_eq!(rev.added, d.removed);
+        assert_eq!(rev.removed, d.added);
+        assert_eq!(rev.changed[0].bytes_added, ch.bytes_removed);
+        assert_eq!(rev.changed[0].bytes_removed, ch.bytes_added);
+    }
+
+    #[test]
+    fn rollback_restores_rows_pointers_and_removes_new_paths() {
+        let (tt, s, _) = lake();
+        s.upload(P, &[("/a", b"a-v1"), ("/b", b"b-v1")]).unwrap();
+        let c = tt.commit(P, "baseline").unwrap();
+        tt.create_branch(P, "main", c.id).unwrap();
+        // overwrite /a, delete /b entirely, add /c
+        s.upload(P, &[("/a", b"a-v2-longer"), ("/c", b"new")]).unwrap();
+        s.delete_version(P, "/b", 1).unwrap();
+
+        let report = tt.rollback(P, "main").unwrap();
+        assert_eq!(report.commit, c.id);
+        assert_eq!(report.restored, 1); // /b row re-written
+        assert_eq!(report.repointed, 2); // /a back to v1, /b pointer re-created
+        assert_eq!(report.removed, 1); // /c gone
+        assert_eq!(&**s.read(P, "/a", None).unwrap(), b"a-v1");
+        assert_eq!(&**s.read(P, "/b", None).unwrap(), b"b-v1");
+        assert!(s.read(P, "/c", None).is_err());
+        // history above the snapshot survives; fresh uploads never collide
+        assert_eq!(&**s.read(P, "/a", Some(2)).unwrap(), b"a-v2-longer");
+        let v = s.upload(P, &[("/a", b"a-v3")]).unwrap();
+        assert_eq!(v[0].1, 3);
+        // a second rollback of an already-clean path is a no-op
+        let again = tt.rollback(P, "main").unwrap();
+        assert_eq!(again.restored, 0);
+    }
+
+    #[test]
+    fn branches_are_crud_with_conflicts() {
+        let (tt, s, _) = lake();
+        s.upload(P, &[("/f", b"x")]).unwrap();
+        let c = tt.commit(P, "c").unwrap();
+        let b = tt.create_branch(P, "dev", c.id).unwrap();
+        assert_eq!(b.commit, c.id);
+        assert_eq!(tt.branch(P, "dev").unwrap().commit, c.id);
+        assert_eq!(tt.checkout(P, "dev").unwrap().id, c.id);
+        assert_eq!(tt.branches(P).len(), 1);
+        // duplicates, bad names, dangling commits
+        assert_eq!(tt.create_branch(P, "dev", c.id).unwrap_err().status(), 409);
+        assert_eq!(tt.create_branch(P, "a/b", c.id).unwrap_err().status(), 400);
+        assert_eq!(
+            tt.create_branch(P, "x", CommitId(999)).unwrap_err().status(),
+            404
+        );
+        // a referenced commit cannot be deleted
+        assert_eq!(tt.delete(P, c.id).unwrap_err().status(), 409);
+        tt.delete_branch(P, "dev").unwrap();
+        assert_eq!(tt.delete_branch(P, "dev").unwrap_err().status(), 404);
+        tt.delete(P, c.id).unwrap();
+    }
+
+    #[test]
+    fn commits_are_project_scoped() {
+        let (tt, s, _) = lake();
+        s.upload(ProjectId(1), &[("/f", b"one")]).unwrap();
+        s.upload(ProjectId(2), &[("/f", b"two")]).unwrap();
+        let c1 = tt.commit(ProjectId(1), "p1").unwrap();
+        assert_eq!(tt.list(ProjectId(1)).len(), 1);
+        assert!(tt.list(ProjectId(2)).is_empty());
+        assert_eq!(tt.get(ProjectId(2), c1.id).unwrap_err().status(), 404);
+        assert_eq!(tt.pinned(ProjectId(1)), vec![("/f".to_string(), 1)]);
+    }
+}

@@ -49,6 +49,9 @@ pub struct DagNode {
     pub resources: ResourceConfig,
     /// Constrain the node's container to one named node pool.
     pub pool: Option<String>,
+    /// Pin the node's input resolution to a datalake commit
+    /// (`"commit-N"`); see [`super::JobSpec::data_commit`].
+    pub data_commit: Option<String>,
     /// Names of nodes that must finish before this one launches.
     pub deps: Vec<String>,
 }
@@ -263,6 +266,7 @@ impl<'a> DagRun<'a> {
                 output_fileset: node.output_fileset.clone(),
                 resources: node.resources,
                 pool: node.pool.clone(),
+                data_commit: node.data_commit.clone(),
             };
             match engine.submit(spec) {
                 Ok(id) => {
@@ -433,6 +437,7 @@ mod tests {
             output_fileset: format!("{name}-out"),
             resources: ResourceConfig::new(0.5, 512),
             pool: None,
+            data_commit: None,
             deps: deps.iter().map(|d| d.to_string()).collect(),
         }
     }

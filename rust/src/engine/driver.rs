@@ -100,6 +100,7 @@ mod tests {
             output_fileset: format!("{name}-out"),
             resources: ResourceConfig::new(0.5, 512),
             pool: None,
+            data_commit: None,
         }
     }
 

@@ -116,6 +116,11 @@ pub struct ExperimentSpec {
     /// per-trial provisioning prices the grid at that pool's multiplier,
     /// so the predicted cost/runtime frontier reflects spot economics.
     pub pool: Option<String>,
+    /// Pin every trial's input resolution to a datalake commit
+    /// (`"commit-N"`): the whole sweep reads the lake exactly as it was
+    /// at the commit, so re-running it reproduces trial metrics
+    /// bit-identically regardless of later uploads or rollbacks.
+    pub data_commit: Option<String>,
 }
 
 /// Summary state of one experiment.
@@ -444,6 +449,7 @@ impl ExperimentStore {
                 output_fileset: format!("{}-trial-{i:04}", spec.name),
                 resources: planned[i].0,
                 pool: spec.pool.clone(),
+                data_commit: spec.data_commit.clone(),
                 deps: Vec::new(),
             })
             .collect();
@@ -953,6 +959,7 @@ mod tests {
             profile: None,
             objective: None,
             pool: None,
+            data_commit: None,
         }
     }
 
@@ -1111,6 +1118,7 @@ mod tests {
                 output_fileset: "decoy-out".into(),
                 resources: ResourceConfig::new(0.5, 512),
                 pool: None,
+                data_commit: None,
             })
             .unwrap();
         fresh.engine.run_until_idle();

@@ -174,6 +174,11 @@ impl ExecutionEngine {
             let (name, version) = parse_fileset_ref(&spec.input_fileset)?;
             self.datalake.filesets.get(spec.project, &name, version)?;
         }
+        if let Some(commit) = &spec.data_commit {
+            // a dangling pin must fail at submit, not at launch
+            let id: crate::ids::CommitId = commit.parse()?;
+            self.datalake.timetravel.get(spec.project, id)?;
+        }
         if spec.output_fileset.is_empty() {
             return Err(AcaiError::invalid("output_fileset must be named"));
         }
@@ -284,16 +289,45 @@ impl ExecutionEngine {
         let mut chunks: Vec<(String, u64)> = Vec::new();
         if !record.spec.input_fileset.is_empty() {
             let (name, version) = parse_fileset_ref(&record.spec.input_fileset)?;
-            // the inter-job cache (§7.1.2) makes repeat downloads free
-            let files = self
-                .datalake
-                .materialize_cached(record.spec.project, &name, version)?;
-            for (_, bytes) in files.iter() {
-                input_bytes += bytes.len();
+            if let Some(commit) = &record.spec.data_commit {
+                // Commit-pinned resolution: the file set names WHICH
+                // paths the job reads; the snapshot decides WHAT BYTES
+                // each path resolves to.  The commit's chunk references
+                // guarantee the bytes exist even if every live version
+                // was deleted or rolled over since.  Bypasses the
+                // file-set cache (keyed on live versions).
+                let id: crate::ids::CommitId = commit.parse()?;
+                let snapshot = self.datalake.timetravel.get(record.spec.project, id)?;
+                let entries =
+                    self.datalake.filesets.get(record.spec.project, &name, version)?;
+                let mut seen = std::collections::HashSet::new();
+                for (path, _) in &entries {
+                    let file = snapshot.file(path).ok_or_else(|| {
+                        AcaiError::not_found(format!("{path} is not in {commit}"))
+                    })?;
+                    // the agent "downloads" the snapshot bytes
+                    input_bytes += self.datalake.cas.materialize(&file.chunks)?.len();
+                    for chunk in &file.chunks {
+                        if seen.insert(chunk.clone()) {
+                            chunks.push((
+                                chunk.clone(),
+                                crate::datalake::cas::chunk_len(chunk),
+                            ));
+                        }
+                    }
+                }
+            } else {
+                // the inter-job cache (§7.1.2) makes repeat downloads free
+                let files = self
+                    .datalake
+                    .materialize_cached(record.spec.project, &name, version)?;
+                for (_, bytes) in files.iter() {
+                    input_bytes += bytes.len();
+                }
+                chunks = self
+                    .datalake
+                    .fileset_chunks(record.spec.project, &name, version)?;
             }
-            chunks = self
-                .datalake
-                .fileset_chunks(record.spec.project, &name, version)?;
         }
         let cmd = JobCommand::parse(&record.spec.command)?;
         // Checkpointed rescheduling: a preempted job keeps its original
@@ -554,6 +588,15 @@ impl ExecutionEngine {
                 job,
             )?;
         }
+        // A pinned job's lineage names the exact lake state it read.
+        if let Some(commit) = &record.spec.data_commit {
+            self.datalake.provenance.record_commit_pin(
+                project,
+                commit,
+                (&record.spec.output_fileset, out_version),
+                job,
+            )?;
+        }
 
         // Log server: persist logs; auto-tags land on the job AND the
         // output file set (§3.2.3).
@@ -570,20 +613,21 @@ impl ExecutionEngine {
                 .metadata
                 .tag(project, ArtifactKind::FileSet, &fs_id, &tags);
         }
-        self.datalake.metadata.tag(
-            project,
-            ArtifactKind::Job,
-            &job.to_string(),
-            &[
-                ("state".into(), Json::from("finished")),
-                ("runtime_secs".into(), Json::from(runtime)),
-                ("cost".into(), Json::from(cost)),
-                (
-                    "output_fileset".into(),
-                    Json::from(format!("{}:{}", record.spec.output_fileset, out_version)),
-                ),
-            ],
-        );
+        let mut job_tags: Vec<(String, Json)> = vec![
+            ("state".into(), Json::from("finished")),
+            ("runtime_secs".into(), Json::from(runtime)),
+            ("cost".into(), Json::from(cost)),
+            (
+                "output_fileset".into(),
+                Json::from(format!("{}:{}", record.spec.output_fileset, out_version)),
+            ),
+        ];
+        if let Some(commit) = &record.spec.data_commit {
+            job_tags.push(("data_commit".into(), Json::from(commit.as_str())));
+        }
+        self.datalake
+            .metadata
+            .tag(project, ArtifactKind::Job, &job.to_string(), &job_tags);
         Ok(out_version)
     }
 

@@ -33,6 +33,9 @@ pub struct Stage {
     pub resources: ResourceConfig,
     /// Constrain the stage's container to one named node pool.
     pub pool: Option<String>,
+    /// Pin this stage's input resolution to a datalake commit
+    /// (`"commit-N"`; `None` = latest versions).
+    pub data_commit: Option<String>,
 }
 
 /// A pipeline definition.
@@ -76,6 +79,7 @@ impl Pipeline {
                 output_fileset: stage.output_fileset.clone(),
                 resources: stage.resources,
                 pool: stage.pool.clone(),
+                data_commit: stage.data_commit.clone(),
                 deps: prev.iter().cloned().collect(),
             });
             prev = Some(stage.name.clone());
@@ -202,6 +206,7 @@ pub fn replay_downstream(
             output_fileset: record.spec.output_fileset.clone(),
             resources: record.spec.resources,
             pool: record.spec.pool.clone(),
+            data_commit: record.spec.data_commit.clone(),
             deps,
         });
     }
@@ -242,6 +247,7 @@ mod tests {
                     output_fileset: "features".into(),
                     resources: ResourceConfig::new(1.0, 1024),
                     pool: None,
+                    data_commit: None,
                 },
                 Stage {
                     name: "train".into(),
@@ -249,6 +255,7 @@ mod tests {
                     output_fileset: "model".into(),
                     resources: ResourceConfig::new(2.0, 2048),
                     pool: None,
+                    data_commit: None,
                 },
             ],
         }

@@ -44,6 +44,11 @@ pub struct JobSpec {
     /// Constrain placement to one named node pool (`None` = any pool;
     /// unconstrained jobs prefer the cheapest capacity).
     pub pool: Option<String>,
+    /// Pin input resolution to a datalake commit (`"commit-N"`): the
+    /// job reads its input file set's paths from the snapshot instead
+    /// of the live file table, so a replay reproduces exact bytes
+    /// regardless of later uploads, deletes, or rollbacks.
+    pub data_commit: Option<String>,
 }
 
 /// The registry's record of a job.
@@ -108,6 +113,9 @@ impl JobRecord {
         if let Some(pool) = &self.spec.pool {
             b = b.field("pool", pool.as_str());
         }
+        if let Some(commit) = &self.spec.data_commit {
+            b = b.field("data_commit", commit.as_str());
+        }
         if self.preemptions > 0 {
             b = b.field("preemptions", self.preemptions);
         }
@@ -159,6 +167,10 @@ impl JobRecord {
                     mem_mb: field_u64("mem_mb")? as u32,
                 },
                 pool: row.get("pool").and_then(Json::as_str).map(String::from),
+                data_commit: row
+                    .get("data_commit")
+                    .and_then(Json::as_str)
+                    .map(String::from),
             },
             state: JobState::parse(
                 row.get("state").and_then(Json::as_str).unwrap_or_default(),
@@ -338,6 +350,7 @@ mod tests {
             output_fileset: "model".into(),
             resources: ResourceConfig::new(1.0, 1024),
             pool: None,
+            data_commit: None,
         }
     }
 
@@ -415,6 +428,16 @@ mod tests {
         assert_eq!(rec.preemptions, 0);
         assert_eq!(rec.checkpoint, None);
         assert_eq!(rec.spec.pool, None);
+        assert_eq!(rec.spec.data_commit, None);
+    }
+
+    #[test]
+    fn data_commit_round_trips_through_json() {
+        let r = JobRegistry::new();
+        let mut s = spec();
+        s.data_commit = Some("commit-7".into());
+        let id = r.register(s, 0.0).unwrap();
+        assert_eq!(r.get(id).unwrap().spec.data_commit.as_deref(), Some("commit-7"));
     }
 
     #[test]

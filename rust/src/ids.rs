@@ -73,6 +73,10 @@ id_type!(
     /// An experiment: one hyperparameter sweep fanned out as trials
     /// (tracked by [`crate::engine::ExperimentStore`]).
     ExperimentId, "exp");
+id_type!(
+    /// A datalake commit: an immutable whole-lake snapshot
+    /// (tracked by [`crate::datalake::TimeTravelStore`]).
+    CommitId, "commit");
 
 /// Monotonic id generator (one per platform instance). Ids start at 1.
 #[derive(Debug)]

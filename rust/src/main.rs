@@ -109,6 +109,7 @@ fn demo(flags: &HashMap<String, String>) -> acai::Result<()> {
         output_fileset: "model".into(),
         resources: ResourceConfig::new(2.0, 2048),
         pool: None,
+        data_commit: None,
     })?;
     client.wait_all();
     let record = client.job(job)?;

@@ -233,6 +233,7 @@ impl Profiler {
                         output_fileset: format!("profile-{name}-out"),
                         resources: res,
                         pool: None,
+                        data_commit: None,
                     })?;
                     jobs.push((id, combo.clone(), res));
                 }

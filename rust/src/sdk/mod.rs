@@ -22,21 +22,22 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::api::dto::{
-    cut_page, num_cursor, DataPlaneMetrics, FileEntry, FileManifest, JobStatus, LogChunk,
-    NodeStatus, Page, PageReq, PoolSpec, PoolStatus, ProvisionChoice, TenantUsageReport,
-    TraceDir,
+    cut_page, num_cursor, BranchInfo, CommitInfo, DataPlaneMetrics, FileEntry, FileManifest,
+    GcSweepReport, JobStatus, LogChunk, NodeStatus, Page, PageReq, PoolSpec, PoolStatus,
+    ProvisionChoice, RollbackSummary, TenantUsageReport, TraceDir,
 };
 use crate::autoprovision::{Decision, Objective};
 use crate::cluster::ResourceConfig;
 use crate::credential::Identity;
 use crate::datalake::metadata::ArtifactKind;
+use crate::datalake::CommitDiff;
 use crate::docstore::Clause;
 use crate::engine::{
     ExperimentSpec, ExperimentStatus, JobRecord, JobSpec, MetricMode, TrialStatus,
 };
 use crate::error::{AcaiError, Result};
 use crate::graphstore::Edge;
-use crate::ids::{ExperimentId, JobId, TemplateId, Version};
+use crate::ids::{CommitId, ExperimentId, JobId, TemplateId, Version};
 use crate::json::Json;
 use crate::platform::Acai;
 
@@ -89,6 +90,56 @@ pub trait AcaiApi {
     /// List readable file sets (cursor-paginated; `path` holds the
     /// set name).
     fn file_sets(&self, page: &PageReq) -> Result<Page<FileEntry>>;
+
+    /// Delete one file version (the manual cleanup path; GC handles
+    /// the referenced-safety version of this).  Chunk bytes shared
+    /// with surviving versions — or pinned by a commit — live on.
+    fn delete_file(&self, path: &str, version: Version) -> Result<()>;
+
+    // ---- datalake time travel ----
+
+    /// Snapshot every live file path into an immutable commit
+    /// (copy-on-write: manifests are copied, chunk bytes are shared
+    /// and pinned against GC).
+    fn create_commit(&self, message: &str) -> Result<CommitInfo>;
+
+    /// List the project's commits, oldest first.
+    fn commits(&self) -> Result<Vec<CommitInfo>>;
+
+    /// One commit's summary by id (`"commit-N"`).
+    fn get_commit(&self, id: &str) -> Result<CommitInfo>;
+
+    /// Delete a commit, releasing its chunk pins.  A commit a branch
+    /// still points at is a 409.
+    fn delete_commit(&self, id: &str) -> Result<()>;
+
+    /// Chunk-level diff of two commits: added/removed paths with
+    /// their sizes, changed paths with exact changed-byte counts.
+    fn diff_commits(&self, a: &str, b: &str) -> Result<CommitDiff>;
+
+    /// Create a named branch pointing at a commit (409 if the name
+    /// is taken).
+    fn create_branch(&self, name: &str, commit: &str) -> Result<BranchInfo>;
+
+    /// List the project's branches, by name.
+    fn branches(&self) -> Result<Vec<BranchInfo>>;
+
+    /// One branch by name.
+    fn get_branch(&self, name: &str) -> Result<BranchInfo>;
+
+    /// Delete a branch ref (the commit it pointed at survives).
+    fn delete_branch(&self, name: &str) -> Result<()>;
+
+    /// Restore the live file table to the branch's commit: deleted
+    /// rows come back, `latest` pointers move onto snapshot versions,
+    /// and paths born after the commit leave the live table — all
+    /// without moving chunk bytes.
+    fn rollback_branch(&self, name: &str) -> Result<RollbackSummary>;
+
+    /// Run one GC sweep over the project: delete unreferenced file
+    /// versions, then reclaim zero-refcount chunks.  Commit-pinned
+    /// data survives.
+    fn gc_sweep(&self) -> Result<GcSweepReport>;
 
     // ---- metadata ----
 
@@ -218,6 +269,10 @@ pub struct JobRequest {
     /// Constrain placement to one named node pool (`None` = any pool;
     /// unconstrained jobs prefer the cheapest capacity).
     pub pool: Option<String>,
+    /// Pin input-fileset resolution to a datalake commit (`"commit-N"`;
+    /// `None` = latest versions).  The fileset names *which* paths the
+    /// job reads; the snapshot decides *what bytes* they resolve to.
+    pub data_commit: Option<String>,
 }
 
 /// A token-authenticated SDK client.
@@ -441,6 +496,7 @@ impl Client {
             output_fileset: request.output_fileset,
             resources: request.resources,
             pool: request.pool,
+            data_commit: request.data_commit,
         })
     }
 
@@ -517,6 +573,7 @@ impl Client {
             output_fileset: output_fileset.to_string(),
             resources: decision.config,
             pool: None,
+            data_commit: None,
         })
     }
 }
@@ -676,6 +733,117 @@ impl AcaiApi for Client {
             .collect();
         entries.sort_by(|a, b| a.path.cmp(&b.path));
         Ok(cut_page(entries, &page, |e| e.path.clone()))
+    }
+
+    fn delete_file(&self, path: &str, version: Version) -> Result<()> {
+        self.admit(0)?;
+        // deleting needs the same grant as writing
+        self.acai.datalake.acl.check(
+            self.identity.project,
+            &format!("file:{path}"),
+            self.identity.user,
+            crate::datalake::Access::Write,
+        )?;
+        self.acai
+            .datalake
+            .storage
+            .delete_version(self.identity.project, path, version)
+    }
+
+    fn create_commit(&self, message: &str) -> Result<CommitInfo> {
+        self.admit(0)?;
+        let commit = self
+            .acai
+            .datalake
+            .timetravel
+            .commit(self.identity.project, message)?;
+        Ok(CommitInfo::from_commit(&commit))
+    }
+
+    fn commits(&self) -> Result<Vec<CommitInfo>> {
+        self.admit(0)?;
+        Ok(self
+            .acai
+            .datalake
+            .timetravel
+            .list(self.identity.project)
+            .iter()
+            .map(CommitInfo::from_commit)
+            .collect())
+    }
+
+    fn get_commit(&self, id: &str) -> Result<CommitInfo> {
+        self.admit(0)?;
+        let id: CommitId = id.parse()?;
+        let commit = self.acai.datalake.timetravel.get(self.identity.project, id)?;
+        Ok(CommitInfo::from_commit(&commit))
+    }
+
+    fn delete_commit(&self, id: &str) -> Result<()> {
+        self.admit(0)?;
+        let id: CommitId = id.parse()?;
+        self.acai.datalake.timetravel.delete(self.identity.project, id)
+    }
+
+    fn diff_commits(&self, a: &str, b: &str) -> Result<CommitDiff> {
+        self.admit(0)?;
+        let a: CommitId = a.parse()?;
+        let b: CommitId = b.parse()?;
+        self.acai.datalake.timetravel.diff(self.identity.project, a, b)
+    }
+
+    fn create_branch(&self, name: &str, commit: &str) -> Result<BranchInfo> {
+        self.admit(0)?;
+        let id: CommitId = commit.parse()?;
+        let branch = self
+            .acai
+            .datalake
+            .timetravel
+            .create_branch(self.identity.project, name, id)?;
+        Ok(BranchInfo::from_branch(&branch))
+    }
+
+    fn branches(&self) -> Result<Vec<BranchInfo>> {
+        self.admit(0)?;
+        Ok(self
+            .acai
+            .datalake
+            .timetravel
+            .branches(self.identity.project)
+            .iter()
+            .map(BranchInfo::from_branch)
+            .collect())
+    }
+
+    fn get_branch(&self, name: &str) -> Result<BranchInfo> {
+        self.admit(0)?;
+        let branch = self.acai.datalake.timetravel.branch(self.identity.project, name)?;
+        Ok(BranchInfo::from_branch(&branch))
+    }
+
+    fn delete_branch(&self, name: &str) -> Result<()> {
+        self.admit(0)?;
+        self.acai
+            .datalake
+            .timetravel
+            .delete_branch(self.identity.project, name)
+    }
+
+    fn rollback_branch(&self, name: &str) -> Result<RollbackSummary> {
+        self.admit(0)?;
+        let report = self
+            .acai
+            .datalake
+            .timetravel
+            .rollback(self.identity.project, name)?;
+        Ok(RollbackSummary::from_report(name, &report))
+    }
+
+    fn gc_sweep(&self) -> Result<GcSweepReport> {
+        self.admit(0)?;
+        let report = crate::datalake::gc::GarbageCollector::new(&self.acai.datalake)
+            .sweep(self.identity.project)?;
+        Ok(GcSweepReport::from_report(&report))
     }
 
     fn metadata_doc(&self, kind: ArtifactKind, id: &str) -> Result<Json> {

@@ -12,13 +12,14 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::api::dto::{
-    self, b64_decode, b64_encode, DataPlaneMetrics, FileEntry, FileManifest, JobStatus,
-    LogChunk, NodeStatus, Page, PageReq, PoolSpec, PoolStatus, ProvisionChoice,
-    TenantUsageReport, TraceDir,
+    self, b64_decode, b64_encode, BranchInfo, CommitInfo, DataPlaneMetrics, FileEntry,
+    FileManifest, GcSweepReport, JobStatus, LogChunk, NodeStatus, Page, PageReq, PoolSpec,
+    PoolStatus, ProvisionChoice, RollbackSummary, TenantUsageReport, TraceDir,
 };
 use crate::api::router::percent_encode;
 use crate::autoprovision::Objective;
 use crate::datalake::metadata::ArtifactKind;
+use crate::datalake::CommitDiff;
 use crate::docstore::Clause;
 use crate::engine::{ExperimentSpec, ExperimentStatus, MetricMode, TrialStatus};
 use crate::error::{AcaiError, Result};
@@ -199,6 +200,10 @@ impl RemoteClient {
     fn post(&self, path: &str, body: &Json) -> Result<Json> {
         self.call("POST", path, Some(body))
     }
+
+    fn delete(&self, path: &str) -> Result<Json> {
+        self.call("DELETE", path, None)
+    }
 }
 
 /// Append `?limit=&after=` to a path (with `&` if it already has a
@@ -309,6 +314,84 @@ impl AcaiApi for RemoteClient {
 
     fn file_sets(&self, page: &PageReq) -> Result<Page<FileEntry>> {
         dto::page_from_json(&self.get(&with_page("/v1/filesets", page))?, FileEntry::from_json)
+    }
+
+    fn delete_file(&self, path: &str, version: Version) -> Result<()> {
+        self.delete(&format!(
+            "/v1/files/{}?version={version}",
+            percent_encode(path)
+        ))?;
+        Ok(())
+    }
+
+    fn create_commit(&self, message: &str) -> Result<CommitInfo> {
+        let resp = self.post(
+            "/v1/commits",
+            &Json::obj().field("message", message).build(),
+        )?;
+        CommitInfo::from_json(&resp)
+    }
+
+    fn commits(&self) -> Result<Vec<CommitInfo>> {
+        let resp = self.get("/v1/commits")?;
+        dto::arr_field(dto::as_object(&resp)?, "commits")?
+            .iter()
+            .map(CommitInfo::from_json)
+            .collect()
+    }
+
+    fn get_commit(&self, id: &str) -> Result<CommitInfo> {
+        CommitInfo::from_json(&self.get(&format!("/v1/commits/{}", percent_encode(id)))?)
+    }
+
+    fn delete_commit(&self, id: &str) -> Result<()> {
+        self.delete(&format!("/v1/commits/{}", percent_encode(id)))?;
+        Ok(())
+    }
+
+    fn diff_commits(&self, a: &str, b: &str) -> Result<CommitDiff> {
+        dto::commit_diff_from_json(&self.get(&format!(
+            "/v1/commits/{}/diff/{}",
+            percent_encode(a),
+            percent_encode(b)
+        ))?)
+    }
+
+    fn create_branch(&self, name: &str, commit: &str) -> Result<BranchInfo> {
+        let resp = self.post(
+            "/v1/branches",
+            &Json::obj().field("name", name).field("commit", commit).build(),
+        )?;
+        BranchInfo::from_json(&resp)
+    }
+
+    fn branches(&self) -> Result<Vec<BranchInfo>> {
+        let resp = self.get("/v1/branches")?;
+        dto::arr_field(dto::as_object(&resp)?, "branches")?
+            .iter()
+            .map(BranchInfo::from_json)
+            .collect()
+    }
+
+    fn get_branch(&self, name: &str) -> Result<BranchInfo> {
+        BranchInfo::from_json(&self.get(&format!("/v1/branches/{}", percent_encode(name)))?)
+    }
+
+    fn delete_branch(&self, name: &str) -> Result<()> {
+        self.delete(&format!("/v1/branches/{}", percent_encode(name)))?;
+        Ok(())
+    }
+
+    fn rollback_branch(&self, name: &str) -> Result<RollbackSummary> {
+        let resp = self.post(
+            &format!("/v1/branches/{}/rollback", percent_encode(name)),
+            &Json::obj().build(),
+        )?;
+        RollbackSummary::from_json(&resp)
+    }
+
+    fn gc_sweep(&self) -> Result<GcSweepReport> {
+        GcSweepReport::from_json(&self.post("/v1/gc/sweep", &Json::obj().build())?)
     }
 
     fn metadata_doc(&self, kind: ArtifactKind, id: &str) -> Result<Json> {

@@ -165,6 +165,7 @@ pub fn run_study(
             output_fileset: format!("study-out-{i}"),
             resources: ResourceConfig::new(8.0, 8192),
             pool: None,
+            data_commit: None,
         })
         .collect();
     let records = acai.engine.run_batch(specs)?;

@@ -33,6 +33,7 @@ fn job_request(name: &str, input: &str, output: &str) -> JobRequest {
         output_fileset: output.into(),
         resources: ResourceConfig::new(1.0, 1024),
         pool: None,
+        data_commit: None,
     }
 }
 
@@ -46,6 +47,7 @@ fn experiment_spec(name: &str, template: &str, input: &str) -> ExperimentSpec {
         profile: None,
         objective: None,
         pool: None,
+        data_commit: None,
     }
 }
 
@@ -895,6 +897,222 @@ fn locality_outcome(api: &dyn AcaiApi) -> (u64, u64, u64, u64) {
         warm.runtime_secs.unwrap().to_bits(),
         warm.cost.unwrap().to_bits(),
     )
+}
+
+// ---------------------------------------------------------------------------
+// Datalake time travel: commits, branches, diffs, pinned replay
+// ---------------------------------------------------------------------------
+
+/// Parse the byte count out of the agent's download log line
+/// (`agent: input fileset NAME (N bytes) downloaded; ...`).
+fn downloaded_bytes(api: &dyn AcaiApi, id: JobId) -> u64 {
+    let chunk = api.job_logs(id, 0).unwrap();
+    let line = chunk
+        .lines
+        .iter()
+        .find(|l| l.contains("input fileset"))
+        .expect("agent download line");
+    line.split('(')
+        .nth(1)
+        .and_then(|rest| rest.split(' ').next())
+        .unwrap()
+        .parse()
+        .unwrap()
+}
+
+/// The time-travel acceptance flow: snapshot → mutate → exact chunk
+/// diff → commit-pinned reads vs live reads → GC survival → rollback
+/// → pinned replay.  Returns every float observable as raw bits so the
+/// two client runs can be compared for bit-identical replay.
+fn time_travel_outcome(api: &dyn AcaiApi) -> (u64, u64, u64, u64, u64, u64) {
+    // ---- v1 lake state, snapshotted ----
+    api.upload(&[
+        ("/tt/a.bin", b"alpha-original"), // 14 bytes
+        ("/tt/b.bin", b"bravo-stable"),   // 12 bytes
+        ("/tt/c.bin", b"charlie-doomed"), // 14 bytes
+    ])
+    .unwrap();
+    api.make_file_set("tt-corpus", &["/tt/a.bin", "/tt/b.bin", "/tt/c.bin"]).unwrap();
+    let c1 = api.create_commit("v1 of the corpus").unwrap();
+    assert_eq!(c1.files, 3);
+    assert_eq!(c1.bytes, 40);
+    assert_eq!(api.get_commit(&c1.id).unwrap().message, "v1 of the corpus");
+    assert_eq!(api.commits().unwrap().len(), 1);
+    assert_eq!(api.get_commit("commit-999").unwrap_err().status(), 404);
+
+    // a branch names the snapshot; the ref protects it from deletion
+    let release = api.create_branch("release", &c1.id).unwrap();
+    assert_eq!(release.commit, c1.id);
+    assert_eq!(api.get_branch("release").unwrap().commit, c1.id);
+    assert_eq!(api.branches().unwrap().len(), 1);
+    assert_eq!(api.create_branch("release", &c1.id).unwrap_err().status(), 409);
+    assert_eq!(api.create_branch("bad/name", &c1.id).unwrap_err().status(), 400);
+    assert_eq!(api.delete_commit(&c1.id).unwrap_err().status(), 409);
+
+    // a dangling pin fails at submit, never at launch
+    let mut dangling = job_request("tt-dangling", "tt-corpus:1", "tt-x");
+    dangling.data_commit = Some("commit-999".into());
+    assert_eq!(api.submit_job(&dangling).unwrap_err().status(), 404);
+
+    // ---- mutate the lake past the snapshot ----
+    api.upload(&[("/tt/a.bin", b"alpha-rewritten-and-longer")]).unwrap(); // 26 bytes
+    api.delete_file("/tt/c.bin", 1).unwrap();
+    assert_eq!(api.fetch("/tt/c.bin", Some(1)).unwrap_err().status(), 404);
+    api.upload(&[("/tt/d.bin", b"delta-new")]).unwrap(); // 9 bytes
+    api.make_file_set("tt-corpus", &["/tt/a.bin", "/tt/b.bin", "/tt/d.bin"]).unwrap();
+    let c2 = api.create_commit("v2 of the corpus").unwrap();
+    assert_eq!(c2.files, 3);
+    assert_eq!(c2.bytes, 26 + 12 + 9);
+    assert_eq!(api.commits().unwrap().len(), 2);
+
+    // ---- chunk-level diff: exact per-file deltas ----
+    let diff = api.diff_commits(&c1.id, &c2.id).unwrap();
+    assert_eq!(diff.added.len(), 1);
+    assert_eq!(diff.added[0].path, "/tt/d.bin");
+    assert_eq!(diff.added[0].bytes, 9);
+    assert_eq!(diff.removed.len(), 1);
+    assert_eq!(diff.removed[0].path, "/tt/c.bin");
+    assert_eq!(diff.removed[0].bytes, 14);
+    assert_eq!(diff.changed.len(), 1);
+    let ch = &diff.changed[0];
+    assert_eq!(ch.path, "/tt/a.bin");
+    assert_eq!(
+        (ch.bytes_added, ch.bytes_removed, ch.chunks_added, ch.chunks_removed),
+        (26, 14, 1, 1)
+    );
+    assert_eq!(ch.changed_bytes(), 40);
+    // identity: a commit never differs from itself
+    assert!(api.diff_commits(&c1.id, &c1.id).unwrap().is_empty());
+    // symmetry: swapping sides swaps added/removed and the byte columns
+    let back = api.diff_commits(&c2.id, &c1.id).unwrap();
+    assert_eq!(back.added[0].path, "/tt/c.bin");
+    assert_eq!(back.removed[0].path, "/tt/d.bin");
+    assert_eq!((back.changed[0].bytes_added, back.changed[0].bytes_removed), (14, 26));
+
+    // ---- a sweep pinned to the snapshot runs against deleted data ----
+    let mut pinned_spec = experiment_spec(
+        "tt-pinned",
+        "python train_mnist.py --epoch {1,2,3}",
+        "tt-corpus:1",
+    );
+    pinned_spec.data_commit = Some(c1.id.clone());
+    let exp = api.create_experiment(&pinned_spec).unwrap();
+    let done = api.await_experiment(exp.id).unwrap();
+    assert_eq!(done.state, "completed");
+    assert_eq!(done.finished, 3);
+    let pinned_best = api.best_trial(exp.id, "training_loss", MetricMode::Min).unwrap();
+    let pinned_bits = pinned_best.metric("training_loss").unwrap().to_bits();
+    // a pinned job resolves /tt/c.bin's deleted bytes through the commit
+    let mut pinned_req = job_request("tt-pinned-job", "tt-corpus:1", "tt-pj");
+    pinned_req.data_commit = Some(c1.id.clone());
+    let pj = api.submit_job(&pinned_req).unwrap();
+    assert_eq!(api.await_job(pj).unwrap().state, "finished");
+    let pinned_input = downloaded_bytes(api, pj);
+    assert_eq!(pinned_input, 40, "pinned job reads the snapshot bytes");
+    // the same fileset version UNPINNED cannot launch: the live table
+    // no longer holds v1 of /tt/c.bin
+    let dead = api
+        .submit_job(&job_request("tt-dead", "tt-corpus:1", "tt-dead-out"))
+        .unwrap();
+    assert_ne!(api.await_job(dead).unwrap().state, "finished");
+    // an unpinned job on the live fileset sees the new data
+    let live = api
+        .submit_job(&job_request("tt-live", "tt-corpus", "tt-live-out"))
+        .unwrap();
+    assert_eq!(api.await_job(live).unwrap().state, "finished");
+    let live_input = downloaded_bytes(api, live);
+    assert_eq!(live_input, 47, "unpinned job reads the mutated lake");
+    // ...and so does an unpinned sweep
+    let live_exp = api
+        .create_experiment(&experiment_spec(
+            "tt-live-sweep",
+            "python train_mnist.py --epoch {1,2,3}",
+            "tt-corpus",
+        ))
+        .unwrap();
+    assert_eq!(api.await_experiment(live_exp.id).unwrap().state, "completed");
+    let live_best = api.best_trial(live_exp.id, "training_loss", MetricMode::Min).unwrap();
+    let live_bits = live_best.metric("training_loss").unwrap().to_bits();
+
+    // ---- a full GC sweep spares commit-pinned chunks ----
+    let gc = api.gc_sweep().unwrap();
+    assert_eq!(gc.unreferenced_files, 0, "every live version is pinned");
+    assert_eq!(gc.reclaimed_chunks, 0, "every chunk is held by a row or a commit");
+    let mut post_gc_req = job_request("tt-post-gc", "tt-corpus:1", "tt-gc-out");
+    post_gc_req.data_commit = Some(c1.id.clone());
+    let post_gc = api.submit_job(&post_gc_req).unwrap();
+    assert_eq!(api.await_job(post_gc).unwrap().state, "finished");
+    assert_eq!(downloaded_bytes(api, post_gc), 40, "pinned bytes survive GC");
+
+    // ---- rollback: the branch restores the file table in place ----
+    let report = api.rollback_branch("release").unwrap();
+    assert_eq!(report.commit, c1.id);
+    assert_eq!(report.restored, 1, "/tt/c.bin re-written from the snapshot");
+    // /tt/a.bin moves back onto v1; /tt/c.bin's pointer is recreated
+    assert_eq!(report.repointed, 2);
+    // /tt/d.bin and the jobs' /model outputs were born after the commit
+    assert_eq!(report.removed, 2);
+    assert_eq!(api.fetch("/tt/a.bin", None).unwrap(), b"alpha-original");
+    assert_eq!(api.fetch("/tt/c.bin", None).unwrap(), b"charlie-doomed");
+    assert_eq!(api.fetch("/tt/d.bin", None).unwrap_err().status(), 404);
+    // history above the snapshot survives as explicit versions
+    assert_eq!(api.fetch("/tt/a.bin", Some(2)).unwrap(), b"alpha-rewritten-and-longer");
+
+    // ---- the pinned sweep replays against the rolled-back lake ----
+    let mut replay_spec = experiment_spec(
+        "tt-replay",
+        "python train_mnist.py --epoch {1,2,3}",
+        "tt-corpus:1",
+    );
+    replay_spec.data_commit = Some(c1.id.clone());
+    let replay = api.create_experiment(&replay_spec).unwrap();
+    assert_eq!(api.await_experiment(replay.id).unwrap().state, "completed");
+    let replay_best = api.best_trial(replay.id, "training_loss", MetricMode::Min).unwrap();
+    let replay_bits = replay_best.metric("training_loss").unwrap().to_bits();
+    let mut replay_req = job_request("tt-replay-job", "tt-corpus:1", "tt-rj");
+    replay_req.data_commit = Some(c1.id.clone());
+    let replay_job = api.submit_job(&replay_req).unwrap();
+    assert_eq!(api.await_job(replay_job).unwrap().state, "finished");
+    let replay_input = downloaded_bytes(api, replay_job);
+    assert_eq!(replay_input, pinned_input, "replay reads identical snapshot bytes");
+
+    // branch lifecycle: drop the ref, then the commit becomes deletable
+    api.delete_branch("release").unwrap();
+    assert_eq!(api.get_branch("release").unwrap_err().status(), 404);
+    assert_eq!(api.delete_branch("release").unwrap_err().status(), 404);
+    api.delete_commit(&c2.id).unwrap();
+    assert_eq!(api.commits().unwrap().len(), 1);
+
+    (pinned_bits, live_bits, replay_bits, pinned_input, live_input, replay_input)
+}
+
+#[test]
+fn time_travel_acceptance_in_process() {
+    let acai = Arc::new(Acai::boot_default());
+    let root = acai.credentials.root_token().to_string();
+    let (_p, token) = acai.credentials.create_project(&root, "tt", "alice").unwrap();
+    let client = Client::connect(acai, &token).unwrap();
+    time_travel_outcome(&client);
+}
+
+#[test]
+fn time_travel_replay_is_bit_identical_across_clients() {
+    // in-process client on a fresh platform
+    let acai = Arc::new(Acai::boot_default());
+    let root = acai.credentials.root_token().to_string();
+    let (_p, token) = acai.credentials.create_project(&root, "tt", "alice").unwrap();
+    let client = Client::connect(acai, &token).unwrap();
+    let local = time_travel_outcome(&client);
+
+    // remote client on its own fresh platform behind real HTTP: the
+    // commit pins the same bytes, so the whole timeline — best-trial
+    // metrics included — replays bit-for-bit
+    let acai2 = Arc::new(Acai::boot_default());
+    let root2 = acai2.credentials.root_token().to_string();
+    let server = Server::serve(0, make_handler(acai2)).unwrap();
+    let (_proj, remote) =
+        RemoteClient::create_project(server.addr(), &root2, "tt", "alice").unwrap();
+    assert_eq!(local, time_travel_outcome(&remote), "wire and in-process must agree bitwise");
 }
 
 #[test]

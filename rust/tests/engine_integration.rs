@@ -38,6 +38,7 @@ fn job(name: &str, epochs: u32, res: ResourceConfig) -> JobSpec {
         output_fileset: format!("{name}-out"),
         resources: res,
         pool: None,
+        data_commit: None,
     }
 }
 

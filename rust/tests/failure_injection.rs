@@ -27,6 +27,7 @@ fn job(i: usize) -> JobSpec {
         output_fileset: format!("o{i}"),
         resources: ResourceConfig::new(1.0, 1024),
         pool: None,
+        data_commit: None,
     }
 }
 

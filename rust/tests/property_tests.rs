@@ -266,6 +266,7 @@ fn prop_engine_batches_always_terminate_with_conserved_billing() {
                             (g.usize(2..32) * 256) as u32,
                         ),
                         pool: None,
+                        data_commit: None,
                     })
                     .unwrap(),
             );
@@ -443,6 +444,95 @@ fn prop_chunker_split_join_is_identity_and_deterministic() {
                 cas.materialize_range(&m1, off as u64, len as u64).unwrap(),
                 &bytes[off..off + len]
             );
+        }
+    });
+}
+
+/// Drive a random upload / overwrite / delete sequence over a small
+/// path set (the shared setup for the time-travel properties below).
+fn churn_lake(g: &mut acai::testkit::Gen, acai: &Acai, p: ProjectId, rounds: usize) {
+    let paths = ["/tt/a", "/tt/b", "/tt/c", "/tt/d"];
+    for round in 0..rounds {
+        let path = *g.pick(&paths);
+        match g.usize(0..3) {
+            0 => {
+                // fresh content (length and bytes vary per round)
+                let content: Vec<u8> = (0..g.usize(1..500)).map(|i| (round + i) as u8).collect();
+                acai.datalake.storage.upload(p, &[(path, &content)]).unwrap();
+            }
+            1 => {
+                // duplicate content: exercises chunk sharing across rows
+                acai.datalake.storage.upload(p, &[(path, b"common-payload")]).unwrap();
+            }
+            _ => {
+                // delete a random live version, if any
+                let versions = acai.datalake.storage.versions(p, path);
+                if !versions.is_empty() {
+                    let v = versions[g.usize(0..versions.len())];
+                    acai.datalake.storage.delete_version(p, path, v).unwrap();
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_commits_of_an_unchanged_lake_are_identical() {
+    property("commit determinism", 25, |g| {
+        let acai = Acai::boot_default();
+        let p = ProjectId(1);
+        let rounds = g.usize(1..30);
+        churn_lake(g, &acai, p, rounds);
+        let tt = &acai.datalake.timetravel;
+        // INVARIANT: committing twice with no writes in between captures
+        // the same file table (ids and timestamps aside)
+        let c1 = tt.commit(p, "first").unwrap();
+        let c2 = tt.commit(p, "second").unwrap();
+        assert_eq!(c1.files, c2.files, "snapshot table must be deterministic");
+        assert_eq!(c1.bytes(), c2.bytes());
+        assert!(tt.diff(p, c1.id, c2.id).unwrap().is_empty());
+    });
+}
+
+#[test]
+fn prop_diff_of_a_commit_with_itself_is_empty() {
+    property("diff identity", 25, |g| {
+        let acai = Acai::boot_default();
+        let p = ProjectId(1);
+        let rounds = g.usize(1..30);
+        churn_lake(g, &acai, p, rounds);
+        let c = acai.datalake.timetravel.commit(p, "self").unwrap();
+        // INVARIANT: diff(c, c) reports no drift, ever
+        let d = acai.datalake.timetravel.diff(p, c.id, c.id).unwrap();
+        assert!(d.is_empty(), "self-diff must be empty: {d:?}");
+    });
+}
+
+#[test]
+fn prop_diff_is_symmetric_under_side_swap() {
+    property("diff symmetry", 25, |g| {
+        let acai = Acai::boot_default();
+        let p = ProjectId(1);
+        let rounds = g.usize(1..25);
+        churn_lake(g, &acai, p, rounds);
+        let a = acai.datalake.timetravel.commit(p, "a").unwrap();
+        let rounds = g.usize(1..25);
+        churn_lake(g, &acai, p, rounds);
+        let b = acai.datalake.timetravel.commit(p, "b").unwrap();
+        let fwd = acai.datalake.timetravel.diff(p, a.id, b.id).unwrap();
+        let rev = acai.datalake.timetravel.diff(p, b.id, a.id).unwrap();
+        // INVARIANT: swapping sides swaps added <-> removed exactly
+        assert_eq!(fwd.added, rev.removed);
+        assert_eq!(fwd.removed, rev.added);
+        // INVARIANT: each changed entry mirrors its byte/chunk columns
+        assert_eq!(fwd.changed.len(), rev.changed.len());
+        for (f, r) in fwd.changed.iter().zip(&rev.changed) {
+            assert_eq!(f.path, r.path);
+            assert_eq!(f.bytes_added, r.bytes_removed);
+            assert_eq!(f.bytes_removed, r.bytes_added);
+            assert_eq!(f.chunks_added, r.chunks_removed);
+            assert_eq!(f.chunks_removed, r.chunks_added);
+            assert_eq!(f.changed_bytes(), r.changed_bytes());
         }
     });
 }

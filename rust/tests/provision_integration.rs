@@ -112,6 +112,7 @@ fn optimize_runtime_fixed_cost_beats_baseline() {
                 output_fileset: "verify-out".into(),
                 resources: res,
                 pool: None,
+                data_commit: None,
             })
             .unwrap();
         acai.engine.run_until_idle();

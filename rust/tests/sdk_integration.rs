@@ -42,6 +42,7 @@ fn complete_user_journey() {
             output_fileset: "model".into(),
             resources: ResourceConfig::new(2.0, 2048),
             pool: None,
+            data_commit: None,
         })
         .unwrap();
     client.wait_all();
@@ -85,6 +86,7 @@ fn hyperparameter_sweep_with_metadata_leaderboard() {
                 output_fileset: format!("sweep-{i}-out"),
                 resources: ResourceConfig::new(1.0, 1024),
                 pool: None,
+                data_commit: None,
             })
             .unwrap();
     }
@@ -277,6 +279,7 @@ fn pipeline_chains_stages_and_cache_serves_repeat_inputs() {
                 output_fileset: "features".into(),
                 resources: ResourceConfig::new(1.0, 1024),
                 pool: None,
+                data_commit: None,
             },
             Stage {
                 name: "train".into(),
@@ -284,6 +287,7 @@ fn pipeline_chains_stages_and_cache_serves_repeat_inputs() {
                 output_fileset: "model".into(),
                 resources: ResourceConfig::new(1.0, 1024),
                 pool: None,
+                data_commit: None,
             },
         ],
     };
@@ -304,6 +308,7 @@ fn pipeline_chains_stages_and_cache_serves_repeat_inputs() {
                 output_fileset: format!("re-{i}-out"),
                 resources: ResourceConfig::new(0.5, 512),
                 pool: None,
+                data_commit: None,
             })
             .unwrap();
     }
@@ -324,7 +329,7 @@ fn gc_reclaims_unpinned_versions_via_public_surface() {
     client.create_file_set("pin", &["/d.bin#2"]).unwrap();
     let gc = GarbageCollector::new(&acai.datalake);
     let reclaimed = gc.sweep(client.identity().project).unwrap();
-    assert_eq!(reclaimed, 4); // v1 + v3
+    assert_eq!(reclaimed.reclaimable_bytes, 4); // v1 + v3
     assert!(client.download("/d.bin", Some(2)).is_ok());
     assert!(client.download("/d.bin", Some(1)).is_err());
 }
