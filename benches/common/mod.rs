@@ -90,6 +90,8 @@ pub fn profile_and_eval(acai: &Arc<Acai>, scale: f64) -> Vec<EvalTrial> {
                         resources: res,
                         pool: None,
                         data_commit: None,
+                        priority: acai::engine::Priority::Normal,
+                        gang: 1,
                     })
                     .expect("submit");
                 pending.push((id, epochs, res));

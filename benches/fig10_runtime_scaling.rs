@@ -20,6 +20,8 @@ fn run(acai: &std::sync::Arc<acai::Acai>, epochs: u32, cpu: f64) -> f64 {
             resources: ResourceConfig::new(cpu, 2048),
             pool: None,
             data_commit: None,
+            priority: acai::engine::Priority::Normal,
+            gang: 1,
         })
         .unwrap();
     acai.engine.run_until_idle();

@@ -88,6 +88,8 @@ fn main() {
             resources: ResourceConfig::new(0.5, 512),
             pool: None,
             data_commit: None,
+            priority: acai::engine::Priority::Normal,
+            gang: 1,
         })
         .unwrap();
     let status = client.await_job(job).unwrap();
@@ -158,6 +160,8 @@ fn bench_concurrent(pooled: bool, clients: usize) -> f64 {
             resources: ResourceConfig::new(0.5, 512),
             pool: None,
             data_commit: None,
+            priority: acai::engine::Priority::Normal,
+            gang: 1,
         })
         .unwrap();
     client.await_job(job).unwrap();

@@ -94,6 +94,8 @@ fn main() {
                 resources: ResourceConfig::new(1.0, 1024),
                 pool: None,
                 data_commit: None,
+                priority: acai::engine::Priority::Normal,
+                gang: 1,
             })
             .unwrap()
     };

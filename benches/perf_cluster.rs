@@ -11,6 +11,9 @@ mod common;
 use acai::cluster::{
     placement, AutoscalePolicy, Cluster, ClusterConfig, NodeSpec, PoolConfig, ResourceConfig,
 };
+use acai::engine::{Demand, Priority, Scheduler};
+use acai::ids::{JobId, ProjectId, UserId};
+use acai::prng::Rng;
 use acai::simclock::SimClock;
 use common::*;
 
@@ -110,4 +113,79 @@ fn main() {
         );
         assert!(steps >= 1);
     }
+
+    // ---- weighted-DRF decision latency: steady state, 16 tenants ----
+    let scheduler = Scheduler::new(1_000);
+    scheduler.set_capacity(4_000_000, 16_384_000);
+    for p in 1..=16u64 {
+        scheduler
+            .set_weight(ProjectId(p), [4.0, 2.0, 1.0, 1.0][((p - 1) % 4) as usize])
+            .unwrap();
+    }
+    let demand = Demand { milli_vcpus: 1000, mem_mb: 1024 };
+    let mut n = 0u64;
+    let drf_ns = bench_ns(1_000, 100_000, || {
+        n += 1;
+        let key = (ProjectId(1 + n % 16), UserId(1));
+        scheduler.enqueue_job(key, JobId(n), demand, Priority::Normal);
+        for (k, j) in scheduler.launchable_within(1_000, 1_024) {
+            scheduler.on_terminal(k, j);
+        }
+    });
+    println!(
+        "drf decision: {drf_ns:.0} ns per enqueue->drain->terminal cycle over 16 weighted tenants"
+    );
+    assert!(drf_ns < 20_000.0, "DRF decision too slow: {drf_ns} ns");
+
+    // ---- 10k-job storm: full backlog drained against 4000 slots ----
+    let scheduler = Scheduler::new(100_000);
+    const SLOTS: u64 = 4_000;
+    scheduler.set_capacity(SLOTS * 1000, SLOTS * 1024);
+    for p in 1..=16u64 {
+        scheduler
+            .set_weight(ProjectId(p), [4.0, 2.0, 1.0, 1.0][((p - 1) % 4) as usize])
+            .unwrap();
+    }
+    let mut rng = Rng::new(0xACA1);
+    let start = std::time::Instant::now();
+    for j in 1..=10_000u64 {
+        let key = (ProjectId(1 + rng.below(16)), UserId(1 + rng.below(4)));
+        scheduler.enqueue_job(key, JobId(j), demand, Priority::Normal);
+    }
+    let mut free = SLOTS;
+    let mut running: Vec<((ProjectId, UserId), JobId)> = Vec::new();
+    let mut launched = 0u64;
+    while scheduler.any_queued() || !running.is_empty() {
+        let batch = scheduler.launchable_within(free * 1000, free * 1024);
+        free -= batch.len() as u64;
+        launched += batch.len() as u64;
+        running.extend(batch);
+        let retire = if running.is_empty() {
+            0
+        } else {
+            1 + rng.below(running.len() as u64).min(256)
+        };
+        for _ in 0..retire {
+            let i = rng.below(running.len() as u64) as usize;
+            let (key, job) = running.swap_remove(i);
+            scheduler.on_terminal(key, job);
+            free += 1;
+        }
+    }
+    let storm = start.elapsed();
+    let counters = scheduler.counters();
+    assert_eq!(launched, 10_000);
+    println!(
+        "storm: 10k jobs / 16 tenants drained in {:.1} ms ({} decisions, worst pump {})",
+        storm.as_secs_f64() * 1e3,
+        counters.decisions,
+        counters.max_pump_decisions,
+    );
+    assert!(
+        storm.as_secs_f64() < 5.0,
+        "10k-job storm took {:.2}s — the pump has gone quadratic",
+        storm.as_secs_f64()
+    );
+
+    println!("\nPERF OK");
 }

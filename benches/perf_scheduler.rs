@@ -20,8 +20,8 @@ fn main() {
     let ns = bench_ns(1_000, 200_000, || {
         next += 1;
         scheduler.enqueue(key, JobId(next));
-        for (k, _) in scheduler.launchable() {
-            scheduler.on_terminal(k);
+        for (k, j) in scheduler.launchable() {
+            scheduler.on_terminal(k, j);
         }
     });
     println!(
@@ -42,8 +42,8 @@ fn main() {
         let key = keys[i % keys.len()];
         scheduler.enqueue(key, JobId(i as u64));
         if i % 16 == 0 {
-            for (k, _) in scheduler.launchable() {
-                scheduler.on_terminal(k);
+            for (k, j) in scheduler.launchable() {
+                scheduler.on_terminal(k, j);
             }
         }
     });
@@ -66,6 +66,8 @@ fn main() {
                 resources: acai::cluster::ResourceConfig::new(0.5, 512),
                 pool: None,
                 data_commit: None,
+                priority: acai::engine::Priority::Normal,
+                gang: 1,
             })
             .unwrap();
         acai.engine.run_until_idle();

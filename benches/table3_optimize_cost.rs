@@ -25,6 +25,8 @@ fn run_avg(acai: &std::sync::Arc<acai::Acai>, epochs: f64, res: ResourceConfig) 
                 resources: res,
                 pool: None,
                 data_commit: None,
+                priority: acai::engine::Priority::Normal,
+                gang: 1,
             })
             .unwrap();
         acai.engine.run_until_idle();

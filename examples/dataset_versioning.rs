@@ -82,6 +82,8 @@ fn main() -> acai::Result<()> {
         resources: ResourceConfig::new(1.0, 1024),
         pool: Some("edge".into()),
         data_commit: None,
+        priority: acai::engine::Priority::Normal,
+        gang: 1,
     };
     let cold = client.await_job(client.submit_job(&job("cold"))?)?;
     let warm = client.await_job(client.submit_job(&job("warm"))?)?;

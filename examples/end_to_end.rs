@@ -83,6 +83,8 @@ fn main() -> acai::Result<()> {
                 resources: res,
                 pool: None,
                 data_commit: None,
+                priority: acai::engine::Priority::Normal,
+                gang: 1,
             })?;
             client.wait_all();
             let r = client.job(job)?;

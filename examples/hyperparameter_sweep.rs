@@ -46,6 +46,8 @@ fn main() -> acai::Result<()> {
                 resources: ResourceConfig::new(2.0, 2048),
                 pool: None,
                 data_commit: None,
+                priority: acai::engine::Priority::Normal,
+                gang: 1,
             })?;
             jobs.push((job, name));
         }

@@ -49,6 +49,8 @@ fn main() -> acai::Result<()> {
             resources: ResourceConfig::new(1.0, 1024),
             pool: None,
             data_commit: None,
+            priority: acai::engine::Priority::Normal,
+            gang: 1,
         })?;
     }
     client.wait_all();

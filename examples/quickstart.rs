@@ -50,6 +50,8 @@ fn main() -> acai::Result<()> {
         resources: ResourceConfig::new(2.0, 2048),
         pool: None,
         data_commit: None,
+        priority: acai::engine::Priority::Normal,
+        gang: 1,
     })?;
     client.wait_all();
 

@@ -18,7 +18,8 @@ use crate::datalake::gc::GcReport;
 use crate::datalake::timetravel::RollbackReport;
 use crate::docstore::{Clause, IndexKey};
 use crate::engine::{
-    ExperimentSpec, ExperimentStatus, JobRecord, SweepStrategy, TrialStatus,
+    ExperimentSpec, ExperimentStatus, JobRecord, Priority, ProjectShare,
+    SchedulerCounters, SweepStrategy, TrialStatus,
 };
 use crate::error::{AcaiError, Result};
 use crate::ids::{ExperimentId, JobId, Version};
@@ -830,17 +831,18 @@ impl TenantUsageReport {
 
 /// Submission payload (`POST /v1/jobs`).  `input_fileset` (a job may
 /// take no input), `pool` (a placement constraint; `None` = any
-/// pool) and `data_commit` (pin input resolution to a datalake
-/// commit; `None` = latest) are the only optional fields; everything
-/// else is required, so a typo'd or missing field fails loudly instead
-/// of submitting a half-empty job.
+/// pool), `data_commit` (pin input resolution to a datalake commit;
+/// `None` = latest), `priority` (`low|normal|high`, default `normal`)
+/// and `gang` (all-or-nothing replica count, default 1) are the only
+/// optional fields; everything else is required, so a typo'd or
+/// missing field fails loudly instead of submitting a half-empty job.
 pub fn job_request_from_json(v: &Json) -> Result<JobRequest> {
     let obj = as_object(v)?;
     check_fields(
         obj,
         &[
             "name", "command", "input_fileset", "output_fileset", "vcpus", "mem_mb", "pool",
-            "data_commit",
+            "data_commit", "priority", "gang",
         ],
     )?;
     Ok(JobRequest {
@@ -851,6 +853,17 @@ pub fn job_request_from_json(v: &Json) -> Result<JobRequest> {
         resources: ResourceConfig::new(f64_field(obj, "vcpus")?, u32_field(obj, "mem_mb")?),
         pool: opt_str_field(obj, "pool")?,
         data_commit: opt_str_field(obj, "data_commit")?,
+        priority: match opt_str_field(obj, "priority")? {
+            Some(s) => Priority::parse(&s)?,
+            None => Priority::Normal,
+        },
+        gang: opt_u64_field(obj, "gang")?
+            .map(|g| {
+                u32::try_from(g)
+                    .map_err(|_| AcaiError::invalid(format!("gang {g} out of range")))
+            })
+            .transpose()?
+            .unwrap_or(1),
     })
 }
 
@@ -867,6 +880,13 @@ pub fn job_request_to_json(r: &JobRequest) -> Json {
     }
     if let Some(commit) = &r.data_commit {
         b = b.field("data_commit", commit.as_str());
+    }
+    // defaults stay off the wire so pre-fair-share payloads round-trip
+    if r.priority != Priority::Normal {
+        b = b.field("priority", r.priority.as_str());
+    }
+    if r.gang > 1 {
+        b = b.field("gang", r.gang);
     }
     b.build()
 }
@@ -890,6 +910,10 @@ pub struct JobStatus {
     /// Simulated cold-input transfer seconds folded into
     /// `runtime_secs` (absent when every input byte was node-local).
     pub transfer_secs: Option<f64>,
+    /// Scheduling priority (`normal` when unset).
+    pub priority: Priority,
+    /// All-or-nothing replica count (1 = single container).
+    pub gang: u32,
 }
 
 impl JobStatus {
@@ -912,6 +936,8 @@ impl JobStatus {
             // normalized so the wire (which omits zero) and the
             // in-process path agree: zero transfer reads as absent
             transfer_secs: r.transfer_secs.filter(|t| *t > 0.0),
+            priority: r.spec.priority,
+            gang: r.spec.gang.max(1),
         }
     }
 
@@ -940,6 +966,12 @@ impl JobStatus {
         if let Some(t) = self.transfer_secs {
             b = b.field("transfer_secs", t);
         }
+        if self.priority != Priority::Normal {
+            b = b.field("priority", self.priority.as_str());
+        }
+        if self.gang > 1 {
+            b = b.field("gang", self.gang);
+        }
         b.build()
     }
 
@@ -957,8 +989,50 @@ impl JobStatus {
             error: opt_str_field(obj, "error")?,
             preemptions: opt_u64_field(obj, "preemptions")?.unwrap_or(0),
             transfer_secs: opt_f64_field(obj, "transfer_secs")?,
+            priority: match opt_str_field(obj, "priority")? {
+                Some(s) => Priority::parse(&s)?,
+                None => Priority::Normal,
+            },
+            gang: opt_u64_field(obj, "gang")?.unwrap_or(1) as u32,
         })
     }
+}
+
+// ---------------------------------------------------------------------
+// scheduler metrics
+// ---------------------------------------------------------------------
+
+/// The `scheduler` block of `GET /v1/metrics`: monotonic decision
+/// counters plus every project's live weighted-DRF share.
+pub fn scheduler_metrics_to_json(
+    counters: &SchedulerCounters,
+    shares: &[ProjectShare],
+) -> Json {
+    Json::obj()
+        .field("decisions", counters.decisions)
+        .field("launched", counters.launched)
+        .field("requeues", counters.requeues)
+        .field("evictions", counters.evictions)
+        .field("last_pump_decisions", counters.last_pump_decisions)
+        .field("max_pump_decisions", counters.max_pump_decisions)
+        .field(
+            "projects",
+            Json::Arr(
+                shares
+                    .iter()
+                    .map(|s| {
+                        Json::obj()
+                            .field("project", s.project.to_string())
+                            .field("weight", s.weight)
+                            .field("share", s.share)
+                            .field("queued", s.queued as u64)
+                            .field("active", s.active as u64)
+                            .build()
+                    })
+                    .collect(),
+            ),
+        )
+        .build()
 }
 
 /// One slice of a job log (`GET /v1/jobs/{id}/logs?offset=`).
@@ -1976,6 +2050,77 @@ mod tests {
         )
         .unwrap();
         assert_eq!(JobStatus::from_json(&v).unwrap().preemptions, 3);
+    }
+
+    #[test]
+    fn priority_and_gang_round_trip_with_omitted_defaults() {
+        let v = crate::json::parse(
+            r#"{"name":"j","command":"python t.py --epoch 1","output_fileset":"o","vcpus":1,"mem_mb":512,"priority":"high","gang":3}"#,
+        )
+        .unwrap();
+        let r = job_request_from_json(&v).unwrap();
+        assert_eq!(r.priority, Priority::High);
+        assert_eq!(r.gang, 3);
+        let r2 = job_request_from_json(&job_request_to_json(&r)).unwrap();
+        assert_eq!(r2.priority, Priority::High);
+        assert_eq!(r2.gang, 3);
+        // defaults stay off the wire and decode back to defaults
+        let v = crate::json::parse(
+            r#"{"name":"j","command":"python t.py --epoch 1","output_fileset":"o","vcpus":1,"mem_mb":512}"#,
+        )
+        .unwrap();
+        let r = job_request_from_json(&v).unwrap();
+        assert_eq!(r.priority, Priority::Normal);
+        assert_eq!(r.gang, 1);
+        let encoded = job_request_to_json(&r).encode();
+        assert!(!encoded.contains("priority") && !encoded.contains("gang"), "{encoded}");
+        // bad priority strings are 400
+        let v = crate::json::parse(
+            r#"{"name":"j","command":"python t.py --epoch 1","output_fileset":"o","vcpus":1,"mem_mb":512,"priority":"urgent"}"#,
+        )
+        .unwrap();
+        assert_eq!(job_request_from_json(&v).unwrap_err().status(), 400);
+        // job status carries both, defaulting when absent
+        let v = crate::json::parse(
+            r#"{"job":"job-1","name":"j","state":"running","command":"c","submitted_at":0,"priority":"low","gang":2}"#,
+        )
+        .unwrap();
+        let s = JobStatus::from_json(&v).unwrap();
+        assert_eq!(s.priority, Priority::Low);
+        assert_eq!(s.gang, 2);
+        let v = crate::json::parse(
+            r#"{"job":"job-1","name":"j","state":"running","command":"c","submitted_at":0}"#,
+        )
+        .unwrap();
+        let s = JobStatus::from_json(&v).unwrap();
+        assert_eq!(s.priority, Priority::Normal);
+        assert_eq!(s.gang, 1);
+    }
+
+    #[test]
+    fn scheduler_metrics_encode_counters_and_shares() {
+        let counters = SchedulerCounters {
+            decisions: 10,
+            launched: 7,
+            requeues: 2,
+            evictions: 1,
+            last_pump_decisions: 3,
+            max_pump_decisions: 5,
+        };
+        let shares = [ProjectShare {
+            project: crate::ids::ProjectId(4),
+            weight: 2.0,
+            share: 0.25,
+            queued: 6,
+            active: 3,
+        }];
+        let v = scheduler_metrics_to_json(&counters, &shares);
+        assert_eq!(v.get("launched").and_then(Json::as_u64), Some(7));
+        assert_eq!(v.get("max_pump_decisions").and_then(Json::as_u64), Some(5));
+        let p = v.get("projects").and_then(|p| p.at(0)).unwrap();
+        assert_eq!(p.get("project").and_then(Json::as_str), Some("proj-4"));
+        assert_eq!(p.get("weight").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(p.get("queued").and_then(Json::as_u64), Some(6));
     }
 
     #[test]

@@ -5,21 +5,21 @@
 //!
 //! | Resource    | Endpoints |
 //! |-------------|-----------|
-//! | projects    | `POST /v1/projects` (public bootstrap) |
+//! | projects    | `POST /v1/projects` (public bootstrap), `PUT /v1/projects/{name}/weight` (public, root-token-guarded: set the project's fair-share weight) |
 //! | users       | `POST /v1/users` |
 //! | files       | `GET/POST /v1/files`, `GET /v1/files/{path}` (`?offset=&len=` for ranged reads), `DELETE /v1/files/{path}?version=`, `GET /v1/files/{path}/versions`, `GET /v1/files/{path}/stat` (chunk manifest) |
 //! | file sets   | `GET/POST /v1/filesets`, `GET /v1/filesets/{name}/trace`, `.../lineage` |
 //! | commits     | `POST /v1/commits` (snapshot the lake), `GET /v1/commits`, `GET/DELETE /v1/commits/{id}`, `GET /v1/commits/{a}/diff/{b}` (chunk-level diff) |
 //! | branches    | `GET/POST /v1/branches`, `GET/DELETE /v1/branches/{name}`, `POST /v1/branches/{name}/rollback` |
 //! | gc          | `POST /v1/gc/sweep` (delete unreferenced versions + reclaim zero-ref chunks; commit-pinned data survives) |
-//! | jobs        | `POST /v1/jobs` (202), `GET /v1/jobs`, `GET /v1/jobs/{id}`, `GET /v1/jobs/{id}/logs`, `POST /v1/jobs/{id}/kill` |
+//! | jobs        | `POST /v1/jobs` (202; body may carry `priority: low\|normal\|high` and `gang: N` for all-or-nothing multi-container placement), `GET /v1/jobs`, `GET /v1/jobs/{id}`, `GET /v1/jobs/{id}/logs`, `POST /v1/jobs/{id}/kill` |
 //! | experiments | `POST /v1/experiments` (202), `GET /v1/experiments`, `GET /v1/experiments/{id}`, `.../trials`, `.../best?metric=&mode=` |
 //! | metadata    | `GET /v1/metadata/{kind}/{id}`, `POST /v1/metadata/{kind}/query`, `POST /v1/metadata/{kind}/{id}/tags` (body may carry `expected_version` for an optimistic-concurrency guard; stale = 409) |
 //! | provenance  | `GET /v1/provenance` |
 //! | profiles    | `POST /v1/profiles`, `POST /v1/autoprovision` |
 //! | cluster     | `GET /v1/cluster/pools`, `PUT /v1/cluster/pools` (upsert one pool; project-admin), `GET /v1/cluster/nodes` |
 //! | tenancy     | `GET /v1/tenant` (this project's usage/billing counters; exempt from admission) |
-//! | operational | `GET /v1/healthz` (public), `GET /v1/metrics` (per-route stats + cluster/autoscaler/preemption counters + data-plane dedup/transfer block + per-tenant admission counters) |
+//! | operational | `GET /v1/healthz` (public), `GET /v1/metrics` (per-route stats + cluster/autoscaler/preemption counters + data-plane dedup/transfer block + per-tenant admission counters + scheduler block: DRF decision counters and per-project weighted shares) |
 
 use std::sync::Arc;
 
@@ -48,6 +48,9 @@ pub fn v1_router(metrics: Arc<ApiMetrics>) -> Router {
 
     // ---- public: bootstrap + health ----
     r.public("POST", "/v1/projects", h(create_project));
+    // public like project creation: the root token travels in the body
+    // (the global admin has no per-project user token to authenticate)
+    r.public("PUT", "/v1/projects/{name}/weight", h(set_project_weight));
     r.public("GET", "/v1/healthz", h(|_req, _ctx| {
         Ok(Response::json(&Json::obj().field("status", "ok").build()))
     }));
@@ -136,6 +139,13 @@ pub fn v1_router(metrics: Arc<ApiMetrics>) -> Router {
                         "tenants",
                         ctx.acai.tenants.to_json(&ctx.acai.pricing),
                     )
+                    .field(
+                        "scheduler",
+                        dto::scheduler_metrics_to_json(
+                            &ctx.acai.engine.scheduler.counters(),
+                            &ctx.acai.engine.scheduler.project_shares(),
+                        ),
+                    )
                     .build(),
             ))
         }),
@@ -161,6 +171,22 @@ fn create_project(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
         &Json::obj()
             .field("project", pid.to_string())
             .field("admin_token", token)
+            .build(),
+    ))
+}
+
+fn set_project_weight(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let name = ctx.params.raw("name")?;
+    let body = req.json()?;
+    let obj = dto::as_object(&body)?;
+    dto::check_fields(obj, &["root_token", "weight"])?;
+    let root = dto::str_field(obj, "root_token")?;
+    let weight = dto::f64_field(obj, "weight")?;
+    let pid = ctx.acai.set_project_weight(&root, &name, weight)?;
+    Ok(Response::json(
+        &Json::obj()
+            .field("project", pid.to_string())
+            .field("weight", weight)
             .build(),
     ))
 }

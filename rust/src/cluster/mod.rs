@@ -91,7 +91,9 @@ impl ResourceConfig {
         Ok(())
     }
 
-    fn milli_vcpus(&self) -> u64 {
+    /// The request's vCPU demand in milli-vCPUs — the integral unit the
+    /// placer and the fair-share scheduler account in.
+    pub fn milli_vcpus(&self) -> u64 {
         (self.vcpus * 1000.0).round() as u64
     }
 }
@@ -945,6 +947,61 @@ impl Cluster {
                 && p.config.max_nodes > 0
                 && placement::Free::of(p.config.spec).fits(milli, res.mem_mb as u64)
         })
+    }
+
+    /// How many `res`-shaped replicas the cluster could place RIGHT NOW
+    /// on its live nodes' free capacity (restricted to `pool` when
+    /// pinned).  For identical replicas the per-bin greedy count is the
+    /// exact packing (see [`placement::replica_slots`]), so this is the
+    /// gang-scheduling feasibility check: a gang of `g` launches only
+    /// when `free_slots(...) >= g`, and a partially-placeable gang
+    /// therefore holds nothing.
+    pub fn free_slots(&self, res: ResourceConfig, pool: Option<&str>) -> u64 {
+        let milli = res.milli_vcpus();
+        let mem = res.mem_mb as u64;
+        let inner = self.inner.lock().unwrap();
+        let bins: Vec<placement::Free> = inner
+            .nodes
+            .values()
+            .filter(|n| pool.map_or(true, |want| inner.pools[n.pool].config.name == want))
+            .map(|n| {
+                let whole = placement::Free::of(n.spec);
+                placement::Free {
+                    milli_vcpus: whole.milli_vcpus.saturating_sub(n.used_milli),
+                    mem_mb: whole.mem_mb.saturating_sub(n.used_mem as u64),
+                }
+            })
+            .collect();
+        placement::replica_slots(&bins, milli, mem)
+    }
+
+    /// Upper bound on how many `res`-shaped replicas the cluster could
+    /// EVER hold at once: every eligible pool grown to `max_nodes`, all
+    /// nodes empty.  The submit-time guard for gang jobs — a gang
+    /// larger than this can never place and would queue forever.
+    pub fn max_slots(&self, res: ResourceConfig, pool: Option<&str>) -> u64 {
+        let milli = res.milli_vcpus();
+        let mem = res.mem_mb as u64;
+        self.inner
+            .lock()
+            .unwrap()
+            .pools
+            .iter()
+            .filter(|p| pool.map_or(true, |want| p.config.name == want))
+            .map(|p| {
+                let whole = placement::Free::of(p.config.spec);
+                placement::replica_slots(&[whole], milli, mem)
+                    .saturating_mul(p.config.max_nodes as u64)
+            })
+            .fold(0u64, u64::saturating_add)
+    }
+
+    /// The name of the pool a running container sits on.
+    pub fn container_pool(&self, id: ContainerId) -> Option<String> {
+        let inner = self.inner.lock().unwrap();
+        let c = inner.running.get(&id)?;
+        let n = inner.nodes.get(&c.node)?;
+        Some(inner.pools[n.pool].config.name.clone())
     }
 
     /// Is there a pool of this name?

@@ -84,6 +84,27 @@ pub fn plan_nodes(spec: NodeSpec, reqs: &[ResourceConfig]) -> (usize, usize) {
     (bins.len(), unplaceable)
 }
 
+/// How many identical `(milli, mem)` replicas the given free bins can
+/// hold.  For identical replicas the greedy per-bin count IS the
+/// optimal (BFD-equal) packing: each bin independently holds
+/// `min(free_milli/milli, free_mem/mem)` replicas, and replicas are
+/// interchangeable, so summing is exact.  This is the gang-scheduling
+/// feasibility check: a gang launches only when
+/// `replica_slots(...) >= gang`, so a partially-placeable gang holds
+/// nothing.
+pub fn replica_slots(bins: &[Free], milli: u64, mem: u64) -> u64 {
+    if milli == 0 && mem == 0 {
+        return u64::MAX;
+    }
+    bins.iter()
+        .map(|bin| {
+            let by_cpu = if milli == 0 { u64::MAX } else { bin.milli_vcpus / milli };
+            let by_mem = if mem == 0 { u64::MAX } else { bin.mem_mb / mem };
+            by_cpu.min(by_mem)
+        })
+        .sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,6 +143,21 @@ mod tests {
         let (nodes, skipped) = plan_nodes(NODE, &reqs);
         assert_eq!(nodes, 1);
         assert_eq!(skipped, 1);
+    }
+
+    #[test]
+    fn replica_slots_counts_whole_replicas_per_bin() {
+        let bins = [
+            Free { milli_vcpus: 4000, mem_mb: 4096 },
+            Free { milli_vcpus: 1500, mem_mb: 8192 },
+            Free { milli_vcpus: 900, mem_mb: 1024 },
+        ];
+        // 1-vCPU/1GB replicas: 4 + 1 (cpu-bound) + 0 = 5
+        assert_eq!(replica_slots(&bins, 1000, 1024), 5);
+        // memory-bound shape: 2 + 1 + 0 = 3
+        assert_eq!(replica_slots(&bins, 1000, 2048), 3);
+        // nothing fits anywhere
+        assert_eq!(replica_slots(&bins, 8000, 512), 0);
     }
 
     #[test]

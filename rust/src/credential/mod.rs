@@ -40,6 +40,10 @@ struct ProjectRecord {
     #[allow(dead_code)]
     id: ProjectId,
     name: String,
+    /// Fair-share weight: the project's slice of cluster capacity
+    /// relative to its peers (scheduler DRF — see
+    /// [`crate::engine::Scheduler`]).  Default 1.0.
+    weight: f64,
 }
 
 #[derive(Default)]
@@ -107,6 +111,7 @@ impl CredentialServer {
             ProjectRecord {
                 id: pid,
                 name: name.to_string(),
+                weight: 1.0,
             },
         );
         inner.project_names.insert(name.to_string(), pid);
@@ -183,6 +188,45 @@ impl CredentialServer {
     /// Resolve a project by name.
     pub fn project_by_name(&self, name: &str) -> Option<ProjectId> {
         self.inner.lock().unwrap().project_names.get(name).copied()
+    }
+
+    /// Set a project's fair-share weight (global admin only).  Returns
+    /// the project id so the caller can mirror the weight into the
+    /// scheduler.
+    pub fn set_project_weight(
+        &self,
+        root_token: &str,
+        name: &str,
+        weight: f64,
+    ) -> Result<ProjectId> {
+        if root_token != self.root_token {
+            return Err(AcaiError::Forbidden(
+                "only the global administrator can set project weights".into(),
+            ));
+        }
+        if !(weight.is_finite() && weight > 0.0) {
+            return Err(AcaiError::invalid(format!(
+                "weight must be a positive finite number, got {weight}"
+            )));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let pid = *inner
+            .project_names
+            .get(name)
+            .ok_or_else(|| AcaiError::not_found(format!("project {name:?}")))?;
+        inner.projects.get_mut(&pid).unwrap().weight = weight;
+        Ok(pid)
+    }
+
+    /// A project's fair-share weight (1.0 if unknown).
+    pub fn project_weight(&self, project: ProjectId) -> f64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .projects
+            .get(&project)
+            .map(|p| p.weight)
+            .unwrap_or(1.0)
     }
 
     /// Display name of a user (dashboard/metadata "creator" field).
@@ -268,6 +312,19 @@ mod tests {
         assert!(s.create_project(&root, "nlp", "x").is_err());
         s.create_user(&admin, "bob").unwrap();
         assert!(s.create_user(&admin, "bob").is_err());
+    }
+
+    #[test]
+    fn project_weight_is_root_guarded_and_validated() {
+        let s = server();
+        let root = s.root_token().to_string();
+        let (pid, _admin) = s.create_project(&root, "nlp", "alice").unwrap();
+        assert_eq!(s.project_weight(pid), 1.0);
+        assert_eq!(s.set_project_weight("bad", "nlp", 4.0).unwrap_err().status(), 403);
+        assert_eq!(s.set_project_weight(&root, "none", 4.0).unwrap_err().status(), 404);
+        assert_eq!(s.set_project_weight(&root, "nlp", 0.0).unwrap_err().status(), 400);
+        assert_eq!(s.set_project_weight(&root, "nlp", 4.0).unwrap(), pid);
+        assert_eq!(s.project_weight(pid), 4.0);
     }
 
     #[test]

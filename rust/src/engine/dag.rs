@@ -267,6 +267,8 @@ impl<'a> DagRun<'a> {
                 resources: node.resources,
                 pool: node.pool.clone(),
                 data_commit: node.data_commit.clone(),
+                priority: crate::engine::Priority::Normal,
+                gang: 1,
             };
             match engine.submit(spec) {
                 Ok(id) => {

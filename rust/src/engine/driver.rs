@@ -101,6 +101,8 @@ mod tests {
             resources: ResourceConfig::new(0.5, 512),
             pool: None,
             data_commit: None,
+            priority: crate::engine::Priority::Normal,
+            gang: 1,
         }
     }
 

@@ -1119,6 +1119,8 @@ mod tests {
                 resources: ResourceConfig::new(0.5, 512),
                 pool: None,
                 data_commit: None,
+                priority: crate::engine::Priority::Normal,
+                gang: 1,
             })
             .unwrap();
         fresh.engine.run_until_idle();

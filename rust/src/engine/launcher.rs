@@ -77,6 +77,50 @@ impl Launcher {
         self.cluster.autoscale(queued_jobs);
     }
 
+    /// Cluster utilization: (used milli-vCPUs, total milli-vCPUs,
+    /// used MB, total MB) — the fair-share scheduler's normalizers and
+    /// free-capacity bound.
+    pub fn utilization(&self) -> (u64, u64, u64, u64) {
+        self.cluster.utilization()
+    }
+
+    /// How many `res`-shaped replicas fit the cluster's current free
+    /// capacity (gang feasibility check — see [`Cluster::free_slots`]).
+    pub fn free_slots(&self, res: ResourceConfig, pool: Option<&str>) -> u64 {
+        self.cluster.free_slots(res, pool)
+    }
+
+    /// Most replicas the cluster could EVER hold at once (gang
+    /// submit-time guard — see [`Cluster::max_slots`]).
+    pub fn max_slots(&self, res: ResourceConfig, pool: Option<&str>) -> u64 {
+        self.cluster.max_slots(res, pool)
+    }
+
+    /// The pool a running container sits on (eviction pool-matching).
+    pub fn container_pool(&self, container: ContainerId) -> Option<String> {
+        self.cluster.container_pool(container)
+    }
+
+    /// Evict a running container to make room for higher-priority work:
+    /// kills it in the cluster but publishes a `preempted` status (the
+    /// job rides the same checkpoint/requeue path as a spot revocation).
+    pub fn evict(&self, container: ContainerId) -> Result<ContainerEvent> {
+        let event = self.cluster.kill(container)?;
+        if let Some(job) = self.by_container.lock().unwrap().remove(&container) {
+            self.publish(container, job, "preempted");
+        }
+        Ok(event)
+    }
+
+    /// Silently tear down a container from a partially-launched gang —
+    /// no status event: the reservation never became visible, so the
+    /// rollback isn't either.  Errors are ignored (the container may
+    /// already be gone, e.g. revoked mid-launch).
+    pub fn rollback(&self, container: ContainerId) {
+        self.by_container.lock().unwrap().remove(&container);
+        let _ = self.cluster.kill(container);
+    }
+
     /// Kill the container of a job.
     pub fn kill(&self, container: ContainerId) -> Result<ContainerEvent> {
         let event = self.cluster.kill(container)?;

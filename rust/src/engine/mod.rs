@@ -60,9 +60,12 @@ pub use lifecycle::JobState;
 pub use logserver::LogServer;
 pub use monitor::Monitor;
 pub use registry::{JobRecord, JobRegistry, JobSpec};
-pub use scheduler::{QueueKey, Scheduler};
+pub use scheduler::{
+    Demand, Priority, ProjectShare, QueueKey, Scheduler, SchedulerCounters,
+};
 pub use sweep::{SearchSpace, SweepStrategy};
 
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::bus::Bus;
@@ -102,6 +105,11 @@ pub struct ExecutionEngine {
     /// and `kill` do NOT take it — they stay non-blocking under a busy
     /// driver.
     drive: Mutex<()>,
+    /// Gang ledger: per gang job, how many of its replicas have not yet
+    /// succeeded.  A gang finishes only when the count hits zero; any
+    /// replica failing or being preempted tears down the siblings so
+    /// the gang never holds a partial reservation.
+    gangs: Mutex<HashMap<JobId, usize>>,
 }
 
 impl ExecutionEngine {
@@ -130,6 +138,7 @@ impl ExecutionEngine {
             rng: Mutex::new(Rng::new(seed ^ 0xE46)),
             checkpoint_secs,
             drive: Mutex::new(()),
+            gangs: Mutex::new(HashMap::new()),
         }
     }
 
@@ -169,6 +178,20 @@ impl ExecutionEngine {
                 spec.resources.mem_mb
             )));
         }
+        if spec.gang == 0 {
+            return Err(AcaiError::invalid("gang must be >= 1"));
+        }
+        // a gang wider than the fully-scaled-out cluster can never
+        // place all-or-nothing; reject at submit like can_ever_fit does
+        if spec.gang > 1 {
+            let ceiling = self.launcher.max_slots(spec.resources, spec.pool.as_deref());
+            if u64::from(spec.gang) > ceiling {
+                return Err(AcaiError::invalid(format!(
+                    "gang of {} exceeds the cluster's maximum of {} slots of {:.1} vCPU / {} MB",
+                    spec.gang, ceiling, spec.resources.vcpus, spec.resources.mem_mb
+                )));
+            }
+        }
         let cmd = JobCommand::parse(&spec.command)?;
         if !spec.input_fileset.is_empty() {
             let (name, version) = parse_fileset_ref(&spec.input_fileset)?;
@@ -193,6 +216,12 @@ impl ExecutionEngine {
             ("mem_mb", Json::from(spec.resources.mem_mb)),
             ("state", Json::from("queued")),
         ];
+        if spec.priority != Priority::Normal {
+            extra.push(("priority", Json::from(spec.priority.as_str())));
+        }
+        if spec.gang > 1 {
+            extra.push(("gang", Json::from(spec.gang)));
+        }
         for (arg, v) in &cmd.args {
             // command args become queryable metadata (e.g. epochs=20)
             extra.push((Box::leak(format!("arg_{arg}").into_boxed_str()), Json::from(*v)));
@@ -204,7 +233,18 @@ impl ExecutionEngine {
             &user.to_string(),
             &extra,
         );
-        self.scheduler.enqueue(key, id);
+        // fair-share accounting charges the job's WHOLE footprint (all
+        // gang replicas) to its project while it queues and runs
+        let gang = u64::from(spec.gang.max(1));
+        self.scheduler.enqueue_job(
+            key,
+            id,
+            Demand {
+                milli_vcpus: spec.resources.milli_vcpus() * gang,
+                mem_mb: u64::from(spec.resources.mem_mb) * gang,
+            },
+            spec.priority,
+        );
         self.monitor.report(id, "queued", self.clock.now());
         self.pump();
         Ok(id)
@@ -215,7 +255,15 @@ impl ExecutionEngine {
     /// in the same round.
     pub fn pump(&self) {
         self.launcher.autoscale(self.scheduler.total_queued());
-        let batch = self.scheduler.launchable();
+        // The DRF drain is capacity-bounded: the scheduler normalizes
+        // shares against the cluster's (elastic) totals and only hands
+        // out jobs whose demand fits the currently-free capacity — a
+        // 10k-job backlog costs the pump O(placeable), not O(backlog).
+        let (used_milli, total_milli, used_mem, total_mem) = self.launcher.utilization();
+        self.scheduler.set_capacity(total_milli, total_mem);
+        let batch = self
+            .scheduler
+            .launchable_within(total_milli - used_milli, total_mem - used_mem);
         // Saturation is tracked per placement constraint: a failed
         // placement requeues every later job aimed at the SAME pool
         // (FIFO preserved within the pool), while jobs bound for other
@@ -229,7 +277,7 @@ impl ExecutionEngine {
                     let _ = self.registry.update(job, Some(JobState::Killed), |j| {
                         j.error = Some(e.to_string());
                     });
-                    self.scheduler.on_terminal(key);
+                    self.scheduler.on_terminal(key, job);
                     self.monitor.report(job, "failed", self.clock.now());
                     continue;
                 }
@@ -240,8 +288,13 @@ impl ExecutionEngine {
                 self.scheduler.requeue_front(key, job);
                 continue;
             }
-            if let Err(e) = self.launch_one(&record) {
-                if matches!(e, AcaiError::Exhausted(_)) {
+            match self.launch_one(&record) {
+                Ok(()) => {}
+                Err(AcaiError::Exhausted(_))
+                    if record.spec.priority == Priority::High
+                        && self.evict_low_priority_for(&record)
+                        && self.retry_launch(&record) => {}
+                Err(e) if matches!(e, AcaiError::Exhausted(_)) => {
                     // The submit-time can_ever_fit guard can be
                     // invalidated later by a pool reshape
                     // (`PUT /v1/cluster/pools` shrinking the node
@@ -256,7 +309,7 @@ impl ExecutionEngine {
                                 "pool reshaped under queued job: {e}"
                             ));
                         });
-                        self.scheduler.on_terminal(key);
+                        self.scheduler.on_terminal(key, job);
                         self.monitor.report(job, "failed", self.clock.now());
                         continue;
                     }
@@ -268,15 +321,100 @@ impl ExecutionEngine {
                         .update(job, Some(JobState::Queued), |_| {});
                     self.scheduler.requeue_front(key, job);
                     saturated.push(record.spec.pool.clone());
-                    continue;
                 }
-                let _ = self.registry.update(job, Some(JobState::Killed), |j| {
-                    j.error = Some(e.to_string());
-                });
-                self.scheduler.on_terminal(key);
-                self.monitor.report(job, "failed", self.clock.now());
+                Err(e) => {
+                    let _ = self.registry.update(job, Some(JobState::Killed), |j| {
+                        j.error = Some(e.to_string());
+                    });
+                    self.scheduler.on_terminal(key, job);
+                    self.monitor.report(job, "failed", self.clock.now());
+                }
             }
         }
+    }
+
+    /// One more launch attempt after a successful eviction round.  The
+    /// failed attempt left the record in `Launching`; step it back to
+    /// `Queued` first so the retry replays the normal transition.
+    fn retry_launch(&self, record: &JobRecord) -> bool {
+        if self
+            .registry
+            .update(record.id, Some(JobState::Queued), |_| {})
+            .is_err()
+        {
+            return false;
+        }
+        match self.launch_one(record) {
+            Ok(()) => true,
+            Err(_) => {
+                // capacity raced away again: fall back to the ordinary
+                // saturated requeue
+                let _ = self
+                    .registry
+                    .update(record.id, Some(JobState::Queued), |_| {});
+                self.scheduler
+                    .requeue_front((record.spec.project, record.spec.user), record.id);
+                true
+            }
+        }
+    }
+
+    /// Make room for a high-priority job by evicting the cheapest set
+    /// of LOW-priority containers (checkpoint/requeue semantics — the
+    /// victims resume later and keep their billing invariants).  Equal-
+    /// or-higher-priority work is never touched.  Returns true when
+    /// enough capacity was freed.
+    fn evict_low_priority_for(&self, record: &JobRecord) -> bool {
+        let res = record.spec.resources;
+        let pool = record.spec.pool.as_deref();
+        let need = u64::from(record.spec.gang.max(1));
+        // cheapest victims first: total footprint (milli, MB), then job
+        // id for determinism
+        let mut victims: Vec<(u64, u64, JobId)> = Vec::new();
+        for vid in self.registry.active_jobs() {
+            let Ok(v) = self.registry.get(vid) else { continue };
+            if v.state != JobState::Running
+                || v.spec.priority != Priority::Low
+                || v.id == record.id
+                || v.containers.is_empty()
+            {
+                continue;
+            }
+            if let Some(want) = pool {
+                // only victims holding capacity on the pinned pool help
+                let on_pool = v.containers.iter().any(|c| {
+                    self.launcher.container_pool(*c).as_deref() == Some(want)
+                });
+                if !on_pool {
+                    continue;
+                }
+            }
+            let g = u64::from(v.spec.gang.max(1));
+            victims.push((
+                v.spec.resources.milli_vcpus() * g,
+                u64::from(v.spec.resources.mem_mb) * g,
+                vid,
+            ));
+        }
+        victims.sort_unstable();
+        let mut evicted = false;
+        for (_, _, vid) in victims {
+            if self.launcher.free_slots(res, pool) >= need {
+                break;
+            }
+            let Ok(v) = self.registry.get(vid) else { continue };
+            if v.state != JobState::Running {
+                continue; // raced to terminal since the scan
+            }
+            for c in &v.containers {
+                let _ = self.launcher.evict(*c);
+            }
+            self.gangs.lock().unwrap().remove(&vid);
+            self.scheduler.note_eviction();
+            self.preempt_job(vid, self.clock.now(), "evicted by high-priority job");
+            evicted = true;
+        }
+        evicted && self.launcher.free_slots(res, pool) >= need
     }
 
     fn launch_one(&self, record: &JobRecord) -> Result<()> {
@@ -345,24 +483,63 @@ impl ExecutionEngine {
                 (d, d)
             }
         };
-        let (container, plan) = self.launcher.launch(
-            job,
-            record.spec.resources,
-            duration,
-            record.spec.pool.as_deref(),
-            &chunks,
-        )?;
+        let gang = record.spec.gang.max(1) as usize;
+        if gang > 1 {
+            // All-or-nothing feasibility gate: for identical replicas
+            // the free-slot count is the exact best-fit packing, so a
+            // gang that passes this gate always places fully, and a
+            // gang that fails holds NOTHING — no partial reservation
+            // can deadlock the pump.
+            let slots = self
+                .launcher
+                .free_slots(record.spec.resources, record.spec.pool.as_deref());
+            if slots < gang as u64 {
+                return Err(AcaiError::Exhausted(format!(
+                    "gang of {gang} needs {gang} slots, cluster has {slots} free"
+                )));
+            }
+        }
+        let mut containers: Vec<crate::ids::ContainerId> = Vec::with_capacity(gang);
+        let mut transfer = 0.0f64;
+        for _ in 0..gang {
+            match self.launcher.launch(
+                job,
+                record.spec.resources,
+                duration,
+                record.spec.pool.as_deref(),
+                &chunks,
+            ) {
+                Ok((container, plan)) => {
+                    containers.push(container);
+                    // the gang waits on its slowest replica's cold bytes
+                    transfer = transfer.max(plan.transfer_secs);
+                }
+                Err(e) => {
+                    // roll back the whole reservation: a revocation (or
+                    // any race) mid-launch must not leave a partial gang
+                    for c in containers {
+                        self.launcher.rollback(c);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let first = containers[0];
+        if gang > 1 {
+            self.gangs.lock().unwrap().insert(job, gang);
+        }
         // the pool's price multiplier is fixed at launch time — billing
         // uses what the capacity cost when it was bought
-        let price_mult = self.launcher.price_multiplier(container);
+        let price_mult = self.launcher.price_multiplier(first);
+        let all = containers.clone();
         self.registry.update(job, Some(JobState::Running), |j| {
             j.launched_at = Some(self.clock.now());
-            j.container = Some(container);
+            j.container = Some(first);
+            j.containers = all;
             j.planned_secs = Some(planned);
             j.price_mult = Some(price_mult);
-            j.attempt_transfer = Some(plan.transfer_secs);
-            j.transfer_secs =
-                Some(record.transfer_secs.unwrap_or(0.0) + plan.transfer_secs);
+            j.attempt_transfer = Some(transfer);
+            j.transfer_secs = Some(record.transfer_secs.unwrap_or(0.0) + transfer);
         })?;
         self.logs.append(
             job,
@@ -399,12 +576,57 @@ impl ExecutionEngine {
         self.clock.advance_to(t);
         for (job, phase, at) in self.launcher.watch() {
             match phase {
-                ContainerPhase::Preempted => self.preempt_job(job, at),
-                _ => self.finish_job(job, phase, at),
+                ContainerPhase::Preempted => {
+                    // one replica revoked preempts the WHOLE gang: tear
+                    // down the siblings (the checkpoint covers the gang)
+                    self.teardown_siblings(job);
+                    self.preempt_job(job, at, "spot node revoked");
+                }
+                ContainerPhase::Succeeded => {
+                    let remaining = {
+                        let mut gangs = self.gangs.lock().unwrap();
+                        match gangs.get_mut(&job) {
+                            Some(n) if *n > 1 => {
+                                *n -= 1;
+                                Some(*n)
+                            }
+                            Some(_) => {
+                                gangs.remove(&job);
+                                None
+                            }
+                            None => None,
+                        }
+                    };
+                    if remaining.is_none() {
+                        self.finish_job(job, phase, at);
+                    }
+                    // else: wait for the gang's remaining replicas
+                }
+                _ => {
+                    // one replica failing fails the gang; kill siblings
+                    self.teardown_siblings(job);
+                    self.finish_job(job, phase, at);
+                }
             }
         }
         self.pump();
         true
+    }
+
+    /// Kill every still-running container of a gang whose fate was just
+    /// decided by one replica (failure or revocation).  No-op for
+    /// single-container jobs.
+    fn teardown_siblings(&self, job: JobId) {
+        if self.gangs.lock().unwrap().remove(&job).is_none() {
+            return;
+        }
+        if let Ok(record) = self.registry.get(job) {
+            for c in &record.containers {
+                // the deciding replica is already gone; errors here just
+                // mean a sibling completed in the same instant
+                self.launcher.rollback(*c);
+            }
+        }
     }
 
     /// Drive until every submitted job is terminal.  Safe to call while
@@ -420,15 +642,22 @@ impl ExecutionEngine {
         }
     }
 
-    /// A spot revocation interrupted a running job: bill the attempt at
-    /// the pool's (discounted) rate, fold the agent's last checkpoint
-    /// into the record and the monitor, and requeue the job *front of
-    /// its queue* so it restarts from the checkpoint ahead of new
-    /// arrivals.
-    fn preempt_job(&self, job: JobId, at: f64) {
+    /// A preemption interrupted a running job — a spot revocation, or a
+    /// priority eviction (`cause` says which): bill the attempt at the
+    /// pool's (discounted) rate, fold the agent's last checkpoint into
+    /// the record and the monitor, and requeue the job *front of its
+    /// queue* so it restarts from the checkpoint ahead of new arrivals.
+    fn preempt_job(&self, job: JobId, at: f64, cause: &str) {
         let Ok(record) = self.registry.get(job) else {
             return;
         };
+        if !matches!(record.state, JobState::Running | JobState::Launching) {
+            // stale container event: a same-batch sibling (several gang
+            // replicas die on one revoked node) already preempted or
+            // settled this job — re-preempting would double-count and
+            // enqueue the job twice
+            return;
+        }
         let key: QueueKey = (record.spec.project, record.spec.user);
         let attempt = (at - record.launched_at.unwrap_or(at)).max(0.0);
         // work before the last checkpoint survives; the tail is rework.
@@ -444,14 +673,17 @@ impl ExecutionEngine {
         let checkpoint = (base + (worked / interval).floor() * interval)
             .min(record.planned_secs.unwrap_or(f64::INFINITY));
         let mult = record.price_mult.unwrap_or(1.0);
-        let attempt_cost = self.pricing.cost(record.spec.resources, attempt) * mult;
+        // a gang bills every replica's seat for the attempt
+        let gang = f64::from(record.spec.gang.max(1));
+        let attempt_cost =
+            self.pricing.cost(record.spec.resources, attempt) * mult * gang;
         // the agent's dying gasp: a checkpoint tag the log parser (and
         // the monitor) fold into the resume point
         self.logs.append(
             job,
             &[
                 format!(
-                    "agent: spot node revoked after {attempt:.3}s; checkpoint at {checkpoint:.3}s survives"
+                    "agent: {cause} after {attempt:.3}s; checkpoint at {checkpoint:.3}s survives"
                 ),
                 format!("[[acai]] checkpoint={checkpoint}"),
             ],
@@ -461,6 +693,7 @@ impl ExecutionEngine {
             j.preemptions += 1;
             j.checkpoint = Some(checkpoint);
             j.container = None;
+            j.containers.clear();
             j.launched_at = None;
             // billing is cumulative across attempts
             j.runtime_secs = Some(record.runtime_secs.unwrap_or(0.0) + attempt);
@@ -489,14 +722,22 @@ impl ExecutionEngine {
         let Ok(record) = self.registry.get(job) else {
             return;
         };
+        if !matches!(record.state, JobState::Running | JobState::Launching) {
+            // a same-instant sibling event already settled (or
+            // preempted) this gang; double-settling would double-free
+            // the quota slot
+            return;
+        }
         let key: QueueKey = (record.spec.project, record.spec.user);
         let attempt = (at - record.launched_at.unwrap_or(at)).max(0.0);
         // cumulative billing: earlier preempted attempts are already in
-        // the record; this attempt is priced at its pool's multiplier
+        // the record; this attempt is priced at its pool's multiplier,
+        // and a gang bills every replica's seat
         let mult = record.price_mult.unwrap_or(1.0);
+        let gang = f64::from(record.spec.gang.max(1));
         let runtime = record.runtime_secs.unwrap_or(0.0) + attempt;
         let cost = record.cost.unwrap_or(0.0)
-            + self.pricing.cost(record.spec.resources, attempt) * mult;
+            + self.pricing.cost(record.spec.resources, attempt) * mult * gang;
 
         let result = match phase {
             ContainerPhase::Succeeded => self.complete_success(&record, runtime, cost),
@@ -529,7 +770,7 @@ impl ExecutionEngine {
                 self.monitor.report(job, "failed", at);
             }
         }
-        self.scheduler.on_terminal(key);
+        self.scheduler.on_terminal(key, job);
     }
 
     /// Success path: run the payload, upload outputs, create the output
@@ -643,13 +884,20 @@ impl ExecutionEngine {
                 self.registry.update(job, Some(JobState::Killed), |_| {})?;
             }
             JobState::Launching | JobState::Running => {
-                if let Some(container) = record.container {
+                self.gangs.lock().unwrap().remove(&job);
+                if record.containers.len() > 1 {
+                    for c in &record.containers {
+                        // best-effort: a replica may have completed in
+                        // the same instant
+                        let _ = self.launcher.kill(*c);
+                    }
+                } else if let Some(container) = record.container {
                     self.launcher.kill(container)?;
                 }
                 self.registry.update(job, Some(JobState::Killed), |j| {
                     j.finished_at = Some(self.clock.now());
                 })?;
-                self.scheduler.on_terminal(key);
+                self.scheduler.on_terminal(key, job);
                 self.pump();
             }
             JobState::Preempted => {

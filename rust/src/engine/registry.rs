@@ -18,6 +18,7 @@ use crate::kvstore::KvStore;
 use crate::storage::{Rmw, SharedTable};
 
 use super::lifecycle::JobState;
+use super::scheduler::Priority;
 
 /// Table holding one row per job.
 const T_JOBS: &str = "jobs";
@@ -49,6 +50,14 @@ pub struct JobSpec {
     /// of the live file table, so a replay reproduces exact bytes
     /// regardless of later uploads, deletes, or rollbacks.
     pub data_commit: Option<String>,
+    /// Scheduling priority.  High-priority jobs may evict low-priority
+    /// containers when the cluster is full; low-priority jobs are the
+    /// only eviction candidates.
+    pub priority: Priority,
+    /// Gang size: number of identical containers launched all-or-nothing
+    /// (1 = a plain single-container job).  Every replica runs the same
+    /// command/resources; billing scales by the gang size.
+    pub gang: u32,
 }
 
 /// The registry's record of a job.
@@ -87,6 +96,9 @@ pub struct JobRecord {
     /// checkpoint credit on preemption: moving bytes is not training
     /// progress.
     pub attempt_transfer: Option<f64>,
+    /// Every container of the current attempt (gang jobs hold several;
+    /// `container` mirrors the first for single-container callers).
+    pub containers: Vec<ContainerId>,
 }
 
 fn opt_f64(b: JsonBuilder, key: &str, v: Option<f64>) -> JsonBuilder {
@@ -116,8 +128,20 @@ impl JobRecord {
         if let Some(commit) = &self.spec.data_commit {
             b = b.field("data_commit", commit.as_str());
         }
+        if self.spec.priority != Priority::Normal {
+            b = b.field("priority", self.spec.priority.as_str());
+        }
+        if self.spec.gang > 1 {
+            b = b.field("gang", self.spec.gang);
+        }
         if self.preemptions > 0 {
             b = b.field("preemptions", self.preemptions);
+        }
+        if !self.containers.is_empty() {
+            b = b.field(
+                "containers",
+                Json::Arr(self.containers.iter().map(|c| Json::Num(c.raw() as f64)).collect()),
+            );
         }
         b = opt_f64(b, "launched_at", self.launched_at);
         b = opt_f64(b, "finished_at", self.finished_at);
@@ -171,6 +195,12 @@ impl JobRecord {
                     .get("data_commit")
                     .and_then(Json::as_str)
                     .map(String::from),
+                priority: match row.get("priority").and_then(Json::as_str) {
+                    Some(s) => Priority::parse(s)
+                        .map_err(|e| AcaiError::Storage(format!("job row: {e}")))?,
+                    None => Priority::Normal,
+                },
+                gang: row.get("gang").and_then(Json::as_u64).unwrap_or(1) as u32,
             },
             state: JobState::parse(
                 row.get("state").and_then(Json::as_str).unwrap_or_default(),
@@ -195,6 +225,11 @@ impl JobRecord {
             price_mult: opt("price_mult"),
             transfer_secs: opt("transfer_secs"),
             attempt_transfer: opt("attempt_transfer"),
+            containers: row
+                .get("containers")
+                .and_then(Json::as_array)
+                .map(|a| a.iter().filter_map(Json::as_u64).map(ContainerId).collect())
+                .unwrap_or_default(),
         })
     }
 }
@@ -259,6 +294,7 @@ impl JobRegistry {
             price_mult: None,
             transfer_secs: None,
             attempt_transfer: None,
+            containers: Vec::new(),
         };
         self.table.put(T_JOBS, &job_key(id), record.to_json())?;
         Ok(id)
@@ -351,6 +387,8 @@ mod tests {
             resources: ResourceConfig::new(1.0, 1024),
             pool: None,
             data_commit: None,
+            priority: Priority::Normal,
+            gang: 1,
         }
     }
 
@@ -438,6 +476,32 @@ mod tests {
         s.data_commit = Some("commit-7".into());
         let id = r.register(s, 0.0).unwrap();
         assert_eq!(r.get(id).unwrap().spec.data_commit.as_deref(), Some("commit-7"));
+    }
+
+    #[test]
+    fn priority_gang_and_containers_round_trip_through_json() {
+        let r = JobRegistry::new();
+        let mut s = spec();
+        s.priority = Priority::High;
+        s.gang = 3;
+        let id = r.register(s, 0.0).unwrap();
+        r.update(id, Some(JobState::Launching), |j| {
+            j.containers = vec![ContainerId(4), ContainerId(5), ContainerId(6)];
+            j.container = Some(ContainerId(4));
+        })
+        .unwrap();
+        let rec = r.get(id).unwrap();
+        assert_eq!(rec.spec.priority, Priority::High);
+        assert_eq!(rec.spec.gang, 3);
+        assert_eq!(
+            rec.containers,
+            vec![ContainerId(4), ContainerId(5), ContainerId(6)]
+        );
+        // defaults stay omitted from the encoded row
+        let plain = r.get(r.register(spec(), 0.0).unwrap()).unwrap();
+        assert_eq!(plain.spec.priority, Priority::Normal);
+        assert_eq!(plain.spec.gang, 1);
+        assert!(plain.containers.is_empty());
     }
 
     #[test]

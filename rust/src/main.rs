@@ -110,6 +110,8 @@ fn demo(flags: &HashMap<String, String>) -> acai::Result<()> {
         resources: ResourceConfig::new(2.0, 2048),
         pool: None,
         data_commit: None,
+        priority: acai::engine::Priority::Normal,
+        gang: 1,
     })?;
     client.wait_all();
     let record = client.job(job)?;

@@ -118,6 +118,22 @@ impl Acai {
         self.objects.clone()
     }
 
+    /// Set a project's fair-share weight (global admin only): persists
+    /// it on the project record and mirrors it into the scheduler's
+    /// DRF accounting.  Returns the project id.
+    pub fn set_project_weight(
+        &self,
+        root_token: &str,
+        name: &str,
+        weight: f64,
+    ) -> Result<crate::ids::ProjectId> {
+        let pid = self
+            .credentials
+            .set_project_weight(root_token, name, weight)?;
+        self.engine.scheduler.set_weight(pid, weight)?;
+        Ok(pid)
+    }
+
     /// Boot with default config (no PJRT, no noise) — the test fixture.
     pub fn boot_default() -> Acai {
         Self::boot(PlatformConfig::default()).expect("default boot cannot fail")

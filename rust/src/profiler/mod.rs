@@ -234,6 +234,8 @@ impl Profiler {
                         resources: res,
                         pool: None,
                         data_commit: None,
+                        priority: crate::engine::Priority::Normal,
+                        gang: 1,
                     })?;
                     jobs.push((id, combo.clone(), res));
                 }

@@ -33,7 +33,7 @@ use crate::datalake::metadata::ArtifactKind;
 use crate::datalake::CommitDiff;
 use crate::docstore::Clause;
 use crate::engine::{
-    ExperimentSpec, ExperimentStatus, JobRecord, JobSpec, MetricMode, TrialStatus,
+    ExperimentSpec, ExperimentStatus, JobRecord, JobSpec, MetricMode, Priority, TrialStatus,
 };
 use crate::error::{AcaiError, Result};
 use crate::graphstore::Edge;
@@ -273,6 +273,12 @@ pub struct JobRequest {
     /// `None` = latest versions).  The fileset names *which* paths the
     /// job reads; the snapshot decides *what bytes* they resolve to.
     pub data_commit: Option<String>,
+    /// Scheduling priority.  `High` jobs may preempt `Low` ones when the
+    /// cluster is full; `Low` jobs are the preemption victims.
+    pub priority: Priority,
+    /// Gang size: number of identical containers placed all-or-nothing
+    /// (1 = a plain single-container job).
+    pub gang: u32,
 }
 
 /// A token-authenticated SDK client.
@@ -497,6 +503,8 @@ impl Client {
             resources: request.resources,
             pool: request.pool,
             data_commit: request.data_commit,
+            priority: request.priority,
+            gang: request.gang,
         })
     }
 
@@ -574,6 +582,8 @@ impl Client {
             resources: decision.config,
             pool: None,
             data_commit: None,
+            priority: Priority::Normal,
+            gang: 1,
         })
     }
 }

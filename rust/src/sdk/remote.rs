@@ -104,6 +104,38 @@ impl RemoteClient {
         Ok((project, RemoteClient::new(addr, token)))
     }
 
+    /// Set a project's fair-share weight over the public endpoint
+    /// (global admin only; the root token travels in the body, like
+    /// [`RemoteClient::create_project`]).
+    pub fn set_project_weight(
+        addr: SocketAddr,
+        root_token: &str,
+        name: &str,
+        weight: f64,
+    ) -> Result<()> {
+        let anon = RemoteClient::new(addr, "");
+        anon.call(
+            "PUT",
+            &format!("/v1/projects/{}/weight", percent_encode(name)),
+            Some(
+                &Json::obj()
+                    .field("root_token", root_token)
+                    .field("weight", weight)
+                    .build(),
+            ),
+        )?;
+        Ok(())
+    }
+
+    /// The `scheduler` block of `GET /v1/metrics`: DRF decision
+    /// counters plus every project's weighted dominant share.
+    pub fn scheduler_metrics(&self) -> Result<Json> {
+        let resp = self.get("/v1/metrics")?;
+        resp.get("scheduler")
+            .cloned()
+            .ok_or_else(|| AcaiError::Json("metrics missing scheduler block".into()))
+    }
+
     /// One exchange over the pooled keep-alive connection.
     ///
     /// Retry policy: only idempotent GETs are re-sent after an `Io`

@@ -166,6 +166,8 @@ pub fn run_study(
             resources: ResourceConfig::new(8.0, 8192),
             pool: None,
             data_commit: None,
+            priority: crate::engine::Priority::Normal,
+            gang: 1,
         })
         .collect();
     let records = acai.engine.run_batch(specs)?;

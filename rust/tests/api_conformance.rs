@@ -34,6 +34,8 @@ fn job_request(name: &str, input: &str, output: &str) -> JobRequest {
         resources: ResourceConfig::new(1.0, 1024),
         pool: None,
         data_commit: None,
+        priority: acai::engine::Priority::Normal,
+        gang: 1,
     }
 }
 

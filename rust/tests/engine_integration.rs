@@ -39,6 +39,8 @@ fn job(name: &str, epochs: u32, res: ResourceConfig) -> JobSpec {
         resources: res,
         pool: None,
         data_commit: None,
+        priority: acai::engine::Priority::Normal,
+        gang: 1,
     }
 }
 

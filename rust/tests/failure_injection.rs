@@ -28,6 +28,8 @@ fn job(i: usize) -> JobSpec {
         resources: ResourceConfig::new(1.0, 1024),
         pool: None,
         data_commit: None,
+        priority: acai::engine::Priority::Normal,
+        gang: 1,
     }
 }
 
@@ -343,4 +345,153 @@ fn mixed_failures_and_stragglers_under_load() {
     }
     assert_eq!(acai.cluster.running_count(), 0);
     assert_eq!(acai.cluster.utilization().0, 0);
+}
+
+#[test]
+fn spot_revocation_mid_gang_rolls_back_the_whole_reservation() {
+    // an 8-replica gang spans both spot nodes (4 slots each); revoking
+    // either node preempts the gang, and the teardown must release EVERY
+    // sibling slot — a preempted gang never camps on partial capacity
+    let node = NodeSpec::new(4.0, 8192);
+    let mut config = PlatformConfig::default();
+    config.checkpoint_secs = 2.0;
+    config.cluster = ClusterConfig {
+        pools: vec![PoolConfig {
+            name: "spot".into(),
+            spec: node,
+            price_multiplier: 0.3,
+            min_nodes: 2,
+            max_nodes: 2,
+            preemption_mean_secs: 10.0,
+        }],
+        seed: 0xACA1,
+        ..Default::default()
+    };
+    let acai = Acai::boot(config).unwrap();
+    seed(&acai);
+    let mut spec = job(0);
+    spec.command = "python train_mnist.py --epoch 8".into();
+    spec.resources = ResourceConfig::new(1.0, 1024);
+    spec.pool = Some("spot".into());
+    spec.gang = 8; // needs the whole pool
+    let id = acai.engine.submit(spec).unwrap();
+    acai.engine.pump();
+    let mut steps = 0;
+    loop {
+        let r = acai.engine.registry.get(id).unwrap();
+        match r.state {
+            JobState::Running => assert_eq!(
+                r.containers.len(),
+                8,
+                "running gang must hold all its slots"
+            ),
+            JobState::Queued => assert_eq!(
+                acai.cluster.utilization().0,
+                0,
+                "a preempted gang must not hold partial capacity"
+            ),
+            _ => {}
+        }
+        if !acai.engine.step() {
+            break;
+        }
+        steps += 1;
+        assert!(steps < 100_000, "engine livelock");
+    }
+    let r = acai.engine.registry.get(id).unwrap();
+    assert_eq!(r.state, JobState::Finished, "gang stuck as {:?}", r.state);
+    assert!(r.preemptions >= 1, "want at least one revocation: {r:?}");
+    // one revocation event per preemption, not one per dying replica
+    assert!(
+        r.preemptions <= acai.cluster.counters().preempted_nodes,
+        "replica events double-counted: {} preemptions, {} revoked nodes",
+        r.preemptions,
+        acai.cluster.counters().preempted_nodes
+    );
+    assert_eq!(acai.cluster.utilization().0, 0);
+    assert_eq!(acai.cluster.running_count(), 0);
+}
+
+#[test]
+fn evicted_low_priority_job_resumes_within_the_checkpoint_bound() {
+    use acai::engine::Priority;
+    let one_node = |checkpoint: f64| {
+        let mut config = PlatformConfig::default();
+        config.checkpoint_secs = checkpoint;
+        config.cluster = ClusterConfig::fixed(NodeSpec::new(4.0, 8192), 1);
+        let acai = Acai::boot(config).unwrap();
+        seed(&acai);
+        acai
+    };
+    let low_spec = || {
+        let mut spec = job(0);
+        spec.command = "python train_mnist.py --epoch 20".into();
+        spec.resources = ResourceConfig::new(4.0, 4096);
+        spec.priority = Priority::Low;
+        spec
+    };
+    // baseline: the same job alone on the same one-node cluster
+    let baseline = {
+        let acai = one_node(5.0);
+        let id = acai.engine.submit(low_spec()).unwrap();
+        acai.engine.run_until_idle();
+        acai.engine.registry.get(id).unwrap().runtime_secs.unwrap()
+    };
+
+    // now the job is repeatedly evicted by whole-node high-priority work
+    let acai = one_node(5.0);
+    let low = acai.engine.submit(low_spec()).unwrap();
+    acai.engine.pump();
+    assert_eq!(acai.engine.registry.get(low).unwrap().state, JobState::Running);
+    let mut highs = Vec::new();
+    for k in 0..3 {
+        // let the low job make real progress before the eviction, so the
+        // checkpoint credit (floor to 5 s) is actually exercised
+        acai.clock.advance(7.0);
+        let mut spec = job(k + 1);
+        spec.command = "python train_mnist.py --epoch 2".into();
+        spec.resources = ResourceConfig::new(4.0, 4096);
+        spec.priority = Priority::High;
+        let high = acai.engine.submit(spec).unwrap();
+        highs.push(high);
+        acai.engine.pump(); // full node: must evict the low job
+        assert_eq!(
+            acai.engine.registry.get(high).unwrap().state,
+            JobState::Running,
+            "high-priority job {k} did not displace the low job"
+        );
+        // drive until the high job finishes (its completion re-pumps and
+        // resumes the low job from its checkpoint)
+        while !acai.engine.registry.get(high).unwrap().state.is_terminal() {
+            assert!(acai.engine.step(), "engine stalled with a running high job");
+        }
+    }
+    acai.engine.run_until_idle();
+
+    let r = acai.engine.registry.get(low).unwrap();
+    assert_eq!(r.state, JobState::Finished);
+    assert_eq!(r.preemptions, 3, "one eviction per high-priority arrival");
+    for high in highs {
+        let h = acai.engine.registry.get(high).unwrap();
+        assert_eq!(h.state, JobState::Finished);
+        assert_eq!(h.preemptions, 0, "high-priority work must never be evicted");
+    }
+    assert_eq!(acai.engine.scheduler.counters().evictions, 3);
+    let runtime = r.runtime_secs.unwrap();
+    assert!(runtime >= baseline - 1e-6, "{runtime} < baseline {baseline}");
+    assert!(
+        runtime < baseline + r.preemptions as f64 * 5.0 + 1e-6,
+        "rework exceeded the checkpoint bound: runtime {runtime}, baseline {baseline}, \
+         preemptions {}",
+        r.preemptions
+    );
+    // the eviction rode the ordinary preemption path: checkpoint logged,
+    // resume point folded into the monitor
+    assert_eq!(acai.engine.monitor.resume_point(low), r.checkpoint);
+    assert!(acai
+        .engine
+        .logs
+        .get(low)
+        .iter()
+        .any(|l| l.contains("evicted by high-priority job")));
 }

@@ -47,9 +47,8 @@ fn prop_scheduler_never_exceeds_quota_and_preserves_fifo() {
                 }
                 _ => {
                     let u = g.usize(0..users);
-                    if !active[u].is_empty() {
-                        active[u].pop();
-                        scheduler.on_terminal((ProjectId(1), UserId(u as u64)));
+                    if let Some(job) = active[u].pop() {
+                        scheduler.on_terminal((ProjectId(1), UserId(u as u64)), JobId(job));
                     }
                 }
             }
@@ -267,6 +266,8 @@ fn prop_engine_batches_always_terminate_with_conserved_billing() {
                         ),
                         pool: None,
                         data_commit: None,
+                        priority: acai::engine::Priority::Normal,
+                        gang: 1,
                     })
                     .unwrap(),
             );
@@ -564,5 +565,226 @@ fn prop_dedup_reupload_stores_less_than_double() {
         // INVARIANT: dedup is invisible to reads
         assert_eq!(&**acai.datalake.storage.read(p, "/ds", Some(1)).unwrap(), &v1);
         assert_eq!(&**acai.datalake.storage.read(p, "/ds", Some(2)).unwrap(), &v2);
+    });
+}
+
+#[test]
+fn prop_dominant_share_drain_order_matches_model() {
+    use acai::engine::{Demand, Priority};
+    use std::collections::VecDeque;
+    // The scheduler's weighted-DRF drain must agree, decision for
+    // decision, with an independent greedy model: always the project
+    // with the smallest dominant share / weight, ties broken by project
+    // id.  Sequence equality across random enqueue/retire interleavings
+    // proves the ordering is total (never panics, never skips) and
+    // stable (deterministic tie-break).
+    property("weighted DRF drain order", 40, |g| {
+        let scheduler = Scheduler::new(1000); // quota never binds here
+        let total_milli = g.u64(8..65) * 1000;
+        let total_mem = g.u64(8..65) * 1024;
+        scheduler.set_capacity(total_milli, total_mem);
+        let nprojects = g.usize(2..6);
+        let mut weights = Vec::new();
+        for p in 0..nprojects {
+            let w = g.usize(1..9) as f64;
+            scheduler.set_weight(ProjectId(p as u64 + 1), w).unwrap();
+            weights.push(w);
+        }
+        let mut queues: Vec<VecDeque<(u64, Demand)>> = vec![VecDeque::new(); nprojects];
+        let mut used = vec![(0u64, 0u64); nprojects];
+        let mut live: Vec<(usize, u64, Demand)> = Vec::new();
+        let mut next_id = 1u64;
+        for _round in 0..g.usize(2..6) {
+            for _ in 0..g.usize(1..12) {
+                let p = g.usize(0..nprojects);
+                let d = Demand {
+                    milli_vcpus: g.u64(1..9) * 250,
+                    mem_mb: g.u64(1..9) * 256,
+                };
+                scheduler.enqueue_job(
+                    (ProjectId(p as u64 + 1), UserId(1)),
+                    JobId(next_id),
+                    d,
+                    Priority::Normal,
+                );
+                queues[p].push_back((next_id, d));
+                next_id += 1;
+            }
+            // the model's full greedy drain
+            let mut expect = Vec::new();
+            loop {
+                let candidates: Vec<usize> =
+                    (0..nprojects).filter(|&p| !queues[p].is_empty()).collect();
+                let Some(&p) = candidates.iter().min_by_key(|&&p| {
+                    let cpu = used[p].0 as f64 / total_milli.max(1) as f64;
+                    let mem = used[p].1 as f64 / total_mem.max(1) as f64;
+                    let share = cpu.max(mem) / weights[p];
+                    assert!(share.is_finite() && share >= 0.0, "share not totally ordered");
+                    (share.to_bits(), p)
+                }) else {
+                    break;
+                };
+                let (job, d) = queues[p].pop_front().unwrap();
+                used[p].0 += d.milli_vcpus;
+                used[p].1 += d.mem_mb;
+                live.push((p, job, d));
+                expect.push((p, job));
+            }
+            let got: Vec<(usize, u64)> = scheduler
+                .launchable()
+                .into_iter()
+                .map(|((pid, _), job)| (pid.raw() as usize - 1, job.raw()))
+                .collect();
+            assert_eq!(got, expect, "drain order diverged from the DRF model");
+            // retire a random subset, releasing the charged demand
+            for _ in 0..g.usize(0..live.len() + 1) {
+                let (p, job, d) = live.swap_remove(g.usize(0..live.len()));
+                scheduler.on_terminal((ProjectId(p as u64 + 1), UserId(1)), JobId(job));
+                used[p].0 -= d.milli_vcpus;
+                used[p].1 -= d.mem_mb;
+            }
+        }
+        // the published shares agree bit-for-bit with the model
+        for s in scheduler.project_shares() {
+            let p = s.project.raw() as usize - 1;
+            let cpu = used[p].0 as f64 / total_milli.max(1) as f64;
+            let mem = used[p].1 as f64 / total_mem.max(1) as f64;
+            assert_eq!(s.share.to_bits(), (cpu.max(mem) / weights[p]).to_bits());
+        }
+    });
+}
+
+#[test]
+fn prop_gang_placement_is_all_or_nothing_at_every_step() {
+    use acai::cluster::{ClusterConfig, NodeSpec};
+    use acai::engine::Priority;
+    // At every observable engine step a gang job holds either all of its
+    // slots (Running, one container per replica) or none (Queued): a
+    // partially-placeable gang must never camp on capacity.
+    property("gang all-or-nothing", 12, |g| {
+        let nodes = g.usize(1..4);
+        let config = PlatformConfig {
+            cluster: ClusterConfig::fixed(NodeSpec::new(4.0, 4096), nodes),
+            quota_k: g.usize(2..6),
+            ..Default::default()
+        };
+        let acai = Acai::boot(config).unwrap();
+        let p = ProjectId(1);
+        acai.datalake.storage.upload(p, &[("/d", b"x")]).unwrap();
+        acai.datalake.filesets.create(p, "in", &["/d"], "u").unwrap();
+        // 4-vCPU nodes, 1-vCPU replicas: 4 slots per node
+        let max_gang = (nodes * 4).min(5);
+        let mut ids = Vec::new();
+        for i in 0..g.usize(3..12) {
+            let gang = g.usize(1..max_gang + 1) as u32;
+            ids.push(
+                acai.engine
+                    .submit(JobSpec {
+                        project: p,
+                        user: UserId(g.usize(1..3) as u64),
+                        name: format!("g{i}"),
+                        command: format!("python train_mnist.py --epoch {}", g.usize(1..4)),
+                        input_fileset: "in".into(),
+                        output_fileset: format!("o{i}"),
+                        resources: ResourceConfig::new(1.0, 512),
+                        pool: None,
+                        data_commit: None,
+                        priority: Priority::Normal,
+                        gang,
+                    })
+                    .unwrap(),
+            );
+        }
+        let check = |msg: &str| {
+            for &id in &ids {
+                let r = acai.engine.registry.get(id).unwrap();
+                match r.state {
+                    JobState::Running => assert_eq!(
+                        r.containers.len(),
+                        r.spec.gang as usize,
+                        "{msg}: running gang holds a partial reservation"
+                    ),
+                    JobState::Queued => assert!(
+                        r.containers.is_empty(),
+                        "{msg}: queued gang holds slots"
+                    ),
+                    _ => {}
+                }
+            }
+        };
+        acai.engine.pump();
+        check("after first pump");
+        let mut steps = 0;
+        while acai.engine.step() {
+            check("after step");
+            steps += 1;
+            assert!(steps < 10_000, "engine livelock");
+        }
+        for id in ids {
+            assert_eq!(acai.engine.registry.get(id).unwrap().state, JobState::Finished);
+        }
+        // INVARIANT: no reservation leaked through rollbacks
+        let (used, _, used_mem, _) = acai.cluster.utilization();
+        assert_eq!((used, used_mem), (0, 0), "leaked gang reservation");
+    });
+}
+
+#[test]
+fn prop_priority_eviction_never_touches_equal_or_higher() {
+    use acai::cluster::{ClusterConfig, NodeSpec};
+    use acai::engine::Priority;
+    // On a cluster with no spot pools the only preemption source is
+    // priority eviction — so every job that records a preemption must be
+    // Low priority, and the scheduler's eviction counter must account
+    // for every one of them.
+    property("preemption priority ladder", 12, |g| {
+        let config = PlatformConfig {
+            cluster: ClusterConfig::fixed(NodeSpec::new(8.0, 8192), g.usize(1..3)),
+            quota_k: 8,
+            ..Default::default()
+        };
+        let acai = Acai::boot(config).unwrap();
+        for pr in 1..=2u64 {
+            let p = ProjectId(pr);
+            acai.datalake.storage.upload(p, &[("/d", b"x")]).unwrap();
+            acai.datalake.filesets.create(p, "in", &["/d"], "u").unwrap();
+        }
+        let prios = [Priority::Low, Priority::Normal, Priority::High];
+        let mut ids = Vec::new();
+        for i in 0..g.usize(6..20) {
+            ids.push(
+                acai.engine
+                    .submit(JobSpec {
+                        project: ProjectId(g.usize(1..3) as u64),
+                        user: UserId(g.usize(1..3) as u64),
+                        name: format!("p{i}"),
+                        command: format!("python train_mnist.py --epoch {}", g.usize(1..5)),
+                        input_fileset: "in".into(),
+                        output_fileset: format!("o{i}"),
+                        resources: ResourceConfig::new(g.usize(1..5) as f64, 1024),
+                        pool: None,
+                        data_commit: None,
+                        priority: *g.pick(&prios),
+                        gang: g.usize(1..3) as u32,
+                    })
+                    .unwrap(),
+            );
+        }
+        acai.engine.run_until_idle();
+        let mut preempted_total = 0u64;
+        for id in ids {
+            let r = acai.engine.registry.get(id).unwrap();
+            assert_eq!(r.state, JobState::Finished);
+            if r.preemptions > 0 {
+                assert_eq!(
+                    r.spec.priority,
+                    Priority::Low,
+                    "a {:?}-priority job was evicted on a no-spot cluster",
+                    r.spec.priority
+                );
+                preempted_total += r.preemptions;
+            }
+        }
+        assert_eq!(acai.engine.scheduler.counters().evictions, preempted_total);
     });
 }

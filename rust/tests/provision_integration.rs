@@ -113,6 +113,8 @@ fn optimize_runtime_fixed_cost_beats_baseline() {
                 resources: res,
                 pool: None,
                 data_commit: None,
+                priority: acai::engine::Priority::Normal,
+                gang: 1,
             })
             .unwrap();
         acai.engine.run_until_idle();

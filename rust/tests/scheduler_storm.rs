@@ -1,0 +1,455 @@
+//! Fleet-scale scheduling storm: 16 tenants, 10k jobs, a 1000-node
+//! cluster.  Proves the weighted-DRF scheduler (a) starves nobody,
+//! (b) converges allocations to the configured weight ratios within
+//! 10%, (c) is bit-identical across same-seed reruns, and (d) spends
+//! a bounded number of heap decisions per pump (the de-O(n²) claim:
+//! work per pump tracks launches + retirals, never total backlog).
+
+use std::sync::Arc;
+
+use acai::api::make_handler;
+use acai::cluster::{ClusterConfig, NodeSpec, ResourceConfig};
+use acai::engine::{Demand, JobSpec, JobState, Priority, QueueKey, Scheduler, SchedulerCounters};
+use acai::httpd::Server;
+use acai::ids::{JobId, ProjectId, UserId};
+use acai::json::Json;
+use acai::prng::Rng;
+use acai::sdk::{AcaiApi, Client, JobRequest, RemoteClient};
+use acai::{Acai, PlatformConfig};
+
+const TENANTS: u64 = 16;
+const JOBS: u64 = 10_000;
+/// 1000 nodes × 4 one-vCPU slots.
+const SLOTS: u64 = 4_000;
+
+/// Weights cycle 4:2:1:1 over the 16 tenants (Σ = 32).
+fn weight_of(project: u64) -> f64 {
+    [4.0, 2.0, 1.0, 1.0][((project - 1) % 4) as usize]
+}
+
+/// What one scheduler-level storm run observed, bit-exactly.
+struct StormTrace {
+    /// `(project, job)` in global launch order.
+    sequence: Vec<(u64, u64)>,
+    /// Jobs each project launched in the very first pump (the cluster
+    /// fills from empty, so these counts ARE the converged shares).
+    first_batch: Vec<u64>,
+    /// Weighted dominant share per project right after the first pump.
+    share_bits: Vec<u64>,
+    counters: SchedulerCounters,
+}
+
+/// Drive a bare [`Scheduler`] through the full storm: seed 10k jobs
+/// across 16 weighted tenants, pump against a modeled 4000-slot
+/// cluster, retire seeded slices of running work between pumps.
+fn run_storm(seed: u64) -> StormTrace {
+    let scheduler = Scheduler::new(100_000); // quota never binds here
+    scheduler.set_capacity(SLOTS * 1000, SLOTS * 1024);
+    for p in 1..=TENANTS {
+        scheduler.set_weight(ProjectId(p), weight_of(p)).unwrap();
+    }
+
+    let mut rng = Rng::new(seed);
+    let demand = Demand { milli_vcpus: 1000, mem_mb: 1024 };
+    for j in 1..=JOBS {
+        let key = (ProjectId(1 + rng.below(TENANTS)), UserId(1 + rng.below(4)));
+        scheduler.enqueue_job(key, JobId(j), demand, Priority::Normal);
+    }
+
+    let mut free = SLOTS;
+    let mut running: Vec<(QueueKey, JobId)> = Vec::new();
+    let mut sequence: Vec<(u64, u64)> = Vec::new();
+    let mut first_batch = vec![0u64; TENANTS as usize + 1];
+    let mut share_bits = Vec::new();
+    let mut pumps = 0u64;
+    // Heap entries pending at the next pump: the 10k enqueue touches
+    // before the first, then whatever the between-pump retirals push.
+    let mut touched_since_last = JOBS;
+
+    while scheduler.any_queued() || !running.is_empty() {
+        let before = scheduler.counters().decisions;
+        let batch = scheduler.launchable_within(free * 1000, free * 1024);
+        let spent = scheduler.counters().decisions - before;
+        // (d) decision bound: stale entries from the touches since the
+        // last pump, one pop per launch (each launch re-touches), one
+        // blocked re-entry per tenant — never the whole backlog.
+        assert!(
+            spent <= touched_since_last + batch.len() as u64 + 2 * TENANTS + 8,
+            "pump {pumps}: {spent} decisions for {} launches ({touched_since_last} touched)",
+            batch.len(),
+        );
+        assert!(batch.len() as u64 <= free, "pump overfilled the cluster");
+        if pumps == 0 {
+            for ((project, _), _) in &batch {
+                first_batch[project.raw() as usize] += 1;
+            }
+            let mut shares = scheduler.project_shares();
+            shares.sort_by_key(|s| s.project.raw());
+            share_bits = shares.iter().map(|s| s.share.to_bits()).collect();
+        }
+        free -= batch.len() as u64;
+        for (key, job) in batch {
+            sequence.push((key.0.raw(), job.raw()));
+            running.push((key, job));
+        }
+
+        // retire a seeded slice of the running set
+        let retire = if running.is_empty() {
+            0
+        } else {
+            1 + rng.below((running.len() as u64).min(257))
+        };
+        for _ in 0..retire {
+            let i = rng.below(running.len() as u64) as usize;
+            let (key, job) = running.swap_remove(i);
+            scheduler.on_terminal(key, job);
+            free += 1;
+        }
+        touched_since_last = retire;
+        pumps += 1;
+    }
+
+    assert_eq!(sequence.len() as u64, JOBS, "every job must launch exactly once");
+    StormTrace {
+        sequence,
+        first_batch,
+        share_bits,
+        counters: scheduler.counters(),
+    }
+}
+
+/// (a) + (b): nobody starves, and the first full pump splits the
+/// cluster within 10% of the 4:2:1:1 weight ratios.
+#[test]
+fn storm_starves_no_tenant_and_converges_to_weight_ratios() {
+    let trace = run_storm(0xACA1_5708);
+
+    // (a) starvation-freedom by launch position: every tenant's FIRST
+    // job launches before ANY tenant's 100th.
+    let mut first = vec![u64::MAX; TENANTS as usize + 1];
+    let mut count = vec![0u64; TENANTS as usize + 1];
+    let mut hundredth = vec![u64::MAX; TENANTS as usize + 1];
+    for (i, (project, _)) in trace.sequence.iter().enumerate() {
+        let p = *project as usize;
+        if count[p] == 0 {
+            first[p] = i as u64;
+        }
+        count[p] += 1;
+        if count[p] == 100 {
+            hundredth[p] = i as u64;
+        }
+    }
+    let last_first = (1..=TENANTS as usize).map(|p| first[p]).max().unwrap();
+    let first_hundredth = (1..=TENANTS as usize).map(|p| hundredth[p]).min().unwrap();
+    assert!(first_hundredth != u64::MAX, "some tenant never reached 100 launches");
+    assert!(
+        last_first < first_hundredth,
+        "a tenant starved: latest first launch at {last_first}, \
+         earliest 100th at {first_hundredth}"
+    );
+
+    // (b) the first pump fills an empty cluster, so per-tenant counts
+    // are the converged weighted allocation: SLOTS * w / Σw ± 10%.
+    let total_weight: f64 = (1..=TENANTS).map(weight_of).sum();
+    for p in 1..=TENANTS {
+        let expect = SLOTS as f64 * weight_of(p) / total_weight;
+        let got = trace.first_batch[p as usize] as f64;
+        assert!(
+            (got - expect).abs() <= 0.1 * expect,
+            "tenant {p} (weight {}): {got} first-pump launches, expected {expect:.1} ±10%",
+            weight_of(p),
+        );
+    }
+
+    // after the first pump every tenant still has a backlog, so the
+    // weighted dominant shares must be level (water-filling).
+    let shares: Vec<f64> = trace.share_bits.iter().map(|b| f64::from_bits(*b)).collect();
+    let mean = shares.iter().sum::<f64>() / shares.len() as f64;
+    assert!(mean > 0.0);
+    for (i, s) in shares.iter().enumerate() {
+        assert!(
+            (s - mean).abs() <= 0.1 * mean,
+            "tenant {}: weighted share {s} strays >10% from level {mean}",
+            i + 1,
+        );
+    }
+}
+
+/// (c) same seed ⇒ the same storm, bit for bit: launch order, first
+/// pump split, post-pump shares, and every monotonic counter.
+#[test]
+fn storm_is_bit_identical_across_same_seed_reruns() {
+    let a = run_storm(0xACA1_BEEF);
+    let b = run_storm(0xACA1_BEEF);
+    assert_eq!(a.sequence, b.sequence, "launch order diverged");
+    assert_eq!(a.first_batch, b.first_batch);
+    assert_eq!(a.share_bits, b.share_bits, "shares diverged bit-wise");
+    assert_eq!(a.counters, b.counters, "decision counters diverged");
+
+    // different seed ⇒ a different storm (the suite is not vacuous)
+    let c = run_storm(0xACA1_F00D);
+    assert_ne!(a.sequence, c.sequence);
+}
+
+/// One full-engine storm run: 1000 nodes, 10k mixed-priority jobs
+/// (some gangs), weighted 4:2:1:1 over 16 tenants.  Returns the
+/// bit-exact per-job outcome in submission order plus the counters.
+fn engine_storm(seed: u64) -> (Vec<(u64, u64, u64, u64)>, SchedulerCounters) {
+    let acai = Acai::boot(PlatformConfig {
+        cluster: ClusterConfig::fixed(NodeSpec::new(4.0, 16384), 1000),
+        quota_k: 10_000, // weights, not the per-user quota, drive the split
+        ..Default::default()
+    })
+    .unwrap();
+    for p in 1..=TENANTS {
+        acai.engine
+            .scheduler
+            .set_weight(ProjectId(p), weight_of(p))
+            .unwrap();
+    }
+
+    let mut rng = Rng::new(seed);
+    let mut ids = Vec::with_capacity(JOBS as usize);
+    for i in 0..JOBS {
+        let project = 1 + rng.below(TENANTS);
+        let priority = match rng.below(100) {
+            0..=9 => Priority::Low,
+            10..=14 => Priority::High,
+            _ => Priority::Normal,
+        };
+        let gang = if rng.below(100) < 3 { 2 + rng.below(3) as u32 } else { 1 };
+        let epochs = 1 + rng.below(4);
+        let id = acai
+            .engine
+            .submit(JobSpec {
+                project: ProjectId(project),
+                user: UserId(project),
+                name: format!("storm-{i}"),
+                command: format!("python train_mnist.py --epoch {epochs}"),
+                input_fileset: String::new(),
+                output_fileset: format!("storm-{i}-out"),
+                resources: ResourceConfig::new(1.0, 1024),
+                pool: None,
+                data_commit: None,
+                priority,
+                gang,
+            })
+            .unwrap();
+        ids.push(id);
+    }
+
+    // First pump fills the empty cluster: weighted dominant shares of
+    // the 16 tenants must be level within 10% (every backlog is deep).
+    acai.engine.pump();
+    let shares = acai.engine.scheduler.project_shares();
+    assert_eq!(shares.len(), TENANTS as usize);
+    let mean = shares.iter().map(|s| s.share).sum::<f64>() / shares.len() as f64;
+    assert!(mean > 0.0);
+    for s in &shares {
+        assert!(
+            (s.share - mean).abs() <= 0.1 * mean,
+            "{}: weighted share {} strays >10% from level {mean}",
+            s.project,
+            s.share,
+        );
+    }
+
+    acai.engine.run_until_idle();
+
+    let counters = acai.engine.scheduler.counters();
+    // de-O(n²): one pump never rescans the whole backlog more than the
+    // enqueue/retire touches allow, and the storm's total decision
+    // spend stays ~linear in jobs (a per-pump full rescan would burn
+    // pumps × backlog ≈ hundreds of millions here).
+    assert!(
+        counters.max_pump_decisions < 2 * JOBS,
+        "worst pump burned {} decisions",
+        counters.max_pump_decisions
+    );
+    assert!(
+        counters.decisions < 60 * JOBS,
+        "storm burned {} total decisions",
+        counters.decisions
+    );
+    assert!(counters.launched >= JOBS);
+
+    let mut out = Vec::with_capacity(ids.len());
+    for id in ids {
+        let r = acai.engine.registry.get(id).unwrap();
+        assert_eq!(r.state, JobState::Finished, "{id} did not finish: {:?}", r.error);
+        // only low-priority work is ever evicted (spot is off here)
+        if r.preemptions > 0 {
+            assert_eq!(r.spec.priority, Priority::Low);
+        }
+        out.push((
+            r.launched_at.unwrap().to_bits(),
+            r.runtime_secs.unwrap().to_bits(),
+            r.cost.unwrap().to_bits(),
+            r.preemptions,
+        ));
+    }
+    (out, counters)
+}
+
+/// (c) at the engine tier: same seed ⇒ bit-identical launch times,
+/// runtimes, billed costs, and preemption counts for all 10k jobs.
+#[test]
+fn engine_storm_is_bit_identical_across_same_seed_reruns() {
+    let (a, ca) = engine_storm(0xACA1_0001);
+    let (b, cb) = engine_storm(0xACA1_0001);
+    assert_eq!(a, b, "per-job (launched_at, runtime, cost, preemptions) diverged");
+    assert_eq!(ca, cb, "scheduler counters diverged");
+}
+
+/// Weighted two-tenant workload through the in-process SDK client:
+/// a 4:1 weight split yields a 4:1 slot split on a full cluster.
+#[test]
+fn weighted_two_tenant_workload_via_local_client() {
+    let acai = Arc::new(
+        Acai::boot(PlatformConfig {
+            quota_k: 64,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let root = acai.credentials.root_token().to_string();
+    let (heavy_id, heavy_token) = acai
+        .credentials
+        .create_project(&root, "heavy", "alice")
+        .unwrap();
+    let (light_id, light_token) = acai
+        .credentials
+        .create_project(&root, "light", "bob")
+        .unwrap();
+    acai.set_project_weight(&root, "heavy", 4.0).unwrap();
+
+    let heavy = Client::connect(acai.clone(), &heavy_token).unwrap();
+    let light = Client::connect(acai.clone(), &light_token).unwrap();
+    let request = |tenant: &str, i: usize| JobRequest {
+        name: format!("{tenant}-{i}"),
+        command: "python train_mnist.py --epoch 2".into(),
+        input_fileset: String::new(),
+        output_fileset: format!("{tenant}-{i}-out"),
+        resources: ResourceConfig::new(4.0, 8192),
+        pool: None,
+        data_commit: None,
+        priority: Priority::Normal,
+        gang: 1,
+    };
+    let mut ids = Vec::new();
+    for i in 0..40 {
+        ids.push(heavy.submit(request("heavy", i)).unwrap());
+        ids.push(light.submit(request("light", i)).unwrap());
+    }
+
+    // default cluster: 8 nodes × 16 vCPU = 32 four-vCPU slots; a 4:1
+    // weight split over a deep backlog must fill 25–26 vs 6–7 slots.
+    acai.engine.pump();
+    let shares = acai.engine.scheduler.project_shares();
+    let active = |id| {
+        shares
+            .iter()
+            .find(|s| s.project == id)
+            .map(|s| s.active)
+            .unwrap_or(0) as f64
+    };
+    let (heavy_active, light_active) = (active(heavy_id), active(light_id));
+    assert!(
+        (heavy_active - 25.6).abs() <= 2.56,
+        "heavy tenant holds {heavy_active} of 32 slots, expected 25.6 ±10%"
+    );
+    assert!(
+        (light_active - 6.4).abs() <= 0.64 + 1.0,
+        "light tenant holds {light_active} of 32 slots, expected 6.4 ±10% (±1 slot)"
+    );
+
+    heavy.wait_all();
+    for id in ids {
+        let r = acai.engine.registry.get(id).unwrap();
+        assert_eq!(r.state, JobState::Finished);
+        assert!(r.cost.unwrap() > 0.0);
+    }
+}
+
+/// The same weighted workload over real HTTP: the weight endpoint,
+/// priority/gang on the wire DTOs, and the `scheduler` metrics block.
+#[test]
+fn weighted_workload_and_scheduler_metrics_via_remote_client() {
+    let acai = Arc::new(Acai::boot_default());
+    let root = acai.credentials.root_token().to_string();
+    let server = Server::serve(0, make_handler(acai.clone())).unwrap();
+    let (_hp, heavy) =
+        RemoteClient::create_project(server.addr(), &root, "heavy", "alice").unwrap();
+    let (_lp, light) =
+        RemoteClient::create_project(server.addr(), &root, "light", "bob").unwrap();
+
+    // the weight endpoint is root-guarded and validated
+    RemoteClient::set_project_weight(server.addr(), &root, "heavy", 4.0).unwrap();
+    assert_eq!(
+        RemoteClient::set_project_weight(server.addr(), "forged", "heavy", 2.0)
+            .unwrap_err()
+            .status(),
+        403
+    );
+    assert_eq!(
+        RemoteClient::set_project_weight(server.addr(), &root, "heavy", 0.0)
+            .unwrap_err()
+            .status(),
+        400
+    );
+    assert_eq!(
+        RemoteClient::set_project_weight(server.addr(), &root, "nosuch", 2.0)
+            .unwrap_err()
+            .status(),
+        404
+    );
+
+    // priority + gang survive the wire round trip
+    let request = |tenant: &str, i: usize, priority: Priority, gang: u32| JobRequest {
+        name: format!("{tenant}-{i}"),
+        command: "python train_mnist.py --epoch 1".into(),
+        input_fileset: String::new(),
+        output_fileset: format!("{tenant}-{i}-out"),
+        resources: ResourceConfig::new(1.0, 1024),
+        pool: None,
+        data_commit: None,
+        priority,
+        gang,
+    };
+    let gang_job = heavy
+        .submit_job(&request("heavy", 0, Priority::High, 2))
+        .unwrap();
+    let mut heavy_ids = Vec::new();
+    let mut light_ids = Vec::new();
+    for i in 1..8 {
+        heavy_ids.push(heavy.submit_job(&request("heavy", i, Priority::Normal, 1)).unwrap());
+        light_ids.push(light.submit_job(&request("light", i, Priority::Low, 1)).unwrap());
+    }
+    let status = heavy.await_job(gang_job).unwrap();
+    assert_eq!(status.state, "finished");
+    assert_eq!(status.priority, Priority::High);
+    assert_eq!(status.gang, 2);
+    assert!(status.cost.unwrap() > 0.0);
+    for id in heavy_ids {
+        assert_eq!(heavy.await_job(id).unwrap().state, "finished");
+    }
+    for id in light_ids {
+        let status = light.await_job(id).unwrap();
+        assert_eq!(status.state, "finished");
+        assert_eq!(status.priority, Priority::Low);
+    }
+
+    // GET /v1/metrics serves the scheduler block with weighted shares
+    let sched = heavy.scheduler_metrics().unwrap();
+    assert!(sched.get("decisions").and_then(Json::as_u64).unwrap() >= 1);
+    assert!(sched.get("launched").and_then(Json::as_u64).unwrap() >= 1);
+    assert!(sched.get("max_pump_decisions").and_then(Json::as_u64).is_some());
+    let projects = sched.get("projects").and_then(Json::as_array).unwrap();
+    let heavy_weight = projects
+        .iter()
+        .find_map(|p| {
+            let w = p.get("weight").and_then(Json::as_f64)?;
+            (w == 4.0).then_some(w)
+        });
+    assert_eq!(heavy_weight, Some(4.0), "weight 4.0 missing from scheduler metrics");
+}

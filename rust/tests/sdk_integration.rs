@@ -43,6 +43,8 @@ fn complete_user_journey() {
             resources: ResourceConfig::new(2.0, 2048),
             pool: None,
             data_commit: None,
+            priority: acai::engine::Priority::Normal,
+            gang: 1,
         })
         .unwrap();
     client.wait_all();
@@ -87,6 +89,8 @@ fn hyperparameter_sweep_with_metadata_leaderboard() {
                 resources: ResourceConfig::new(1.0, 1024),
                 pool: None,
                 data_commit: None,
+                priority: acai::engine::Priority::Normal,
+                gang: 1,
             })
             .unwrap();
     }
@@ -309,6 +313,8 @@ fn pipeline_chains_stages_and_cache_serves_repeat_inputs() {
                 resources: ResourceConfig::new(0.5, 512),
                 pool: None,
                 data_commit: None,
+                priority: acai::engine::Priority::Normal,
+                gang: 1,
             })
             .unwrap();
     }
