@@ -1,0 +1,93 @@
+//! Perf: observability tier — span-emit cost, histogram observe
+//! throughput, and trace-assembly latency at a full 10k-event ring.
+//! Tracing runs inline on every job-lifecycle transition and every API
+//! request, so the emit path must stay far below the cost of the work
+//! it annotates.
+
+mod common;
+
+use acai::json::Json;
+use acai::obs::{MetricsRegistry, TraceStore};
+use common::*;
+
+fn main() {
+    header(
+        "Perf: observability (span emit / histogram observe / trace assembly)",
+        "spans + histograms ride every scheduler decision; they must be noise",
+    );
+
+    // span emit into the sharded ring (id derivation + ring push)
+    let store = TraceStore::new(42);
+    let mut t = 0u64;
+    let ns = bench_ns(10_000, 500_000, || {
+        t += 1;
+        store.emit("job-1", "run", t as f64, vec![]);
+    });
+    println!("span emit (no fields):  {ns:.0} ns/op");
+    assert!(ns < 5_000.0, "span emit too slow: {ns} ns");
+
+    let mut t = 0u64;
+    let ns = bench_ns(10_000, 200_000, || {
+        t += 1;
+        store.emit(
+            "job-2",
+            "placement",
+            t as f64,
+            vec![
+                ("node".to_string(), Json::from("node-3")),
+                ("attempt".to_string(), Json::from(t)),
+            ],
+        );
+    });
+    println!("span emit (2 fields):   {ns:.0} ns/op");
+
+    // histogram observe (atomic bucket bump + micro-unit sum)
+    let reg = MetricsRegistry::new();
+    let hist = reg.histogram("bench_hist_seconds", &[0.5, 1.0, 5.0, 15.0, 60.0]);
+    let mut i = 0u64;
+    let ns = bench_ns(10_000, 1_000_000, || {
+        i += 1;
+        hist.observe((i % 100) as f64);
+    });
+    println!(
+        "histogram observe:      {ns:.0} ns/op ({:.1}M obs/s)",
+        1e3 / ns
+    );
+    assert!(ns < 1_000.0, "histogram observe too slow: {ns} ns");
+
+    let ctr = reg.counter("bench_counter_total");
+    let ns = bench_ns(10_000, 1_000_000, || ctr.inc());
+    println!("counter inc:            {ns:.0} ns/op");
+
+    // trace assembly at a full ring: one trace holding exactly the
+    // per-shard cap, copied out seq-sorted (what GET /v1/trace/* pays)
+    let store = TraceStore::new(7);
+    for i in 0..10_000u64 {
+        store.emit(
+            "job-9",
+            "stage",
+            i as f64,
+            vec![("step".to_string(), Json::from(i))],
+        );
+    }
+    let ns = bench_ns(5, 200, || {
+        let events = store.events("job-9");
+        assert_eq!(events.len(), 10_000);
+    });
+    println!("trace assembly (10k):   {:.1} µs", ns / 1000.0);
+    assert!(ns < 50_000_000.0, "trace assembly too slow: {ns} ns");
+
+    // registry snapshot with a realistic series count (what a
+    // Prometheus scrape pays before rendering)
+    for r in 0..200 {
+        let route = format!("r{r}");
+        reg.counter_with("bench_routes_total", &[("route", &route)]).inc();
+    }
+    let ns = bench_ns(5, 200, || {
+        let snap = reg.snapshot();
+        assert!(snap.len() >= 200);
+    });
+    println!("registry snapshot (200+ series): {:.1} µs", ns / 1000.0);
+
+    println!("\nPERF OK");
+}

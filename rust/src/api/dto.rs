@@ -1328,6 +1328,9 @@ pub fn trial_status_to_json(t: &TrialStatus) -> Json {
         .field("metrics", f64_pairs_to_json(&t.metrics));
     if let Some(j) = t.job {
         b = b.field("job", j.to_string());
+        // derived, never stored: the job id doubles as the trial's
+        // trace key (`GET /v1/trace/jobs/{id}`)
+        b = b.field("trace", j.to_string());
     }
     if let Some(v) = t.predicted_runtime {
         b = b.field("predicted_runtime", v);
@@ -1709,6 +1712,171 @@ pub fn objective_from_json(v: &Json) -> Result<Objective> {
         other => Err(AcaiError::invalid(format!(
             "unknown objective kind {other:?} (expected min_runtime|min_cost)"
         ))),
+    }
+}
+
+// ---------------------------------------------------------------------
+// tracing (job + request span timelines)
+// ---------------------------------------------------------------------
+
+/// One span event on a trace timeline (`GET /v1/trace/...`).  `span`
+/// is the deterministic 64-bit span id rendered as fixed-width hex
+/// (f64-backed JSON numbers cannot carry 64 bits losslessly), and
+/// `seq` is the event's ordinal WITHIN its trace — the store's global
+/// sequence interleaves across traces nondeterministically under
+/// concurrent API threads, so it never crosses the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub span: String,
+    pub name: String,
+    /// Sim-clock timestamp (virtual seconds).
+    pub at: f64,
+    pub seq: u64,
+    pub fields: Vec<(String, Json)>,
+}
+
+impl TraceEvent {
+    pub fn from_span(e: &crate::obs::SpanEvent, ordinal: u64) -> TraceEvent {
+        TraceEvent {
+            span: format!("{:016x}", e.span),
+            name: e.name.clone(),
+            at: e.at,
+            seq: ordinal,
+            fields: e.fields.clone(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = JsonObject::new();
+        for (k, v) in &self.fields {
+            fields.set(k.clone(), v.clone());
+        }
+        Json::obj()
+            .field("span", self.span.as_str())
+            .field("name", self.name.as_str())
+            .field("at", self.at)
+            .field("seq", self.seq)
+            .field("fields", fields)
+            .build()
+    }
+
+    pub fn from_json(v: &Json) -> Result<TraceEvent> {
+        let obj = as_object(v)?;
+        check_fields(obj, &["span", "name", "at", "seq", "fields"])?;
+        let fields = match obj.get("fields") {
+            Some(Json::Obj(o)) => o.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+            Some(_) => return Err(AcaiError::invalid("field \"fields\" must be an object")),
+            None => Vec::new(),
+        };
+        Ok(TraceEvent {
+            span: str_field(obj, "span")?,
+            name: str_field(obj, "name")?,
+            at: f64_field(obj, "at")?,
+            seq: u64_field(obj, "seq")?,
+            fields,
+        })
+    }
+
+    /// Convenience: look up one structured field by key.
+    pub fn field(&self, key: &str) -> Option<&Json> {
+        self.fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+}
+
+/// The full lifecycle timeline of one job (`GET /v1/trace/jobs/{id}`)
+/// plus the per-phase durations derived from it: time queued, cold
+/// input transfer, useful run time, and post-checkpoint rework paid to
+/// preemptions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobTrace {
+    pub job: JobId,
+    pub state: String,
+    pub preemptions: u64,
+    pub queue_wait: f64,
+    pub transfer: f64,
+    pub run: f64,
+    pub rework: f64,
+    pub events: Vec<TraceEvent>,
+}
+
+impl JobTrace {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("job", self.job.to_string())
+            .field("state", self.state.as_str())
+            .field("preemptions", self.preemptions)
+            .field(
+                "phases",
+                Json::obj()
+                    .field("queue_wait_secs", self.queue_wait)
+                    .field("transfer_secs", self.transfer)
+                    .field("run_secs", self.run)
+                    .field("rework_secs", self.rework)
+                    .build(),
+            )
+            .field(
+                "events",
+                Json::Arr(self.events.iter().map(TraceEvent::to_json).collect()),
+            )
+            .build()
+    }
+
+    pub fn from_json(v: &Json) -> Result<JobTrace> {
+        let obj = as_object(v)?;
+        check_fields(obj, &["job", "state", "preemptions", "phases", "events"])?;
+        let phases = match obj.get("phases") {
+            Some(Json::Obj(o)) => o,
+            _ => return Err(AcaiError::invalid("field \"phases\" must be an object")),
+        };
+        check_fields(
+            phases,
+            &["queue_wait_secs", "transfer_secs", "run_secs", "rework_secs"],
+        )?;
+        Ok(JobTrace {
+            job: str_field(obj, "job")?.parse()?,
+            state: str_field(obj, "state")?,
+            preemptions: u64_field(obj, "preemptions")?,
+            queue_wait: f64_field(phases, "queue_wait_secs")?,
+            transfer: f64_field(phases, "transfer_secs")?,
+            run: f64_field(phases, "run_secs")?,
+            rework: f64_field(phases, "rework_secs")?,
+            events: arr_field(obj, "events")?
+                .iter()
+                .map(TraceEvent::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// One API request's span events (`GET /v1/trace/requests/{rid}`),
+/// keyed by the `x-request-id` its response carried.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestTrace {
+    pub request_id: String,
+    pub events: Vec<TraceEvent>,
+}
+
+impl RequestTrace {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("request_id", self.request_id.as_str())
+            .field(
+                "events",
+                Json::Arr(self.events.iter().map(TraceEvent::to_json).collect()),
+            )
+            .build()
+    }
+
+    pub fn from_json(v: &Json) -> Result<RequestTrace> {
+        let obj = as_object(v)?;
+        check_fields(obj, &["request_id", "events"])?;
+        Ok(RequestTrace {
+            request_id: str_field(obj, "request_id")?,
+            events: arr_field(obj, "events")?
+                .iter()
+                .map(TraceEvent::from_json)
+                .collect::<Result<_>>()?,
+        })
     }
 }
 
@@ -2200,6 +2368,69 @@ mod tests {
             reclaimed_chunk_bytes: 320,
         };
         assert_eq!(GcSweepReport::from_json(&gc.to_json()).unwrap(), gc);
+    }
+
+    #[test]
+    fn trace_dtos_round_trip_strictly() {
+        let event = TraceEvent {
+            span: "00ab54a98ceb1f0a".into(),
+            name: "placement".into(),
+            at: 1.5,
+            seq: 2,
+            fields: vec![("gang".into(), Json::from(2u64))],
+        };
+        assert_eq!(TraceEvent::from_json(&event.to_json()).unwrap(), event);
+        let trace = JobTrace {
+            job: JobId(3),
+            state: "finished".into(),
+            preemptions: 1,
+            queue_wait: 2.0,
+            transfer: 0.5,
+            run: 10.0,
+            rework: 1.5,
+            events: vec![event.clone()],
+        };
+        let back = JobTrace::from_json(&trace.to_json()).unwrap();
+        assert_eq!(back, trace);
+        assert_eq!(back.events[0].field("gang").and_then(Json::as_u64), Some(2));
+        let rt = RequestTrace {
+            request_id: "rc1-4".into(),
+            events: vec![event],
+        };
+        assert_eq!(RequestTrace::from_json(&rt.to_json()).unwrap(), rt);
+        // unknown fields are 400, like every other strict codec
+        let v = crate::json::parse(
+            r#"{"span":"0","name":"n","at":0,"seq":0,"fields":{},"color":"red"}"#,
+        )
+        .unwrap();
+        assert_eq!(TraceEvent::from_json(&v).unwrap_err().status(), 400);
+    }
+
+    #[test]
+    fn trial_status_carries_a_derived_trace_key() {
+        let t = TrialStatus {
+            experiment: ExperimentId(1),
+            index: 0,
+            job: Some(JobId(9)),
+            name: "trial-0000".into(),
+            command: "python t.py".into(),
+            args: vec![],
+            resources: ResourceConfig::new(1.0, 512),
+            predicted_runtime: None,
+            predicted_cost: None,
+            state: "running".into(),
+            runtime_secs: None,
+            cost: None,
+            output: None,
+            metrics: vec![],
+            error: None,
+        };
+        let v = trial_status_to_json(&t);
+        assert_eq!(v.get("trace").and_then(Json::as_str), Some("job-9"));
+        // decode ignores the derived key; an unscheduled trial omits it
+        assert_eq!(trial_status_from_json(&v).unwrap().job, Some(JobId(9)));
+        let unscheduled = TrialStatus { job: None, ..t };
+        assert!(trial_status_to_json(&unscheduled).get("trace").is_none());
     }
 
     #[test]

@@ -2,13 +2,35 @@
 //! the metrics middleware and served at `GET /v1/metrics` — the
 //! observability hook the ROADMAP's "millions of users" scaling work
 //! measures against.
+//!
+//! Since the observability tier landed, this type is a thin facade
+//! over the platform-wide [`MetricsRegistry`]: each `record` call
+//! increments `acai_api_requests_total{route}` (plus
+//! `acai_api_errors_total{route}` on 4xx/5xx) and observes
+//! `acai_api_latency_micros{route}`, so the same series back both the
+//! legacy `api.routes` JSON block and the Prometheus exposition —
+//! one source of truth, no hand-rolled accumulation.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::Arc;
 
 use crate::json::Json;
+use crate::obs::{MetricsRegistry, SampleValue};
 
-/// Aggregated stats for one route template.
+/// Latency histogram bounds, in microseconds.  Wall-clock API latency
+/// is the one deliberately non-deterministic measurement in the
+/// platform (it times real request handling, not sim time).
+const LATENCY_BOUNDS_MICROS: &[f64] = &[
+    50.0, 100.0, 250.0, 500.0, 1_000.0, 2_500.0, 5_000.0, 10_000.0, 50_000.0, 250_000.0,
+    1_000_000.0,
+];
+
+const REQUESTS: &str = "acai_api_requests_total";
+const ERRORS: &str = "acai_api_errors_total";
+const LATENCY: &str = "acai_api_latency_micros";
+
+/// Aggregated stats for one route template, reconstructed from the
+/// registry series on demand.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RouteStats {
     pub count: u64,
@@ -17,45 +39,80 @@ pub struct RouteStats {
     pub total_micros: u64,
 }
 
-/// Thread-safe metrics registry (one per [`super::make_handler`]).
-#[derive(Default)]
+/// Thread-safe per-route API metrics view (one per
+/// [`super::make_handler`]), backed by a shared [`MetricsRegistry`].
 pub struct ApiMetrics {
-    routes: Mutex<BTreeMap<String, RouteStats>>,
+    registry: Arc<MetricsRegistry>,
+}
+
+impl Default for ApiMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl ApiMetrics {
+    /// A standalone instance with its own private registry (tests and
+    /// tools that don't boot a platform).
     pub fn new() -> ApiMetrics {
-        ApiMetrics::default()
+        ApiMetrics {
+            registry: Arc::new(MetricsRegistry::new()),
+        }
+    }
+
+    /// The production constructor: record into the platform-wide
+    /// registry so `?format=prometheus` sees the same series.
+    pub fn with_registry(registry: Arc<MetricsRegistry>) -> ApiMetrics {
+        ApiMetrics { registry }
     }
 
     /// Record one request outcome under a route label
     /// (e.g. `"GET /v1/jobs/{id}"`).
     pub fn record(&self, route: &str, status: u16, micros: u64) {
-        let mut routes = self.routes.lock().unwrap();
-        let stats = routes.entry(route.to_string()).or_default();
-        stats.count += 1;
+        let labels = [("route", route)];
+        self.registry.counter_with(REQUESTS, &labels).inc();
         if status >= 400 {
-            stats.errors += 1;
+            self.registry.counter_with(ERRORS, &labels).inc();
         }
-        stats.total_micros += micros;
+        self.registry
+            .histogram_with(LATENCY, &labels, LATENCY_BOUNDS_MICROS)
+            .observe(micros as f64);
     }
 
-    /// Current totals, route-sorted.
+    /// Current totals, route-sorted — assembled from the registry's
+    /// `acai_api_*` series.
     pub fn snapshot(&self) -> Vec<(String, RouteStats)> {
-        self.routes
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|(k, v)| (k.clone(), *v))
-            .collect()
+        let mut by_route: BTreeMap<String, RouteStats> = BTreeMap::new();
+        for sample in self.registry.snapshot() {
+            let route = match sample.labels.iter().find(|(k, _)| k == "route") {
+                Some((_, v)) => v.clone(),
+                None => continue,
+            };
+            let stats = by_route.entry(route).or_default();
+            match (sample.name.as_str(), &sample.value) {
+                (REQUESTS, SampleValue::Counter(n)) => stats.count = *n,
+                (ERRORS, SampleValue::Counter(n)) => stats.errors = *n,
+                (LATENCY, SampleValue::Histogram { sum, .. }) => {
+                    stats.total_micros = sum.round() as u64
+                }
+                _ => {}
+            }
+        }
+        by_route.retain(|_, s| s.count > 0);
+        by_route.into_iter().collect()
     }
 
-    /// `{"routes": [{"route", "count", "errors", "avg_micros"}, ...]}`.
+    /// `{"routes": [{"route", "count", "errors", "avg_micros",
+    /// "p50_micros", "p99_micros"}, ...]}` — the quantiles come from
+    /// the registry histogram the middleware now records into.
     pub fn to_json(&self) -> Json {
         let rows: Vec<Json> = self
             .snapshot()
             .into_iter()
             .map(|(route, s)| {
+                let hist = self
+                    .registry
+                    .histogram_with(LATENCY, &[("route", &route)], LATENCY_BOUNDS_MICROS);
                 Json::obj()
                     .field("route", route)
                     .field("count", s.count)
@@ -64,6 +121,8 @@ impl ApiMetrics {
                         "avg_micros",
                         if s.count == 0 { 0 } else { s.total_micros / s.count },
                     )
+                    .field("p50_micros", hist.quantile(0.5))
+                    .field("p99_micros", hist.quantile(0.99))
                     .build()
             })
             .collect();
@@ -92,5 +151,25 @@ mod tests {
         let v = m.to_json();
         let rows = v.get("routes").and_then(Json::as_array).unwrap();
         assert_eq!(rows[0].get("avg_micros").and_then(Json::as_u64), Some(150));
+        // quantiles are bucket upper bounds from the shared histogram
+        assert_eq!(rows[0].get("p50_micros").and_then(Json::as_f64), Some(100.0));
+    }
+
+    #[test]
+    fn shared_registry_surfaces_api_series_for_prometheus() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let m = ApiMetrics::with_registry(reg.clone());
+        m.record("GET /v1/metrics", 200, 120);
+        m.record("GET /v1/metrics", 500, 80);
+        let text = crate::obs::snapshot_to_prometheus(&reg.snapshot());
+        assert!(text.contains("acai_api_requests_total{route=\"GET /v1/metrics\"} 2"));
+        assert!(text.contains("acai_api_errors_total{route=\"GET /v1/metrics\"} 1"));
+        assert!(text.contains("acai_api_latency_micros_count{route=\"GET /v1/metrics\"} 2"));
+        // the facade reconstructs the same totals from the registry
+        let snap = m.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].1.count, 2);
+        assert_eq!(snap[0].1.errors, 1);
+        assert_eq!(snap[0].1.total_micros, 200);
     }
 }

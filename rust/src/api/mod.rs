@@ -27,8 +27,8 @@ pub mod routes;
 pub mod tenant;
 
 pub use dto::{
-    DataPlaneMetrics, FileEntry, FileManifest, JobStatus, LogChunk, Page, PageReq,
-    ProvisionChoice, TraceDir,
+    DataPlaneMetrics, FileEntry, FileManifest, JobStatus, JobTrace, LogChunk, Page, PageReq,
+    ProvisionChoice, RequestTrace, TraceDir, TraceEvent,
 };
 pub use metrics::{ApiMetrics, RouteStats};
 pub use router::{ApiCtx, Middleware, PathParams, Query, Router};
@@ -40,6 +40,7 @@ use std::time::Instant;
 
 use crate::error::{AcaiError, Result};
 use crate::httpd::{Handler, Request, Response};
+use crate::json::Json;
 use crate::platform::Acai;
 use crate::sdk::Client;
 
@@ -101,10 +102,16 @@ impl Middleware for AuthLayer {
 /// Metrics label for requests that never match a route.
 const UNMATCHED: &str = "UNMATCHED";
 
+/// Longest client-supplied `x-request-id` the edge honors; anything
+/// longer (or empty) falls back to a server-minted id.
+const MAX_REQUEST_ID_LEN: usize = 128;
+
 /// Build the `/v1` REST handler (used by `acai serve` and the HTTP
-/// integration tests).
+/// integration tests).  Per-route metrics land in the platform-wide
+/// registry so `GET /v1/metrics` and `?format=prometheus` read the
+/// same series.
 pub fn make_handler(acai: Arc<Acai>) -> Handler {
-    let metrics = Arc::new(ApiMetrics::new());
+    let metrics = Arc::new(ApiMetrics::with_registry(acai.obs.metrics.clone()));
     let router = Arc::new(routes::v1_router(metrics.clone()));
     let chain: Arc<[Arc<dyn Middleware>]> = Arc::from(vec![
         Arc::new(RequestIdStamp) as Arc<dyn Middleware>,
@@ -116,7 +123,14 @@ pub fn make_handler(acai: Arc<Acai>) -> Handler {
     ]);
     let next_id = Arc::new(AtomicU64::new(1));
     Arc::new(move |req: &Request| {
-        let request_id = format!("req-{}", next_id.fetch_add(1, Ordering::Relaxed));
+        // a client-minted id (the SDK's `rc...` ids) makes the whole
+        // SDK -> httpd -> engine request share one trace; requests
+        // without one still get a server-minted id so every response
+        // carries `x-request-id`
+        let request_id = match req.header("x-request-id") {
+            Some(id) if !id.is_empty() && id.len() <= MAX_REQUEST_ID_LEN => id.to_string(),
+            _ => format!("req-{}", next_id.fetch_add(1, Ordering::Relaxed)),
+        };
         serve_one(&acai, &router, &chain, &metrics, req, &request_id)
     })
 }
@@ -130,6 +144,17 @@ fn serve_one(
     request_id: &str,
 ) -> Response {
     let started = Instant::now();
+    // the request span: every API call opens a trace keyed by its
+    // request id, so `GET /v1/trace/requests/{rid}` can replay it
+    acai.obs.trace.emit(
+        request_id,
+        "request",
+        acai.clock.now(),
+        vec![
+            ("method".to_string(), Json::from(req.method.as_str())),
+            ("path".to_string(), Json::from(req.path.as_str())),
+        ],
+    );
     let unmatched = |e: &AcaiError| {
         metrics.record(UNMATCHED, e.status(), started.elapsed().as_micros() as u64);
         with_request_id(
@@ -137,38 +162,57 @@ fn serve_one(
             request_id,
         )
     };
-    let query = match Query::parse(&req.query) {
-        Ok(q) => q,
-        Err(e) => return unmatched(&e),
-    };
-    match router.dispatch(&req.method, &req.path) {
-        Ok(Match::Route(route, params)) => {
-            let mut ctx = ApiCtx::new(acai.clone(), request_id.to_string(), route, params, query);
-            let handler: &RouteHandler = &route.handler;
-            // MetricsLayer records success and error outcomes per-route
-            match run_chain(chain, req, &mut ctx, handler) {
-                Ok(resp) => with_request_id(resp, request_id),
-                Err(e) => with_request_id(
-                    Response::error_with_request_id(&e, Some(request_id)),
-                    request_id,
-                ),
+    let mut route_label = UNMATCHED.to_string();
+    let mut project: Option<String> = None;
+    let resp = (|| {
+        let query = match Query::parse(&req.query) {
+            Ok(q) => q,
+            Err(e) => return unmatched(&e),
+        };
+        match router.dispatch(&req.method, &req.path) {
+            Ok(Match::Route(route, params)) => {
+                let mut ctx =
+                    ApiCtx::new(acai.clone(), request_id.to_string(), route, params, query);
+                let handler: &RouteHandler = &route.handler;
+                // MetricsLayer records success and error outcomes per-route
+                let out = run_chain(chain, req, &mut ctx, handler);
+                route_label = ctx.route.clone();
+                project = ctx.client().ok().map(|c| c.identity().project.to_string());
+                match out {
+                    Ok(resp) => with_request_id(resp, request_id),
+                    Err(e) => with_request_id(
+                        Response::error_with_request_id(&e, Some(request_id)),
+                        request_id,
+                    ),
+                }
             }
-        }
-        Ok(Match::MethodNotAllowed(allow)) => {
-            let e = AcaiError::MethodNotAllowed(format!(
-                "{} is not allowed on {}",
+            Ok(Match::MethodNotAllowed(allow)) => {
+                let e = AcaiError::MethodNotAllowed(format!(
+                    "{} is not allowed on {}",
+                    req.method, req.path
+                ));
+                let mut resp = unmatched(&e);
+                resp.headers.push(("allow".into(), allow.join(", ")));
+                resp
+            }
+            Ok(Match::NotFound) => unmatched(&AcaiError::not_found(format!(
+                "{} {}",
                 req.method, req.path
-            ));
-            let mut resp = unmatched(&e);
-            resp.headers.push(("allow".into(), allow.join(", ")));
-            resp
+            ))),
+            Err(e) => unmatched(&e),
         }
-        Ok(Match::NotFound) => unmatched(&AcaiError::not_found(format!(
-            "{} {}",
-            req.method, req.path
-        ))),
-        Err(e) => unmatched(&e),
+    })();
+    let mut fields = vec![
+        ("status".to_string(), Json::from(resp.status as u64)),
+        ("route".to_string(), Json::from(route_label)),
+    ];
+    if let Some(p) = project {
+        fields.push(("project".to_string(), Json::from(p)));
     }
+    acai.obs
+        .trace
+        .emit(request_id, "response", acai.clock.now(), fields);
+    resp
 }
 
 /// Idempotent stamp: every response leaving `serve_one` carries exactly

@@ -19,7 +19,8 @@
 //! | profiles    | `POST /v1/profiles`, `POST /v1/autoprovision` |
 //! | cluster     | `GET /v1/cluster/pools`, `PUT /v1/cluster/pools` (upsert one pool; project-admin), `GET /v1/cluster/nodes` |
 //! | tenancy     | `GET /v1/tenant` (this project's usage/billing counters; exempt from admission) |
-//! | operational | `GET /v1/healthz` (public), `GET /v1/metrics` (per-route stats + cluster/autoscaler/preemption counters + data-plane dedup/transfer block + per-tenant admission counters + scheduler block: DRF decision counters and per-project weighted shares) |
+//! | tracing     | `GET /v1/trace/jobs/{id}` (ordered job-lifecycle timeline + phase durations: queue-wait, transfer, run, preempted rework), `GET /v1/trace/requests/{rid}` (one API request's span events by `x-request-id`); both exempt from admission |
+//! | operational | `GET /v1/healthz` (public), `GET /v1/metrics` (per-route stats + cluster/autoscaler/preemption counters + data-plane dedup/transfer block + per-tenant admission counters + scheduler block: DRF decision counters and per-project weighted shares + `registry` block: every series in the shared metrics registry; `?format=prometheus` renders the same snapshot as Prometheus text exposition) |
 
 use std::sync::Arc;
 
@@ -117,11 +118,35 @@ pub fn v1_router(metrics: Arc<ApiMetrics>) -> Router {
     // ---- tenancy ----
     r.route("GET", "/v1/tenant", h(get_tenant_usage));
 
+    // ---- tracing (admission-exempt: see tenant::is_exempt) ----
+    r.route("GET", "/v1/trace/jobs/{id}", h(get_job_trace));
+    r.route("GET", "/v1/trace/requests/{rid}", h(get_request_trace));
+
     // ---- operational ----
     r.route(
         "GET",
         "/v1/metrics",
         h(move |_req, ctx| {
+            // both formats render the SAME registry snapshot — one
+            // source of truth behind JSON and Prometheus exposition
+            let snapshot = ctx.acai.obs.metrics.snapshot();
+            match ctx.query.get("format") {
+                None | Some("json") => {}
+                Some("prometheus") => {
+                    let mut resp = Response::new(200);
+                    resp.headers.push((
+                        "content-type".into(),
+                        "text/plain; version=0.0.4".into(),
+                    ));
+                    resp.body = crate::obs::snapshot_to_prometheus(&snapshot).into_bytes();
+                    return Ok(resp);
+                }
+                Some(other) => {
+                    return Err(AcaiError::invalid(format!(
+                        "unknown ?format= {other:?} (expected json or prometheus)"
+                    )))
+                }
+            }
             let per_route = metrics.to_json();
             let routes = per_route
                 .get("routes")
@@ -146,6 +171,7 @@ pub fn v1_router(metrics: Arc<ApiMetrics>) -> Router {
                             &ctx.acai.engine.scheduler.project_shares(),
                         ),
                     )
+                    .field("registry", crate::obs::snapshot_to_json(&snapshot))
                     .build(),
             ))
         }),
@@ -718,6 +744,27 @@ fn tag_metadata(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
 fn get_tenant_usage(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
     let report = ctx.client()?.tenant_usage()?;
     Ok(Response::json(&report.to_json()))
+}
+
+// ---------------------------------------------------------------------
+// tracing
+// ---------------------------------------------------------------------
+
+/// `GET /v1/trace/jobs/{id}` — the job's full lifecycle timeline
+/// (enqueue → placement → transfer → run → preempt/resume → terminal)
+/// plus derived per-phase durations.  Admission-exempt, like metrics.
+fn get_job_trace(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let id: JobId = ctx.params.id("id")?;
+    let trace = ctx.client()?.job_trace(id)?;
+    Ok(Response::json(&trace.to_json()))
+}
+
+/// `GET /v1/trace/requests/{rid}` — one API request's span events,
+/// keyed by the `x-request-id` its response carried.
+fn get_request_trace(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
+    let rid = ctx.params.raw("rid")?.to_string();
+    let trace = ctx.client()?.request_trace(&rid)?;
+    Ok(Response::json(&trace.to_json()))
 }
 
 // ---------------------------------------------------------------------

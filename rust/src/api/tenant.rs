@@ -201,6 +201,18 @@ impl TenantRegistry {
             .unwrap_or_default()
     }
 
+    /// Every project's usage counters, project-id-ordered — the metrics
+    /// registry's tenant collector pulls this on each snapshot.
+    pub fn all_usage(&self) -> Vec<(ProjectId, TenantUsage)> {
+        let states = self.states.lock().unwrap();
+        let mut rows: Vec<(ProjectId, TenantUsage)> = states
+            .iter()
+            .map(|(p, s)| (*p, s.usage.clone()))
+            .collect();
+        rows.sort_by_key(|(p, _)| *p);
+        rows
+    }
+
     /// The `tenants` block of `GET /v1/metrics`: per-project counters
     /// plus the priced API cost, project-ordered for determinism.
     pub fn to_json(&self, pricing: &PricingModel) -> Json {
@@ -234,10 +246,16 @@ impl TenantRegistry {
 }
 
 /// Routes every token can hit even once throttled/quota-exhausted —
-/// usage must stay observable or a capped project cannot find out why
-/// its calls bounce.
+/// usage and traces must stay observable or a capped project cannot
+/// find out why its calls bounce.
 fn is_exempt(route: &str) -> bool {
-    matches!(route, "GET /v1/metrics" | "GET /v1/tenant")
+    matches!(
+        route,
+        "GET /v1/metrics"
+            | "GET /v1/tenant"
+            | "GET /v1/trace/jobs/{id}"
+            | "GET /v1/trace/requests/{rid}"
+    )
 }
 
 /// The admission middleware.  Runs after auth (it needs the project)

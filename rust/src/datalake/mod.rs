@@ -32,7 +32,7 @@ pub use cache::FileSetCache;
 pub use cas::{CasStats, ChunkStore};
 pub use fileset::{FileSetStore, ResolvedSet};
 pub use metadata::{ArtifactKind, MetadataStore};
-pub use provenance::ProvenanceStore;
+pub use provenance::{edge_trace_id, ProvenanceStore};
 pub use session::{SessionState, UploadSession};
 pub use storage::{FileStat, Storage};
 pub use timetravel::{Branch, ChangedEntry, Commit, CommitDiff, DiffEntry, RollbackReport, TimeTravelStore};

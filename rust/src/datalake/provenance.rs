@@ -30,6 +30,18 @@ pub fn node_id(name: &str, version: Version) -> String {
     format!("{name}:{version}")
 }
 
+/// The trace id behind a provenance edge, if the edge was produced by
+/// a job.  Job-execution (and commit-pin) edges carry the job id
+/// string as their action, which is exactly the key the platform
+/// trace store files the job's lifecycle spans under — so a lineage
+/// answer links straight to `GET /v1/trace/jobs/{id}` timelines.
+pub fn edge_trace_id(edge: &Edge) -> Option<String> {
+    match edge.kind.as_str() {
+        KIND_JOB | KIND_COMMIT_PIN => Some(edge.action.clone()),
+        _ => None,
+    }
+}
+
 /// The provenance server.
 #[derive(Clone, Default)]
 pub struct ProvenanceStore {
@@ -186,6 +198,24 @@ mod tests {
             p.descendants(P, "raw", 1),
             vec!["features:1", "features:2", "model:1"]
         );
+    }
+
+    #[test]
+    fn job_edges_expose_their_trace_id() {
+        let p = ProvenanceStore::new();
+        p.record_job(P, ("raw", 1), ("features", 1), JobId(7)).unwrap();
+        p.record_commit_pin(P, "commit-3", ("features", 1), JobId(7)).unwrap();
+        p.record_creation(P, &[("features".into(), 1)], ("features", 2), "create-1")
+            .unwrap();
+        let (_, edges) = p.whole_graph(P);
+        let traces: Vec<Option<String>> = edges.iter().map(edge_trace_id).collect();
+        // both job-produced edges point at the job's trace; the manual
+        // creation has no timeline to link to
+        assert_eq!(
+            traces.iter().filter(|t| t.as_deref() == Some("job-7")).count(),
+            2
+        );
+        assert!(traces.iter().any(Option::is_none));
     }
 
     #[test]

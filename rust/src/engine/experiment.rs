@@ -182,6 +182,14 @@ impl TrialStatus {
         self.metrics.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
     }
 
+    /// The trial's trace id in the platform trace store (a job's trace
+    /// is keyed by its id string), usable with
+    /// [`crate::sdk::AcaiApi::job_trace`].  `None` while the trial is
+    /// pending submission.
+    pub fn trace_id(&self) -> Option<String> {
+        self.job.map(|j| j.to_string())
+    }
+
     fn to_row(&self) -> Json {
         let mut args = JsonObject::new();
         for (k, v) in &self.args {
@@ -1011,6 +1019,15 @@ mod tests {
                 .status(),
             404
         );
+        // every submitted trial names its job's trace, and the trace
+        // store holds a closed timeline under that key
+        for t in &trials {
+            let trace = t.trace_id().expect("submitted trial has a trace id");
+            assert_eq!(trace, t.job.unwrap().to_string());
+            let events = acai.obs.trace.events(&trace);
+            assert_eq!(events.first().map(|e| e.name.as_str()), Some("enqueue"));
+            assert_eq!(events.last().map(|e| e.name.as_str()), Some("complete"));
+        }
     }
 
     #[test]

@@ -9,6 +9,8 @@ use crate::cluster::{Cluster, ContainerEvent, ContainerPhase, ResourceConfig, Tr
 use crate::error::Result;
 use crate::ids::{ContainerId, JobId};
 use crate::json::Json;
+use crate::obs::TraceStore;
+use crate::simclock::SimClock;
 
 /// The launcher.
 #[derive(Clone)]
@@ -16,6 +18,9 @@ pub struct Launcher {
     cluster: Cluster,
     bus: Bus,
     by_container: Arc<Mutex<HashMap<ContainerId, JobId>>>,
+    /// When present, per-container placement and eviction land on the
+    /// owning job's trace timeline (clock supplies the sim timestamp).
+    trace: Option<(Arc<TraceStore>, SimClock)>,
 }
 
 impl Launcher {
@@ -24,6 +29,29 @@ impl Launcher {
             cluster,
             bus,
             by_container: Arc::new(Mutex::new(HashMap::new())),
+            trace: None,
+        }
+    }
+
+    /// Like [`Launcher::new`], but container-level events (placement,
+    /// eviction) are also emitted on the owning job's trace.
+    pub fn with_trace(
+        cluster: Cluster,
+        bus: Bus,
+        trace: Arc<TraceStore>,
+        clock: SimClock,
+    ) -> Self {
+        Self {
+            cluster,
+            bus,
+            by_container: Arc::new(Mutex::new(HashMap::new())),
+            trace: Some((trace, clock)),
+        }
+    }
+
+    fn emit(&self, job: JobId, name: &str, fields: Vec<(String, Json)>) {
+        if let Some((trace, clock)) = &self.trace {
+            trace.emit(&job.to_string(), name, clock.now(), fields);
         }
     }
 
@@ -45,6 +73,16 @@ impl Launcher {
         let (container, plan) = self.cluster.launch_with_data(res, duration, pool, chunks)?;
         self.by_container.lock().unwrap().insert(container, job);
         self.publish(container, job, "running");
+        self.emit(
+            job,
+            "container",
+            vec![
+                ("container".to_string(), Json::from(container.to_string())),
+                ("cold_bytes".to_string(), Json::from(plan.cold_bytes)),
+                ("warm_bytes".to_string(), Json::from(plan.warm_bytes)),
+                ("transfer_secs".to_string(), Json::from(plan.transfer_secs)),
+            ],
+        );
         Ok((container, plan))
     }
 
@@ -108,6 +146,11 @@ impl Launcher {
         let event = self.cluster.kill(container)?;
         if let Some(job) = self.by_container.lock().unwrap().remove(&container) {
             self.publish(container, job, "preempted");
+            self.emit(
+                job,
+                "evicted_container",
+                vec![("container".to_string(), Json::from(container.to_string()))],
+            );
         }
         Ok(event)
     }
@@ -212,6 +255,29 @@ mod tests {
             .collect();
         assert_eq!(statuses, vec!["running", "killed"]);
         assert!(l.watch().is_empty());
+    }
+
+    #[test]
+    fn with_trace_records_container_placement_and_eviction() {
+        let clock = SimClock::new();
+        let bus = Bus::new();
+        let cluster = Cluster::new(ClusterConfig::default(), clock.clone());
+        let trace = Arc::new(TraceStore::new(9));
+        let l = Launcher::with_trace(cluster, bus, trace.clone(), clock.clone());
+        let (c, _) = l
+            .launch(JobId(7), ResourceConfig::new(1.0, 1024), 50.0, None, &[])
+            .unwrap();
+        clock.advance(1.0);
+        l.evict(c).unwrap();
+        let events = trace.events("job-7");
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].name, "container");
+        assert_eq!(
+            events[0].field("container").unwrap().as_str(),
+            Some(c.to_string().as_str())
+        );
+        assert_eq!(events[1].name, "evicted_container");
+        assert_eq!(events[1].at, 1.0);
     }
 
     #[test]

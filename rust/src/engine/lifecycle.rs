@@ -74,6 +74,22 @@ impl JobState {
         }
     }
 
+    /// Span-event name a transition INTO this state emits on the job's
+    /// trace timeline (see [`crate::obs::trace`]).  Terminal states map
+    /// to the timeline's closing event; non-terminal states map to the
+    /// lifecycle event that marks the phase boundary.
+    pub fn phase_event(self) -> &'static str {
+        match self {
+            JobState::Queued => "enqueue",
+            JobState::Launching => "placement",
+            JobState::Running => "run",
+            JobState::Finished => "complete",
+            JobState::Failed => "failed",
+            JobState::Killed => "killed",
+            JobState::Preempted => "preempt",
+        }
+    }
+
     pub fn as_str(self) -> &'static str {
         match self {
             JobState::Queued => "queued",
@@ -167,6 +183,21 @@ mod tests {
     fn checked_transition_errors() {
         assert!(Queued.transition(Launching).is_ok());
         assert_eq!(Finished.transition(Running).unwrap_err().status(), 409);
+    }
+
+    #[test]
+    fn phase_events_close_timelines_exactly_for_terminals() {
+        // the span-chain property keys on these names: every terminal
+        // state must map to a distinct closing event
+        let mut names: Vec<&str> = [Finished, Failed, Killed]
+            .iter()
+            .map(|s| s.phase_event())
+            .collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 3);
+        assert_eq!(Finished.phase_event(), "complete");
+        assert_eq!(Preempted.phase_event(), "preempt");
     }
 
     #[test]

@@ -75,6 +75,7 @@ use crate::datalake::DataLake;
 use crate::error::{AcaiError, Result};
 use crate::ids::{JobId, ProjectId, Version};
 use crate::json::Json;
+use crate::obs::{Counter, Histogram, MetricsRegistry, Obs};
 use crate::pricing::PricingModel;
 use crate::prng::Rng;
 use crate::simclock::SimClock;
@@ -83,6 +84,44 @@ use crate::workload::{JobCommand, Workloads};
 /// Safety bound for the event loop (a run that needs more events than
 /// this indicates a scheduling livelock — fail loudly).
 const MAX_EVENTS: usize = 10_000_000;
+
+/// Registry handles for the engine's job-lifecycle metrics.  Queue
+/// wait, transfer and runtime observations are sim-clock-driven, so a
+/// seeded run reproduces the histograms bit-identically.
+struct EngineMetrics {
+    submitted: Counter,
+    finished: Counter,
+    failed: Counter,
+    preempted: Counter,
+    killed: Counter,
+    queue_wait: Histogram,
+    transfer: Histogram,
+    runtime: Histogram,
+}
+
+impl EngineMetrics {
+    fn new(reg: &MetricsRegistry) -> Self {
+        EngineMetrics {
+            submitted: reg.counter("acai_jobs_submitted_total"),
+            finished: reg.counter("acai_jobs_finished_total"),
+            failed: reg.counter("acai_jobs_failed_total"),
+            preempted: reg.counter("acai_jobs_preempted_total"),
+            killed: reg.counter("acai_jobs_killed_total"),
+            queue_wait: reg.histogram(
+                "acai_job_queue_wait_seconds",
+                &[0.0, 0.5, 1.0, 2.0, 5.0, 15.0, 60.0, 300.0, 1800.0],
+            ),
+            transfer: reg.histogram(
+                "acai_job_transfer_seconds",
+                &[0.0, 0.1, 0.5, 1.0, 5.0, 15.0, 60.0],
+            ),
+            runtime: reg.histogram(
+                "acai_job_runtime_seconds",
+                &[1.0, 5.0, 15.0, 60.0, 300.0, 1800.0, 7200.0],
+            ),
+        }
+    }
+}
 
 /// The execution engine.
 pub struct ExecutionEngine {
@@ -110,6 +149,11 @@ pub struct ExecutionEngine {
     /// replica failing or being preempted tears down the siblings so
     /// the gang never holds a partial reservation.
     gangs: Mutex<HashMap<JobId, usize>>,
+    /// The platform observability bundle: every lifecycle transition
+    /// emits a span event on the job's trace, and the lifecycle
+    /// histograms observe sim-clock durations.
+    obs: Arc<Obs>,
+    metrics: EngineMetrics,
 }
 
 impl ExecutionEngine {
@@ -124,12 +168,19 @@ impl ExecutionEngine {
         quota_k: usize,
         seed: u64,
         checkpoint_secs: f64,
+        obs: Arc<Obs>,
     ) -> Self {
+        let metrics = EngineMetrics::new(&obs.metrics);
         Self {
             registry: JobRegistry::new(),
-            scheduler: Scheduler::new(quota_k),
-            launcher: Launcher::new(cluster, bus.clone()),
-            monitor: Monitor::new(bus),
+            scheduler: Scheduler::with_registry(quota_k, &obs.metrics),
+            launcher: Launcher::with_trace(
+                cluster,
+                bus.clone(),
+                obs.trace.clone(),
+                clock.clone(),
+            ),
+            monitor: Monitor::with_trace(bus, obs.trace.clone()),
             logs: LogServer::new(),
             datalake,
             workloads,
@@ -139,6 +190,8 @@ impl ExecutionEngine {
             checkpoint_secs,
             drive: Mutex::new(()),
             gangs: Mutex::new(HashMap::new()),
+            obs,
+            metrics,
         }
     }
 
@@ -245,6 +298,19 @@ impl ExecutionEngine {
             },
             spec.priority,
         );
+        // the trace's first event: the job entered its queue
+        self.obs.trace.emit(
+            &id.to_string(),
+            "enqueue",
+            self.clock.now(),
+            vec![
+                ("project".into(), Json::from(project.to_string())),
+                ("user".into(), Json::from(user.to_string())),
+                ("priority".into(), Json::from(spec.priority.as_str())),
+                ("gang".into(), Json::from(gang)),
+            ],
+        );
+        self.metrics.submitted.inc();
         self.monitor.report(id, "queued", self.clock.now());
         self.pump();
         Ok(id)
@@ -271,6 +337,16 @@ impl ExecutionEngine {
         // pool can never stall the whole cluster's pump.
         let mut saturated: Vec<Option<String>> = Vec::new();
         for (key, job) in batch {
+            // the fair-share pop: this job won a drain slot this round
+            self.obs.trace.emit(
+                &job.to_string(),
+                "fair_share",
+                self.clock.now(),
+                vec![
+                    ("project".into(), Json::from(key.0.to_string())),
+                    ("user".into(), Json::from(key.1.to_string())),
+                ],
+            );
             let record = match self.registry.get(job) {
                 Ok(record) => record,
                 Err(e) => {
@@ -285,6 +361,12 @@ impl ExecutionEngine {
             if saturated.contains(&record.spec.pool) {
                 // this job's pool already failed a placement this
                 // round: hand the slot back, keep its queue order
+                self.obs.trace.emit(
+                    &job.to_string(),
+                    "requeue",
+                    self.clock.now(),
+                    vec![("reason".into(), Json::from("pool saturated this round"))],
+                );
                 self.scheduler.requeue_front(key, job);
                 continue;
             }
@@ -316,6 +398,12 @@ impl ExecutionEngine {
                     // pool saturated: put the job back (front, FIFO
                     // preserved), retry after the next completion frees
                     // capacity
+                    self.obs.trace.emit(
+                        &job.to_string(),
+                        "requeue",
+                        self.clock.now(),
+                        vec![("reason".into(), Json::from(e.to_string()))],
+                    );
                     let _ = self
                         .registry
                         .update(job, Some(JobState::Queued), |_| {});
@@ -411,6 +499,13 @@ impl ExecutionEngine {
             }
             self.gangs.lock().unwrap().remove(&vid);
             self.scheduler.note_eviction();
+            // the beneficiary's timeline names its victim
+            self.obs.trace.emit(
+                &record.id.to_string(),
+                "eviction",
+                self.clock.now(),
+                vec![("victim".into(), Json::from(vid.to_string()))],
+            );
             self.preempt_job(vid, self.clock.now(), "evicted by high-priority job");
             evicted = true;
         }
@@ -501,6 +596,8 @@ impl ExecutionEngine {
         }
         let mut containers: Vec<crate::ids::ContainerId> = Vec::with_capacity(gang);
         let mut transfer = 0.0f64;
+        let mut cold_total = 0u64;
+        let mut warm_total = 0u64;
         for _ in 0..gang {
             match self.launcher.launch(
                 job,
@@ -513,12 +610,23 @@ impl ExecutionEngine {
                     containers.push(container);
                     // the gang waits on its slowest replica's cold bytes
                     transfer = transfer.max(plan.transfer_secs);
+                    cold_total += plan.cold_bytes;
+                    warm_total += plan.warm_bytes;
                 }
                 Err(e) => {
                     // roll back the whole reservation: a revocation (or
                     // any race) mid-launch must not leave a partial gang
+                    let launched = containers.len() as u64;
                     for c in containers {
                         self.launcher.rollback(c);
+                    }
+                    if launched > 0 {
+                        self.obs.trace.emit(
+                            &job.to_string(),
+                            "gang_rollback",
+                            self.clock.now(),
+                            vec![("launched".into(), Json::from(launched))],
+                        );
                     }
                     return Err(e);
                 }
@@ -532,6 +640,31 @@ impl ExecutionEngine {
         // uses what the capacity cost when it was bought
         let price_mult = self.launcher.price_multiplier(first);
         let all = containers.clone();
+        let now = self.clock.now();
+        let trace_key = job.to_string();
+        // queue wait ended the instant placement succeeded, measured
+        // from the last enqueue/resume on this job's own trace
+        if let Some(queued_at) = self.obs.trace.last_at(&trace_key, &["enqueue", "resume"])
+        {
+            self.metrics.queue_wait.observe((now - queued_at).max(0.0));
+        }
+        self.obs.trace.emit(
+            &trace_key,
+            "placement",
+            now,
+            vec![("gang".into(), Json::from(gang as u64))],
+        );
+        self.obs.trace.emit(
+            &trace_key,
+            "transfer",
+            now,
+            vec![
+                ("transfer_secs".into(), Json::from(transfer)),
+                ("cold_bytes".into(), Json::from(cold_total)),
+                ("warm_bytes".into(), Json::from(warm_total)),
+            ],
+        );
+        self.metrics.transfer.observe(transfer);
         self.registry.update(job, Some(JobState::Running), |j| {
             j.launched_at = Some(self.clock.now());
             j.container = Some(first);
@@ -554,16 +687,25 @@ impl ExecutionEngine {
                 ),
             }],
         );
-        if plan.cold_bytes + plan.warm_bytes > 0 {
+        if cold_total + warm_total > 0 {
             self.logs.append(
                 job,
                 &[format!(
-                    "agent: node chunk cache: {} bytes warm, {} bytes cold ({:.6}s transfer)",
-                    plan.warm_bytes, plan.cold_bytes, plan.transfer_secs
+                    "agent: node chunk cache: {warm_total} bytes warm, {cold_total} bytes cold ({transfer:.6}s transfer)"
                 )],
             );
         }
         self.monitor.report(job, "running", self.clock.now());
+        self.obs.trace.emit(
+            &trace_key,
+            "run",
+            now,
+            vec![
+                ("planned_secs".into(), Json::from(planned)),
+                ("transfer_secs".into(), Json::from(transfer)),
+                ("price_mult".into(), Json::from(price_mult)),
+            ],
+        );
         Ok(())
     }
 
@@ -620,6 +762,9 @@ impl ExecutionEngine {
         if self.gangs.lock().unwrap().remove(&job).is_none() {
             return;
         }
+        self.obs
+            .trace
+            .emit(&job.to_string(), "gang_rollback", self.clock.now(), vec![]);
         if let Ok(record) = self.registry.get(job) {
             for c in &record.containers {
                 // the deciding replica is already gone; errors here just
@@ -689,6 +834,12 @@ impl ExecutionEngine {
             ],
         );
         self.monitor.checkpoint(job, checkpoint, at);
+        self.obs.trace.emit(
+            &job.to_string(),
+            "checkpoint",
+            at,
+            vec![("checkpoint".into(), Json::from(checkpoint))],
+        );
         let preempted = self.registry.update(job, Some(JobState::Preempted), |j| {
             j.preemptions += 1;
             j.checkpoint = Some(checkpoint);
@@ -705,8 +856,21 @@ impl ExecutionEngine {
             // nothing to reschedule
             return;
         }
+        self.metrics.preempted.inc();
+        self.obs.trace.emit(
+            &job.to_string(),
+            "preempt",
+            at,
+            vec![
+                ("cause".into(), Json::from(cause)),
+                ("checkpoint".into(), Json::from(checkpoint)),
+                ("attempt_secs".into(), Json::from(attempt)),
+            ],
+        );
         let _ = self.registry.update(job, Some(JobState::Queued), |_| {});
         self.scheduler.requeue_front(key, job);
+        // back in its queue (front of line): queue-wait starts again
+        self.obs.trace.emit(&job.to_string(), "resume", at, vec![]);
         self.datalake.metadata.tag(
             record.spec.project,
             ArtifactKind::Job,
@@ -752,6 +916,18 @@ impl ExecutionEngine {
                     j.output_version = Some(output_version);
                 });
                 self.monitor.report(job, "finished", at);
+                self.metrics.finished.inc();
+                self.metrics.runtime.observe(runtime);
+                self.obs.trace.emit(
+                    &job.to_string(),
+                    JobState::Finished.phase_event(),
+                    at,
+                    vec![
+                        ("runtime_secs".into(), Json::from(runtime)),
+                        ("cost".into(), Json::from(cost)),
+                        ("output_version".into(), Json::from(output_version)),
+                    ],
+                );
             }
             Err(e) => {
                 self.logs.append(job, &[format!("job failed: {e}")]);
@@ -768,6 +944,14 @@ impl ExecutionEngine {
                     &[("state".into(), Json::from("failed"))],
                 );
                 self.monitor.report(job, "failed", at);
+                self.metrics.failed.inc();
+                self.metrics.runtime.observe(runtime);
+                self.obs.trace.emit(
+                    &job.to_string(),
+                    JobState::Failed.phase_event(),
+                    at,
+                    vec![("error".into(), Json::from(e.to_string()))],
+                );
             }
         }
         self.scheduler.on_terminal(key, job);
@@ -913,6 +1097,13 @@ impl ExecutionEngine {
             }
         }
         self.monitor.report(job, "killed", self.clock.now());
+        self.metrics.killed.inc();
+        self.obs.trace.emit(
+            &job.to_string(),
+            JobState::Killed.phase_event(),
+            self.clock.now(),
+            vec![],
+        );
         self.datalake.metadata.tag(
             record.spec.project,
             ArtifactKind::Job,

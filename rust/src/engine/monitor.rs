@@ -51,11 +51,31 @@ pub struct Monitor {
 impl Monitor {
     /// Create and subscribe to the job-progress topic.
     pub fn new(bus: Bus) -> Self {
+        Self::build(bus, None)
+    }
+
+    /// Like [`Monitor::new`], but every progress report is also emitted
+    /// as a `"stage"` span event on the job's trace timeline (the bus
+    /// subscription is synchronous, so trace order matches report
+    /// order deterministically).
+    pub fn with_trace(bus: Bus, trace: Arc<crate::obs::TraceStore>) -> Self {
+        Self::build(bus, Some(trace))
+    }
+
+    fn build(bus: Bus, trace: Option<Arc<crate::obs::TraceStore>>) -> Self {
         let inner: Arc<Mutex<Inner>> = Default::default();
         let inner2 = inner.clone();
         bus.subscribe_fn(TOPIC_JOB_PROGRESS, move |event: &Event| {
             if let Some(p) = Self::parse(event) {
                 let checkpoint = event.payload.get("checkpoint").and_then(Json::as_f64);
+                if let Some(trace) = &trace {
+                    let mut fields =
+                        vec![("stage".to_string(), Json::from(p.stage.as_str()))];
+                    if let Some(ck) = checkpoint {
+                        fields.push(("checkpoint".to_string(), Json::from(ck)));
+                    }
+                    trace.emit(&p.job.to_string(), "stage", p.at, fields);
+                }
                 let mut inner = inner2.lock().unwrap();
                 if let Some(ck) = checkpoint {
                     let entry = inner.checkpoints.entry(p.job).or_insert(ck);
@@ -201,6 +221,24 @@ mod tests {
             m.latest(JobId(9)).unwrap().stage,
             format!("stage-{}", HISTORY_CAP + 43)
         );
+    }
+
+    #[test]
+    fn with_trace_mirrors_reports_onto_the_job_timeline() {
+        let bus = Bus::new();
+        let trace = Arc::new(crate::obs::TraceStore::new(5));
+        let m = Monitor::with_trace(bus, trace.clone());
+        m.report(JobId(2), "downloading", 1.0);
+        m.checkpoint(JobId(2), 7.5, 2.0);
+        let events = trace.events("job-2");
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].name, "stage");
+        assert_eq!(
+            events[0].field("stage").unwrap().as_str(),
+            Some("downloading")
+        );
+        assert_eq!(events[1].field("checkpoint").unwrap().as_f64(), Some(7.5));
+        assert_eq!(events[1].at, 2.0);
     }
 
     #[test]

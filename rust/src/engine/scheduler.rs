@@ -39,6 +39,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::error::{AcaiError, Result};
 use crate::ids::{JobId, ProjectId, UserId};
+use crate::obs::{Counter, Gauge, MetricsRegistry};
 
 /// The scheduling key: the paper's (project, user) tuple.
 pub type QueueKey = (ProjectId, UserId);
@@ -95,7 +96,10 @@ pub struct Demand {
 
 /// Monotonic scheduler counters (served in the `scheduler` block of
 /// `GET /v1/metrics`; the storm suite bounds decisions-per-pump with
-/// them).
+/// them).  Since the observability tier landed this is a *snapshot
+/// view* assembled from registry-backed handles — the counters
+/// themselves live in the platform [`MetricsRegistry`] as
+/// `acai_scheduler_*` series.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SchedulerCounters {
     /// Heap pops — one per scheduling decision (stale entries included).
@@ -268,7 +272,32 @@ struct Inner {
     heap: BinaryHeap<Reverse<(u64, u64, u64)>>,
     total_milli: u64,
     total_mem: u64,
-    counters: SchedulerCounters,
+}
+
+/// Registry handles behind [`SchedulerCounters`].  Incremented while
+/// the inner lock is held, so snapshots taken between pumps are
+/// consistent with queue state.
+#[derive(Clone)]
+struct CounterSet {
+    decisions: Counter,
+    launched: Counter,
+    requeues: Counter,
+    evictions: Counter,
+    last_pump: Gauge,
+    max_pump: Gauge,
+}
+
+impl CounterSet {
+    fn new(reg: &MetricsRegistry) -> Self {
+        CounterSet {
+            decisions: reg.counter("acai_scheduler_decisions_total"),
+            launched: reg.counter("acai_scheduler_launched_total"),
+            requeues: reg.counter("acai_scheduler_requeues_total"),
+            evictions: reg.counter("acai_scheduler_evictions_total"),
+            last_pump: reg.gauge("acai_scheduler_last_pump_decisions"),
+            max_pump: reg.gauge("acai_scheduler_max_pump_decisions"),
+        }
+    }
 }
 
 impl Inner {
@@ -295,15 +324,24 @@ impl Inner {
 #[derive(Clone)]
 pub struct Scheduler {
     inner: Arc<Mutex<Inner>>,
+    counters: CounterSet,
     /// Quota `k` — max launching+running jobs per (project, user).
     pub quota_k: usize,
 }
 
 impl Scheduler {
+    /// Standalone scheduler with a private registry (tests, tools).
     pub fn new(quota_k: usize) -> Self {
+        Self::with_registry(quota_k, &MetricsRegistry::new())
+    }
+
+    /// Scheduler whose counters live in the platform registry as
+    /// `acai_scheduler_*` series.
+    pub fn with_registry(quota_k: usize, reg: &MetricsRegistry) -> Self {
         assert!(quota_k >= 1);
         Self {
             inner: Arc::new(Mutex::new(Inner::default())),
+            counters: CounterSet::new(reg),
             quota_k,
         }
     }
@@ -392,7 +430,7 @@ impl Scheduler {
             .unwrap()
             .push_front(entry.priority, job);
         p.queued += 1;
-        inner.counters.requeues += 1;
+        self.counters.requeues.inc();
         inner.touch(key.0);
     }
 
@@ -454,16 +492,15 @@ impl Scheduler {
             free_milli = free_milli.saturating_sub(demand.milli_vcpus);
             free_mem = free_mem.saturating_sub(demand.mem_mb);
             out.push(((id, user), job));
-            inner.counters.launched += 1;
+            self.counters.launched.inc();
             inner.touch(id);
         }
         for id in blocked {
             inner.touch(id);
         }
-        inner.counters.decisions += decisions;
-        inner.counters.last_pump_decisions = decisions;
-        inner.counters.max_pump_decisions =
-            inner.counters.max_pump_decisions.max(decisions);
+        self.counters.decisions.add(decisions);
+        self.counters.last_pump.set(decisions as f64);
+        self.counters.max_pump.set_max(decisions as f64);
         out
     }
 
@@ -503,7 +540,7 @@ impl Scheduler {
 
     /// Record a priority eviction (engine-triggered preemption).
     pub fn note_eviction(&self) {
-        self.inner.lock().unwrap().counters.evictions += 1;
+        self.counters.evictions.inc();
     }
 
     /// Queued depth of a tuple.
@@ -551,9 +588,16 @@ impl Scheduler {
             .any(|p| p.queued > 0)
     }
 
-    /// Counter snapshot.
+    /// Counter snapshot (assembled from the registry handles).
     pub fn counters(&self) -> SchedulerCounters {
-        self.inner.lock().unwrap().counters
+        SchedulerCounters {
+            decisions: self.counters.decisions.get(),
+            launched: self.counters.launched.get(),
+            requeues: self.counters.requeues.get(),
+            evictions: self.counters.evictions.get(),
+            last_pump_decisions: self.counters.last_pump.get() as u64,
+            max_pump_decisions: self.counters.max_pump.get() as u64,
+        }
     }
 
     /// Per-project fair-share views, project-id-ordered.
@@ -837,6 +881,26 @@ mod tests {
         // decisions per drain stay linear in launches, not queue depth:
         // each launch costs one pop plus at most one stale/blocked pop
         assert!(c.last_pump_decisions <= 2 * 6 + 2, "{c:?}");
+    }
+
+    #[test]
+    fn counters_are_registry_backed() {
+        let reg = MetricsRegistry::new();
+        let s = Scheduler::with_registry(4, &reg);
+        s.enqueue(K1, JobId(1));
+        s.enqueue(K1, JobId(2));
+        assert_eq!(s.launchable().len(), 2);
+        s.requeue_front(K1, JobId(1));
+        s.note_eviction();
+        // the struct snapshot and the registry report the same values
+        let c = s.counters();
+        assert_eq!(reg.counter("acai_scheduler_launched_total").get(), c.launched);
+        assert_eq!(reg.counter("acai_scheduler_requeues_total").get(), 1);
+        assert_eq!(reg.counter("acai_scheduler_evictions_total").get(), 1);
+        assert_eq!(
+            reg.gauge("acai_scheduler_last_pump_decisions").get() as u64,
+            c.last_pump_decisions
+        );
     }
 
     #[test]

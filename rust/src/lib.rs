@@ -6,7 +6,7 @@
 //! (per-user FIFO scheduling with quotas, containerized execution, log
 //! capture, job profiling, and learned resource auto-provisioning).
 //!
-//! The crate is organised in four tiers:
+//! The crate is organised in six tiers:
 //!
 //! 1. **Storage substrate** — [`storage`]: the shared machinery under
 //!    every store: `ShardedMap` (N lock shards keyed by key hash — point
@@ -39,7 +39,15 @@
 //!    modules (`artifacts/*.hlo.txt`) via PJRT and executes them from the
 //!    hot paths (profiler fit/predict, the MLP job payload); the PJRT
 //!    backend is feature-gated (`pjrt`), with an inert offline stub.
-//! 5. **API tier** — [`api`]: the versioned `/v1` REST edge — a
+//! 5. **Observability tier** — [`obs`]: the typed metrics registry
+//!    (counters / gauges / fixed-bucket histograms behind sharded
+//!    atomics; one snapshot renders both the `GET /v1/metrics` JSON and
+//!    the `?format=prometheus` text exposition) and the span-based
+//!    trace store (lock-sharded bounded ring; deterministic span ids
+//!    from the platform PRNG stream) that records every job-lifecycle
+//!    transition and API request, surfaced as `GET /v1/trace/jobs/{id}`
+//!    and `GET /v1/trace/requests/{request_id}`.
+//! 6. **API tier** — [`api`]: the versioned `/v1` REST edge — a
 //!    path-template router with typed parameters and a middleware chain
 //!    (request-id, per-route metrics, token auth), strict DTO codecs
 //!    with the uniform error envelope, and an **async job + experiment
@@ -68,6 +76,7 @@ pub mod ids;
 pub mod json;
 pub mod kvstore;
 pub mod objectstore;
+pub mod obs;
 pub mod platform;
 pub mod pricing;
 pub mod prng;

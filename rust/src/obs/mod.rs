@@ -1,0 +1,52 @@
+//! Observability tier: typed metrics registry + span-based trace
+//! store.
+//!
+//! [`Obs`] is the bundle the platform boots once and threads through
+//! the engine and API tiers.  See [`registry`] for the metrics model
+//! (counters / gauges / fixed-bucket histograms behind sharded
+//! atomics, Prometheus + JSON rendered from one snapshot) and
+//! [`trace`] for the span model (lock-sharded bounded ring,
+//! deterministic span ids from the platform PRNG stream).
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{
+    snapshot_to_json, snapshot_to_prometheus, Counter, Gauge, Histogram, MetricSample,
+    MetricsRegistry, SampleValue,
+};
+pub use trace::{job_phases, JobPhases, SpanEvent, TraceStore};
+
+use std::sync::Arc;
+
+/// The platform's observability bundle (built once at boot from the
+/// platform seed).
+pub struct Obs {
+    pub metrics: Arc<MetricsRegistry>,
+    pub trace: Arc<TraceStore>,
+}
+
+impl Obs {
+    pub fn new(seed: u64) -> Obs {
+        let metrics = Arc::new(MetricsRegistry::new());
+        let mut trace = TraceStore::new(seed);
+        trace.set_emit_counter(metrics.counter("acai_trace_events_total"));
+        Obs {
+            metrics,
+            trace: Arc::new(trace),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_bundle_counts_emitted_events_in_the_registry() {
+        let obs = Obs::new(11);
+        obs.trace.emit("job-1", "enqueue", 0.0, vec![]);
+        obs.trace.emit("job-1", "complete", 1.0, vec![]);
+        assert_eq!(obs.metrics.counter("acai_trace_events_total").get(), 2);
+    }
+}

@@ -1,0 +1,712 @@
+//! Typed metrics registry: named counters, gauges, and fixed-bucket
+//! histograms behind sharded atomics.
+//!
+//! One registry instance backs every counter block the platform
+//! exposes — API per-route latency, scheduler decision counters, the
+//! engine's job-lifecycle histograms — so `GET /v1/metrics` is
+//! assembled from a single source of truth and the Prometheus text
+//! exposition ([`snapshot_to_prometheus`]) can never disagree with the
+//! JSON block ([`snapshot_to_json`]): both render the same
+//! [`MetricSample`] snapshot.
+//!
+//! Design:
+//!
+//! - **Handles are cheap.**  [`Counter`], [`Gauge`] and [`Histogram`]
+//!   are `Arc`-backed atomics; hot paths clone a handle once at
+//!   construction and never touch the registration maps again.
+//! - **Registration is sharded.**  The name→metric maps are split
+//!   across [`REGISTRY_SHARDS`] mutexes by key hash, mirroring the
+//!   storage tier's `ShardedMap` idiom, so concurrent registration of
+//!   unrelated metrics never contends.
+//! - **Histograms are deterministic.**  Bucket counts and the total
+//!   are plain `u64` increments; the running sum is accumulated as an
+//!   integer number of micro-units (`round(v * 1e6)`), so addition is
+//!   commutative and a seeded run reproduces bit-identical sums
+//!   regardless of thread interleaving.
+//! - **Pull-style sources stay pull-style.**  Counter blocks that
+//!   already live elsewhere (cluster, data plane, tenants) register a
+//!   collector closure; [`MetricsRegistry::snapshot`] merges collector
+//!   output with the native metrics.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Registration-map shard count (power of two).
+pub const REGISTRY_SHARDS: usize = 16;
+
+/// FNV-1a — the crate's standard cheap string hash.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------
+// handles
+// ---------------------------------------------------------------------
+
+/// A monotonically increasing counter.
+#[derive(Clone, Default)]
+pub struct Counter {
+    cell: Arc<AtomicU64>,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.cell.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.cell.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+/// A set-to-latest gauge (f64 stored as bits).
+#[derive(Clone)]
+pub struct Gauge {
+    bits: Arc<AtomicU64>,
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge {
+            bits: Arc::new(AtomicU64::new(0f64.to_bits())),
+        }
+    }
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to `v` if larger (high-water marks).
+    pub fn set_max(&self, v: f64) {
+        let _ = self
+            .bits
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                if v > f64::from_bits(cur) {
+                    Some(v.to_bits())
+                } else {
+                    None
+                }
+            });
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+struct HistogramCore {
+    /// Finite upper bounds, strictly ascending; the implicit last
+    /// bucket is `+Inf`.
+    bounds: Vec<f64>,
+    /// One count per finite bound plus the overflow bucket.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Sum in integer micro-units (`round(v * 1e6)`): commutative, so
+    /// seeded runs reproduce it bit-identically under any
+    /// interleaving.
+    sum_micro: AtomicU64,
+}
+
+/// A fixed-bucket histogram (p50/p90/p99 derivable via
+/// [`Histogram::quantile`]).
+#[derive(Clone)]
+pub struct Histogram {
+    core: Arc<HistogramCore>,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        let mut b: Vec<f64> = bounds.to_vec();
+        b.retain(|x| x.is_finite());
+        b.sort_by(|a, x| a.partial_cmp(x).unwrap());
+        b.dedup();
+        let buckets = (0..=b.len()).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            core: Arc::new(HistogramCore {
+                bounds: b,
+                buckets,
+                count: AtomicU64::new(0),
+                sum_micro: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Record one observation (negatives clamp to zero).
+    pub fn observe(&self, v: f64) {
+        let v = if v.is_finite() { v.max(0.0) } else { 0.0 };
+        let idx = self
+            .core
+            .bounds
+            .iter()
+            .position(|b| v <= *b)
+            .unwrap_or(self.core.bounds.len());
+        self.core.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.core.count.fetch_add(1, Ordering::Relaxed);
+        self.core
+            .sum_micro
+            .fetch_add((v * 1e6).round() as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.core.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observations (micro-unit precision).
+    pub fn sum(&self) -> f64 {
+        self.core.sum_micro.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.core.bounds
+    }
+
+    /// Per-bucket (non-cumulative) counts; the last entry is the
+    /// overflow (`+Inf`) bucket.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.core
+            .buckets
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Bucket-resolution quantile: the upper bound of the bucket the
+    /// rank lands in (the largest finite bound for overflow; 0.0 when
+    /// empty).  `q` is clamped to `[0, 1]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 || self.core.bounds.is_empty() {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, c) in self.core.buckets.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            if cum >= rank {
+                return if i < self.core.bounds.len() {
+                    self.core.bounds[i]
+                } else {
+                    *self.core.bounds.last().unwrap()
+                };
+            }
+        }
+        *self.core.bounds.last().unwrap()
+    }
+}
+
+// ---------------------------------------------------------------------
+// samples (the snapshot shape both expositions render)
+// ---------------------------------------------------------------------
+
+/// A point-in-time value of one metric.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SampleValue {
+    Counter(u64),
+    Gauge(f64),
+    Histogram {
+        /// Finite upper bounds.
+        bounds: Vec<f64>,
+        /// Non-cumulative per-bucket counts (last = overflow).
+        counts: Vec<u64>,
+        count: u64,
+        sum: f64,
+    },
+}
+
+/// One metric in a registry snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricSample {
+    pub name: String,
+    /// Sorted label pairs.
+    pub labels: Vec<(String, String)>,
+    pub value: SampleValue,
+}
+
+impl MetricSample {
+    pub fn counter(name: &str, v: u64) -> MetricSample {
+        MetricSample {
+            name: name.into(),
+            labels: vec![],
+            value: SampleValue::Counter(v),
+        }
+    }
+
+    pub fn gauge(name: &str, v: f64) -> MetricSample {
+        MetricSample {
+            name: name.into(),
+            labels: vec![],
+            value: SampleValue::Gauge(v),
+        }
+    }
+
+    pub fn with_label(mut self, k: &str, v: &str) -> MetricSample {
+        self.labels.push((k.into(), v.into()));
+        self.labels.sort();
+        self
+    }
+}
+
+// ---------------------------------------------------------------------
+// the registry
+// ---------------------------------------------------------------------
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+type MetricKey = (String, Vec<(String, String)>);
+type CollectorFn = Box<dyn Fn() -> Vec<MetricSample> + Send + Sync>;
+
+/// The platform-wide metrics registry.
+pub struct MetricsRegistry {
+    shards: Vec<Mutex<BTreeMap<MetricKey, Metric>>>,
+    collectors: Mutex<Vec<CollectorFn>>,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry {
+            shards: (0..REGISTRY_SHARDS)
+                .map(|_| Mutex::new(BTreeMap::new()))
+                .collect(),
+            collectors: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn key(name: &str, labels: &[(&str, &str)]) -> MetricKey {
+        let mut l: Vec<(String, String)> = labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        l.sort();
+        (name.to_string(), l)
+    }
+
+    fn shard(&self, name: &str) -> &Mutex<BTreeMap<MetricKey, Metric>> {
+        &self.shards[(fnv1a(name) as usize) & (REGISTRY_SHARDS - 1)]
+    }
+
+    /// Register-or-fetch a counter.  A name/label pair already
+    /// registered as a different kind yields a detached handle (the
+    /// registered metric wins the snapshot).
+    pub fn counter(&self, name: &str) -> Counter {
+        self.counter_with(name, &[])
+    }
+
+    pub fn counter_with(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        let key = Self::key(name, labels);
+        let mut shard = self.shard(name).lock().unwrap();
+        match shard
+            .entry(key)
+            .or_insert_with(|| Metric::Counter(Counter::default()))
+        {
+            Metric::Counter(c) => c.clone(),
+            _ => Counter::default(),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        self.gauge_with(name, &[])
+    }
+
+    pub fn gauge_with(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        let key = Self::key(name, labels);
+        let mut shard = self.shard(name).lock().unwrap();
+        match shard
+            .entry(key)
+            .or_insert_with(|| Metric::Gauge(Gauge::default()))
+        {
+            Metric::Gauge(g) => g.clone(),
+            _ => Gauge::default(),
+        }
+    }
+
+    /// Register-or-fetch a histogram; `bounds` only matter on first
+    /// registration (later calls inherit the original buckets).
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> Histogram {
+        self.histogram_with(name, &[], bounds)
+    }
+
+    pub fn histogram_with(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Histogram {
+        let key = Self::key(name, labels);
+        let mut shard = self.shard(name).lock().unwrap();
+        match shard
+            .entry(key)
+            .or_insert_with(|| Metric::Histogram(Histogram::new(bounds)))
+        {
+            Metric::Histogram(h) => h.clone(),
+            _ => Histogram::new(bounds),
+        }
+    }
+
+    /// Register a pull-style source merged into every snapshot
+    /// (cluster counters, data plane, tenants).
+    pub fn register_collector(
+        &self,
+        f: impl Fn() -> Vec<MetricSample> + Send + Sync + 'static,
+    ) {
+        self.collectors.lock().unwrap().push(Box::new(f));
+    }
+
+    /// Point-in-time view of every metric (native + collectors),
+    /// sorted by (name, labels) for deterministic rendering.
+    pub fn snapshot(&self) -> Vec<MetricSample> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            for ((name, labels), metric) in shard.lock().unwrap().iter() {
+                let value = match metric {
+                    Metric::Counter(c) => SampleValue::Counter(c.get()),
+                    Metric::Gauge(g) => SampleValue::Gauge(g.get()),
+                    Metric::Histogram(h) => SampleValue::Histogram {
+                        bounds: h.bounds().to_vec(),
+                        counts: h.bucket_counts(),
+                        count: h.count(),
+                        sum: h.sum(),
+                    },
+                };
+                out.push(MetricSample {
+                    name: name.clone(),
+                    labels: labels.clone(),
+                    value,
+                });
+            }
+        }
+        for collector in self.collectors.lock().unwrap().iter() {
+            out.extend(collector());
+        }
+        out.sort_by(|a, b| (&a.name, &a.labels).cmp(&(&b.name, &b.labels)));
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// renderers
+// ---------------------------------------------------------------------
+
+/// Histogram quantile over a sample (same bucket walk as the live
+/// handle — used when rendering snapshots).
+fn sample_quantile(bounds: &[f64], counts: &[u64], total: u64, q: f64) -> f64 {
+    if total == 0 || bounds.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for (i, c) in counts.iter().enumerate() {
+        cum += c;
+        if cum >= rank {
+            return if i < bounds.len() {
+                bounds[i]
+            } else {
+                *bounds.last().unwrap()
+            };
+        }
+    }
+    *bounds.last().unwrap()
+}
+
+/// The `registry` block of `GET /v1/metrics`: every sample as JSON.
+pub fn snapshot_to_json(samples: &[MetricSample]) -> crate::json::Json {
+    use crate::json::{Json, JsonObject};
+    let rows: Vec<Json> = samples
+        .iter()
+        .map(|s| {
+            let mut labels = JsonObject::new();
+            for (k, v) in &s.labels {
+                labels.set(k.clone(), v.as_str());
+            }
+            let b = Json::obj()
+                .field("name", s.name.as_str())
+                .field("labels", Json::Obj(labels));
+            match &s.value {
+                SampleValue::Counter(v) => b
+                    .field("kind", "counter")
+                    .field("value", *v)
+                    .build(),
+                SampleValue::Gauge(v) => b.field("kind", "gauge").field("value", *v).build(),
+                SampleValue::Histogram {
+                    bounds,
+                    counts,
+                    count,
+                    sum,
+                } => {
+                    let buckets: Vec<Json> = bounds
+                        .iter()
+                        .map(|x| Json::from(*x))
+                        .chain(std::iter::once(Json::Str("+Inf".into())))
+                        .zip(counts.iter())
+                        .map(|(le, c)| {
+                            Json::obj().field("le", le).field("count", *c).build()
+                        })
+                        .collect();
+                    b.field("kind", "histogram")
+                        .field("count", *count)
+                        .field("sum", *sum)
+                        .field("p50", sample_quantile(bounds, counts, *count, 0.50))
+                        .field("p90", sample_quantile(bounds, counts, *count, 0.90))
+                        .field("p99", sample_quantile(bounds, counts, *count, 0.99))
+                        .field("buckets", Json::Arr(buckets))
+                        .build()
+                }
+            }
+        })
+        .collect();
+    Json::obj().field("metrics", Json::Arr(rows)).build()
+}
+
+fn prom_escape(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn prom_labels(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", prom_escape(v)))
+        .collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+fn prom_labels_with_le(labels: &[(String, String)], le: &str) -> String {
+    let mut inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", prom_escape(v)))
+        .collect();
+    inner.push(format!("le=\"{le}\""));
+    format!("{{{}}}", inner.join(","))
+}
+
+/// `?format=prometheus` text exposition (version 0.0.4): `# TYPE`
+/// comments, `name{labels} value` lines, cumulative histogram buckets
+/// ending at `+Inf`.
+pub fn snapshot_to_prometheus(samples: &[MetricSample]) -> String {
+    let mut out = String::new();
+    let mut last_typed: Option<String> = None;
+    for s in samples {
+        let kind = match &s.value {
+            SampleValue::Counter(_) => "counter",
+            SampleValue::Gauge(_) => "gauge",
+            SampleValue::Histogram { .. } => "histogram",
+        };
+        if last_typed.as_deref() != Some(s.name.as_str()) {
+            out.push_str(&format!("# TYPE {} {kind}\n", s.name));
+            last_typed = Some(s.name.clone());
+        }
+        match &s.value {
+            SampleValue::Counter(v) => {
+                out.push_str(&format!("{}{} {v}\n", s.name, prom_labels(&s.labels)));
+            }
+            SampleValue::Gauge(v) => {
+                out.push_str(&format!("{}{} {v}\n", s.name, prom_labels(&s.labels)));
+            }
+            SampleValue::Histogram {
+                bounds,
+                counts,
+                count,
+                sum,
+            } => {
+                let mut cum = 0u64;
+                for (i, c) in counts.iter().enumerate() {
+                    cum += c;
+                    let le = if i < bounds.len() {
+                        format!("{}", bounds[i])
+                    } else {
+                        "+Inf".to_string()
+                    };
+                    out.push_str(&format!(
+                        "{}_bucket{} {cum}\n",
+                        s.name,
+                        prom_labels_with_le(&s.labels, &le)
+                    ));
+                }
+                out.push_str(&format!(
+                    "{}_sum{} {sum}\n",
+                    s.name,
+                    prom_labels(&s.labels)
+                ));
+                out.push_str(&format!(
+                    "{}_count{} {count}\n",
+                    s.name,
+                    prom_labels(&s.labels)
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_register_once_and_share_handles() {
+        let r = MetricsRegistry::new();
+        let a = r.counter("acai_test_total");
+        let b = r.counter("acai_test_total");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        let g = r.gauge("acai_test_level");
+        g.set(4.5);
+        g.set_max(2.0); // lower: ignored
+        g.set_max(9.0);
+        assert_eq!(r.gauge("acai_test_level").get(), 9.0);
+    }
+
+    #[test]
+    fn labeled_series_are_distinct() {
+        let r = MetricsRegistry::new();
+        r.counter_with("acai_req_total", &[("route", "a")]).inc();
+        r.counter_with("acai_req_total", &[("route", "b")]).add(5);
+        assert_eq!(r.counter_with("acai_req_total", &[("route", "a")]).get(), 1);
+        assert_eq!(r.counter_with("acai_req_total", &[("route", "b")]).get(), 5);
+        // label order is irrelevant to identity
+        r.counter_with("acai_m", &[("a", "1"), ("b", "2")]).inc();
+        assert_eq!(r.counter_with("acai_m", &[("b", "2"), ("a", "1")]).get(), 1);
+    }
+
+    #[test]
+    fn histogram_buckets_count_and_quantiles() {
+        let h = Histogram::new(&[1.0, 5.0, 10.0]);
+        for v in [0.5, 0.7, 2.0, 3.0, 4.0, 6.0, 20.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.bucket_counts(), vec![2, 3, 1, 1]);
+        assert!((h.sum() - 36.2).abs() < 1e-9);
+        assert_eq!(h.quantile(0.5), 5.0); // rank 4 lands in (1, 5]
+        assert_eq!(h.quantile(0.99), 10.0); // overflow reports last bound
+        assert_eq!(Histogram::new(&[1.0]).quantile(0.5), 0.0); // empty
+    }
+
+    #[test]
+    fn histogram_sum_is_integer_micro_units() {
+        let h = Histogram::new(&[1.0]);
+        h.observe(0.1);
+        h.observe(0.2);
+        // 0.1 + 0.2 != 0.30000000000000004 here: micro-unit integers
+        assert_eq!(h.sum(), 0.3);
+    }
+
+    #[test]
+    fn snapshot_merges_collectors_and_sorts() {
+        let r = MetricsRegistry::new();
+        r.counter("acai_z_total").inc();
+        r.register_collector(|| vec![MetricSample::counter("acai_a_total", 7)]);
+        let snap = r.snapshot();
+        assert_eq!(snap[0].name, "acai_a_total");
+        assert_eq!(snap[0].value, SampleValue::Counter(7));
+        assert_eq!(snap[1].name, "acai_z_total");
+    }
+
+    /// Minimal Prometheus text parser for tests: `name{labels} value`
+    /// lines, `#` comments skipped.
+    pub(crate) fn parse_prometheus(text: &str) -> Vec<(String, Vec<(String, String)>, f64)> {
+        let mut out = Vec::new();
+        for line in text.lines() {
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (series, value) = line.rsplit_once(' ').expect("line has a value");
+            let value: f64 = value.parse().expect("value parses as f64");
+            let (name, labels) = match series.split_once('{') {
+                None => (series.to_string(), vec![]),
+                Some((n, rest)) => {
+                    let body = rest.strip_suffix('}').expect("labels close");
+                    let labels = body
+                        .split(',')
+                        .filter(|p| !p.is_empty())
+                        .map(|pair| {
+                            let (k, v) = pair.split_once('=').expect("k=v");
+                            let v = v.strip_prefix('"').unwrap().strip_suffix('"').unwrap();
+                            (k.to_string(), v.to_string())
+                        })
+                        .collect();
+                    (n.to_string(), labels)
+                }
+            };
+            out.push((name, labels, value));
+        }
+        out
+    }
+
+    #[test]
+    fn prometheus_exposition_parses_and_agrees_with_json() {
+        let r = MetricsRegistry::new();
+        r.counter_with("acai_api_requests_total", &[("route", "GET /v1/jobs/{id}")])
+            .add(3);
+        let h = r.histogram("acai_queue_wait_seconds", &[0.5, 2.0]);
+        h.observe(0.1);
+        h.observe(1.0);
+        h.observe(9.0);
+        let snap = r.snapshot();
+        let lines = parse_prometheus(&snapshot_to_prometheus(&snap));
+
+        // every line parses; counter value matches
+        let counter = lines
+            .iter()
+            .find(|(n, _, _)| n == "acai_api_requests_total")
+            .unwrap();
+        assert_eq!(counter.1, vec![("route".into(), "GET /v1/jobs/{id}".into())]);
+        assert_eq!(counter.2, 3.0);
+
+        // histogram: cumulative buckets, +Inf, count and sum
+        let bucket = |le: &str| {
+            lines
+                .iter()
+                .find(|(n, l, _)| {
+                    n == "acai_queue_wait_seconds_bucket"
+                        && l.iter().any(|(k, v)| k == "le" && v == le)
+                })
+                .unwrap()
+                .2
+        };
+        assert_eq!(bucket("0.5"), 1.0);
+        assert_eq!(bucket("2"), 2.0);
+        assert_eq!(bucket("+Inf"), 3.0);
+        let count = lines
+            .iter()
+            .find(|(n, _, _)| n == "acai_queue_wait_seconds_count")
+            .unwrap()
+            .2;
+        assert_eq!(count, 3.0);
+
+        // and the JSON block renders the same snapshot values
+        let json = snapshot_to_json(&snap);
+        let rows = json.get("metrics").unwrap().as_array().unwrap();
+        let hist = rows
+            .iter()
+            .find(|m| m.get("name").unwrap().as_str() == Some("acai_queue_wait_seconds"))
+            .unwrap();
+        assert_eq!(hist.get("count").unwrap().as_u64(), Some(3));
+        assert_eq!(hist.get("p50").unwrap().as_f64(), Some(2.0));
+    }
+}

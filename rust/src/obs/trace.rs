@@ -1,0 +1,445 @@
+//! Span-based trace store: a lock-sharded bounded ring of structured
+//! lifecycle events.
+//!
+//! Every job-lifecycle transition (enqueue, fair-share pop, placement,
+//! transfer plan, checkpoint, preemption, gang rollback, completion)
+//! and every API request emits a [`SpanEvent`] keyed by a **trace id**
+//! — the job id string (`"job-3"`) for engine events, the
+//! `x-request-id` for API request spans.  `GET /v1/trace/jobs/{id}`
+//! and `GET /v1/trace/requests/{request_id}` assemble ordered
+//! timelines from this store.
+//!
+//! Determinism rules (seeded runs reproduce bit-identical timelines):
+//!
+//! - **Span ids come from the platform PRNG stream, not a global
+//!   counter.**  The id of the `i`-th event of trace `t` is one
+//!   splitmix64 step of `base_seed ^ fnv1a(t) ^ (i · GOLDEN)`, so it
+//!   depends only on the platform seed, the trace key, and the
+//!   event's position *within its own trace* — concurrent unrelated
+//!   traces (e.g. wall-clock API requests) cannot perturb it.
+//! - **Timestamps are sim-clock.**  `at` is the deterministic
+//!   simulation time; the global `seq` counter provides a monotonic
+//!   total order for same-instant events but is never serialized —
+//!   wire DTOs carry the per-trace ordinal instead.
+//! - **Ring eviction never reclaims span ids.**  Each shard keeps a
+//!   per-trace event-index map that only grows, so ids stay stable
+//!   even after old events fall off the ring.
+//!
+//! Bounds: [`TRACE_SHARDS`] shards × `cap_per_shard` events
+//! ([`DEFAULT_SHARD_CAP`] by default).  A trace's events all land in
+//! one shard (sharded by trace-key hash), so assembling a timeline
+//! locks exactly one mutex.
+
+use crate::json::Json;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::registry::Counter;
+
+/// Trace-store shard count (power of two).
+pub const TRACE_SHARDS: usize = 16;
+
+/// Default per-shard ring capacity (≈160k events platform-wide).
+pub const DEFAULT_SHARD_CAP: usize = 10_000;
+
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// One structured event on a trace's timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanEvent {
+    /// Deterministic span id (full u64; hex-encoded on the wire).
+    pub span: u64,
+    /// Trace key: job id string or request id.
+    pub trace: String,
+    /// Event name (`"enqueue"`, `"placement"`, `"preempt"`, ...).
+    pub name: String,
+    /// Sim-clock seconds.
+    pub at: f64,
+    /// Global monotonic sequence (total order; not serialized).
+    pub seq: u64,
+    /// Structured payload.
+    pub fields: Vec<(String, Json)>,
+}
+
+impl SpanEvent {
+    pub fn field(&self, key: &str) -> Option<&Json> {
+        self.fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+}
+
+struct Shard {
+    ring: VecDeque<SpanEvent>,
+    /// Next event index per trace; never reset (keeps span ids stable
+    /// across ring eviction).
+    next_index: HashMap<String, u64>,
+}
+
+/// The platform-wide trace store.
+pub struct TraceStore {
+    shards: Vec<Mutex<Shard>>,
+    seq: AtomicU64,
+    cap_per_shard: usize,
+    base_seed: u64,
+    emitted: Option<Counter>,
+}
+
+impl TraceStore {
+    /// `seed` is the platform seed; span ids derive from it.
+    pub fn new(seed: u64) -> TraceStore {
+        TraceStore::with_capacity(seed, DEFAULT_SHARD_CAP)
+    }
+
+    pub fn with_capacity(seed: u64, cap_per_shard: usize) -> TraceStore {
+        TraceStore {
+            shards: (0..TRACE_SHARDS)
+                .map(|_| {
+                    Mutex::new(Shard {
+                        ring: VecDeque::new(),
+                        next_index: HashMap::new(),
+                    })
+                })
+                .collect(),
+            seq: AtomicU64::new(0),
+            cap_per_shard: cap_per_shard.max(1),
+            // decorrelate from other platform RNG consumers
+            base_seed: seed ^ 0x0B5E_7A11_5EED,
+            emitted: None,
+        }
+    }
+
+    /// Attach a registry counter incremented per emitted event.
+    pub fn set_emit_counter(&mut self, c: Counter) {
+        self.emitted = Some(c);
+    }
+
+    fn shard(&self, trace: &str) -> &Mutex<Shard> {
+        &self.shards[(fnv1a(trace) as usize) & (TRACE_SHARDS - 1)]
+    }
+
+    /// Append an event; returns its deterministic span id.
+    pub fn emit(
+        &self,
+        trace: &str,
+        name: &str,
+        at: f64,
+        fields: Vec<(String, Json)>,
+    ) -> u64 {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut shard = self.shard(trace).lock().unwrap();
+        let idx = {
+            let slot = shard.next_index.entry(trace.to_string()).or_insert(0);
+            let i = *slot;
+            *slot += 1;
+            i
+        };
+        let span = crate::prng::Rng::new(
+            self.base_seed ^ fnv1a(trace) ^ idx.wrapping_mul(GOLDEN),
+        )
+        .next_u64();
+        shard.ring.push_back(SpanEvent {
+            span,
+            trace: trace.to_string(),
+            name: name.to_string(),
+            at,
+            seq,
+            fields,
+        });
+        if shard.ring.len() > self.cap_per_shard {
+            shard.ring.pop_front();
+        }
+        if let Some(c) = &self.emitted {
+            c.inc();
+        }
+        span
+    }
+
+    /// All events of one trace, in emission order.
+    pub fn events(&self, trace: &str) -> Vec<SpanEvent> {
+        let shard = self.shard(trace).lock().unwrap();
+        let mut out: Vec<SpanEvent> = shard
+            .ring
+            .iter()
+            .filter(|e| e.trace == trace)
+            .cloned()
+            .collect();
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+
+    /// Sim-time of the most recent event on `trace` named one of
+    /// `names` (queue-wait measurement: last `enqueue`/`resume`).
+    pub fn last_at(&self, trace: &str, names: &[&str]) -> Option<f64> {
+        self.events(trace)
+            .iter()
+            .rev()
+            .find(|e| names.contains(&e.name.as_str()))
+            .map(|e| e.at)
+    }
+
+    /// Total events currently retained across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().ring.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Per-phase durations derived from a job's event timeline.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct JobPhases {
+    /// Σ over placements of (placement time − last enqueue/resume).
+    pub queue_wait: f64,
+    /// Σ per-attempt data-transfer seconds.
+    pub transfer: f64,
+    /// Useful work retained: planned seconds for finished jobs,
+    /// attempt time net of transfer otherwise.
+    pub run: f64,
+    /// Work lost to preemption (re-done after resume).  For finished
+    /// jobs `transfer + run + rework` equals billed runtime exactly.
+    pub rework: f64,
+}
+
+/// Derive phase durations from a job trace (see [`JobPhases`]).
+///
+/// Attempt wall-time is measured from each `run` event to the next
+/// `preempt`/terminal event; transfer comes from the `transfer_secs`
+/// field stamped on `run` events, capped by the attempt's wall time
+/// (an attempt evicted mid-transfer only spent — and only billed —
+/// the slice it actually got), so the identity
+/// `transfer + run + rework` vs. billed runtime holds to float
+/// precision, not checkpoint granularity.
+pub fn job_phases(events: &[SpanEvent]) -> JobPhases {
+    let mut phases = JobPhases::default();
+    let mut queued_at: Option<f64> = None;
+    let mut attempt_start: Option<f64> = None;
+    let mut attempt_total = 0.0f64;
+    let mut pending_transfer = 0.0f64;
+    let mut planned: Option<f64> = None;
+    let mut finished = false;
+    for e in events {
+        match e.name.as_str() {
+            "enqueue" | "resume" => queued_at = Some(e.at),
+            "placement" => {
+                if let Some(q) = queued_at.take() {
+                    phases.queue_wait += (e.at - q).max(0.0);
+                }
+            }
+            "run" => {
+                attempt_start = Some(e.at);
+                pending_transfer = e
+                    .field("transfer_secs")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0);
+                if let Some(p) = e.field("planned_secs").and_then(Json::as_f64) {
+                    planned = Some(p);
+                }
+            }
+            "preempt" | "complete" | "failed" | "killed" => {
+                if let Some(s) = attempt_start.take() {
+                    let wall = (e.at - s).max(0.0);
+                    attempt_total += wall;
+                    // transfer credit is capped by the attempt's wall
+                    // time: an attempt evicted mid-transfer only spent
+                    // (and only billed) the slice it actually got
+                    phases.transfer += pending_transfer.min(wall);
+                }
+                pending_transfer = 0.0;
+                if e.name == "complete" {
+                    finished = true;
+                }
+            }
+            _ => {}
+        }
+    }
+    // an attempt still in flight contributes nothing (no end time yet)
+    phases.run = if finished {
+        planned.unwrap_or(attempt_total - phases.transfer)
+    } else {
+        (attempt_total - phases.transfer).max(0.0)
+    };
+    phases.rework = (attempt_total - phases.transfer - phases.run).max(0.0);
+    phases
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_come_back_in_emission_order() {
+        let t = TraceStore::new(7);
+        t.emit("job-1", "enqueue", 0.0, vec![]);
+        t.emit("job-2", "enqueue", 0.0, vec![]);
+        t.emit("job-1", "placement", 1.5, vec![]);
+        let ev = t.events("job-1");
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].name, "enqueue");
+        assert_eq!(ev[1].name, "placement");
+        assert_eq!(ev[1].at, 1.5);
+        assert_eq!(t.events("job-3").len(), 0);
+    }
+
+    #[test]
+    fn span_ids_are_deterministic_and_immune_to_interleaving() {
+        // same seed, different interleavings of an unrelated trace:
+        // job-1's span ids must not move.
+        let a = TraceStore::new(42);
+        a.emit("job-1", "enqueue", 0.0, vec![]);
+        a.emit("job-1", "run", 1.0, vec![]);
+
+        let b = TraceStore::new(42);
+        b.emit("req-noise", "request", 0.0, vec![]);
+        b.emit("job-1", "enqueue", 0.0, vec![]);
+        b.emit("req-other", "request", 0.0, vec![]);
+        b.emit("job-1", "run", 1.0, vec![]);
+
+        let ea = a.events("job-1");
+        let eb = b.events("job-1");
+        assert_eq!(ea[0].span, eb[0].span);
+        assert_eq!(ea[1].span, eb[1].span);
+        assert_ne!(ea[0].span, ea[1].span);
+
+        // different seed ⇒ different stream
+        let c = TraceStore::new(43);
+        c.emit("job-1", "enqueue", 0.0, vec![]);
+        assert_ne!(c.events("job-1")[0].span, ea[0].span);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_indices_survive_eviction() {
+        let t = TraceStore::with_capacity(1, 8);
+        // all on one trace ⇒ one shard; overflow evicts oldest
+        for i in 0..20 {
+            t.emit("job-1", "stage", i as f64, vec![]);
+        }
+        assert_eq!(t.len(), 8);
+        let ev = t.events("job-1");
+        assert_eq!(ev.len(), 8);
+        assert_eq!(ev[0].at, 12.0);
+
+        // span ids keep advancing deterministically after eviction:
+        // a fresh store emitting 21 events agrees on the 21st id.
+        let fresh = TraceStore::with_capacity(1, 64);
+        let mut last = 0;
+        for i in 0..21 {
+            last = fresh.emit("job-1", "stage", i as f64, vec![]);
+        }
+        assert_eq!(t.emit("job-1", "stage", 20.0, vec![]), last);
+    }
+
+    #[test]
+    fn last_at_finds_most_recent_named_event() {
+        let t = TraceStore::new(3);
+        t.emit("job-1", "enqueue", 0.0, vec![]);
+        t.emit("job-1", "placement", 2.0, vec![]);
+        t.emit("job-1", "resume", 9.0, vec![]);
+        assert_eq!(t.last_at("job-1", &["enqueue", "resume"]), Some(9.0));
+        assert_eq!(t.last_at("job-1", &["complete"]), None);
+    }
+
+    #[test]
+    fn phases_sum_to_runtime_for_a_preempted_job() {
+        // enqueue@0 → place@1 → run@1 (transfer 0.5, planned 10)
+        // → preempt@5 → resume@5 → place@7 → run@7 (transfer 0.2)
+        // → complete@17.2
+        let mk = |name: &str, at: f64, fields: Vec<(String, Json)>| SpanEvent {
+            span: 0,
+            trace: "job-1".into(),
+            name: name.into(),
+            at,
+            seq: 0,
+            fields,
+        };
+        let events = vec![
+            mk("enqueue", 0.0, vec![]),
+            mk("placement", 1.0, vec![]),
+            mk(
+                "run",
+                1.0,
+                vec![
+                    ("transfer_secs".into(), Json::Num(0.5)),
+                    ("planned_secs".into(), Json::Num(10.0)),
+                ],
+            ),
+            mk("preempt", 5.0, vec![]),
+            mk("resume", 5.0, vec![]),
+            mk("placement", 7.0, vec![]),
+            mk(
+                "run",
+                7.0,
+                vec![
+                    ("transfer_secs".into(), Json::Num(0.2)),
+                    ("planned_secs".into(), Json::Num(10.0)),
+                ],
+            ),
+            mk("complete", 17.2, vec![]),
+        ];
+        let p = job_phases(&events);
+        assert!((p.queue_wait - 3.0).abs() < 1e-9); // 1.0 + 2.0
+        assert!((p.transfer - 0.7).abs() < 1e-9);
+        assert!((p.run - 10.0).abs() < 1e-9);
+        // attempts: (5-1) + (17.2-7) = 14.2; rework = 14.2 - 0.7 - 10
+        assert!((p.rework - 3.5).abs() < 1e-9);
+        // identity: transfer + run + rework == total attempt time
+        assert!((p.transfer + p.run + p.rework - 14.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn instant_eviction_does_not_credit_unspent_transfer() {
+        // a job evicted the instant it launched billed zero wall time,
+        // so the attempt's planned transfer must not count either —
+        // otherwise phases overshoot billed runtime by the cold-load
+        // cost of an attempt that never ran
+        let mk = |name: &str, at: f64, fields: Vec<(String, Json)>| SpanEvent {
+            span: 0,
+            trace: "job-1".into(),
+            name: name.into(),
+            at,
+            seq: 0,
+            fields,
+        };
+        let events = vec![
+            mk("enqueue", 0.0, vec![]),
+            mk("placement", 0.0, vec![]),
+            mk(
+                "run",
+                0.0,
+                vec![
+                    ("transfer_secs".into(), Json::Num(0.5)),
+                    ("planned_secs".into(), Json::Num(10.0)),
+                ],
+            ),
+            mk("preempt", 0.0, vec![]),
+            mk("resume", 0.0, vec![]),
+            mk("placement", 4.0, vec![]),
+            mk(
+                "run",
+                4.0,
+                vec![
+                    ("transfer_secs".into(), Json::Num(0.0)),
+                    ("planned_secs".into(), Json::Num(10.0)),
+                ],
+            ),
+            mk("complete", 14.0, vec![]),
+        ];
+        let p = job_phases(&events);
+        assert!((p.queue_wait - 4.0).abs() < 1e-9);
+        assert!(p.transfer.abs() < 1e-9); // 0.5s was planned, 0s spent
+        assert!((p.run - 10.0).abs() < 1e-9);
+        assert!(p.rework.abs() < 1e-9);
+        // identity vs billed wall time: 0 + (14 - 4) = 10
+        assert!((p.transfer + p.run + p.rework - 10.0).abs() < 1e-9);
+    }
+}

@@ -13,6 +13,7 @@ use crate::engine::{EngineDriver, ExecutionEngine, ExperimentStore};
 use crate::error::Result;
 use crate::kvstore::KvStore;
 use crate::objectstore::ObjectStore;
+use crate::obs::{MetricSample, Obs};
 use crate::pricing::PricingModel;
 use crate::profiler::Profiler;
 use crate::runtime::Runtime;
@@ -37,7 +38,11 @@ pub struct Acai {
     pub pricing: PricingModel,
     /// Per-project admission control + usage accounting for the REST
     /// edge (rate limits, quotas, the billing counters).
-    pub tenants: TenantRegistry,
+    pub tenants: Arc<TenantRegistry>,
+    /// Observability bundle: the typed metrics registry (one source of
+    /// truth behind `GET /v1/metrics` and `?format=prometheus`) and the
+    /// span-based trace store behind `GET /v1/trace/...`.
+    pub obs: Arc<Obs>,
     pub runtime: Option<Arc<Runtime>>,
     objects: ObjectStore,
     /// Background engine driver (async job lifecycle).  Started lazily
@@ -71,6 +76,7 @@ impl Acai {
         };
         let workloads = Arc::new(Workloads::new(params, runtime.clone()));
         let pricing = PricingModel::default();
+        let obs = Arc::new(Obs::new(config.seed));
         let engine = Arc::new(ExecutionEngine::new(
             cluster.clone(),
             bus.clone(),
@@ -81,11 +87,13 @@ impl Acai {
             config.quota_k,
             config.seed,
             config.checkpoint_secs,
+            obs.clone(),
         ));
         let profiler = Profiler::new(engine.clone(), runtime.clone(), config.profile_barrier);
         let provisioner = AutoProvisioner::new(pricing);
         let credentials = CredentialServer::new(config.seed);
-        let tenants = TenantRegistry::new(config.tenant.clone());
+        let tenants = Arc::new(TenantRegistry::new(config.tenant.clone()));
+        register_collectors(&obs, &cluster, &datalake, &tenants, &engine);
         Ok(Acai {
             config,
             clock,
@@ -99,6 +107,7 @@ impl Acai {
             experiments,
             pricing,
             tenants,
+            obs,
             runtime,
             objects,
             driver: std::sync::OnceLock::new(),
@@ -138,6 +147,90 @@ impl Acai {
     pub fn boot_default() -> Acai {
         Self::boot(PlatformConfig::default()).expect("default boot cannot fail")
     }
+}
+
+/// Register the pull-style metric sources: counter blocks that already
+/// live in other tiers (cluster, data plane, tenants, fair-share
+/// views) surface in every registry snapshot without double
+/// bookkeeping.
+fn register_collectors(
+    obs: &Obs,
+    cluster: &Cluster,
+    datalake: &DataLake,
+    tenants: &Arc<TenantRegistry>,
+    engine: &Arc<ExecutionEngine>,
+) {
+    let c = cluster.clone();
+    obs.metrics.register_collector(move || {
+        let k = c.counters();
+        vec![
+            MetricSample::counter("acai_cluster_containers_launched_total", k.launched),
+            MetricSample::counter("acai_cluster_containers_completed_total", k.completed),
+            MetricSample::counter(
+                "acai_cluster_containers_preempted_total",
+                k.preempted_containers,
+            ),
+            MetricSample::counter("acai_cluster_nodes_preempted_total", k.preempted_nodes),
+            MetricSample::counter("acai_cluster_scale_up_events_total", k.scale_up_events),
+            MetricSample::counter(
+                "acai_cluster_scale_down_events_total",
+                k.scale_down_events,
+            ),
+            MetricSample::counter("acai_cluster_nodes_added_total", k.nodes_added),
+            MetricSample::counter("acai_cluster_nodes_removed_total", k.nodes_removed),
+            MetricSample::counter(
+                "acai_cluster_placement_failures_total",
+                k.placement_failures,
+            ),
+            MetricSample::counter("acai_cluster_cache_hit_bytes_total", k.cache_hit_bytes),
+            MetricSample::counter(
+                "acai_cluster_cold_bytes_transferred_total",
+                k.cold_bytes_transferred,
+            ),
+            MetricSample::counter("acai_cluster_transfer_micros_total", k.transfer_micros),
+        ]
+    });
+    let d = datalake.clone();
+    obs.metrics.register_collector(move || {
+        let cas = d.cas.stats();
+        vec![
+            MetricSample::counter("acai_data_logical_bytes_total", cas.logical_bytes),
+            MetricSample::counter("acai_data_stored_bytes_total", cas.stored_bytes),
+            MetricSample::counter("acai_data_deduped_bytes_total", cas.deduped_bytes),
+            MetricSample::counter("acai_data_dedup_hits_total", cas.dedup_hits),
+            MetricSample::gauge("acai_data_live_chunks", cas.chunks as f64),
+        ]
+    });
+    let t = tenants.clone();
+    obs.metrics.register_collector(move || {
+        let mut out = Vec::new();
+        for (project, usage) in t.all_usage() {
+            let p = project.to_string();
+            out.push(
+                MetricSample::counter("acai_tenant_requests_total", usage.requests)
+                    .with_label("project", &p),
+            );
+            out.push(
+                MetricSample::counter("acai_tenant_throttled_total", usage.throttled)
+                    .with_label("project", &p),
+            );
+            out.push(
+                MetricSample::counter("acai_tenant_rejected_total", usage.rejected)
+                    .with_label("project", &p),
+            );
+        }
+        out
+    });
+    let s = engine.scheduler.clone();
+    obs.metrics.register_collector(move || {
+        s.project_shares()
+            .into_iter()
+            .map(|share| {
+                MetricSample::gauge("acai_scheduler_project_share", share.share)
+                    .with_label("project", &share.project.to_string())
+            })
+            .collect()
+    });
 }
 
 #[cfg(test)]

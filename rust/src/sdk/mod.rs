@@ -23,8 +23,9 @@ use std::time::{Duration, Instant};
 
 use crate::api::dto::{
     cut_page, num_cursor, BranchInfo, CommitInfo, DataPlaneMetrics, FileEntry, FileManifest,
-    GcSweepReport, JobStatus, LogChunk, NodeStatus, Page, PageReq, PoolSpec, PoolStatus,
-    ProvisionChoice, RollbackSummary, TenantUsageReport, TraceDir,
+    GcSweepReport, JobStatus, JobTrace, LogChunk, NodeStatus, Page, PageReq, PoolSpec,
+    PoolStatus, ProvisionChoice, RequestTrace, RollbackSummary, TenantUsageReport, TraceDir,
+    TraceEvent,
 };
 use crate::autoprovision::{Decision, Objective};
 use crate::cluster::ResourceConfig;
@@ -256,6 +257,20 @@ pub trait AcaiApi {
     /// admission: a throttled or quota-capped project must still be
     /// able to observe why its calls bounce.
     fn tenant_usage(&self) -> Result<TenantUsageReport>;
+
+    // ---- tracing ----
+
+    /// The ordered lifecycle timeline of one job (enqueue → placement →
+    /// transfer → run → preemptions → terminal) with derived per-phase
+    /// durations.  Exempt from admission, like [`Self::tenant_usage`]:
+    /// observability must survive throttling.
+    fn job_trace(&self, id: JobId) -> Result<JobTrace>;
+
+    /// The span timeline of one API request by its `x-request-id`.
+    /// Only requests authenticated to the caller's project are
+    /// retrievable (anything else is the same 404 as a missing id).
+    /// Exempt from admission.
+    fn request_trace(&self, request_id: &str) -> Result<RequestTrace>;
 }
 
 /// What a client submits through the SDK.
@@ -1198,6 +1213,56 @@ impl AcaiApi for Client {
             throttled: usage.throttled,
             rejected: usage.rejected,
             api_cost: self.acai.pricing.api_cost(usage.requests, transferred),
+        })
+    }
+
+    fn job_trace(&self, id: JobId) -> Result<JobTrace> {
+        // deliberately NOT admitted (see tenant_usage): a throttled
+        // project must still be able to pull its timelines
+        let record = self.acai.engine.registry.get(id)?;
+        // never leak another project's jobs — same 404 as a missing id
+        if record.spec.project != self.identity.project {
+            return Err(AcaiError::not_found(format!("{id}")));
+        }
+        let events = self.acai.obs.trace.events(&id.to_string());
+        let phases = crate::obs::job_phases(&events);
+        Ok(JobTrace {
+            job: id,
+            state: record.state.as_str().to_string(),
+            preemptions: record.preemptions,
+            queue_wait: phases.queue_wait,
+            transfer: phases.transfer,
+            run: phases.run,
+            rework: phases.rework,
+            events: events
+                .iter()
+                .enumerate()
+                .map(|(i, e)| TraceEvent::from_span(e, i as u64))
+                .collect(),
+        })
+    }
+
+    fn request_trace(&self, request_id: &str) -> Result<RequestTrace> {
+        // deliberately NOT admitted (see tenant_usage)
+        let events = self.acai.obs.trace.events(request_id);
+        // scope by the project stamped on the response span: requests
+        // that never authenticated (or authenticated elsewhere) are
+        // indistinguishable from ids that never existed
+        let project = self.identity.project.to_string();
+        let mine = events.iter().any(|e| {
+            e.name == "response"
+                && e.field("project").and_then(Json::as_str) == Some(project.as_str())
+        });
+        if !mine {
+            return Err(AcaiError::not_found(format!("request {request_id}")));
+        }
+        Ok(RequestTrace {
+            request_id: request_id.to_string(),
+            events: events
+                .iter()
+                .enumerate()
+                .map(|(i, e)| TraceEvent::from_span(e, i as u64))
+                .collect(),
         })
     }
 }

@@ -8,13 +8,15 @@
 //! so error handling is identical on both sides of the wire.
 
 use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::api::dto::{
     self, b64_decode, b64_encode, BranchInfo, CommitInfo, DataPlaneMetrics, FileEntry,
-    FileManifest, GcSweepReport, JobStatus, LogChunk, NodeStatus, Page, PageReq, PoolSpec,
-    PoolStatus, ProvisionChoice, RollbackSummary, TenantUsageReport, TraceDir,
+    FileManifest, GcSweepReport, JobStatus, JobTrace, LogChunk, NodeStatus, Page, PageReq,
+    PoolSpec, PoolStatus, ProvisionChoice, RequestTrace, RollbackSummary, TenantUsageReport,
+    TraceDir,
 };
 use crate::api::router::percent_encode;
 use crate::autoprovision::Objective;
@@ -45,13 +47,28 @@ const BACKPRESSURE_RETRIES: u32 = 8;
 /// asks.
 const BACKPRESSURE_SLEEP_CAP: Duration = Duration::from_millis(250);
 
+/// Distinguishes the request ids of multiple clients in one process,
+/// so two `RemoteClient`s never mint colliding `x-request-id`s.
+static CLIENT_NONCE: AtomicU64 = AtomicU64::new(1);
+
 /// A token-authenticated client of a remote ACAI deployment.  Keeps
 /// one pooled keep-alive connection ([`crate::httpd::HttpConn`]) so
 /// status polling doesn't open a socket per request.
+///
+/// Every call mints its own `x-request-id` (`rc<nonce>-<seq>`) and
+/// sends it, so the whole SDK → httpd → engine path of one call shares
+/// a single trace, retrievable via [`AcaiApi::request_trace`] with the
+/// id from [`RemoteClient::last_request_id`].
 pub struct RemoteClient {
     addr: SocketAddr,
     token: String,
     conn: Mutex<Option<(crate::httpd::HttpConn, Instant)>>,
+    /// Per-process unique client tag embedded in minted request ids.
+    nonce: u64,
+    /// Per-client sequence for minted request ids.
+    seq: AtomicU64,
+    /// The most recently minted request id (empty before any call).
+    last_request_id: Mutex<String>,
 }
 
 impl RemoteClient {
@@ -61,7 +78,26 @@ impl RemoteClient {
             addr,
             token: token.into(),
             conn: Mutex::new(None),
+            nonce: CLIENT_NONCE.fetch_add(1, Ordering::Relaxed),
+            seq: AtomicU64::new(1),
+            last_request_id: Mutex::new(String::new()),
         }
+    }
+
+    /// The `x-request-id` minted for this client's most recent HTTP
+    /// attempt — the key to replay it via [`AcaiApi::request_trace`].
+    pub fn last_request_id(&self) -> String {
+        self.last_request_id.lock().unwrap().clone()
+    }
+
+    /// Mint a fresh client-side request id and remember it.  Each
+    /// retry attempt gets its own id: a re-sent request is a new
+    /// request to the server, and its trace must not collide with the
+    /// rejected attempt's.
+    fn mint_request_id(&self) -> String {
+        let rid = format!("rc{}-{}", self.nonce, self.seq.fetch_add(1, Ordering::Relaxed));
+        *self.last_request_id.lock().unwrap() = rid.clone();
+        rid
     }
 
     /// Build a client and validate the token with one round trip.
@@ -183,13 +219,30 @@ impl RemoteClient {
     /// shedding), so the rejected request had no effect.
     fn call(&self, method: &str, path: &str, body: Option<&Json>) -> Result<Json> {
         let payload = body.map(|b| b.encode()).unwrap_or_default();
-        let mut headers: Vec<(&str, &str)> = vec![("x-acai-token", self.token.as_str())];
-        if body.is_some() {
-            headers.push(("content-type", "application/json"));
-        }
         let mut attempts = 0;
         loop {
+            // the client mints the request id (not the server), so the
+            // trace exists under a name the caller knew before sending
+            let rid = self.mint_request_id();
+            let mut headers: Vec<(&str, &str)> = vec![
+                ("x-acai-token", self.token.as_str()),
+                ("x-request-id", rid.as_str()),
+            ];
+            if body.is_some() {
+                headers.push(("content-type", "application/json"));
+            }
             let resp = self.exchange(method, path, &headers, payload.as_bytes())?;
+            // the edge echoes the id it honored; a mismatch means some
+            // hop rewrote it and the caller's trace key is useless.
+            // Accept-time shedding (503 before routing) sends no id at
+            // all — absence is fine, rewriting is not.
+            if let Some(echo) = resp.header("x-request-id") {
+                if echo != rid {
+                    return Err(AcaiError::Json(format!(
+                        "server echoed x-request-id {echo:?}, expected {rid:?}"
+                    )));
+                }
+            }
             if (resp.status == 429 || resp.status == 503) && attempts < BACKPRESSURE_RETRIES
             {
                 if let Some(wait) = resp
@@ -695,5 +748,15 @@ impl AcaiApi for RemoteClient {
 
     fn tenant_usage(&self) -> Result<TenantUsageReport> {
         TenantUsageReport::from_json(&self.get("/v1/tenant")?)
+    }
+
+    fn job_trace(&self, id: JobId) -> Result<JobTrace> {
+        JobTrace::from_json(&self.get(&format!("/v1/trace/jobs/{id}"))?)
+    }
+
+    fn request_trace(&self, request_id: &str) -> Result<RequestTrace> {
+        RequestTrace::from_json(
+            &self.get(&format!("/v1/trace/requests/{}", percent_encode(request_id)))?,
+        )
     }
 }

@@ -8,10 +8,10 @@
 
 use std::sync::Arc;
 
-use acai::api::dto::{PageReq, PoolSpec, TraceDir};
+use acai::api::dto::{JobTrace, PageReq, PoolSpec, TraceDir};
 use acai::api::{make_handler, TenantConfig};
 use acai::autoprovision::Objective;
-use acai::cluster::ResourceConfig;
+use acai::cluster::{ClusterConfig, NodeSpec, ResourceConfig};
 use acai::datalake::metadata::ArtifactKind;
 use acai::docstore::Clause;
 use acai::engine::{ExperimentSpec, MetricMode, SweepStrategy};
@@ -146,6 +146,33 @@ fn conformance_suite(api: &dyn AcaiApi) {
     let jobs = api.jobs(&page(10, None)).unwrap();
     assert_eq!(jobs.items.len(), 1);
     assert_eq!(jobs.items[0].id, job);
+
+    // ---- tracing: the lifecycle timeline crosses the boundary ----
+    let trace = api.job_trace(job).unwrap();
+    assert_eq!(trace.job, job);
+    assert_eq!(trace.state, "finished");
+    assert_eq!(trace.preemptions, 0);
+    assert_eq!(trace.events.first().unwrap().name, "enqueue");
+    assert_eq!(trace.events.last().unwrap().name, "complete");
+    assert!(trace.events.iter().any(|e| e.name == "placement"));
+    // per-trace ordinals are dense and events are time-ordered
+    for (i, e) in trace.events.iter().enumerate() {
+        assert_eq!(e.seq, i as u64);
+    }
+    for w in trace.events.windows(2) {
+        assert!(w[0].at <= w[1].at, "timeline must be time-ordered");
+    }
+    // the phase durations account for the billed runtime
+    let runtime = status.runtime_secs.unwrap();
+    let replayed = trace.transfer + trace.run + trace.rework;
+    assert!(
+        (replayed - runtime).abs() < 1e-6 * runtime.max(1.0),
+        "phases {replayed} must account for runtime {runtime}"
+    );
+    assert!(trace.queue_wait >= 0.0);
+    // typed errors: unknown job and unknown request id are both 404
+    assert_eq!(api.job_trace(JobId(99_999)).unwrap_err().status(), 404);
+    assert_eq!(api.request_trace("ghost-rid").unwrap_err().status(), 404);
 
     // ---- metadata ----
     let doc = api.metadata_doc(ArtifactKind::Job, &job.to_string()).unwrap();
@@ -295,6 +322,10 @@ fn conformance_suite(api: &dyn AcaiApi) {
         assert!(trial.cost.unwrap() > 0.0);
         assert!(trial.metric("training_loss").is_some());
         assert!(trial.output.is_some(), "provenance anchor recorded");
+        // every trial links to its job's span timeline
+        let trace_id = trial.trace_id().expect("finished trials carry a trace id");
+        assert_eq!(trace_id, trial.job.unwrap().to_string());
+        assert_eq!(api.job_trace(trial.job.unwrap()).unwrap().state, "finished");
     }
 
     // deterministic best-trial selection: loss decays with epochs, and
@@ -1138,4 +1169,306 @@ fn warm_cache_launch_is_cheaper_and_bit_identical_across_clients() {
     let (_proj, remote) =
         RemoteClient::create_project(server.addr(), &root, "loc", "alice").unwrap();
     assert_eq!(a, locality_outcome(&remote), "wire and in-process must agree bitwise");
+}
+
+// ---------------------------------------------------------------------------
+// Observability: request-id propagation, job-lifecycle traces, metrics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn client_supplied_request_ids_are_honored_and_traceable() {
+    let acai = Arc::new(Acai::boot_default());
+    let root = acai.credentials.root_token().to_string();
+    let (_p, token) = acai.credentials.create_project(&root, "rid", "alice").unwrap();
+    let server = Server::serve(0, make_handler(acai.clone())).unwrap();
+
+    // a client-minted id is echoed verbatim on the response...
+    let mut conn = HttpConn::connect(server.addr()).unwrap();
+    let headers = [("x-acai-token", token.as_str()), ("x-request-id", "trace-me-42")];
+    let resp = conn.request("GET", "/v1/jobs?limit=10", &headers, b"").unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("x-request-id"), Some("trace-me-42"));
+
+    // ...and keys the request's span timeline
+    let remote = RemoteClient::connect(server.addr(), token.as_str()).unwrap();
+    let trace = remote.request_trace("trace-me-42").unwrap();
+    assert_eq!(trace.request_id, "trace-me-42");
+    assert_eq!(trace.events.first().unwrap().name, "request");
+    let response = trace.events.last().unwrap();
+    assert_eq!(response.name, "response");
+    assert_eq!(response.field("status").and_then(Json::as_u64), Some(200));
+    assert_eq!(response.field("route").and_then(Json::as_str), Some("GET /v1/jobs"));
+
+    // a request without one still gets a server-minted id
+    let bare = [("x-acai-token", token.as_str())];
+    let resp = conn.request("GET", "/v1/jobs?limit=10", &bare, b"").unwrap();
+    let minted = resp.header("x-request-id").expect("every response is stamped");
+    assert!(minted.starts_with("req-"), "got {minted}");
+
+    // oversized client ids are replaced, never echoed back
+    let big = "x".repeat(200);
+    let headers = [("x-acai-token", token.as_str()), ("x-request-id", big.as_str())];
+    let resp = conn.request("GET", "/v1/jobs?limit=10", &headers, b"").unwrap();
+    assert_ne!(resp.header("x-request-id"), Some(big.as_str()));
+
+    // the SDK mints an id per call; the last one resolves to its trace
+    remote.jobs(&page(10, None)).unwrap();
+    let rid = remote.last_request_id();
+    assert!(rid.starts_with("rc"), "SDK ids are client-minted, got {rid}");
+    let trace = remote.request_trace(&rid).unwrap();
+    assert_eq!(trace.request_id, rid);
+    assert!(trace.events.iter().any(|e| e.name == "response"));
+
+    // another project cannot read this project's request traces
+    let (_p2, token2) = acai.credentials.create_project(&root, "rid2", "bob").unwrap();
+    let other = RemoteClient::connect(server.addr(), token2.as_str()).unwrap();
+    assert_eq!(other.request_trace("trace-me-42").unwrap_err().status(), 404);
+}
+
+/// Assert `milestones` appear in the trace in order; other events
+/// (monitor stage mirrors, container events) may interleave freely.
+fn assert_milestones(trace: &JobTrace, milestones: &[&str]) {
+    let names: Vec<&str> = trace.events.iter().map(|e| e.name.as_str()).collect();
+    let mut pos = 0usize;
+    for m in milestones {
+        match names[pos..].iter().position(|n| n == m) {
+            Some(i) => pos += i + 1,
+            None => panic!("milestone {m:?} missing after index {pos} in {names:?}"),
+        }
+    }
+}
+
+/// ISSUE-9 acceptance: a gang job evicted by a high-priority arrival
+/// exposes its complete lifecycle — queue → gang placement → transfer
+/// → run → preempt → resume → re-placement → re-run → complete —
+/// through `GET /v1/trace/jobs/{id}`, with phase durations that
+/// account for the billed runtime.  Returns the canonical JSON of both
+/// timelines so runs and clients can be compared bit-for-bit.
+fn preempted_gang_timeline(api: &dyn AcaiApi, acai: &Acai) -> (String, String) {
+    // a deterministic 64 KiB dataset so the cold transfer is visible
+    let payload: Vec<u8> = (0..64 * 1024u32).map(|i| (i % 241) as u8).collect();
+    api.upload(&[("/gang/shard.bin", &payload)]).unwrap();
+    api.make_file_set("gang-data", &["/gang/shard.bin"]).unwrap();
+
+    // freeze the event loop: both submissions land at virtual time 0,
+    // so placement and eviction order is a pure function of the seed
+    let (low, high);
+    {
+        let _drive = acai.engine.drive_guard();
+        // the gang fills the single 8-vcpu node...
+        let mut low_req = job_request("gang-low", "gang-data", "low-out");
+        low_req.resources = ResourceConfig::new(4.0, 4096);
+        low_req.gang = 2;
+        low_req.priority = acai::engine::Priority::Low;
+        low = api.submit_job(&low_req).unwrap();
+        // ...and the high-priority arrival can only run by evicting it
+        let mut high_req = job_request("bully", "gang-data", "high-out");
+        high_req.resources = ResourceConfig::new(8.0, 8192);
+        high_req.priority = acai::engine::Priority::High;
+        high = api.submit_job(&high_req).unwrap();
+    }
+    assert_eq!(api.await_job(low).unwrap().state, "finished");
+    assert_eq!(api.await_job(high).unwrap().state, "finished");
+
+    let low_trace = api.job_trace(low).unwrap();
+    assert_eq!(low_trace.state, "finished");
+    assert_eq!(low_trace.preemptions, 1, "the gang must have been evicted once");
+    assert_milestones(
+        &low_trace,
+        &[
+            "enqueue", "placement", "transfer", "run", "preempt", "resume", "placement",
+            "run", "complete",
+        ],
+    );
+    let placement = low_trace.events.iter().find(|e| e.name == "placement").unwrap();
+    assert_eq!(placement.field("gang").and_then(Json::as_u64), Some(2));
+    let preempt = low_trace.events.iter().find(|e| e.name == "preempt").unwrap();
+    assert!(
+        preempt.field("cause").and_then(Json::as_str).unwrap().contains("evicted"),
+        "priority eviction must name its cause"
+    );
+    // the eviction cost the job real queue time behind the bully, and
+    // the phase durations account for every billed second
+    assert!(low_trace.queue_wait > 0.0, "resumed gang waited behind the bully");
+    // the cold 64 KiB load is visible on the first attempt's run event;
+    // the transfer *phase* only counts time the attempt actually spent,
+    // and this attempt was evicted the instant it launched
+    let first_run = low_trace.events.iter().find(|e| e.name == "run").unwrap();
+    assert!(
+        first_run.field("transfer_secs").and_then(Json::as_f64).unwrap() > 0.0,
+        "cold 64 KiB input transfer is visible"
+    );
+    let runtime = api.job_status(low).unwrap().runtime_secs.unwrap();
+    let replayed = low_trace.transfer + low_trace.run + low_trace.rework;
+    assert!(
+        (replayed - runtime).abs() < 1e-6 * runtime.max(1.0),
+        "phases {replayed} must account for runtime {runtime}"
+    );
+    // span ids are unique within the timeline
+    let mut spans: Vec<&str> = low_trace.events.iter().map(|e| e.span.as_str()).collect();
+    spans.sort_unstable();
+    spans.dedup();
+    assert_eq!(spans.len(), low_trace.events.len());
+
+    // the beneficiary's timeline names its victim
+    let high_trace = api.job_trace(high).unwrap();
+    assert_eq!(high_trace.preemptions, 0);
+    assert_milestones(&high_trace, &["enqueue", "eviction", "placement", "run", "complete"]);
+    let eviction = high_trace.events.iter().find(|e| e.name == "eviction").unwrap();
+    assert_eq!(
+        eviction.field("victim").and_then(Json::as_str),
+        Some(low.to_string().as_str())
+    );
+
+    (low_trace.to_json().encode(), high_trace.to_json().encode())
+}
+
+#[test]
+fn preempted_gang_trace_is_complete_and_bit_identical_across_clients() {
+    let contended = || PlatformConfig {
+        cluster: ClusterConfig::fixed(NodeSpec::new(8.0, 8192), 1),
+        ..PlatformConfig::default()
+    };
+
+    // in-process client on a fresh platform, twice (replay determinism)
+    let in_process = || {
+        let acai = Arc::new(Acai::boot(contended()).unwrap());
+        let root = acai.credentials.root_token().to_string();
+        let (_p, token) = acai.credentials.create_project(&root, "gang", "alice").unwrap();
+        let client = Client::connect(acai.clone(), &token).unwrap();
+        preempted_gang_timeline(&client, &acai)
+    };
+    let a = in_process();
+    let b = in_process();
+    assert_eq!(a, b, "same-seed replay must produce identical timelines");
+
+    // and the wire changes nothing: span ids, timestamps, ordinals and
+    // phase durations all replay bit-for-bit through real HTTP
+    let acai = Arc::new(Acai::boot(contended()).unwrap());
+    let root = acai.credentials.root_token().to_string();
+    let server = Server::serve(0, make_handler(acai.clone())).unwrap();
+    let (_proj, remote) =
+        RemoteClient::create_project(server.addr(), &root, "gang", "alice").unwrap();
+    assert_eq!(
+        a,
+        preempted_gang_timeline(&remote, &acai),
+        "wire and in-process timelines must agree bitwise"
+    );
+}
+
+/// Extract one sample value from the Prometheus text exposition.
+fn prom_sample(text: &str, series: &str) -> f64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(series).and_then(|rest| rest.strip_prefix(' ')))
+        .unwrap_or_else(|| panic!("series {series} missing from exposition"))
+        .trim()
+        .parse()
+        .unwrap()
+}
+
+#[test]
+fn metrics_json_and_prometheus_agree_under_a_contended_storm() {
+    // one small node, two tenants: the second wave of jobs queues
+    // behind the first, so the queue-wait histogram fills non-trivial
+    // buckets (zero wait for wave one, a full job runtime for wave two)
+    let config = PlatformConfig {
+        cluster: ClusterConfig::fixed(NodeSpec::new(4.0, 8192), 1),
+        ..PlatformConfig::default()
+    };
+    let acai = Arc::new(Acai::boot(config).unwrap());
+    let root = acai.credentials.root_token().to_string();
+    let server = Server::serve(0, make_handler(acai.clone())).unwrap();
+    let (_pa, ta) = acai.credentials.create_project(&root, "storm-a", "alice").unwrap();
+    let (_pb, tb) = acai.credentials.create_project(&root, "storm-b", "bob").unwrap();
+    let a = RemoteClient::connect(server.addr(), ta.as_str()).unwrap();
+    let b = RemoteClient::connect(server.addr(), tb.as_str()).unwrap();
+
+    for client in [&a, &b] {
+        client.upload(&[("/storm/corpus.bin", b"storm-bytes")]).unwrap();
+        client.make_file_set("storm", &["/storm/corpus.bin"]).unwrap();
+    }
+    // submit the whole storm at virtual time 0 (the drive guard keeps
+    // the background driver from draining wave one mid-submission)
+    let mut jobs: Vec<(&RemoteClient, acai::ids::JobId)> = Vec::new();
+    {
+        let _drive = acai.engine.drive_guard();
+        for i in 0..4 {
+            for (client, tag) in [(&a, "a"), (&b, "b")] {
+                let id = client
+                    .submit_job(&job_request(
+                        &format!("storm-{tag}-{i}"),
+                        "storm",
+                        &format!("{tag}{i}-out"),
+                    ))
+                    .unwrap();
+                jobs.push((client, id));
+            }
+        }
+    }
+    for (client, id) in &jobs {
+        assert_eq!(client.await_job(*id).unwrap().state, "finished");
+    }
+
+    // scrape both renderings of the shared registry
+    let mut conn = HttpConn::connect(server.addr()).unwrap();
+    let headers = [("x-acai-token", ta.as_str())];
+    let resp = conn.request("GET", "/v1/metrics", &headers, b"").unwrap();
+    assert_eq!(resp.status, 200);
+    let v = acai::json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    let rows = v
+        .get("registry")
+        .and_then(|r| r.get("metrics"))
+        .and_then(Json::as_array)
+        .expect("registry block in GET /v1/metrics");
+
+    let resp = conn.request("GET", "/v1/metrics?format=prometheus", &headers, b"").unwrap();
+    assert_eq!(resp.status, 200);
+    assert!(resp.header("content-type").unwrap().starts_with("text/plain"));
+    let text = String::from_utf8(resp.body.clone()).unwrap();
+
+    // the queue-wait histogram saw all 8 placements and spread them
+    // across at least two buckets (the storm was real)
+    let qw = rows
+        .iter()
+        .find(|m| m.get("name").and_then(Json::as_str) == Some("acai_job_queue_wait_seconds"))
+        .expect("queue-wait histogram in the registry block");
+    let count = qw.get("count").and_then(Json::as_u64).unwrap();
+    assert_eq!(count, 8);
+    let sum = qw.get("sum").and_then(Json::as_f64).unwrap();
+    assert!(sum > 0.0, "wave two waited a full job runtime");
+    let buckets = qw.get("buckets").and_then(Json::as_array).unwrap();
+    let nonzero = buckets
+        .iter()
+        .filter(|b| b.get("count").and_then(Json::as_u64).unwrap() > 0)
+        .count();
+    assert!(nonzero >= 2, "contended storm must spread queue waits across buckets");
+
+    // the Prometheus exposition reports the exact same values: count,
+    // sum, and every cumulative bucket replays the JSON bucket counts
+    assert_eq!(prom_sample(&text, "acai_job_queue_wait_seconds_count"), count as f64);
+    assert!((prom_sample(&text, "acai_job_queue_wait_seconds_sum") - sum).abs() < 1e-9);
+    let mut cum = 0u64;
+    for bucket in buckets {
+        cum += bucket.get("count").and_then(Json::as_u64).unwrap();
+        let le = match bucket.get("le").unwrap() {
+            Json::Str(s) => s.clone(),
+            other => format!("{}", other.as_f64().unwrap()),
+        };
+        let series = format!("acai_job_queue_wait_seconds_bucket{{le=\"{le}\"}}");
+        assert_eq!(prom_sample(&text, &series), cum as f64, "bucket le={le}");
+    }
+    assert_eq!(cum, count, "buckets must partition every observation");
+
+    // counters agree across renderings too (engine series are stable
+    // between the two scrapes: every job is terminal)
+    for name in ["acai_jobs_submitted_total", "acai_jobs_finished_total"] {
+        let json_value = rows
+            .iter()
+            .find(|m| m.get("name").and_then(Json::as_str) == Some(name))
+            .and_then(|m| m.get("value"))
+            .and_then(Json::as_u64)
+            .unwrap_or_else(|| panic!("{name} in the registry block"));
+        assert_eq!(json_value, 8);
+        assert_eq!(prom_sample(&text, name), 8.0);
+    }
 }

@@ -788,3 +788,168 @@ fn prop_priority_eviction_never_touches_equal_or_higher() {
         assert_eq!(acai.engine.scheduler.counters().evictions, preempted_total);
     });
 }
+
+#[test]
+fn prop_job_timelines_are_complete_and_phases_account_for_runtime() {
+    use acai::cluster::{ClusterConfig, NodeSpec};
+    use acai::engine::Priority;
+    use acai::obs::job_phases;
+    // Every terminal job must own exactly one gap-free span chain
+    // (enqueue → ... → one terminal event), and the derived phase
+    // durations must account for the billed runtime exactly.
+    property("trace span-chain completeness", 12, |g| {
+        let config = PlatformConfig {
+            cluster: ClusterConfig::fixed(NodeSpec::new(8.0, 8192), g.usize(1..3)),
+            quota_k: 8,
+            ..Default::default()
+        };
+        let acai = Acai::boot(config).unwrap();
+        let p = ProjectId(1);
+        let payload = vec![7u8; g.usize(1..5000)];
+        acai.datalake.storage.upload(p, &[("/d", payload.as_slice())]).unwrap();
+        acai.datalake.filesets.create(p, "in", &["/d"], "u").unwrap();
+        let prios = [Priority::Low, Priority::Normal, Priority::High];
+        let mut ids = Vec::new();
+        for i in 0..g.usize(4..16) {
+            ids.push(
+                acai.engine
+                    .submit(JobSpec {
+                        project: p,
+                        user: UserId(g.usize(1..3) as u64),
+                        name: format!("t{i}"),
+                        command: format!("python train_mnist.py --epoch {}", g.usize(1..5)),
+                        input_fileset: "in".into(),
+                        output_fileset: format!("o{i}"),
+                        resources: ResourceConfig::new(g.usize(1..5) as f64, 1024),
+                        pool: None,
+                        data_commit: None,
+                        priority: *g.pick(&prios),
+                        gang: g.usize(1..3) as u32,
+                    })
+                    .unwrap(),
+            );
+        }
+        acai.engine.run_until_idle();
+        for id in ids {
+            let r = acai.engine.registry.get(id).unwrap();
+            assert_eq!(r.state, JobState::Finished);
+            let events = acai.obs.trace.events(&id.to_string());
+            // INVARIANT: the chain opens with enqueue and closes with
+            // exactly one terminal event
+            assert_eq!(events.first().unwrap().name, "enqueue");
+            assert_eq!(events.last().unwrap().name, "complete");
+            let terminals = events
+                .iter()
+                .filter(|e| matches!(e.name.as_str(), "complete" | "failed" | "killed"))
+                .count();
+            assert_eq!(terminals, 1, "job {id} has {terminals} terminal events");
+            // INVARIANT: sim timestamps never run backwards
+            for w in events.windows(2) {
+                assert!(w[0].at <= w[1].at, "timeline of {id} runs backwards");
+            }
+            // INVARIANT: gap-free chain — each placement consumes an
+            // open enqueue/resume, each run attempt follows a placement
+            let (mut queued, mut placed) = (false, false);
+            for e in &events {
+                match e.name.as_str() {
+                    "enqueue" | "resume" => queued = true,
+                    "placement" => {
+                        assert!(queued, "{id}: placement without a queue entry");
+                        queued = false;
+                        placed = true;
+                    }
+                    "run" => {
+                        assert!(placed, "{id}: run attempt without a placement");
+                        placed = false;
+                    }
+                    _ => {}
+                }
+            }
+            // INVARIANT: transfer + retained work + preemption rework
+            // account for the billed runtime exactly
+            let phases = job_phases(&events);
+            let runtime = r.runtime_secs.unwrap();
+            let total = phases.transfer + phases.run + phases.rework;
+            assert!(
+                (total - runtime).abs() < 1e-6 * runtime.max(1.0),
+                "{id}: phases {phases:?} sum to {total}, billed runtime {runtime}"
+            );
+            assert!(phases.queue_wait >= 0.0);
+            assert_eq!(
+                events.iter().filter(|e| e.name == "preempt").count() as u64,
+                r.preemptions
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_same_seed_storms_produce_bit_identical_timelines() {
+    use acai::cluster::{ClusterConfig, NodeSpec};
+    use acai::engine::Priority;
+    // Replaying one storm on two platforms booted from the same seed
+    // must yield bit-identical trace timelines: same event names, same
+    // f64 timestamp bits, same span ids.
+    property("trace determinism", 8, |g| {
+        let seed = g.u64(1..1_000_000);
+        let prios = [Priority::Low, Priority::Normal, Priority::High];
+        let storm: Vec<(u64, f64, usize, usize, u32)> = (0..g.usize(3..10))
+            .map(|_| {
+                (
+                    g.usize(1..3) as u64,  // user
+                    g.usize(1..5) as f64,  // vcpus
+                    g.usize(1..5),         // epochs
+                    g.usize(0..3),         // priority index
+                    g.usize(1..3) as u32,  // gang
+                )
+            })
+            .collect();
+        let run = || {
+            let config = PlatformConfig {
+                cluster: ClusterConfig::fixed(NodeSpec::new(8.0, 8192), 1),
+                quota_k: 8,
+                seed,
+                ..Default::default()
+            };
+            let acai = Acai::boot(config).unwrap();
+            let p = ProjectId(1);
+            acai.datalake
+                .storage
+                .upload(p, &[("/d", b"determinism-payload")])
+                .unwrap();
+            acai.datalake.filesets.create(p, "in", &["/d"], "u").unwrap();
+            let mut ids = Vec::new();
+            for (i, (user, vcpus, epochs, pi, gang)) in storm.iter().enumerate() {
+                ids.push(
+                    acai.engine
+                        .submit(JobSpec {
+                            project: p,
+                            user: UserId(*user),
+                            name: format!("d{i}"),
+                            command: format!("python train_mnist.py --epoch {epochs}"),
+                            input_fileset: "in".into(),
+                            output_fileset: format!("o{i}"),
+                            resources: ResourceConfig::new(*vcpus, 1024),
+                            pool: None,
+                            data_commit: None,
+                            priority: prios[*pi],
+                            gang: *gang,
+                        })
+                        .unwrap(),
+                );
+            }
+            acai.engine.run_until_idle();
+            ids.into_iter()
+                .map(|id| {
+                    acai.obs
+                        .trace
+                        .events(&id.to_string())
+                        .iter()
+                        .map(|e| (e.name.clone(), e.at.to_bits(), e.span))
+                        .collect::<Vec<_>>()
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run(), "same-seed storms diverged");
+    });
+}
