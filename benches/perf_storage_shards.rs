@@ -1,6 +1,6 @@
 //! Perf: lock-shard scaling — the same concurrent workload against a
-//! 1-shard kvstore (the old global-mutex design) and the default
-//! 16-shard layout.  The tentpole claim: sharding buys >=1.5x on
+//! 1-shard kvstore (the old global-mutex design), the default 16-shard
+//! layout, and 64 shards.  The tentpole claim: sharding buys >=1.5x on
 //! concurrent mixed workloads (ISSUE 1 acceptance), while preserving
 //! per-key sequential version assignment.
 
@@ -57,7 +57,7 @@ fn verify(store: &Arc<KvStore>) {
 
 fn main() {
     println!("\n================================================================");
-    println!("BENCH  Perf: storage shard scaling (1 vs 16 lock shards)");
+    println!("BENCH  Perf: storage shard scaling (1/16/64 lock shards)");
     println!("PAPER  §4.4 scalability: the metadata store must not serialize");
     println!("       concurrent pipelines (NSML/TACC bottleneck analysis)");
     println!("================================================================");
@@ -65,31 +65,29 @@ fn main() {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let total_ops = THREADS * OPS_PER_THREAD;
 
-    // warmup both layouts once
-    run(&Arc::new(KvStore::with_shards(1)));
-    run(&Arc::new(KvStore::with_shards(16)));
-
-    let single = Arc::new(KvStore::with_shards(1));
-    let t1 = run(&single);
-    verify(&single);
-
-    let sharded = Arc::new(KvStore::with_shards(16));
-    let t16 = run(&sharded);
-    verify(&sharded);
-
+    // sweep the shard-count dial: 1 (the old global lock), the default
+    // 16, and 64 (past the 8-thread contention point — the curve should
+    // be flat from 16 on, showing the default is already at the knee)
+    const SWEEP: [usize; 3] = [1, 16, 64];
+    let mut secs = [0.0f64; SWEEP.len()];
+    for (i, &shards) in SWEEP.iter().enumerate() {
+        run(&Arc::new(KvStore::with_shards(shards))); // warmup
+        let store = Arc::new(KvStore::with_shards(shards));
+        secs[i] = run(&store);
+        verify(&store);
+        println!(
+            "{shards:>2} shards: {:>8.1}k ops/s  ({:.3}s for {}k ops, {THREADS} threads)",
+            total_ops as f64 / secs[i] / 1e3,
+            secs[i],
+            total_ops / 1000
+        );
+    }
+    let (t1, t16, t64) = (secs[0], secs[1], secs[2]);
     let ratio = t1 / t16;
     println!(
-        "1 shard : {:>8.1}k ops/s  ({:.3}s for {}k ops, {THREADS} threads)",
-        total_ops as f64 / t1 / 1e3,
-        t1,
-        total_ops / 1000
+        "speedup 16 vs 1: {ratio:.2}x, 64 vs 16: {:.2}x on {cores} cores",
+        t16 / t64
     );
-    println!(
-        "16 shards: {:>8.1}k ops/s  ({:.3}s)",
-        total_ops as f64 / t16 / 1e3,
-        t16
-    );
-    println!("speedup 16 vs 1: {ratio:.2}x on {cores} cores");
 
     if cores >= 4 {
         assert!(

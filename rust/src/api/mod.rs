@@ -212,6 +212,10 @@ fn serve_one(
     acai.obs
         .trace
         .emit(request_id, "response", acai.clock.now(), fields);
+    // group-commit barrier: any journal records this request batched
+    // are durable before its response leaves the process, so a client
+    // that got a 2xx can never observe its write lost to a crash
+    acai.datalake.flush();
     resp
 }
 

@@ -279,15 +279,25 @@ fn upload_files(req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
     ))
 }
 
-/// `GET /v1/files/{path}?version=&offset=&len=` — whole-body download,
-/// or a ranged one when `offset`/`len` are present (only the chunks
-/// overlapping the range leave the object store).
+/// `GET /v1/files/{path}?version=&offset=&len=&raw` — whole-body
+/// download, or a ranged one when `offset`/`len` are present (only the
+/// chunks overlapping the range leave the object store).  With `raw`
+/// (whole-body only) the response is `application/octet-stream` whose
+/// tail is the file's chunk windows handed straight to the connection
+/// buffer — no base64, no concatenation, zero deep copies.
 fn download_file(_req: &Request, ctx: &mut ApiCtx) -> Result<Response> {
     let path = ctx.params.raw("path")?.to_string();
     let version = ctx.query.version("version")?;
     let offset = ctx.query.u64("offset")?;
     let len = ctx.query.u64("len")?;
     let ranged = offset.is_some() || len.is_some();
+    if ctx.query.get("raw").is_some() {
+        if ranged {
+            return Err(AcaiError::invalid("raw downloads cannot be ranged"));
+        }
+        let segments = ctx.client()?.download_segments(&path, version)?;
+        return Ok(Response::octet_stream(segments));
+    }
     let bytes = if ranged {
         ctx.client()?
             .fetch_range(&path, version, offset.unwrap_or(0), len)?

@@ -29,6 +29,14 @@ pub struct PlatformConfig {
     pub artifacts_dir: Option<std::path::PathBuf>,
     /// Journal path for the kvstore (None = in-memory).
     pub journal: Option<std::path::PathBuf>,
+    /// Journal group-commit batch size: records are buffered and
+    /// fsync'd together once this many are pending.  `1` (the default)
+    /// is write-through — every record hits disk before its write
+    /// returns.  Larger batches amortize syscalls; durability is
+    /// bounded by the flush barriers at the API-request and
+    /// engine-pump boundaries, so a crash loses at most `batch - 1`
+    /// records that no client was ever told were durable.
+    pub journal_batch: usize,
     /// REST-edge worker-pool sizing and connection cap
     /// (`acai serve` / [`crate::httpd::Server::serve_with`]).
     pub http: crate::httpd::ServerConfig,
@@ -48,6 +56,7 @@ impl Default for PlatformConfig {
             seed: 0xACA1,
             artifacts_dir: None,
             journal: None,
+            journal_batch: 1,
             http: crate::httpd::ServerConfig::default(),
             tenant: crate::api::tenant::TenantConfig::default(),
         }

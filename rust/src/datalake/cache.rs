@@ -16,12 +16,13 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::ids::{ProjectId, Version};
+use crate::storage::Bytes;
 
 /// Key: one immutable file-set version of a project.
 type Key = (u64, String, Version);
 
 struct Entry {
-    files: Arc<Vec<(String, Arc<Vec<u8>>)>>,
+    files: Arc<Vec<(String, Bytes)>>,
     bytes: usize,
     last_used: u64,
 }
@@ -51,13 +52,14 @@ impl FileSetCache {
         }
     }
 
-    /// Look up a materialized file-set version.
+    /// Look up a materialized file-set version.  A hit hands back
+    /// shared [`Bytes`] windows — no bytes move.
     pub fn get(
         &self,
         project: ProjectId,
         name: &str,
         version: Version,
-    ) -> Option<Arc<Vec<(String, Arc<Vec<u8>>)>>> {
+    ) -> Option<Arc<Vec<(String, Bytes)>>> {
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
@@ -82,7 +84,7 @@ impl FileSetCache {
         project: ProjectId,
         name: &str,
         version: Version,
-        files: Arc<Vec<(String, Arc<Vec<u8>>)>>,
+        files: Arc<Vec<(String, Bytes)>>,
     ) {
         let bytes: usize = files.iter().map(|(_, b)| b.len()).sum();
         if bytes > self.capacity {
@@ -132,10 +134,10 @@ mod tests {
 
     const P: ProjectId = ProjectId(1);
 
-    fn files(n: usize, size: usize) -> Arc<Vec<(String, Arc<Vec<u8>>)>> {
+    fn files(n: usize, size: usize) -> Arc<Vec<(String, Bytes)>> {
         Arc::new(
             (0..n)
-                .map(|i| (format!("/f{i}"), Arc::new(vec![0u8; size])))
+                .map(|i| (format!("/f{i}"), Bytes::from(vec![0u8; size])))
                 .collect(),
         )
     }

@@ -345,7 +345,7 @@ impl FileSetStore {
         project: ProjectId,
         name: &str,
         version: Option<Version>,
-    ) -> Result<Vec<(String, Arc<Vec<u8>>)>> {
+    ) -> Result<Vec<(String, crate::storage::Bytes)>> {
         let entries = self.get(project, name, version)?;
         entries
             .into_iter()
@@ -466,7 +466,7 @@ mod tests {
         // the set still references version 1
         assert_eq!(fs.get(P, "Set", None).unwrap()[0].1, 1);
         let bytes = fs.materialize(P, "Set", None).unwrap();
-        assert_eq!(&**bytes[0].1, b"train-v1");
+        assert_eq!(bytes[0].1, b"train-v1");
     }
 
     #[test]

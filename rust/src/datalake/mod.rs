@@ -64,6 +64,11 @@ pub struct DataLake {
     /// Time travel (§4.4 upgraded): whole-lake commits, branches,
     /// chunk-level diffs, rollback.
     pub timetravel: TimeTravelStore,
+    /// The metadata substrate all of the above write through — retained
+    /// so flush barriers ([`DataLake::flush`]) can reach the journal
+    /// when group-commit ([`crate::config::PlatformConfig::journal_batch`])
+    /// is enabled.
+    kv: SharedTable,
 }
 
 impl DataLake {
@@ -88,7 +93,8 @@ impl DataLake {
             clock.clone(),
             ids.clone(),
         );
-        let timetravel = TimeTravelStore::new(kv, storage.clone(), cas.clone(), clock, ids);
+        let timetravel =
+            TimeTravelStore::new(kv.clone(), storage.clone(), cas.clone(), clock, ids);
         Self {
             storage,
             filesets,
@@ -98,7 +104,19 @@ impl DataLake {
             cache: FileSetCache::new(DEFAULT_CACHE_BYTES),
             cas,
             timetravel,
+            kv,
         }
+    }
+
+    /// Flush any journal records the substrate is holding under
+    /// group-commit.  A no-op in the default write-through configuration
+    /// (and for non-journaled substrates); the API front end and the
+    /// engine pump call this at their request/pump boundaries.  Flush
+    /// failures surface on the next journaled write, not here — the
+    /// barrier must never fail a request that already committed in
+    /// memory.
+    pub fn flush(&self) {
+        let _ = self.kv.flush();
     }
 
     /// Materialize a file-set version through the inter-job cache
@@ -109,7 +127,7 @@ impl DataLake {
         project: crate::ids::ProjectId,
         name: &str,
         version: Option<crate::ids::Version>,
-    ) -> crate::error::Result<std::sync::Arc<Vec<(String, std::sync::Arc<Vec<u8>>)>>> {
+    ) -> crate::error::Result<std::sync::Arc<Vec<(String, crate::storage::Bytes)>>> {
         let v = match version {
             Some(v) => v,
             None => self

@@ -593,7 +593,7 @@ mod tests {
         s.delete_version(P, "/a", 1).unwrap();
         let pinned = tt.get(P, c.id).unwrap();
         let chunks = &pinned.file("/a").unwrap().chunks;
-        assert_eq!(&**cas.materialize(chunks).unwrap(), b"aaaa");
+        assert_eq!(cas.materialize(chunks).unwrap(), b"aaaa");
         // dropping the commit releases the last ref
         tt.delete(P, c.id).unwrap();
         assert_eq!(cas.refs(&chunks[0]), Some(0));
@@ -645,11 +645,11 @@ mod tests {
         assert_eq!(report.restored, 1); // /b row re-written
         assert_eq!(report.repointed, 2); // /a back to v1, /b pointer re-created
         assert_eq!(report.removed, 1); // /c gone
-        assert_eq!(&**s.read(P, "/a", None).unwrap(), b"a-v1");
-        assert_eq!(&**s.read(P, "/b", None).unwrap(), b"b-v1");
+        assert_eq!(s.read(P, "/a", None).unwrap(), b"a-v1");
+        assert_eq!(s.read(P, "/b", None).unwrap(), b"b-v1");
         assert!(s.read(P, "/c", None).is_err());
         // history above the snapshot survives; fresh uploads never collide
-        assert_eq!(&**s.read(P, "/a", Some(2)).unwrap(), b"a-v2-longer");
+        assert_eq!(s.read(P, "/a", Some(2)).unwrap(), b"a-v2-longer");
         let v = s.upload(P, &[("/a", b"a-v3")]).unwrap();
         assert_eq!(v[0].1, 3);
         // a second rollback of an already-clean path is a no-op

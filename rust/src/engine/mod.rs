@@ -538,8 +538,14 @@ impl ExecutionEngine {
                     let file = snapshot.file(path).ok_or_else(|| {
                         AcaiError::not_found(format!("{path} is not in {commit}"))
                     })?;
-                    // the agent "downloads" the snapshot bytes
-                    input_bytes += self.datalake.cas.materialize(&file.chunks)?.len();
+                    // the "downloaded" byte count comes straight from the
+                    // manifest (each chunk id embeds its length) — no
+                    // need to materialize bytes just to measure them
+                    input_bytes += file
+                        .chunks
+                        .iter()
+                        .map(|id| crate::datalake::cas::chunk_len(id) as usize)
+                        .sum::<usize>();
                     for chunk in &file.chunks {
                         if seen.insert(chunk.clone()) {
                             chunks.push((
@@ -785,6 +791,9 @@ impl ExecutionEngine {
             events += 1;
             assert!(events < MAX_EVENTS, "engine livelock");
         }
+        // Group-commit barrier: any journal records buffered by the work
+        // this pump drove reach disk before the engine reports idle.
+        self.datalake.flush();
     }
 
     /// A preemption interrupted a running job — a spot revocation, or a

@@ -28,6 +28,7 @@ use std::time::{Duration, Instant};
 
 use crate::error::{AcaiError, Result};
 use crate::json::Json;
+use crate::storage::Bytes;
 
 /// Maximum header block size (16 KiB) and body size (32 MiB).
 const MAX_HEADER_BYTES: usize = 16 * 1024;
@@ -84,6 +85,12 @@ pub struct Response {
     pub status: u16,
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
+    /// Zero-copy tail segments: shared [`Bytes`] windows written to the
+    /// wire after `body` without ever being concatenated.  Content-length
+    /// framing covers `body.len() + Σ windows[i].len()`, so handlers can
+    /// hand chunk-store windows straight to the connection buffer
+    /// (the raw download path) instead of materializing one flat `Vec`.
+    pub windows: Vec<Bytes>,
 }
 
 impl Response {
@@ -92,7 +99,20 @@ impl Response {
             status,
             headers: vec![],
             body: vec![],
+            windows: vec![],
         }
+    }
+
+    /// 200 streaming raw bytes: the segments become the response tail
+    /// verbatim (no concatenation, no base64).  Used by the raw
+    /// download path to carry chunk-store windows to the socket with
+    /// zero deep copies.
+    pub fn octet_stream(segments: Vec<Bytes>) -> Self {
+        let mut r = Self::new(200);
+        r.headers
+            .push(("content-type".into(), "application/octet-stream".into()));
+        r.windows = segments;
+        r
     }
 
     /// Case-insensitive header lookup (clients inspecting a decoded
@@ -770,12 +790,16 @@ fn encode_response(buf: &mut Vec<u8>, r: &Response, keep_alive: bool) {
     for (k, v) in &r.headers {
         let _ = write!(buf, "{k}: {v}\r\n");
     }
+    let windows_len: usize = r.windows.iter().map(Bytes::len).sum();
     let _ = write!(
         buf,
         "content-length: {}\r\nconnection: {conn}\r\n\r\n",
-        r.body.len()
+        r.body.len() + windows_len
     );
     buf.extend_from_slice(&r.body);
+    for w in &r.windows {
+        buf.extend_from_slice(w);
+    }
 }
 
 /// Coalesced response write through the connection's reusable buffer.
@@ -887,6 +911,7 @@ fn read_response(reader: &mut BufReader<TcpStream>) -> Result<Response> {
         status,
         headers: headers_out,
         body,
+        windows: vec![],
     })
 }
 

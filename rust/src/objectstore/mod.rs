@@ -28,7 +28,7 @@ use crate::bus::Bus;
 use crate::error::{AcaiError, Result};
 use crate::json::{parse, Json};
 use crate::simclock::SimClock;
-use crate::storage::{ns_key, ns_range, ns_split, Rmw, ShardedMap, Table};
+use crate::storage::{ns_key, ns_range, ns_split, Bytes, Rmw, ShardedMap, Table};
 
 /// Bus topic carrying object-store notifications (the SNS analogue).
 pub const TOPIC_OBJECT_EVENTS: &str = "object-events";
@@ -60,7 +60,7 @@ struct Grant {
 /// The simulated object store.
 #[derive(Clone)]
 pub struct ObjectStore {
-    objects: Arc<ShardedMap<String, Arc<Vec<u8>>>>,
+    objects: Arc<ShardedMap<String, Bytes>>,
     grants: Arc<ShardedMap<String, Grant>>,
     clock: SimClock,
     bus: Bus,
@@ -157,7 +157,7 @@ impl ObjectStore {
     }
 
     /// The direct-to-store upload path (client side of a presigned PUT).
-    pub fn put_presigned(&self, token: &str, data: Vec<u8>) -> Result<()> {
+    pub fn put_presigned(&self, token: &str, data: impl Into<Bytes>) -> Result<()> {
         let key = self.consume(token, Op::Put)?;
         if self.take_injected_failure() {
             return Err(AcaiError::Storage(format!(
@@ -176,8 +176,9 @@ impl ObjectStore {
         Ok(())
     }
 
-    /// The direct-to-store download path (presigned GET).
-    pub fn get_presigned(&self, token: &str) -> Result<Arc<Vec<u8>>> {
+    /// The direct-to-store download path (presigned GET).  Returns a
+    /// shared window of the stored buffer — no bytes are copied.
+    pub fn get_presigned(&self, token: &str) -> Result<Bytes> {
         let key = self.consume(token, Op::Get)?;
         let data = self
             .objects
@@ -194,20 +195,23 @@ impl ObjectStore {
     }
 
     /// Trusted in-platform read (agents run inside the trust boundary).
-    pub fn get(&self, key: &str) -> Result<Arc<Vec<u8>>> {
+    pub fn get(&self, key: &str) -> Result<Bytes> {
         self.objects
             .get(&key.to_string())
             .ok_or_else(|| AcaiError::not_found(format!("object {key}")))
     }
 
-    fn store(&self, key: &str, data: Vec<u8>) {
+    fn store(&self, key: &str, data: impl Into<Bytes>) {
+        let data = data.into();
         self.bytes_stored
             .fetch_add(data.len() as u64, Ordering::Relaxed);
-        self.objects.insert(key.to_string(), Arc::new(data));
+        self.objects.insert(key.to_string(), data);
     }
 
-    /// Trusted in-platform write.
-    pub fn put(&self, key: &str, data: Vec<u8>) {
+    /// Trusted in-platform write.  Accepts anything convertible to
+    /// [`Bytes`]; passing an owned `Vec<u8>` or an existing `Bytes`
+    /// window is zero-copy.
+    pub fn put(&self, key: &str, data: impl Into<Bytes>) {
         self.store(key, data);
     }
 
@@ -306,7 +310,7 @@ impl Table for ObjectStore {
                     let bytes = v.encode().into_bytes();
                     self.bytes_stored
                         .fetch_add(bytes.len() as u64, Ordering::Relaxed);
-                    shard.insert(okey.clone(), Arc::new(bytes));
+                    shard.insert(okey.clone(), Bytes::from(bytes));
                     Ok(Some(v))
                 }
                 Rmw::Delete => {

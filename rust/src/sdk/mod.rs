@@ -57,8 +57,13 @@ pub trait AcaiApi {
     /// versions.
     fn upload(&self, files: &[(&str, &[u8])]) -> Result<Vec<FileEntry>>;
 
-    /// Download one file (latest version if `None`).
-    fn fetch(&self, path: &str, version: Option<Version>) -> Result<Vec<u8>>;
+    /// Download one file (latest version if `None`).  Returns a shared
+    /// [`Bytes`] window: the in-process client hands back the stored
+    /// buffer itself (zero-copy); the wire client wraps its decoded
+    /// body.
+    ///
+    /// [`Bytes`]: crate::storage::Bytes
+    fn fetch(&self, path: &str, version: Option<Version>) -> Result<crate::storage::Bytes>;
 
     /// Ranged download: bytes `[offset, offset+len)` of one file
     /// version (`len = None` reads to EOF, clamped).  Only the chunks
@@ -69,7 +74,7 @@ pub trait AcaiApi {
         version: Option<Version>,
         offset: u64,
         len: Option<u64>,
-    ) -> Result<Vec<u8>>;
+    ) -> Result<crate::storage::Bytes>;
 
     /// The chunk-manifest view of one file version: logical size,
     /// chunking granularity, ordered chunk ids.
@@ -378,19 +383,44 @@ impl Client {
     }
 
     /// Download a file (presigned flow); latest version if None.
-    pub fn download(&self, path: &str, version: Option<Version>) -> Result<Vec<u8>> {
+    /// Zero-copy: the returned [`crate::storage::Bytes`] windows the
+    /// chunk-store buffers directly.
+    pub fn download(
+        &self,
+        path: &str,
+        version: Option<Version>,
+    ) -> Result<crate::storage::Bytes> {
         self.acai.datalake.acl.check(
             self.identity.project,
             &format!("file:{path}"),
             self.identity.user,
             crate::datalake::Access::Read,
         )?;
-        Ok(self
-            .acai
+        self.acai
             .datalake
             .storage
-            .download(self.identity.project, path, version)?
-            .to_vec())
+            .download(self.identity.project, path, version)
+    }
+
+    /// The presigned per-chunk windows of a file, in order — the HTTP
+    /// front end's raw download path streams these into the connection
+    /// buffer without assembling a whole-body `Vec` (in-process only;
+    /// the wire client exchanges JSON/base64 bodies).
+    pub fn download_segments(
+        &self,
+        path: &str,
+        version: Option<Version>,
+    ) -> Result<Vec<crate::storage::Bytes>> {
+        self.acai.datalake.acl.check(
+            self.identity.project,
+            &format!("file:{path}"),
+            self.identity.user,
+            crate::datalake::Access::Read,
+        )?;
+        self.acai
+            .datalake
+            .storage
+            .download_segments(self.identity.project, path, version)
     }
 
     /// List files under a prefix with latest versions.  Entries the
@@ -654,7 +684,7 @@ impl AcaiApi for Client {
             .collect())
     }
 
-    fn fetch(&self, path: &str, version: Option<Version>) -> Result<Vec<u8>> {
+    fn fetch(&self, path: &str, version: Option<Version>) -> Result<crate::storage::Bytes> {
         self.admit(0)?;
         let data = self.download(path, version)?;
         self.record_response(data.len() as u64);
@@ -667,7 +697,7 @@ impl AcaiApi for Client {
         version: Option<Version>,
         offset: u64,
         len: Option<u64>,
-    ) -> Result<Vec<u8>> {
+    ) -> Result<crate::storage::Bytes> {
         self.admit(0)?;
         self.check_read(&format!("file:{path}"))?;
         let data = self.acai.datalake.storage.download_range(

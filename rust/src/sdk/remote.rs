@@ -323,13 +323,15 @@ impl AcaiApi for RemoteClient {
             .collect()
     }
 
-    fn fetch(&self, path: &str, version: Option<Version>) -> Result<Vec<u8>> {
+    fn fetch(&self, path: &str, version: Option<Version>) -> Result<crate::storage::Bytes> {
         let mut url = format!("/v1/files/{}", percent_encode(path));
         if let Some(v) = version {
             url.push_str(&format!("?version={v}"));
         }
         let resp = self.get(&url)?;
-        b64_decode(&dto::str_field(dto::as_object(&resp)?, "content_b64")?)
+        // wrapping the decoded body is zero-copy (the vec becomes the
+        // backing buffer)
+        Ok(b64_decode(&dto::str_field(dto::as_object(&resp)?, "content_b64")?)?.into())
     }
 
     fn fetch_range(
@@ -338,7 +340,7 @@ impl AcaiApi for RemoteClient {
         version: Option<Version>,
         offset: u64,
         len: Option<u64>,
-    ) -> Result<Vec<u8>> {
+    ) -> Result<crate::storage::Bytes> {
         let mut url = format!("/v1/files/{}?offset={offset}", percent_encode(path));
         if let Some(l) = len {
             url.push_str(&format!("&len={l}"));
@@ -347,7 +349,7 @@ impl AcaiApi for RemoteClient {
             url.push_str(&format!("&version={v}"));
         }
         let resp = self.get(&url)?;
-        b64_decode(&dto::str_field(dto::as_object(&resp)?, "content_b64")?)
+        Ok(b64_decode(&dto::str_field(dto::as_object(&resp)?, "content_b64")?)?.into())
     }
 
     fn file_stat(&self, path: &str, version: Option<Version>) -> Result<FileManifest> {

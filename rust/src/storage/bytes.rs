@@ -1,0 +1,360 @@
+//! [`Bytes`]: the zero-copy byte window under the whole data plane.
+//!
+//! An immutable view into a shared, reference-counted buffer: cloning
+//! is an `Arc` bump, [`Bytes::slice`] is pointer arithmetic, and
+//! chunking a request body is N windows over ONE allocation instead of
+//! N `to_vec()` copies.  Everything that used to move `Arc<Vec<u8>>` /
+//! `Vec<u8>` between the object store, the CAS, the download paths and
+//! the HTTP response writer now moves `Bytes`.
+//!
+//! Ownership rules (the "zero-copy data plane" contract, see
+//! DESIGN.md):
+//!
+//! - `Bytes` is immutable — there is no way to write through a window,
+//!   so windows over one buffer may be shared freely across threads;
+//! - `From<Vec<u8>>` is zero-copy (the vec becomes the backing buffer);
+//!   `From<&[u8]>` and [`Bytes::to_vec`] are the *only* deep copies;
+//! - [`Bytes::concat`] of windows that are contiguous views of one
+//!   buffer returns a wider window of that same buffer — the join half
+//!   of split→join is free when the split produced the parts.
+//!
+//! Under `#[cfg(test)]` a thread-local deep-copy counter records every
+//! buffer copy, so tests *assert* zero-copy instead of hoping: see
+//! [`copy_counter`].
+
+use std::ops::{Bound, Deref, RangeBounds};
+use std::sync::Arc;
+
+/// Thread-local deep-copy accounting (test builds only).  Thread-local
+/// rather than global so concurrently running tests cannot perturb each
+/// other's counts.
+#[cfg(test)]
+pub mod copy_counter {
+    use std::cell::Cell;
+
+    thread_local! {
+        static DEEP_COPIES: Cell<u64> = Cell::new(0);
+    }
+
+    /// Record one buffer copy (called by the `Bytes` copy paths).
+    pub fn bump() {
+        DEEP_COPIES.with(|c| c.set(c.get() + 1));
+    }
+
+    /// Deep copies performed by this thread since the last [`reset`].
+    pub fn get() -> u64 {
+        DEEP_COPIES.with(|c| c.get())
+    }
+
+    /// Zero this thread's counter.
+    pub fn reset() {
+        DEEP_COPIES.with(|c| c.set(0));
+    }
+}
+
+#[cfg(test)]
+fn count_copy() {
+    copy_counter::bump();
+}
+
+#[cfg(not(test))]
+fn count_copy() {}
+
+/// An immutable, cheaply-cloneable window into a shared byte buffer.
+#[derive(Clone)]
+pub struct Bytes {
+    buf: Arc<Vec<u8>>,
+    off: usize,
+    len: usize,
+}
+
+impl Bytes {
+    /// The empty window.
+    pub fn new() -> Bytes {
+        Bytes {
+            buf: Arc::new(Vec::new()),
+            off: 0,
+            len: 0,
+        }
+    }
+
+    /// Deep-copy a slice into a fresh buffer (the counted copy path —
+    /// prefer `From<Vec<u8>>` when the caller owns the allocation).
+    pub fn copy_from_slice(bytes: &[u8]) -> Bytes {
+        count_copy();
+        Bytes::from_vec_uncounted(bytes.to_vec())
+    }
+
+    fn from_vec_uncounted(v: Vec<u8>) -> Bytes {
+        let len = v.len();
+        Bytes {
+            buf: Arc::new(v),
+            off: 0,
+            len,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// This window's start offset within its backing buffer (windows
+    /// produced by chunking one body are contiguous: each starts where
+    /// the previous ended).
+    pub fn offset(&self) -> usize {
+        self.off
+    }
+
+    /// Do two windows share one backing buffer?
+    pub fn same_buffer(&self, other: &Bytes) -> bool {
+        Arc::ptr_eq(&self.buf, &other.buf)
+    }
+
+    /// The bytes of this window.
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf[self.off..self.off + self.len]
+    }
+
+    /// A sub-window: shares the backing buffer, no bytes move.
+    /// Panics if the range exceeds this window (same contract as slice
+    /// indexing).
+    pub fn slice(&self, range: impl RangeBounds<usize>) -> Bytes {
+        let lo = match range.start_bound() {
+            Bound::Included(&n) => n,
+            Bound::Excluded(&n) => n + 1,
+            Bound::Unbounded => 0,
+        };
+        let hi = match range.end_bound() {
+            Bound::Included(&n) => n + 1,
+            Bound::Excluded(&n) => n,
+            Bound::Unbounded => self.len,
+        };
+        assert!(
+            lo <= hi && hi <= self.len,
+            "slice {lo}..{hi} out of bounds for Bytes of len {}",
+            self.len
+        );
+        Bytes {
+            buf: self.buf.clone(),
+            off: self.off + lo,
+            len: hi - lo,
+        }
+    }
+
+    /// Deep-copy the window into an owned `Vec` (counted).
+    pub fn to_vec(&self) -> Vec<u8> {
+        count_copy();
+        self.as_slice().to_vec()
+    }
+
+    /// Join windows.  When every part is a view of ONE buffer and the
+    /// windows are contiguous (each starts where the previous ends),
+    /// the result is a single wider window of that buffer — zero-copy.
+    /// Otherwise the parts are copied once into an exactly-sized
+    /// buffer (one counted copy regardless of part count).
+    pub fn concat(parts: &[Bytes]) -> Bytes {
+        match parts {
+            [] => Bytes::new(),
+            [one] => one.clone(),
+            [first, rest @ ..] => {
+                let contiguous = rest
+                    .iter()
+                    .try_fold(first.off + first.len, |end, p| {
+                        (p.same_buffer(first) && p.off == end).then_some(end + p.len)
+                    })
+                    .is_some();
+                if contiguous {
+                    return Bytes {
+                        buf: first.buf.clone(),
+                        off: first.off,
+                        len: parts.iter().map(|p| p.len).sum(),
+                    };
+                }
+                count_copy();
+                let total: usize = parts.iter().map(|p| p.len).sum();
+                let mut out = Vec::with_capacity(total);
+                for p in parts {
+                    out.extend_from_slice(p.as_slice());
+                }
+                Bytes::from_vec_uncounted(out)
+            }
+        }
+    }
+}
+
+impl Default for Bytes {
+    fn default() -> Bytes {
+        Bytes::new()
+    }
+}
+
+impl Deref for Bytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Bytes {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+/// Zero-copy: the vec becomes the backing buffer.
+impl From<Vec<u8>> for Bytes {
+    fn from(v: Vec<u8>) -> Bytes {
+        Bytes::from_vec_uncounted(v)
+    }
+}
+
+/// Deep copy (counted) — the caller only has a borrow.
+impl From<&[u8]> for Bytes {
+    fn from(b: &[u8]) -> Bytes {
+        Bytes::copy_from_slice(b)
+    }
+}
+
+/// Deep copy (counted) — borrow convenience for literals.
+impl<const N: usize> From<&[u8; N]> for Bytes {
+    fn from(b: &[u8; N]) -> Bytes {
+        Bytes::copy_from_slice(b)
+    }
+}
+
+/// Deep copy (counted) — borrow convenience.
+impl From<&Vec<u8>> for Bytes {
+    fn from(v: &Vec<u8>) -> Bytes {
+        Bytes::copy_from_slice(v)
+    }
+}
+
+impl From<String> for Bytes {
+    fn from(s: String) -> Bytes {
+        Bytes::from(s.into_bytes())
+    }
+}
+
+impl std::fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Bytes({} bytes)", self.len)
+    }
+}
+
+impl PartialEq for Bytes {
+    fn eq(&self, other: &Bytes) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Bytes {}
+
+impl PartialEq<[u8]> for Bytes {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<&[u8]> for Bytes {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl PartialEq<Vec<u8>> for Bytes {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Bytes> for Vec<u8> {
+    fn eq(&self, other: &Bytes) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<const N: usize> PartialEq<[u8; N]> for Bytes {
+    fn eq(&self, other: &[u8; N]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl<const N: usize> PartialEq<&[u8; N]> for Bytes {
+    fn eq(&self, other: &&[u8; N]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_is_zero_copy_and_slicing_shares_the_buffer() {
+        copy_counter::reset();
+        let b = Bytes::from((0u8..100).collect::<Vec<u8>>());
+        let mid = b.slice(10..60);
+        let sub = mid.slice(5..25);
+        assert_eq!(mid.len(), 50);
+        assert_eq!(sub, b.slice(15..35));
+        assert!(sub.same_buffer(&b));
+        assert_eq!(sub.offset(), 15);
+        assert_eq!(copy_counter::get(), 0, "windowing must not copy");
+    }
+
+    #[test]
+    fn copy_paths_are_counted() {
+        copy_counter::reset();
+        let b = Bytes::from(&b"hello"[..]); // borrow: deep copy
+        assert_eq!(copy_counter::get(), 1);
+        let v = b.to_vec();
+        assert_eq!(v, b"hello");
+        assert_eq!(copy_counter::get(), 2);
+    }
+
+    #[test]
+    fn concat_of_contiguous_windows_is_free() {
+        copy_counter::reset();
+        let b = Bytes::from((0u8..64).collect::<Vec<u8>>());
+        let parts: Vec<Bytes> = (0..4).map(|i| b.slice(i * 16..(i + 1) * 16)).collect();
+        let joined = Bytes::concat(&parts);
+        assert!(joined.same_buffer(&b));
+        assert_eq!(joined, b);
+        assert_eq!(copy_counter::get(), 0);
+        // a ranged join of a contiguous subset is free too
+        let ranged = Bytes::concat(&parts[1..3]);
+        assert_eq!(ranged, b.slice(16..48));
+        assert_eq!(copy_counter::get(), 0);
+    }
+
+    #[test]
+    fn concat_of_foreign_windows_copies_exactly_once() {
+        copy_counter::reset();
+        let a = Bytes::from(vec![1, 2, 3]);
+        let b = Bytes::from(vec![4, 5]);
+        let joined = Bytes::concat(&[a, b]);
+        assert_eq!(joined, &[1, 2, 3, 4, 5]);
+        assert_eq!(copy_counter::get(), 1);
+    }
+
+    #[test]
+    fn degenerate_ranges() {
+        let b = Bytes::from(vec![9; 10]);
+        assert_eq!(b.slice(..).len(), 10);
+        assert_eq!(b.slice(10..10).len(), 0);
+        assert_eq!(b.slice(0..0).len(), 0);
+        assert!(Bytes::new().is_empty());
+        assert_eq!(Bytes::concat(&[]), Bytes::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn out_of_range_slice_panics() {
+        Bytes::from(vec![0; 4]).slice(2..6);
+    }
+}

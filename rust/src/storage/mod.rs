@@ -18,7 +18,9 @@
 //!   explicit [`Journal::flush`], and crash-recovery [`Journal::replay`];
 //! - [`Table`] — the get/put/delete/scan/read-modify-write interface all
 //!   four substrates implement, which the data lake and the engine's job
-//!   registry program against ([`SharedTable`] = `Arc<dyn Table>`).
+//!   registry program against ([`SharedTable`] = `Arc<dyn Table>`);
+//! - [`Bytes`] — the immutable shared byte window the whole data plane
+//!   moves bodies as (clone = `Arc` bump, slice = pointer math).
 //!
 //! The paper's correctness anchor — sequential version-number assignment
 //! under the "server-side lock" — is preserved per key:
@@ -26,10 +28,12 @@
 //! under its own shard lock, eliminating the cross-key serialization
 //! without giving up the guarantee.
 
+pub mod bytes;
 pub mod journal;
 pub mod shard;
 pub mod table;
 
+pub use bytes::Bytes;
 pub use journal::Journal;
 pub use shard::{ShardedMap, DEFAULT_SHARDS};
 pub use table::{

@@ -33,7 +33,7 @@ fn upload_fileset_materialize_round_trip() {
     let files = dl.filesets.materialize(P, "HotpotQA", None).unwrap();
     assert_eq!(files.len(), 2);
     let train = files.iter().find(|(p, _)| p == "/data/train.json").unwrap();
-    assert_eq!(&**train.1, b"train-data");
+    assert_eq!(train.1, b"train-data");
 }
 
 #[test]
@@ -50,7 +50,7 @@ fn version_pinning_survives_many_updates() {
     }
     // snapshot still points at version 5 (uploads are 1-based)
     let bytes = dl.filesets.materialize(P, "snapshot", None).unwrap();
-    assert_eq!(&**bytes[0].1, b"content-4");
+    assert_eq!(bytes[0].1, b"content-4");
     assert_eq!(dl.storage.versions(P, "/f").len(), 10);
 }
 

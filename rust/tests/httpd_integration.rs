@@ -556,3 +556,41 @@ fn concurrent_keep_alive_connections_serve_sequential_requests() {
         h.join().unwrap();
     }
 }
+
+#[test]
+fn raw_download_streams_chunk_windows_as_octet_stream() {
+    let (_acai, server, root) = serve();
+    let addr = server.addr();
+    let token = bootstrap(addr, &root, "rawdl");
+
+    // multi-chunk body (64 KiB chunks) so the response tail is several
+    // shared windows, proving the content-length framing covers them
+    let body: Vec<u8> = (0u8..=250).cycle().take(150_000).collect();
+    post_json(
+        addr,
+        "/v1/files",
+        &token,
+        &Json::obj()
+            .field(
+                "files",
+                Json::Arr(vec![Json::obj()
+                    .field("path", "/data/raw.bin")
+                    .field("content_b64", b64_encode(&body))
+                    .build()]),
+            )
+            .build(),
+    )
+    .unwrap();
+
+    let path = format!("/v1/files/{}?raw", percent_encode("/data/raw.bin"));
+    let resp = request(addr, "GET", &path, &[("x-acai-token", &token)], b"").unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("content-type"), Some("application/octet-stream"));
+    // byte-identical, no base64 envelope
+    assert_eq!(resp.body, body);
+
+    // raw + range is rejected — ranged reads stay on the JSON path
+    let path = format!("/v1/files/{}?raw&offset=0&len=10", percent_encode("/data/raw.bin"));
+    let resp = request(addr, "GET", &path, &[("x-acai-token", &token)], b"").unwrap();
+    assert_eq!(resp.status, 400);
+}
